@@ -1,0 +1,169 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Artifacts (all lowered with ``return_tuple=True``):
+
+* per-operator CPU kernels, named by the scheme in
+  ``rust/src/exec/executor.rs::artifact_name`` (weights are runtime
+  parameters, appended after the activations);
+* ``resnet18_cpu`` — the full CPU-only quantized model, weights as
+  parameters in ``model.WEIGHT_ORDER`` (the Fig 16 baseline);
+* ``gemm_pallas_*`` / ``requant_pallas_*`` / ``conv_pallas_*`` — the L1
+  Pallas kernels lowered standalone, which the Rust integration tests
+  execute against the behavioral simulator.
+
+Run: ``python -m compile.aot --out ../artifacts`` (from ``python/``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import alu as alu_kernel
+from .kernels import gemm as gemm_kernel
+
+S8 = jnp.int8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, name: str, fn, *args) -> None:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}.hlo.txt ({len(text) / 1024:.0f} KiB)")
+
+
+def spec(shape, dtype=S8):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--skip-resnet",
+        action="store_true",
+        help="skip the full-model artifact (fast dev builds)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    sh = model.LAYER_SHIFT
+    print(f"lowering artifacts to {args.out}:")
+
+    # ---- per-operator CPU kernels (weights as parameters) -------------
+    # conv C1 with fused relu: conv_{h}_{ic}_{oc}_{k}_{s}_{relu}
+    emit(
+        args.out,
+        "conv_224_3_64_7_2_1",
+        lambda x, w: (model.qconv2d(x, w, stride=2, shift=sh, relu=True),),
+        spec((1, 3, 224, 224)),
+        spec((64, 3, 7, 7)),
+    )
+    emit(
+        args.out,
+        "maxpool_1x64x56x56_3_2",
+        lambda x: (model.maxpool(x, k=3, s=2, pad=1),),
+        spec((1, 64, 112, 112)),
+    )
+    for c, hw in [(64, 56), (128, 28), (256, 14), (512, 7)]:
+        emit(
+            args.out,
+            f"add_1x{c}x{hw}x{hw}",
+            lambda a, b: (model.add_sat(a, b),),
+            spec((1, c, hw, hw)),
+            spec((1, c, hw, hw)),
+        )
+    emit(args.out, "gap_1x512", lambda x: (model.global_avg_pool(x),), spec((1, 512, 7, 7)))
+    emit(
+        args.out,
+        "dense_1_512_1000",
+        lambda x, w: (model.dense(x, w, shift=sh, relu=False),),
+        spec((1, 512)),
+        spec((1000, 512)),
+    )
+
+    # ---- L1 Pallas kernels, standalone ---------------------------------
+    emit(
+        args.out,
+        "gemm_pallas_64_64_64",
+        lambda a, w: (gemm_kernel.gemm(a, w),),
+        spec((64, 64)),
+        spec((64, 64)),
+    )
+    emit(
+        args.out,
+        "requant_pallas_1024_6_1",
+        lambda acc: (alu_kernel.requant(acc, shift=6, relu=True),),
+        spec((1024,), jnp.int32),
+    )
+    # A pallas-backed conv (C2 geometry on a 14x14 crop): the L2→L1 path
+    # in one artifact, cross-checked against the VTA simulator from Rust.
+    emit(
+        args.out,
+        "conv_pallas_14_64_64_3_1",
+        lambda x, w: (
+            model.qconv2d(x, w, stride=1, shift=sh, relu=False, backend="pallas"),
+        ),
+        spec((1, 64, 14, 14)),
+        spec((64, 64, 3, 3)),
+    )
+
+    # ---- the full CPU-only model --------------------------------------
+    # Weights are PARAMETERS in model.WEIGHT_ORDER (HLO text elides
+    # large constants as `constant({...})`, so baking them is not an
+    # option — the Rust side synthesizes the identical tensors and feeds
+    # them in order).
+    if not args.skip_resnet:
+        wspecs = [spec(s) for (_, s) in model.weight_shapes()]
+        emit(
+            args.out,
+            "resnet18_cpu",
+            _resnet_fn,
+            spec((1, 3, 224, 224)),
+            *wspecs,
+        )
+
+    # Cross-language weight-equivalence digest: the Rust integration
+    # tests synthesize the same tensors and must reproduce these hashes.
+    if not args.skip_resnet:
+        from . import synth
+
+        print("  hashing synthetic ResNet-18 weights (xorshift64*, seed 42)...")
+        ws = synth.resnet18_weights(42)
+        with open(os.path.join(args.out, "weights_digest.txt"), "w") as f:
+            f.write(f"input {synth.fnv1a64(synth.synth_input(7, 1, 3, 224, 224).tobytes()):016x}\n")
+            for name in model.WEIGHT_ORDER:
+                f.write(f"{name} {synth.fnv1a64(ws[name].tobytes()):016x}\n")
+        print("  weights_digest.txt")
+
+    # Stamp for the Makefile.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("done.")
+
+
+def _resnet_fn(x, *ws):
+    weights = dict(zip(model.WEIGHT_ORDER, ws))
+    return (model.resnet18_forward(x, weights, backend="lax"),)
+
+
+if __name__ == "__main__":
+    main()

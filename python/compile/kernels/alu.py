@@ -1,0 +1,45 @@
+"""L1: the VTA tensor-ALU requant epilogue as a Pallas kernel.
+
+Mirrors the three-instruction ALU sequence the Rust compiler emits after
+every GEMM (SHR imm → MAX imm → MIN imm, Fig 8), fused into one
+elementwise pass over register-file tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _requant_kernel(acc_ref, out_ref, *, shift: int, relu: bool):
+    v = jnp.right_shift(acc_ref[...], jnp.int32(shift))  # ALU SHR
+    lo = 0 if relu else -128
+    v = jnp.maximum(v, lo)  # ALU MAX (ReLU when lo == 0)
+    v = jnp.minimum(v, 127)  # ALU MIN
+    out_ref[...] = v.astype(jnp.int8)  # narrowing acc → out buffer
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "relu", "block"))
+def requant(acc, *, shift: int, relu: bool, block: int = 256):
+    """Requantize an int32 accumulator tensor to int8.
+
+    Flattens to 1D and sweeps ``block``-element tiles — the tensor ALU's
+    vector-lane pass over register-file tiles (§2.5).
+    """
+    flat = acc.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    out = pl.pallas_call(
+        functools.partial(_requant_kernel, shift=shift, relu=relu),
+        grid=(flat.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.int8),
+        interpret=True,
+    )(flat)
+    return out[:n].reshape(acc.shape)

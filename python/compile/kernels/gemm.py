@@ -1,0 +1,77 @@
+"""L1: the VTA GEMM-core intrinsic as a Pallas kernel.
+
+The hardware computes, per cycle, one ``BATCH x BLOCK_IN x BLOCK_OUT``
+int8 matmul accumulated into an int32 register-file tile (Fig 7). This
+kernel expresses the same contraction as a Pallas grid:
+
+* the grid's ``(m, n, k)`` axes mirror the two CISC loop levels plus the
+  micro-op sequence over input-channel blocks;
+* ``BlockSpec`` index maps stage ``(BM, BK)`` / ``(BN, BK)`` operand
+  tiles into VMEM — the HBM→VMEM schedule standing in for the LOAD
+  module's DRAM→SRAM DMA;
+* the ``@pl.when(k == 0)`` zero-init is the GEMM reset micro-op, and the
+  accumulation across the ``k`` grid dimension is the register-file
+  accumulate.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): on a real TPU the
+dot below maps onto the MXU with int8 operands widening to int32 — the
+same widening discipline as VTA's 8-bit GEMM core with 32-bit
+accumulators. ``interpret=True`` is mandatory here: the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness (not wallclock) is
+what the interpret path validates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(inp_ref, wgt_ref, acc_ref):
+    """One grid step: acc[BM, BN] += inp[BM, BK] @ wgt[BN, BK]^T."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _reset():  # the GEMM-reset micro-op
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = inp_ref[...].astype(jnp.int32)
+    w = wgt_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a,
+        w,
+        (((1,), (1,)), ((), ())),  # contract the K axis of both
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(inp, wgt, *, bm: int = 16, bn: int = 16, bk: int = 16):
+    """``acc[M, N] int32 = inp[M, K] i8 x wgt[N, K]^T i8`` via Pallas.
+
+    ``bm``/``bn``/``bk`` are the VMEM tile sizes; defaults mirror the
+    Pynq GEMM core (BLOCK_IN = BLOCK_OUT = 16). Dimensions must be
+    multiples of the tile sizes (the compiler pads tensors first, just
+    as the Rust layout pass pads channel blocks).
+    """
+    m, k = inp.shape
+    n, k2 = wgt.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({n},{k}) not tiled by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(inp, wgt)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Semantics are the VTA hardware's (bit-exact against the Rust simulator):
+int8 operands, int32 accumulation, arithmetic-shift requantization with
+saturation into the int8 output range.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(inp, wgt):
+    """``acc[m, n] = sum_k inp[m, k] * wgt[n, k]`` in int32.
+
+    ``inp``: (M, K) int8, ``wgt``: (N, K) int8 → (M, N) int32. The
+    weight matrix is row-major over output features, matching the VTA
+    weight-tile layout (Fig 7: ``wgt[o][k]``).
+    """
+    return jnp.dot(
+        inp.astype(jnp.int32),
+        wgt.astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+
+
+def requant_ref(acc, shift: int, relu: bool):
+    """VTA ALU requant epilogue: SHR + clip (Fig 8 / Rust `Requant`).
+
+    ``acc``: int32 → int8. Arithmetic right shift, then clamp to
+    ``[0, 127]`` (relu) or ``[-128, 127]``.
+    """
+    lo = 0 if relu else -128
+    shifted = jnp.right_shift(acc, jnp.int32(shift))
+    return jnp.clip(shifted, lo, 127).astype(jnp.int8)
+
+
+def matmul_requant_ref(inp, wgt, shift: int, relu: bool):
+    """Fused reference: requant(gemm(inp, wgt))."""
+    return requant_ref(gemm_ref(inp, wgt), shift, relu)

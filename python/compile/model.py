@@ -1,0 +1,228 @@
+"""L2: the quantized ResNet-18 model and per-operator CPU kernels in JAX.
+
+Bit-exact twins of the Rust semantics (``compiler::reference``,
+``exec::cpu_ops``): int8 activations/weights, int32 accumulation,
+arithmetic-shift requantization, saturating residual adds, truncating
+global-average-pool division.
+
+Two convolution backends:
+
+* ``backend="lax"`` — ``lax.conv_general_dilated`` in int32. This is the
+  CPU-resident operator path (the paper's ARM-side kernels), used for
+  the per-op artifacts and the CPU-only baseline model.
+* ``backend="pallas"`` — im2col (the L2 schedule step, playing the role
+  of TVM's layout transform) feeding the L1 Pallas GEMM intrinsic and
+  the Pallas requant ALU kernel. This is the path that lowers the
+  paper's compute hot-spot through the kernel layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import alu as alu_kernel
+from .kernels import gemm as gemm_kernel
+from .kernels import ref as kref
+
+
+# ----------------------------------------------------------------------
+# Padding geometry (must match rust `Conv2dParams::pad`).
+# ----------------------------------------------------------------------
+
+def same_padding(h: int, k: int, s: int) -> tuple[int, int]:
+    """(pad_begin, pad_end) for SAME conv, mirroring the Rust planner."""
+    oh = -(-h // s)
+    total = max((oh - 1) * s + k - h, 0)
+    pb = total // 2
+    pe = max(total - pb, 0)
+    return pb, pe
+
+
+# ----------------------------------------------------------------------
+# Quantized operators.
+# ----------------------------------------------------------------------
+
+def qconv2d(x, w, *, stride: int, shift: int, relu: bool, backend: str = "lax"):
+    """int8 NCHW conv → int8, SAME padding, VTA requant epilogue."""
+    k = w.shape[2]
+    h = x.shape[2]
+    pb, pe = same_padding(h, k, stride)
+    if backend == "lax":
+        acc = jax.lax.conv_general_dilated(
+            x.astype(jnp.int32),
+            w.astype(jnp.int32),
+            window_strides=(stride, stride),
+            padding=((pb, pe), (pb, pe)),
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        return kref.requant_ref(acc, shift, relu)
+    if backend == "pallas":
+        return _qconv2d_pallas(x, w, stride=stride, shift=shift, relu=relu, pb=pb, pe=pe)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _qconv2d_pallas(x, w, *, stride, shift, relu, pb, pe):
+    """im2col + Pallas GEMM + Pallas requant (the L2 → L1 path)."""
+    n, c, h, wd = x.shape
+    oc, _, k, _ = w.shape
+    oh = (h + pb + pe - k) // stride + 1
+    ow = (wd + pb + pe - k) // stride + 1
+
+    # L2 schedule step: extract (C*K*K)-wide patches (layout transform).
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.int8),
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding=((pb, pe), (pb, pe)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*K*K, OH, OW)
+    m = n * oh * ow
+    ckk = c * k * k
+    a = patches.transpose(0, 2, 3, 1).reshape(m, ckk)
+    wm = w.reshape(oc, ckk)
+
+    # Pad every dimension to the 16-tile intrinsic (zero padding is
+    # exact for integer dot products).
+    pad_m, pad_k, pad_n = (-m) % 16, (-ckk) % 16, (-oc) % 16
+    a = jnp.pad(a, ((0, pad_m), (0, pad_k)))
+    wm = jnp.pad(wm, ((0, pad_n), (0, pad_k)))
+
+    acc = gemm_kernel.gemm(a, wm)  # L1 intrinsic
+    out = alu_kernel.requant(acc, shift=shift, relu=relu)  # L1 ALU
+    out = out[:m, :oc].reshape(n, oh, ow, oc).transpose(0, 3, 1, 2)
+    return out
+
+
+def maxpool(x, *, k: int, s: int, pad: int):
+    """int8 max pooling; padded taps hold i8::MIN (skipped in effect)."""
+    return jax.lax.reduce_window(
+        x,
+        jnp.int8(-128),
+        jax.lax.max,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, s, s),
+        padding=((0, 0), (0, 0), (pad, pad), (pad, pad)),
+    )
+
+
+def global_avg_pool(x):
+    """NCHW int8 → [N, C] int8, truncating (toward-zero) mean."""
+    n, c, h, w = x.shape
+    s = jnp.sum(x.astype(jnp.int32), axis=(2, 3))
+    mean = jax.lax.div(s, jnp.int32(h * w))  # trunc toward zero, as in Rust
+    return jnp.clip(mean, -128, 127).astype(jnp.int8)
+
+
+def add_sat(a, b):
+    """Saturating int8 residual addition."""
+    s = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return jnp.clip(s, -128, 127).astype(jnp.int8)
+
+
+def dense(x, w, *, shift: int, relu: bool):
+    """int8 dense layer: requant(x @ w^T)."""
+    return kref.matmul_requant_ref(x, w, shift, relu)
+
+
+# ----------------------------------------------------------------------
+# The full model.
+# ----------------------------------------------------------------------
+
+LAYER_SHIFT = 6  # mirror of graph::resnet::LAYER_SHIFT
+
+#: Canonical parameter order of the full-model artifact: the creation
+#: order of parametric nodes in ``graph::resnet::resnet18`` (the Rust
+#: side feeds weights in exactly this order).
+WEIGHT_ORDER: list[str] = (
+    ["conv1"]
+    + [
+        f"layer{stage + 1}.{block}.{part}"
+        for stage in range(4)
+        for block in range(2)
+        for part in (["conv1", "conv2", "downsample"] if block == 0 else ["conv1", "conv2"])
+    ]
+    + ["fc"]
+)
+
+#: Parameter shapes matching WEIGHT_ORDER.
+def weight_shapes() -> list[tuple[str, tuple[int, ...]]]:
+    shapes: list[tuple[str, tuple[int, ...]]] = [("conv1", (64, 3, 7, 7))]
+    in_ch = 64
+    for stage, out_ch in enumerate([64, 128, 256, 512]):
+        for block in range(2):
+            pre = f"layer{stage + 1}.{block}"
+            shapes.append((f"{pre}.conv1", (out_ch, in_ch, 3, 3)))
+            shapes.append((f"{pre}.conv2", (out_ch, out_ch, 3, 3)))
+            if block == 0:
+                shapes.append((f"{pre}.downsample", (out_ch, in_ch, 1, 1)))
+            in_ch = out_ch
+    shapes.append(("fc", (1000, 512)))
+    return shapes
+
+
+def resnet18_forward(x, weights: dict, *, backend: str = "lax"):
+    """Quantized ResNet-18 forward pass, the fused-graph twin of
+    ``graph::resnet::resnet18`` + ``graph::fusion::fuse``.
+
+    ``weights`` maps Rust node names to OIHW int8 arrays (see
+    ``synth.resnet18_weights``). Returns int8 logits ``[N, 1000]``.
+    """
+    sh = LAYER_SHIFT
+
+    def conv(name, x, *, stride, relu):
+        return qconv2d(x, weights[name], stride=stride, shift=sh, relu=relu, backend=backend)
+
+    x = conv("conv1", x, stride=2, relu=True)
+    x = maxpool(x, k=3, s=2, pad=1)
+
+    in_ch = 64
+    for stage, out_ch in enumerate([64, 128, 256, 512]):
+        for block in range(2):
+            stride = 2 if stage > 0 and block == 0 else 1
+            pre = f"layer{stage + 1}.{block}"
+            a = conv(f"{pre}.conv1", x, stride=stride, relu=True)
+            b = conv(f"{pre}.conv2", a, stride=1, relu=False)
+            if block == 0:
+                short = conv(f"{pre}.downsample", x, stride=stride, relu=False)
+            else:
+                short = x
+            x = jnp.maximum(add_sat(b, short), 0)  # add + relu
+            in_ch = out_ch
+    del in_ch
+
+    x = global_avg_pool(x)
+    return dense(x, weights["fc"], shift=sh, relu=False)
+
+
+# ----------------------------------------------------------------------
+# NumPy twins (used by pytest to validate the jnp ops independently).
+# ----------------------------------------------------------------------
+
+def np_requant(acc: np.ndarray, shift: int, relu: bool) -> np.ndarray:
+    lo = 0 if relu else -128
+    return np.clip(acc >> shift, lo, 127).astype(np.int8)
+
+
+def np_conv2d(x: np.ndarray, w: np.ndarray, stride: int, shift: int, relu: bool) -> np.ndarray:
+    n, c, h, wd = x.shape
+    oc, _, k, _ = w.shape
+    pb, _ = same_padding(h, k, stride)
+    oh, ow = -(-h // stride), -(-wd // stride)
+    out = np.zeros((n, oc, oh, ow), dtype=np.int8)
+    xi = x.astype(np.int32)
+    wi = w.astype(np.int32)
+    for nn in range(n):
+        for o in range(oc):
+            for y in range(oh):
+                for xx in range(ow):
+                    acc = 0
+                    for ky in range(k):
+                        for kx in range(k):
+                            iy = y * stride + ky - pb
+                            ix = xx * stride + kx - pb
+                            if 0 <= iy < h and 0 <= ix < wd:
+                                acc += int(np.dot(xi[nn, :, iy, ix], wi[o, :, ky, kx]))
+                    out[nn, o, y, xx] = np_requant(np.int32(acc), shift, relu)
+    return out

@@ -1,0 +1,100 @@
+"""Deterministic synthetic tensors, bit-identical to the Rust side.
+
+The Rust stack (`rust/src/util/rng.rs`, `rust/src/graph/resnet.rs`)
+synthesizes int8 weights and inputs with a xorshift64* PRNG. This module
+reimplements the exact same sequences so the JAX-lowered artifacts and
+the Rust-native execution operate on identical data — the cross-language
+equivalence tests depend on it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+class XorShiftRng:
+    """xorshift64* — mirrors ``rust/src/util/rng.rs``."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK if seed != 0 else 0x9E3779B97F4A7C15
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK
+
+    def next_below(self, n: int) -> int:
+        return self.next_u64() % max(n, 1)
+
+    def next_i8_in(self, lo: int, hi: int) -> int:
+        span = hi - lo + 1
+        return lo + self.next_below(span)
+
+    def vec_i8(self, n: int, lo: int, hi: int) -> np.ndarray:
+        return np.array([self.next_i8_in(lo, hi) for _ in range(n)], dtype=np.int8)
+
+
+def synth_conv_weights(seed: int, oc: int, ic: int, k: int) -> np.ndarray:
+    """Mirror of ``graph::resnet::synth_conv_weights`` (OIHW int8)."""
+    rng = XorShiftRng(seed)
+    return rng.vec_i8(oc * ic * k * k, -4, 4).reshape(oc, ic, k, k)
+
+
+def synth_input(seed: int, n: int, c: int, h: int, w: int) -> np.ndarray:
+    """Mirror of ``graph::resnet::synth_input`` (NCHW int8)."""
+    rng = XorShiftRng(seed)
+    return rng.vec_i8(n * c * h * w, -16, 16).reshape(n, c, h, w)
+
+
+class SeedChain:
+    """Mirror of the weight-seed LCG in ``graph::resnet::resnet18``."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK
+
+    def next(self) -> int:
+        self.state = (self.state * 6364136223846793005 + 1442695040888963407) & MASK
+        return self.state
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit hash — mirrored in Rust for the cross-language
+    weight-equivalence check (``artifacts/weights_digest.txt``)."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+
+def resnet18_weights(seed: int = 42) -> dict[str, np.ndarray]:
+    """All ResNet-18 parameter tensors, keyed by the Rust node names.
+
+    Creation order must match ``graph::resnet::resnet18`` exactly:
+    conv1, then per stage/block conv1, conv2, (projection for block 0),
+    finally fc.
+    """
+    chain = SeedChain(seed)
+    weights: dict[str, np.ndarray] = {}
+    weights["conv1"] = synth_conv_weights(chain.next(), 64, 3, 7)
+    in_ch, hw = 64, 56
+    for stage, out_ch in enumerate([64, 128, 256, 512]):
+        for block in range(2):
+            stride = 2 if stage > 0 and block == 0 else 1
+            pre = f"layer{stage + 1}.{block}"
+            weights[f"{pre}.conv1"] = synth_conv_weights(chain.next(), out_ch, in_ch, 3)
+            weights[f"{pre}.conv2"] = synth_conv_weights(chain.next(), out_ch, out_ch, 3)
+            if block == 0:
+                weights[f"{pre}.downsample"] = synth_conv_weights(
+                    chain.next(), out_ch, in_ch, 1
+                )
+            in_ch = out_ch
+            hw = -(-hw // stride)
+    rng = XorShiftRng(chain.next())
+    weights["fc"] = rng.vec_i8(512_000, -4, 4).reshape(1000, 512)
+    return weights

@@ -1,0 +1,63 @@
+"""L1 Pallas requant (tensor-ALU) kernel vs the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import alu, ref
+
+
+def run_case(acc: np.ndarray, shift: int, relu: bool, block: int = 256):
+    got = alu.requant(jnp.asarray(acc), shift=shift, relu=relu, block=block)
+    exp = ref.requant_ref(jnp.asarray(acc), shift, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_basic_shift_clip():
+    acc = np.array([1000, -1000, 64, -64, 0, 8191, -8192], dtype=np.int32)
+    run_case(acc, 6, False)
+    run_case(acc, 6, True)
+
+
+def test_shift_zero_saturates():
+    acc = np.array([300, -300, 127, -128], dtype=np.int32)
+    run_case(acc, 0, False)
+
+
+def test_arithmetic_shift_of_negatives():
+    # -1 >> s stays -1 (arithmetic), never 0 (logical).
+    acc = np.array([-1, -2, -3, -255], dtype=np.int32)
+    run_case(acc, 4, False)
+
+
+def test_non_multiple_length_padding_path():
+    acc = np.arange(-500, 501, 7, dtype=np.int32)  # length 143
+    run_case(acc, 3, False, block=64)
+
+
+def test_multidimensional_input():
+    acc = np.arange(-2048, 2048, dtype=np.int32).reshape(4, 32, 32)
+    run_case(acc, 5, True)
+
+
+@pytest.mark.parametrize("shift", [0, 1, 4, 7, 15])
+@pytest.mark.parametrize("relu", [False, True])
+def test_shift_relu_grid(shift, relu):
+    rng = np.random.default_rng(shift * 2 + relu)
+    acc = rng.integers(-(2**20), 2**20, (777,), dtype=np.int32)
+    run_case(acc, shift, relu)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    shift=st.integers(0, 20),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_property_random(n, shift, relu, seed):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(np.iinfo(np.int32).min, np.iinfo(np.int32).max, (n,), dtype=np.int32)
+    run_case(acc, shift, relu)

@@ -1,0 +1,87 @@
+"""L1 Pallas GEMM kernel vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gemm, ref
+
+
+def run_case(m, k, n, bm, bn, bk, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    w = rng.integers(-128, 128, (n, k), dtype=np.int8)
+    got = gemm.gemm(jnp.asarray(a), jnp.asarray(w), bm=bm, bn=bn, bk=bk)
+    exp = ref.gemm_ref(jnp.asarray(a), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_single_tile():
+    run_case(16, 16, 16, 16, 16, 16, 0)
+
+
+def test_multi_tile_grid():
+    run_case(64, 48, 32, 16, 16, 16, 1)
+
+
+def test_rectangular_blocks():
+    run_case(32, 64, 32, 8, 16, 32, 2)
+
+
+@pytest.mark.parametrize("block", [8, 16, 32])
+def test_block_shape_sweep(block):
+    # GEMM-core shape ablation (ISA fluidity, §2.2): the intrinsic works
+    # at several hardware tile sizes.
+    run_case(2 * block, 3 * block, 2 * block, block, block, block, block)
+
+
+def test_extreme_values_accumulate_in_i32():
+    # 128 * -128 * K must not overflow int32 for realistic K.
+    m = k = n = 16
+    a = np.full((m, k), -128, dtype=np.int8)
+    w = np.full((n, k), 127, dtype=np.int8)
+    got = gemm.gemm(jnp.asarray(a), jnp.asarray(w))
+    assert np.asarray(got)[0, 0] == -128 * 127 * k
+
+
+def test_untiled_shape_is_rejected():
+    with pytest.raises(AssertionError):
+        run_case(17, 16, 16, 16, 16, 16, 3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_property_random_shapes(mt, kt, nt, seed):
+    """Any tile-multiple shape matches the oracle exactly."""
+    run_case(16 * mt, 16 * kt, 16 * nt, 16, 16, 16, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_property_adversarial_values(data):
+    """Hand-adversarial value distributions (all-min, all-max, sparse)."""
+    m = k = n = 32
+    kind = data.draw(st.sampled_from(["min", "max", "sparse", "alt"]))
+    if kind == "min":
+        a = np.full((m, k), -128, dtype=np.int8)
+        w = np.full((n, k), -128, dtype=np.int8)
+    elif kind == "max":
+        a = np.full((m, k), 127, dtype=np.int8)
+        w = np.full((n, k), 127, dtype=np.int8)
+    elif kind == "sparse":
+        rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+        a = (rng.random((m, k)) < 0.05).astype(np.int8) * 127
+        w = (rng.random((n, k)) < 0.05).astype(np.int8) * -128
+    else:
+        a = np.fromfunction(lambda i, j: ((i + j) % 2 * 2 - 1), (m, k)).astype(np.int8)
+        w = np.fromfunction(lambda i, j: ((i * j) % 3 - 1), (n, k)).astype(np.int8)
+    got = gemm.gemm(jnp.asarray(a), jnp.asarray(w))
+    exp = ref.gemm_ref(jnp.asarray(a), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))

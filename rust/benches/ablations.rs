@@ -1,0 +1,160 @@
+//! Bench: ablations of the design choices DESIGN.md calls out.
+//!
+//! * `tlpp`       — A1: task-level pipeline parallelism (decoupled
+//!                  access-execute vs serialized), per-layer (§2.3 Fig 4)
+//! * `uop_cache`  — A2: micro-op cache size sweep, LRU hit/miss/eviction
+//!                  behavior (§3.2)
+//! * `queues`     — A3: command-queue depth sweep (§2.4 "sized deep
+//!                  enough")
+//! * `gemm_shape` — A4: GEMM-core shape sweep (§2.2 ISA fluidity)
+//! * `dram`       — extra: DRAM bandwidth sensitivity (roofline knee)
+//!
+//! Run: `cargo bench --bench ablations [-- <name>]`
+
+mod common;
+
+use vta::arch::{parse_config_str, VtaConfig};
+use vta::compiler::{lower_conv2d, pack_activations, pack_weights, Conv2dParams, Requant};
+use vta::graph::resnet::table1_params;
+use vta::runtime::VtaRuntime;
+use vta::util::{Tensor, XorShiftRng};
+
+fn main() {
+    if common::selected("tlpp") {
+        tlpp();
+    }
+    if common::selected("uop_cache") {
+        uop_cache();
+    }
+    if common::selected("queues") {
+        queues();
+    }
+    if common::selected("gemm_shape") {
+        gemm_shape();
+    }
+    if common::selected("dram") {
+        dram();
+    }
+}
+
+/// A1: latency hiding per layer class (bandwidth-bound 1x1 vs
+/// compute-bound 3x3).
+fn tlpp() {
+    println!("# A1: task-level pipeline parallelism (vt=1 serialized vs vt=2 decoupled)");
+    let cfg = VtaConfig::pynq();
+    println!("{:<5} {:>12} {:>12} {:>8} {:>8} {:>8}", "layer", "vt1 cycles", "vt2 cycles", "speedup", "util1%", "util2%");
+    for i in [1usize, 2, 4, 8, 11] {
+        // C2 (3x3), C3 (1x1), C5 (1x1 s2), C9 (3x3), C12 (3x3 deep)
+        let p = table1_params(i);
+        let a = common::run_conv(&cfg, &p, 1, 7).stats;
+        let b = common::run_conv(&cfg, &p, 2, 7).stats;
+        println!(
+            "{:<5} {:>12} {:>12} {:>7.2}x {:>8.0} {:>8.0}",
+            vta::graph::resnet::TABLE1[i].0,
+            a.total_cycles,
+            b.total_cycles,
+            a.total_cycles as f64 / b.total_cycles as f64,
+            a.compute_utilization() * 100.0,
+            b.compute_utilization() * 100.0
+        );
+    }
+    println!();
+}
+
+/// A2: micro-op cache capacity sweep on a kernel-diverse workload.
+fn uop_cache() {
+    println!("# A2: micro-op cache (LRU) size sweep — C12 (many kernels, 11 groups)");
+    let p = table1_params(11); // C12
+    let mut rng = XorShiftRng::new(9);
+    let inp =
+        Tensor::from_vec(&[1, p.ic, p.h, p.w], rng.vec_i8(p.ic * p.h * p.w, -16, 16)).unwrap();
+    let wgt = Tensor::from_vec(
+        &[p.oc, p.ic, p.k, p.k],
+        rng.vec_i8(p.oc * p.ic * p.k * p.k, -4, 4),
+    )
+    .unwrap();
+    println!("{:>10} {:>8} {:>8} {:>10} {:>12}", "uop KiB", "hits", "misses", "evictions", "cycles");
+    for kib in [2usize, 4, 8, 16, 32] {
+        let cfg = parse_config_str(&format!("uop_buf_kib = {kib}")).unwrap();
+        let mut rt = VtaRuntime::new(&cfg, 256 << 20);
+        let out = lower_conv2d(&mut rt, &p, &pack_activations(&cfg, &inp), &pack_weights(&cfg, &wgt), 2);
+        match out {
+            Ok(o) => println!(
+                "{:>10} {:>8} {:>8} {:>10} {:>12}",
+                kib, rt.ctx.uops.hits, rt.ctx.uops.misses, rt.ctx.uops.evictions, o.stats.total_cycles
+            ),
+            Err(e) => println!("{kib:>10} plan failed: {e}"),
+        }
+    }
+    println!();
+}
+
+/// A3: command-queue depth sweep — shallow queues stall fetch (§2.4).
+fn queues() {
+    println!("# A3: command-queue depth sweep — C2 (many small instructions)");
+    let p = table1_params(1); // C2
+    println!("{:>7} {:>12} {:>14} {:>8}", "depth", "cycles", "fetch stalls", "util%");
+    for depth in [2usize, 4, 8, 16, 64, 512] {
+        let cfg = parse_config_str(&format!("cmd_queue_depth = {depth}")).unwrap();
+        let s = common::run_conv(&cfg, &p, 2, 11).stats;
+        println!(
+            "{:>7} {:>12} {:>14} {:>8.0}",
+            depth,
+            s.total_cycles,
+            s.fetch_stall_cycles,
+            s.compute_utilization() * 100.0
+        );
+    }
+    println!();
+}
+
+/// A4: GEMM-core shape sweep at iso-workload — the hardware-software
+/// co-design space of §2.2.
+fn gemm_shape() {
+    println!("# A4: GEMM core shape sweep — C6 (28x28, 128→128, 3x3)");
+    let rq = Requant { shift: 6, relu: false };
+    let p = Conv2dParams { h: 28, w: 28, ic: 128, oc: 128, k: 3, s: 1, requant: rq };
+    println!(
+        "{:>9} {:>10} {:>12} {:>8} {:>8} {:>10}",
+        "shape", "peak GOPS", "cycles", "GOPS", "util%", "eff vs peak"
+    );
+    for shape in ["1x8x8", "1x16x16", "1x32x32", "2x16x16"] {
+        let cfg = parse_config_str(&format!("gemm = {shape}")).unwrap();
+        // BATCH 2 needs an even-batch workload; skip it for conv (batch 1).
+        if cfg.gemm.batch != 1 {
+            println!("{shape:>9} (batch>1: conv batch-1 workload not applicable)");
+            continue;
+        }
+        let s = common::run_conv(&cfg, &p, 2, 13).stats;
+        let gops = p.ops() as f64 / s.total_cycles as f64 * cfg.clock_hz / 1e9;
+        println!(
+            "{:>9} {:>10.1} {:>12} {:>8.2} {:>8.0} {:>9.0}%",
+            shape,
+            cfg.peak_gops(),
+            s.total_cycles,
+            gops,
+            s.compute_utilization() * 100.0,
+            gops / cfg.peak_gops() * 100.0
+        );
+    }
+    println!();
+}
+
+/// DRAM bandwidth sensitivity: moves the roofline knee across the layer
+/// population.
+fn dram() {
+    println!("# DRAM bandwidth sweep — C3 (1x1, bandwidth-bound) vs C12 (3x3, compute-bound)");
+    println!("{:>12} {:>14} {:>14}", "B/cycle", "C3 util%", "C12 util%");
+    for bpc in [4usize, 8, 16, 32, 64] {
+        let cfg = parse_config_str(&format!("dram.bytes_per_cycle = {bpc}")).unwrap();
+        let c3 = common::run_conv(&cfg, &table1_params(2), 2, 17).stats;
+        let c12 = common::run_conv(&cfg, &table1_params(11), 2, 17).stats;
+        println!(
+            "{:>12} {:>14.0} {:>14.0}",
+            bpc,
+            c3.compute_utilization() * 100.0,
+            c12.compute_utilization() * 100.0
+        );
+    }
+    println!();
+}

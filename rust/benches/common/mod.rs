@@ -1,0 +1,34 @@
+//! Shared helpers for the `harness = false` bench binaries.
+
+use vta::arch::VtaConfig;
+use vta::compiler::{lower_conv2d, pack_activations, pack_weights, Conv2dOutput, Conv2dParams};
+use vta::runtime::VtaRuntime;
+use vta::util::{Tensor, XorShiftRng};
+
+/// Synthesize data and run one conv layer through the full stack.
+pub fn run_conv(cfg: &VtaConfig, p: &Conv2dParams, vt: usize, seed: u64) -> Conv2dOutput {
+    let mut rng = XorShiftRng::new(seed);
+    let inp =
+        Tensor::from_vec(&[1, p.ic, p.h, p.w], rng.vec_i8(p.ic * p.h * p.w, -16, 16)).unwrap();
+    let wgt = Tensor::from_vec(
+        &[p.oc, p.ic, p.k, p.k],
+        rng.vec_i8(p.oc * p.ic * p.k * p.k, -4, 4),
+    )
+    .unwrap();
+    let mut rt = VtaRuntime::new(cfg, 512 << 20);
+    lower_conv2d(&mut rt, p, &pack_activations(cfg, &inp), &pack_weights(cfg, &wgt), vt)
+        .expect("bench conv lowering")
+}
+
+/// Filter from argv: `cargo bench --bench X -- <filter>`.
+pub fn arg_filter() -> Option<String> {
+    std::env::args().skip(1).find(|a| !a.starts_with('-'))
+}
+
+/// True when the bench name matches the CLI filter (or no filter given).
+pub fn selected(name: &str) -> bool {
+    match arg_filter() {
+        None => true,
+        Some(f) => name.contains(&f),
+    }
+}

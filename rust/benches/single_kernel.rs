@@ -1,0 +1,65 @@
+//! Bench: Table 1 — the single-kernel conv2d experiment.
+//!
+//! Regenerates the paper's Table 1 rows plus, for each layer, the
+//! simulated performance of the lowered kernel (cycles, GOPS, GEMM
+//! utilization) and the host-side compile+simulate wall time.
+//!
+//! Run: `cargo bench --bench single_kernel`
+
+mod common;
+
+use std::time::Instant;
+use vta::arch::VtaConfig;
+use vta::graph::resnet::{table1_params, TABLE1};
+use vta::metrics::Roofline;
+
+fn main() {
+    let cfg = VtaConfig::pynq();
+    let roof = Roofline::of(&cfg);
+    println!(
+        "# Table 1: ResNet-18 conv2d operators on VTA ({} @ {:.0} MHz, vt=2)",
+        cfg.gemm,
+        cfg.clock_hz / 1e6
+    );
+    println!(
+        "{:<5} {:>8} {:>9} {:>3} {:>2} | {:>8} {:>9} {:>10} {:>7} {:>6} {:>6} | {:>9}",
+        "name", "H,W", "IC,OC", "K", "S", "GOPs", "ops/byte", "cycles", "sim ms", "GOPS", "util%", "host ms"
+    );
+    let mut total_cycles = 0u64;
+    let mut total_ops = 0u64;
+    for (i, (name, h, ic, oc, k, s)) in TABLE1.iter().enumerate() {
+        if !common::selected(name) {
+            continue;
+        }
+        let p = table1_params(i);
+        let t0 = Instant::now();
+        let out = common::run_conv(&cfg, &p, 2, 42 + i as u64);
+        let host = t0.elapsed();
+        let pt = roof.point(name, p.ops(), p.arithmetic_intensity(), &out.stats);
+        println!(
+            "{:<5} {:>8} {:>9} {:>3} {:>2} | {:>8.3} {:>9.1} {:>10} {:>7.2} {:>6.2} {:>6.0} | {:>9.1}",
+            name,
+            format!("{h}"),
+            format!("{ic},{oc}"),
+            k,
+            s,
+            p.ops() as f64 / 1e9,
+            p.arithmetic_intensity(),
+            out.stats.total_cycles,
+            out.stats.total_cycles as f64 / cfg.clock_hz * 1e3,
+            pt.gops,
+            pt.utilization * 100.0,
+            host.as_secs_f64() * 1e3
+        );
+        total_cycles += out.stats.total_cycles;
+        total_ops += p.ops();
+    }
+    if total_cycles > 0 {
+        println!(
+            "\naggregate: {:.2} GOPS over all selected layers ({:.1}% of {:.1} GOPS peak)",
+            total_ops as f64 / total_cycles as f64 * cfg.clock_hz / 1e9,
+            total_ops as f64 / total_cycles as f64 / cfg.gemm.ops_per_cycle() as f64 * 100.0,
+            cfg.peak_gops()
+        );
+    }
+}

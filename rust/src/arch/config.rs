@@ -1,0 +1,313 @@
+//! The `VtaConfig` structure: the single source of truth for a VTA variant.
+
+use std::fmt;
+
+/// Shape of the single-cycle GEMM tensor intrinsic (§2.5, Fig 7).
+///
+/// One GEMM micro-op computes, per cycle:
+/// `acc[BATCH, BLOCK_OUT] += inp[BATCH, BLOCK_IN] x wgt[BLOCK_OUT, BLOCK_IN]^T`
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Rows of the input / accumulator tile (paper: `BATCH`).
+    pub batch: usize,
+    /// Contraction dimension (paper: `BLOCK_IN`).
+    pub block_in: usize,
+    /// Columns of the accumulator tile (paper: `BLOCK_OUT`).
+    pub block_out: usize,
+}
+
+impl GemmShape {
+    /// Multiply-accumulates performed per cycle.
+    pub const fn macs_per_cycle(&self) -> usize {
+        self.batch * self.block_in * self.block_out
+    }
+
+    /// Integer ops per cycle (1 MAC = 2 ops, the convention used in the
+    /// paper's "51 GOPS" figure).
+    pub const fn ops_per_cycle(&self) -> usize {
+        2 * self.macs_per_cycle()
+    }
+}
+
+impl fmt::Display for GemmShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.batch, self.block_in, self.block_out)
+    }
+}
+
+/// DRAM timing model shared by all DMA masters (§2.6, §6 of DESIGN.md).
+///
+/// A single memory port: transfers serialize and occupy the port for
+/// `ceil(bytes / bytes_per_cycle)` cycles after an initial `latency`
+/// cycles. This is what produces the bandwidth roof in Fig 15.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DramModel {
+    /// Sustained DRAM bandwidth in bytes per *accelerator* cycle.
+    pub bytes_per_cycle: f64,
+    /// Fixed latency (cycles) to the first beat of a DMA burst.
+    pub latency: u64,
+}
+
+impl DramModel {
+    /// Port occupancy (cycles) of a transfer of `bytes`, excluding the
+    /// fixed latency.
+    pub fn occupancy(&self, bytes: usize) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+}
+
+/// A complete VTA hardware variant.
+///
+/// Defaults mirror the paper's Pynq design point (§5 "Platform"):
+/// 16x16 GEMM core @ 100 MHz, int8 inputs/weights, int32 accumulators,
+/// 32 kB input / 256 kB weight / 128 kB accumulator / 16 kB micro-op
+/// buffers → 51.2 GOPS peak.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VtaConfig {
+    /// GEMM core tensor intrinsic shape.
+    pub gemm: GemmShape,
+    /// Input / weight element width in bits (paper: 8).
+    pub inp_bits: usize,
+    /// Weight element width in bits (paper: 8).
+    pub wgt_bits: usize,
+    /// Accumulator (register-file) element width in bits (paper: 32).
+    pub acc_bits: usize,
+    /// Output element width in bits (results stored to DRAM; paper: 8).
+    pub out_bits: usize,
+    /// Input buffer capacity in bytes (paper: 32 kB).
+    pub inp_buf_bytes: usize,
+    /// Weight buffer capacity in bytes (paper: 256 kB).
+    pub wgt_buf_bytes: usize,
+    /// Accumulator register file capacity in bytes (paper: 128 kB).
+    pub acc_buf_bytes: usize,
+    /// Output buffer capacity in bytes.
+    pub out_buf_bytes: usize,
+    /// Micro-op cache capacity in bytes (paper: 16 kB).
+    pub uop_buf_bytes: usize,
+    /// Accelerator clock in Hz (paper: 100 MHz on Pynq).
+    pub clock_hz: f64,
+    /// Shared DRAM port model.
+    pub dram: DramModel,
+    /// Command-queue depth in instructions (§2.4: "sized to be deep
+    /// enough to allow for a wide execution window").
+    pub cmd_queue_depth: usize,
+    /// Dependence-token FIFO depth.
+    pub dep_queue_depth: usize,
+    /// Tensor ALU initiation interval (§2.5: "at least 2").
+    pub alu_ii: u64,
+    /// Scalar ALU lanes; a full `BATCH x BLOCK_OUT` 32-bit tensor op is
+    /// issued as vector sub-ops over this many lanes (§2.5: "performed
+    /// via vector-vector operations over multiple cycles").
+    pub alu_lanes: usize,
+}
+
+impl Default for VtaConfig {
+    fn default() -> Self {
+        Self::pynq()
+    }
+}
+
+impl VtaConfig {
+    /// The paper's Pynq evaluation design point (§5).
+    pub fn pynq() -> Self {
+        VtaConfig {
+            gemm: GemmShape { batch: 1, block_in: 16, block_out: 16 },
+            inp_bits: 8,
+            wgt_bits: 8,
+            acc_bits: 32,
+            out_bits: 8,
+            inp_buf_bytes: 32 * 1024,
+            wgt_buf_bytes: 256 * 1024,
+            acc_buf_bytes: 128 * 1024,
+            out_buf_bytes: 32 * 1024,
+            uop_buf_bytes: 16 * 1024,
+            clock_hz: 100e6,
+            // Pynq DDR3 over one 64-bit AXI HP port, shared with the
+            // CPU: ~1.6 GB/s effective for strided 2D DMA at 100 MHz
+            // fabric clock → 16 B/cycle; ~200 cycle first-beat latency.
+            // (Theoretical port peak is higher; short 2D bursts and
+            // arbitration cut sustained throughput roughly in half,
+            // which also puts the roofline knee at 32 ops/byte —
+            // between the 1x1 and 3x3 ResNet layers, as in Fig 15.)
+            dram: DramModel { bytes_per_cycle: 16.0, latency: 200 },
+            cmd_queue_depth: 512,
+            dep_queue_depth: 512,
+            alu_ii: 2,
+            alu_lanes: 16,
+        }
+    }
+
+    /// The §2.6 bandwidth-derivation design point: BATCH=2, 200 MHz.
+    pub fn bandwidth_example() -> Self {
+        let mut c = Self::pynq();
+        c.gemm = GemmShape { batch: 2, block_in: 16, block_out: 16 };
+        c.clock_hz = 200e6;
+        c
+    }
+
+    // ---- derived element/tile geometry -------------------------------
+
+    /// Bytes of one input tile `BATCH x BLOCK_IN`.
+    pub fn inp_tile_bytes(&self) -> usize {
+        self.gemm.batch * self.gemm.block_in * self.inp_bits / 8
+    }
+
+    /// Bytes of one weight tile `BLOCK_OUT x BLOCK_IN`.
+    pub fn wgt_tile_bytes(&self) -> usize {
+        self.gemm.block_out * self.gemm.block_in * self.wgt_bits / 8
+    }
+
+    /// Bytes of one accumulator tile `BATCH x BLOCK_OUT`.
+    pub fn acc_tile_bytes(&self) -> usize {
+        self.gemm.batch * self.gemm.block_out * self.acc_bits / 8
+    }
+
+    /// Bytes of one output tile `BATCH x BLOCK_OUT` (narrowed results).
+    pub fn out_tile_bytes(&self) -> usize {
+        self.gemm.batch * self.gemm.block_out * self.out_bits / 8
+    }
+
+    /// Bytes of one encoded micro-op.
+    pub fn uop_bytes(&self) -> usize {
+        4
+    }
+
+    // ---- derived SRAM depths (in tiles / uops) -----------------------
+
+    /// Input buffer depth, in tiles.
+    pub fn inp_depth(&self) -> usize {
+        self.inp_buf_bytes / self.inp_tile_bytes()
+    }
+
+    /// Weight buffer depth, in tiles.
+    pub fn wgt_depth(&self) -> usize {
+        self.wgt_buf_bytes / self.wgt_tile_bytes()
+    }
+
+    /// Register file depth, in accumulator tiles.
+    pub fn acc_depth(&self) -> usize {
+        self.acc_buf_bytes / self.acc_tile_bytes()
+    }
+
+    /// Output buffer depth, in output tiles.
+    pub fn out_depth(&self) -> usize {
+        self.out_buf_bytes / self.out_tile_bytes()
+    }
+
+    /// Micro-op cache depth, in micro-ops.
+    pub fn uop_depth(&self) -> usize {
+        self.uop_buf_bytes / self.uop_bytes()
+    }
+
+    // ---- §2.6 bandwidth derivation -----------------------------------
+
+    /// Peak throughput in ops/s (1 MAC = 2 ops).
+    pub fn peak_ops_per_sec(&self) -> f64 {
+        self.gemm.ops_per_cycle() as f64 * self.clock_hz
+    }
+
+    /// Peak throughput in GOPS.
+    pub fn peak_gops(&self) -> f64 {
+        self.peak_ops_per_sec() / 1e9
+    }
+
+    /// DRAM bandwidth in GB/s implied by the DRAM model and clock.
+    pub fn dram_gbytes_per_sec(&self) -> f64 {
+        self.dram.bytes_per_cycle * self.clock_hz / 1e9
+    }
+
+    /// Required input-buffer read bandwidth (Gb/s) to keep the GEMM core
+    /// busy — §2.6: 51.2 Gb/s at the BATCH=2 200 MHz design point.
+    pub fn inp_bandwidth_gbps(&self) -> f64 {
+        (self.gemm.batch * self.gemm.block_in * self.inp_bits) as f64 * self.clock_hz / 1e9
+    }
+
+    /// Required weight-buffer read bandwidth (Gb/s) — §2.6: 409.6 Gb/s.
+    pub fn wgt_bandwidth_gbps(&self) -> f64 {
+        (self.gemm.block_out * self.gemm.block_in * self.wgt_bits) as f64 * self.clock_hz / 1e9
+    }
+
+    /// Required register-file bandwidth (Gb/s), per direction — §2.6:
+    /// 204.8 Gb/s (one `BATCH x BLOCK_OUT` int32 tile per cycle; the
+    /// paper counts a single port direction).
+    pub fn acc_bandwidth_gbps(&self) -> f64 {
+        (self.gemm.batch * self.gemm.block_out * self.acc_bits) as f64 * self.clock_hz / 1e9
+    }
+
+    /// Validate internal consistency; returns a human-readable list of
+    /// problems (empty if the configuration is sound).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        for (name, v) in [
+            ("gemm.batch", self.gemm.batch),
+            ("gemm.block_in", self.gemm.block_in),
+            ("gemm.block_out", self.gemm.block_out),
+            ("alu_lanes", self.alu_lanes),
+        ] {
+            if v == 0 {
+                errs.push(format!("{name} must be non-zero"));
+            }
+        }
+        for (name, bits) in [
+            ("inp_bits", self.inp_bits),
+            ("wgt_bits", self.wgt_bits),
+            ("out_bits", self.out_bits),
+        ] {
+            if !matches!(bits, 8 | 16 | 32) {
+                errs.push(format!("{name} must be one of 8/16/32, got {bits}"));
+            }
+        }
+        if self.acc_bits != 32 {
+            errs.push(format!("acc_bits must be 32, got {}", self.acc_bits));
+        }
+        if self.gemm.batch != 0
+            && self.inp_tile_bytes() != 0
+            && self.inp_buf_bytes % self.inp_tile_bytes() != 0
+        {
+            errs.push("inp_buf_bytes not a multiple of the input tile".into());
+        }
+        if self.dram.bytes_per_cycle <= 0.0 {
+            errs.push("dram.bytes_per_cycle must be positive".into());
+        }
+        if self.cmd_queue_depth == 0 || self.dep_queue_depth == 0 {
+            errs.push("queue depths must be non-zero".into());
+        }
+        if self.alu_ii == 0 {
+            errs.push("alu_ii must be >= 1".into());
+        }
+        errs
+    }
+
+    /// Human-readable summary (the `vta info` CLI command).
+    pub fn summary(&self) -> String {
+        format!(
+            "VTA variant: GEMM {} @ {:.0} MHz\n\
+             peak: {:.1} GOPS   DRAM: {:.2} GB/s ({} B/cyc, {} cyc latency)\n\
+             buffers: inp {} kB ({} tiles), wgt {} kB ({} tiles), \
+             acc {} kB ({} tiles), out {} kB ({} tiles), uop {} kB ({} uops)\n\
+             SRAM bandwidth to keep GEMM busy: inp {:.1} Gb/s, wgt {:.1} Gb/s, acc {:.1} Gb/s",
+            self.gemm,
+            self.clock_hz / 1e6,
+            self.peak_gops(),
+            self.dram_gbytes_per_sec(),
+            self.dram.bytes_per_cycle,
+            self.dram.latency,
+            self.inp_buf_bytes / 1024,
+            self.inp_depth(),
+            self.wgt_buf_bytes / 1024,
+            self.wgt_depth(),
+            self.acc_buf_bytes / 1024,
+            self.acc_depth(),
+            self.out_buf_bytes / 1024,
+            self.out_depth(),
+            self.uop_buf_bytes / 1024,
+            self.uop_depth(),
+            self.inp_bandwidth_gbps(),
+            self.wgt_bandwidth_gbps(),
+            self.acc_bandwidth_gbps(),
+        )
+    }
+}

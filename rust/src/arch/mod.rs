@@ -1,0 +1,15 @@
+//! VTA architecture description.
+//!
+//! VTA is a *parameterizable* design (§2.2: "the VTA ISA changes as VTA's
+//! architectural parameters are modified"). Everything downstream — ISA
+//! field widths, SRAM depths, the compiler's tiling factors, the
+//! simulator's timing — derives from [`VtaConfig`].
+
+mod config;
+mod parse;
+
+pub use config::{DramModel, GemmShape, VtaConfig};
+pub use parse::{load_config, parse_config_str};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,107 @@
+//! A small `key = value` configuration-file parser for VTA variants.
+//!
+//! The stack is offline-buildable with no serde dependency, so configs use
+//! a flat INI-like format (comments with `#`, one `key = value` per line):
+//!
+//! ```text
+//! # 16x16 Pynq design point
+//! gemm.batch     = 1
+//! gemm.block_in  = 16
+//! gemm.block_out = 16
+//! clock_mhz      = 100
+//! inp_buf_kib    = 32
+//! wgt_buf_kib    = 256
+//! acc_buf_kib    = 128
+//! uop_buf_kib    = 16
+//! dram.bytes_per_cycle = 32
+//! dram.latency   = 150
+//! ```
+//!
+//! Unknown keys are an error (catching typos beats silently ignoring
+//! them); omitted keys inherit from [`VtaConfig::pynq`].
+
+use super::{GemmShape, VtaConfig};
+use anyhow::{bail, Context, Result};
+
+/// Parse a config string into a [`VtaConfig`], starting from the Pynq
+/// defaults.
+pub fn parse_config_str(text: &str) -> Result<VtaConfig> {
+    let mut cfg = VtaConfig::pynq();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+        let key = key.trim();
+        let value = value.trim();
+        apply_key(&mut cfg, key, value)
+            .with_context(|| format!("line {}: key {key:?}", lineno + 1))?;
+    }
+    let errs = cfg.validate();
+    if !errs.is_empty() {
+        bail!("invalid config: {}", errs.join("; "));
+    }
+    Ok(cfg)
+}
+
+fn parse_usize(v: &str) -> Result<usize> {
+    v.parse::<usize>().with_context(|| format!("not an unsigned integer: {v:?}"))
+}
+
+fn parse_f64(v: &str) -> Result<f64> {
+    v.parse::<f64>().with_context(|| format!("not a number: {v:?}"))
+}
+
+fn apply_key(cfg: &mut VtaConfig, key: &str, value: &str) -> Result<()> {
+    match key {
+        "gemm.batch" => cfg.gemm.batch = parse_usize(value)?,
+        "gemm.block_in" => cfg.gemm.block_in = parse_usize(value)?,
+        "gemm.block_out" => cfg.gemm.block_out = parse_usize(value)?,
+        "gemm" => {
+            // Shorthand: `gemm = 1x16x16`.
+            let parts: Vec<&str> = value.split('x').collect();
+            if parts.len() != 3 {
+                bail!("expected BATCHxBLOCK_INxBLOCK_OUT, got {value:?}");
+            }
+            cfg.gemm = GemmShape {
+                batch: parse_usize(parts[0])?,
+                block_in: parse_usize(parts[1])?,
+                block_out: parse_usize(parts[2])?,
+            };
+        }
+        "inp_bits" => cfg.inp_bits = parse_usize(value)?,
+        "wgt_bits" => cfg.wgt_bits = parse_usize(value)?,
+        "acc_bits" => cfg.acc_bits = parse_usize(value)?,
+        "out_bits" => cfg.out_bits = parse_usize(value)?,
+        "inp_buf_kib" => cfg.inp_buf_bytes = parse_usize(value)? * 1024,
+        "wgt_buf_kib" => cfg.wgt_buf_bytes = parse_usize(value)? * 1024,
+        "acc_buf_kib" => cfg.acc_buf_bytes = parse_usize(value)? * 1024,
+        "out_buf_kib" => cfg.out_buf_bytes = parse_usize(value)? * 1024,
+        "uop_buf_kib" => cfg.uop_buf_bytes = parse_usize(value)? * 1024,
+        "clock_mhz" => cfg.clock_hz = parse_f64(value)? * 1e6,
+        "dram.bytes_per_cycle" => cfg.dram.bytes_per_cycle = parse_f64(value)?,
+        "dram.latency" => cfg.dram.latency = parse_usize(value)? as u64,
+        "cmd_queue_depth" => cfg.cmd_queue_depth = parse_usize(value)?,
+        "dep_queue_depth" => cfg.dep_queue_depth = parse_usize(value)?,
+        "alu_ii" => cfg.alu_ii = parse_usize(value)? as u64,
+        "alu_lanes" => cfg.alu_lanes = parse_usize(value)?,
+        other => bail!("unknown config key {other:?}"),
+    }
+    Ok(())
+}
+
+/// Load a config from a file path, or return the Pynq default when `path`
+/// is `None`.
+pub fn load_config(path: Option<&str>) -> Result<VtaConfig> {
+    match path {
+        None => Ok(VtaConfig::pynq()),
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading config file {p}"))?;
+            parse_config_str(&text)
+        }
+    }
+}

@@ -1,0 +1,102 @@
+use super::*;
+
+#[test]
+fn pynq_peak_matches_paper() {
+    // §5: "theoretical peak throughput of this flavor of the VTA design
+    // lies around 51 GOPS/s" — 16x16 MACs * 2 ops * 100 MHz = 51.2 GOPS.
+    let c = VtaConfig::pynq();
+    assert!((c.peak_gops() - 51.2).abs() < 1e-9, "peak = {}", c.peak_gops());
+}
+
+#[test]
+fn bandwidth_derivation_matches_section_2_6() {
+    // §2.6: BATCH=2, BLOCK_IN=16, BLOCK_OUT=16 @ 200MHz →
+    // 51.2 Gb/s input, 409.6 Gb/s weight, 204.8 Gb/s register file.
+    let c = VtaConfig::bandwidth_example();
+    assert!((c.inp_bandwidth_gbps() - 51.2).abs() < 1e-9);
+    assert!((c.wgt_bandwidth_gbps() - 409.6).abs() < 1e-9);
+    assert!((c.acc_bandwidth_gbps() - 204.8).abs() < 1e-9);
+}
+
+#[test]
+fn pynq_buffer_depths() {
+    let c = VtaConfig::pynq();
+    // 1x16 int8 input tile = 16 B → 32 kB holds 2048 tiles.
+    assert_eq!(c.inp_tile_bytes(), 16);
+    assert_eq!(c.inp_depth(), 2048);
+    // 16x16 int8 weight tile = 256 B → 256 kB holds 1024 tiles.
+    assert_eq!(c.wgt_tile_bytes(), 256);
+    assert_eq!(c.wgt_depth(), 1024);
+    // 1x16 int32 acc tile = 64 B → 128 kB holds 2048 tiles.
+    assert_eq!(c.acc_tile_bytes(), 64);
+    assert_eq!(c.acc_depth(), 2048);
+    // 4-byte uops → 16 kB holds 4096 uops.
+    assert_eq!(c.uop_depth(), 4096);
+}
+
+#[test]
+fn default_config_is_valid() {
+    assert!(VtaConfig::pynq().validate().is_empty());
+    assert!(VtaConfig::bandwidth_example().validate().is_empty());
+}
+
+#[test]
+fn validate_catches_bad_configs() {
+    let mut c = VtaConfig::pynq();
+    c.gemm.block_in = 0;
+    assert!(!c.validate().is_empty());
+
+    let mut c = VtaConfig::pynq();
+    c.inp_bits = 7;
+    assert!(!c.validate().is_empty());
+
+    let mut c = VtaConfig::pynq();
+    c.dram.bytes_per_cycle = 0.0;
+    assert!(!c.validate().is_empty());
+}
+
+#[test]
+fn parse_roundtrip() {
+    let text = r#"
+        # larger core
+        gemm = 2x16x32
+        clock_mhz = 200
+        wgt_buf_kib = 512
+        dram.bytes_per_cycle = 16
+        dram.latency = 200
+    "#;
+    let c = parse_config_str(text).unwrap();
+    assert_eq!(c.gemm, GemmShape { batch: 2, block_in: 16, block_out: 32 });
+    assert_eq!(c.clock_hz, 200e6);
+    assert_eq!(c.wgt_buf_bytes, 512 * 1024);
+    assert_eq!(c.dram.bytes_per_cycle, 16.0);
+    assert_eq!(c.dram.latency, 200);
+    // untouched keys keep Pynq defaults
+    assert_eq!(c.inp_buf_bytes, 32 * 1024);
+}
+
+#[test]
+fn parse_rejects_unknown_keys_and_garbage() {
+    assert!(parse_config_str("gemm.blocc_in = 16").is_err());
+    assert!(parse_config_str("gemm.block_in 16").is_err());
+    assert!(parse_config_str("gemm.block_in = banana").is_err());
+    assert!(parse_config_str("gemm = 1x16").is_err());
+    // a config that parses but fails validation
+    assert!(parse_config_str("gemm.batch = 0").is_err());
+}
+
+#[test]
+fn comments_and_blank_lines_ignored() {
+    let c = parse_config_str("\n# only comments\n   \n").unwrap();
+    assert_eq!(c, VtaConfig::pynq());
+}
+
+#[test]
+fn dram_occupancy() {
+    let d = DramModel { bytes_per_cycle: 32.0, latency: 100 };
+    assert_eq!(d.occupancy(0), 0);
+    assert_eq!(d.occupancy(1), 1);
+    assert_eq!(d.occupancy(32), 1);
+    assert_eq!(d.occupancy(33), 2);
+    assert_eq!(d.occupancy(64 * 32), 64);
+}

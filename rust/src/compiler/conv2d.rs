@@ -1,0 +1,388 @@
+//! Conv2d lowering onto the VTA GEMM intrinsic (§4.2 tensorization +
+//! §4.3 virtual threading), mirroring Fig 13's schedule pipeline:
+//! tile → cache in scoped buffers → tensorize → (virtual-thread) lower
+//! to runtime calls.
+//!
+//! Data layouts (see [`crate::compiler::layout`]):
+//! * input  DRAM: tile `(ic_b * H + ih) * W + iw`
+//! * weight DRAM: tile `((oc_b * ICB + ic_b) * K + kh) * K + kw`
+//! * output DRAM: tile `(oc_b * OH + oh) * OW + ow`
+//!
+//! Strip-local SRAM layouts:
+//! * input  SRAM: `ctx_off + ic_b * (ih_span * iw_tiles) + ih * iw_tiles + iw`
+//! * weight SRAM: group-resident, same order as DRAM within the group
+//! * acc/out SRAM: `ctx_off + (oc_i * oh_t + oh) * ow_t + ow`
+//!   (oc-major so each `(oc_i)` plane stores as one 2D STORE)
+
+use super::plan::{plan_conv2d, Conv2dParams, Conv2dPlan, PlanError};
+use super::virtual_thread::StripPipeline;
+use crate::isa::{AluOpcode, AluUop, BufferId, GemmUop, Uop};
+use crate::runtime::{RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime};
+use crate::sim::SimStats;
+use std::collections::HashMap;
+use thiserror::Error;
+
+/// Compilation errors.
+#[derive(Debug, Error)]
+pub enum CompileError {
+    #[error("planning failed: {0}")]
+    Plan(#[from] PlanError),
+    #[error("runtime error: {0}")]
+    Runtime(#[from] RuntimeError),
+    #[error("allocation error: {0}")]
+    Alloc(#[from] crate::runtime::AllocError),
+}
+
+/// Result of running a lowered conv2d on the device.
+#[derive(Debug)]
+pub struct Conv2dOutput {
+    /// Merged simulation statistics over all instruction streams.
+    pub stats: SimStats,
+    /// Packed output tiles (`(oc_b * OH + oh) * OW + ow`).
+    pub out: Vec<i8>,
+    /// The tiling that was used.
+    pub plan: Conv2dPlan,
+}
+
+/// Kernel-cache key: every distinct (context, strip shape, group width)
+/// combination needs its own micro-op kernel.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct KernelKey {
+    kind: u8, // 0 = main, 1 = reset, 2 = alu
+    context: u8,
+    wgt_ctx: u8,
+    oh_cur: u16,
+    ow_cur: u16,
+    oc_cur: u16,
+}
+
+struct KernelSet {
+    kernels: HashMap<KernelKey, (usize, UopKernel)>,
+}
+
+impl KernelSet {
+    fn new() -> Self {
+        KernelSet { kernels: HashMap::new() }
+    }
+
+    fn get_or_build(
+        &mut self,
+        rt: &mut VtaRuntime,
+        key: KernelKey,
+        build: impl FnOnce() -> Result<UopKernel, RuntimeError>,
+    ) -> Result<(usize, UopKernel), CompileError> {
+        if let Some((id, k)) = self.kernels.get(&key) {
+            return Ok((*id, k.clone()));
+        }
+        let kernel = build()?;
+        let id = rt.ctx.register_kernel(&kernel)?;
+        self.kernels.insert(key, (id, kernel.clone()));
+        Ok((id, kernel))
+    }
+}
+
+/// Lower, execute, and read back one conv2d layer.
+///
+/// `inp_packed` / `wgt_packed` are the tiled DRAM images produced by
+/// [`super::layout::pack_activations`] / [`super::layout::pack_weights`].
+/// `virtual_threads` ∈ {1, 2} toggles latency hiding.
+pub fn lower_conv2d(
+    rt: &mut VtaRuntime,
+    p: &Conv2dParams,
+    inp_packed: &[i8],
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+) -> Result<Conv2dOutput, CompileError> {
+    let cfg = rt.ctx.config().clone();
+    let plan = plan_conv2d(&cfg, p, virtual_threads)?;
+    let k = p.k;
+
+    // DRAM images (aligned to their tile sizes: dram_base fields are
+    // tile-granular).
+    let inp_tile_bytes = cfg.inp_tile_bytes();
+    let wgt_tile_bytes = cfg.wgt_tile_bytes();
+    let out_tile_bytes = cfg.out_tile_bytes();
+    let inp_buf = rt.alloc_aligned(inp_packed.len(), inp_tile_bytes)?;
+    let wgt_buf = rt.alloc_aligned(wgt_packed.len(), wgt_tile_bytes)?;
+    let out_tiles = plan.ocb * plan.oh * plan.ow;
+    let out_buf = rt.alloc_aligned(out_tiles * out_tile_bytes, out_tile_bytes)?;
+    rt.copy_in(&inp_buf, bytemuck_i8(inp_packed))?;
+    rt.copy_in(&wgt_buf, bytemuck_i8(wgt_packed))?;
+    let inp_dram0 = (inp_buf.addr / inp_tile_bytes) as u32;
+    let wgt_dram0 = (wgt_buf.addr / wgt_tile_bytes) as u32;
+    let out_dram0 = (out_buf.addr / out_tile_bytes) as u32;
+
+    // Context strides use the ISA-addressable depth (see plan.rs).
+    let inp_ctx_stride = cfg.inp_depth().min(1 << 11) / 2;
+    let acc_ctx_stride = cfg.acc_depth().min(1 << 11) / 2;
+
+    let mut kernels = KernelSet::new();
+    let mut stats = SimStats::default();
+    let span = |t: usize| (t - 1) * p.s + k;
+    let wgt_ctx_stride = cfg.wgt_depth().min(1 << 10) / 2;
+
+    // One stream across all groups: a group's weights are loaded as the
+    // *first load of its first strip*, so the regular strip WAR token
+    // covers the weight-context reuse (compute-module FIFO monotonicity
+    // means any later GEMM's token implies every GEMM of the previous
+    // occupant group has retired). Only the drain_groups fallback
+    // synchronizes per group.
+    let mut pipe = StripPipeline::new(virtual_threads);
+    for g in 0..plan.groups() {
+        let oc0 = g * plan.oc_t;
+        let oc_cur = plan.oc_t.min(plan.ocb - oc0);
+        let wgt_ctx = g % plan.wgt_contexts;
+        let wgt_tiles = oc_cur * plan.icb * k * k;
+        let mut wgt_load = Some(WgtLoad {
+            sram_base: (wgt_ctx * wgt_ctx_stride) as u32,
+            dram_tile: wgt_dram0 + (oc0 * plan.icb * k * k) as u32,
+            tiles: wgt_tiles as u16,
+        });
+
+        let mut oh0 = 0;
+        while oh0 < plan.oh {
+            let oh_cur = plan.oh_t.min(plan.oh - oh0);
+            let mut ow0 = 0;
+            while ow0 < plan.ow {
+                let ow_cur = plan.ow_t.min(plan.ow - ow0);
+                emit_strip(
+                    rt,
+                    &mut kernels,
+                    &mut pipe,
+                    p,
+                    &plan,
+                    StripGeom {
+                        g,
+                        oc0,
+                        oc_cur,
+                        oh0,
+                        oh_cur,
+                        ow0,
+                        ow_cur,
+                        ih_span: span(oh_cur),
+                        iw_tiles: span(ow_cur),
+                    },
+                    wgt_load.take(),
+                    (wgt_ctx * wgt_ctx_stride) as u16,
+                    inp_dram0,
+                    out_dram0,
+                    inp_ctx_stride,
+                    acc_ctx_stride,
+                )?;
+                ow0 += ow_cur;
+            }
+            oh0 += oh_cur;
+        }
+
+        if plan.drain_groups {
+            stats.merge(&rt.synchronize()?);
+            pipe = StripPipeline::new(virtual_threads);
+        }
+    }
+    if !plan.drain_groups {
+        stats.merge(&rt.synchronize()?);
+    }
+
+    let out_bytes = rt.copy_out(&out_buf)?;
+    let out: Vec<i8> = out_bytes.iter().map(|&b| b as i8).collect();
+    // Release DRAM so repeated layers don't leak.
+    rt.dram.free(inp_buf)?;
+    rt.dram.free(wgt_buf)?;
+    rt.dram.free(out_buf)?;
+    Ok(Conv2dOutput { stats, out, plan })
+}
+
+struct StripGeom {
+    g: usize,
+    oc0: usize,
+    oc_cur: usize,
+    oh0: usize,
+    oh_cur: usize,
+    ow0: usize,
+    ow_cur: usize,
+    ih_span: usize,
+    iw_tiles: usize,
+}
+
+/// Pending weight load for a group's first strip.
+struct WgtLoad {
+    sram_base: u32,
+    dram_tile: u32,
+    tiles: u16,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_strip(
+    rt: &mut VtaRuntime,
+    kernels: &mut KernelSet,
+    pipe: &mut StripPipeline,
+    p: &Conv2dParams,
+    plan: &Conv2dPlan,
+    geom: StripGeom,
+    wgt_load: Option<WgtLoad>,
+    wgt_base: u16,
+    inp_dram0: u32,
+    out_dram0: u32,
+    inp_ctx_stride: usize,
+    acc_ctx_stride: usize,
+) -> Result<(), CompileError> {
+    let tok = pipe.begin();
+    let c = tok.context;
+    let inp_off = if c == 1 { inp_ctx_stride } else { 0 };
+    let acc_off = if c == 1 { acc_ctx_stride } else { 0 };
+    let k = p.k;
+    let plane = geom.ih_span * geom.iw_tiles;
+
+    // ---- loads --------------------------------------------------------
+    pipe.loads_prologue(&mut rt.ctx, tok)?;
+    if let Some(wl) = wgt_load {
+        // First load of the group's first strip: the strip's WAR pop
+        // (attached to this instruction) also fences the weight-context
+        // reuse, by compute-FIFO monotonicity.
+        rt.ctx.load_buffer_2d(BufferId::Wgt, wl.sram_base, wl.dram_tile, 1, wl.tiles, wl.tiles, [0; 4]);
+    }
+    let ih_lo = geom.oh0 as isize * p.s as isize - plan.pad as isize;
+    let iw_lo = geom.ow0 as isize * p.s as isize - plan.pad as isize;
+    let vy0 = ih_lo.max(0) as usize;
+    let vy1 = ((ih_lo + geom.ih_span as isize).min(p.h as isize)) as usize;
+    let vx0 = iw_lo.max(0) as usize;
+    let vx1 = ((iw_lo + geom.iw_tiles as isize).min(p.w as isize)) as usize;
+    let pads = [
+        (vy0 as isize - ih_lo) as u8,                         // y top
+        ((ih_lo + geom.ih_span as isize) - vy1 as isize) as u8, // y bottom
+        (vx0 as isize - iw_lo) as u8,                         // x left
+        ((iw_lo + geom.iw_tiles as isize) - vx1 as isize) as u8, // x right
+    ];
+    // When the strip needs no spatial padding and spans full contiguous
+    // rows, all input planes coalesce into ONE 2D DMA (y = planes,
+    // x = rows*W, stride = H*W): this removes icb-1 per-burst DRAM
+    // latencies per strip — decisive for the 1x1 layers.
+    let coalesce = pads == [0; 4]
+        && geom.iw_tiles == p.w
+        && plane == (vy1 - vy0) * geom.iw_tiles
+        && (vy1 - vy0) * p.w <= u16::MAX as usize;
+    if coalesce {
+        rt.ctx.load_buffer_2d(
+            BufferId::Inp,
+            inp_off as u32,
+            inp_dram0 + (vy0 * p.w) as u32,
+            plan.icb as u16,
+            ((vy1 - vy0) * p.w) as u16,
+            (p.h * p.w) as u16,
+            [0; 4],
+        );
+    } else {
+        for ic_b in 0..plan.icb {
+            rt.ctx.load_buffer_2d(
+                BufferId::Inp,
+                (inp_off + ic_b * plane) as u32,
+                inp_dram0 + ((ic_b * p.h + vy0) * p.w + vx0) as u32,
+                (vy1 - vy0) as u16,
+                (vx1 - vx0) as u16,
+                p.w as u16,
+                pads,
+            );
+        }
+    }
+    pipe.loads_epilogue(&mut rt.ctx)?;
+
+    // ---- compute ------------------------------------------------------
+    pipe.compute_prologue(&mut rt.ctx, tok)?;
+
+    let kkey = |kind: u8| KernelKey {
+        kind,
+        context: c as u8,
+        wgt_ctx: (wgt_base != 0) as u8,
+        oh_cur: geom.oh_cur as u16,
+        ow_cur: geom.ow_cur as u16,
+        oc_cur: geom.oc_cur as u16,
+    };
+
+    // Reset kernel: zero every acc tile of the strip.
+    let (rid, rk) = kernels.get_or_build(rt, kkey(1), || {
+        let mut b = UopKernelBuilder::new();
+        b.loop_begin(geom.oh_cur as u16, geom.ow_cur as u16, 0, 0).map_err(RuntimeError::Uop)?;
+        b.loop_begin(geom.ow_cur as u16, 1, 0, 0).map_err(RuntimeError::Uop)?;
+        for oc_i in 0..geom.oc_cur {
+            b.push(Uop::Gemm(GemmUop {
+                acc_idx: (acc_off + oc_i * geom.oh_cur * geom.ow_cur) as u16,
+                inp_idx: 0,
+                wgt_idx: 0,
+            }))
+            .map_err(RuntimeError::Uop)?;
+        }
+        b.loop_end().map_err(RuntimeError::Uop)?;
+        b.loop_end().map_err(RuntimeError::Uop)?;
+        b.finish().map_err(RuntimeError::Uop)
+    })?;
+    rt.ctx.push_gemm(rid, &rk, true)?;
+
+    // Main kernel: the tensorized reduction over (oc_i, ic_b, kh, kw).
+    let icb = plan.icb;
+    let iw_tiles = geom.iw_tiles;
+    let (mid, mk) = kernels.get_or_build(rt, kkey(0), || {
+        let mut b = UopKernelBuilder::new();
+        b.loop_begin(
+            geom.oh_cur as u16,
+            geom.ow_cur as u16,
+            (p.s * iw_tiles) as u16,
+            0,
+        )
+        .map_err(RuntimeError::Uop)?;
+        b.loop_begin(geom.ow_cur as u16, 1, p.s as u16, 0).map_err(RuntimeError::Uop)?;
+        for oc_i in 0..geom.oc_cur {
+            for ic_b in 0..icb {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        b.push(Uop::Gemm(GemmUop {
+                            acc_idx: (acc_off + oc_i * geom.oh_cur * geom.ow_cur) as u16,
+                            inp_idx: (inp_off + ic_b * plane + kh * iw_tiles + kw) as u16,
+                            wgt_idx: wgt_base + (((oc_i * icb + ic_b) * k + kh) * k + kw) as u16,
+                        }))
+                        .map_err(RuntimeError::Uop)?;
+                    }
+                }
+            }
+        }
+        b.loop_end().map_err(RuntimeError::Uop)?;
+        b.loop_end().map_err(RuntimeError::Uop)?;
+        b.finish().map_err(RuntimeError::Uop)
+    })?;
+    rt.ctx.push_gemm(mid, &mk, false)?;
+    pipe.gemm_epilogue(&mut rt.ctx)?;
+
+    // Requantize on the tensor ALU: SHR, clip low (ReLU or -128), clip
+    // high at 127; the final ALU write narrows into the out buffer.
+    let n_acc = geom.oc_cur * geom.oh_cur * geom.ow_cur;
+    let (aid, ak) = kernels.get_or_build(rt, kkey(2), || {
+        let mut b = UopKernelBuilder::new();
+        b.loop_begin(n_acc as u16, 1, 1, 0).map_err(RuntimeError::Uop)?;
+        b.push(Uop::Alu(AluUop { dst_idx: acc_off as u16, src_idx: acc_off as u16 }))
+            .map_err(RuntimeError::Uop)?;
+        b.loop_end().map_err(RuntimeError::Uop)?;
+        b.finish().map_err(RuntimeError::Uop)
+    })?;
+    let rq = p.requant;
+    let op = if rq.relu { AluOpcode::RqRelu } else { AluOpcode::Rq };
+    rt.ctx.push_alu(aid, &ak, op, true, rq.shift as i16)?;
+    pipe.alu_epilogue(&mut rt.ctx)?;
+
+    // ---- stores -------------------------------------------------------
+    for oc_i in 0..geom.oc_cur {
+        rt.ctx.store_buffer_2d(
+            (acc_off + oc_i * geom.oh_cur * geom.ow_cur) as u32,
+            out_dram0
+                + (((geom.oc0 + oc_i) * plan.oh + geom.oh0) * plan.ow + geom.ow0) as u32,
+            geom.oh_cur as u16,
+            geom.ow_cur as u16,
+            plan.ow as u16,
+        );
+    }
+    pipe.stores_epilogue(&mut rt.ctx)?;
+    let _ = geom.g;
+    Ok(())
+}
+
+fn bytemuck_i8(v: &[i8]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}

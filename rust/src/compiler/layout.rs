@@ -1,0 +1,226 @@
+//! Tiled tensor layouts (§4.1).
+//!
+//! VTA's data-specialized SRAMs impose tiled layouts on DRAM tensors:
+//!
+//! * **Activations** `NCHW` → `N/B, C/BI, H, W` tiles of `B x BI` int8
+//!   (with `B = BATCH = 1` in the Pynq design, a tile is one pixel's
+//!   16-channel slice). Tile index: `((n_b*CB + c_b)*H + h)*W + w`.
+//! * **Weights** `OIHW` → `O/BO, I/BI, KH, KW` tiles of `BO x BI` int8.
+//!   Tile index: `((o_b*IB + i_b)*KH + kh)*KW + kw`.
+//!
+//! Channel counts that are not multiples of the block size are
+//! zero-padded (e.g. ResNet C1's 3 input channels pad to 16) — padding
+//! channels contribute zero to every dot product, preserving results.
+
+use crate::arch::VtaConfig;
+use crate::util::Tensor;
+
+/// Blocks needed to cover `c` channels at block size `b`.
+pub fn blocks(c: usize, b: usize) -> usize {
+    c.div_ceil(b)
+}
+
+/// Pack an `NCHW` int8 activation tensor into VTA tile order.
+///
+/// Output is a flat i8 vector of `N/B * ceil(C/BI) * H * W` tiles, each
+/// `B*BI` elements (B = `cfg.gemm.batch`). `N` must be a multiple of B.
+pub fn pack_activations(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
+    let (bi, b) = (cfg.gemm.block_in, cfg.gemm.batch);
+    let [n, c, h, w] = [t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]];
+    assert_eq!(n % b, 0, "batch {n} not a multiple of BATCH {b}");
+    let cb = blocks(c, bi);
+    let tile = b * bi;
+    let mut out = vec![0i8; (n / b) * cb * h * w * tile];
+    let src = t.data();
+    for nb in 0..n / b {
+        for cb_i in 0..cb {
+            for y in 0..h {
+                for x in 0..w {
+                    let t_idx = ((nb * cb + cb_i) * h + y) * w + x;
+                    for bb in 0..b {
+                        for ci in 0..bi {
+                            let cc = cb_i * bi + ci;
+                            if cc < c {
+                                let s = (((nb * b + bb) * c + cc) * h + y) * w + x;
+                                out[t_idx * tile + bb * bi + ci] = src[s];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_activations`]: unpack tiles back to `NCHW`,
+/// dropping channel padding.
+pub fn unpack_activations(
+    cfg: &VtaConfig,
+    packed: &[i8],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+) -> Tensor<i8> {
+    unpack_nchw(packed, n, c, h, w, cfg.gemm.batch, cfg.gemm.block_in)
+}
+
+/// Unpack conv *outputs*: these are tiled in `BATCH x BLOCK_OUT`
+/// channel blocks (the accumulator tile shape), which differs from the
+/// input layout whenever `BLOCK_OUT != BLOCK_IN`.
+pub fn unpack_outputs(
+    cfg: &VtaConfig,
+    packed: &[i8],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+) -> Tensor<i8> {
+    unpack_nchw(packed, n, c, h, w, cfg.gemm.batch, cfg.gemm.block_out)
+}
+
+fn unpack_nchw(
+    packed: &[i8],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    b: usize,
+    bi: usize,
+) -> Tensor<i8> {
+    let cb = blocks(c, bi);
+    let tile = b * bi;
+    let mut out = Tensor::zeros(&[n, c, h, w]);
+    let dst = out.data_mut();
+    for nb in 0..n / b {
+        for cb_i in 0..cb {
+            for y in 0..h {
+                for x in 0..w {
+                    let t_idx = ((nb * cb + cb_i) * h + y) * w + x;
+                    for bb in 0..b {
+                        for ci in 0..bi {
+                            let cc = cb_i * bi + ci;
+                            if cc < c {
+                                let d = (((nb * b + bb) * c + cc) * h + y) * w + x;
+                                dst[d] = packed[t_idx * tile + bb * bi + ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack an `OIHW` int8 weight tensor into VTA tile order
+/// (`BO x BI` tiles; rows are output channels, matching the GEMM
+/// core's `wgt[o][k]` addressing). Output-channel unpacking is the
+/// same tile order read back.
+pub fn pack_weights(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
+    let (bi, bo) = (cfg.gemm.block_in, cfg.gemm.block_out);
+    let [o, i, kh, kw] = [t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]];
+    let ob = blocks(o, bo);
+    let ib = blocks(i, bi);
+    let tile = bo * bi;
+    let mut out = vec![0i8; ob * ib * kh * kw * tile];
+    let src = t.data();
+    for ob_i in 0..ob {
+        for ib_i in 0..ib {
+            for y in 0..kh {
+                for x in 0..kw {
+                    let t_idx = ((ob_i * ib + ib_i) * kh + y) * kw + x;
+                    for oo in 0..bo {
+                        for ii in 0..bi {
+                            let (ochan, ichan) = (ob_i * bo + oo, ib_i * bi + ii);
+                            if ochan < o && ichan < i {
+                                let s = ((ochan * i + ichan) * kh + y) * kw + x;
+                                out[t_idx * tile + oo * bi + ii] = src[s];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack a row-major `(M, K)` int8 matrix into input tiles for matmul:
+/// tile index `m_b * KB + k_b`, each tile `B x BI` (rows are the M/B
+/// batch rows).
+pub fn pack_matrix_a(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
+    let (bi, b) = (cfg.gemm.block_in, cfg.gemm.batch);
+    let [m, k] = [t.shape()[0], t.shape()[1]];
+    assert_eq!(m % b, 0, "M {m} not a multiple of BATCH {b}");
+    let kb = blocks(k, bi);
+    let tile = b * bi;
+    let mut out = vec![0i8; (m / b) * kb * tile];
+    let src = t.data();
+    for mb in 0..m / b {
+        for kb_i in 0..kb {
+            let t_idx = mb * kb + kb_i;
+            for bb in 0..b {
+                for ki in 0..bi {
+                    let kk = kb_i * bi + ki;
+                    if kk < k {
+                        out[t_idx * tile + bb * bi + ki] = src[(mb * b + bb) * k + kk];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack a row-major `(N, K)` int8 matrix (already transposed: rows are
+/// output features) into weight tiles: tile index `n_b * KB + k_b`,
+/// each `BO x BI`.
+pub fn pack_matrix_w(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
+    let (bi, bo) = (cfg.gemm.block_in, cfg.gemm.block_out);
+    let [n, k] = [t.shape()[0], t.shape()[1]];
+    let nb = blocks(n, bo);
+    let kb = blocks(k, bi);
+    let tile = bo * bi;
+    let mut out = vec![0i8; nb * kb * tile];
+    let src = t.data();
+    for nb_i in 0..nb {
+        for kb_i in 0..kb {
+            let t_idx = nb_i * kb + kb_i;
+            for ni in 0..bo {
+                for ki in 0..bi {
+                    let (nn, kk) = (nb_i * bo + ni, kb_i * bi + ki);
+                    if nn < n && kk < k {
+                        out[t_idx * tile + ni * bi + ki] = src[nn * k + kk];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Unpack matmul output tiles (`m_b * NB + n_b`, `B x BO` i8) back to a
+/// row-major `(M, N)` matrix.
+pub fn unpack_matrix_c(cfg: &VtaConfig, packed: &[i8], m: usize, n: usize) -> Tensor<i8> {
+    let (bo, b) = (cfg.gemm.block_out, cfg.gemm.batch);
+    let nb = blocks(n, bo);
+    let tile = b * bo;
+    let mut out = Tensor::zeros(&[m, n]);
+    let dst = out.data_mut();
+    for mb in 0..m / b {
+        for nb_i in 0..nb {
+            let t_idx = mb * nb + nb_i;
+            for bb in 0..b {
+                for ni in 0..bo {
+                    let nn = nb_i * bo + ni;
+                    if nn < n {
+                        dst[(mb * b + bb) * n + nn] = packed[t_idx * tile + bb * bo + ni];
+                    }
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,195 @@
+//! Dense matmul lowering onto the GEMM intrinsic — the Fig 13 example
+//! workload (`C[M,N] = A[M,K] x W[N,K]^T`, int8 in / int8 requantized
+//! out), sharing the strip pipeline with conv2d.
+//!
+//! Layouts:
+//! * A DRAM: tile `m_row * KB + k_b` (`B x BI` tiles; `m_row` counts
+//!   BATCH-row groups)
+//! * W DRAM: tile `n_b * KB + k_b` (`BO x BI` tiles)
+//! * C DRAM: tile `m_row * NB + n_b` (`B x BO` tiles)
+//!
+//! Strip SRAM: a strip covers `m_t` row groups for `n_t` output blocks;
+//! acc index `ctx + n_i * m_t + m` so each `n_i` plane stores as one 2D
+//! STORE with DRAM stride `NB`.
+
+use super::conv2d::CompileError;
+use super::plan::{plan_matmul, MatmulParams, MatmulPlan};
+use super::virtual_thread::StripPipeline;
+use crate::isa::{AluOpcode, AluUop, BufferId, GemmUop, Uop};
+use crate::runtime::{RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime};
+use crate::sim::SimStats;
+use std::collections::HashMap;
+
+/// Result of a lowered matmul run.
+#[derive(Debug)]
+pub struct MatmulOutput {
+    pub stats: SimStats,
+    /// Packed output tiles (`m_row * NB + n_b`).
+    pub out: Vec<i8>,
+    pub plan: MatmulPlan,
+}
+
+/// Lower, execute, and read back `C = requant(A x W^T)`.
+pub fn lower_matmul(
+    rt: &mut VtaRuntime,
+    p: &MatmulParams,
+    a_packed: &[i8],
+    w_packed: &[i8],
+    virtual_threads: usize,
+) -> Result<MatmulOutput, CompileError> {
+    let cfg = rt.ctx.config().clone();
+    let plan = plan_matmul(&cfg, p, virtual_threads)?;
+    let m_rows = p.m / cfg.gemm.batch;
+
+    let out_tile_bytes = cfg.out_tile_bytes();
+    let a_buf = rt.alloc_aligned(a_packed.len(), cfg.inp_tile_bytes())?;
+    let w_buf = rt.alloc_aligned(w_packed.len(), cfg.wgt_tile_bytes())?;
+    let out_tiles = m_rows * plan.nb;
+    let out_buf = rt.alloc_aligned(out_tiles * out_tile_bytes, out_tile_bytes)?;
+    rt.copy_in(&a_buf, cast_i8(a_packed))?;
+    rt.copy_in(&w_buf, cast_i8(w_packed))?;
+
+    let a0 = (a_buf.addr / cfg.inp_tile_bytes()) as u32;
+    let w0 = (w_buf.addr / cfg.wgt_tile_bytes()) as u32;
+    let c0 = (out_buf.addr / cfg.out_tile_bytes()) as u32;
+
+    // Context strides use the ISA-addressable depth (see plan.rs).
+    let inp_ctx_stride = cfg.inp_depth().min(1 << 11) / 2;
+    let acc_ctx_stride = cfg.acc_depth().min(1 << 11) / 2;
+
+    let mut stats = SimStats::default();
+    // Kernel cache: (kind, context, m_cur, n_cur) → (id, kernel).
+    let mut kernels: HashMap<(u8, usize, usize, usize), (usize, UopKernel)> = HashMap::new();
+
+    let groups = plan.nb.div_ceil(plan.n_t);
+    for g in 0..groups {
+        let n0 = g * plan.n_t;
+        let n_cur_g = plan.n_t.min(plan.nb - n0);
+        let mut pipe = StripPipeline::new(virtual_threads);
+
+        // Group-resident weights: n_cur_g x KB tiles, contiguous.
+        let wtiles = n_cur_g * plan.kb;
+        rt.ctx.load_buffer_2d(
+            BufferId::Wgt,
+            0,
+            w0 + (n0 * plan.kb) as u32,
+            1,
+            wtiles as u16,
+            wtiles as u16,
+            [0; 4],
+        );
+
+        let mut m0 = 0;
+        while m0 < m_rows {
+            let m_cur = plan.m_t.min(m_rows - m0);
+            let tok = pipe.begin();
+            let inp_off = if tok.context == 1 { inp_ctx_stride } else { 0 };
+            let acc_off = if tok.context == 1 { acc_ctx_stride } else { 0 };
+
+            // Loads: m_cur row groups of A, contiguous tiles.
+            pipe.loads_prologue(&mut rt.ctx, tok)?;
+            let atiles = m_cur * plan.kb;
+            rt.ctx.load_buffer_2d(
+                BufferId::Inp,
+                inp_off as u32,
+                a0 + (m0 * plan.kb) as u32,
+                1,
+                atiles as u16,
+                atiles as u16,
+                [0; 4],
+            );
+            pipe.loads_epilogue(&mut rt.ctx)?;
+
+            pipe.compute_prologue(&mut rt.ctx, tok)?;
+
+            // Reset: one uop swept over (m_cur, n_cur_g).
+            let rkey = (1u8, tok.context, m_cur, n_cur_g);
+            let (rid, rk) = get_kernel(&mut kernels, rt, rkey, |b| {
+                b.loop_begin(m_cur as u16, 1, 0, 0)?;
+                b.loop_begin(n_cur_g as u16, m_cur as u16, 0, 0)?;
+                b.push(Uop::Gemm(GemmUop { acc_idx: acc_off as u16, inp_idx: 0, wgt_idx: 0 }))?;
+                b.loop_end()?;
+                b.loop_end()?;
+                Ok(())
+            })?;
+            rt.ctx.push_gemm(rid, &rk, true)?;
+
+            // Main: reduce over k blocks.
+            let kb = plan.kb;
+            let mkey = (0u8, tok.context, m_cur, n_cur_g);
+            let (mid, mk) = get_kernel(&mut kernels, rt, mkey, |b| {
+                b.loop_begin(m_cur as u16, 1, kb as u16, 0)?;
+                b.loop_begin(n_cur_g as u16, m_cur as u16, 0, kb as u16)?;
+                for k_b in 0..kb {
+                    b.push(Uop::Gemm(GemmUop {
+                        acc_idx: acc_off as u16,
+                        inp_idx: (inp_off + k_b) as u16,
+                        wgt_idx: k_b as u16,
+                    }))?;
+                }
+                b.loop_end()?;
+                b.loop_end()?;
+                Ok(())
+            })?;
+            rt.ctx.push_gemm(mid, &mk, false)?;
+            pipe.gemm_epilogue(&mut rt.ctx)?;
+
+            // Requantize.
+            let n_acc = m_cur * n_cur_g;
+            let akey = (2u8, tok.context, m_cur, n_cur_g);
+            let (aid, ak) = get_kernel(&mut kernels, rt, akey, |b| {
+                b.loop_begin(n_acc as u16, 1, 1, 0)?;
+                b.push(Uop::Alu(AluUop { dst_idx: acc_off as u16, src_idx: acc_off as u16 }))?;
+                b.loop_end()?;
+                Ok(())
+            })?;
+            let rq = p.requant;
+            let op = if rq.relu { AluOpcode::RqRelu } else { AluOpcode::Rq };
+            rt.ctx.push_alu(aid, &ak, op, true, rq.shift as i16)?;
+            pipe.alu_epilogue(&mut rt.ctx)?;
+
+            // Stores: per n_i plane, m_cur rows of 1 tile, stride NB.
+            for n_i in 0..n_cur_g {
+                rt.ctx.store_buffer_2d(
+                    (acc_off + n_i * m_cur) as u32,
+                    c0 + (m0 * plan.nb + n0 + n_i) as u32,
+                    m_cur as u16,
+                    1,
+                    plan.nb as u16,
+                );
+            }
+            pipe.stores_epilogue(&mut rt.ctx)?;
+            m0 += m_cur;
+        }
+
+        stats.merge(&rt.synchronize()?);
+    }
+
+    let out_bytes = rt.copy_out(&out_buf)?;
+    let out: Vec<i8> = out_bytes.iter().map(|&b| b as i8).collect();
+    rt.dram.free(a_buf)?;
+    rt.dram.free(w_buf)?;
+    rt.dram.free(out_buf)?;
+    Ok(MatmulOutput { stats, out, plan })
+}
+
+fn get_kernel(
+    cache: &mut HashMap<(u8, usize, usize, usize), (usize, UopKernel)>,
+    rt: &mut VtaRuntime,
+    key: (u8, usize, usize, usize),
+    build: impl FnOnce(&mut UopKernelBuilder) -> Result<(), crate::runtime::UopError>,
+) -> Result<(usize, UopKernel), CompileError> {
+    if let Some((id, k)) = cache.get(&key) {
+        return Ok((*id, k.clone()));
+    }
+    let mut b = UopKernelBuilder::new();
+    build(&mut b).map_err(RuntimeError::Uop)?;
+    let kernel = b.finish().map_err(RuntimeError::Uop)?;
+    let id = rt.ctx.register_kernel(&kernel)?;
+    cache.insert(key, (id, kernel.clone()));
+    Ok((id, kernel))
+}
+
+fn cast_i8(v: &[i8]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}

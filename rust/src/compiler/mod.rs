@@ -1,0 +1,34 @@
+//! TVM-like schedule lowering for VTA (§4).
+//!
+//! The three scheduling primitives the paper contributes are realized
+//! here, specialized to the VTA backend:
+//!
+//! * **Explicit memory management** (§4.1): [`layout`] packs tensors
+//!   into the NCHWnc tiled layout of the data-specialized SRAMs, and
+//!   the planners assign every buffer to a memory scope with explicit
+//!   capacity accounting.
+//! * **Tensorization** (§4.2): [`conv2d`] and [`matmul`] lower loop
+//!   nests onto the `BATCH x BLOCK_IN x BLOCK_OUT` GEMM intrinsic via
+//!   micro-op kernels with affine index compression.
+//! * **Latency hiding** (§4.3): [`virtual_thread`] interleaves the
+//!   lowered stream across SRAM contexts and inserts the explicit
+//!   RAW/WAR dependence push/pops of Fig 14.
+
+pub mod conv2d;
+pub mod layout;
+pub mod matmul;
+pub mod plan;
+pub mod reference;
+pub mod virtual_thread;
+
+pub use conv2d::{lower_conv2d, CompileError, Conv2dOutput};
+pub use layout::{
+    pack_activations, pack_matrix_a, pack_matrix_w, pack_weights, unpack_activations,
+    unpack_matrix_c, unpack_outputs,
+};
+pub use matmul::{lower_matmul, MatmulOutput};
+pub use plan::{Conv2dParams, Conv2dPlan, MatmulParams, MatmulPlan, PlanError, Requant};
+pub use virtual_thread::StripPipeline;
+
+#[cfg(test)]
+mod tests;

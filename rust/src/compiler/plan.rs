@@ -1,0 +1,360 @@
+//! Tiling planners: choose loop tiles that satisfy every SRAM capacity
+//! and ISA field-width constraint (§4.2's "loop tiling to match the
+//! shape of the tensor intrinsic", plus the memory-scope capacity
+//! accounting of §4.1).
+
+use crate::arch::VtaConfig;
+use thiserror::Error;
+
+/// Planning failures (a workload that cannot be tiled onto the given
+/// VTA variant).
+#[derive(Debug, Error, PartialEq)]
+pub enum PlanError {
+    #[error("weights for even one output block ({tiles} tiles) exceed the weight SRAM ({depth})")]
+    WeightsDontFit { tiles: usize, depth: usize },
+    #[error("one input row span ({tiles} tiles) exceeds the input SRAM budget ({depth})")]
+    InputsDontFit { tiles: usize, depth: usize },
+    #[error("micro-kernel of {uops} uops exceeds the micro-op SRAM ({depth})")]
+    KernelDoesntFit { uops: usize, depth: usize },
+    #[error("batch {n} is not a multiple of the hardware BATCH {b}")]
+    BadBatch { n: usize, b: usize },
+    #[error("{what} {v} exceeds the {bits}-bit ISA field")]
+    FieldWidth { what: &'static str, v: usize, bits: u32 },
+}
+
+/// Requantization applied by the tensor ALU after accumulation
+/// (shift-based fixed-point, clipped into the int8 output range).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Requant {
+    /// Arithmetic right shift applied to the int32 accumulator.
+    pub shift: u8,
+    /// Apply ReLU (clip at 0 instead of -128).
+    pub relu: bool,
+}
+
+impl Requant {
+    /// Reference semantics of the requantization (shared by host-side
+    /// oracles).
+    pub fn apply(&self, acc: i32) -> i8 {
+        let v = acc >> self.shift;
+        let lo = if self.relu { 0 } else { -128 };
+        v.clamp(lo, 127) as i8
+    }
+}
+
+/// A 2D convolution workload (Table 1 row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dParams {
+    /// Input spatial size.
+    pub h: usize,
+    pub w: usize,
+    /// Input / output channels.
+    pub ic: usize,
+    pub oc: usize,
+    /// Kernel size and stride (square).
+    pub k: usize,
+    pub s: usize,
+    /// Requantization of the int32 accumulator into int8.
+    pub requant: Requant,
+}
+
+impl Conv2dParams {
+    /// "SAME" padding on each side (paper Table 1: all ops use SAME).
+    pub fn pad(&self) -> usize {
+        // For odd k this is (k-1)/2; general SAME formula.
+        let oh = self.out_h();
+        (((oh - 1) * self.s + self.k).saturating_sub(self.h)) / 2
+    }
+
+    /// Output height (SAME: ceil(h / s)).
+    pub fn out_h(&self) -> usize {
+        self.h.div_ceil(self.s)
+    }
+
+    /// Output width.
+    pub fn out_w(&self) -> usize {
+        self.w.div_ceil(self.s)
+    }
+
+    /// Multiply-accumulates of the whole layer.
+    pub fn macs(&self) -> u64 {
+        (self.out_h() * self.out_w() * self.oc * self.ic * self.k * self.k) as u64
+    }
+
+    /// Integer ops (2 per MAC), the roofline numerator.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Minimal DRAM traffic in bytes: input + weights + output, each
+    /// touched once (the roofline's arithmetic-intensity denominator).
+    pub fn min_bytes(&self) -> u64 {
+        let inp = self.h * self.w * self.ic;
+        let wgt = self.oc * self.ic * self.k * self.k;
+        let out = self.out_h() * self.out_w() * self.oc;
+        (inp + wgt + out) as u64
+    }
+
+    /// Arithmetic intensity in ops/byte.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.ops() as f64 / self.min_bytes() as f64
+    }
+}
+
+/// A fully resolved conv2d tiling for a given [`VtaConfig`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Conv2dPlan {
+    /// Input/output channel blocks.
+    pub icb: usize,
+    pub ocb: usize,
+    /// Output-channel blocks per group (weight-buffer resident set).
+    pub oc_t: usize,
+    /// Output rows / columns per strip.
+    pub oh_t: usize,
+    pub ow_t: usize,
+    /// SRAM contexts (1 = no virtual threading, 2 = Fig 14 interleave).
+    pub contexts: usize,
+    /// Input rows covered by one strip.
+    pub ih_span: usize,
+    /// Input tiles per strip row (covers ow_t outputs).
+    pub iw_tiles: usize,
+    /// Derived output spatial size.
+    pub oh: usize,
+    pub ow: usize,
+    /// SAME padding.
+    pub pad: usize,
+    /// Weight-buffer contexts: 2 = groups double-buffer their weights
+    /// so weight DMA overlaps the previous group's compute (the §2.3
+    /// latency-hiding discipline applied to the weight stream).
+    pub wgt_contexts: usize,
+    /// Fall back to a pipeline drain between groups (only when a single
+    /// group's weights exceed half the weight SRAM under vt=2).
+    pub drain_groups: bool,
+}
+
+impl Conv2dPlan {
+    /// Accumulator tiles per strip (per context).
+    pub fn acc_tiles(&self) -> usize {
+        self.oc_t * self.oh_t * self.ow_t
+    }
+
+    /// Input tiles per strip (per context).
+    pub fn inp_tiles(&self) -> usize {
+        self.icb * self.ih_span * self.iw_tiles
+    }
+
+    /// Weight tiles per group.
+    pub fn wgt_tiles(&self, k: usize) -> usize {
+        self.oc_t * self.icb * k * k
+    }
+
+    /// Micro-ops in the main GEMM kernel.
+    pub fn main_uops(&self, k: usize) -> usize {
+        self.oc_t * self.icb * k * k
+    }
+
+    /// Number of output-channel groups.
+    pub fn groups(&self) -> usize {
+        self.ocb.div_ceil(self.oc_t)
+    }
+
+    /// Number of strips per group (full strips + remainder).
+    pub fn strips(&self) -> usize {
+        self.oh.div_ceil(self.oh_t) * self.ow.div_ceil(self.ow_t)
+    }
+}
+
+/// Plan a conv2d tiling. `virtual_threads` ∈ {1, 2} selects latency
+/// hiding (§4.3); the per-context budgets halve with 2 threads.
+pub fn plan_conv2d(
+    cfg: &VtaConfig,
+    p: &Conv2dParams,
+    virtual_threads: usize,
+) -> Result<Conv2dPlan, PlanError> {
+    assert!(virtual_threads == 1 || virtual_threads == 2, "1 or 2 virtual threads");
+    let icb = p.ic.div_ceil(cfg.gemm.block_in);
+    let ocb = p.oc.div_ceil(cfg.gemm.block_out);
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let pad = p.pad();
+
+    // The Fig 3 micro-op encoding fixes index fields at 11 bits
+    // (acc/inp) and 10 bits (wgt); buffers deeper than that are only
+    // partially addressable by a micro-op base index, so the usable
+    // depths clamp to the encodable range (a real VTA regenerates the
+    // ISA widths with the hardware — we keep the published encoding).
+    let inp_depth = cfg.inp_depth().min(1 << 11);
+    let acc_depth = cfg.acc_depth().min(1 << 11);
+    let out_depth = cfg.out_depth().min(1 << 11);
+    let wgt_depth = cfg.wgt_depth().min(1 << 10);
+
+    // 1. Output-channel group size, limited by the weight buffer and
+    //    the micro-op cache (main kernel must fit).
+    let per_oc_tiles = icb * p.k * p.k;
+    if per_oc_tiles > wgt_depth {
+        return Err(PlanError::WeightsDontFit { tiles: per_oc_tiles, depth: wgt_depth });
+    }
+    let uop_budget = cfg.uop_depth() / 2; // leave room for other kernels
+    let fit_oc = |budget: usize| ocb.min(budget / per_oc_tiles).min(uop_budget / per_oc_tiles);
+    // If one group can't hold every output block, double-buffer the
+    // weight buffer so group g+1's weights stream in while group g
+    // computes (plan §Perf P2). Falls back to a drain between groups
+    // when even one output block needs more than half the buffer.
+    let mut oc_t = fit_oc(wgt_depth).max(1);
+    let mut wgt_contexts = 1;
+    let mut drain_groups = false;
+    if oc_t < ocb && virtual_threads == 2 {
+        let halved = fit_oc(wgt_depth / 2);
+        // Double-buffering halves the resident group; only worth it when
+        // per-strip GEMM work still dominates the strip's input-load time
+        // (otherwise the smaller groups turn the layer load-latency-bound
+        // — C12 on the Pynq point is the counter-example).
+        let gemm_per_acc_tile = halved * per_oc_tiles; // cycles per output tile
+        let load_per_acc_tile = (icb as f64 * cfg.dram.latency as f64
+            / (oh * ow) as f64
+            + (icb * cfg.inp_tile_bytes()) as f64 / cfg.dram.bytes_per_cycle)
+            .ceil() as usize;
+        if halved >= 1 && gemm_per_acc_tile >= 2 * load_per_acc_tile {
+            oc_t = halved;
+            wgt_contexts = 2;
+        } else {
+            drain_groups = true;
+        }
+    }
+    if oc_t * per_oc_tiles > cfg.uop_depth() {
+        return Err(PlanError::KernelDoesntFit {
+            uops: oc_t * per_oc_tiles,
+            depth: cfg.uop_depth(),
+        });
+    }
+
+    // 2. Strip shape: start from full width, shrink until the input and
+    //    accumulator budgets (per context) hold.
+    let inp_budget = inp_depth / virtual_threads;
+    let acc_budget = (acc_depth / virtual_threads).min(out_depth / virtual_threads);
+    let span = |t: usize| (t - 1) * p.s + p.k; // input extent for t outputs
+
+    let mut ow_t = ow;
+    let mut oh_t = oh.min(acc_budget / (oc_t * ow_t).max(1)).max(1);
+    loop {
+        let iw_tiles = span(ow_t);
+        // Shrink oh_t until input fits.
+        while oh_t > 1 && icb * span(oh_t) * iw_tiles > inp_budget {
+            oh_t -= 1;
+        }
+        // Shrink oc_t while the acc budget can't hold even one row.
+        while oc_t > 1 && oc_t * ow_t > acc_budget {
+            oc_t -= 1;
+        }
+        let fits = icb * span(oh_t) * iw_tiles <= inp_budget
+            && oc_t * oh_t * ow_t <= acc_budget;
+        if fits {
+            break;
+        }
+        if ow_t > 1 {
+            ow_t = ow_t.div_ceil(2);
+            oh_t = oh.min(acc_budget / (oc_t * ow_t).max(1)).max(1);
+        } else {
+            return Err(PlanError::InputsDontFit {
+                tiles: icb * span(1) * span(1),
+                depth: inp_budget,
+            });
+        }
+    }
+    // Re-tighten oh_t against the acc budget.
+    oh_t = oh_t.min(acc_budget / (oc_t * ow_t)).max(1);
+
+    let plan = Conv2dPlan {
+        icb,
+        ocb,
+        oc_t,
+        oh_t,
+        ow_t,
+        contexts: virtual_threads,
+        ih_span: span(oh_t),
+        iw_tiles: span(ow_t),
+        oh,
+        ow,
+        pad,
+        wgt_contexts,
+        drain_groups,
+    };
+
+    // 3. ISA field-width validation (11-bit uop indices, 11/10-bit
+    //    factors, 14-bit loop extents, 4-bit pads).
+    check_width("uop acc index", plan.acc_tiles() + (virtual_threads - 1) * acc_depth / 2, 1 << 11)?;
+    check_width("uop inp index", plan.inp_tiles() + (virtual_threads - 1) * inp_depth / 2, 1 << 11)?;
+    check_width("uop wgt index", plan.wgt_tiles(p.k), 1 << 10)?;
+    check_width("gemm lp0", plan.oh_t, 1 << 14)?;
+    check_width("gemm lp1", plan.ow_t, 1 << 14)?;
+    check_width("src factor0", p.s * plan.iw_tiles, 1 << 11)?;
+    check_width("dst factor0", plan.ow_t, 1 << 11)?;
+    check_width("pad", pad, 1 << 4)?;
+    Ok(plan)
+}
+
+fn check_width(what: &'static str, v: usize, limit: usize) -> Result<(), PlanError> {
+    if v > limit {
+        Err(PlanError::FieldWidth { what, v, bits: limit.trailing_zeros() })
+    } else {
+        Ok(())
+    }
+}
+
+/// A dense matmul workload: `C[M,N] = A[M,K] x W[N,K]^T`, requantized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatmulParams {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub requant: Requant,
+}
+
+impl MatmulParams {
+    /// Integer ops (2 per MAC).
+    pub fn ops(&self) -> u64 {
+        2 * (self.m * self.k * self.n) as u64
+    }
+}
+
+/// Resolved matmul tiling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatmulPlan {
+    pub kb: usize,
+    pub nb: usize,
+    /// M-rows (in BATCH units) per strip.
+    pub m_t: usize,
+    /// N blocks per group (weight-resident set).
+    pub n_t: usize,
+    pub contexts: usize,
+}
+
+/// Plan a matmul tiling.
+pub fn plan_matmul(
+    cfg: &VtaConfig,
+    p: &MatmulParams,
+    virtual_threads: usize,
+) -> Result<MatmulPlan, PlanError> {
+    if p.m % cfg.gemm.batch != 0 {
+        return Err(PlanError::BadBatch { n: p.m, b: cfg.gemm.batch });
+    }
+    let kb = p.k.div_ceil(cfg.gemm.block_in);
+    let nb = p.n.div_ceil(cfg.gemm.block_out);
+    let wgt_depth = cfg.wgt_depth().min(1 << 10);
+    if kb > wgt_depth {
+        return Err(PlanError::WeightsDontFit { tiles: kb, depth: wgt_depth });
+    }
+    let n_t = nb.min(wgt_depth / kb).min((cfg.uop_depth() / 2 / kb).max(1)).max(1);
+    let m_rows = p.m / cfg.gemm.batch;
+    let inp_budget = cfg.inp_depth().min(1 << 11) / virtual_threads;
+    let acc_budget = (cfg.acc_depth().min(1 << 11) / virtual_threads)
+        .min(cfg.out_depth().min(1 << 11) / virtual_threads);
+    let m_t = m_rows.min(inp_budget / kb).min(acc_budget / n_t).max(1);
+    if kb > inp_budget {
+        return Err(PlanError::InputsDontFit { tiles: kb, depth: inp_budget });
+    }
+    check_width("matmul lp0", m_t, 1 << 14)?;
+    check_width("matmul lp1", n_t, 1 << 14)?;
+    check_width("matmul src f0", kb, 1 << 11)?;
+    check_width("matmul wgt f1", kb, 1 << 10)?;
+    Ok(MatmulPlan { kb, nb, m_t, n_t, contexts: virtual_threads })
+}

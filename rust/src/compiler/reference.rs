@@ -1,0 +1,66 @@
+//! Host-side golden models: plain NCHW int8 conv2d / matmul with the
+//! same int32 accumulation and shift-clip requantization the hardware
+//! performs. Every lowered kernel is validated against these oracles
+//! (and the oracles themselves against the JAX `ref.py` via the PJRT
+//! integration tests).
+
+use super::plan::{Conv2dParams, MatmulParams};
+use crate::util::Tensor;
+
+/// Reference conv2d: `NCHW` int8 input, `OIHW` int8 weights, SAME
+/// padding, stride `s`, int32 accumulate, requantize to int8.
+pub fn conv2d_ref(p: &Conv2dParams, inp: &Tensor<i8>, wgt: &Tensor<i8>) -> Tensor<i8> {
+    let [n, c, h, w] = [inp.shape()[0], inp.shape()[1], inp.shape()[2], inp.shape()[3]];
+    assert_eq!(c, p.ic);
+    assert_eq!(wgt.shape(), &[p.oc, p.ic, p.k, p.k]);
+    let (oh, ow, pad) = (p.out_h(), p.out_w(), p.pad());
+    let mut out = Tensor::zeros(&[n, p.oc, oh, ow]);
+    let src = inp.data();
+    let wd = wgt.data();
+    let dst = out.data_mut();
+    for nn in 0..n {
+        for o in 0..p.oc {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let mut acc = 0i32;
+                    for ci in 0..c {
+                        for ky in 0..p.k {
+                            for kx in 0..p.k {
+                                let iy = (y * p.s + ky) as isize - pad as isize;
+                                let ix = (x * p.s + kx) as isize - pad as isize;
+                                if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                    let sv = src[((nn * c + ci) * h + iy as usize) * w
+                                        + ix as usize] as i32;
+                                    let wv =
+                                        wd[((o * c + ci) * p.k + ky) * p.k + kx] as i32;
+                                    acc += sv * wv;
+                                }
+                            }
+                        }
+                    }
+                    dst[((nn * p.oc + o) * oh + y) * ow + x] = p.requant.apply(acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reference matmul: `C[M,N] = requant(A[M,K] x W[N,K]^T)`.
+pub fn matmul_ref(p: &MatmulParams, a: &Tensor<i8>, w: &Tensor<i8>) -> Tensor<i8> {
+    assert_eq!(a.shape(), &[p.m, p.k]);
+    assert_eq!(w.shape(), &[p.n, p.k]);
+    let mut out = Tensor::zeros(&[p.m, p.n]);
+    let (ad, wd) = (a.data(), w.data());
+    let dst = out.data_mut();
+    for m in 0..p.m {
+        for n in 0..p.n {
+            let mut acc = 0i32;
+            for k in 0..p.k {
+                acc += ad[m * p.k + k] as i32 * wd[n * p.k + k] as i32;
+            }
+            dst[m * p.n + n] = p.requant.apply(acc);
+        }
+    }
+    out
+}

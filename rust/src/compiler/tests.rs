@@ -1,0 +1,278 @@
+use super::layout::*;
+use super::plan::*;
+use super::reference::*;
+use super::*;
+use crate::arch::VtaConfig;
+use crate::runtime::VtaRuntime;
+use crate::util::{Tensor, XorShiftRng};
+
+fn rq() -> Requant {
+    Requant { shift: 6, relu: false }
+}
+
+fn random_nchw(rng: &mut XorShiftRng, shape: &[usize]) -> Tensor<i8> {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, rng.vec_i8(n, -5, 5)).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Layout pack/unpack.
+// ---------------------------------------------------------------------
+
+#[test]
+fn activation_pack_unpack_roundtrip() {
+    let cfg = VtaConfig::pynq();
+    let mut rng = XorShiftRng::new(1);
+    for (c, h, w) in [(16, 4, 5), (3, 7, 7), (48, 2, 3)] {
+        let t = random_nchw(&mut rng, &[1, c, h, w]);
+        let packed = pack_activations(&cfg, &t);
+        assert_eq!(packed.len(), blocks(c, 16) * h * w * 16);
+        let back = unpack_activations(&cfg, &packed, 1, c, h, w);
+        assert_eq!(back, t);
+    }
+}
+
+#[test]
+fn weight_pack_pads_partial_blocks_with_zero() {
+    let cfg = VtaConfig::pynq();
+    let mut rng = XorShiftRng::new(2);
+    let t = random_nchw(&mut rng, &[20, 3, 3, 3]); // 20 oc → 2 blocks, 3 ic → 1 block
+    let packed = pack_weights(&cfg, &t);
+    assert_eq!(packed.len(), 2 * 1 * 3 * 3 * 256);
+    // Tile (ob=1, ib=0, kh=0, kw=0), row oo=15 maps to ochan 31 > 19: zero.
+    let tile = (1 * 1 * 3 + 0) * 3 + 0;
+    assert!(packed[tile * 256 + 15 * 16..tile * 256 + 16 * 16].iter().all(|&v| v == 0));
+    // ichan 3..16 of a real output channel: zero.
+    let tile0 = 0;
+    assert!(packed[tile0 * 256 + 3..tile0 * 256 + 16].iter().all(|&v| v == 0));
+}
+
+#[test]
+fn matrix_pack_roundtrip() {
+    let cfg = VtaConfig::pynq();
+    let mut rng = XorShiftRng::new(3);
+    let a = random_nchw(&mut rng, &[4, 40]);
+    let packed = pack_matrix_a(&cfg, &a.clone().reshape(&[4, 40]).unwrap());
+    assert_eq!(packed.len(), 4 * 3 * 16); // 4 rows x 3 k-blocks x 16
+    // spot-check element (2, 17): tile 2*3+1, lane 1.
+    assert_eq!(packed[(2 * 3 + 1) * 16 + 1], a.at(&[2, 17]).unwrap());
+}
+
+// ---------------------------------------------------------------------
+// Planner.
+// ---------------------------------------------------------------------
+
+fn table1() -> Vec<(&'static str, Conv2dParams)> {
+    let q = rq();
+    vec![
+        ("C1", Conv2dParams { h: 224, w: 224, ic: 3, oc: 64, k: 7, s: 2, requant: q }),
+        ("C2", Conv2dParams { h: 56, w: 56, ic: 64, oc: 64, k: 3, s: 1, requant: q }),
+        ("C3", Conv2dParams { h: 56, w: 56, ic: 64, oc: 64, k: 1, s: 1, requant: q }),
+        ("C4", Conv2dParams { h: 56, w: 56, ic: 64, oc: 128, k: 3, s: 2, requant: q }),
+        ("C5", Conv2dParams { h: 56, w: 56, ic: 64, oc: 128, k: 1, s: 2, requant: q }),
+        ("C6", Conv2dParams { h: 28, w: 28, ic: 128, oc: 128, k: 3, s: 1, requant: q }),
+        ("C7", Conv2dParams { h: 28, w: 28, ic: 128, oc: 256, k: 3, s: 2, requant: q }),
+        ("C8", Conv2dParams { h: 28, w: 28, ic: 128, oc: 256, k: 1, s: 2, requant: q }),
+        ("C9", Conv2dParams { h: 14, w: 14, ic: 256, oc: 256, k: 3, s: 1, requant: q }),
+        ("C10", Conv2dParams { h: 14, w: 14, ic: 256, oc: 512, k: 3, s: 2, requant: q }),
+        ("C11", Conv2dParams { h: 14, w: 14, ic: 256, oc: 512, k: 1, s: 2, requant: q }),
+        ("C12", Conv2dParams { h: 7, w: 7, ic: 512, oc: 512, k: 3, s: 1, requant: q }),
+    ]
+}
+
+#[test]
+fn planner_handles_every_table1_layer() {
+    let cfg = VtaConfig::pynq();
+    for vt in [1, 2] {
+        for (name, p) in table1() {
+            let plan = plan_conv2d(&cfg, &p, vt)
+                .unwrap_or_else(|e| panic!("{name} vt={vt}: {e}"));
+            // Capacity invariants.
+            assert!(plan.acc_tiles() <= cfg.acc_depth() / vt, "{name} acc");
+            assert!(plan.inp_tiles() <= cfg.inp_depth() / vt, "{name} inp");
+            assert!(plan.wgt_tiles(p.k) <= cfg.wgt_depth(), "{name} wgt");
+            assert!(plan.main_uops(p.k) <= cfg.uop_depth(), "{name} uop");
+            // Full coverage.
+            assert_eq!(plan.oh, p.out_h());
+            assert_eq!(plan.ow, p.out_w());
+        }
+    }
+}
+
+#[test]
+fn planner_output_geometry_matches_table1() {
+    // Spot checks of SAME geometry from the paper's Table 1.
+    let p = &table1()[0].1; // C1: 224/2 = 112
+    // SAME with k=7,s=2 needs total padding 5 → begin pad 2 (the
+    // trailing row is covered by the load module's dynamic bottom pad).
+    assert_eq!((p.out_h(), p.out_w(), p.pad()), (112, 112, 2));
+    let p = &table1()[3].1; // C4: 56/2 = 28, k3 s2
+    assert_eq!((p.out_h(), p.out_w()), (28, 28));
+    let p = &table1()[10].1; // C11: 1x1 s2 → no pad
+    assert_eq!((p.out_h(), p.out_w(), p.pad()), (7, 7, 0));
+}
+
+#[test]
+fn planner_rejects_impossible_configs() {
+    let mut cfg = VtaConfig::pynq();
+    cfg.wgt_buf_bytes = 2 * cfg.wgt_tile_bytes(); // 2-tile weight buffer
+    let p = Conv2dParams { h: 8, w: 8, ic: 64, oc: 16, k: 3, s: 1, requant: rq() };
+    assert!(matches!(plan_conv2d(&cfg, &p, 1), Err(PlanError::WeightsDontFit { .. })));
+}
+
+#[test]
+fn matmul_planner_rejects_bad_batch() {
+    let cfg = VtaConfig::bandwidth_example(); // BATCH = 2
+    let p = MatmulParams { m: 3, k: 32, n: 32, requant: rq() };
+    assert!(matches!(plan_matmul(&cfg, &p, 1), Err(PlanError::BadBatch { .. })));
+}
+
+// ---------------------------------------------------------------------
+// Lowered conv2d vs reference (the core correctness property).
+// ---------------------------------------------------------------------
+
+fn run_conv_case(p: &Conv2dParams, vt: usize, seed: u64) {
+    let cfg = VtaConfig::pynq();
+    let mut rng = XorShiftRng::new(seed);
+    let inp = random_nchw(&mut rng, &[1, p.ic, p.h, p.w]);
+    let wgt = random_nchw(&mut rng, &[p.oc, p.ic, p.k, p.k]);
+
+    let mut rt = VtaRuntime::new(&cfg, 64 << 20);
+    let out = lower_conv2d(
+        &mut rt,
+        p,
+        &pack_activations(&cfg, &inp),
+        &pack_weights(&cfg, &wgt),
+        vt,
+    )
+    .unwrap();
+    let got = unpack_outputs(&cfg, &out.out, 1, p.oc, p.out_h(), p.out_w());
+    let expect = conv2d_ref(p, &inp, &wgt);
+    assert_eq!(got, expect, "conv mismatch (vt={vt}, p={p:?})");
+}
+
+#[test]
+fn conv_3x3_small_matches_reference() {
+    let p = Conv2dParams { h: 8, w: 8, ic: 16, oc: 16, k: 3, s: 1, requant: rq() };
+    run_conv_case(&p, 1, 10);
+    run_conv_case(&p, 2, 11);
+}
+
+#[test]
+fn conv_1x1_matches_reference() {
+    let p = Conv2dParams { h: 6, w: 6, ic: 32, oc: 32, k: 1, s: 1, requant: rq() };
+    run_conv_case(&p, 2, 12);
+}
+
+#[test]
+fn conv_strided_matches_reference() {
+    let p = Conv2dParams { h: 12, w: 12, ic: 16, oc: 32, k: 3, s: 2, requant: rq() };
+    run_conv_case(&p, 2, 13);
+}
+
+#[test]
+fn conv_7x7_stride2_padded_channels_matches_reference() {
+    // C1-like: 3 input channels padded to one block, 7x7 stride 2.
+    let p = Conv2dParams { h: 20, w: 20, ic: 3, oc: 16, k: 7, s: 2, requant: rq() };
+    run_conv_case(&p, 1, 14);
+    run_conv_case(&p, 2, 15);
+}
+
+#[test]
+fn conv_relu_requant_matches_reference() {
+    let p = Conv2dParams {
+        h: 8,
+        w: 8,
+        ic: 16,
+        oc: 16,
+        k: 3,
+        s: 1,
+        requant: Requant { shift: 4, relu: true },
+    };
+    run_conv_case(&p, 2, 16);
+}
+
+/// Property sweep: randomized conv shapes, both threading modes.
+#[test]
+fn conv_property_sweep() {
+    let mut rng = XorShiftRng::new(0xABCD);
+    for trial in 0..8 {
+        let k = [1usize, 3, 5][rng.next_below(3) as usize];
+        let s = 1 + rng.next_below(2) as usize;
+        let h = (k + s + 2 + rng.next_below(8) as usize).min(14);
+        let p = Conv2dParams {
+            h,
+            w: h,
+            ic: 16 * (1 + rng.next_below(2) as usize),
+            oc: 16 * (1 + rng.next_below(2) as usize),
+            k,
+            s,
+            requant: Requant { shift: rng.next_below(8) as u8, relu: rng.next_below(2) == 1 },
+        };
+        let vt = 1 + (trial % 2);
+        run_conv_case(&p, vt, 100 + trial as u64);
+    }
+}
+
+/// Virtual threading must not change results, only timing.
+#[test]
+fn virtual_threading_is_semantically_transparent_and_faster() {
+    let cfg = VtaConfig::pynq();
+    let p = Conv2dParams { h: 28, w: 28, ic: 64, oc: 64, k: 3, s: 1, requant: rq() };
+    let mut rng = XorShiftRng::new(77);
+    let inp = random_nchw(&mut rng, &[1, p.ic, p.h, p.w]);
+    let wgt = random_nchw(&mut rng, &[p.oc, p.ic, p.k, p.k]);
+    let ip = pack_activations(&cfg, &inp);
+    let wp = pack_weights(&cfg, &wgt);
+
+    let mut rt1 = VtaRuntime::new(&cfg, 64 << 20);
+    let o1 = lower_conv2d(&mut rt1, &p, &ip, &wp, 1).unwrap();
+    let mut rt2 = VtaRuntime::new(&cfg, 64 << 20);
+    let o2 = lower_conv2d(&mut rt2, &p, &ip, &wp, 2).unwrap();
+
+    assert_eq!(o1.out, o2.out, "virtual threading changed results");
+    assert_eq!(o1.stats.gemm_uops, o2.stats.gemm_uops);
+    assert!(
+        o2.stats.total_cycles < o1.stats.total_cycles,
+        "latency hiding did not help: vt2 {} !< vt1 {}",
+        o2.stats.total_cycles,
+        o1.stats.total_cycles
+    );
+}
+
+// ---------------------------------------------------------------------
+// Lowered matmul vs reference.
+// ---------------------------------------------------------------------
+
+fn run_matmul_case(p: &MatmulParams, vt: usize, seed: u64) {
+    let cfg = VtaConfig::pynq();
+    let mut rng = XorShiftRng::new(seed);
+    let a = random_nchw(&mut rng, &[p.m, p.k]);
+    let w = random_nchw(&mut rng, &[p.n, p.k]);
+    let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+    let out =
+        lower_matmul(&mut rt, p, &pack_matrix_a(&cfg, &a), &pack_matrix_w(&cfg, &w), vt).unwrap();
+    let got = unpack_matrix_c(&cfg, &out.out, p.m, p.n);
+    assert_eq!(got, matmul_ref(p, &a, &w), "matmul mismatch (vt={vt}, p={p:?})");
+}
+
+#[test]
+fn matmul_square_matches_reference() {
+    let p = MatmulParams { m: 8, k: 64, n: 64, requant: rq() };
+    run_matmul_case(&p, 1, 20);
+    run_matmul_case(&p, 2, 21);
+}
+
+#[test]
+fn matmul_ragged_dims_match_reference() {
+    // K and N not multiples of the block sizes → zero-padded tiles.
+    let p = MatmulParams { m: 4, k: 40, n: 50, requant: rq() };
+    run_matmul_case(&p, 2, 22);
+}
+
+#[test]
+fn matmul_fc_shape_matches_reference() {
+    // ResNet-18 classifier: 512 → 1000 (batch of 2 rows).
+    let p = MatmulParams { m: 2, k: 512, n: 1000, requant: Requant { shift: 7, relu: false } };
+    run_matmul_case(&p, 2, 23);
+}

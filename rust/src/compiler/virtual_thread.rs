@@ -1,0 +1,116 @@
+//! Virtual threading (§4.3, Fig 14): latency hiding by interleaving
+//! strips across SRAM contexts with explicit dependence push/pops.
+//!
+//! The paper's TVM pass lowers a 2-thread data-parallel schedule into a
+//! single instruction stream whose dependence flags let the hardware
+//! recover the parallelism. [`StripPipeline`] encapsulates exactly that
+//! insertion pattern for the strip-structured kernels produced by
+//! [`crate::compiler::conv2d`] and [`crate::compiler::matmul`]:
+//!
+//! ```text
+//! per strip (context c = strip % threads):
+//!   [if context reused]   next load pops   WAR  token from compute
+//!   LOAD ... LOAD         last load pushes RAW  token to compute
+//!   [if context reused]   first compute op pops WAR token from store
+//!   GEMM(reset) GEMM      first compute op pops RAW token from loads
+//!   [after main GEMM]     pushes WAR token back to the load module
+//!   ALU ...               last ALU pushes RAW token to store
+//!   STORE ... STORE       first store pops it; last store pushes the
+//!                         WAR token a later strip's compute pops
+//! ```
+//!
+//! With `threads = 1` every strip reuses context 0 and the same flags
+//! degenerate into a full serialization of load → compute → store — the
+//! "no latency hiding" baseline of Fig 15.
+
+use crate::runtime::{CommandContext, CoreModule, RuntimeError};
+
+/// Context-rotation and dependence-insertion state for one instruction
+/// stream.
+pub struct StripPipeline {
+    threads: usize,
+    used: [bool; 2],
+    strip: usize,
+}
+
+/// Per-strip handle: which SRAM context to use and whether its previous
+/// occupant must be synchronized against.
+#[derive(Clone, Copy, Debug)]
+pub struct StripToken {
+    /// SRAM context index (0 or 1).
+    pub context: usize,
+    /// True when the context has a previous strip in flight.
+    pub reused: bool,
+}
+
+impl StripPipeline {
+    /// A pipeline with `threads` ∈ {1, 2} virtual threads.
+    pub fn new(threads: usize) -> Self {
+        assert!(threads == 1 || threads == 2);
+        StripPipeline { threads, used: [false; 2], strip: 0 }
+    }
+
+    /// Number of virtual threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Start the next strip: rotate contexts.
+    pub fn begin(&mut self) -> StripToken {
+        let context = self.strip % self.threads;
+        let reused = self.used[context];
+        self.used[context] = true;
+        self.strip += 1;
+        StripToken { context, reused }
+    }
+
+    /// Call before emitting the strip's loads: WAR against the previous
+    /// compute on this context.
+    pub fn loads_prologue(
+        &self,
+        ctx: &mut CommandContext,
+        tok: StripToken,
+    ) -> Result<(), RuntimeError> {
+        if tok.reused {
+            ctx.dep_pop(CoreModule::Compute, CoreModule::Load)?;
+        }
+        Ok(())
+    }
+
+    /// Call after the strip's last load: RAW into compute.
+    pub fn loads_epilogue(&self, ctx: &mut CommandContext) -> Result<(), RuntimeError> {
+        ctx.dep_push(CoreModule::Load, CoreModule::Compute)?;
+        ctx.dep_pop(CoreModule::Load, CoreModule::Compute)
+    }
+
+    /// Call before the strip's first accumulator-writing compute op:
+    /// WAR against the previous store on this context.
+    pub fn compute_prologue(
+        &self,
+        ctx: &mut CommandContext,
+        tok: StripToken,
+    ) -> Result<(), RuntimeError> {
+        if tok.reused {
+            ctx.dep_pop(CoreModule::Store, CoreModule::Compute)?;
+        }
+        Ok(())
+    }
+
+    /// Call right after the last input-reading compute op (the main
+    /// GEMM): lets a later strip's loads overwrite this context.
+    pub fn gemm_epilogue(&self, ctx: &mut CommandContext) -> Result<(), RuntimeError> {
+        ctx.dep_push(CoreModule::Compute, CoreModule::Load)
+    }
+
+    /// Call after the last output-writing compute op: RAW into store.
+    pub fn alu_epilogue(&self, ctx: &mut CommandContext) -> Result<(), RuntimeError> {
+        ctx.dep_push(CoreModule::Compute, CoreModule::Store)?;
+        ctx.dep_pop(CoreModule::Compute, CoreModule::Store)
+    }
+
+    /// Call after the strip's last store: WAR token a later strip's
+    /// compute pops before overwriting this context's out/acc tiles.
+    pub fn stores_epilogue(&self, ctx: &mut CommandContext) -> Result<(), RuntimeError> {
+        ctx.dep_push(CoreModule::Store, CoreModule::Compute)
+    }
+}

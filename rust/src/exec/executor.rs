@@ -1,0 +1,227 @@
+//! The heterogeneous graph executor: walks a partitioned graph, running
+//! VTA nodes through the compiler → runtime → simulator stack and CPU
+//! nodes on either native Rust kernels or PJRT executables.
+//!
+//! The per-node report separates *simulated accelerator time* (cycles ÷
+//! clock) from *measured CPU wall time* — the two quantities Fig 16
+//! stacks against each other.
+
+use super::cpu_ops;
+use super::pjrt::{PjrtCache, PjrtError};
+use crate::compiler::{
+    self, lower_conv2d, pack_activations, pack_weights, unpack_outputs, CompileError,
+};
+use crate::graph::{Graph, Op, Placement};
+use crate::runtime::VtaRuntime;
+use crate::sim::SimStats;
+use crate::util::Tensor;
+use std::time::{Duration, Instant};
+use thiserror::Error;
+
+/// Executor errors.
+#[derive(Debug, Error)]
+pub enum ExecError {
+    #[error("node {0}: {1}")]
+    Compile(String, CompileError),
+    #[error("node {0}: missing weights")]
+    MissingWeights(String),
+    #[error("node {node}: pjrt error: {err}")]
+    Pjrt { node: String, err: PjrtError },
+    #[error("node {0}: op {1} cannot run on the VTA device")]
+    NotOffloadable(String, &'static str),
+}
+
+/// How CPU-resident nodes execute.
+pub enum CpuBackend {
+    /// Native Rust kernels (always available; used by unit tests and
+    /// benches so `cargo test` has no artifact dependency).
+    Native,
+    /// AOT-compiled XLA executables (the flagship three-layer path).
+    /// Falls back to native for ops without a matching artifact.
+    Pjrt(PjrtCache),
+}
+
+/// Per-node execution record.
+#[derive(Clone, Debug)]
+pub struct NodeReport {
+    pub name: String,
+    pub kind: &'static str,
+    pub placement: Placement,
+    /// CPU wall time (CPU nodes) or host-side orchestration time
+    /// (VTA nodes: pack/lower/unpack, excludes simulated time).
+    pub wall: Duration,
+    /// Simulated accelerator time (VTA nodes).
+    pub sim_seconds: f64,
+    /// Simulator statistics (VTA nodes).
+    pub stats: Option<SimStats>,
+    /// Integer ops.
+    pub ops: u64,
+}
+
+/// Whole-graph execution report.
+#[derive(Debug)]
+pub struct ExecReport {
+    pub nodes: Vec<NodeReport>,
+    /// Final output tensor.
+    pub output: Tensor<i8>,
+}
+
+impl ExecReport {
+    /// Total CPU wall time of CPU-resident nodes.
+    pub fn cpu_time(&self) -> Duration {
+        self.nodes
+            .iter()
+            .filter(|n| n.placement != Placement::Vta)
+            .map(|n| n.wall)
+            .sum()
+    }
+
+    /// Total simulated VTA time.
+    pub fn vta_seconds(&self) -> f64 {
+        self.nodes.iter().map(|n| n.sim_seconds).sum()
+    }
+
+    /// Merged VTA statistics.
+    pub fn vta_stats(&self) -> SimStats {
+        let mut s = SimStats::default();
+        for n in self.nodes.iter().filter_map(|n| n.stats.as_ref()) {
+            s.merge(n);
+        }
+        s
+    }
+
+    /// End-to-end model time: CPU wall + simulated accelerator time
+    /// (the hybrid pipeline is synchronous per node, as in the paper's
+    /// runtime).
+    pub fn total_seconds(&self) -> f64 {
+        self.cpu_time().as_secs_f64() + self.vta_seconds()
+    }
+}
+
+/// Graph executor.
+pub struct Executor {
+    rt: VtaRuntime,
+    cpu: CpuBackend,
+}
+
+impl Executor {
+    /// Build over a fresh VTA runtime (`dram_size` bytes) and a CPU
+    /// backend.
+    pub fn new(rt: VtaRuntime, cpu: CpuBackend) -> Self {
+        Executor { rt, cpu }
+    }
+
+    /// Run the graph on one input. Nodes must already be partitioned.
+    pub fn run(&mut self, g: &Graph, input: &Tensor<i8>) -> Result<ExecReport, ExecError> {
+        let mut values: Vec<Option<Tensor<i8>>> = vec![None; g.nodes.len()];
+        let mut reports = Vec::with_capacity(g.nodes.len());
+
+        for node in &g.nodes {
+            let t0 = Instant::now();
+            let mut sim_seconds = 0.0;
+            let mut stats = None;
+
+            let out = match (&node.op, node.placement) {
+                (Op::Input { .. }, _) => input.clone(),
+                (Op::Conv2d { p }, Placement::Vta) => {
+                    let x = values[node.inputs[0]].as_ref().unwrap();
+                    let w = g
+                        .weights(node.id)
+                        .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
+                    let cfg = self.rt.ctx.config().clone();
+                    let ip = pack_activations(&cfg, x);
+                    let wp = pack_weights(&cfg, w);
+                    let r = lower_conv2d(&mut self.rt, p, &ip, &wp, 2)
+                        .map_err(|e| ExecError::Compile(node.name.clone(), e))?;
+                    sim_seconds = r.stats.total_cycles as f64 / cfg.clock_hz;
+                    stats = Some(r.stats.clone());
+                    unpack_outputs(&cfg, &r.out, x.shape()[0], p.oc, p.out_h(), p.out_w())
+                }
+                (op, Placement::Vta) => {
+                    return Err(ExecError::NotOffloadable(node.name.clone(), op.kind()))
+                }
+                (op, _) => self.run_cpu(g, node.id, op, &values)?,
+            };
+
+            reports.push(NodeReport {
+                name: node.name.clone(),
+                kind: node.op.kind(),
+                placement: node.placement,
+                wall: t0.elapsed(),
+                sim_seconds,
+                stats,
+                ops: node.op.ops(&node.shape),
+            });
+            values[node.id] = Some(out);
+        }
+
+        let out_id = g.output().expect("non-empty graph");
+        Ok(ExecReport { nodes: reports, output: values[out_id].take().unwrap() })
+    }
+
+    fn run_cpu(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        op: &Op,
+        values: &[Option<Tensor<i8>>],
+    ) -> Result<Tensor<i8>, ExecError> {
+        let node = &g.nodes[id];
+        let arg = |i: usize| values[node.inputs[i]].as_ref().unwrap();
+        // Try the PJRT artifact first when that backend is selected.
+        if let CpuBackend::Pjrt(cache) = &mut self.cpu {
+            if let Some(name) = artifact_name(op, &node.shape) {
+                if cache.has(&name) {
+                    let mut inputs: Vec<&Tensor<i8>> =
+                        node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
+                    let w_holder;
+                    if let Some(w) = g.weights(id) {
+                        w_holder = w.clone();
+                        inputs.push(&w_holder);
+                    }
+                    let mut outs = cache
+                        .run_i8(&name, &inputs)
+                        .map_err(|err| ExecError::Pjrt { node: node.name.clone(), err })?;
+                    return Ok(outs.remove(0));
+                }
+            }
+        }
+        // Native fallback.
+        Ok(match op {
+            Op::Input { .. } => unreachable!("handled by caller"),
+            Op::Conv2d { p } => {
+                let w = g
+                    .weights(id)
+                    .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
+                compiler::reference::conv2d_ref(p, arg(0), w)
+            }
+            Op::Relu => cpu_ops::relu_i8(arg(0)),
+            Op::MaxPool { k, s, pad } => cpu_ops::maxpool_i8(arg(0), *k, *s, *pad),
+            Op::GlobalAvgPool => cpu_ops::global_avg_pool_i8(arg(0)),
+            Op::Add => cpu_ops::add_i8(arg(0), arg(1)),
+            Op::Dense { p } => {
+                let w = g
+                    .weights(id)
+                    .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
+                cpu_ops::dense_i8(p, arg(0), w)
+            }
+        })
+    }
+}
+
+/// Artifact naming scheme shared with `python/compile/aot.py`:
+/// one executable per (op kind, output shape).
+pub fn artifact_name(op: &Op, out_shape: &[usize]) -> Option<String> {
+    let shape_tag = |s: &[usize]| s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+    match op {
+        Op::Conv2d { p } => Some(format!(
+            "conv_{}_{}_{}_{}_{}_{}",
+            p.h, p.ic, p.oc, p.k, p.s, p.requant.relu as u8
+        )),
+        Op::MaxPool { k, s, .. } => Some(format!("maxpool_{}_{}_{}", shape_tag(out_shape), k, s)),
+        Op::GlobalAvgPool => Some(format!("gap_{}", shape_tag(out_shape))),
+        Op::Add => Some(format!("add_{}", shape_tag(out_shape))),
+        Op::Dense { p } => Some(format!("dense_{}_{}_{}", p.m, p.k, p.n)),
+        Op::Relu | Op::Input { .. } => None,
+    }
+}

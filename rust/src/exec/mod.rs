@@ -1,0 +1,15 @@
+//! Heterogeneous graph executor (§5): VTA-resident nodes run on the
+//! behavioral simulator through the full runtime/compiler stack;
+//! CPU-resident nodes run either natively or on AOT-compiled XLA/PJRT
+//! executables produced by the JAX build path (`python/compile/`).
+
+mod cpu_ops;
+mod executor;
+pub mod pjrt;
+
+pub use cpu_ops::{add_i8, dense_i8, global_avg_pool_i8, maxpool_i8, relu_i8};
+pub use executor::{CpuBackend, ExecError, ExecReport, Executor, NodeReport};
+pub use pjrt::{PjrtCache, PjrtError};
+
+#[cfg(test)]
+mod tests;

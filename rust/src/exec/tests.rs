@@ -1,0 +1,144 @@
+use super::*;
+use crate::arch::VtaConfig;
+use crate::compiler::{Conv2dParams, MatmulParams, Requant};
+use crate::graph::{fuse, partition, resnet::*, Graph, Op, PartitionPolicy, Placement};
+use crate::runtime::VtaRuntime;
+use crate::util::{Tensor, XorShiftRng};
+
+fn rand_t(seed: u64, shape: &[usize]) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(shape, rng.vec_i8(shape.iter().product(), -8, 8)).unwrap()
+}
+
+#[test]
+fn maxpool_semantics() {
+    let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1i8, -3, 7, 0]).unwrap();
+    let y = maxpool_i8(&x, 2, 2, 0);
+    assert_eq!(y.shape(), &[1, 1, 1, 1]);
+    assert_eq!(y.data(), &[7]);
+    // Padding taps are skipped, not treated as zero: all-negative pools
+    // stay negative (zero-padding would yield 0 here).
+    let x = Tensor::from_vec(&[1, 1, 2, 2], vec![-5i8, -3, -7, -9]).unwrap();
+    let y = maxpool_i8(&x, 3, 2, 1);
+    assert_eq!(y.data()[0], -3);
+}
+
+#[test]
+fn gap_truncating_mean() {
+    let x = Tensor::from_vec(&[1, 2, 1, 2], vec![3i8, 4, -3, -4]).unwrap();
+    let y = global_avg_pool_i8(&x);
+    assert_eq!(y.shape(), &[1, 2]);
+    assert_eq!(y.data(), &[3, -3]); // 7/2 = 3, -7/2 = -3 (trunc toward 0)
+}
+
+#[test]
+fn add_saturates() {
+    let a = Tensor::from_vec(&[2], vec![120i8, -120]).unwrap();
+    let b = Tensor::from_vec(&[2], vec![60i8, -60]).unwrap();
+    assert_eq!(add_i8(&a, &b).data(), &[127, -128]);
+}
+
+#[test]
+fn relu_zeroes_negatives() {
+    let x = Tensor::from_vec(&[3], vec![-1i8, 0, 5]).unwrap();
+    assert_eq!(relu_i8(&x).data(), &[0, 0, 5]);
+}
+
+/// Tiny hybrid graph: CPU conv (shallow channels) → VTA conv → CPU
+/// pooling; the executor must produce exactly the native all-CPU result.
+#[test]
+fn hybrid_graph_matches_cpu_only() {
+    let cfg = VtaConfig::pynq();
+    let rq = Requant { shift: 5, relu: true };
+    let build = || -> Graph {
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 3, 12, 12] }, &[]).unwrap();
+        let p1 = Conv2dParams { h: 12, w: 12, ic: 3, oc: 16, k: 3, s: 1, requant: rq };
+        let c1 = g.add("c1", Op::Conv2d { p: p1 }, &[x]).unwrap();
+        g.set_weights(c1, rand_t(1, &[16, 3, 3, 3]));
+        let p2 = Conv2dParams { h: 12, w: 12, ic: 16, oc: 32, k: 3, s: 2, requant: rq };
+        let c2 = g.add("c2", Op::Conv2d { p: p2 }, &[c1]).unwrap();
+        g.set_weights(c2, rand_t(2, &[32, 16, 3, 3]));
+        let _p = g.add("pool", Op::MaxPool { k: 2, s: 2, pad: 0 }, &[c2]).unwrap();
+        g
+    };
+    let input = rand_t(3, &[1, 3, 12, 12]);
+
+    let mut g_hybrid = build();
+    let (vta, _) = partition(&mut g_hybrid, &PartitionPolicy::paper(&cfg));
+    assert_eq!(vta, 1); // only c2 offloads (c1 has 3 input channels)
+
+    let mut g_cpu = build();
+    partition(&mut g_cpu, &PartitionPolicy::cpu_only());
+
+    let mut ex1 = Executor::new(VtaRuntime::new(&cfg, 32 << 20), CpuBackend::Native);
+    let r1 = ex1.run(&g_hybrid, &input).unwrap();
+    let mut ex2 = Executor::new(VtaRuntime::new(&cfg, 32 << 20), CpuBackend::Native);
+    let r2 = ex2.run(&g_cpu, &input).unwrap();
+
+    assert_eq!(r1.output, r2.output, "hybrid and CPU-only disagree");
+    assert!(r1.vta_seconds() > 0.0);
+    assert_eq!(r2.vta_seconds(), 0.0);
+    assert_eq!(r1.vta_stats().insn_gemm > 0, true);
+}
+
+/// Executor rejects offloading ops the device cannot run.
+#[test]
+fn non_offloadable_op_is_an_error() {
+    let cfg = VtaConfig::pynq();
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 4, 4] }, &[]).unwrap();
+    let m = g.add("pool", Op::MaxPool { k: 2, s: 2, pad: 0 }, &[x]).unwrap();
+    g.nodes[m].placement = Placement::Vta;
+    let mut ex = Executor::new(VtaRuntime::new(&cfg, 8 << 20), CpuBackend::Native);
+    let err = ex.run(&g, &rand_t(5, &[1, 16, 4, 4])).unwrap_err();
+    assert!(matches!(err, ExecError::NotOffloadable(..)));
+}
+
+/// Small end-to-end residual block through the full stack.
+#[test]
+fn residual_block_hybrid() {
+    let cfg = VtaConfig::pynq();
+    let rq = Requant { shift: 6, relu: false };
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let p = Conv2dParams { h: 8, w: 8, ic: 16, oc: 16, k: 3, s: 1, requant: rq };
+    let c1 = g.add("c1", Op::Conv2d { p }, &[x]).unwrap();
+    g.set_weights(c1, rand_t(11, &[16, 16, 3, 3]));
+    let c2 = g.add("c2", Op::Conv2d { p }, &[c1]).unwrap();
+    g.set_weights(c2, rand_t(12, &[16, 16, 3, 3]));
+    let add = g.add("add", Op::Add, &[c2, x]).unwrap();
+    let _r = g.add("relu", Op::Relu, &[add]).unwrap();
+
+    let run = |g: &Graph, input: &Tensor<i8>| {
+        let mut ex = Executor::new(VtaRuntime::new(&cfg, 16 << 20), CpuBackend::Native);
+        ex.run(g, input).unwrap().output
+    };
+    let input = rand_t(13, &[1, 16, 8, 8]);
+
+    let mut g1 = g;
+    partition(&mut g1, &PartitionPolicy::paper(&cfg));
+    let hybrid = run(&g1, &input);
+    partition(&mut g1, &PartitionPolicy::cpu_only());
+    let cpu = run(&g1, &input);
+    assert_eq!(hybrid, cpu);
+}
+
+/// ResNet-18 smoke: partitioned execution agrees with CPU-only on a
+/// small crop... the full 224x224 is exercised by the e2e example and
+/// bench; here a reduced-depth check keeps test time sane: run just
+/// the graph build + a few nodes by truncating to the first residual
+/// stage would complicate the builder, so instead assert the report
+/// structure on the full model with a single run (native CPU).
+#[test]
+#[ignore = "slow: full ResNet-18 on the simulator; run explicitly or via the e2e bench"]
+fn resnet18_hybrid_full() {
+    let cfg = VtaConfig::pynq();
+    let (mut g, _) = fuse(resnet18(1, 42).unwrap());
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+    let input = synth_input(7, 1, 3, 224, 224);
+    let mut ex = Executor::new(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native);
+    let r = ex.run(&g, &input).unwrap();
+    assert_eq!(r.output.shape(), &[1, 1000]);
+    assert!(r.vta_seconds() > 0.0);
+}

@@ -1,0 +1,62 @@
+//! Operator fusion (§1.2): fold `Relu` nodes into their producer's
+//! requant epilogue when the producer supports one (conv2d / dense).
+//!
+//! This is the graph-level optimization NNVM performs before TVM
+//! lowering — on VTA it saves a full ALU pass plus a store/load round
+//! trip per activation tensor.
+
+use super::ir::{Graph, Node, Op, Placement};
+
+/// Fuse ReLU into producers. Returns the rewritten graph and the number
+/// of nodes fused away.
+pub fn fuse(g: Graph) -> (Graph, usize) {
+    // Count consumers of each node in the *original* graph.
+    let mut consumers = vec![0usize; g.nodes.len()];
+    for n in &g.nodes {
+        for &i in &n.inputs {
+            consumers[i] += 1;
+        }
+    }
+
+    let mut out = Graph::new();
+    // Map old id → new id.
+    let mut remap: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    let mut fused = 0usize;
+
+    for n in &g.nodes {
+        // A ReLU whose single producer is a conv/dense that only it
+        // consumes folds into that producer's requant.
+        if matches!(n.op, Op::Relu) {
+            let prod = n.inputs[0];
+            let foldable = consumers[prod] == 1
+                && matches!(g.nodes[prod].op, Op::Conv2d { .. } | Op::Dense { .. });
+            if foldable {
+                let new_prod = remap[prod].expect("producer already emitted");
+                set_relu(&mut out.nodes[new_prod]);
+                remap[n.id] = Some(new_prod);
+                fused += 1;
+                continue;
+            }
+        }
+        let new_inputs: Vec<usize> =
+            n.inputs.iter().map(|&i| remap[i].expect("topo order")).collect();
+        let new_id = out
+            .add(n.name.clone(), n.op.clone(), &new_inputs)
+            .expect("rewrite preserves validity");
+        out.nodes[new_id].placement = Placement::Unassigned;
+        if let Some(w) = g.weights(n.id) {
+            out.set_weights(new_id, w.clone());
+        }
+        remap[n.id] = Some(new_id);
+    }
+    (out, fused)
+}
+
+fn set_relu(node: &mut Node) {
+    match &mut node.op {
+        Op::Conv2d { p } => p.requant.relu = true,
+        Op::Dense { p } => p.requant.relu = true,
+        _ => unreachable!("checked by caller"),
+    }
+    node.name.push_str("+relu");
+}

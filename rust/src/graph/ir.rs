@@ -1,0 +1,253 @@
+//! The graph IR: nodes, operators, shape inference.
+
+use crate::compiler::{Conv2dParams, MatmulParams, Requant};
+use crate::util::Tensor;
+use thiserror::Error;
+
+/// Node identifier.
+pub type NodeId = usize;
+
+/// Tensor shape (NCHW for activations, `[M, N]` for matrices).
+pub type TensorShape = Vec<usize>;
+
+/// Graph construction / validation errors.
+#[derive(Debug, Error)]
+pub enum GraphError {
+    #[error("node {0} references unknown input {1}")]
+    UnknownInput(NodeId, NodeId),
+    #[error("node {id} ({name}): shape mismatch: {detail}")]
+    ShapeMismatch { id: NodeId, name: String, detail: String },
+    #[error("graph has no output node")]
+    NoOutput,
+    #[error("missing weights for node {0}")]
+    MissingWeights(NodeId),
+}
+
+/// Where a node executes (decided by the partition pass).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Not yet decided.
+    #[default]
+    Unassigned,
+    /// Offloaded to the VTA accelerator.
+    Vta,
+    /// Runs on the CPU (native Rust or an XLA/PJRT executable).
+    Cpu,
+}
+
+/// Operators. Quantized int8 domain end-to-end: convolution and dense
+/// accumulate in int32 and requantize on write-back (the paper's 8-bit
+/// weight/activation, 32-bit accumulator regime, §2.5).
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input { shape: TensorShape },
+    /// 2D convolution (+ fused requant/ReLU epilogue).
+    Conv2d { p: Conv2dParams },
+    /// Standalone ReLU (fused into producers where possible).
+    Relu,
+    /// Max pooling (CPU-resident in the paper's evaluation).
+    MaxPool { k: usize, s: usize, pad: usize },
+    /// Global average pooling → `[N, C]`.
+    GlobalAvgPool,
+    /// Residual addition with saturating int8 semantics (CPU-resident).
+    Add,
+    /// Dense / fully-connected layer (`x W^T`, requantized).
+    Dense { p: MatmulParams },
+}
+
+/// A graph node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub placement: Placement,
+    /// Inferred output shape.
+    pub shape: TensorShape,
+}
+
+/// A dataflow graph in topological order (nodes only reference earlier
+/// nodes — enforced at construction).
+#[derive(Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Per-node parameter tensors (conv weights `OIHW`, dense `N x K`).
+    weights: Vec<Option<Tensor<i8>>>,
+}
+
+impl Graph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a node; `inputs` must be existing ids. Returns the id.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        op: Op,
+        inputs: &[NodeId],
+    ) -> Result<NodeId, GraphError> {
+        let id = self.nodes.len();
+        for &i in inputs {
+            if i >= id {
+                return Err(GraphError::UnknownInput(id, i));
+            }
+        }
+        let name = name.into();
+        let shape = self.infer_shape(id, &name, &op, inputs)?;
+        self.nodes.push(Node { id, name, op, inputs: inputs.to_vec(), placement: Placement::Unassigned, shape });
+        self.weights.push(None);
+        Ok(id)
+    }
+
+    /// Attach weights to a node.
+    pub fn set_weights(&mut self, id: NodeId, w: Tensor<i8>) {
+        self.weights[id] = Some(w);
+    }
+
+    /// Node weights, if any.
+    pub fn weights(&self, id: NodeId) -> Option<&Tensor<i8>> {
+        self.weights.get(id).and_then(|w| w.as_ref())
+    }
+
+    /// The output node (last appended).
+    pub fn output(&self) -> Result<NodeId, GraphError> {
+        if self.nodes.is_empty() {
+            Err(GraphError::NoOutput)
+        } else {
+            Ok(self.nodes.len() - 1)
+        }
+    }
+
+    /// Total parameter bytes.
+    pub fn param_bytes(&self) -> usize {
+        self.weights.iter().flatten().map(|w| w.len()).sum()
+    }
+
+    fn infer_shape(
+        &self,
+        id: NodeId,
+        name: &str,
+        op: &Op,
+        inputs: &[NodeId],
+    ) -> Result<TensorShape, GraphError> {
+        let err = |detail: String| GraphError::ShapeMismatch { id, name: name.to_string(), detail };
+        let in_shape = |i: usize| -> &TensorShape { &self.nodes[inputs[i]].shape };
+        match op {
+            Op::Input { shape } => Ok(shape.clone()),
+            Op::Conv2d { p } => {
+                let s = in_shape(0);
+                if s.len() != 4 || s[1] != p.ic || s[2] != p.h || s[3] != p.w {
+                    return Err(err(format!("conv expects [N,{},{},{}], got {s:?}", p.ic, p.h, p.w)));
+                }
+                Ok(vec![s[0], p.oc, p.out_h(), p.out_w()])
+            }
+            Op::Relu => Ok(in_shape(0).clone()),
+            Op::MaxPool { k, s, pad } => {
+                let sh = in_shape(0);
+                if sh.len() != 4 {
+                    return Err(err(format!("maxpool expects NCHW, got {sh:?}")));
+                }
+                let oh = (sh[2] + 2 * pad - k) / s + 1;
+                let ow = (sh[3] + 2 * pad - k) / s + 1;
+                Ok(vec![sh[0], sh[1], oh, ow])
+            }
+            Op::GlobalAvgPool => {
+                let sh = in_shape(0);
+                if sh.len() != 4 {
+                    return Err(err(format!("gap expects NCHW, got {sh:?}")));
+                }
+                Ok(vec![sh[0], sh[1]])
+            }
+            Op::Add => {
+                let (a, b) = (in_shape(0), in_shape(1));
+                if a != b {
+                    return Err(err(format!("add operands differ: {a:?} vs {b:?}")));
+                }
+                Ok(a.clone())
+            }
+            Op::Dense { p } => {
+                let sh = in_shape(0);
+                if sh.len() != 2 || sh[1] != p.k {
+                    return Err(err(format!("dense expects [M,{}], got {sh:?}", p.k)));
+                }
+                Ok(vec![sh[0], p.n])
+            }
+        }
+    }
+
+    /// Consistency check: every parametric node has weights of the
+    /// right shape.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv2d { p } => {
+                    let w = self.weights(n.id).ok_or(GraphError::MissingWeights(n.id))?;
+                    if w.shape() != [p.oc, p.ic, p.k, p.k] {
+                        return Err(GraphError::ShapeMismatch {
+                            id: n.id,
+                            name: n.name.clone(),
+                            detail: format!("conv weights {:?}", w.shape()),
+                        });
+                    }
+                }
+                Op::Dense { p } => {
+                    let w = self.weights(n.id).ok_or(GraphError::MissingWeights(n.id))?;
+                    if w.shape() != [p.n, p.k] {
+                        return Err(GraphError::ShapeMismatch {
+                            id: n.id,
+                            name: n.name.clone(),
+                            detail: format!("dense weights {:?}", w.shape()),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Saturating int8 residual addition — the CPU-side semantics for
+    /// `Op::Add` (shared with the JAX model).
+    pub fn saturating_add(a: i8, b: i8) -> i8 {
+        (a as i16 + b as i16).clamp(-128, 127) as i8
+    }
+}
+
+impl Op {
+    /// Short operator class name (reporting).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv2d { .. } => "conv2d",
+            Op::Relu => "relu",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Add => "add",
+            Op::Dense { .. } => "dense",
+        }
+    }
+
+    /// Integer-op count of the node (for Amdahl accounting).
+    pub fn ops(&self, out_shape: &[usize]) -> u64 {
+        match self {
+            Op::Conv2d { p } => p.ops(),
+            Op::Dense { p } => p.ops(),
+            Op::MaxPool { k, .. } => (out_shape.iter().product::<usize>() * k * k) as u64,
+            Op::Add | Op::Relu => out_shape.iter().product::<usize>() as u64,
+            Op::GlobalAvgPool | Op::Input { .. } => 0,
+        }
+    }
+
+    /// The requant epilogue carried by this op, if fused.
+    pub fn requant(&self) -> Option<Requant> {
+        match self {
+            Op::Conv2d { p } => Some(p.requant),
+            Op::Dense { p } => Some(p.requant),
+            _ => None,
+        }
+    }
+}

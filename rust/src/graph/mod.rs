@@ -1,0 +1,24 @@
+//! NNVM-like graph layer (§1.2 "NNVM Intermediate Representation").
+//!
+//! A small dataflow IR over quantized int8 tensors with the passes the
+//! paper's stack applies before TVM lowering:
+//!
+//! * [`fusion`] — operator fusion (conv + requant + ReLU collapse into
+//!   the conv node's ALU epilogue, the fusion §1.2 motivates).
+//! * [`partition`] — CPU / VTA placement (§5: conv layers offload
+//!   except shallow-channel C1; pooling, FC, residual adds stay on the
+//!   CPU).
+//! * [`resnet`] — the ResNet-18 workload builder with deterministic
+//!   synthetic int8 weights (Table 1's twelve conv configurations).
+
+mod fusion;
+mod ir;
+mod partition;
+pub mod resnet;
+
+pub use fusion::fuse;
+pub use ir::{Graph, GraphError, Node, NodeId, Op, Placement, TensorShape};
+pub use partition::{partition, PartitionPolicy};
+
+#[cfg(test)]
+mod tests;

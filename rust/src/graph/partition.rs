@@ -1,0 +1,57 @@
+//! CPU / VTA partitioning (§5 "End-to-end ResNet Evaluation").
+//!
+//! The paper offloads every ResNet conv layer to the FPGA except C1
+//! ("due to its low number of input channels"); residual adds, pooling
+//! and the classifier run on the CPU. The policy here encodes exactly
+//! that rule, parameterized so ablations can move the boundary.
+
+use super::ir::{Graph, Op, Placement};
+use crate::arch::VtaConfig;
+
+/// Placement policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionPolicy {
+    /// Minimum input channels for a conv to be worth offloading
+    /// (paper: one full `BLOCK_IN`, which C1's 3 channels miss).
+    pub min_conv_ic: usize,
+    /// Offload dense layers too (paper: no — FC runs on the CPU).
+    pub offload_dense: bool,
+    /// Force everything onto the CPU (the Fig 16 baseline).
+    pub cpu_only: bool,
+}
+
+impl PartitionPolicy {
+    /// The paper's evaluation policy for a given VTA variant.
+    pub fn paper(cfg: &VtaConfig) -> Self {
+        PartitionPolicy { min_conv_ic: cfg.gemm.block_in, offload_dense: false, cpu_only: false }
+    }
+
+    /// CPU-only baseline.
+    pub fn cpu_only() -> Self {
+        PartitionPolicy { min_conv_ic: usize::MAX, offload_dense: false, cpu_only: true }
+    }
+}
+
+/// Assign placements in-place. Returns (vta_nodes, cpu_nodes).
+pub fn partition(g: &mut Graph, policy: &PartitionPolicy) -> (usize, usize) {
+    let mut vta = 0;
+    let mut cpu = 0;
+    for n in &mut g.nodes {
+        let place = if policy.cpu_only {
+            Placement::Cpu
+        } else {
+            match &n.op {
+                Op::Conv2d { p } if p.ic >= policy.min_conv_ic => Placement::Vta,
+                Op::Dense { .. } if policy.offload_dense => Placement::Vta,
+                Op::Input { .. } => Placement::Cpu,
+                _ => Placement::Cpu,
+            }
+        };
+        n.placement = place;
+        match place {
+            Placement::Vta => vta += 1,
+            _ => cpu += 1,
+        }
+    }
+    (vta, cpu)
+}

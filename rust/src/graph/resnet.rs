@@ -1,0 +1,184 @@
+//! ResNet-18 workload builder (§5, Table 1).
+//!
+//! Builds the full inference graph with deterministic synthetic int8
+//! weights (the evaluation measures performance, not accuracy — see
+//! DESIGN.md §2). The twelve conv configurations C1–C12 of Table 1 all
+//! appear; the builder also exposes them individually for the
+//! single-kernel benchmarks.
+
+use super::ir::{Graph, GraphError, Op};
+use crate::compiler::{Conv2dParams, MatmulParams, Requant};
+use crate::util::{Tensor, XorShiftRng};
+
+/// Requantization used by every layer (shift tuned so synthetic int8
+/// activations neither saturate nor vanish; the JAX model mirrors it).
+pub const LAYER_SHIFT: u8 = 6;
+
+/// Table 1 of the paper: the conv2d operators of ResNet-18.
+/// `(name, H/W, IC, OC, K, S)`; all SAME padding.
+pub const TABLE1: [(&str, usize, usize, usize, usize, usize); 12] = [
+    ("C1", 224, 3, 64, 7, 2),
+    ("C2", 56, 64, 64, 3, 1),
+    ("C3", 56, 64, 64, 1, 1),
+    ("C4", 56, 64, 128, 3, 2),
+    ("C5", 56, 64, 128, 1, 2),
+    ("C6", 28, 128, 128, 3, 1),
+    ("C7", 28, 128, 256, 3, 2),
+    ("C8", 28, 128, 256, 1, 2),
+    ("C9", 14, 256, 256, 3, 1),
+    ("C10", 14, 256, 512, 3, 2),
+    ("C11", 14, 256, 512, 1, 2),
+    ("C12", 7, 512, 512, 3, 1),
+];
+
+/// Conv2dParams for a Table 1 row.
+pub fn table1_params(row: usize) -> Conv2dParams {
+    let (_, h, ic, oc, k, s) = TABLE1[row];
+    Conv2dParams { h, w: h, ic, oc, k, s, requant: Requant { shift: LAYER_SHIFT, relu: false } }
+}
+
+/// Synthetic int8 weights for a conv layer, deterministic in `seed`.
+/// Small range keeps post-shift activations in a healthy int8 band.
+pub fn synth_conv_weights(seed: u64, oc: usize, ic: usize, k: usize) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(&[oc, ic, k, k], rng.vec_i8(oc * ic * k * k, -4, 4)).unwrap()
+}
+
+/// Synthetic int8 input image batch.
+pub fn synth_input(seed: u64, n: usize, c: usize, h: usize, w: usize) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(&[n, c, h, w], rng.vec_i8(n * c * h * w, -16, 16)).unwrap()
+}
+
+/// Build the full ResNet-18 inference graph for batch size `n`.
+///
+/// Structure: conv1(7x7/2) → maxpool(3x3/2) → 4 stages x 2 basic
+/// blocks → global-avg-pool → fc(512→1000). Downsample shortcuts are
+/// 1x1 stride-2 convs (C5/C8/C11 in Table 1).
+pub fn resnet18(n: usize, seed: u64) -> Result<Graph, GraphError> {
+    let mut g = Graph::new();
+    let rq = |relu: bool| Requant { shift: LAYER_SHIFT, relu };
+    let mut wseed = seed;
+    let mut next_seed = move || {
+        wseed = wseed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        wseed
+    };
+
+    let input = g.add("input", Op::Input { shape: vec![n, 3, 224, 224] }, &[])?;
+
+    // conv1 + relu (fused) + maxpool
+    let c1p = Conv2dParams { h: 224, w: 224, ic: 3, oc: 64, k: 7, s: 2, requant: rq(true) };
+    let conv1 = g.add("conv1", Op::Conv2d { p: c1p }, &[input])?;
+    g.set_weights(conv1, synth_conv_weights(next_seed(), 64, 3, 7));
+    let pool1 = g.add("maxpool", Op::MaxPool { k: 3, s: 2, pad: 1 }, &[conv1])?;
+
+    // Four stages of two basic blocks each.
+    let mut x = pool1;
+    let mut in_ch = 64usize;
+    let mut hw = 56usize;
+    for (stage, &out_ch) in [64usize, 128, 256, 512].iter().enumerate() {
+        for block in 0..2 {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            let name = |part: &str| format!("layer{}.{}.{}", stage + 1, block, part);
+
+            // Main path: conv3x3(s) + relu, conv3x3(1).
+            let pa = Conv2dParams {
+                h: hw,
+                w: hw,
+                ic: in_ch,
+                oc: out_ch,
+                k: 3,
+                s: stride,
+                requant: rq(true),
+            };
+            let a = g.add(name("conv1"), Op::Conv2d { p: pa }, &[x])?;
+            g.set_weights(a, synth_conv_weights(next_seed(), out_ch, in_ch, 3));
+            let hw2 = pa.out_h();
+            let pb = Conv2dParams {
+                h: hw2,
+                w: hw2,
+                ic: out_ch,
+                oc: out_ch,
+                k: 3,
+                s: 1,
+                requant: rq(false),
+            };
+            let b = g.add(name("conv2"), Op::Conv2d { p: pb }, &[a])?;
+            g.set_weights(b, synth_conv_weights(next_seed(), out_ch, out_ch, 3));
+
+            // Shortcut: the first block of every stage uses a 1x1
+            // projection conv, matching the paper's MXNet model —
+            // Table 1's C3 is stage 1's dimension-preserving
+            // projection (torchvision-style identity shortcuts would
+            // have no 56x56 1x1 conv).
+            let shortcut = if block == 0 {
+                let pd = Conv2dParams {
+                    h: hw,
+                    w: hw,
+                    ic: in_ch,
+                    oc: out_ch,
+                    k: 1,
+                    s: stride,
+                    requant: rq(false),
+                };
+                let d = g.add(name("downsample"), Op::Conv2d { p: pd }, &[x])?;
+                g.set_weights(d, synth_conv_weights(next_seed(), out_ch, in_ch, 1));
+                d
+            } else {
+                x
+            };
+
+            let sum = g.add(name("add"), Op::Add, &[b, shortcut])?;
+            x = g.add(name("relu"), Op::Relu, &[sum])?;
+            in_ch = out_ch;
+            hw = hw2;
+        }
+    }
+
+    // Head.
+    let gap = g.add("avgpool", Op::GlobalAvgPool, &[x])?;
+    let fcp = MatmulParams { m: n, k: 512, n: 1000, requant: rq(false) };
+    let fc = g.add("fc", Op::Dense { p: fcp }, &[gap])?;
+    let mut rng = XorShiftRng::new(next_seed());
+    g.set_weights(fc, Tensor::from_vec(&[1000, 512], rng.vec_i8(512_000, -4, 4)).unwrap());
+
+    g.validate()?;
+    Ok(g)
+}
+
+/// Map each conv node of a built graph to its Table 1 label (by shape
+/// match). Nodes that share a configuration share the label, as in the
+/// paper ("configurations of all conv2d operators" — duplicates
+/// collapse).
+pub fn table1_label(p: &Conv2dParams) -> Option<&'static str> {
+    TABLE1
+        .iter()
+        .find(|(_, h, ic, oc, k, s)| p.h == *h && p.ic == *ic && p.oc == *oc && p.k == *k && p.s == *s)
+        .map(|(name, ..)| *name)
+}
+
+/// The distinct conv workloads of the graph, labeled and deduplicated,
+/// with multiplicity (how many times each config runs in one forward
+/// pass).
+pub fn conv_workloads(g: &Graph) -> Vec<(&'static str, Conv2dParams, usize)> {
+    let mut out: Vec<(&'static str, Conv2dParams, usize)> = Vec::new();
+    for node in &g.nodes {
+        if let Op::Conv2d { p } = &node.op {
+            if let Some(label) = table1_label(p) {
+                if let Some(entry) = out.iter_mut().find(|(l, ..)| *l == label) {
+                    entry.2 += 1;
+                } else {
+                    out.push((label, *p, 1));
+                }
+            }
+        }
+    }
+    out.sort_by_key(|(l, ..)| l.trim_start_matches('C').parse::<usize>().unwrap());
+    out
+}
+
+/// Self-check: the ResNet-18 graph contains every Table 1 config.
+pub fn check_table1_coverage(g: &Graph) -> Vec<&'static str> {
+    let present: Vec<&str> = conv_workloads(g).iter().map(|(l, ..)| *l).collect();
+    TABLE1.iter().map(|(n, ..)| *n).filter(|n| !present.contains(n)).collect()
+}

@@ -1,0 +1,584 @@
+//! CISC instruction formats and their 128-bit binary encoding (Fig 3).
+
+use thiserror::Error;
+
+/// Size of one encoded CISC instruction in bytes.
+pub const INSN_BYTES: usize = 16;
+
+/// ISA-level errors (encode range overflow, decode of malformed words).
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum IsaError {
+    #[error("field {field} value {value} exceeds {bits}-bit encoding")]
+    FieldOverflow { field: &'static str, value: u64, bits: u32 },
+    #[error("unknown opcode {0}")]
+    BadOpcode(u64),
+    #[error("unknown memory type {0}")]
+    BadBuffer(u64),
+    #[error("unknown ALU opcode {0}")]
+    BadAluOpcode(u64),
+    #[error("instruction stream length {0} is not a multiple of {INSN_BYTES}")]
+    BadStreamLength(usize),
+}
+
+/// Top-level opcode (3 bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opcode {
+    Load = 0,
+    Store = 1,
+    Gemm = 2,
+    Finish = 3,
+    Alu = 4,
+}
+
+/// On-chip memory targeted by a LOAD/STORE (§2.6 data-specialized SRAMs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BufferId {
+    /// Micro-op cache (loaded via the compute module).
+    Uop = 0,
+    /// Weight buffer (loaded via the load module).
+    Wgt = 1,
+    /// Input buffer (loaded via the load module).
+    Inp = 2,
+    /// Register file / accumulator (loaded via the compute module).
+    Acc = 3,
+    /// Output buffer (written by compute, drained by the store module).
+    Out = 4,
+}
+
+impl BufferId {
+    /// Decode from the 3-bit memory-type field.
+    pub fn from_u64(v: u64) -> Result<Self, IsaError> {
+        Ok(match v {
+            0 => BufferId::Uop,
+            1 => BufferId::Wgt,
+            2 => BufferId::Inp,
+            3 => BufferId::Acc,
+            4 => BufferId::Out,
+            other => return Err(IsaError::BadBuffer(other)),
+        })
+    }
+}
+
+/// The four dependence flags carried by every instruction (§2.3, Fig 6).
+///
+/// "prev" / "next" are relative to the executing module's position in the
+/// load → compute → store pipeline: e.g. for the compute module,
+/// `pop_prev` pops a RAW token from the load module and `push_prev`
+/// pushes a WAR token back to it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DepFlags {
+    /// Wait for a RAW token from the producer (previous stage).
+    pub pop_prev: bool,
+    /// Wait for a WAR token from the consumer (next stage).
+    pub pop_next: bool,
+    /// Signal a WAR token to the producer when done.
+    pub push_prev: bool,
+    /// Signal a RAW token to the consumer when done.
+    pub push_next: bool,
+}
+
+impl DepFlags {
+    /// No synchronization.
+    pub const NONE: DepFlags =
+        DepFlags { pop_prev: false, pop_next: false, push_prev: false, push_next: false };
+
+    fn encode(&self) -> u64 {
+        (self.pop_prev as u64)
+            | (self.pop_next as u64) << 1
+            | (self.push_prev as u64) << 2
+            | (self.push_next as u64) << 3
+    }
+
+    fn decode(v: u64) -> Self {
+        DepFlags {
+            pop_prev: v & 1 != 0,
+            pop_next: v & 2 != 0,
+            push_prev: v & 4 != 0,
+            push_next: v & 8 != 0,
+        }
+    }
+}
+
+/// LOAD / STORE: 2D strided DMA between DRAM and an SRAM, with dynamic
+/// padding on loads (Fig 9). All sizes are in *tiles* (SRAM rows), not
+/// bytes: DRAM addresses are tile-granular, matching the hardware's
+/// element-width-specialized ports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemInsn {
+    pub deps: DepFlags,
+    /// Which SRAM this instruction targets.
+    pub buffer: BufferId,
+    /// Destination (load) / source (store) SRAM index, in tiles.
+    pub sram_base: u32,
+    /// Source (load) / destination (store) DRAM address, in tiles.
+    pub dram_base: u32,
+    /// Number of rows of the 2D transfer.
+    pub y_size: u16,
+    /// Tiles per row.
+    pub x_size: u16,
+    /// DRAM stride between rows, in tiles.
+    pub x_stride: u16,
+    /// Zero-padding rows inserted before the payload (load only).
+    pub y_pad_top: u8,
+    /// Zero-padding rows appended after the payload (load only).
+    pub y_pad_bottom: u8,
+    /// Zero-padding tiles inserted at the start of each row (load only).
+    pub x_pad_left: u8,
+    /// Zero-padding tiles appended at the end of each row (load only).
+    pub x_pad_right: u8,
+}
+
+impl MemInsn {
+    /// Total SRAM rows touched, including padding.
+    pub fn sram_rows(&self) -> usize {
+        self.y_pad_top as usize + self.y_size as usize + self.y_pad_bottom as usize
+    }
+
+    /// SRAM tiles per row, including padding.
+    pub fn sram_row_tiles(&self) -> usize {
+        self.x_pad_left as usize + self.x_size as usize + self.x_pad_right as usize
+    }
+
+    /// Total SRAM tiles written (load) or read (store).
+    pub fn sram_tiles(&self) -> usize {
+        self.sram_rows() * self.sram_row_tiles()
+    }
+
+    /// Tiles actually moved over the DRAM port (padding is generated
+    /// on-chip and is free — the whole point of Fig 9).
+    pub fn dram_tiles(&self) -> usize {
+        self.y_size as usize * self.x_size as usize
+    }
+}
+
+/// GEMM: run a micro-op sequence in a 2-level nested loop on the GEMM
+/// core (Fig 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmInsn {
+    pub deps: DepFlags,
+    /// Reset the accumulator tiles instead of multiply-accumulating.
+    pub reset: bool,
+    /// Micro-op cache range `[uop_begin, uop_end)`.
+    pub uop_begin: u16,
+    pub uop_end: u16,
+    /// Outer loop extent.
+    pub lp0: u16,
+    /// Inner loop extent.
+    pub lp1: u16,
+    /// Affine index strides added to each uop's base indices.
+    pub acc_factor0: u16,
+    pub acc_factor1: u16,
+    pub inp_factor0: u16,
+    pub inp_factor1: u16,
+    pub wgt_factor0: u16,
+    pub wgt_factor1: u16,
+}
+
+impl GemmInsn {
+    /// Number of micro-op executions (= GEMM-core busy cycles, Fig 7:
+    /// "one matrix multiplication per cycle").
+    pub fn uop_executions(&self) -> u64 {
+        self.lp0 as u64 * self.lp1 as u64 * (self.uop_end.saturating_sub(self.uop_begin)) as u64
+    }
+}
+
+/// Tensor-ALU opcodes (Fig 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AluOpcode {
+    /// Element-wise minimum.
+    Min = 0,
+    /// Element-wise maximum (ReLU = max with 0 immediate).
+    Max = 1,
+    /// Element-wise addition (residual connections, bias).
+    Add = 2,
+    /// Arithmetic shift right (fixed-point requantization).
+    Shr = 3,
+    /// Logical shift left.
+    Shl = 4,
+    /// Element-wise multiply (scaling; extension over the minimal set).
+    Mul = 5,
+    /// Fused requantization: `clamp(a >> imm, -128, 127)` — an extended
+    /// ALU operator (§2.5: the operator range "can be extended for
+    /// higher operator coverage"); replaces the SHR/MAX/MIN triple on
+    /// the requant epilogue, cutting its initiation count 3x.
+    Rq = 6,
+    /// Fused requantization with ReLU: `clamp(a >> imm, 0, 127)`.
+    RqRelu = 7,
+}
+
+impl AluOpcode {
+    /// Decode from the 3-bit field.
+    pub fn from_u64(v: u64) -> Result<Self, IsaError> {
+        Ok(match v {
+            0 => AluOpcode::Min,
+            1 => AluOpcode::Max,
+            2 => AluOpcode::Add,
+            3 => AluOpcode::Shr,
+            4 => AluOpcode::Shl,
+            5 => AluOpcode::Mul,
+            6 => AluOpcode::Rq,
+            7 => AluOpcode::RqRelu,
+            other => return Err(IsaError::BadAluOpcode(other)),
+        })
+    }
+
+    /// Apply to 32-bit accumulator lanes.
+    #[inline(always)]
+    pub fn apply(&self, a: i32, b: i32) -> i32 {
+        match self {
+            AluOpcode::Min => a.min(b),
+            AluOpcode::Max => a.max(b),
+            AluOpcode::Add => a.wrapping_add(b),
+            AluOpcode::Shr => a >> (b & 31),
+            AluOpcode::Shl => ((a as u32) << (b & 31) as u32) as i32,
+            AluOpcode::Mul => a.wrapping_mul(b),
+            AluOpcode::Rq => (a >> (b & 31)).clamp(-128, 127),
+            AluOpcode::RqRelu => (a >> (b & 31)).clamp(0, 127),
+        }
+    }
+}
+
+/// ALU: run a micro-op sequence on the tensor ALU (Fig 8). Operates on
+/// register-file tiles; the second operand is either another tile
+/// (tensor-tensor) or an immediate broadcast (tensor-scalar).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AluInsn {
+    pub deps: DepFlags,
+    pub op: AluOpcode,
+    /// Use `imm` instead of a second register-file operand.
+    pub use_imm: bool,
+    /// Immediate operand (sign-extended 16-bit).
+    pub imm: i16,
+    /// Micro-op cache range `[uop_begin, uop_end)`.
+    pub uop_begin: u16,
+    pub uop_end: u16,
+    /// Outer loop extent.
+    pub lp0: u16,
+    /// Inner loop extent.
+    pub lp1: u16,
+    /// Affine strides for destination and source register-file indices.
+    pub dst_factor0: u16,
+    pub dst_factor1: u16,
+    pub src_factor0: u16,
+    pub src_factor1: u16,
+}
+
+impl AluInsn {
+    /// Number of micro-op executions.
+    pub fn uop_executions(&self) -> u64 {
+        self.lp0 as u64 * self.lp1 as u64 * (self.uop_end.saturating_sub(self.uop_begin)) as u64
+    }
+}
+
+/// A decoded VTA CISC instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instruction {
+    Load(MemInsn),
+    Store(MemInsn),
+    Gemm(GemmInsn),
+    Alu(AluInsn),
+    /// End-of-stream sentinel; raises the done flag (§3.2 VTASynchronize).
+    Finish(DepFlags),
+}
+
+impl Instruction {
+    /// The instruction's dependence flags.
+    pub fn deps(&self) -> DepFlags {
+        match self {
+            Instruction::Load(m) | Instruction::Store(m) => m.deps,
+            Instruction::Gemm(g) => g.deps,
+            Instruction::Alu(a) => a.deps,
+            Instruction::Finish(d) => *d,
+        }
+    }
+
+    /// Mutable access to the dependence flags (used by the runtime's
+    /// dependence push/pop API, §3.2).
+    pub fn deps_mut(&mut self) -> &mut DepFlags {
+        match self {
+            Instruction::Load(m) | Instruction::Store(m) => &mut m.deps,
+            Instruction::Gemm(g) => &mut g.deps,
+            Instruction::Alu(a) => &mut a.deps,
+            Instruction::Finish(d) => d,
+        }
+    }
+
+    /// Opcode of this instruction.
+    pub fn opcode(&self) -> Opcode {
+        match self {
+            Instruction::Load(_) => Opcode::Load,
+            Instruction::Store(_) => Opcode::Store,
+            Instruction::Gemm(_) => Opcode::Gemm,
+            Instruction::Alu(_) => Opcode::Alu,
+            Instruction::Finish(_) => Opcode::Finish,
+        }
+    }
+
+    /// Short mnemonic used in traces and disassembly.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instruction::Load(m) => match m.buffer {
+                BufferId::Uop => "LOAD.UOP",
+                BufferId::Wgt => "LOAD.WGT",
+                BufferId::Inp => "LOAD.INP",
+                BufferId::Acc => "LOAD.ACC",
+                BufferId::Out => "LOAD.OUT",
+            },
+            Instruction::Store(_) => "STORE",
+            Instruction::Gemm(g) if g.reset => "GEMM.RST",
+            Instruction::Gemm(_) => "GEMM",
+            Instruction::Alu(_) => "ALU",
+            Instruction::Finish(_) => "FINISH",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 128-bit binary encoding.
+//
+// Word 0 (low 64 bits) always starts with: opcode[2:0], dep flags[6:3].
+// The remaining fields are packed per-format below; a `BitWriter` keeps
+// the packing explicit and range-checked.
+// ---------------------------------------------------------------------
+
+struct BitWriter {
+    words: [u64; 2],
+    pos: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter { words: [0, 0], pos: 0 }
+    }
+
+    fn put(&mut self, field: &'static str, value: u64, bits: u32) -> Result<(), IsaError> {
+        debug_assert!(bits <= 64);
+        if bits < 64 && value >= 1u64 << bits {
+            return Err(IsaError::FieldOverflow { field, value, bits });
+        }
+        let mut remaining = bits;
+        let mut v = value;
+        while remaining > 0 {
+            let word = (self.pos / 64) as usize;
+            let off = self.pos % 64;
+            let take = remaining.min(64 - off);
+            debug_assert!(word < 2, "encoding overflowed 128 bits");
+            self.words[word] |= (v & mask(take)) << off;
+            v >>= take;
+            self.pos += take;
+            remaining -= take;
+        }
+        Ok(())
+    }
+
+    /// Skip to the start of word 1.
+    fn align_word1(&mut self) {
+        debug_assert!(self.pos <= 64);
+        self.pos = 64;
+    }
+}
+
+struct BitReader {
+    words: [u64; 2],
+    pos: u32,
+}
+
+impl BitReader {
+    fn new(words: [u64; 2]) -> Self {
+        BitReader { words, pos: 0 }
+    }
+
+    fn get(&mut self, bits: u32) -> u64 {
+        let mut out = 0u64;
+        let mut got = 0u32;
+        let mut remaining = bits;
+        while remaining > 0 {
+            let word = (self.pos / 64) as usize;
+            let off = self.pos % 64;
+            let take = remaining.min(64 - off);
+            let piece = (self.words[word] >> off) & mask(take);
+            out |= piece << got;
+            got += take;
+            self.pos += take;
+            remaining -= take;
+        }
+        out
+    }
+
+    fn align_word1(&mut self) {
+        self.pos = 64;
+    }
+}
+
+#[inline]
+fn mask(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+impl Instruction {
+    /// Encode to the 128-bit binary format.
+    pub fn encode(&self) -> Result<[u64; 2], IsaError> {
+        let mut w = BitWriter::new();
+        w.put("opcode", self.opcode() as u64, 3)?;
+        w.put("deps", self.deps().encode(), 4)?;
+        match self {
+            Instruction::Load(m) | Instruction::Store(m) => {
+                w.put("buffer", m.buffer as u64, 3)?;
+                w.put("sram_base", m.sram_base as u64, 22)?;
+                w.put("dram_base", m.dram_base as u64, 32)?;
+                w.align_word1();
+                w.put("y_size", m.y_size as u64, 16)?;
+                w.put("x_size", m.x_size as u64, 16)?;
+                w.put("x_stride", m.x_stride as u64, 16)?;
+                w.put("y_pad_top", m.y_pad_top as u64, 4)?;
+                w.put("y_pad_bottom", m.y_pad_bottom as u64, 4)?;
+                w.put("x_pad_left", m.x_pad_left as u64, 4)?;
+                w.put("x_pad_right", m.x_pad_right as u64, 4)?;
+            }
+            Instruction::Gemm(g) => {
+                w.put("reset", g.reset as u64, 1)?;
+                w.put("uop_begin", g.uop_begin as u64, 14)?;
+                w.put("uop_end", g.uop_end as u64, 14)?;
+                w.put("lp0", g.lp0 as u64, 14)?;
+                w.put("lp1", g.lp1 as u64, 14)?;
+                w.align_word1();
+                w.put("acc_factor0", g.acc_factor0 as u64, 11)?;
+                w.put("acc_factor1", g.acc_factor1 as u64, 11)?;
+                w.put("inp_factor0", g.inp_factor0 as u64, 11)?;
+                w.put("inp_factor1", g.inp_factor1 as u64, 11)?;
+                w.put("wgt_factor0", g.wgt_factor0 as u64, 10)?;
+                w.put("wgt_factor1", g.wgt_factor1 as u64, 10)?;
+            }
+            Instruction::Alu(a) => {
+                w.put("reset", 0, 1)?;
+                w.put("uop_begin", a.uop_begin as u64, 14)?;
+                w.put("uop_end", a.uop_end as u64, 14)?;
+                w.put("lp0", a.lp0 as u64, 14)?;
+                w.put("lp1", a.lp1 as u64, 14)?;
+                w.align_word1();
+                w.put("dst_factor0", a.dst_factor0 as u64, 11)?;
+                w.put("dst_factor1", a.dst_factor1 as u64, 11)?;
+                w.put("src_factor0", a.src_factor0 as u64, 11)?;
+                w.put("src_factor1", a.src_factor1 as u64, 11)?;
+                w.put("alu_opcode", a.op as u64, 3)?;
+                w.put("use_imm", a.use_imm as u64, 1)?;
+                w.put("imm", a.imm as u16 as u64, 16)?;
+            }
+            Instruction::Finish(_) => {}
+        }
+        Ok(w.words)
+    }
+
+    /// Decode from the 128-bit binary format.
+    pub fn decode(words: [u64; 2]) -> Result<Self, IsaError> {
+        let mut r = BitReader::new(words);
+        let opcode = r.get(3);
+        let deps = DepFlags::decode(r.get(4));
+        match opcode {
+            0 | 1 => {
+                let buffer = BufferId::from_u64(r.get(3))?;
+                let sram_base = r.get(22) as u32;
+                let dram_base = r.get(32) as u32;
+                r.align_word1();
+                let m = MemInsn {
+                    deps,
+                    buffer,
+                    sram_base,
+                    dram_base,
+                    y_size: r.get(16) as u16,
+                    x_size: r.get(16) as u16,
+                    x_stride: r.get(16) as u16,
+                    y_pad_top: r.get(4) as u8,
+                    y_pad_bottom: r.get(4) as u8,
+                    x_pad_left: r.get(4) as u8,
+                    x_pad_right: r.get(4) as u8,
+                };
+                Ok(if opcode == 0 { Instruction::Load(m) } else { Instruction::Store(m) })
+            }
+            2 => {
+                let reset = r.get(1) != 0;
+                let uop_begin = r.get(14) as u16;
+                let uop_end = r.get(14) as u16;
+                let lp0 = r.get(14) as u16;
+                let lp1 = r.get(14) as u16;
+                r.align_word1();
+                Ok(Instruction::Gemm(GemmInsn {
+                    deps,
+                    reset,
+                    uop_begin,
+                    uop_end,
+                    lp0,
+                    lp1,
+                    acc_factor0: r.get(11) as u16,
+                    acc_factor1: r.get(11) as u16,
+                    inp_factor0: r.get(11) as u16,
+                    inp_factor1: r.get(11) as u16,
+                    wgt_factor0: r.get(10) as u16,
+                    wgt_factor1: r.get(10) as u16,
+                }))
+            }
+            3 => Ok(Instruction::Finish(deps)),
+            4 => {
+                let _reset = r.get(1);
+                let uop_begin = r.get(14) as u16;
+                let uop_end = r.get(14) as u16;
+                let lp0 = r.get(14) as u16;
+                let lp1 = r.get(14) as u16;
+                r.align_word1();
+                let dst_factor0 = r.get(11) as u16;
+                let dst_factor1 = r.get(11) as u16;
+                let src_factor0 = r.get(11) as u16;
+                let src_factor1 = r.get(11) as u16;
+                let op = AluOpcode::from_u64(r.get(3))?;
+                let use_imm = r.get(1) != 0;
+                let imm = r.get(16) as u16 as i16;
+                Ok(Instruction::Alu(AluInsn {
+                    deps,
+                    op,
+                    use_imm,
+                    imm,
+                    uop_begin,
+                    uop_end,
+                    lp0,
+                    lp1,
+                    dst_factor0,
+                    dst_factor1,
+                    src_factor0,
+                    src_factor1,
+                }))
+            }
+            other => Err(IsaError::BadOpcode(other)),
+        }
+    }
+
+    /// Encode a full instruction stream to bytes (the DRAM image the
+    /// fetch module reads).
+    pub fn encode_stream(insns: &[Instruction]) -> Result<Vec<u8>, IsaError> {
+        let mut out = Vec::with_capacity(insns.len() * INSN_BYTES);
+        for insn in insns {
+            let words = insn.encode()?;
+            out.extend_from_slice(&words[0].to_le_bytes());
+            out.extend_from_slice(&words[1].to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    /// Decode a byte stream back into instructions.
+    pub fn decode_stream(bytes: &[u8]) -> Result<Vec<Instruction>, IsaError> {
+        if bytes.len() % INSN_BYTES != 0 {
+            return Err(IsaError::BadStreamLength(bytes.len()));
+        }
+        bytes
+            .chunks_exact(INSN_BYTES)
+            .map(|c| {
+                let w0 = u64::from_le_bytes(c[0..8].try_into().unwrap());
+                let w1 = u64::from_le_bytes(c[8..16].try_into().unwrap());
+                Instruction::decode([w0, w1])
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,24 @@
+//! The two-level VTA ISA (§2.2, Fig 3).
+//!
+//! * **CISC level** — four variable-latency instructions (`LOAD`, `GEMM`,
+//!   `ALU`, `STORE`, plus the `FINISH` sentinel) encoded in 128 bits,
+//!   each carrying four dependence flags used by the hardware's
+//!   dataflow execution (§2.3).
+//! * **RISC level** — 32-bit micro-ops executed by the compute core
+//!   inside a two-level nested loop with affine index generation (§2.5).
+//!
+//! The encoding deliberately mirrors the published VTA bitfields: the
+//! binary form is what the `fetch` module DMA-reads from DRAM, and the
+//! encode/decode round-trip is property-tested in `tests.rs`.
+
+mod insn;
+mod uop;
+
+pub use insn::{
+    AluInsn, AluOpcode, BufferId, DepFlags, GemmInsn, Instruction, IsaError, MemInsn, Opcode,
+    INSN_BYTES,
+};
+pub use uop::{AluUop, GemmUop, Uop, UOP_BYTES};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,259 @@
+use super::*;
+use crate::util::XorShiftRng;
+
+fn sample_mem(deps: DepFlags) -> MemInsn {
+    MemInsn {
+        deps,
+        buffer: BufferId::Inp,
+        sram_base: 0x1234,
+        dram_base: 0xDEADBEE,
+        y_size: 14,
+        x_size: 14,
+        x_stride: 16,
+        y_pad_top: 1,
+        y_pad_bottom: 1,
+        x_pad_left: 1,
+        x_pad_right: 1,
+    }
+}
+
+#[test]
+fn load_store_roundtrip() {
+    for buffer in [BufferId::Uop, BufferId::Wgt, BufferId::Inp, BufferId::Acc, BufferId::Out] {
+        let mut m = sample_mem(DepFlags { pop_prev: true, ..DepFlags::NONE });
+        m.buffer = buffer;
+        for insn in [Instruction::Load(m), Instruction::Store(m)] {
+            let enc = insn.encode().unwrap();
+            assert_eq!(Instruction::decode(enc).unwrap(), insn);
+        }
+    }
+}
+
+#[test]
+fn gemm_roundtrip() {
+    let g = GemmInsn {
+        deps: DepFlags { pop_prev: true, push_next: true, ..DepFlags::NONE },
+        reset: true,
+        uop_begin: 3,
+        uop_end: 130,
+        lp0: 14,
+        lp1: 16,
+        acc_factor0: 16,
+        acc_factor1: 1,
+        inp_factor0: 14,
+        inp_factor1: 1,
+        wgt_factor0: 0,
+        wgt_factor1: 9,
+    };
+    let insn = Instruction::Gemm(g);
+    assert_eq!(Instruction::decode(insn.encode().unwrap()).unwrap(), insn);
+}
+
+#[test]
+fn alu_roundtrip_with_negative_imm() {
+    let a = AluInsn {
+        deps: DepFlags::NONE,
+        op: AluOpcode::Shr,
+        use_imm: true,
+        imm: -42,
+        uop_begin: 0,
+        uop_end: 7,
+        lp0: 2,
+        lp1: 3,
+        dst_factor0: 4,
+        dst_factor1: 1,
+        src_factor0: 4,
+        src_factor1: 1,
+    };
+    let insn = Instruction::Alu(a);
+    let dec = Instruction::decode(insn.encode().unwrap()).unwrap();
+    assert_eq!(dec, insn);
+    if let Instruction::Alu(d) = dec {
+        assert_eq!(d.imm, -42);
+    }
+}
+
+#[test]
+fn finish_roundtrip() {
+    let insn = Instruction::Finish(DepFlags { pop_prev: true, pop_next: true, ..DepFlags::NONE });
+    assert_eq!(Instruction::decode(insn.encode().unwrap()).unwrap(), insn);
+}
+
+#[test]
+fn encode_rejects_overflow() {
+    let mut m = sample_mem(DepFlags::NONE);
+    m.sram_base = 1 << 22; // 22-bit field
+    assert!(matches!(
+        Instruction::Load(m).encode(),
+        Err(IsaError::FieldOverflow { field: "sram_base", .. })
+    ));
+
+    let g = GemmInsn {
+        deps: DepFlags::NONE,
+        reset: false,
+        uop_begin: 0,
+        uop_end: 1 << 14,
+        lp0: 1,
+        lp1: 1,
+        acc_factor0: 0,
+        acc_factor1: 0,
+        inp_factor0: 0,
+        inp_factor1: 0,
+        wgt_factor0: 0,
+        wgt_factor1: 0,
+    };
+    assert!(Instruction::Gemm(g).encode().is_err());
+}
+
+#[test]
+fn decode_rejects_bad_opcode() {
+    // opcode 7 is undefined
+    assert!(matches!(Instruction::decode([7, 0]), Err(IsaError::BadOpcode(7))));
+    // opcode LOAD with memory type 6 is undefined
+    assert!(matches!(Instruction::decode([0 | (6 << 7), 0]), Err(IsaError::BadBuffer(6))));
+}
+
+#[test]
+fn stream_roundtrip_and_length_check() {
+    let insns = vec![
+        Instruction::Load(sample_mem(DepFlags::NONE)),
+        Instruction::Finish(DepFlags::NONE),
+    ];
+    let bytes = Instruction::encode_stream(&insns).unwrap();
+    assert_eq!(bytes.len(), 2 * INSN_BYTES);
+    assert_eq!(Instruction::decode_stream(&bytes).unwrap(), insns);
+    assert!(matches!(
+        Instruction::decode_stream(&bytes[..INSN_BYTES + 3]),
+        Err(IsaError::BadStreamLength(_))
+    ));
+}
+
+#[test]
+fn uop_roundtrips() {
+    let g = GemmUop { acc_idx: 2047, inp_idx: 1023, wgt_idx: 511 };
+    let w = Uop::Gemm(g).encode().unwrap();
+    assert_eq!(Uop::decode_gemm(w), g);
+
+    let a = AluUop { dst_idx: 100, src_idx: 200 };
+    let w = Uop::Alu(a).encode().unwrap();
+    assert_eq!(Uop::decode_alu(w), a);
+}
+
+#[test]
+fn uop_encode_rejects_overflow() {
+    assert!(Uop::Gemm(GemmUop { acc_idx: 2048, inp_idx: 0, wgt_idx: 0 }).encode().is_err());
+    assert!(Uop::Gemm(GemmUop { acc_idx: 0, inp_idx: 0, wgt_idx: 1024 }).encode().is_err());
+    assert!(Uop::Alu(AluUop { dst_idx: 4096, src_idx: 0 }).encode().is_err());
+}
+
+/// Property test: randomized instructions round-trip bit-exactly through
+/// the 128-bit encoding.
+#[test]
+fn random_instruction_roundtrip_property() {
+    let mut rng = XorShiftRng::new(0xC0FFEE);
+    for _ in 0..2000 {
+        let insn = random_insn(&mut rng);
+        let enc = insn.encode().unwrap();
+        let dec = Instruction::decode(enc).unwrap();
+        assert_eq!(dec, insn, "roundtrip mismatch for {insn:?}");
+    }
+}
+
+fn random_deps(rng: &mut XorShiftRng) -> DepFlags {
+    DepFlags {
+        pop_prev: rng.next_below(2) == 1,
+        pop_next: rng.next_below(2) == 1,
+        push_prev: rng.next_below(2) == 1,
+        push_next: rng.next_below(2) == 1,
+    }
+}
+
+fn random_insn(rng: &mut XorShiftRng) -> Instruction {
+    match rng.next_below(5) {
+        0 | 1 => {
+            let buffer = match rng.next_below(5) {
+                0 => BufferId::Uop,
+                1 => BufferId::Wgt,
+                2 => BufferId::Inp,
+                3 => BufferId::Acc,
+                _ => BufferId::Out,
+            };
+            let m = MemInsn {
+                deps: random_deps(rng),
+                buffer,
+                sram_base: rng.next_below(1 << 22) as u32,
+                dram_base: rng.next_below(1 << 32) as u32,
+                y_size: rng.next_below(1 << 16) as u16,
+                x_size: rng.next_below(1 << 16) as u16,
+                x_stride: rng.next_below(1 << 16) as u16,
+                y_pad_top: rng.next_below(16) as u8,
+                y_pad_bottom: rng.next_below(16) as u8,
+                x_pad_left: rng.next_below(16) as u8,
+                x_pad_right: rng.next_below(16) as u8,
+            };
+            if rng.next_below(2) == 0 {
+                Instruction::Load(m)
+            } else {
+                Instruction::Store(m)
+            }
+        }
+        2 => Instruction::Gemm(GemmInsn {
+            deps: random_deps(rng),
+            reset: rng.next_below(2) == 1,
+            uop_begin: rng.next_below(1 << 14) as u16,
+            uop_end: rng.next_below(1 << 14) as u16,
+            lp0: rng.next_below(1 << 14) as u16,
+            lp1: rng.next_below(1 << 14) as u16,
+            acc_factor0: rng.next_below(1 << 11) as u16,
+            acc_factor1: rng.next_below(1 << 11) as u16,
+            inp_factor0: rng.next_below(1 << 11) as u16,
+            inp_factor1: rng.next_below(1 << 11) as u16,
+            wgt_factor0: rng.next_below(1 << 10) as u16,
+            wgt_factor1: rng.next_below(1 << 10) as u16,
+        }),
+        3 => Instruction::Finish(random_deps(rng)),
+        _ => Instruction::Alu(AluInsn {
+            deps: random_deps(rng),
+            op: AluOpcode::from_u64(rng.next_below(8)).unwrap(),
+            use_imm: rng.next_below(2) == 1,
+            imm: rng.next_u64() as i16,
+            uop_begin: rng.next_below(1 << 14) as u16,
+            uop_end: rng.next_below(1 << 14) as u16,
+            lp0: rng.next_below(1 << 14) as u16,
+            lp1: rng.next_below(1 << 14) as u16,
+            dst_factor0: rng.next_below(1 << 11) as u16,
+            dst_factor1: rng.next_below(1 << 11) as u16,
+            src_factor0: rng.next_below(1 << 11) as u16,
+            src_factor1: rng.next_below(1 << 11) as u16,
+        }),
+    }
+}
+
+#[test]
+fn fused_requant_semantics() {
+    assert_eq!(AluOpcode::Rq.apply(1000, 2), 127);
+    assert_eq!(AluOpcode::Rq.apply(-1000, 2), -128);
+    assert_eq!(AluOpcode::Rq.apply(-64, 4), -4);
+    assert_eq!(AluOpcode::RqRelu.apply(-64, 4), 0);
+    assert_eq!(AluOpcode::RqRelu.apply(2000, 3), 127);
+    assert_eq!(AluOpcode::RqRelu.apply(80, 3), 10);
+}
+
+#[test]
+fn alu_opcode_semantics() {
+    assert_eq!(AluOpcode::Min.apply(3, -5), -5);
+    assert_eq!(AluOpcode::Max.apply(3, -5), 3);
+    assert_eq!(AluOpcode::Add.apply(i32::MAX, 1), i32::MIN); // wrapping
+    assert_eq!(AluOpcode::Shr.apply(-256, 4), -16); // arithmetic
+    assert_eq!(AluOpcode::Shl.apply(3, 2), 12);
+    assert_eq!(AluOpcode::Mul.apply(-3, 7), -21);
+}
+
+#[test]
+fn mem_insn_geometry() {
+    let m = sample_mem(DepFlags::NONE);
+    assert_eq!(m.sram_rows(), 16);
+    assert_eq!(m.sram_row_tiles(), 16);
+    assert_eq!(m.sram_tiles(), 256);
+    assert_eq!(m.dram_tiles(), 196); // padding is free on the DRAM port
+}

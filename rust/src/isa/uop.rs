@@ -1,0 +1,87 @@
+//! RISC micro-op level of the ISA (§2.5).
+//!
+//! A micro-op only carries *base indices*; the hardware's two-level
+//! nested loop adds affine offsets (`factor0 * i0 + factor1 * i1`) to
+//! each, which is the "compression approach [that] helps reduce the
+//! micro-kernel instruction footprint" described in the paper.
+
+use super::IsaError;
+
+/// Size of one encoded micro-op in bytes.
+pub const UOP_BYTES: usize = 4;
+
+/// GEMM micro-op: one `acc[dst] += inp[src] x wgt[wgt]` tile operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmUop {
+    /// Register-file (accumulator) tile index.
+    pub acc_idx: u16,
+    /// Input-buffer tile index.
+    pub inp_idx: u16,
+    /// Weight-buffer tile index.
+    pub wgt_idx: u16,
+}
+
+/// ALU micro-op: one `acc[dst] = op(acc[dst], acc[src] | imm)` tile
+/// operation (data-movement pattern only; opcode/imm live in the CISC
+/// instruction — Fig 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AluUop {
+    /// Destination register-file tile index.
+    pub dst_idx: u16,
+    /// Source register-file tile index (ignored when `use_imm`).
+    pub src_idx: u16,
+}
+
+/// A micro-op word. GEMM and ALU uops share the 32-bit encoding:
+/// `acc/dst` in bits [10:0], `inp/src` in bits [21:11], `wgt` in
+/// bits [31:22] (unused by ALU uops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Uop {
+    Gemm(GemmUop),
+    Alu(AluUop),
+}
+
+const IDX11_MAX: u16 = (1 << 11) - 1;
+const IDX10_MAX: u16 = (1 << 10) - 1;
+
+impl Uop {
+    /// Encode to the 32-bit binary form.
+    pub fn encode(&self) -> Result<u32, IsaError> {
+        match *self {
+            Uop::Gemm(u) => {
+                check(u.acc_idx, IDX11_MAX, "uop.acc_idx", 11)?;
+                check(u.inp_idx, IDX11_MAX, "uop.inp_idx", 11)?;
+                check(u.wgt_idx, IDX10_MAX, "uop.wgt_idx", 10)?;
+                Ok((u.acc_idx as u32) | (u.inp_idx as u32) << 11 | (u.wgt_idx as u32) << 22)
+            }
+            Uop::Alu(u) => {
+                check(u.dst_idx, IDX11_MAX, "uop.dst_idx", 11)?;
+                check(u.src_idx, IDX11_MAX, "uop.src_idx", 11)?;
+                Ok((u.dst_idx as u32) | (u.src_idx as u32) << 11)
+            }
+        }
+    }
+
+    /// Decode as a GEMM uop (the executing instruction's opcode decides
+    /// the interpretation, so decode is context-driven).
+    pub fn decode_gemm(word: u32) -> GemmUop {
+        GemmUop {
+            acc_idx: (word & 0x7FF) as u16,
+            inp_idx: ((word >> 11) & 0x7FF) as u16,
+            wgt_idx: ((word >> 22) & 0x3FF) as u16,
+        }
+    }
+
+    /// Decode as an ALU uop.
+    pub fn decode_alu(word: u32) -> AluUop {
+        AluUop { dst_idx: (word & 0x7FF) as u16, src_idx: ((word >> 11) & 0x7FF) as u16 }
+    }
+}
+
+fn check(v: u16, max: u16, field: &'static str, bits: u32) -> Result<(), IsaError> {
+    if v > max {
+        Err(IsaError::FieldOverflow { field, value: v as u64, bits })
+    } else {
+        Ok(())
+    }
+}

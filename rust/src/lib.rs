@@ -1,0 +1,40 @@
+//! # VTA: Versatile Tensor Accelerator — an open hardware-software stack
+//!
+//! A full-stack reproduction of *"VTA: An Open Hardware-Software Stack for
+//! Deep Learning"* (Moreau et al., 2018) — published as *"A Hardware-Software
+//! Blueprint for Flexible Deep Learning Specialization"*.
+//!
+//! The stack, bottom-up:
+//!
+//! * [`arch`] — the parameterizable hardware architecture description
+//!   (`VtaConfig`): GEMM core shape, buffer sizes, clock, DRAM model.
+//! * [`isa`] — the two-level ISA: 128-bit CISC instructions
+//!   (LOAD/GEMM/ALU/STORE with dependence flags) and 32-bit RISC micro-ops.
+//! * [`sim`] — a cycle-approximate, functionally exact behavioral simulator
+//!   of the four-module VTA pipeline (fetch / load / compute / store) with
+//!   dependence-token dataflow execution and a hazard checker.
+//! * [`runtime`] — the JIT runtime: DRAM buffer management, instruction
+//!   stream construction, micro-kernel generation + LRU caching, explicit
+//!   dependence push/pop, CPU<->VTA synchronization.
+//! * [`compiler`] — the TVM-like schedule lowering layer: tiling, memory
+//!   scopes, tensorization onto the GEMM intrinsic, and virtual-threading
+//!   based latency hiding.
+//! * [`graph`] — the NNVM-like graph IR: operators, quantization, fusion,
+//!   CPU/VTA partitioning, and the ResNet-18 workload builder.
+//! * [`exec`] — the graph executor that co-schedules VTA kernels on the
+//!   simulator and CPU-resident operators on XLA/PJRT executables compiled
+//!   ahead-of-time from JAX (see `python/compile/`).
+//! * [`metrics`] — roofline accounting: GOPS, arithmetic intensity,
+//!   utilization.
+
+pub mod arch;
+pub mod compiler;
+pub mod exec;
+pub mod graph;
+pub mod isa;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use arch::VtaConfig;

@@ -1,0 +1,244 @@
+//! `vta` — the command-line launcher for the VTA stack.
+//!
+//! Subcommands:
+//! * `info [--config FILE]` — print the architecture summary and the
+//!   §2.6 bandwidth derivation.
+//! * `resnet [--cpu-only] [--vt N] [--pjrt] [--config FILE]` — run
+//!   ResNet-18 inference end-to-end and print the Fig 16 breakdown.
+//! * `conv <C1..C12> [--vt N] [--config FILE]` — run one Table 1 layer
+//!   and print its roofline point (Fig 15).
+//! * `table1` — print Table 1.
+//!
+//! (Hand-rolled argument parsing: the offline vendor set has no clap —
+//! see DESIGN.md §2.)
+
+use std::process::ExitCode;
+use vta::arch::{load_config, VtaConfig};
+use vta::compiler::{lower_conv2d, pack_activations, pack_weights};
+use vta::exec::{CpuBackend, Executor, PjrtCache};
+use vta::graph::resnet::{self, synth_input, TABLE1};
+use vta::graph::{fuse, partition, PartitionPolicy, Placement};
+use vta::metrics::Roofline;
+use vta::runtime::VtaRuntime;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Flags {
+    config: Option<String>,
+    vt: usize,
+    cpu_only: bool,
+    pjrt: bool,
+    positional: Vec<String>,
+}
+
+fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
+    let mut f =
+        Flags { config: None, vt: 2, cpu_only: false, pjrt: false, positional: Vec::new() };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                f.config = Some(
+                    args.get(i).ok_or_else(|| anyhow::anyhow!("--config needs a path"))?.clone(),
+                );
+            }
+            "--vt" => {
+                i += 1;
+                f.vt = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--vt needs 1 or 2"))?
+                    .parse()?;
+            }
+            "--cpu-only" => f.cpu_only = true,
+            "--pjrt" => f.pjrt = true,
+            other if other.starts_with("--") => anyhow::bail!("unknown flag {other}"),
+            other => f.positional.push(other.to_string()),
+        }
+        i += 1;
+    }
+    Ok(f)
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    let cfg = load_config(flags.config.as_deref())?;
+    match cmd.as_str() {
+        "info" => cmd_info(&cfg),
+        "table1" => cmd_table1(),
+        "conv" => cmd_conv(&cfg, &flags),
+        "resnet" => cmd_resnet(&cfg, &flags),
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command {other}")
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: vta <command> [flags]\n\
+         commands:\n\
+         \x20 info                      print the architecture summary\n\
+         \x20 table1                    print the paper's Table 1\n\
+         \x20 conv <C1..C12>            run one conv layer on the simulator\n\
+         \x20 resnet                    run ResNet-18 end to end\n\
+         flags:\n\
+         \x20 --config FILE             VTA variant config (key = value)\n\
+         \x20 --vt N                    virtual threads (1 = no latency hiding, 2 = default)\n\
+         \x20 --cpu-only                resnet: keep every operator on the CPU\n\
+         \x20 --pjrt                    resnet: run CPU ops on XLA artifacts (needs `make artifacts`)"
+    );
+}
+
+fn cmd_info(cfg: &VtaConfig) -> anyhow::Result<()> {
+    println!("{}", cfg.summary());
+    let r = Roofline::of(cfg);
+    println!(
+        "roofline: knee at {:.1} ops/byte; bandwidth roof {:.2} GB/s",
+        r.knee_intensity(),
+        cfg.dram_gbytes_per_sec()
+    );
+    Ok(())
+}
+
+fn cmd_table1() -> anyhow::Result<()> {
+    println!(
+        "{:<5} {:>9} {:>9} {:>6} {:>6} {:>9} {:>9}",
+        "name", "H,W", "IC,OC", "K", "S", "GOPs", "ops/byte"
+    );
+    for i in 0..TABLE1.len() {
+        let (name, h, ic, oc, k, s) = TABLE1[i];
+        let p = resnet::table1_params(i);
+        println!(
+            "{:<5} {:>9} {:>9} {:>6} {:>6} {:>9.3} {:>9.1}",
+            name,
+            format!("{h},{h}"),
+            format!("{ic},{oc}"),
+            k,
+            s,
+            p.ops() as f64 / 1e9,
+            p.arithmetic_intensity()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_conv(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    let name = flags
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("conv needs a layer name (C1..C12)"))?;
+    let row = TABLE1
+        .iter()
+        .position(|(n, ..)| n.eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow::anyhow!("unknown layer {name}"))?;
+    let p = resnet::table1_params(row);
+    let inp = synth_input(1, 1, p.ic, p.h, p.w);
+    let wgt = resnet::synth_conv_weights(row as u64 + 100, p.oc, p.ic, p.k);
+
+    let mut rt = VtaRuntime::new(cfg, 512 << 20);
+    let t0 = std::time::Instant::now();
+    let out = lower_conv2d(
+        &mut rt,
+        &p,
+        &pack_activations(cfg, &inp),
+        &pack_weights(cfg, &wgt),
+        flags.vt,
+    )?;
+    let host = t0.elapsed();
+    let r = Roofline::of(cfg);
+    let pt = r.point(name, p.ops(), p.arithmetic_intensity(), &out.stats);
+    println!(
+        "{name}: {} cycles ({:.3} ms simulated @ {:.0} MHz), {:.2} GOPS \
+         ({:.0}% of roofline, {:.0}% GEMM utilization), vt={}",
+        pt.cycles,
+        pt.cycles as f64 / cfg.clock_hz * 1e3,
+        cfg.clock_hz / 1e6,
+        pt.gops,
+        pt.efficiency * 100.0,
+        pt.utilization * 100.0,
+        flags.vt
+    );
+    println!(
+        "  plan: oc_t={} oh_t={} ow_t={} groups={} strips/group={}; \
+         DRAM {:.2} MB moved; host lowering {host:.1?}",
+        out.plan.oc_t,
+        out.plan.oh_t,
+        out.plan.ow_t,
+        out.plan.groups(),
+        out.plan.strips(),
+        out.stats.bytes_moved() as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_resnet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
+    let policy =
+        if flags.cpu_only { PartitionPolicy::cpu_only() } else { PartitionPolicy::paper(cfg) };
+    let (vta_n, cpu_n) = partition(&mut g, &policy);
+    println!("ResNet-18: {} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU", g.nodes.len());
+
+    let cpu = if flags.pjrt {
+        CpuBackend::Pjrt(PjrtCache::new("artifacts")?)
+    } else {
+        CpuBackend::Native
+    };
+    let mut ex = Executor::new(VtaRuntime::new(cfg, 512 << 20), cpu);
+    let input = synth_input(7, 1, 3, 224, 224);
+    let t0 = std::time::Instant::now();
+    let report = ex.run(&g, &input)?;
+    let wall = t0.elapsed();
+
+    println!(
+        "\n{:<22} {:>6} {:>5} {:>12} {:>12} {:>8}",
+        "node", "kind", "place", "cpu wall", "sim (ms)", "GOPs"
+    );
+    for n in &report.nodes {
+        if n.kind == "input" {
+            continue;
+        }
+        println!(
+            "{:<22} {:>6} {:>5} {:>12.3?} {:>12.3} {:>8.3}",
+            n.name,
+            n.kind,
+            match n.placement {
+                Placement::Vta => "VTA",
+                _ => "CPU",
+            },
+            n.wall,
+            n.sim_seconds * 1e3,
+            n.ops as f64 / 1e9
+        );
+    }
+    println!(
+        "\ntotals: cpu {:.3?}, vta-simulated {:.3} ms, model total {:.3} ms (host wall {wall:.2?})",
+        report.cpu_time(),
+        report.vta_seconds() * 1e3,
+        report.total_seconds() * 1e3
+    );
+    let s = report.vta_stats();
+    if s.total_cycles > 0 {
+        println!(
+            "vta: {} cycles, GEMM utilization {:.0}%, {:.1} MB DRAM traffic",
+            s.total_cycles,
+            s.compute_utilization() * 100.0,
+            s.bytes_moved() as f64 / 1e6
+        );
+    }
+    Ok(())
+}

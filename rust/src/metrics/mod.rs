@@ -1,0 +1,112 @@
+//! Roofline accounting (§5, Fig 15).
+//!
+//! The roofline model bounds attainable throughput by
+//! `min(peak_compute, bandwidth x arithmetic_intensity)`. The paper
+//! plots each ResNet conv layer's measured GOPS against this envelope,
+//! with and without latency hiding.
+
+use crate::arch::VtaConfig;
+use crate::sim::SimStats;
+
+/// One point on the roofline plot.
+#[derive(Clone, Debug)]
+pub struct RooflinePoint {
+    /// Workload label (e.g. "C2").
+    pub name: String,
+    /// Arithmetic intensity, ops per DRAM byte (workload-intrinsic).
+    pub intensity: f64,
+    /// Achieved throughput in GOPS (from simulated cycles).
+    pub gops: f64,
+    /// Fraction of the roofline bound attained at this intensity.
+    pub efficiency: f64,
+    /// GEMM-core busy fraction (the paper's "compute utilization").
+    pub utilization: f64,
+    /// Total simulated cycles.
+    pub cycles: u64,
+}
+
+/// Roofline evaluator for a VTA variant.
+pub struct Roofline {
+    /// Peak compute in ops/cycle.
+    pub peak_ops_per_cycle: f64,
+    /// DRAM bandwidth in bytes/cycle.
+    pub bytes_per_cycle: f64,
+    /// Clock (Hz), for GOPS conversion.
+    pub clock_hz: f64,
+}
+
+impl Roofline {
+    /// Build from an architecture config.
+    pub fn of(cfg: &VtaConfig) -> Self {
+        Roofline {
+            peak_ops_per_cycle: cfg.gemm.ops_per_cycle() as f64,
+            bytes_per_cycle: cfg.dram.bytes_per_cycle,
+            clock_hz: cfg.clock_hz,
+        }
+    }
+
+    /// Attainable ops/cycle at a given arithmetic intensity.
+    pub fn bound_ops_per_cycle(&self, intensity: f64) -> f64 {
+        self.peak_ops_per_cycle.min(self.bytes_per_cycle * intensity)
+    }
+
+    /// Peak GOPS of the machine.
+    pub fn peak_gops(&self) -> f64 {
+        self.peak_ops_per_cycle * self.clock_hz / 1e9
+    }
+
+    /// The knee: intensity at which the workload turns compute-bound.
+    pub fn knee_intensity(&self) -> f64 {
+        self.peak_ops_per_cycle / self.bytes_per_cycle
+    }
+
+    /// Evaluate one measured workload.
+    ///
+    /// `ops` is the workload's intrinsic op count, `intensity` its
+    /// ops/byte (from minimal traffic), `stats` the simulator output.
+    pub fn point(&self, name: &str, ops: u64, intensity: f64, stats: &SimStats) -> RooflinePoint {
+        let cycles = stats.total_cycles.max(1);
+        let ops_per_cycle = ops as f64 / cycles as f64;
+        let gops = ops_per_cycle * self.clock_hz / 1e9;
+        RooflinePoint {
+            name: name.to_string(),
+            intensity,
+            gops,
+            efficiency: ops_per_cycle / self.bound_ops_per_cycle(intensity),
+            utilization: stats.compute_utilization(),
+            cycles: stats.total_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::VtaConfig;
+
+    #[test]
+    fn pynq_roofline_shape() {
+        let r = Roofline::of(&VtaConfig::pynq());
+        assert!((r.peak_gops() - 51.2).abs() < 1e-9);
+        // knee = 512 ops/cycle ÷ 16 B/cycle = 32 ops/byte
+        assert!((r.knee_intensity() - 32.0).abs() < 1e-9);
+        // Below the knee: bandwidth-bound.
+        assert!(r.bound_ops_per_cycle(8.0) < r.peak_ops_per_cycle);
+        // Above: compute-bound.
+        assert_eq!(r.bound_ops_per_cycle(100.0), r.peak_ops_per_cycle);
+    }
+
+    #[test]
+    fn point_efficiency_is_bounded() {
+        let cfg = VtaConfig::pynq();
+        let r = Roofline::of(&cfg);
+        let mut stats = crate::sim::SimStats::default();
+        stats.total_cycles = 1000;
+        stats.gemm_busy_cycles = 700;
+        // 1000 cycles at 512 ops/cycle peak → 512_000 ops max.
+        let pt = r.point("x", 256_000, 100.0, &stats);
+        assert!((pt.gops - 25.6).abs() < 1e-9);
+        assert!((pt.efficiency - 0.5).abs() < 1e-9);
+        assert!((pt.utilization - 0.7).abs() < 1e-9);
+    }
+}

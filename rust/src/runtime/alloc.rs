@@ -1,0 +1,118 @@
+//! First-fit free-list allocator with neighbor coalescing.
+//!
+//! Shared by the DRAM buffer manager (§3.2 "Dynamic Memory Allocation")
+//! and the micro-op cache's SRAM residency manager (which layers LRU
+//! eviction on top).
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+/// Allocation errors.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum AllocError {
+    #[error("out of memory: requested {requested} bytes, largest free block {largest}")]
+    OutOfMemory { requested: usize, largest: usize },
+    #[error("free of unknown address {0:#x}")]
+    UnknownAddress(usize),
+    #[error("alignment {0} is not a power of two")]
+    BadAlignment(usize),
+}
+
+/// First-fit allocator over a `[0, size)` address range.
+pub struct FreeListAllocator {
+    size: usize,
+    /// Free blocks: start → length, disjoint, coalesced.
+    free: BTreeMap<usize, usize>,
+    /// Live allocations: start → length.
+    live: BTreeMap<usize, usize>,
+}
+
+impl FreeListAllocator {
+    /// A fresh allocator over `size` units.
+    pub fn new(size: usize) -> Self {
+        let mut free = BTreeMap::new();
+        if size > 0 {
+            free.insert(0, size);
+        }
+        FreeListAllocator { size, free, live: BTreeMap::new() }
+    }
+
+    /// Total capacity.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Units currently allocated.
+    pub fn used(&self) -> usize {
+        self.live.values().sum()
+    }
+
+    /// Largest free block (diagnostics / OOM reporting).
+    pub fn largest_free(&self) -> usize {
+        self.free.values().copied().max().unwrap_or(0)
+    }
+
+    /// Allocate `len` units aligned to `align` (power of two). First-fit.
+    pub fn alloc(&mut self, len: usize, align: usize) -> Result<usize, AllocError> {
+        if !align.is_power_of_two() {
+            return Err(AllocError::BadAlignment(align));
+        }
+        let mut chosen: Option<(usize, usize, usize)> = None; // (block_start, block_len, alloc_start)
+        for (&start, &flen) in &self.free {
+            let aligned = (start + align - 1) & !(align - 1);
+            let pad = aligned - start;
+            if flen >= pad + len {
+                chosen = Some((start, flen, aligned));
+                break;
+            }
+        }
+        let Some((start, flen, aligned)) = chosen else {
+            return Err(AllocError::OutOfMemory { requested: len, largest: self.largest_free() });
+        };
+        self.free.remove(&start);
+        // Leading pad stays free.
+        if aligned > start {
+            self.free.insert(start, aligned - start);
+        }
+        // Trailing remainder stays free.
+        let end = aligned + len;
+        let block_end = start + flen;
+        if block_end > end {
+            self.free.insert(end, block_end - end);
+        }
+        self.live.insert(aligned, len);
+        Ok(aligned)
+    }
+
+    /// Free a previous allocation, coalescing with neighbors.
+    pub fn free(&mut self, addr: usize) -> Result<(), AllocError> {
+        let Some(len) = self.live.remove(&addr) else {
+            return Err(AllocError::UnknownAddress(addr));
+        };
+        let mut start = addr;
+        let mut end = addr + len;
+        // Coalesce with predecessor.
+        if let Some((&pstart, &plen)) = self.free.range(..addr).next_back() {
+            if pstart + plen == start {
+                self.free.remove(&pstart);
+                start = pstart;
+            }
+        }
+        // Coalesce with successor.
+        if let Some(&slen) = self.free.get(&end) {
+            self.free.remove(&end);
+            end += slen;
+        }
+        self.free.insert(start, end - start);
+        Ok(())
+    }
+
+    /// Drop every allocation (used by cache flushes).
+    pub fn reset(&mut self) {
+        self.free.clear();
+        self.live.clear();
+        if self.size > 0 {
+            self.free.insert(0, self.size);
+        }
+    }
+}

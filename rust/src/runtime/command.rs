@@ -1,0 +1,414 @@
+//! The command context: instruction-stream construction plus the
+//! explicit dependence API (§3.2, Fig 12).
+//!
+//! This is the equivalent of `VTATLSCommandHandle()`: lowered schedules
+//! call `load_buffer_2d` / `push_gemm` / `push_alu` / `store_buffer_2d`
+//! interleaved with `dep_push` / `dep_pop`, then `synchronize()` seals
+//! the stream with a FINISH sentinel and executes it on a device.
+
+use super::uop_kernel::{UopCache, UopError, UopKernel};
+use super::{Device, DramAllocator, DramBuffer};
+use crate::arch::VtaConfig;
+use crate::isa::{
+    AluInsn, AluOpcode, BufferId, DepFlags, GemmInsn, Instruction, MemInsn,
+};
+use crate::sim::{SimError, SimStats};
+use thiserror::Error;
+
+/// The three instruction-executing modules, as seen by the dependence
+/// API (fetch is not a dependence endpoint).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoreModule {
+    Load,
+    Compute,
+    Store,
+}
+
+impl CoreModule {
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Runtime errors.
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("dep_push({0:?} -> {1:?}) is not an adjacent-module edge")]
+    BadDepEdge(CoreModule, CoreModule),
+    #[error("dep_push({0:?} -> {1:?}) with no prior instruction on {0:?}")]
+    NoProducer(CoreModule, CoreModule),
+    #[error("uop kernel error: {0}")]
+    Uop(#[from] UopError),
+    #[error("field overflow lowering to the ISA: {0}")]
+    Isa(#[from] crate::isa::IsaError),
+    #[error("simulation failed: {0}")]
+    Sim(#[from] SimError),
+    #[error("allocation failed: {0}")]
+    Alloc(#[from] super::AllocError),
+}
+
+/// Which neighbor a dependence edge touches.
+fn edge(from: CoreModule, to: CoreModule) -> Option<bool /* from's next? */> {
+    match (from, to) {
+        (CoreModule::Load, CoreModule::Compute) => Some(true),
+        (CoreModule::Compute, CoreModule::Store) => Some(true),
+        (CoreModule::Compute, CoreModule::Load) => Some(false),
+        (CoreModule::Store, CoreModule::Compute) => Some(false),
+        _ => None,
+    }
+}
+
+/// Routing: which module executes an instruction (must match the
+/// simulator's fetch rules, §2.4).
+fn module_of(insn: &Instruction) -> CoreModule {
+    match insn {
+        Instruction::Load(m) => match m.buffer {
+            BufferId::Inp | BufferId::Wgt => CoreModule::Load,
+            _ => CoreModule::Compute,
+        },
+        Instruction::Store(_) => CoreModule::Store,
+        _ => CoreModule::Compute,
+    }
+}
+
+/// Instruction-stream builder with dependence tracking.
+pub struct CommandContext {
+    cfg: VtaConfig,
+    insns: Vec<Instruction>,
+    /// Index of the most recent instruction routed to each module.
+    last_of: [Option<usize>; 3],
+    /// Pops to apply to the *next* instruction of each module:
+    /// (pop_prev, pop_next).
+    pending_pop: [(bool, bool); 3],
+    /// Micro-op cache residency manager.
+    pub uops: UopCache,
+    /// DRAM write-cursor for freshly generated kernels (uop tiles).
+    uop_dram_next: u32,
+    /// Pending kernel words to write to DRAM at synchronize time:
+    /// (uop-tile address, words).
+    kernel_writes: Vec<(u32, Vec<u32>)>,
+}
+
+impl CommandContext {
+    /// New context for an architecture. `uop_dram_tile` is the DRAM
+    /// region (in 4-byte uop tiles) where generated kernels are cached.
+    pub fn new(cfg: &VtaConfig, uop_dram_tile: u32) -> Self {
+        CommandContext {
+            cfg: cfg.clone(),
+            insns: Vec::new(),
+            last_of: [None; 3],
+            pending_pop: [(false, false); 3],
+            uops: UopCache::new(cfg.uop_depth()),
+            uop_dram_next: uop_dram_tile,
+            kernel_writes: Vec::new(),
+        }
+    }
+
+    /// Architecture this stream targets.
+    pub fn config(&self) -> &VtaConfig {
+        &self.cfg
+    }
+
+    /// Number of instructions queued so far.
+    pub fn len(&self) -> usize {
+        self.insns.len()
+    }
+
+    /// True when no instructions are queued.
+    pub fn is_empty(&self) -> bool {
+        self.insns.is_empty()
+    }
+
+    /// Append an instruction, applying pending pops for its module.
+    pub fn push(&mut self, mut insn: Instruction) {
+        let m = module_of(&insn);
+        let (pp, pn) = std::mem::take(&mut self.pending_pop[m.index()]);
+        {
+            let deps = insn.deps_mut();
+            deps.pop_prev |= pp;
+            deps.pop_next |= pn;
+        }
+        self.last_of[m.index()] = Some(self.insns.len());
+        self.insns.push(insn);
+    }
+
+    // ------------------------------------------------------------------
+    // Explicit dependence API (Fig 12).
+    // ------------------------------------------------------------------
+
+    /// `VTADepPush(from, to)`: the most recent `from`-module instruction
+    /// will push a token toward `to` when it completes.
+    pub fn dep_push(&mut self, from: CoreModule, to: CoreModule) -> Result<(), RuntimeError> {
+        let Some(is_next) = edge(from, to) else {
+            return Err(RuntimeError::BadDepEdge(from, to));
+        };
+        let Some(idx) = self.last_of[from.index()] else {
+            return Err(RuntimeError::NoProducer(from, to));
+        };
+        let deps = self.insns[idx].deps_mut();
+        if is_next {
+            deps.push_next = true;
+        } else {
+            deps.push_prev = true;
+        }
+        Ok(())
+    }
+
+    /// `VTADepPop(from, to)`: the *next* `to`-module instruction will
+    /// wait for a token from `from` before executing.
+    pub fn dep_pop(&mut self, from: CoreModule, to: CoreModule) -> Result<(), RuntimeError> {
+        if edge(from, to).is_none() {
+            return Err(RuntimeError::BadDepEdge(from, to));
+        }
+        // For the consumer, `from` is its prev neighbor iff `from`
+        // precedes `to` in pipeline order.
+        let is_prev = (from.index()) < (to.index());
+        let slot = &mut self.pending_pop[to.index()];
+        if is_prev {
+            slot.0 = true;
+        } else {
+            slot.1 = true;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Buffer movement (VTALoadBuffer2D / VTAStoreBuffer2D).
+    // ------------------------------------------------------------------
+
+    /// `VTALoadBuffer2D`: 2D strided load with optional padding.
+    /// `dram_tile` addresses DRAM in tiles of the target buffer's tile
+    /// size.
+    #[allow(clippy::too_many_arguments)]
+    pub fn load_buffer_2d(
+        &mut self,
+        buffer: BufferId,
+        sram_base: u32,
+        dram_tile: u32,
+        y_size: u16,
+        x_size: u16,
+        x_stride: u16,
+        pads: [u8; 4], // top, bottom, left, right
+    ) {
+        self.push(Instruction::Load(MemInsn {
+            deps: DepFlags::NONE,
+            buffer,
+            sram_base,
+            dram_base: dram_tile,
+            y_size,
+            x_size,
+            x_stride,
+            y_pad_top: pads[0],
+            y_pad_bottom: pads[1],
+            x_pad_left: pads[2],
+            x_pad_right: pads[3],
+        }));
+    }
+
+    /// `VTAStoreBuffer2D`: drain output-buffer tiles to DRAM.
+    pub fn store_buffer_2d(
+        &mut self,
+        sram_base: u32,
+        dram_tile: u32,
+        y_size: u16,
+        x_size: u16,
+        x_stride: u16,
+    ) {
+        self.push(Instruction::Store(MemInsn {
+            deps: DepFlags::NONE,
+            buffer: BufferId::Out,
+            sram_base,
+            dram_base: dram_tile,
+            y_size,
+            x_size,
+            x_stride,
+            y_pad_top: 0,
+            y_pad_bottom: 0,
+            x_pad_left: 0,
+            x_pad_right: 0,
+        }));
+    }
+
+    // ------------------------------------------------------------------
+    // Compute (VTAPushGEMMOp / VTAPushALUOp).
+    // ------------------------------------------------------------------
+
+    /// Register a generated kernel: writes its words to the DRAM kernel
+    /// arena at synchronize time and returns its cache id.
+    pub fn register_kernel(&mut self, kernel: &UopKernel) -> Result<usize, RuntimeError> {
+        let tile = self.uop_dram_next;
+        let id = self.uops.register(tile, kernel.words.len())?;
+        // Only advance the arena for genuinely new registrations.
+        if self.kernel_writes.iter().all(|(t, _)| *t != tile) {
+            self.kernel_writes.push((tile, kernel.words.clone()));
+            self.uop_dram_next += kernel.words.len() as u32;
+        }
+        Ok(id)
+    }
+
+    /// `VTAPushGEMMOp`: ensure the kernel is resident (possibly emitting
+    /// a LOAD.UOP) and append a GEMM instruction running it.
+    pub fn push_gemm(
+        &mut self,
+        kernel_id: usize,
+        kernel: &UopKernel,
+        reset: bool,
+    ) -> Result<(), RuntimeError> {
+        let mut loads = Vec::new();
+        let offset = self.uops.ensure_resident(kernel_id, &mut loads)?;
+        for l in loads {
+            self.push(l);
+        }
+        let (lp0, lp1) = kernel.loop_extents();
+        let (d0, d1, s0, s1, w0, w1) = kernel.factors();
+        let n = kernel.words.len() as u16;
+        self.push(Instruction::Gemm(GemmInsn {
+            deps: DepFlags::NONE,
+            reset,
+            uop_begin: offset as u16,
+            uop_end: offset as u16 + n,
+            lp0,
+            lp1,
+            acc_factor0: d0,
+            acc_factor1: d1,
+            inp_factor0: s0,
+            inp_factor1: s1,
+            wgt_factor0: w0,
+            wgt_factor1: w1,
+        }));
+        Ok(())
+    }
+
+    /// `VTAPushALUOp`: like `push_gemm` for the tensor ALU.
+    pub fn push_alu(
+        &mut self,
+        kernel_id: usize,
+        kernel: &UopKernel,
+        op: AluOpcode,
+        use_imm: bool,
+        imm: i16,
+    ) -> Result<(), RuntimeError> {
+        let mut loads = Vec::new();
+        let offset = self.uops.ensure_resident(kernel_id, &mut loads)?;
+        for l in loads {
+            self.push(l);
+        }
+        let (lp0, lp1) = kernel.loop_extents();
+        let (d0, d1, s0, s1, _, _) = kernel.factors();
+        let n = kernel.words.len() as u16;
+        self.push(Instruction::Alu(AluInsn {
+            deps: DepFlags::NONE,
+            op,
+            use_imm,
+            imm,
+            uop_begin: offset as u16,
+            uop_end: offset as u16 + n,
+            lp0,
+            lp1,
+            dst_factor0: d0,
+            dst_factor1: d1,
+            src_factor0: s0,
+            src_factor1: s1,
+        }));
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Synchronization (VTASynchronize).
+    // ------------------------------------------------------------------
+
+    /// Seal the stream (FINISH waits for the last store if any), write
+    /// pending uop kernels to device DRAM, round-trip the stream through
+    /// its binary encoding (the form the fetch module DMA-reads), and
+    /// execute it on `device`. The context is left empty, ready for the
+    /// next stream; the uop cache's residency state carries over.
+    pub fn synchronize(&mut self, device: &mut dyn Device) -> Result<SimStats, RuntimeError> {
+        // FINISH waits on the store module when the stream stored
+        // anything that nothing else waits on.
+        let mut finish = DepFlags::NONE;
+        if let Some(idx) = self.last_of[CoreModule::Store.index()] {
+            let deps = self.insns[idx].deps_mut();
+            if !deps.push_prev {
+                deps.push_prev = true;
+            }
+            finish.pop_next = true;
+        }
+        self.push(Instruction::Finish(finish));
+
+        // Write generated kernels to the device's DRAM kernel arena.
+        for (tile, words) in self.kernel_writes.drain(..) {
+            device.write_u32(tile as usize * 4, &words)?;
+        }
+
+        // Binary round-trip: encode exactly what the fetch module would
+        // DMA from DRAM, then decode it back.
+        let bytes = Instruction::encode_stream(&self.insns)?;
+        let decoded = Instruction::decode_stream(&bytes)?;
+        debug_assert_eq!(decoded, self.insns);
+
+        let stats = device.run(&decoded)?;
+        self.insns.clear();
+        self.last_of = [None; 3];
+        self.pending_pop = [(false, false); 3];
+        Ok(stats)
+    }
+
+    /// Borrow the pending stream (testing / inspection).
+    pub fn pending(&self) -> &[Instruction] {
+        &self.insns
+    }
+}
+
+/// Convenience holder tying a device, allocator, and command context
+/// together — what `VTATLSCommandHandle` hands out.
+pub struct VtaRuntime {
+    pub ctx: CommandContext,
+    pub dram: DramAllocator,
+    pub device: SimDeviceBox,
+}
+
+/// Boxed simulator device (the only device in this release; an FPGA
+/// device would implement [`Device`] the same way).
+pub type SimDeviceBox = super::SimDevice;
+
+impl VtaRuntime {
+    /// Build a runtime over a fresh simulator with `dram_size` bytes.
+    /// The first `uop_arena` bytes after the 1 MiB instruction region
+    /// are reserved for generated micro-kernels.
+    pub fn new(cfg: &VtaConfig, dram_size: usize) -> Self {
+        const UOP_ARENA_BASE: usize = 1 << 20; // kernels live at 1 MiB
+        const UOP_ARENA_BYTES: usize = 1 << 20;
+        let ctx = CommandContext::new(cfg, (UOP_ARENA_BASE / 4) as u32);
+        let device = super::SimDevice::new(cfg.clone(), dram_size);
+        let dram = DramAllocator::new(dram_size, UOP_ARENA_BASE + UOP_ARENA_BYTES);
+        VtaRuntime { ctx, dram, device }
+    }
+
+    /// Allocate a DRAM buffer.
+    pub fn alloc(&mut self, len: usize) -> Result<DramBuffer, RuntimeError> {
+        Ok(self.dram.alloc(len)?)
+    }
+
+    /// Allocate a DRAM buffer aligned to `align` bytes (rounded up to a
+    /// power of two). Tile-addressed DMA targets must use their tile
+    /// size here.
+    pub fn alloc_aligned(&mut self, len: usize, align: usize) -> Result<DramBuffer, RuntimeError> {
+        Ok(self.dram.alloc_aligned(len, align.next_power_of_two())?)
+    }
+
+    /// Copy host data into a DRAM buffer (`VTABufferCopy`, host→device).
+    pub fn copy_in(&mut self, buf: &DramBuffer, data: &[u8]) -> Result<(), RuntimeError> {
+        self.device.write(buf.addr, data)?;
+        Ok(())
+    }
+
+    /// Copy DRAM out to the host (`VTABufferCopy`, device→host).
+    pub fn copy_out(&mut self, buf: &DramBuffer) -> Result<Vec<u8>, RuntimeError> {
+        Ok(self.device.read(buf.addr, buf.len)?)
+    }
+
+    /// Run the pending stream.
+    pub fn synchronize(&mut self) -> Result<SimStats, RuntimeError> {
+        self.ctx.synchronize(&mut self.device)
+    }
+}

@@ -1,0 +1,70 @@
+//! Device abstraction: anything that can accept a VTA instruction
+//! stream and share DRAM with the host. The behavioral simulator is the
+//! only implementation in this release; a memory-mapped FPGA device
+//! would slot in behind the same trait (§2.4's control registers map to
+//! `run`).
+
+use crate::arch::VtaConfig;
+use crate::isa::Instruction;
+use crate::sim::{ExecMode, Hazard, SimError, SimStats, Simulator};
+
+/// A VTA execution device with host-visible DRAM.
+pub trait Device {
+    /// Execute one instruction stream to completion (the fetch-module
+    /// control-register handshake of §2.4 collapsed into a call).
+    fn run(&mut self, insns: &[Instruction]) -> Result<SimStats, SimError>;
+
+    /// Host write into device DRAM.
+    fn write(&mut self, addr: usize, data: &[u8]) -> Result<(), SimError>;
+
+    /// Host read from device DRAM.
+    fn read(&self, addr: usize, len: usize) -> Result<Vec<u8>, SimError>;
+
+    /// Host write of 32-bit words (uop kernels, acc init).
+    fn write_u32(&mut self, addr: usize, data: &[u32]) -> Result<(), SimError>;
+}
+
+/// The behavioral-simulator device.
+pub struct SimDevice {
+    sim: Simulator,
+}
+
+impl SimDevice {
+    /// New simulator device with `dram_size` bytes.
+    pub fn new(cfg: VtaConfig, dram_size: usize) -> Self {
+        SimDevice { sim: Simulator::new(cfg, dram_size) }
+    }
+
+    /// Enable hazard checking on subsequent runs.
+    pub fn set_mode(&mut self, mode: ExecMode) {
+        self.sim.set_mode(mode);
+    }
+
+    /// Hazards recorded by the last run (empty in `Normal` mode).
+    pub fn hazards(&self) -> &[Hazard] {
+        self.sim.hazards()
+    }
+
+    /// Direct simulator access (tests, benches).
+    pub fn simulator_mut(&mut self) -> &mut Simulator {
+        &mut self.sim
+    }
+}
+
+impl Device for SimDevice {
+    fn run(&mut self, insns: &[Instruction]) -> Result<SimStats, SimError> {
+        self.sim.run(insns)
+    }
+
+    fn write(&mut self, addr: usize, data: &[u8]) -> Result<(), SimError> {
+        self.sim.dram.write(addr, data)
+    }
+
+    fn read(&self, addr: usize, len: usize) -> Result<Vec<u8>, SimError> {
+        Ok(self.sim.dram.read(addr, len)?.to_vec())
+    }
+
+    fn write_u32(&mut self, addr: usize, data: &[u32]) -> Result<(), SimError> {
+        self.sim.dram.write_u32(addr, data)
+    }
+}

@@ -1,0 +1,81 @@
+//! The VTA runtime (§3): the layer a lowered schedule calls into.
+//!
+//! Mirrors the C++ JIT runtime API of the paper:
+//!
+//! * [`DramAllocator`] — `VTABufferAlloc`/`VTABufferFree`/`VTABufferCopy`:
+//!   physically-contiguous DRAM buffer management.
+//! * [`UopKernel`] / [`UopCache`] — `VTAUopLoopBegin`/`VTAUopPush`/
+//!   `VTAUopLoopEnd`: micro-kernel generation, DRAM-resident kernel
+//!   caching, and LRU residency management of the on-chip micro-op cache.
+//! * [`CommandContext`] — `VTALoadBuffer2D`/`VTAStoreBuffer2D`/
+//!   `VTAPushGEMMOp`/`VTAPushALUOp` plus the explicit dependence API
+//!   `VTADepPush`/`VTADepPop` (§3.2, Fig 12).
+//! * [`CommandContext::synchronize`] — `VTASynchronize`: finalize the
+//!   stream (FINISH sentinel), hand off to the device, wait for
+//!   completion.
+
+mod alloc;
+mod command;
+mod device;
+mod uop_kernel;
+
+pub use alloc::{AllocError, FreeListAllocator};
+pub use command::{CommandContext, CoreModule, RuntimeError, VtaRuntime};
+pub use device::{Device, SimDevice};
+pub use uop_kernel::{UopCache, UopError, UopKernel, UopKernelBuilder};
+
+/// A DRAM buffer handle returned by the allocator: physically
+/// contiguous, so the accelerator can DMA from `addr` directly (§3.2
+/// "Dynamic Memory Allocation").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DramBuffer {
+    /// Physical byte address in accelerator DRAM.
+    pub addr: usize,
+    /// Size in bytes.
+    pub len: usize,
+}
+
+/// DRAM allocator wrapping the free-list core with VTA-flavoured naming.
+pub struct DramAllocator {
+    inner: FreeListAllocator,
+}
+
+impl DramAllocator {
+    /// Manage `size` bytes of DRAM, reserving the first `reserved`
+    /// bytes (instruction stream + uop kernel area, managed separately).
+    pub fn new(size: usize, reserved: usize) -> Self {
+        let mut inner = FreeListAllocator::new(size);
+        if reserved > 0 {
+            inner.alloc(reserved, 1).expect("reserving DRAM prefix");
+        }
+        DramAllocator { inner }
+    }
+
+    /// Allocate a physically contiguous buffer (64-byte aligned, like
+    /// the runtime's cache-line alignment).
+    pub fn alloc(&mut self, len: usize) -> Result<DramBuffer, AllocError> {
+        self.alloc_aligned(len, 64)
+    }
+
+    /// Allocate with an explicit alignment. DMA-addressed buffers must
+    /// be aligned to their *tile size* — LOAD/STORE `dram_base` fields
+    /// are in tile units (§2.2), so a misaligned buffer is unaddressable
+    /// by the accelerator.
+    pub fn alloc_aligned(&mut self, len: usize, align: usize) -> Result<DramBuffer, AllocError> {
+        let addr = self.inner.alloc(len.max(1), align.max(64))?;
+        Ok(DramBuffer { addr, len })
+    }
+
+    /// Release a buffer.
+    pub fn free(&mut self, buf: DramBuffer) -> Result<(), AllocError> {
+        self.inner.free(buf.addr)
+    }
+
+    /// Bytes currently allocated.
+    pub fn used(&self) -> usize {
+        self.inner.used()
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,294 @@
+use super::uop_kernel::*;
+use super::*;
+use crate::arch::VtaConfig;
+use crate::isa::*;
+
+// ---------------------------------------------------------------------
+// Free-list allocator.
+// ---------------------------------------------------------------------
+
+#[test]
+fn alloc_first_fit_and_coalesce() {
+    let mut a = FreeListAllocator::new(1024);
+    let x = a.alloc(100, 1).unwrap();
+    let y = a.alloc(200, 1).unwrap();
+    let z = a.alloc(300, 1).unwrap();
+    assert_eq!((x, y, z), (0, 100, 300));
+    assert_eq!(a.used(), 600);
+    // Free the middle, then the first: blocks must coalesce so a
+    // 300-unit allocation fits in the front hole.
+    a.free(y).unwrap();
+    a.free(x).unwrap();
+    let w = a.alloc(300, 1).unwrap();
+    assert_eq!(w, 0);
+}
+
+#[test]
+fn alloc_respects_alignment() {
+    let mut a = FreeListAllocator::new(1024);
+    let _ = a.alloc(10, 1).unwrap();
+    let x = a.alloc(16, 64).unwrap();
+    assert_eq!(x % 64, 0);
+    assert!(a.alloc(16, 63).is_err()); // not a power of two
+}
+
+#[test]
+fn alloc_oom_reports_largest_block() {
+    let mut a = FreeListAllocator::new(128);
+    let x = a.alloc(64, 1).unwrap();
+    match a.alloc(100, 1) {
+        Err(AllocError::OutOfMemory { requested: 100, largest: 64 }) => {}
+        other => panic!("unexpected: {other:?}"),
+    }
+    a.free(x).unwrap();
+    assert_eq!(a.alloc(100, 1).unwrap(), 0);
+}
+
+#[test]
+fn double_free_is_an_error() {
+    let mut a = FreeListAllocator::new(64);
+    let x = a.alloc(8, 1).unwrap();
+    a.free(x).unwrap();
+    assert!(matches!(a.free(x), Err(AllocError::UnknownAddress(_))));
+}
+
+// ---------------------------------------------------------------------
+// Uop kernels.
+// ---------------------------------------------------------------------
+
+#[test]
+fn kernel_builder_captures_loops_and_uops() {
+    let mut b = UopKernelBuilder::new();
+    b.loop_begin(4, 2, 1, 0).unwrap();
+    b.loop_begin(3, 1, 0, 1).unwrap();
+    b.push(Uop::Gemm(GemmUop { acc_idx: 0, inp_idx: 0, wgt_idx: 0 })).unwrap();
+    b.push(Uop::Gemm(GemmUop { acc_idx: 1, inp_idx: 1, wgt_idx: 0 })).unwrap();
+    b.loop_end().unwrap();
+    b.loop_end().unwrap();
+    let k = b.finish().unwrap();
+    assert_eq!(k.words.len(), 2);
+    assert_eq!(k.loop_extents(), (4, 3));
+    assert_eq!(k.factors(), (2, 1, 1, 0, 0, 1));
+    assert_eq!(k.executions(), 24);
+}
+
+#[test]
+fn kernel_builder_rejects_nesting_and_empty() {
+    let mut b = UopKernelBuilder::new();
+    b.loop_begin(1, 0, 0, 0).unwrap();
+    b.loop_begin(1, 0, 0, 0).unwrap();
+    assert!(matches!(b.loop_begin(1, 0, 0, 0), Err(UopError::TooManyLoops)));
+
+    let mut b = UopKernelBuilder::new();
+    assert!(matches!(b.loop_end(), Err(UopError::UnbalancedEnd)));
+    assert!(matches!(UopKernelBuilder::new().finish(), Err(UopError::EmptyKernel)));
+}
+
+#[test]
+fn uop_cache_hits_misses_and_lru_eviction() {
+    // Cache of 8 uops; three 4-uop kernels can't all be resident.
+    let mut c = UopCache::new(8);
+    let k0 = c.register(0, 4).unwrap();
+    let k1 = c.register(100, 4).unwrap();
+    let k2 = c.register(200, 4).unwrap();
+
+    let mut out = Vec::new();
+    c.ensure_resident(k0, &mut out).unwrap();
+    c.ensure_resident(k1, &mut out).unwrap();
+    assert_eq!(out.len(), 2); // two LOAD.UOPs
+    assert_eq!((c.hits, c.misses, c.evictions), (0, 2, 0));
+
+    // k0 again: hit, no new load.
+    c.ensure_resident(k0, &mut out).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(c.hits, 1);
+
+    // k2: must evict the LRU (k1, since k0 was just touched).
+    c.ensure_resident(k2, &mut out).unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(c.evictions, 1);
+
+    // k0 must still be resident.
+    c.ensure_resident(k0, &mut out).unwrap();
+    assert_eq!(out.len(), 3);
+
+    // k1 was evicted: miss again.
+    c.ensure_resident(k1, &mut out).unwrap();
+    assert_eq!(out.len(), 4);
+}
+
+#[test]
+fn uop_cache_rejects_oversized_kernel() {
+    let mut c = UopCache::new(8);
+    assert!(matches!(c.register(0, 9), Err(UopError::KernelTooLarge { .. })));
+}
+
+#[test]
+fn uop_cache_duplicate_registration_is_idempotent() {
+    let mut c = UopCache::new(16);
+    let a = c.register(0, 4).unwrap();
+    let b = c.register(0, 4).unwrap();
+    assert_eq!(a, b);
+}
+
+// ---------------------------------------------------------------------
+// Command context + dependence API.
+// ---------------------------------------------------------------------
+
+fn cfg() -> VtaConfig {
+    VtaConfig::pynq()
+}
+
+#[test]
+fn dep_push_sets_flags_on_producer() {
+    let mut ctx = CommandContext::new(&cfg(), 1 << 18);
+    ctx.load_buffer_2d(BufferId::Inp, 0, 0, 1, 1, 1, [0; 4]);
+    ctx.dep_push(CoreModule::Load, CoreModule::Compute).unwrap();
+    match ctx.pending()[0] {
+        Instruction::Load(m) => assert!(m.deps.push_next),
+        _ => panic!(),
+    }
+}
+
+#[test]
+fn dep_pop_applies_to_next_consumer_instruction() {
+    let mut ctx = CommandContext::new(&cfg(), 1 << 18);
+    ctx.load_buffer_2d(BufferId::Inp, 0, 0, 1, 1, 1, [0; 4]);
+    ctx.dep_push(CoreModule::Load, CoreModule::Compute).unwrap();
+    ctx.dep_pop(CoreModule::Load, CoreModule::Compute).unwrap();
+    // Next compute instruction (an acc load) must pop_prev.
+    ctx.load_buffer_2d(BufferId::Acc, 0, 1024, 1, 1, 1, [0; 4]);
+    match ctx.pending()[1] {
+        Instruction::Load(m) => {
+            assert_eq!(m.buffer, BufferId::Acc);
+            assert!(m.deps.pop_prev);
+        }
+        _ => panic!(),
+    }
+}
+
+#[test]
+fn dep_api_rejects_nonadjacent_edges() {
+    let mut ctx = CommandContext::new(&cfg(), 1 << 18);
+    assert!(matches!(
+        ctx.dep_push(CoreModule::Load, CoreModule::Store),
+        Err(RuntimeError::BadDepEdge(..))
+    ));
+    assert!(matches!(
+        ctx.dep_pop(CoreModule::Store, CoreModule::Load),
+        Err(RuntimeError::BadDepEdge(..))
+    ));
+}
+
+#[test]
+fn dep_push_without_producer_fails() {
+    let mut ctx = CommandContext::new(&cfg(), 1 << 18);
+    assert!(matches!(
+        ctx.dep_push(CoreModule::Load, CoreModule::Compute),
+        Err(RuntimeError::NoProducer(..))
+    ));
+}
+
+/// End-to-end: the vector-add example of §3 (Listing 1) lowered by hand
+/// through the runtime API, run on the simulator device.
+#[test]
+fn listing1_vector_add_runs() {
+    let cfg = cfg();
+    let mut rt = VtaRuntime::new(&cfg, 8 << 20);
+
+    // Two 64-tile int32 vectors A (into acc 0..64) and B (acc 64..128).
+    let n_tiles = 64u16;
+    let lanes = cfg.gemm.batch * cfg.gemm.block_out; // 16 i32 per tile
+    let a_host: Vec<i32> = (0..n_tiles as usize * lanes).map(|i| i as i32).collect();
+    let b_host: Vec<i32> =
+        (0..n_tiles as usize * lanes).map(|i| (2 * i) as i32).collect();
+    let a = rt.alloc(a_host.len() * 4).unwrap();
+    let b = rt.alloc(b_host.len() * 4).unwrap();
+    let c = rt.alloc(n_tiles as usize * lanes).unwrap(); // int8 out
+    rt.device.write_u32(a.addr, unsafe { std::mem::transmute::<&[i32], &[u32]>(&a_host[..]) }).unwrap();
+    rt.device.write_u32(b.addr, unsafe { std::mem::transmute::<&[i32], &[u32]>(&b_host[..]) }).unwrap();
+
+    // acc tile addressing: DRAM tile = byte / acc_tile_bytes.
+    let acc_tile_bytes = cfg.acc_tile_bytes();
+    let out_tile_bytes = cfg.out_tile_bytes();
+
+    // produce A_buf / B_buf: load both vectors into the register file.
+    rt.ctx.load_buffer_2d(
+        BufferId::Acc,
+        0,
+        (a.addr / acc_tile_bytes) as u32,
+        1,
+        n_tiles,
+        n_tiles,
+        [0; 4],
+    );
+    rt.ctx.load_buffer_2d(
+        BufferId::Acc,
+        n_tiles as u32,
+        (b.addr / acc_tile_bytes) as u32,
+        1,
+        n_tiles,
+        n_tiles,
+        [0; 4],
+    );
+
+    // produce C_buf: VTAUopLoopBegin(64,1,1,0); VTAUopPush(...); End.
+    let mut kb = UopKernelBuilder::new();
+    kb.loop_begin(n_tiles, 1, 1, 0).unwrap();
+    kb.push(Uop::Alu(AluUop { dst_idx: 0, src_idx: n_tiles })).unwrap();
+    kb.loop_end().unwrap();
+    let kernel = kb.finish().unwrap();
+    let kid = rt.ctx.register_kernel(&kernel).unwrap();
+    rt.ctx.push_alu(kid, &kernel, AluOpcode::Add, false, 0).unwrap();
+
+    // dep edges around the store, as in Listing 1.
+    rt.ctx.dep_push(CoreModule::Compute, CoreModule::Store).unwrap();
+    rt.ctx.dep_pop(CoreModule::Compute, CoreModule::Store).unwrap();
+    rt.ctx.store_buffer_2d(0, (c.addr / out_tile_bytes) as u32, 1, n_tiles, n_tiles);
+
+    let stats = rt.synchronize().unwrap();
+    assert_eq!(stats.insn_alu, 1);
+    assert_eq!(stats.alu_uops, 64);
+
+    // C = int8(A + B).
+    let got = rt.copy_out(&c).unwrap();
+    for i in 0..a_host.len() {
+        let expect = (a_host[i] + b_host[i]) as i8 as u8;
+        assert_eq!(got[i], expect, "lane {i}");
+    }
+}
+
+/// The uop cache emits LOAD.UOP on miss and skips it on hit, across
+/// two synchronized streams (DRAM-cached kernels survive synchronize).
+#[test]
+fn kernel_cache_survives_synchronize() {
+    let cfg = cfg();
+    let mut rt = VtaRuntime::new(&cfg, 4 << 20);
+
+    let mut kb = UopKernelBuilder::new();
+    kb.loop_begin(4, 1, 1, 0).unwrap();
+    kb.push(Uop::Alu(AluUop { dst_idx: 0, src_idx: 0 })).unwrap();
+    kb.loop_end().unwrap();
+    let kernel = kb.finish().unwrap();
+    let kid = rt.ctx.register_kernel(&kernel).unwrap();
+
+    rt.ctx.push_alu(kid, &kernel, AluOpcode::Add, true, 1).unwrap();
+    let n1 = rt.ctx.pending().len();
+    assert_eq!(n1, 2); // LOAD.UOP + ALU
+    rt.synchronize().unwrap();
+
+    rt.ctx.push_alu(kid, &kernel, AluOpcode::Add, true, 1).unwrap();
+    assert_eq!(rt.ctx.pending().len(), 1); // resident: ALU only
+    rt.synchronize().unwrap();
+    assert_eq!(rt.ctx.uops.hits, 1);
+    assert_eq!(rt.ctx.uops.misses, 1);
+}
+
+#[test]
+fn dram_allocator_wrapper() {
+    let mut d = DramAllocator::new(1 << 20, 4096);
+    let b = d.alloc(1000).unwrap();
+    assert!(b.addr >= 4096, "reserved prefix must not be handed out");
+    assert_eq!(b.addr % 64, 0);
+    d.free(b).unwrap();
+}

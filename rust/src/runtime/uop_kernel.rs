@@ -1,0 +1,265 @@
+//! Micro-op kernel generation and caching (§3.2 "Micro-Op Kernel
+//! Generation").
+//!
+//! A [`UopKernelBuilder`] mirrors the `VTAUopLoopBegin` / `VTAUopPush` /
+//! `VTAUopLoopEnd` API: the loop structure is captured as the CISC
+//! instruction's two affine loops, and the pushes between Begin/End
+//! become the micro-op sequence. Each finished kernel is written once
+//! to DRAM ("generated once and cached in DRAM throughout the entire
+//! lifetime of the program") and the [`UopCache`] manages which kernels
+//! are resident in the on-chip micro-op SRAM with an LRU policy,
+//! emitting `LOAD.UOP` instructions on misses.
+
+use super::{AllocError, FreeListAllocator};
+use crate::isa::{DepFlags, Instruction, IsaError, MemInsn, Uop};
+use std::collections::HashMap;
+use thiserror::Error;
+
+/// Errors from kernel construction / caching.
+#[derive(Debug, Error)]
+pub enum UopError {
+    #[error("VTAUopLoopBegin nested more than 2 levels")]
+    TooManyLoops,
+    #[error("VTAUopLoopEnd without a matching Begin")]
+    UnbalancedEnd,
+    #[error("kernel has no micro-ops")]
+    EmptyKernel,
+    #[error("kernel with {uops} uops exceeds micro-op SRAM depth {depth}")]
+    KernelTooLarge { uops: usize, depth: usize },
+    #[error("unknown kernel id {0}")]
+    UnknownKernel(usize),
+    #[error(transparent)]
+    Isa(#[from] IsaError),
+    #[error(transparent)]
+    Alloc(#[from] AllocError),
+}
+
+/// One captured affine loop level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoopLevel {
+    pub extent: u16,
+    pub dst_factor: u16,
+    pub src_factor: u16,
+    pub wgt_factor: u16,
+}
+
+/// A finished micro-op kernel: the uop words plus the loop structure
+/// that the CISC instruction will carry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UopKernel {
+    /// Encoded 32-bit micro-ops.
+    pub words: Vec<u32>,
+    /// Up to two loop levels (outer first). Missing levels behave as
+    /// extent-1 loops.
+    pub loops: Vec<LoopLevel>,
+}
+
+impl UopKernel {
+    /// Loop extents padded to exactly two levels `(lp0, lp1)`.
+    pub fn loop_extents(&self) -> (u16, u16) {
+        match self.loops.len() {
+            0 => (1, 1),
+            1 => (self.loops[0].extent, 1),
+            _ => (self.loops[0].extent, self.loops[1].extent),
+        }
+    }
+
+    /// Affine factors `(dst0, dst1, src0, src1, wgt0, wgt1)`.
+    pub fn factors(&self) -> (u16, u16, u16, u16, u16, u16) {
+        let get = |i: usize| self.loops.get(i).copied().unwrap_or(LoopLevel {
+            extent: 1,
+            dst_factor: 0,
+            src_factor: 0,
+            wgt_factor: 0,
+        });
+        let l0 = get(0);
+        let l1 = get(1);
+        (l0.dst_factor, l1.dst_factor, l0.src_factor, l1.src_factor, l0.wgt_factor, l1.wgt_factor)
+    }
+
+    /// Total micro-op executions implied by the loop nest.
+    pub fn executions(&self) -> u64 {
+        let (lp0, lp1) = self.loop_extents();
+        lp0 as u64 * lp1 as u64 * self.words.len() as u64
+    }
+}
+
+/// Builder mirroring `VTAUopLoopBegin`/`VTAUopPush`/`VTAUopLoopEnd`.
+pub struct UopKernelBuilder {
+    loops: Vec<LoopLevel>,
+    open: usize,
+    words: Vec<u32>,
+}
+
+impl UopKernelBuilder {
+    /// Start a new kernel.
+    pub fn new() -> Self {
+        UopKernelBuilder { loops: Vec::new(), open: 0, words: Vec::new() }
+    }
+
+    /// `VTAUopLoopBegin(extent, dst_factor, src_factor, wgt_factor)`.
+    pub fn loop_begin(
+        &mut self,
+        extent: u16,
+        dst_factor: u16,
+        src_factor: u16,
+        wgt_factor: u16,
+    ) -> Result<(), UopError> {
+        if self.loops.len() >= 2 {
+            return Err(UopError::TooManyLoops);
+        }
+        self.loops.push(LoopLevel { extent, dst_factor, src_factor, wgt_factor });
+        self.open += 1;
+        Ok(())
+    }
+
+    /// `VTAUopLoopEnd()`.
+    pub fn loop_end(&mut self) -> Result<(), UopError> {
+        if self.open == 0 {
+            return Err(UopError::UnbalancedEnd);
+        }
+        self.open -= 1;
+        Ok(())
+    }
+
+    /// `VTAUopPush` — append one micro-op.
+    pub fn push(&mut self, uop: Uop) -> Result<(), UopError> {
+        self.words.push(uop.encode()?);
+        Ok(())
+    }
+
+    /// Finish the kernel.
+    pub fn finish(self) -> Result<UopKernel, UopError> {
+        if self.words.is_empty() {
+            return Err(UopError::EmptyKernel);
+        }
+        Ok(UopKernel { words: self.words, loops: self.loops })
+    }
+}
+
+impl Default for UopKernelBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A kernel registered with the cache (DRAM-resident).
+struct CachedKernel {
+    /// DRAM address of the kernel's uop words, in *uop tiles* (4 B).
+    dram_tile: u32,
+    n_uops: usize,
+    /// SRAM offset when resident.
+    resident_at: Option<u32>,
+    last_use: u64,
+}
+
+/// LRU residency manager for the on-chip micro-op cache.
+///
+/// `ensure_resident` returns the kernel's SRAM offset, appending a
+/// `LOAD.UOP` instruction to `out` when the kernel has to be brought
+/// on-chip (evicting least-recently-used kernels as needed).
+pub struct UopCache {
+    sram: FreeListAllocator,
+    kernels: Vec<CachedKernel>,
+    /// kernel-id by DRAM tile (for duplicate registration checks).
+    by_dram: HashMap<u32, usize>,
+    clock: u64,
+    /// Cumulative counters (ablation A2 reads these).
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl UopCache {
+    /// A cache over a micro-op SRAM of `depth` uops.
+    pub fn new(depth: usize) -> Self {
+        UopCache {
+            sram: FreeListAllocator::new(depth),
+            kernels: Vec::new(),
+            by_dram: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Register a kernel already written to DRAM at `dram_tile`
+    /// (tile = one 4-byte uop). Returns its kernel id.
+    pub fn register(&mut self, dram_tile: u32, n_uops: usize) -> Result<usize, UopError> {
+        if n_uops == 0 {
+            return Err(UopError::EmptyKernel);
+        }
+        if n_uops > self.sram.size() {
+            return Err(UopError::KernelTooLarge { uops: n_uops, depth: self.sram.size() });
+        }
+        if let Some(&id) = self.by_dram.get(&dram_tile) {
+            return Ok(id);
+        }
+        let id = self.kernels.len();
+        self.kernels.push(CachedKernel { dram_tile, n_uops, resident_at: None, last_use: 0 });
+        self.by_dram.insert(dram_tile, id);
+        Ok(id)
+    }
+
+    /// Make kernel `id` resident; returns its SRAM uop offset. Emits a
+    /// `LOAD.UOP` into `out` on a miss.
+    pub fn ensure_resident(
+        &mut self,
+        id: usize,
+        out: &mut Vec<Instruction>,
+    ) -> Result<u32, UopError> {
+        self.clock += 1;
+        let clock = self.clock;
+        if id >= self.kernels.len() {
+            return Err(UopError::UnknownKernel(id));
+        }
+        if let Some(off) = self.kernels[id].resident_at {
+            self.kernels[id].last_use = clock;
+            self.hits += 1;
+            return Ok(off);
+        }
+        self.misses += 1;
+        let n_uops = self.kernels[id].n_uops;
+        // Evict LRU kernels until the allocation fits.
+        let offset = loop {
+            match self.sram.alloc(n_uops, 1) {
+                Ok(off) => break off as u32,
+                Err(_) => {
+                    let lru = self
+                        .kernels
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, k)| k.resident_at.is_some())
+                        .min_by_key(|(_, k)| k.last_use)
+                        .map(|(i, _)| i);
+                    let Some(victim) = lru else {
+                        return Err(UopError::KernelTooLarge {
+                            uops: n_uops,
+                            depth: self.sram.size(),
+                        });
+                    };
+                    let off = self.kernels[victim].resident_at.take().unwrap();
+                    self.sram.free(off as usize)?;
+                    self.evictions += 1;
+                }
+            }
+        };
+        self.kernels[id].resident_at = Some(offset);
+        self.kernels[id].last_use = clock;
+        out.push(Instruction::Load(MemInsn {
+            deps: DepFlags::NONE, // compute-module FIFO order suffices
+            buffer: crate::isa::BufferId::Uop,
+            sram_base: offset,
+            dram_base: self.kernels[id].dram_tile,
+            y_size: 1,
+            x_size: n_uops as u16,
+            x_stride: n_uops as u16,
+            y_pad_top: 0,
+            y_pad_bottom: 0,
+            x_pad_left: 0,
+            x_pad_right: 0,
+        }));
+        Ok(offset)
+    }
+}

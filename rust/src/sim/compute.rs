@@ -1,0 +1,231 @@
+//! Functional semantics of the compute core (§2.5): the GEMM core and
+//! the tensor ALU, executing micro-op sequences inside the two-level
+//! nested loop with affine index generation (Figs 7–8).
+
+use super::dma::SramState;
+use super::SimError;
+use crate::arch::VtaConfig;
+use crate::isa::{AluInsn, BufferId, GemmInsn, Uop};
+
+/// Index ranges touched by a GEMM/ALU instruction, used both for bounds
+/// hoisting (the hot loop runs unchecked) and hazard tracking.
+pub struct TouchedRanges {
+    pub acc_lo: usize,
+    pub acc_hi: usize, // inclusive
+    pub src_lo: usize,
+    pub src_hi: usize,
+    pub wgt_lo: usize,
+    pub wgt_hi: usize,
+}
+
+fn affine_range(
+    base_lo: usize,
+    base_hi: usize,
+    f0: usize,
+    lp0: usize,
+    f1: usize,
+    lp1: usize,
+) -> (usize, usize) {
+    let lo = base_lo;
+    let hi = base_hi + f0 * lp0.saturating_sub(1) + f1 * lp1.saturating_sub(1);
+    (lo, hi)
+}
+
+/// Execute a GEMM instruction: for every (i0, i1, uop), one
+/// `acc[dst] += inp[src] x wgt[w]^T` tile operation — or a tile reset
+/// when `insn.reset` (Fig 7). Every accumulator write is mirrored,
+/// narrowed to the output element type, into the output buffer (§2.5:
+/// "as new results are being written to the register file, they
+/// concurrently get flushed to the output buffer").
+///
+/// Returns the ranges touched (for hazard tracking).
+pub fn exec_gemm(
+    cfg: &VtaConfig,
+    insn: &GemmInsn,
+    sram: &mut SramState,
+) -> Result<TouchedRanges, SimError> {
+    let n_uops = insn.uop_end.saturating_sub(insn.uop_begin) as usize;
+    let (lp0, lp1) = (insn.lp0 as usize, insn.lp1 as usize);
+
+    // Hoisted bounds check: compute the min/max base indices over the
+    // micro-op range once, then validate the affine extremes.
+    if insn.uop_end as usize > sram.uop.len() {
+        return Err(SimError::UopOutOfBounds { index: insn.uop_end as usize, depth: sram.uop.len() });
+    }
+    let (mut acc_lo, mut acc_hi) = (usize::MAX, 0usize);
+    let (mut inp_lo, mut inp_hi) = (usize::MAX, 0usize);
+    let (mut wgt_lo, mut wgt_hi) = (usize::MAX, 0usize);
+    for w in &sram.uop[insn.uop_begin as usize..insn.uop_end as usize] {
+        let u = Uop::decode_gemm(*w);
+        acc_lo = acc_lo.min(u.acc_idx as usize);
+        acc_hi = acc_hi.max(u.acc_idx as usize);
+        inp_lo = inp_lo.min(u.inp_idx as usize);
+        inp_hi = inp_hi.max(u.inp_idx as usize);
+        wgt_lo = wgt_lo.min(u.wgt_idx as usize);
+        wgt_hi = wgt_hi.max(u.wgt_idx as usize);
+    }
+    if n_uops == 0 || lp0 == 0 || lp1 == 0 {
+        return Ok(TouchedRanges { acc_lo: 0, acc_hi: 0, src_lo: 0, src_hi: 0, wgt_lo: 0, wgt_hi: 0 });
+    }
+    let (acc_lo, acc_hi) =
+        affine_range(acc_lo, acc_hi, insn.acc_factor0 as usize, lp0, insn.acc_factor1 as usize, lp1);
+    let (inp_lo, inp_hi) =
+        affine_range(inp_lo, inp_hi, insn.inp_factor0 as usize, lp0, insn.inp_factor1 as usize, lp1);
+    let (wgt_lo, wgt_hi) =
+        affine_range(wgt_lo, wgt_hi, insn.wgt_factor0 as usize, lp0, insn.wgt_factor1 as usize, lp1);
+
+    let acc_depth = sram.depth(BufferId::Acc);
+    let inp_depth = sram.depth(BufferId::Inp);
+    let wgt_depth = sram.depth(BufferId::Wgt);
+    if acc_hi >= acc_depth {
+        return Err(SimError::SramOutOfBounds { buffer: BufferId::Acc, tile: acc_hi, count: 1, depth: acc_depth });
+    }
+    if !insn.reset {
+        if inp_hi >= inp_depth {
+            return Err(SimError::SramOutOfBounds { buffer: BufferId::Inp, tile: inp_hi, count: 1, depth: inp_depth });
+        }
+        if wgt_hi >= wgt_depth {
+            return Err(SimError::SramOutOfBounds { buffer: BufferId::Wgt, tile: wgt_hi, count: 1, depth: wgt_depth });
+        }
+    }
+
+    let batch = cfg.gemm.batch;
+    let block_in = cfg.gemm.block_in;
+    let block_out = cfg.gemm.block_out;
+    let acc_tile = sram.acc_tile;
+    let inp_tile = sram.inp_tile;
+    let wgt_tile = sram.wgt_tile;
+
+    // Decode the micro-op kernel once, outside the loop nest.
+    let uops: Vec<crate::isa::GemmUop> = sram.uop
+        [insn.uop_begin as usize..insn.uop_end as usize]
+        .iter()
+        .map(|w| Uop::decode_gemm(*w))
+        .collect();
+
+    // Hot loop. Bounds were hoisted and validated above (the affine
+    // extremes of every index are in range), so the inner loops use
+    // unchecked accesses — this is the simulator's dominant cost on
+    // real workloads (ResNet-18 executes ~1.8 G MACs here).
+    let inp_ptr = sram.inp.as_ptr();
+    let wgt_ptr = sram.wgt.as_ptr();
+    let acc_ptr = sram.acc.as_mut_ptr();
+    let out_ptr = sram.out.as_mut_ptr();
+    for i0 in 0..lp0 {
+        let acc_o = i0 * insn.acc_factor0 as usize;
+        let inp_o = i0 * insn.inp_factor0 as usize;
+        let wgt_o = i0 * insn.wgt_factor0 as usize;
+        for i1 in 0..lp1 {
+            let acc_oo = acc_o + i1 * insn.acc_factor1 as usize;
+            let inp_oo = inp_o + i1 * insn.inp_factor1 as usize;
+            let wgt_oo = wgt_o + i1 * insn.wgt_factor1 as usize;
+            for u in &uops {
+                let dst = (u.acc_idx as usize + acc_oo) * acc_tile;
+                if insn.reset {
+                    sram.acc[dst..dst + acc_tile].fill(0);
+                    sram.out[dst..dst + acc_tile].fill(0);
+                    continue;
+                }
+                let src = (u.inp_idx as usize + inp_oo) * inp_tile;
+                let wgt = (u.wgt_idx as usize + wgt_oo) * wgt_tile;
+                // One tile matmul: acc[b][o] += sum_k inp[b][k] * wgt[o][k]
+                unsafe {
+                    for b in 0..batch {
+                        let a = std::slice::from_raw_parts(inp_ptr.add(src + b * block_in), block_in);
+                        for o in 0..block_out {
+                            let w = std::slice::from_raw_parts(
+                                wgt_ptr.add(wgt + o * block_in),
+                                block_in,
+                            );
+                            let mut sum = 0i32;
+                            for kk in 0..block_in {
+                                sum += *a.get_unchecked(kk) as i32 * *w.get_unchecked(kk) as i32;
+                            }
+                            let acc_cell = acc_ptr.add(dst + b * block_out + o);
+                            *acc_cell = (*acc_cell).wrapping_add(sum);
+                        }
+                    }
+                    // Mirror narrowed results into the output buffer.
+                    for e in 0..acc_tile {
+                        *out_ptr.add(dst + e) = *acc_ptr.add(dst + e) as i8;
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(TouchedRanges { acc_lo, acc_hi, src_lo: inp_lo, src_hi: inp_hi, wgt_lo, wgt_hi })
+}
+
+/// Execute an ALU instruction: element-wise tensor-tensor or
+/// tensor-scalar operations over register-file tiles (Fig 8).
+pub fn exec_alu(
+    _cfg: &VtaConfig,
+    insn: &AluInsn,
+    sram: &mut SramState,
+) -> Result<TouchedRanges, SimError> {
+    let n_uops = insn.uop_end.saturating_sub(insn.uop_begin) as usize;
+    let (lp0, lp1) = (insn.lp0 as usize, insn.lp1 as usize);
+    if insn.uop_end as usize > sram.uop.len() {
+        return Err(SimError::UopOutOfBounds { index: insn.uop_end as usize, depth: sram.uop.len() });
+    }
+    if n_uops == 0 || lp0 == 0 || lp1 == 0 {
+        return Ok(TouchedRanges { acc_lo: 0, acc_hi: 0, src_lo: 0, src_hi: 0, wgt_lo: 0, wgt_hi: 0 });
+    }
+
+    let (mut dst_lo, mut dst_hi) = (usize::MAX, 0usize);
+    let (mut src_lo, mut src_hi) = (usize::MAX, 0usize);
+    let uops: Vec<crate::isa::AluUop> = sram.uop
+        [insn.uop_begin as usize..insn.uop_end as usize]
+        .iter()
+        .map(|w| Uop::decode_alu(*w))
+        .collect();
+    for u in &uops {
+        dst_lo = dst_lo.min(u.dst_idx as usize);
+        dst_hi = dst_hi.max(u.dst_idx as usize);
+        src_lo = src_lo.min(u.src_idx as usize);
+        src_hi = src_hi.max(u.src_idx as usize);
+    }
+    let (dst_lo, dst_hi) =
+        affine_range(dst_lo, dst_hi, insn.dst_factor0 as usize, lp0, insn.dst_factor1 as usize, lp1);
+    let (src_lo, src_hi) =
+        affine_range(src_lo, src_hi, insn.src_factor0 as usize, lp0, insn.src_factor1 as usize, lp1);
+
+    let acc_depth = sram.depth(BufferId::Acc);
+    if dst_hi >= acc_depth {
+        return Err(SimError::SramOutOfBounds { buffer: BufferId::Acc, tile: dst_hi, count: 1, depth: acc_depth });
+    }
+    if !insn.use_imm && src_hi >= acc_depth {
+        return Err(SimError::SramOutOfBounds { buffer: BufferId::Acc, tile: src_hi, count: 1, depth: acc_depth });
+    }
+
+    let acc_tile = sram.acc_tile;
+    let imm = insn.imm as i32;
+    for i0 in 0..lp0 {
+        let dst_o = i0 * insn.dst_factor0 as usize;
+        let src_o = i0 * insn.src_factor0 as usize;
+        for i1 in 0..lp1 {
+            let dst_oo = dst_o + i1 * insn.dst_factor1 as usize;
+            let src_oo = src_o + i1 * insn.src_factor1 as usize;
+            for u in &uops {
+                let dst = (u.dst_idx as usize + dst_oo) * acc_tile;
+                if insn.use_imm {
+                    for e in 0..acc_tile {
+                        let v = insn.op.apply(sram.acc[dst + e], imm);
+                        sram.acc[dst + e] = v;
+                        sram.out[dst + e] = v as i8;
+                    }
+                } else {
+                    let src = (u.src_idx as usize + src_oo) * acc_tile;
+                    for e in 0..acc_tile {
+                        let v = insn.op.apply(sram.acc[dst + e], sram.acc[src + e]);
+                        sram.acc[dst + e] = v;
+                        sram.out[dst + e] = v as i8;
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(TouchedRanges { acc_lo: dst_lo, acc_hi: dst_hi, src_lo, src_hi, wgt_lo: 0, wgt_hi: 0 })
+}

@@ -1,0 +1,206 @@
+//! Functional semantics of the on-chip SRAM state and the 2D strided
+//! DMA performed by LOAD/STORE instructions (Fig 9), including the
+//! dynamic padding the load module inserts on the fly.
+
+use super::{Dram, SimError};
+use crate::arch::VtaConfig;
+use crate::isa::{BufferId, MemInsn};
+
+/// All data-specialized SRAMs of one VTA instance (§2.6), as flat
+/// tile-major vectors.
+pub struct SramState {
+    /// Input buffer: `inp_depth` tiles of `batch x block_in` i8.
+    pub inp: Vec<i8>,
+    /// Weight buffer: `wgt_depth` tiles of `block_out x block_in` i8.
+    pub wgt: Vec<i8>,
+    /// Register file: `acc_depth` tiles of `batch x block_out` i32.
+    pub acc: Vec<i32>,
+    /// Output buffer: `out_depth` tiles of `batch x block_out` i8
+    /// (narrowed copies of register-file writes, §2.5).
+    pub out: Vec<i8>,
+    /// Micro-op cache: `uop_depth` 32-bit micro-ops.
+    pub uop: Vec<u32>,
+    /// Elements per tile, cached from the config.
+    pub inp_tile: usize,
+    pub wgt_tile: usize,
+    pub acc_tile: usize,
+}
+
+impl SramState {
+    /// Allocate SRAMs per the architecture config.
+    pub fn new(cfg: &VtaConfig) -> Self {
+        let inp_tile = cfg.gemm.batch * cfg.gemm.block_in;
+        let wgt_tile = cfg.gemm.block_out * cfg.gemm.block_in;
+        let acc_tile = cfg.gemm.batch * cfg.gemm.block_out;
+        SramState {
+            inp: vec![0; cfg.inp_depth() * inp_tile],
+            wgt: vec![0; cfg.wgt_depth() * wgt_tile],
+            acc: vec![0; cfg.acc_depth() * acc_tile],
+            out: vec![0; cfg.out_depth() * acc_tile],
+            uop: vec![0; cfg.uop_depth()],
+            inp_tile,
+            wgt_tile,
+            acc_tile,
+        }
+    }
+
+    /// Tile depth of a buffer.
+    pub fn depth(&self, buffer: BufferId) -> usize {
+        match buffer {
+            BufferId::Inp => self.inp.len() / self.inp_tile,
+            BufferId::Wgt => self.wgt.len() / self.wgt_tile,
+            BufferId::Acc => self.acc.len() / self.acc_tile,
+            BufferId::Out => self.out.len() / self.acc_tile,
+            BufferId::Uop => self.uop.len(),
+        }
+    }
+}
+
+fn check_sram(buffer: BufferId, base: usize, count: usize, depth: usize) -> Result<(), SimError> {
+    if base.checked_add(count).map_or(true, |end| end > depth) {
+        return Err(SimError::SramOutOfBounds { buffer, tile: base, count, depth });
+    }
+    Ok(())
+}
+
+/// Execute a LOAD instruction's data movement: a 2D strided DMA read
+/// from DRAM with zero-padding inserted around the payload (Fig 9).
+///
+/// Returns the number of bytes that crossed the DRAM port (padding is
+/// generated on-chip and is free).
+pub fn exec_load(
+    cfg: &VtaConfig,
+    insn: &MemInsn,
+    dram: &Dram,
+    sram: &mut SramState,
+) -> Result<u64, SimError> {
+    let (elem_bytes, tile_elems): (usize, usize) = match insn.buffer {
+        BufferId::Inp => (1, sram.inp_tile),
+        BufferId::Wgt => (1, sram.wgt_tile),
+        BufferId::Acc => (4, sram.acc_tile),
+        BufferId::Uop => (4, 1),
+        BufferId::Out => {
+            return Err(SimError::IllegalInstruction {
+                module: "load",
+                detail: "LOAD targeting the output buffer".into(),
+            })
+        }
+    };
+    let tile_bytes = tile_elems * elem_bytes;
+    let depth = sram.depth(insn.buffer);
+    check_sram(insn.buffer, insn.sram_base as usize, insn.sram_tiles(), depth)?;
+
+    let row_tiles = insn.sram_row_tiles();
+    let mut dst_tile = insn.sram_base as usize;
+    let mut moved = 0u64;
+
+    // Leading pad rows.
+    for _ in 0..insn.y_pad_top {
+        fill_zero(sram, insn.buffer, dst_tile, row_tiles, tile_elems);
+        dst_tile += row_tiles;
+    }
+    // Payload rows with left/right pad.
+    for y in 0..insn.y_size as usize {
+        fill_zero(sram, insn.buffer, dst_tile, insn.x_pad_left as usize, tile_elems);
+        dst_tile += insn.x_pad_left as usize;
+
+        let dram_tile = insn.dram_base as usize + y * insn.x_stride as usize;
+        let dram_addr = dram_tile * tile_bytes;
+        let n_tiles = insn.x_size as usize;
+        copy_in(sram, insn.buffer, dst_tile, dram, dram_addr, n_tiles, tile_elems)?;
+        dst_tile += n_tiles;
+        moved += (n_tiles * tile_bytes) as u64;
+
+        fill_zero(sram, insn.buffer, dst_tile, insn.x_pad_right as usize, tile_elems);
+        dst_tile += insn.x_pad_right as usize;
+    }
+    // Trailing pad rows.
+    for _ in 0..insn.y_pad_bottom {
+        fill_zero(sram, insn.buffer, dst_tile, row_tiles, tile_elems);
+        dst_tile += row_tiles;
+    }
+    let _ = cfg;
+    Ok(moved)
+}
+
+/// Execute a STORE instruction: 2D strided DMA write of output-buffer
+/// tiles to DRAM. Padding fields are ignored (stores never pad).
+///
+/// Returns bytes moved across the DRAM port.
+pub fn exec_store(
+    cfg: &VtaConfig,
+    insn: &MemInsn,
+    dram: &mut Dram,
+    sram: &SramState,
+) -> Result<u64, SimError> {
+    if insn.buffer != BufferId::Out {
+        return Err(SimError::IllegalInstruction {
+            module: "store",
+            detail: format!("STORE from {:?} (only the output buffer is drainable)", insn.buffer),
+        });
+    }
+    let tile_elems = sram.acc_tile;
+    let tile_bytes = tile_elems * cfg.out_bits / 8;
+    let total_tiles = insn.y_size as usize * insn.x_size as usize;
+    check_sram(BufferId::Out, insn.sram_base as usize, total_tiles, sram.depth(BufferId::Out))?;
+
+    let mut src_tile = insn.sram_base as usize;
+    let mut moved = 0u64;
+    for y in 0..insn.y_size as usize {
+        let dram_tile = insn.dram_base as usize + y * insn.x_stride as usize;
+        let dram_addr = dram_tile * tile_bytes;
+        let n = insn.x_size as usize * tile_elems;
+        dram.write_i8(dram_addr, &sram.out[src_tile * tile_elems..src_tile * tile_elems + n])?;
+        src_tile += insn.x_size as usize;
+        moved += (insn.x_size as usize * tile_bytes) as u64;
+    }
+    Ok(moved)
+}
+
+fn fill_zero(sram: &mut SramState, buffer: BufferId, tile: usize, tiles: usize, tile_elems: usize) {
+    if tiles == 0 {
+        return;
+    }
+    match buffer {
+        BufferId::Inp => sram.inp[tile * tile_elems..(tile + tiles) * tile_elems].fill(0),
+        BufferId::Wgt => sram.wgt[tile * tile_elems..(tile + tiles) * tile_elems].fill(0),
+        BufferId::Acc => sram.acc[tile * tile_elems..(tile + tiles) * tile_elems].fill(0),
+        BufferId::Uop => sram.uop[tile..tile + tiles].fill(0),
+        BufferId::Out => sram.out[tile * tile_elems..(tile + tiles) * tile_elems].fill(0),
+    }
+}
+
+fn copy_in(
+    sram: &mut SramState,
+    buffer: BufferId,
+    tile: usize,
+    dram: &Dram,
+    dram_addr: usize,
+    tiles: usize,
+    tile_elems: usize,
+) -> Result<(), SimError> {
+    if tiles == 0 {
+        return Ok(());
+    }
+    let n = tiles * tile_elems;
+    match buffer {
+        BufferId::Inp => {
+            let src = dram.read_i8(dram_addr, n)?;
+            sram.inp[tile * tile_elems..tile * tile_elems + n].copy_from_slice(src);
+        }
+        BufferId::Wgt => {
+            let src = dram.read_i8(dram_addr, n)?;
+            sram.wgt[tile * tile_elems..tile * tile_elems + n].copy_from_slice(src);
+        }
+        BufferId::Acc => {
+            let src = dram.read_i32(dram_addr, n)?;
+            sram.acc[tile * tile_elems..tile * tile_elems + n].copy_from_slice(&src);
+        }
+        BufferId::Uop => {
+            let src = dram.read_u32(dram_addr, n)?;
+            sram.uop[tile..tile + n].copy_from_slice(&src);
+        }
+        BufferId::Out => unreachable!("checked by exec_load"),
+    }
+    Ok(())
+}

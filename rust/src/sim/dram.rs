@@ -1,0 +1,88 @@
+//! Behavioral DRAM: a flat byte array with bounds-checked typed access.
+//!
+//! The VTA runtime allocates *physically contiguous* buffers (§3.2) and
+//! hands the accelerator raw physical addresses; the simulator mirrors
+//! that with plain byte offsets.
+
+use super::SimError;
+
+/// Flat DRAM image shared by the CPU (runtime) and the accelerator
+/// (simulator DMA masters).
+pub struct Dram {
+    bytes: Vec<u8>,
+}
+
+impl Dram {
+    /// Allocate a DRAM of `size` bytes, zero-initialized.
+    pub fn new(size: usize) -> Self {
+        Dram { bytes: vec![0; size] }
+    }
+
+    /// Total capacity in bytes.
+    pub fn size(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn check(&self, addr: usize, len: usize) -> Result<(), SimError> {
+        if addr.checked_add(len).map_or(true, |end| end > self.bytes.len()) {
+            return Err(SimError::DramOutOfBounds { addr, len, size: self.bytes.len() });
+        }
+        Ok(())
+    }
+
+    /// Borrow a byte slice.
+    pub fn read(&self, addr: usize, len: usize) -> Result<&[u8], SimError> {
+        self.check(addr, len)?;
+        Ok(&self.bytes[addr..addr + len])
+    }
+
+    /// Write a byte slice.
+    pub fn write(&mut self, addr: usize, data: &[u8]) -> Result<(), SimError> {
+        self.check(addr, data.len())?;
+        self.bytes[addr..addr + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Read `n` i8 elements.
+    pub fn read_i8(&self, addr: usize, n: usize) -> Result<&[i8], SimError> {
+        let b = self.read(addr, n)?;
+        // Safety: i8 and u8 have identical layout.
+        Ok(unsafe { std::slice::from_raw_parts(b.as_ptr() as *const i8, n) })
+    }
+
+    /// Write i8 elements.
+    pub fn write_i8(&mut self, addr: usize, data: &[i8]) -> Result<(), SimError> {
+        let b = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+        self.write(addr, b)
+    }
+
+    /// Read `n` little-endian i32 elements.
+    pub fn read_i32(&self, addr: usize, n: usize) -> Result<Vec<i32>, SimError> {
+        let b = self.read(addr, n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Write little-endian i32 elements.
+    pub fn write_i32(&mut self, addr: usize, data: &[i32]) -> Result<(), SimError> {
+        self.check(addr, data.len() * 4)?;
+        for (i, v) in data.iter().enumerate() {
+            self.bytes[addr + 4 * i..addr + 4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    /// Read `n` little-endian u32 words (micro-ops).
+    pub fn read_u32(&self, addr: usize, n: usize) -> Result<Vec<u32>, SimError> {
+        let b = self.read(addr, n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Write little-endian u32 words.
+    pub fn write_u32(&mut self, addr: usize, data: &[u32]) -> Result<(), SimError> {
+        self.check(addr, data.len() * 4)?;
+        for (i, v) in data.iter().enumerate() {
+            self.bytes[addr + 4 * i..addr + 4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,500 @@
+//! The discrete-event engine: four modules executing concurrently as a
+//! dataflow pipeline synchronized by dependence-token FIFOs (§2.3–2.4,
+//! Figs 4–6).
+//!
+//! Every candidate action (fetch a burst, route an instruction, execute
+//! a module's next command) is given a feasible start time; the engine
+//! repeatedly executes the earliest. Timing rules are documented in
+//! DESIGN.md §6.
+
+use super::compute::{exec_alu, exec_gemm};
+use super::dma::{exec_load, exec_store, SramState};
+use super::hazard::{HazardTracker, Module};
+use super::{Dram, Hazard, SimError, SimStats};
+use crate::arch::VtaConfig;
+use crate::isa::{BufferId, Instruction};
+
+/// Fixed pipeline fill/drain overhead charged per compute instruction.
+const COMPUTE_OVERHEAD: u64 = 4;
+/// Instructions fetched per DRAM burst by the fetch module.
+const FETCH_BURST: usize = 32;
+/// Decode/route cost per instruction (cycles).
+const DECODE_COST: u64 = 1;
+
+/// Execution-mode switches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Normal execution: trust the dependence flags.
+    Normal,
+    /// Track per-tile access intervals and record RAW/WAR races
+    /// (reproduces Fig 5's erroneous-execution scenarios).
+    CheckHazards,
+}
+
+/// One entry in a module's command queue.
+struct Cmd {
+    insn: Instruction,
+    /// Time the fetch module pushed it.
+    push_time: u64,
+    /// Time the consuming module started it (fills in as it executes;
+    /// used to model queue-slot back-pressure on fetch).
+    start_time: Option<u64>,
+}
+
+/// A dependence-token FIFO; tokens are information-less (§2.3) so only
+/// their push timestamps are stored.
+#[derive(Default)]
+struct TokenQueue {
+    push_times: Vec<u64>,
+    popped: usize,
+    max_occupancy: usize,
+}
+
+impl TokenQueue {
+    fn push(&mut self, t: u64) {
+        self.push_times.push(t);
+        self.max_occupancy = self.max_occupancy.max(self.push_times.len() - self.popped);
+    }
+
+    /// Time the next unpopped token becomes available, or None if the
+    /// producer has not pushed it yet.
+    fn peek(&self) -> Option<u64> {
+        self.push_times.get(self.popped).copied()
+    }
+
+    fn pop(&mut self) -> u64 {
+        let t = self.push_times[self.popped];
+        self.popped += 1;
+        t
+    }
+
+    fn pending(&self) -> usize {
+        self.push_times.len() - self.popped
+    }
+}
+
+/// Identifiers for the three execution modules (fetch is handled
+/// separately).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ModId {
+    Load = 0,
+    Compute = 1,
+    Store = 2,
+}
+
+/// The VTA behavioral simulator.
+///
+/// Holds the DRAM image and the on-chip state; [`Simulator::run`]
+/// executes one instruction stream to the FINISH sentinel and returns
+/// the cycle-level statistics.
+pub struct Simulator {
+    cfg: VtaConfig,
+    pub dram: Dram,
+    sram: SramState,
+    mode: ExecMode,
+    hazards: Vec<Hazard>,
+}
+
+impl Simulator {
+    /// Create a simulator with `dram_size` bytes of DRAM.
+    pub fn new(cfg: VtaConfig, dram_size: usize) -> Self {
+        let sram = SramState::new(&cfg);
+        Simulator { cfg, dram: Dram::new(dram_size), sram, mode: ExecMode::Normal, hazards: Vec::new() }
+    }
+
+    /// Switch execution mode (hazard checking costs time and memory).
+    pub fn set_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    /// Architecture configuration.
+    pub fn config(&self) -> &VtaConfig {
+        &self.cfg
+    }
+
+    /// Hazards recorded by the last `CheckHazards` run.
+    pub fn hazards(&self) -> &[Hazard] {
+        &self.hazards
+    }
+
+    /// Reset on-chip state (SRAMs) without touching DRAM.
+    pub fn reset_sram(&mut self) {
+        self.sram = SramState::new(&self.cfg);
+    }
+
+    /// Execute an instruction stream until FINISH; returns statistics.
+    ///
+    /// The stream must contain exactly one FINISH sentinel as its last
+    /// instruction (the runtime's `synchronize()` guarantees this).
+    pub fn run(&mut self, insns: &[Instruction]) -> Result<SimStats, SimError> {
+        match insns.last() {
+            Some(Instruction::Finish(_)) => {}
+            _ => return Err(SimError::MissingFinish),
+        }
+
+        let mut stats = SimStats::default();
+        let mut tracker = HazardTracker::new(
+            self.mode == ExecMode::CheckHazards,
+            [
+                self.sram.depth(BufferId::Uop),
+                self.sram.depth(BufferId::Wgt),
+                self.sram.depth(BufferId::Inp),
+                self.sram.depth(BufferId::Acc),
+                self.sram.depth(BufferId::Out),
+            ],
+        );
+
+        // Dependence-token queues (Fig 6): indices into `tokens`:
+        // 0 = load→compute RAW, 1 = compute→load WAR,
+        // 2 = compute→store RAW, 3 = store→compute WAR.
+        let mut tokens: [TokenQueue; 4] = Default::default();
+        const L2C: usize = 0;
+        const C2L: usize = 1;
+        const C2S: usize = 2;
+        const S2C: usize = 3;
+
+        // Command queues.
+        let mut queues: [Vec<Cmd>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut pcs = [0usize; 3]; // per-module next-command index
+        let mut free = [0u64; 3]; // per-module next-free time
+
+        // Fetch state.
+        let mut fetch_next = 0usize; // next instruction to route
+        let mut fetch_free = 0u64;
+        let mut burst_avail: Vec<u64> = Vec::new(); // per-burst availability time
+        let insn_bytes = crate::isa::INSN_BYTES;
+
+        // Shared DRAM port.
+        let mut port_free = 0u64;
+
+        let mut executed = 0usize;
+        let mut done_time: Option<u64> = None;
+
+        loop {
+            // ---------------- candidate generation ----------------
+            // (action, t_start); action: 0 = fetch burst, 1 = route,
+            // 2..=4 = execute module (ModId = action - 2).
+            let mut best: Option<(usize, u64)> = None;
+            let mut consider = |action: usize, t: u64| {
+                if best.map_or(true, |(_, bt)| t < bt) {
+                    best = Some((action, t));
+                }
+            };
+
+            if fetch_next < insns.len() {
+                let burst = fetch_next / FETCH_BURST;
+                if burst >= burst_avail.len() {
+                    // Need to fetch this burst from DRAM first.
+                    consider(0, fetch_free.max(port_free));
+                } else {
+                    // Route the next instruction, if its queue has room.
+                    let q = route(&insns[fetch_next]).ok_or_else(|| SimError::IllegalInstruction {
+                        module: "fetch",
+                        detail: format!("unroutable instruction {:?}", insns[fetch_next]),
+                    })?;
+                    let qi = q as usize;
+                    let n = queues[qi].len();
+                    let slot_free = if n < self.cfg.cmd_queue_depth {
+                        Some(0u64)
+                    } else {
+                        // The slot frees when the consumer *starts* the
+                        // (n - depth)-th entry of this queue.
+                        queues[qi][n - self.cfg.cmd_queue_depth].start_time
+                    };
+                    if let Some(sf) = slot_free {
+                        let ready = fetch_free.max(burst_avail[burst]).max(sf);
+                        consider(1, ready);
+                    }
+                }
+            }
+
+            for (mi, m) in [ModId::Load, ModId::Compute, ModId::Store].into_iter().enumerate() {
+                let pc = pcs[mi];
+                if pc >= queues[mi].len() {
+                    continue;
+                }
+                let cmd = &queues[mi][pc];
+                let deps = cmd.insn.deps();
+                // Which token queues does this module pop from?
+                let (pop_prev_q, pop_next_q) = match m {
+                    ModId::Load => (None, Some(C2L)),
+                    ModId::Compute => (Some(L2C), Some(S2C)),
+                    ModId::Store => (Some(C2S), None),
+                };
+                let mut t = free[mi].max(cmd.push_time);
+                let mut feasible = true;
+                if deps.pop_prev {
+                    match pop_prev_q.and_then(|q| tokens[q].peek()) {
+                        Some(tt) => t = t.max(tt),
+                        None => feasible = false,
+                    }
+                }
+                if deps.pop_next {
+                    match pop_next_q.and_then(|q| tokens[q].peek()) {
+                        Some(tt) => t = t.max(tt),
+                        None => feasible = false,
+                    }
+                }
+                // DMA instructions contend for the shared DRAM port.
+                if feasible {
+                    if is_dma(&cmd.insn) {
+                        t = t.max(port_free);
+                    }
+                    consider(2 + mi, t);
+                }
+            }
+
+            // ---------------- dispatch ----------------
+            let Some((action, t_start)) = best else {
+                let all_drained = fetch_next >= insns.len()
+                    && (0..3).all(|mi| pcs[mi] >= queues[mi].len());
+                if done_time.is_some() && all_drained {
+                    break;
+                }
+                return Err(SimError::Deadlock {
+                    executed,
+                    load_pc: pcs[0],
+                    compute_pc: pcs[1],
+                    store_pc: pcs[2],
+                    l2c: tokens[L2C].pending(),
+                    c2l: tokens[C2L].pending(),
+                    c2s: tokens[C2S].pending(),
+                    s2c: tokens[S2C].pending(),
+                });
+            };
+
+            match action {
+                0 => {
+                    // Fetch one burst of instructions over the DRAM port.
+                    let burst = burst_avail.len();
+                    let first = burst * FETCH_BURST;
+                    let count = FETCH_BURST.min(insns.len() - first);
+                    let bytes = count * insn_bytes;
+                    let occ = self.cfg.dram.occupancy(bytes);
+                    let t_done = t_start + self.cfg.dram.latency + occ;
+                    port_free = t_start + occ;
+                    stats.dram_busy_cycles += occ;
+                    burst_avail.push(t_done);
+                    fetch_free = t_start; // fetch itself only waited for the port
+                }
+                1 => {
+                    // Route one instruction into its command queue.
+                    let insn = insns[fetch_next];
+                    let q = route(&insn).unwrap() as usize;
+                    let t_done = t_start + DECODE_COST;
+                    // Stall accounting: time spent waiting on a full queue.
+                    let burst = fetch_next / FETCH_BURST;
+                    let unblocked = fetch_free.max(burst_avail[burst]);
+                    stats.fetch_stall_cycles += t_start.saturating_sub(unblocked);
+                    queues[q].push(Cmd { insn, push_time: t_done, start_time: None });
+                    fetch_next += 1;
+                    fetch_free = t_done;
+                }
+                mi2 => {
+                    let mi = mi2 - 2;
+                    let m = [ModId::Load, ModId::Compute, ModId::Store][mi];
+                    let pc = pcs[mi];
+                    let insn = queues[mi][pc].insn;
+                    let deps = insn.deps();
+
+                    // Pop incoming tokens.
+                    match m {
+                        ModId::Load => {
+                            if deps.pop_next {
+                                tokens[C2L].pop();
+                            }
+                        }
+                        ModId::Compute => {
+                            if deps.pop_prev {
+                                tokens[L2C].pop();
+                            }
+                            if deps.pop_next {
+                                tokens[S2C].pop();
+                            }
+                        }
+                        ModId::Store => {
+                            if deps.pop_prev {
+                                tokens[C2S].pop();
+                            }
+                        }
+                    }
+
+                    // Execute functionally + compute duration.
+                    let duration = self.execute(m, &insn, t_start, &mut stats, &mut tracker)?;
+                    let t_finish = t_start + duration;
+                    if is_dma(&insn) {
+                        // DMA occupies the shared port for its occupancy
+                        // portion (latency overlaps with other traffic).
+                        let occ = duration.saturating_sub(self.cfg.dram.latency);
+                        port_free = t_start + occ;
+                        stats.dram_busy_cycles += occ;
+                    }
+
+                    // Push outgoing tokens at finish time.
+                    match m {
+                        ModId::Load => {
+                            if deps.push_next {
+                                tokens[L2C].push(t_finish);
+                                stats.tokens_pushed[L2C] += 1;
+                            }
+                        }
+                        ModId::Compute => {
+                            if deps.push_prev {
+                                tokens[C2L].push(t_finish);
+                                stats.tokens_pushed[C2L] += 1;
+                            }
+                            if deps.push_next {
+                                tokens[C2S].push(t_finish);
+                                stats.tokens_pushed[C2S] += 1;
+                            }
+                        }
+                        ModId::Store => {
+                            if deps.push_prev {
+                                tokens[S2C].push(t_finish);
+                                stats.tokens_pushed[S2C] += 1;
+                            }
+                        }
+                    }
+
+                    queues[mi][pc].start_time = Some(t_start);
+                    pcs[mi] += 1;
+                    free[mi] = t_finish;
+                    executed += 1;
+                    if matches!(insn, Instruction::Finish(_)) {
+                        done_time = Some(t_finish);
+                    }
+                }
+            }
+
+            if done_time.is_some() && fetch_next >= insns.len() {
+                // All instructions routed and FINISH retired; remaining
+                // modules may still have queued work only if the stream
+                // was malformed — check all PCs drained.
+                let all_drained =
+                    (0..3).all(|mi| pcs[mi] >= queues[mi].len());
+                if all_drained {
+                    break;
+                }
+            }
+        }
+
+        stats.total_cycles = done_time.unwrap_or(0).max(free[0]).max(free[1]).max(free[2]);
+        self.hazards = tracker_into_hazards(tracker);
+        Ok(stats)
+    }
+
+    /// Functionally execute one instruction on module `m` and return its
+    /// duration in cycles.
+    fn execute(
+        &mut self,
+        m: ModId,
+        insn: &Instruction,
+        t_start: u64,
+        stats: &mut SimStats,
+        tracker: &mut HazardTracker,
+    ) -> Result<u64, SimError> {
+        let hmod = match m {
+            ModId::Load => Module::Load,
+            ModId::Compute => Module::Compute,
+            ModId::Store => Module::Store,
+        };
+        match insn {
+            Instruction::Load(mem) => {
+                let bytes = exec_load(&self.cfg, mem, &self.dram, &mut self.sram)?;
+                stats.insn_load += 1;
+                stats.bytes_loaded += bytes;
+                let occ = self.cfg.dram.occupancy(bytes as usize);
+                let duration = self.cfg.dram.latency + occ.max(1);
+                match m {
+                    ModId::Load => stats.load_busy_cycles += duration,
+                    _ => {}
+                }
+                tracker.write(
+                    hmod,
+                    mem.buffer,
+                    mem.sram_base as usize,
+                    mem.sram_tiles(),
+                    t_start,
+                    t_start + duration,
+                );
+                Ok(duration)
+            }
+            Instruction::Store(mem) => {
+                let bytes = exec_store(&self.cfg, mem, &mut self.dram, &self.sram)?;
+                stats.insn_store += 1;
+                stats.bytes_stored += bytes;
+                let occ = self.cfg.dram.occupancy(bytes as usize);
+                let duration = self.cfg.dram.latency + occ.max(1);
+                stats.store_busy_cycles += duration;
+                tracker.read(
+                    hmod,
+                    BufferId::Out,
+                    mem.sram_base as usize,
+                    mem.dram_tiles(),
+                    t_start,
+                    t_start + duration,
+                );
+                Ok(duration)
+            }
+            Instruction::Gemm(g) => {
+                let ranges = exec_gemm(&self.cfg, g, &mut self.sram)?;
+                let uops = g.uop_executions();
+                stats.insn_gemm += 1;
+                stats.gemm_uops += uops;
+                stats.gemm_busy_cycles += uops;
+                let duration = uops + COMPUTE_OVERHEAD;
+                let t_end = t_start + duration;
+                if !g.reset {
+                    tracker.read(hmod, BufferId::Inp, ranges.src_lo, ranges.src_hi - ranges.src_lo + 1, t_start, t_end);
+                    tracker.read(hmod, BufferId::Wgt, ranges.wgt_lo, ranges.wgt_hi - ranges.wgt_lo + 1, t_start, t_end);
+                }
+                tracker.write(hmod, BufferId::Acc, ranges.acc_lo, ranges.acc_hi - ranges.acc_lo + 1, t_start, t_end);
+                tracker.write(hmod, BufferId::Out, ranges.acc_lo, ranges.acc_hi - ranges.acc_lo + 1, t_start, t_end);
+                Ok(duration)
+            }
+            Instruction::Alu(a) => {
+                let ranges = exec_alu(&self.cfg, a, &mut self.sram)?;
+                let uops = a.uop_executions();
+                stats.insn_alu += 1;
+                stats.alu_uops += uops;
+                // §2.5: II >= 2 and wide tensors are processed as
+                // multi-cycle vector ops.
+                let vec_factor =
+                    (self.cfg.gemm.batch * self.cfg.gemm.block_out).div_ceil(self.cfg.alu_lanes)
+                        as u64;
+                let cycles = uops * self.cfg.alu_ii * vec_factor;
+                stats.alu_busy_cycles += cycles;
+                let duration = cycles + COMPUTE_OVERHEAD;
+                let t_end = t_start + duration;
+                if !a.use_imm {
+                    tracker.read(hmod, BufferId::Acc, ranges.src_lo, ranges.src_hi - ranges.src_lo + 1, t_start, t_end);
+                }
+                tracker.write(hmod, BufferId::Acc, ranges.acc_lo, ranges.acc_hi - ranges.acc_lo + 1, t_start, t_end);
+                tracker.write(hmod, BufferId::Out, ranges.acc_lo, ranges.acc_hi - ranges.acc_lo + 1, t_start, t_end);
+                Ok(duration)
+            }
+            Instruction::Finish(_) => Ok(1),
+        }
+    }
+}
+
+/// Fetch-module routing rules (§2.4).
+fn route(insn: &Instruction) -> Option<ModId> {
+    match insn {
+        Instruction::Load(m) => match m.buffer {
+            BufferId::Inp | BufferId::Wgt => Some(ModId::Load),
+            BufferId::Uop | BufferId::Acc => Some(ModId::Compute),
+            BufferId::Out => None,
+        },
+        Instruction::Store(_) => Some(ModId::Store),
+        Instruction::Gemm(_) | Instruction::Alu(_) | Instruction::Finish(_) => Some(ModId::Compute),
+    }
+}
+
+fn is_dma(insn: &Instruction) -> bool {
+    matches!(insn, Instruction::Load(_) | Instruction::Store(_))
+}
+
+fn tracker_into_hazards(tracker: HazardTracker) -> Vec<Hazard> {
+    tracker.hazards().to_vec()
+}

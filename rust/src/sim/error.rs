@@ -1,0 +1,43 @@
+//! Simulator error types. The hardware would hang or corrupt state;
+//! the simulator turns every such condition into a typed error.
+
+use crate::isa::{BufferId, IsaError};
+use thiserror::Error;
+
+/// Errors raised during simulation.
+#[derive(Debug, Error)]
+pub enum SimError {
+    #[error("DRAM access out of bounds: addr={addr:#x} len={len} size={size:#x}")]
+    DramOutOfBounds { addr: usize, len: usize, size: usize },
+
+    #[error("{buffer:?} SRAM access out of bounds: tile {tile} + {count} > depth {depth}")]
+    SramOutOfBounds { buffer: BufferId, tile: usize, count: usize, depth: usize },
+
+    #[error("micro-op cache access out of bounds: uop {index} >= depth {depth}")]
+    UopOutOfBounds { index: usize, depth: usize },
+
+    #[error("illegal instruction routed to {module}: {detail}")]
+    IllegalInstruction { module: &'static str, detail: String },
+
+    #[error(
+        "dependence deadlock after {executed} instructions: \
+         load@{load_pc} compute@{compute_pc} store@{store_pc} \
+         (pending tokens: l2c={l2c} c2l={c2l} c2s={c2s} s2c={s2c})"
+    )]
+    Deadlock {
+        executed: usize,
+        load_pc: usize,
+        compute_pc: usize,
+        store_pc: usize,
+        l2c: usize,
+        c2l: usize,
+        c2s: usize,
+        s2c: usize,
+    },
+
+    #[error("instruction stream has no FINISH sentinel")]
+    MissingFinish,
+
+    #[error("ISA error: {0}")]
+    Isa(#[from] IsaError),
+}

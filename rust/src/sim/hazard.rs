@@ -1,0 +1,162 @@
+//! RAW/WAR hazard detection (§2.3, Fig 5).
+//!
+//! The hardware does *not* detect races — an instruction stream with
+//! missing dependence flags silently corrupts SRAM. The simulator, in
+//! `ExecMode::CheckHazards`, records the time interval during which each
+//! instruction reads/writes each SRAM tile and flags overlapping
+//! conflicting accesses from *different* hardware modules. Tests inject
+//! streams with deliberately omitted flags and assert the tracker
+//! reports exactly the Fig 5 scenarios.
+
+use crate::isa::BufferId;
+
+/// Which hardware module performed an access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Module {
+    Load,
+    Compute,
+    Store,
+}
+
+/// Kind of detected race.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HazardKind {
+    /// Consumer read overlapped (or preceded) the producer's write —
+    /// missing RAW dependence.
+    ReadBeforeWrite,
+    /// Producer overwrote data while (or before) the consumer was still
+    /// reading it — missing WAR dependence.
+    WriteDuringRead,
+    /// Two modules wrote the same tile concurrently.
+    WriteDuringWrite,
+}
+
+/// A detected hazard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hazard {
+    pub kind: HazardKind,
+    pub buffer: BufferId,
+    pub tile: usize,
+    /// The two conflicting accesses: (module, start, end).
+    pub first: (Module, u64, u64),
+    pub second: (Module, u64, u64),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Access {
+    module: Module,
+    start: u64,
+    end: u64,
+}
+
+/// Per-buffer, per-tile last-access bookkeeping.
+pub struct HazardTracker {
+    enabled: bool,
+    last_write: Vec<Vec<Option<Access>>>,
+    last_read: Vec<Vec<Option<Access>>>,
+    hazards: Vec<Hazard>,
+    /// Cap on recorded hazards to bound memory on badly broken streams.
+    max_records: usize,
+}
+
+fn buf_index(buffer: BufferId) -> usize {
+    buffer as usize
+}
+
+impl HazardTracker {
+    /// `depths[b]` is the tile count of buffer `b` (indexed by
+    /// `BufferId as usize`). Pass `enabled = false` for a zero-overhead
+    /// no-op tracker.
+    pub fn new(enabled: bool, depths: [usize; 5]) -> Self {
+        let mk = |on: bool| -> Vec<Vec<Option<Access>>> {
+            if on {
+                depths.iter().map(|&d| vec![None; d]).collect()
+            } else {
+                Vec::new()
+            }
+        };
+        HazardTracker {
+            enabled,
+            last_write: mk(enabled),
+            last_read: mk(enabled),
+            hazards: Vec::new(),
+            max_records: 64,
+        }
+    }
+
+    fn overlap(a: &Access, b: &Access) -> bool {
+        // Two accesses conflict when their [start, end) intervals
+        // intersect. Accesses by the same module are serialized by the
+        // module's FIFO execution and never race.
+        a.module != b.module && a.start < b.end && b.start < a.end
+    }
+
+    fn record(&mut self, h: Hazard) {
+        if self.hazards.len() < self.max_records {
+            self.hazards.push(h);
+        }
+    }
+
+    /// Record a read of `tiles` tiles starting at `tile` in `buffer`
+    /// during `[start, end)`.
+    pub fn read(&mut self, module: Module, buffer: BufferId, tile: usize, tiles: usize, start: u64, end: u64) {
+        if !self.enabled {
+            return;
+        }
+        let b = buf_index(buffer);
+        let acc = Access { module, start, end };
+        for t in tile..(tile + tiles).min(self.last_write[b].len()) {
+            if let Some(w) = self.last_write[b][t] {
+                if Self::overlap(&w, &acc) {
+                    self.record(Hazard {
+                        kind: HazardKind::ReadBeforeWrite,
+                        buffer,
+                        tile: t,
+                        first: (w.module, w.start, w.end),
+                        second: (module, start, end),
+                    });
+                }
+            }
+            self.last_read[b][t] = Some(acc);
+        }
+    }
+
+    /// Record a write.
+    pub fn write(&mut self, module: Module, buffer: BufferId, tile: usize, tiles: usize, start: u64, end: u64) {
+        if !self.enabled {
+            return;
+        }
+        let b = buf_index(buffer);
+        let acc = Access { module, start, end };
+        for t in tile..(tile + tiles).min(self.last_write[b].len()) {
+            if let Some(r) = self.last_read[b][t] {
+                if Self::overlap(&r, &acc) {
+                    self.record(Hazard {
+                        kind: HazardKind::WriteDuringRead,
+                        buffer,
+                        tile: t,
+                        first: (r.module, r.start, r.end),
+                        second: (module, start, end),
+                    });
+                }
+            }
+            if let Some(w) = self.last_write[b][t] {
+                if Self::overlap(&w, &acc) {
+                    self.record(Hazard {
+                        kind: HazardKind::WriteDuringWrite,
+                        buffer,
+                        tile: t,
+                        first: (w.module, w.start, w.end),
+                        second: (module, start, end),
+                    });
+                }
+            }
+            self.last_write[b][t] = Some(acc);
+        }
+    }
+
+    /// Detected hazards, in detection order.
+    pub fn hazards(&self) -> &[Hazard] {
+        &self.hazards
+    }
+}

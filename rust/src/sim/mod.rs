@@ -1,0 +1,36 @@
+//! Cycle-approximate, functionally bit-exact behavioral simulator of the
+//! VTA hardware (§2, Figs 2–9).
+//!
+//! Four modules — `fetch`, `load`, `compute`, `store` — execute a linear
+//! CISC instruction stream as a dataflow pipeline synchronized by
+//! dependence-token FIFOs (§2.3). The simulator is a discrete-event
+//! model at CISC-instruction granularity:
+//!
+//! * **Functional semantics** are exact: int8 x int8 → int32 GEMM tiles,
+//!   tensor-ALU ops, 2D strided DMA with on-the-fly padding.
+//! * **Timing** follows the micro-architecture: one GEMM micro-op per
+//!   cycle (Fig 7), tensor-ALU initiation interval ≥ 2 (§2.5), a shared
+//!   DRAM port with fixed latency + occupancy (§2.6), finite command
+//!   queues with fetch back-pressure (§2.4), and dependence tokens that
+//!   gate module start times (Fig 6).
+//!
+//! A [`hazard::HazardTracker`] can flag RAW/WAR races in streams whose
+//! dependence flags were deliberately omitted — reproducing the Fig 5
+//! erroneous-execution scenarios as a checkable property.
+
+mod compute;
+mod dma;
+mod dram;
+mod engine;
+mod error;
+mod hazard;
+mod stats;
+
+pub use dram::Dram;
+pub use engine::{ExecMode, Simulator};
+pub use error::SimError;
+pub use hazard::{Hazard, HazardKind, Module as HazardModule};
+pub use stats::SimStats;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,90 @@
+//! Simulation statistics: the raw material for the paper's roofline
+//! (Fig 15) and utilization claims.
+
+/// Aggregate counters produced by one simulator run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Total simulated cycles (time of the FINISH instruction retiring).
+    pub total_cycles: u64,
+    /// Cycles the GEMM core spent executing micro-ops.
+    pub gemm_busy_cycles: u64,
+    /// Cycles the tensor ALU spent executing micro-ops.
+    pub alu_busy_cycles: u64,
+    /// Cycles the load module's DMA was occupied.
+    pub load_busy_cycles: u64,
+    /// Cycles the store module's DMA was occupied.
+    pub store_busy_cycles: u64,
+    /// Cycles the shared DRAM port was occupied (all masters).
+    pub dram_busy_cycles: u64,
+    /// Cycles the fetch module stalled on a full command queue.
+    pub fetch_stall_cycles: u64,
+    /// Instructions executed, by class.
+    pub insn_load: u64,
+    pub insn_store: u64,
+    pub insn_gemm: u64,
+    pub insn_alu: u64,
+    /// GEMM micro-ops executed (1 tile-matmul each).
+    pub gemm_uops: u64,
+    /// ALU micro-ops executed (1 tile op each).
+    pub alu_uops: u64,
+    /// Bytes moved DRAM→SRAM (input + weight + acc + uop loads).
+    pub bytes_loaded: u64,
+    /// Bytes moved SRAM→DRAM (stores).
+    pub bytes_stored: u64,
+    /// Dependence tokens pushed, by queue: [l2c, c2l, c2s, s2c].
+    pub tokens_pushed: [u64; 4],
+}
+
+impl SimStats {
+    /// Multiply-accumulate operations executed by the GEMM core.
+    pub fn macs(&self, macs_per_uop: usize) -> u64 {
+        self.gemm_uops * macs_per_uop as u64
+    }
+
+    /// Fraction of total cycles the GEMM core was busy — the paper's
+    /// "peak compute utilization" metric (Fig 15: 70% → 88%).
+    pub fn compute_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.gemm_busy_cycles as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Fraction of total cycles the DRAM port was busy.
+    pub fn dram_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.dram_busy_cycles as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Total DRAM traffic in bytes.
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_loaded + self.bytes_stored
+    }
+
+    /// Merge another run's counters into this one (used by multi-layer
+    /// aggregation in the end-to-end benchmark).
+    pub fn merge(&mut self, other: &SimStats) {
+        self.total_cycles += other.total_cycles;
+        self.gemm_busy_cycles += other.gemm_busy_cycles;
+        self.alu_busy_cycles += other.alu_busy_cycles;
+        self.load_busy_cycles += other.load_busy_cycles;
+        self.store_busy_cycles += other.store_busy_cycles;
+        self.dram_busy_cycles += other.dram_busy_cycles;
+        self.fetch_stall_cycles += other.fetch_stall_cycles;
+        self.insn_load += other.insn_load;
+        self.insn_store += other.insn_store;
+        self.insn_gemm += other.insn_gemm;
+        self.insn_alu += other.insn_alu;
+        self.gemm_uops += other.gemm_uops;
+        self.alu_uops += other.alu_uops;
+        self.bytes_loaded += other.bytes_loaded;
+        self.bytes_stored += other.bytes_stored;
+        for i in 0..4 {
+            self.tokens_pushed[i] += other.tokens_pushed[i];
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic PRNG, dense tensors, and a
+//! micro statistics helper for the bench harness.
+
+mod rng;
+mod stats;
+mod tensor;
+
+pub use rng::XorShiftRng;
+pub use stats::BenchStats;
+pub use tensor::{Tensor, TensorError};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,59 @@
+//! Deterministic xorshift* PRNG (no external `rand` dependency; the
+//! whole stack must be reproducible bit-for-bit across runs so that the
+//! VTA-simulator outputs can be compared against the AOT-compiled JAX
+//! artifacts, which are generated from the same sequences in
+//! `python/compile/synth.py`).
+
+/// xorshift64* generator. The exact same algorithm is implemented on the
+/// Python side so both halves of the stack synthesize identical tensors.
+#[derive(Clone, Debug)]
+pub struct XorShiftRng {
+    state: u64,
+}
+
+impl XorShiftRng {
+    /// Seed the generator; a zero seed is remapped (xorshift cannot hold
+    /// state 0).
+    pub fn new(seed: u64) -> Self {
+        XorShiftRng { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Signed 8-bit value in `[lo, hi]` inclusive — the synthetic-weight
+    /// generator used for quantized tensors.
+    pub fn next_i8_in(&mut self, lo: i8, hi: i8) -> i8 {
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        (lo as i64 + self.next_below(span) as i64) as i8
+    }
+
+    /// Fill a buffer with int8 values in `[lo, hi]`.
+    pub fn fill_i8(&mut self, buf: &mut [i8], lo: i8, hi: i8) {
+        for v in buf.iter_mut() {
+            *v = self.next_i8_in(lo, hi);
+        }
+    }
+
+    /// Vector of int8 values in `[lo, hi]`.
+    pub fn vec_i8(&mut self, n: usize, lo: i8, hi: i8) -> Vec<i8> {
+        (0..n).map(|_| self.next_i8_in(lo, hi)).collect()
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}

@@ -1,0 +1,81 @@
+//! Tiny statistics helper backing the `harness = false` bench binaries
+//! (criterion is unavailable in the offline vendor set — see DESIGN.md §2).
+
+use std::time::{Duration, Instant};
+
+/// Collects wall-clock samples of a closure and reports robust summary
+/// statistics (median / mean / min / p95).
+#[derive(Clone, Debug, Default)]
+pub struct BenchStats {
+    samples_ns: Vec<u128>,
+}
+
+impl BenchStats {
+    /// Run `f` once for warmup, then `iters` timed iterations.
+    pub fn measure<F: FnMut()>(iters: usize, mut f: F) -> Self {
+        f(); // warmup
+        let mut samples_ns = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos());
+        }
+        let mut s = BenchStats { samples_ns };
+        s.samples_ns.sort_unstable();
+        s
+    }
+
+    /// Record a pre-measured sample (nanoseconds).
+    pub fn push_ns(&mut self, ns: u128) {
+        self.samples_ns.push(ns);
+        self.samples_ns.sort_unstable();
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    /// Median sample.
+    pub fn median(&self) -> Duration {
+        if self.samples_ns.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.samples_ns[self.samples_ns.len() / 2] as u64)
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> Duration {
+        if self.samples_ns.is_empty() {
+            return Duration::ZERO;
+        }
+        let total: u128 = self.samples_ns.iter().sum();
+        Duration::from_nanos((total / self.samples_ns.len() as u128) as u64)
+    }
+
+    /// Fastest sample.
+    pub fn min(&self) -> Duration {
+        self.samples_ns.first().map(|&n| Duration::from_nanos(n as u64)).unwrap_or_default()
+    }
+
+    /// 95th-percentile sample.
+    pub fn p95(&self) -> Duration {
+        if self.samples_ns.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((self.samples_ns.len() as f64) * 0.95).ceil() as usize - 1;
+        Duration::from_nanos(self.samples_ns[idx.min(self.samples_ns.len() - 1)] as u64)
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "median {:>10.3?}  mean {:>10.3?}  min {:>10.3?}  p95 {:>10.3?}  (n={})",
+            self.median(),
+            self.mean(),
+            self.min(),
+            self.p95(),
+            self.count()
+        )
+    }
+}

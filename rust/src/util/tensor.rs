@@ -1,0 +1,114 @@
+//! A minimal dense row-major tensor used across the stack for host-side
+//! data (DRAM images, reference computations, layout packing).
+
+use thiserror::Error;
+
+/// Errors from tensor construction / reshaping.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum TensorError {
+    #[error("shape {shape:?} implies {expected} elements, data has {actual}")]
+    ShapeMismatch { shape: Vec<usize>, expected: usize, actual: usize },
+    #[error("index {index:?} out of bounds for shape {shape:?}")]
+    OutOfBounds { index: Vec<usize>, shape: Vec<usize> },
+}
+
+/// Dense row-major tensor over `T`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled (default-filled) tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Construct from existing data; checks the element count.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if data.len() != expected {
+            return Err(TensorError::ShapeMismatch {
+                shape: shape.to_vec(),
+                expected,
+                actual: data.len(),
+            });
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat immutable view.
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Flat mutable view.
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Row-major linear offset of a multi-index.
+    pub fn offset(&self, index: &[usize]) -> Result<usize, TensorError> {
+        if index.len() != self.shape.len()
+            || index.iter().zip(&self.shape).any(|(i, s)| i >= s)
+        {
+            return Err(TensorError::OutOfBounds {
+                index: index.to_vec(),
+                shape: self.shape.clone(),
+            });
+        }
+        let mut off = 0;
+        for (i, s) in index.iter().zip(&self.shape) {
+            off = off * s + i;
+        }
+        Ok(off)
+    }
+
+    /// Element read.
+    pub fn at(&self, index: &[usize]) -> Result<T, TensorError> {
+        Ok(self.data[self.offset(index)?])
+    }
+
+    /// Element write.
+    pub fn set(&mut self, index: &[usize], v: T) -> Result<(), TensorError> {
+        let off = self.offset(index)?;
+        self.data[off] = v;
+        Ok(())
+    }
+
+    /// Reshape without moving data (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != self.data.len() {
+            return Err(TensorError::ShapeMismatch {
+                shape: shape.to_vec(),
+                expected,
+                actual: self.data.len(),
+            });
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+}

@@ -1,0 +1,82 @@
+use super::*;
+
+#[test]
+fn rng_is_deterministic() {
+    let mut a = XorShiftRng::new(42);
+    let mut b = XorShiftRng::new(42);
+    for _ in 0..100 {
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}
+
+#[test]
+fn rng_zero_seed_is_remapped() {
+    let mut r = XorShiftRng::new(0);
+    assert_ne!(r.next_u64(), 0);
+}
+
+#[test]
+fn rng_i8_range_is_respected() {
+    let mut r = XorShiftRng::new(7);
+    for _ in 0..10_000 {
+        let v = r.next_i8_in(-3, 5);
+        assert!((-3..=5).contains(&v), "out of range: {v}");
+    }
+    // full-range must not overflow
+    for _ in 0..1000 {
+        let _ = r.next_i8_in(i8::MIN, i8::MAX);
+    }
+}
+
+#[test]
+fn rng_f64_in_unit_interval() {
+    let mut r = XorShiftRng::new(3);
+    for _ in 0..1000 {
+        let v = r.next_f64();
+        assert!((0.0..1.0).contains(&v));
+    }
+}
+
+#[test]
+fn tensor_offsets_are_row_major() {
+    let t: Tensor<i32> = Tensor::zeros(&[2, 3, 4]);
+    assert_eq!(t.offset(&[0, 0, 0]).unwrap(), 0);
+    assert_eq!(t.offset(&[0, 0, 3]).unwrap(), 3);
+    assert_eq!(t.offset(&[0, 1, 0]).unwrap(), 4);
+    assert_eq!(t.offset(&[1, 2, 3]).unwrap(), 23);
+}
+
+#[test]
+fn tensor_bounds_checked() {
+    let t: Tensor<i32> = Tensor::zeros(&[2, 3]);
+    assert!(t.offset(&[2, 0]).is_err());
+    assert!(t.offset(&[0, 3]).is_err());
+    assert!(t.offset(&[0]).is_err());
+}
+
+#[test]
+fn tensor_from_vec_checks_count() {
+    assert!(Tensor::from_vec(&[2, 2], vec![1i8, 2, 3]).is_err());
+    let t = Tensor::from_vec(&[2, 2], vec![1i8, 2, 3, 4]).unwrap();
+    assert_eq!(t.at(&[1, 0]).unwrap(), 3);
+}
+
+#[test]
+fn tensor_reshape() {
+    let t = Tensor::from_vec(&[2, 6], (0..12i32).collect()).unwrap();
+    let r = t.reshape(&[3, 4]).unwrap();
+    assert_eq!(r.at(&[2, 3]).unwrap(), 11);
+    assert!(r.reshape(&[5, 5]).is_err());
+}
+
+#[test]
+fn bench_stats_basic() {
+    let mut s = BenchStats::default();
+    for ns in [10u128, 20, 30, 40, 50] {
+        s.push_ns(ns);
+    }
+    assert_eq!(s.count(), 5);
+    assert_eq!(s.median().as_nanos(), 30);
+    assert_eq!(s.min().as_nanos(), 10);
+    assert_eq!(s.mean().as_nanos(), 30);
+}

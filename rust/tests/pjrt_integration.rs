@@ -1,0 +1,244 @@
+//! Cross-layer integration tests: the JAX-lowered artifacts (L1 Pallas
+//! kernels + L2 model operators), executed through the Rust PJRT
+//! runtime, must agree bit-exactly with the Rust-native stack (host
+//! references and the VTA behavioral simulator).
+//!
+//! These tests need `make artifacts`; they skip (with a notice) when
+//! the artifact directory is missing so plain `cargo test` stays green
+//! in a fresh checkout.
+
+use vta::arch::VtaConfig;
+use vta::compiler::plan::{MatmulParams, Requant};
+use vta::compiler::reference::{conv2d_ref, matmul_ref};
+use vta::compiler::{
+    lower_conv2d, lower_matmul, pack_activations, pack_matrix_a, pack_matrix_w, pack_weights,
+    unpack_matrix_c, unpack_outputs, Conv2dParams,
+};
+use vta::exec::PjrtCache;
+use vta::graph::resnet::LAYER_SHIFT;
+use vta::runtime::VtaRuntime;
+use vta::util::{Tensor, XorShiftRng};
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(ARTIFACTS).join(".stamp").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn rand_t(seed: u64, shape: &[usize], lo: i8, hi: i8) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(shape, rng.vec_i8(shape.iter().product(), lo, hi)).unwrap()
+}
+
+/// FNV-1a 64-bit, mirror of `python/compile/synth.py::fnv1a64`.
+fn fnv1a64(data: &[i8]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &b in data {
+        h ^= b as u8 as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// L1: the Pallas GEMM kernel artifact == Rust host reference AND the
+/// VTA simulator's matmul path (after the same requant epilogue).
+#[test]
+fn pallas_gemm_artifact_matches_host_and_simulator() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cache = PjrtCache::new(ARTIFACTS).unwrap();
+    let a = rand_t(1, &[64, 64], -16, 16);
+    let w = rand_t(2, &[64, 64], -16, 16);
+
+    // The artifact returns the raw int32 accumulator.
+    let acc = cache.run_i32("gemm_pallas_64_64_64", &[&a, &w]).unwrap().remove(0);
+
+    // Host int32 reference.
+    let mut expect = vec![0i32; 64 * 64];
+    for m in 0..64 {
+        for n in 0..64 {
+            let mut s = 0i32;
+            for k in 0..64 {
+                s += a.data()[m * 64 + k] as i32 * w.data()[n * 64 + k] as i32;
+            }
+            expect[m * 64 + n] = s;
+        }
+    }
+    assert_eq!(acc.data(), &expect[..], "pallas GEMM accumulator vs host i32 reference");
+
+    // Simulator path: same operands through lower_matmul; its int8
+    // output must equal the requantized pallas accumulator.
+    let rq = Requant { shift: 6, relu: false };
+    let p = MatmulParams { m: 64, k: 64, n: 64, requant: rq };
+    let cfg = VtaConfig::pynq();
+    let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+    let got = lower_matmul(&mut rt, &p, &pack_matrix_a(&cfg, &a), &pack_matrix_w(&cfg, &w), 2)
+        .unwrap();
+    let got = unpack_matrix_c(&cfg, &got.out, 64, 64);
+    assert_eq!(got, matmul_ref(&p, &a, &w), "simulator vs host reference");
+    let requant_acc: Vec<i8> = acc.data().iter().map(|&v| rq.apply(v)).collect();
+    assert_eq!(got.data(), &requant_acc[..], "simulator vs requantized pallas accumulator");
+}
+
+/// L1+L2: the Pallas-backed conv artifact == the Rust host reference ==
+/// the VTA simulator, bit-exactly, on the C2-geometry crop.
+#[test]
+fn pallas_conv_artifact_matches_simulator() {
+    if !artifacts_available() {
+        return;
+    }
+    let p = Conv2dParams {
+        h: 14,
+        w: 14,
+        ic: 64,
+        oc: 64,
+        k: 3,
+        s: 1,
+        requant: Requant { shift: LAYER_SHIFT, relu: false },
+    };
+    let x = rand_t(3, &[1, 64, 14, 14], -16, 16);
+    let w = rand_t(4, &[64, 64, 3, 3], -4, 4);
+
+    // PJRT path (JAX im2col + Pallas GEMM + Pallas requant).
+    let mut cache = PjrtCache::new(ARTIFACTS).unwrap();
+    let pjrt_out = cache.run_i8("conv_pallas_14_64_64_3_1", &[&x, &w]).unwrap().remove(0);
+
+    // Host reference.
+    let host = conv2d_ref(&p, &x, &w);
+    assert_eq!(pjrt_out, host, "pallas artifact vs host reference");
+
+    // VTA simulator through the full compiler/runtime stack.
+    let cfg = VtaConfig::pynq();
+    let mut rt = VtaRuntime::new(&cfg, 32 << 20);
+    let sim =
+        lower_conv2d(&mut rt, &p, &pack_activations(&cfg, &x), &pack_weights(&cfg, &w), 2)
+            .unwrap();
+    let sim_out = unpack_outputs(&cfg, &sim.out, 1, 64, 14, 14);
+    assert_eq!(sim_out, host, "simulator vs host reference");
+}
+
+/// L2 per-operator artifacts == the Rust-native CPU kernels.
+#[test]
+fn cpu_op_artifacts_match_native_ops() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cache = PjrtCache::new(ARTIFACTS).unwrap();
+
+    // conv C1 (asymmetric SAME padding + fused relu).
+    let p = Conv2dParams {
+        h: 224,
+        w: 224,
+        ic: 3,
+        oc: 64,
+        k: 7,
+        s: 2,
+        requant: Requant { shift: LAYER_SHIFT, relu: true },
+    };
+    let x = rand_t(10, &[1, 3, 224, 224], -16, 16);
+    let w = rand_t(11, &[64, 3, 7, 7], -4, 4);
+    let got = cache.run_i8("conv_224_3_64_7_2_1", &[&x, &w]).unwrap().remove(0);
+    assert_eq!(got, conv2d_ref(&p, &x, &w), "conv C1 artifact");
+
+    // maxpool.
+    let x = rand_t(12, &[1, 64, 112, 112], -64, 64);
+    let got = cache.run_i8("maxpool_1x64x56x56_3_2", &[&x]).unwrap().remove(0);
+    assert_eq!(got, vta::exec::maxpool_i8(&x, 3, 2, 1), "maxpool artifact");
+
+    // residual add (saturating).
+    let a = rand_t(13, &[1, 64, 56, 56], -128, 127);
+    let b = rand_t(14, &[1, 64, 56, 56], -128, 127);
+    let got = cache.run_i8("add_1x64x56x56", &[&a, &b]).unwrap().remove(0);
+    assert_eq!(got, vta::exec::add_i8(&a, &b), "add artifact");
+
+    // global average pool (truncating division on negatives!).
+    let x = rand_t(15, &[1, 512, 7, 7], -100, 100);
+    let got = cache.run_i8("gap_1x512", &[&x]).unwrap().remove(0);
+    assert_eq!(got, vta::exec::global_avg_pool_i8(&x), "gap artifact");
+
+    // dense classifier.
+    let p = MatmulParams {
+        m: 1,
+        k: 512,
+        n: 1000,
+        requant: Requant { shift: LAYER_SHIFT, relu: false },
+    };
+    let x = rand_t(16, &[1, 512], -64, 64);
+    let w = rand_t(17, &[1000, 512], -4, 4);
+    let got = cache.run_i8("dense_1_512_1000", &[&x, &w]).unwrap().remove(0);
+    assert_eq!(got, vta::exec::dense_i8(&p, &x, &w), "dense artifact");
+}
+
+/// Synthetic weights: the Rust generators reproduce the Python-side
+/// FNV-1a digests recorded at artifact-build time.
+#[test]
+fn synthetic_weights_match_python_digests() {
+    if !artifacts_available() {
+        return;
+    }
+    let digest_path = std::path::Path::new(ARTIFACTS).join("weights_digest.txt");
+    let text = std::fs::read_to_string(digest_path).unwrap();
+    let g = vta::graph::resnet::resnet18(1, 42).unwrap();
+    let mut checked = 0;
+    for line in text.lines() {
+        let (name, hex) = line.split_once(' ').unwrap();
+        let expect = u64::from_str_radix(hex, 16).unwrap();
+        let data: Vec<i8> = if name == "input" {
+            vta::graph::resnet::synth_input(7, 1, 3, 224, 224).into_vec()
+        } else {
+            let node = g
+                .nodes
+                .iter()
+                .find(|n| n.name.trim_end_matches("+relu") == name)
+                .unwrap_or_else(|| panic!("no node {name}"));
+            g.weights(node.id).unwrap().clone().into_vec()
+        };
+        assert_eq!(fnv1a64(&data), expect, "digest mismatch for {name}");
+        checked += 1;
+    }
+    assert_eq!(checked, 23, "expected input + 22 weight digests");
+}
+
+/// The full CPU-only model artifact == the Rust-native executor on the
+/// same synthetic weights and input (the golden cross-language check).
+/// Slow in debug builds — run with `cargo test --release` or `make test`.
+#[test]
+fn resnet18_cpu_artifact_matches_native_executor() {
+    if !artifacts_available() {
+        return;
+    }
+    if cfg!(debug_assertions) {
+        eprintln!("SKIP: full-model equivalence runs in release only (cargo test --release)");
+        return;
+    }
+    use vta::exec::{CpuBackend, Executor};
+    use vta::graph::{fuse, partition, resnet, PartitionPolicy};
+
+    let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap());
+    partition(&mut g, &PartitionPolicy::cpu_only());
+    let input = resnet::synth_input(7, 1, 3, 224, 224);
+
+    // Native CPU-only execution.
+    let cfg = VtaConfig::pynq();
+    let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+    let native = ex.run(&g, &input).unwrap().output;
+
+    // PJRT full-model artifact: input + weights in WEIGHT_ORDER (the
+    // graph's parametric-node creation order).
+    let mut inputs: Vec<&Tensor<i8>> = vec![&input];
+    let weight_refs: Vec<&Tensor<i8>> = g
+        .nodes
+        .iter()
+        .filter_map(|n| g.weights(n.id))
+        .collect();
+    inputs.extend(weight_refs);
+    let mut cache = PjrtCache::new(ARTIFACTS).unwrap();
+    let pjrt_out = cache.run_i8("resnet18_cpu", &inputs).unwrap().remove(0);
+
+    assert_eq!(pjrt_out, native, "cross-language ResNet-18 mismatch");
+}
