@@ -13,11 +13,22 @@
 //! * weight SRAM: group-resident, same order as DRAM within the group
 //! * acc/out SRAM: `ctx_off + (oc_i * oh_t + oh) * ow_t + ow`
 //!   (oc-major so each `(oc_i)` plane stores as one 2D STORE)
+//!
+//! The emission core ([`emit_conv2d`]) is target-agnostic: it writes
+//! into any [`CommandContext`] and invokes a caller-supplied *boundary*
+//! action wherever the stream must be finalized (per group when the
+//! plan drains between groups, once at the end otherwise). The two
+//! callers are [`lower_conv2d`] (execute immediately on the runtime's
+//! device — the one-shot path) and
+//! [`crate::compiler::compile_conv2d`] (seal into replayable streams —
+//! the plan-cache path).
 
 use super::plan::{plan_conv2d, Conv2dParams, Conv2dPlan, PlanError};
 use super::virtual_thread::StripPipeline;
 use crate::isa::{AluOpcode, AluUop, BufferId, GemmUop, Uop};
-use crate::runtime::{RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime};
+use crate::runtime::{
+    CommandContext, RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime,
+};
 use crate::sim::SimStats;
 use std::collections::HashMap;
 use thiserror::Error;
@@ -67,7 +78,7 @@ impl KernelSet {
 
     fn get_or_build(
         &mut self,
-        rt: &mut VtaRuntime,
+        ctx: &mut CommandContext,
         key: KernelKey,
         build: impl FnOnce() -> Result<UopKernel, RuntimeError>,
     ) -> Result<(usize, UopKernel), CompileError> {
@@ -75,51 +86,46 @@ impl KernelSet {
             return Ok((*id, k.clone()));
         }
         let kernel = build()?;
-        let id = rt.ctx.register_kernel(&kernel)?;
+        let id = ctx.register_kernel(&kernel)?;
         self.kernels.insert(key, (id, kernel.clone()));
         Ok((id, kernel))
     }
 }
 
-/// Lower, execute, and read back one conv2d layer.
-///
-/// `inp_packed` / `wgt_packed` are the tiled DRAM images produced by
-/// [`super::layout::pack_activations`] / [`super::layout::pack_weights`].
-/// `virtual_threads` ∈ {1, 2} toggles latency hiding.
-pub fn lower_conv2d(
-    rt: &mut VtaRuntime,
-    p: &Conv2dParams,
-    inp_packed: &[i8],
-    wgt_packed: &[i8],
-    virtual_threads: usize,
-) -> Result<Conv2dOutput, CompileError> {
-    let cfg = rt.ctx.config().clone();
-    let plan = plan_conv2d(&cfg, p, virtual_threads)?;
-    let k = p.k;
+/// Tile-granular DRAM base addresses of a conv2d's three data images.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ConvDramBase {
+    pub inp: u32,
+    pub wgt: u32,
+    pub out: u32,
+}
 
-    // DRAM images (aligned to their tile sizes: dram_base fields are
-    // tile-granular).
-    let inp_tile_bytes = cfg.inp_tile_bytes();
-    let wgt_tile_bytes = cfg.wgt_tile_bytes();
-    let out_tile_bytes = cfg.out_tile_bytes();
-    let inp_buf = rt.alloc_aligned(inp_packed.len(), inp_tile_bytes)?;
-    let wgt_buf = rt.alloc_aligned(wgt_packed.len(), wgt_tile_bytes)?;
-    let out_tiles = plan.ocb * plan.oh * plan.ow;
-    let out_buf = rt.alloc_aligned(out_tiles * out_tile_bytes, out_tile_bytes)?;
-    rt.copy_in(&inp_buf, bytemuck_i8(inp_packed))?;
-    rt.copy_in(&wgt_buf, bytemuck_i8(wgt_packed))?;
-    let inp_dram0 = (inp_buf.addr / inp_tile_bytes) as u32;
-    let wgt_dram0 = (wgt_buf.addr / wgt_tile_bytes) as u32;
-    let out_dram0 = (out_buf.addr / out_tile_bytes) as u32;
+/// Emit the full conv2d instruction stream for `plan` into `ctx`,
+/// calling `boundary` wherever the stream must be finalized: after
+/// every group when the plan drains between groups, once at the very
+/// end otherwise. The boundary action either executes-and-merges
+/// (one-shot lowering) or seals a replayable stream (plan compilation).
+pub(crate) fn emit_conv2d<F>(
+    ctx: &mut CommandContext,
+    p: &Conv2dParams,
+    plan: &Conv2dPlan,
+    base: ConvDramBase,
+    mut boundary: F,
+) -> Result<(), CompileError>
+where
+    F: FnMut(&mut CommandContext) -> Result<(), CompileError>,
+{
+    let cfg = ctx.config().clone();
+    let virtual_threads = plan.contexts;
+    let k = p.k;
 
     // Context strides use the ISA-addressable depth (see plan.rs).
     let inp_ctx_stride = cfg.inp_depth().min(1 << 11) / 2;
     let acc_ctx_stride = cfg.acc_depth().min(1 << 11) / 2;
+    let wgt_ctx_stride = cfg.wgt_depth().min(1 << 10) / 2;
 
     let mut kernels = KernelSet::new();
-    let mut stats = SimStats::default();
     let span = |t: usize| (t - 1) * p.s + k;
-    let wgt_ctx_stride = cfg.wgt_depth().min(1 << 10) / 2;
 
     // One stream across all groups: a group's weights are loaded as the
     // *first load of its first strip*, so the regular strip WAR token
@@ -135,7 +141,7 @@ pub fn lower_conv2d(
         let wgt_tiles = oc_cur * plan.icb * k * k;
         let mut wgt_load = Some(WgtLoad {
             sram_base: (wgt_ctx * wgt_ctx_stride) as u32,
-            dram_tile: wgt_dram0 + (oc0 * plan.icb * k * k) as u32,
+            dram_tile: base.wgt + (oc0 * plan.icb * k * k) as u32,
             tiles: wgt_tiles as u16,
         });
 
@@ -146,11 +152,11 @@ pub fn lower_conv2d(
             while ow0 < plan.ow {
                 let ow_cur = plan.ow_t.min(plan.ow - ow0);
                 emit_strip(
-                    rt,
+                    ctx,
                     &mut kernels,
                     &mut pipe,
                     p,
-                    &plan,
+                    plan,
                     StripGeom {
                         g,
                         oc0,
@@ -164,8 +170,8 @@ pub fn lower_conv2d(
                     },
                     wgt_load.take(),
                     (wgt_ctx * wgt_ctx_stride) as u16,
-                    inp_dram0,
-                    out_dram0,
+                    base.inp,
+                    base.out,
                     inp_ctx_stride,
                     acc_ctx_stride,
                 )?;
@@ -175,12 +181,58 @@ pub fn lower_conv2d(
         }
 
         if plan.drain_groups {
-            stats.merge(&rt.synchronize()?);
+            boundary(ctx)?;
             pipe = StripPipeline::new(virtual_threads);
         }
     }
     if !plan.drain_groups {
-        stats.merge(&rt.synchronize()?);
+        boundary(ctx)?;
+    }
+    Ok(())
+}
+
+/// Lower, execute, and read back one conv2d layer — the one-shot path
+/// (re-plans, re-emits, and re-simulates on every call; the serving
+/// layer's plan cache uses [`crate::compiler::compile_conv2d`] to pay
+/// the lowering cost once instead).
+///
+/// `inp_packed` / `wgt_packed` are the tiled DRAM images produced by
+/// [`super::layout::pack_activations`] / [`super::layout::pack_weights`].
+/// `virtual_threads` ∈ {1, 2} toggles latency hiding.
+pub fn lower_conv2d(
+    rt: &mut VtaRuntime,
+    p: &Conv2dParams,
+    inp_packed: &[i8],
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+) -> Result<Conv2dOutput, CompileError> {
+    let cfg = rt.ctx.config().clone();
+    let plan = plan_conv2d(&cfg, p, virtual_threads)?;
+
+    // DRAM images (aligned to their tile sizes: dram_base fields are
+    // tile-granular).
+    let inp_tile_bytes = cfg.inp_tile_bytes();
+    let wgt_tile_bytes = cfg.wgt_tile_bytes();
+    let out_tile_bytes = cfg.out_tile_bytes();
+    let inp_buf = rt.alloc_aligned(inp_packed.len(), inp_tile_bytes)?;
+    let wgt_buf = rt.alloc_aligned(wgt_packed.len(), wgt_tile_bytes)?;
+    let out_tiles = plan.ocb * plan.oh * plan.ow;
+    let out_buf = rt.alloc_aligned(out_tiles * out_tile_bytes, out_tile_bytes)?;
+    rt.copy_in(&inp_buf, bytes_of_i8(inp_packed))?;
+    rt.copy_in(&wgt_buf, bytes_of_i8(wgt_packed))?;
+    let base = ConvDramBase {
+        inp: (inp_buf.addr / inp_tile_bytes) as u32,
+        wgt: (wgt_buf.addr / wgt_tile_bytes) as u32,
+        out: (out_buf.addr / out_tile_bytes) as u32,
+    };
+
+    let mut stats = SimStats::default();
+    {
+        let VtaRuntime { ctx, device, .. } = rt;
+        emit_conv2d(ctx, p, &plan, base, |ctx| {
+            stats.merge(&ctx.synchronize(&mut *device)?);
+            Ok(())
+        })?;
     }
 
     let out_bytes = rt.copy_out(&out_buf)?;
@@ -213,7 +265,7 @@ struct WgtLoad {
 
 #[allow(clippy::too_many_arguments)]
 fn emit_strip(
-    rt: &mut VtaRuntime,
+    ctx: &mut CommandContext,
     kernels: &mut KernelSet,
     pipe: &mut StripPipeline,
     p: &Conv2dParams,
@@ -234,12 +286,12 @@ fn emit_strip(
     let plane = geom.ih_span * geom.iw_tiles;
 
     // ---- loads --------------------------------------------------------
-    pipe.loads_prologue(&mut rt.ctx, tok)?;
+    pipe.loads_prologue(ctx, tok)?;
     if let Some(wl) = wgt_load {
         // First load of the group's first strip: the strip's WAR pop
         // (attached to this instruction) also fences the weight-context
         // reuse, by compute-FIFO monotonicity.
-        rt.ctx.load_buffer_2d(BufferId::Wgt, wl.sram_base, wl.dram_tile, 1, wl.tiles, wl.tiles, [0; 4]);
+        ctx.load_buffer_2d(BufferId::Wgt, wl.sram_base, wl.dram_tile, 1, wl.tiles, wl.tiles, [0; 4]);
     }
     let ih_lo = geom.oh0 as isize * p.s as isize - plan.pad as isize;
     let iw_lo = geom.ow0 as isize * p.s as isize - plan.pad as isize;
@@ -248,9 +300,9 @@ fn emit_strip(
     let vx0 = iw_lo.max(0) as usize;
     let vx1 = ((iw_lo + geom.iw_tiles as isize).min(p.w as isize)) as usize;
     let pads = [
-        (vy0 as isize - ih_lo) as u8,                         // y top
+        (vy0 as isize - ih_lo) as u8,                           // y top
         ((ih_lo + geom.ih_span as isize) - vy1 as isize) as u8, // y bottom
-        (vx0 as isize - iw_lo) as u8,                         // x left
+        (vx0 as isize - iw_lo) as u8,                           // x left
         ((iw_lo + geom.iw_tiles as isize) - vx1 as isize) as u8, // x right
     ];
     // When the strip needs no spatial padding and spans full contiguous
@@ -262,7 +314,7 @@ fn emit_strip(
         && plane == (vy1 - vy0) * geom.iw_tiles
         && (vy1 - vy0) * p.w <= u16::MAX as usize;
     if coalesce {
-        rt.ctx.load_buffer_2d(
+        ctx.load_buffer_2d(
             BufferId::Inp,
             inp_off as u32,
             inp_dram0 + (vy0 * p.w) as u32,
@@ -273,7 +325,7 @@ fn emit_strip(
         );
     } else {
         for ic_b in 0..plan.icb {
-            rt.ctx.load_buffer_2d(
+            ctx.load_buffer_2d(
                 BufferId::Inp,
                 (inp_off + ic_b * plane) as u32,
                 inp_dram0 + ((ic_b * p.h + vy0) * p.w + vx0) as u32,
@@ -284,10 +336,10 @@ fn emit_strip(
             );
         }
     }
-    pipe.loads_epilogue(&mut rt.ctx)?;
+    pipe.loads_epilogue(ctx)?;
 
     // ---- compute ------------------------------------------------------
-    pipe.compute_prologue(&mut rt.ctx, tok)?;
+    pipe.compute_prologue(ctx, tok)?;
 
     let kkey = |kind: u8| KernelKey {
         kind,
@@ -299,7 +351,7 @@ fn emit_strip(
     };
 
     // Reset kernel: zero every acc tile of the strip.
-    let (rid, rk) = kernels.get_or_build(rt, kkey(1), || {
+    let (rid, rk) = kernels.get_or_build(ctx, kkey(1), || {
         let mut b = UopKernelBuilder::new();
         b.loop_begin(geom.oh_cur as u16, geom.ow_cur as u16, 0, 0).map_err(RuntimeError::Uop)?;
         b.loop_begin(geom.ow_cur as u16, 1, 0, 0).map_err(RuntimeError::Uop)?;
@@ -315,12 +367,12 @@ fn emit_strip(
         b.loop_end().map_err(RuntimeError::Uop)?;
         b.finish().map_err(RuntimeError::Uop)
     })?;
-    rt.ctx.push_gemm(rid, &rk, true)?;
+    ctx.push_gemm(rid, &rk, true)?;
 
     // Main kernel: the tensorized reduction over (oc_i, ic_b, kh, kw).
     let icb = plan.icb;
     let iw_tiles = geom.iw_tiles;
-    let (mid, mk) = kernels.get_or_build(rt, kkey(0), || {
+    let (mid, mk) = kernels.get_or_build(ctx, kkey(0), || {
         let mut b = UopKernelBuilder::new();
         b.loop_begin(
             geom.oh_cur as u16,
@@ -348,13 +400,13 @@ fn emit_strip(
         b.loop_end().map_err(RuntimeError::Uop)?;
         b.finish().map_err(RuntimeError::Uop)
     })?;
-    rt.ctx.push_gemm(mid, &mk, false)?;
-    pipe.gemm_epilogue(&mut rt.ctx)?;
+    ctx.push_gemm(mid, &mk, false)?;
+    pipe.gemm_epilogue(ctx)?;
 
     // Requantize on the tensor ALU: SHR, clip low (ReLU or -128), clip
     // high at 127; the final ALU write narrows into the out buffer.
     let n_acc = geom.oc_cur * geom.oh_cur * geom.ow_cur;
-    let (aid, ak) = kernels.get_or_build(rt, kkey(2), || {
+    let (aid, ak) = kernels.get_or_build(ctx, kkey(2), || {
         let mut b = UopKernelBuilder::new();
         b.loop_begin(n_acc as u16, 1, 1, 0).map_err(RuntimeError::Uop)?;
         b.push(Uop::Alu(AluUop { dst_idx: acc_off as u16, src_idx: acc_off as u16 }))
@@ -364,12 +416,12 @@ fn emit_strip(
     })?;
     let rq = p.requant;
     let op = if rq.relu { AluOpcode::RqRelu } else { AluOpcode::Rq };
-    rt.ctx.push_alu(aid, &ak, op, true, rq.shift as i16)?;
-    pipe.alu_epilogue(&mut rt.ctx)?;
+    ctx.push_alu(aid, &ak, op, true, rq.shift as i16)?;
+    pipe.alu_epilogue(ctx)?;
 
     // ---- stores -------------------------------------------------------
     for oc_i in 0..geom.oc_cur {
-        rt.ctx.store_buffer_2d(
+        ctx.store_buffer_2d(
             (acc_off + oc_i * geom.oh_cur * geom.ow_cur) as u32,
             out_dram0
                 + (((geom.oc0 + oc_i) * plan.oh + geom.oh0) * plan.ow + geom.ow0) as u32,
@@ -378,11 +430,12 @@ fn emit_strip(
             plan.ow as u16,
         );
     }
-    pipe.stores_epilogue(&mut rt.ctx)?;
+    pipe.stores_epilogue(ctx)?;
     let _ = geom.g;
     Ok(())
 }
 
-fn bytemuck_i8(v: &[i8]) -> &[u8] {
+/// Reinterpret an i8 slice as bytes (DRAM copies).
+pub(crate) fn bytes_of_i8(v: &[i8]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
 }

@@ -13,7 +13,13 @@
 //! * **Latency hiding** (§4.3): [`virtual_thread`] interleaves the
 //!   lowered stream across SRAM contexts and inserts the explicit
 //!   RAW/WAR dependence push/pops of Fig 14.
+//!
+//! On top of those, [`compiled`] splits lowering into a compile-once
+//! phase (plan + pack weights + record replayable instruction streams)
+//! and a run-many phase — the substrate of the serving layer's plan
+//! cache ([`crate::exec::serve`]).
 
+pub mod compiled;
 pub mod conv2d;
 pub mod layout;
 pub mod matmul;
@@ -21,6 +27,7 @@ pub mod plan;
 pub mod reference;
 pub mod virtual_thread;
 
+pub use compiled::{compile_conv2d, CompiledConv2d, CompiledNode};
 pub use conv2d::{lower_conv2d, CompileError, Conv2dOutput};
 pub use layout::{
     pack_activations, pack_matrix_a, pack_matrix_w, pack_weights, unpack_activations,

@@ -24,7 +24,7 @@ pub enum PlanError {
 
 /// Requantization applied by the tensor ALU after accumulation
 /// (shift-based fixed-point, clipped into the int8 output range).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Requant {
     /// Arithmetic right shift applied to the int32 accumulator.
     pub shift: u8,
@@ -43,7 +43,7 @@ impl Requant {
 }
 
 /// A 2D convolution workload (Table 1 row).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Conv2dParams {
     /// Input spatial size.
     pub h: usize,
@@ -301,7 +301,7 @@ fn check_width(what: &'static str, v: usize, limit: usize) -> Result<(), PlanErr
 }
 
 /// A dense matmul workload: `C[M,N] = A[M,K] x W[N,K]^T`, requantized.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct MatmulParams {
     pub m: usize,
     pub k: usize,

@@ -241,6 +241,111 @@ fn virtual_threading_is_semantically_transparent_and_faster() {
 }
 
 // ---------------------------------------------------------------------
+// Compile-once / run-many (the plan-cache substrate).
+// ---------------------------------------------------------------------
+
+/// A compiled conv2d replays correctly across many inputs: every
+/// execution matches the host reference, and the simulated timing is
+/// identical run to run (the streams are deterministic).
+#[test]
+fn compiled_conv_replays_across_inputs() {
+    let cfg = VtaConfig::pynq();
+    let p = Conv2dParams { h: 10, w: 10, ic: 16, oc: 32, k: 3, s: 1, requant: rq() };
+    let mut rng = XorShiftRng::new(31);
+    let wgt = random_nchw(&mut rng, &[p.oc, p.ic, p.k, p.k]);
+
+    let mut rt = VtaRuntime::new(&cfg, 64 << 20);
+    let compiled = compile_conv2d(&mut rt, &p, &pack_weights(&cfg, &wgt), 2).unwrap();
+    assert!(!compiled.streams.is_empty());
+
+    let mut cycles = Vec::new();
+    for seed in 0..3u64 {
+        let mut rng = XorShiftRng::new(40 + seed);
+        let inp = random_nchw(&mut rng, &[1, p.ic, p.h, p.w]);
+        let (out, stats) = compiled.execute(&mut rt, &pack_activations(&cfg, &inp)).unwrap();
+        let got = unpack_outputs(&cfg, &out, 1, p.oc, p.out_h(), p.out_w());
+        assert_eq!(got, conv2d_ref(&p, &inp, &wgt), "replay {seed} diverged");
+        cycles.push(stats.total_cycles);
+    }
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "replay timing drifted: {cycles:?}");
+    compiled.free(&mut rt).unwrap();
+}
+
+/// The compiled path and the one-shot lowering path are equivalent:
+/// identical outputs AND identical simulated cycle counts.
+#[test]
+fn compiled_conv_matches_lower_conv2d() {
+    let cfg = VtaConfig::pynq();
+    let p = Conv2dParams { h: 12, w: 12, ic: 32, oc: 16, k: 3, s: 2, requant: rq() };
+    let mut rng = XorShiftRng::new(51);
+    let inp = random_nchw(&mut rng, &[1, p.ic, p.h, p.w]);
+    let wgt = random_nchw(&mut rng, &[p.oc, p.ic, p.k, p.k]);
+    let ip = pack_activations(&cfg, &inp);
+    let wp = pack_weights(&cfg, &wgt);
+
+    let mut rt1 = VtaRuntime::new(&cfg, 64 << 20);
+    let one_shot = lower_conv2d(&mut rt1, &p, &ip, &wp, 2).unwrap();
+
+    let mut rt2 = VtaRuntime::new(&cfg, 64 << 20);
+    let compiled = compile_conv2d(&mut rt2, &p, &wp, 2).unwrap();
+    let (out, stats) = compiled.execute(&mut rt2, &ip).unwrap();
+
+    assert_eq!(out, one_shot.out, "compiled vs one-shot output");
+    assert_eq!(
+        stats.total_cycles, one_shot.stats.total_cycles,
+        "compiled vs one-shot timing"
+    );
+    assert_eq!(stats.gemm_uops, one_shot.stats.gemm_uops);
+}
+
+/// Plans that drain between groups compile into multiple sealed
+/// streams (one per group) and still replay correctly — the
+/// self-containment property of sealed streams.
+#[test]
+fn compiled_conv_drain_groups_replays() {
+    let mut cfg = VtaConfig::pynq();
+    // A huge first-beat latency makes double-buffered weight groups
+    // load-latency-bound, so the planner falls back to draining the
+    // pipeline between groups (the C12-on-Pynq regime).
+    cfg.dram.latency = 100_000;
+    let p = Conv2dParams { h: 8, w: 8, ic: 128, oc: 256, k: 3, s: 1, requant: rq() };
+    let plan = plan_conv2d(&cfg, &p, 2).unwrap();
+    assert!(plan.drain_groups, "test premise: this config must drain between groups");
+    assert!(plan.groups() > 1);
+
+    let mut rng = XorShiftRng::new(61);
+    let inp = random_nchw(&mut rng, &[1, p.ic, p.h, p.w]);
+    let wgt = random_nchw(&mut rng, &[p.oc, p.ic, p.k, p.k]);
+
+    let mut rt = VtaRuntime::new(&cfg, 128 << 20);
+    let compiled = compile_conv2d(&mut rt, &p, &pack_weights(&cfg, &wgt), 2).unwrap();
+    assert_eq!(compiled.streams.len(), plan.groups(), "one sealed stream per drained group");
+
+    let expect = conv2d_ref(&p, &inp, &wgt);
+    for _ in 0..2 {
+        let (out, _) = compiled.execute(&mut rt, &pack_activations(&cfg, &inp)).unwrap();
+        assert_eq!(unpack_outputs(&cfg, &out, 1, p.oc, p.out_h(), p.out_w()), expect);
+    }
+    compiled.free(&mut rt).unwrap();
+}
+
+/// Freeing a compiled plan returns every byte of its DRAM residency.
+#[test]
+fn compiled_conv_free_releases_dram() {
+    let cfg = VtaConfig::pynq();
+    let p = Conv2dParams { h: 8, w: 8, ic: 16, oc: 16, k: 3, s: 1, requant: rq() };
+    let mut rng = XorShiftRng::new(71);
+    let wgt = random_nchw(&mut rng, &[p.oc, p.ic, p.k, p.k]);
+
+    let mut rt = VtaRuntime::new(&cfg, 64 << 20);
+    let used0 = rt.dram.used();
+    let compiled = compile_conv2d(&mut rt, &p, &pack_weights(&cfg, &wgt), 2).unwrap();
+    assert!(rt.dram.used() > used0, "plan holds DRAM residency");
+    compiled.free(&mut rt).unwrap();
+    assert_eq!(rt.dram.used(), used0, "free leaked DRAM");
+}
+
+// ---------------------------------------------------------------------
 // Lowered matmul vs reference.
 // ---------------------------------------------------------------------
 

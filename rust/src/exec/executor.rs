@@ -29,6 +29,8 @@ pub enum ExecError {
     Pjrt { node: String, err: PjrtError },
     #[error("node {0}: op {1} cannot run on the VTA device")]
     NotOffloadable(String, &'static str),
+    #[error("plan cache: {0}")]
+    PlanCache(CompileError),
 }
 
 /// How CPU-resident nodes execute.
@@ -112,101 +114,130 @@ impl Executor {
     }
 
     /// Run the graph on one input. Nodes must already be partitioned.
+    ///
+    /// Thin wrapper over the staged path: the graph is walked in
+    /// topological stages ([`crate::graph::stages`]) — the same order
+    /// the pipelined serving engine uses — executing every node
+    /// synchronously. This is the *naive serial* baseline the serving
+    /// layer's pipelined schedule is measured against.
     pub fn run(&mut self, g: &Graph, input: &Tensor<i8>) -> Result<ExecReport, ExecError> {
+        let stages = crate::graph::stages(g);
+        self.run_staged(g, input, &stages)
+    }
+
+    /// Staged serial execution: stages in order, every node of a stage
+    /// in turn, each node fully finished (pack → lower → simulate →
+    /// unpack) before the next starts.
+    fn run_staged(
+        &mut self,
+        g: &Graph,
+        input: &Tensor<i8>,
+        stages: &[Vec<usize>],
+    ) -> Result<ExecReport, ExecError> {
         let mut values: Vec<Option<Tensor<i8>>> = vec![None; g.nodes.len()];
-        let mut reports = Vec::with_capacity(g.nodes.len());
+        let mut reports: Vec<Option<NodeReport>> = (0..g.nodes.len()).map(|_| None).collect();
 
-        for node in &g.nodes {
-            let t0 = Instant::now();
-            let mut sim_seconds = 0.0;
-            let mut stats = None;
+        for stage in stages {
+            for &id in stage {
+                let node = &g.nodes[id];
+                let t0 = Instant::now();
+                let mut sim_seconds = 0.0;
+                let mut stats = None;
 
-            let out = match (&node.op, node.placement) {
-                (Op::Input { .. }, _) => input.clone(),
-                (Op::Conv2d { p }, Placement::Vta) => {
-                    let x = values[node.inputs[0]].as_ref().unwrap();
-                    let w = g
-                        .weights(node.id)
-                        .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-                    let cfg = self.rt.ctx.config().clone();
-                    let ip = pack_activations(&cfg, x);
-                    let wp = pack_weights(&cfg, w);
-                    let r = lower_conv2d(&mut self.rt, p, &ip, &wp, 2)
-                        .map_err(|e| ExecError::Compile(node.name.clone(), e))?;
-                    sim_seconds = r.stats.total_cycles as f64 / cfg.clock_hz;
-                    stats = Some(r.stats.clone());
-                    unpack_outputs(&cfg, &r.out, x.shape()[0], p.oc, p.out_h(), p.out_w())
-                }
-                (op, Placement::Vta) => {
-                    return Err(ExecError::NotOffloadable(node.name.clone(), op.kind()))
-                }
-                (op, _) => self.run_cpu(g, node.id, op, &values)?,
-            };
+                let out = match (&node.op, node.placement) {
+                    (Op::Input { .. }, _) => input.clone(),
+                    (Op::Conv2d { p }, Placement::Vta) => {
+                        let x = values[node.inputs[0]].as_ref().unwrap();
+                        let w = g
+                            .weights(node.id)
+                            .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
+                        let cfg = self.rt.ctx.config().clone();
+                        let ip = pack_activations(&cfg, x);
+                        let wp = pack_weights(&cfg, w);
+                        let r = lower_conv2d(&mut self.rt, p, &ip, &wp, 2)
+                            .map_err(|e| ExecError::Compile(node.name.clone(), e))?;
+                        sim_seconds = r.stats.total_cycles as f64 / cfg.clock_hz;
+                        stats = Some(r.stats.clone());
+                        unpack_outputs(&cfg, &r.out, x.shape()[0], p.oc, p.out_h(), p.out_w())
+                    }
+                    (op, Placement::Vta) => {
+                        return Err(ExecError::NotOffloadable(node.name.clone(), op.kind()))
+                    }
+                    (_, _) => exec_cpu_node(&mut self.cpu, g, id, &values)?,
+                };
 
-            reports.push(NodeReport {
-                name: node.name.clone(),
-                kind: node.op.kind(),
-                placement: node.placement,
-                wall: t0.elapsed(),
-                sim_seconds,
-                stats,
-                ops: node.op.ops(&node.shape),
-            });
-            values[node.id] = Some(out);
+                reports[id] = Some(NodeReport {
+                    name: node.name.clone(),
+                    kind: node.op.kind(),
+                    placement: node.placement,
+                    wall: t0.elapsed(),
+                    sim_seconds,
+                    stats,
+                    ops: node.op.ops(&node.shape),
+                });
+                values[id] = Some(out);
+            }
         }
 
         let out_id = g.output().expect("non-empty graph");
-        Ok(ExecReport { nodes: reports, output: values[out_id].take().unwrap() })
-    }
-
-    fn run_cpu(
-        &mut self,
-        g: &Graph,
-        id: usize,
-        op: &Op,
-        values: &[Option<Tensor<i8>>],
-    ) -> Result<Tensor<i8>, ExecError> {
-        let node = &g.nodes[id];
-        let arg = |i: usize| values[node.inputs[i]].as_ref().unwrap();
-        // Try the PJRT artifact first when that backend is selected.
-        if let CpuBackend::Pjrt(cache) = &mut self.cpu {
-            if let Some(name) = artifact_name(op, &node.shape) {
-                if cache.has(&name) {
-                    let mut inputs: Vec<&Tensor<i8>> =
-                        node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
-                    let w_holder;
-                    if let Some(w) = g.weights(id) {
-                        w_holder = w.clone();
-                        inputs.push(&w_holder);
-                    }
-                    let mut outs = cache
-                        .run_i8(&name, &inputs)
-                        .map_err(|err| ExecError::Pjrt { node: node.name.clone(), err })?;
-                    return Ok(outs.remove(0));
-                }
-            }
-        }
-        // Native fallback.
-        Ok(match op {
-            Op::Input { .. } => unreachable!("handled by caller"),
-            Op::Conv2d { p } => {
-                let w = g
-                    .weights(id)
-                    .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-                compiler::reference::conv2d_ref(p, arg(0), w)
-            }
-            Op::Relu => cpu_ops::relu_i8(arg(0)),
-            Op::MaxPool { k, s, pad } => cpu_ops::maxpool_i8(arg(0), *k, *s, *pad),
-            Op::GlobalAvgPool => cpu_ops::global_avg_pool_i8(arg(0)),
-            Op::Add => cpu_ops::add_i8(arg(0), arg(1)),
-            Op::Dense { p } => {
-                let w = g
-                    .weights(id)
-                    .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-                cpu_ops::dense_i8(p, arg(0), w)
-            }
+        Ok(ExecReport {
+            nodes: reports.into_iter().map(|r| r.expect("stages cover every node")).collect(),
+            output: values[out_id].take().unwrap(),
         })
     }
+}
+
+/// Execute one CPU-resident node: PJRT artifact when that backend is
+/// selected and an artifact exists, native Rust kernels otherwise.
+/// Shared by the serial [`Executor`] and the serving engine
+/// ([`super::serve::ServingEngine`]).
+pub(crate) fn exec_cpu_node(
+    cpu: &mut CpuBackend,
+    g: &Graph,
+    id: usize,
+    values: &[Option<Tensor<i8>>],
+) -> Result<Tensor<i8>, ExecError> {
+    let node = &g.nodes[id];
+    let op = &node.op;
+    let arg = |i: usize| values[node.inputs[i]].as_ref().unwrap();
+    // Try the PJRT artifact first when that backend is selected.
+    if let CpuBackend::Pjrt(cache) = cpu {
+        if let Some(name) = artifact_name(op, &node.shape) {
+            if cache.has(&name) {
+                let mut inputs: Vec<&Tensor<i8>> =
+                    node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
+                let w_holder;
+                if let Some(w) = g.weights(id) {
+                    w_holder = w.clone();
+                    inputs.push(&w_holder);
+                }
+                let mut outs = cache
+                    .run_i8(&name, &inputs)
+                    .map_err(|err| ExecError::Pjrt { node: node.name.clone(), err })?;
+                return Ok(outs.remove(0));
+            }
+        }
+    }
+    // Native fallback.
+    Ok(match op {
+        Op::Input { .. } => unreachable!("handled by caller"),
+        Op::Conv2d { p } => {
+            let w = g
+                .weights(id)
+                .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
+            compiler::reference::conv2d_ref(p, arg(0), w)
+        }
+        Op::Relu => cpu_ops::relu_i8(arg(0)),
+        Op::MaxPool { k, s, pad } => cpu_ops::maxpool_i8(arg(0), *k, *s, *pad),
+        Op::GlobalAvgPool => cpu_ops::global_avg_pool_i8(arg(0)),
+        Op::Add => cpu_ops::add_i8(arg(0), arg(1)),
+        Op::Dense { p } => {
+            let w = g
+                .weights(id)
+                .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
+            cpu_ops::dense_i8(p, arg(0), w)
+        }
+    })
 }
 
 /// Artifact naming scheme shared with `python/compile/aot.py`:

@@ -2,14 +2,29 @@
 //! behavioral simulator through the full runtime/compiler stack;
 //! CPU-resident nodes run either natively or on AOT-compiled XLA/PJRT
 //! executables produced by the JAX build path (`python/compile/`).
+//!
+//! Two execution disciplines:
+//!
+//! * [`Executor`] — naive serial: every node back-to-back, re-lowering
+//!   VTA nodes from scratch on every inference (the paper's Fig 16
+//!   measurement discipline, and the serving layer's baseline).
+//! * [`serve::ServingEngine`] — compile-once/run-many: a JIT
+//!   [`serve::PlanCache`] of reusable compiled plans plus a pipelined,
+//!   batched front-end that overlaps CPU wall time with simulated VTA
+//!   time.
 
 mod cpu_ops;
 mod executor;
 pub mod pjrt;
+pub mod serve;
 
 pub use cpu_ops::{add_i8, dense_i8, global_avg_pool_i8, maxpool_i8, relu_i8};
 pub use executor::{CpuBackend, ExecError, ExecReport, Executor, NodeReport};
 pub use pjrt::{PjrtCache, PjrtError};
+pub use serve::{
+    pipeline_schedule, BatchReport, PipelineModel, PlanCache, PlanCacheStats, PlanKey,
+    ServeReport, ServingEngine,
+};
 
 #[cfg(test)]
 mod tests;

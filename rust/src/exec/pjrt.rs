@@ -5,125 +5,204 @@
 //! This is the "CPU side" of the heterogeneous executor: the JAX model
 //! is lowered once at build time; at run time Rust feeds int8 tensors
 //! straight into the compiled executables. Python never runs here.
+//!
+//! The real backend needs the external `xla` crate (and its C++
+//! runtime), which the offline build environment does not provide, so
+//! it sits behind the `pjrt` cargo feature. The default build gets a
+//! stub with the same API whose `has()` always answers `false` — the
+//! executor then falls back to the native Rust kernels, and
+//! `cargo test` stays green with no artifact or toolchain dependency.
+//!
+//! NOTE: enabling `pjrt` requires *also* adding `xla` to
+//! `[dependencies]` in `Cargo.toml` — the crate is intentionally not
+//! declared there (even optionally) so that offline dependency
+//! resolution never touches it. See the `[features]` comment in
+//! `Cargo.toml`.
 
-use crate::util::Tensor;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use thiserror::Error;
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::util::Tensor;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use thiserror::Error;
 
-/// PJRT path errors.
-#[derive(Debug, Error)]
-pub enum PjrtError {
-    #[error("artifact {0} not found (run `make artifacts` first)")]
-    MissingArtifact(PathBuf),
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-    #[error("artifact {name}: expected {expected} outputs, got {got}")]
-    BadArity { name: String, expected: usize, got: usize },
-}
-
-/// A cache of compiled PJRT executables keyed by artifact name.
-pub struct PjrtCache {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl PjrtCache {
-    /// Create a CPU PJRT client over an artifact directory.
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self, PjrtError> {
-        Ok(PjrtCache {
-            client: xla::PjRtClient::cpu()?,
-            dir: dir.as_ref().to_path_buf(),
-            exes: HashMap::new(),
-        })
+    /// PJRT path errors.
+    #[derive(Debug, Error)]
+    pub enum PjrtError {
+        #[error("artifact {0} not found (run `make artifacts` first)")]
+        MissingArtifact(PathBuf),
+        #[error("xla error: {0}")]
+        Xla(#[from] xla::Error),
+        #[error("artifact {name}: expected {expected} outputs, got {got}")]
+        BadArity { name: String, expected: usize, got: usize },
     }
 
-    /// The artifact directory.
-    pub fn dir(&self) -> &Path {
-        &self.dir
+    /// A cache of compiled PJRT executables keyed by artifact name.
+    pub struct PjrtCache {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// True when the named artifact file exists.
-    pub fn has(&self, name: &str) -> bool {
-        self.dir.join(format!("{name}.hlo.txt")).exists()
-    }
+    impl PjrtCache {
+        /// Create a CPU PJRT client over an artifact directory.
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self, PjrtError> {
+            Ok(PjrtCache {
+                client: xla::PjRtClient::cpu()?,
+                dir: dir.as_ref().to_path_buf(),
+                exes: HashMap::new(),
+            })
+        }
 
-    /// Load (compile-once) an artifact by name (`name`.hlo.txt).
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, PjrtError> {
-        if !self.exes.contains_key(name) {
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            if !path.exists() {
-                return Err(PjrtError::MissingArtifact(path));
+        /// The artifact directory.
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// True when the named artifact file exists.
+        pub fn has(&self, name: &str) -> bool {
+            self.dir.join(format!("{name}.hlo.txt")).exists()
+        }
+
+        /// Load (compile-once) an artifact by name (`name`.hlo.txt).
+        pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, PjrtError> {
+            if !self.exes.contains_key(name) {
+                let path = self.dir.join(format!("{name}.hlo.txt"));
+                if !path.exists() {
+                    return Err(PjrtError::MissingArtifact(path));
+                }
+                let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                self.exes.insert(name.to_string(), exe);
             }
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.exes.insert(name.to_string(), exe);
+            Ok(&self.exes[name])
         }
-        Ok(&self.exes[name])
+
+        /// Execute an artifact on int8 tensors, returning int8 tensors.
+        ///
+        /// All artifacts are lowered with `return_tuple=True`, so the
+        /// result is a tuple literal; each element converts back to a
+        /// [`Tensor<i8>`] with its shape read from the literal.
+        pub fn run_i8(
+            &mut self,
+            name: &str,
+            inputs: &[&Tensor<i8>],
+        ) -> Result<Vec<Tensor<i8>>, PjrtError> {
+            let parts = self.run_raw(name, inputs)?;
+            let mut out = Vec::with_capacity(parts.len());
+            for lit in parts {
+                out.push(literal_to_tensor(&lit)?);
+            }
+            Ok(out)
+        }
+
+        /// Execute an artifact whose outputs are int32 (e.g. the raw
+        /// Pallas GEMM accumulator).
+        pub fn run_i32(
+            &mut self,
+            name: &str,
+            inputs: &[&Tensor<i8>],
+        ) -> Result<Vec<Tensor<i32>>, PjrtError> {
+            let parts = self.run_raw(name, inputs)?;
+            let mut out = Vec::with_capacity(parts.len());
+            for lit in parts {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<i32>()?;
+                out.push(Tensor::from_vec(&dims, data).expect("shape matches element count"));
+            }
+            Ok(out)
+        }
+
+        fn run_raw(
+            &mut self,
+            name: &str,
+            inputs: &[&Tensor<i8>],
+        ) -> Result<Vec<xla::Literal>, PjrtError> {
+            let lits: Vec<xla::Literal> = inputs.iter().map(|t| tensor_to_literal(t)).collect();
+            let exe = self.load(name)?;
+            let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            Ok(result.to_tuple()?)
+        }
     }
 
-    /// Execute an artifact on int8 tensors, returning int8 tensors.
-    ///
-    /// All artifacts are lowered with `return_tuple=True`, so the
-    /// result is a tuple literal; each element converts back to a
-    /// [`Tensor<i8>`] with its shape read from the literal.
-    pub fn run_i8(
-        &mut self,
-        name: &str,
-        inputs: &[&Tensor<i8>],
-    ) -> Result<Vec<Tensor<i8>>, PjrtError> {
-        let parts = self.run_raw(name, inputs)?;
-        let mut out = Vec::with_capacity(parts.len());
-        for lit in parts {
-            out.push(literal_to_tensor(&lit)?);
-        }
-        Ok(out)
+    /// Convert a host int8 tensor to an XLA literal.
+    fn tensor_to_literal(t: &Tensor<i8>) -> xla::Literal {
+        let dims: Vec<usize> = t.shape().to_vec();
+        let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, &dims);
+        lit.copy_raw_from(t.data()).expect("literal size matches tensor");
+        lit
     }
 
-    /// Execute an artifact whose outputs are int32 (e.g. the raw Pallas
-    /// GEMM accumulator).
-    pub fn run_i32(
-        &mut self,
-        name: &str,
-        inputs: &[&Tensor<i8>],
-    ) -> Result<Vec<Tensor<i32>>, PjrtError> {
-        let parts = self.run_raw(name, inputs)?;
-        let mut out = Vec::with_capacity(parts.len());
-        for lit in parts {
-            let shape = lit.array_shape()?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = lit.to_vec::<i32>()?;
-            out.push(Tensor::from_vec(&dims, data).expect("shape matches element count"));
-        }
-        Ok(out)
-    }
-
-    fn run_raw(
-        &mut self,
-        name: &str,
-        inputs: &[&Tensor<i8>],
-    ) -> Result<Vec<xla::Literal>, PjrtError> {
-        let lits: Vec<xla::Literal> = inputs.iter().map(|t| tensor_to_literal(t)).collect();
-        let exe = self.load(name)?;
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple()?)
+    /// Convert an XLA int8 literal back to a host tensor.
+    fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor<i8>, PjrtError> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<i8>()?;
+        Ok(Tensor::from_vec(&dims, data).expect("literal element count matches shape"))
     }
 }
 
-/// Convert a host int8 tensor to an XLA literal.
-fn tensor_to_literal(t: &Tensor<i8>) -> xla::Literal {
-    let dims: Vec<usize> = t.shape().to_vec();
-    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, &dims);
-    lit.copy_raw_from(t.data()).expect("literal size matches tensor");
-    lit
+#[cfg(feature = "pjrt")]
+pub use real::{PjrtCache, PjrtError};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::util::Tensor;
+    use std::path::{Path, PathBuf};
+    use thiserror::Error;
+
+    /// PJRT path errors (stub build).
+    #[derive(Debug, Error)]
+    pub enum PjrtError {
+        #[error("artifact {0} not found (run `make artifacts` first)")]
+        MissingArtifact(PathBuf),
+        #[error("built without the `pjrt` feature: artifact {0} cannot run (rebuild with `--features pjrt`)")]
+        Disabled(String),
+    }
+
+    /// Stub executable cache: reports every artifact as absent, so the
+    /// executor always takes its native fallback.
+    pub struct PjrtCache {
+        dir: PathBuf,
+    }
+
+    impl PjrtCache {
+        /// Create a stub cache over an artifact directory.
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self, PjrtError> {
+            Ok(PjrtCache { dir: dir.as_ref().to_path_buf() })
+        }
+
+        /// The artifact directory.
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Always `false` in the stub build.
+        pub fn has(&self, _name: &str) -> bool {
+            false
+        }
+
+        /// Always an error in the stub build.
+        pub fn run_i8(
+            &mut self,
+            name: &str,
+            _inputs: &[&Tensor<i8>],
+        ) -> Result<Vec<Tensor<i8>>, PjrtError> {
+            Err(PjrtError::Disabled(name.to_string()))
+        }
+
+        /// Always an error in the stub build.
+        pub fn run_i32(
+            &mut self,
+            name: &str,
+            _inputs: &[&Tensor<i8>],
+        ) -> Result<Vec<Tensor<i32>>, PjrtError> {
+            Err(PjrtError::Disabled(name.to_string()))
+        }
+    }
 }
 
-/// Convert an XLA int8 literal back to a host tensor.
-fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor<i8>, PjrtError> {
-    let shape = lit.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = lit.to_vec::<i8>()?;
-    Ok(Tensor::from_vec(&dims, data).expect("literal element count matches shape"))
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtCache, PjrtError};

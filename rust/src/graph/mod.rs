@@ -10,15 +10,19 @@
 //!   CPU).
 //! * [`resnet`] — the ResNet-18 workload builder with deterministic
 //!   synthetic int8 weights (Table 1's twelve conv configurations).
+//! * [`stages`] — topological (ASAP) stage computation, consumed by
+//!   the pipelined serving executor in [`crate::exec::serve`].
 
 mod fusion;
 mod ir;
 mod partition;
 pub mod resnet;
+mod stage;
 
 pub use fusion::fuse;
 pub use ir::{Graph, GraphError, Node, NodeId, Op, Placement, TensorShape};
 pub use partition::{partition, PartitionPolicy};
+pub use stage::{node_stages, stages};
 
 #[cfg(test)]
 mod tests;

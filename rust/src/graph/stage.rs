@@ -1,0 +1,45 @@
+//! Topological stage computation for the pipelined executor.
+//!
+//! A *stage* is an ASAP level: stage 0 holds nodes with no inputs,
+//! stage `k` holds nodes whose deepest input sits in stage `k - 1`.
+//! Nodes within one stage are mutually independent, so the serving
+//! layer may freely interleave them across the CPU and the accelerator
+//! — the graph-granularity analogue of the ISA's decoupled
+//! access-execute (§2.3): the token-checked *dependence* structure is
+//! the stage DAG, the *resources* are the two heterogeneous executors.
+
+use super::ir::{Graph, NodeId};
+
+/// Partition the graph into topological stages (ASAP levels).
+///
+/// Returns one `Vec<NodeId>` per stage, in dependence order; the
+/// concatenation of all stages is a permutation of all node ids, and
+/// every edge goes from a strictly earlier stage to a later one.
+pub fn stages(g: &Graph) -> Vec<Vec<NodeId>> {
+    if g.nodes.is_empty() {
+        return Vec::new();
+    }
+    let mut level = vec![0usize; g.nodes.len()];
+    let mut max_level = 0usize;
+    for n in &g.nodes {
+        // Nodes only reference earlier ids (enforced at construction),
+        // so a single forward sweep computes ASAP levels.
+        let l = n.inputs.iter().map(|&i| level[i] + 1).max().unwrap_or(0);
+        level[n.id] = l;
+        max_level = max_level.max(l);
+    }
+    let mut out = vec![Vec::new(); max_level + 1];
+    for n in &g.nodes {
+        out[level[n.id]].push(n.id);
+    }
+    out
+}
+
+/// The stage index of every node (same leveling as [`stages`]).
+pub fn node_stages(g: &Graph) -> Vec<usize> {
+    let mut level = vec![0usize; g.nodes.len()];
+    for n in &g.nodes {
+        level[n.id] = n.inputs.iter().map(|&i| level[i] + 1).max().unwrap_or(0);
+    }
+    level
+}

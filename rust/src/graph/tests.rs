@@ -143,3 +143,63 @@ fn saturating_add_semantics() {
     assert_eq!(Graph::saturating_add(-100, -100), -128);
     assert_eq!(Graph::saturating_add(5, -3), 2);
 }
+
+// ---------------------------------------------------------------------
+// Topological stages.
+// ---------------------------------------------------------------------
+
+#[test]
+fn stages_respect_dependences_and_cover_all_nodes() {
+    let g = resnet18(1, 42).unwrap();
+    let st = stages(&g);
+    let levels = node_stages(&g);
+
+    // Every node appears exactly once, in its level's bucket.
+    let mut seen = vec![false; g.nodes.len()];
+    for (lvl, stage) in st.iter().enumerate() {
+        for &id in stage {
+            assert!(!seen[id], "node {id} appears twice");
+            seen[id] = true;
+            assert_eq!(levels[id], lvl);
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "stages must cover every node");
+
+    // Every edge crosses strictly forward in stage order.
+    for n in &g.nodes {
+        for &i in &n.inputs {
+            assert!(levels[i] < levels[n.id], "edge {i}→{} within/backward a stage", n.id);
+        }
+    }
+}
+
+#[test]
+fn stages_of_a_chain_are_singletons() {
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let c = g.add("c", Op::Conv2d { p: conv_p(16, 16) }, &[x]).unwrap();
+    let _p = g.add("p", Op::MaxPool { k: 2, s: 2, pad: 0 }, &[c]).unwrap();
+    let st = stages(&g);
+    assert_eq!(st.len(), 3);
+    assert!(st.iter().all(|s| s.len() == 1));
+}
+
+#[test]
+fn stages_put_parallel_branches_in_one_stage() {
+    // Residual fork: conv main path and the shortcut projection share
+    // the stage right after the input.
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let a = g.add("a", Op::Conv2d { p: conv_p(16, 16) }, &[x]).unwrap();
+    let b = g.add("b", Op::Conv2d { p: conv_p(16, 16) }, &[x]).unwrap();
+    let _s = g.add("sum", Op::Add, &[a, b]).unwrap();
+    let st = stages(&g);
+    assert_eq!(st.len(), 3);
+    assert_eq!(st[1].len(), 2, "independent branches share a stage");
+    assert_eq!(st[2], vec![3]);
+}
+
+#[test]
+fn stages_of_empty_graph_is_empty() {
+    assert!(stages(&Graph::new()).is_empty());
+}

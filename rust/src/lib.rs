@@ -24,8 +24,16 @@
 //! * [`exec`] — the graph executor that co-schedules VTA kernels on the
 //!   simulator and CPU-resident operators on XLA/PJRT executables compiled
 //!   ahead-of-time from JAX (see `python/compile/`).
+//! * [`exec::serve`] — the serving engine: a JIT compiled-plan cache
+//!   (compile-once/run-many lowering via [`compiler::compiled`]) and a
+//!   pipelined, batched front-end that overlaps CPU wall time with
+//!   simulated VTA time.
 //! * [`metrics`] — roofline accounting: GOPS, arithmetic intensity,
 //!   utilization.
+//!
+//! A bottom-up architectural walk of the whole stack — including the
+//! dependence-token pipeline and the plan-cache/serving flow — lives
+//! in `docs/ARCHITECTURE.md` at the repository root.
 
 pub mod arch;
 pub mod compiler;

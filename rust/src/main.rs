@@ -7,6 +7,9 @@
 //!   ResNet-18 inference end-to-end and print the Fig 16 breakdown.
 //! * `conv <C1..C12> [--vt N] [--config FILE]` — run one Table 1 layer
 //!   and print its roofline point (Fig 15).
+//! * `serve [--batch N] [--vt N] [--cache N] [--config FILE]` — serve a
+//!   batch of ResNet-18 requests through the plan-caching, pipelined
+//!   serving engine and print the serial-vs-pipelined comparison.
 //! * `table1` — print Table 1.
 //!
 //! (Hand-rolled argument parsing: the offline vendor set has no clap —
@@ -15,7 +18,7 @@
 use std::process::ExitCode;
 use vta::arch::{load_config, VtaConfig};
 use vta::compiler::{lower_conv2d, pack_activations, pack_weights};
-use vta::exec::{CpuBackend, Executor, PjrtCache};
+use vta::exec::{CpuBackend, Executor, PjrtCache, ServingEngine};
 use vta::graph::resnet::{self, synth_input, TABLE1};
 use vta::graph::{fuse, partition, PartitionPolicy, Placement};
 use vta::metrics::Roofline;
@@ -37,12 +40,21 @@ struct Flags {
     vt: usize,
     cpu_only: bool,
     pjrt: bool,
+    batch: usize,
+    cache: usize,
     positional: Vec<String>,
 }
 
 fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
-    let mut f =
-        Flags { config: None, vt: 2, cpu_only: false, pjrt: false, positional: Vec::new() };
+    let mut f = Flags {
+        config: None,
+        vt: 2,
+        cpu_only: false,
+        pjrt: false,
+        batch: 4,
+        cache: 64,
+        positional: Vec::new(),
+    };
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -57,6 +69,20 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                 f.vt = args
                     .get(i)
                     .ok_or_else(|| anyhow::anyhow!("--vt needs 1 or 2"))?
+                    .parse()?;
+            }
+            "--batch" => {
+                i += 1;
+                f.batch = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--batch needs a count"))?
+                    .parse()?;
+            }
+            "--cache" => {
+                i += 1;
+                f.cache = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--cache needs a plan count"))?
                     .parse()?;
             }
             "--cpu-only" => f.cpu_only = true,
@@ -81,6 +107,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "table1" => cmd_table1(),
         "conv" => cmd_conv(&cfg, &flags),
         "resnet" => cmd_resnet(&cfg, &flags),
+        "serve" => cmd_serve(&cfg, &flags),
         other => {
             print_usage();
             anyhow::bail!("unknown command {other}")
@@ -96,9 +123,12 @@ fn print_usage() {
          \x20 table1                    print the paper's Table 1\n\
          \x20 conv <C1..C12>            run one conv layer on the simulator\n\
          \x20 resnet                    run ResNet-18 end to end\n\
+         \x20 serve                     batched ResNet-18 serving (plan cache + pipeline)\n\
          flags:\n\
          \x20 --config FILE             VTA variant config (key = value)\n\
          \x20 --vt N                    virtual threads (1 = no latency hiding, 2 = default)\n\
+         \x20 --batch N                 serve: requests per batch (default 4)\n\
+         \x20 --cache N                 serve: plan-cache capacity in plans (default 64)\n\
          \x20 --cpu-only                resnet: keep every operator on the CPU\n\
          \x20 --pjrt                    resnet: run CPU ops on XLA artifacts (needs `make artifacts`)"
     );
@@ -182,6 +212,70 @@ fn cmd_conv(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         out.plan.groups(),
         out.plan.strips(),
         out.stats.bytes_moved() as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
+    let (vta_n, cpu_n) = partition(&mut g, &PartitionPolicy::paper(cfg));
+    println!(
+        "serving ResNet-18: {} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU; \
+         batch {}, vt={}, plan cache {} plans",
+        g.nodes.len(),
+        flags.batch,
+        flags.vt,
+        flags.cache
+    );
+
+    let mut engine =
+        ServingEngine::new(cfg, 512 << 20, CpuBackend::Native, flags.vt, flags.cache);
+    let inputs: Vec<_> =
+        (0..flags.batch).map(|i| synth_input(7 + i as u64, 1, 3, 224, 224)).collect();
+
+    // Cold batch: every unique VTA node compiles exactly once.
+    let t0 = std::time::Instant::now();
+    let cold = engine.run_batch(&g, &inputs)?;
+    let cold_wall = t0.elapsed();
+    println!(
+        "\ncold batch: host wall {cold_wall:.2?}; plan cache misses {} (one per unique VTA \
+         node), hits {}, {} plans resident ({:.1} MB device DRAM)",
+        cold.cache.misses,
+        cold.cache.hits,
+        engine.cached_plans(),
+        engine.cache_dram_bytes() as f64 / 1e6
+    );
+
+    // Warm batch: pure replay — lowering never runs again.
+    let t0 = std::time::Instant::now();
+    let warm = engine.run_batch(&g, &inputs)?;
+    let warm_wall = t0.elapsed();
+    for (a, b) in cold.outputs.iter().zip(&warm.outputs) {
+        anyhow::ensure!(a == b, "cold and warm batches disagree");
+    }
+    println!(
+        "warm batch: host wall {warm_wall:.2?} ({:.1}x less host work than cold); \
+         misses {}, hits {} (all lookups hit)",
+        cold_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-9),
+        warm.cache.misses,
+        warm.cache.hits
+    );
+
+    println!(
+        "\nend-to-end model time, batch of {}:\n\
+         \x20 naive serial (per-node, no overlap): {:.1} ms\n\
+         \x20 pipelined (CPU/VTA overlap, double-buffered): {:.1} ms  ({:.2}x)",
+        flags.batch,
+        warm.serial_seconds * 1e3,
+        warm.pipelined_seconds * 1e3,
+        warm.speedup()
+    );
+    println!(
+        "throughput {:.1} inf/s; latency p50 {:.1} ms, p90 {:.1} ms, p99 {:.1} ms",
+        warm.throughput(),
+        warm.latency_percentile(0.50) * 1e3,
+        warm.latency_percentile(0.90) * 1e3,
+        warm.latency_percentile(0.99) * 1e3
     );
     Ok(())
 }

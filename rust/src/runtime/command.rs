@@ -45,6 +45,10 @@ pub enum RuntimeError {
     Sim(#[from] SimError),
     #[error("allocation failed: {0}")]
     Alloc(#[from] super::AllocError),
+    #[error(
+        "uop kernel arena exhausted: {need} uop words at tile {tile} exceed the arena limit {limit}"
+    )]
+    UopArenaFull { tile: u32, need: usize, limit: u32 },
 }
 
 /// Which neighbor a dependence edge touches.
@@ -84,8 +88,13 @@ pub struct CommandContext {
     pub uops: UopCache,
     /// DRAM write-cursor for freshly generated kernels (uop tiles).
     uop_dram_next: u32,
-    /// Pending kernel words to write to DRAM at synchronize time:
-    /// (uop-tile address, words).
+    /// Exclusive upper bound (uop tiles) of the kernel arena, when this
+    /// context records into a bounded per-plan arena.
+    uop_dram_limit: Option<u32>,
+    /// Kernel words destined for the DRAM arena: (uop-tile address,
+    /// words). Drained (written to the device) by `synchronize`;
+    /// retained — and snapshotted into every stream — by `seal`, so
+    /// each sealed stream is individually replayable.
     kernel_writes: Vec<(u32, Vec<u32>)>,
 }
 
@@ -100,8 +109,22 @@ impl CommandContext {
             pending_pop: [(false, false); 3],
             uops: UopCache::new(cfg.uop_depth()),
             uop_dram_next: uop_dram_tile,
+            uop_dram_limit: None,
             kernel_writes: Vec::new(),
         }
+    }
+
+    /// New context whose generated kernels must fit in a bounded DRAM
+    /// arena of `arena_uops` uop tiles starting at `uop_dram_tile`.
+    ///
+    /// This is the recording context used by the compile-once path
+    /// ([`crate::compiler::compile_conv2d`]): each compiled plan gets
+    /// its own arena slice from the DRAM allocator, so plans never
+    /// overwrite each other's kernel words.
+    pub fn with_arena(cfg: &VtaConfig, uop_dram_tile: u32, arena_uops: usize) -> Self {
+        let mut ctx = Self::new(cfg, uop_dram_tile);
+        ctx.uop_dram_limit = Some(uop_dram_tile + arena_uops as u32);
+        ctx
     }
 
     /// Architecture this stream targets.
@@ -237,6 +260,15 @@ impl CommandContext {
     /// arena at synchronize time and returns its cache id.
     pub fn register_kernel(&mut self, kernel: &UopKernel) -> Result<usize, RuntimeError> {
         let tile = self.uop_dram_next;
+        if let Some(limit) = self.uop_dram_limit {
+            if tile + kernel.words.len() as u32 > limit {
+                return Err(RuntimeError::UopArenaFull {
+                    tile,
+                    need: kernel.words.len(),
+                    limit,
+                });
+            }
+        }
         let id = self.uops.register(tile, kernel.words.len())?;
         // Only advance the arena for genuinely new registrations.
         if self.kernel_writes.iter().all(|(t, _)| *t != tile) {
@@ -353,9 +385,94 @@ impl CommandContext {
         Ok(stats)
     }
 
+    /// Seal the pending stream into a replayable [`SealedStream`]
+    /// *without* executing it.
+    ///
+    /// Performs the same finalization as [`Self::synchronize`] (FINISH
+    /// sentinel, binary round-trip through the fetch-module encoding)
+    /// but hands the stream to the caller instead of a device. Two
+    /// properties make each sealed stream individually replayable, in
+    /// any order relative to other streams:
+    ///
+    /// * the micro-op cache's *residency* is reset at every seal, so
+    ///   any stream recorded afterwards re-emits a `LOAD.UOP` for
+    ///   every kernel it uses; and
+    /// * the stream carries **every** kernel word registered on this
+    ///   context so far (not just the ones since the last seal), so
+    ///   its `LOAD.UOP`s never read DRAM that only an earlier stream
+    ///   would have written. Rewriting a few KiB of kernel words per
+    ///   replay is the price of order-independence.
+    ///
+    /// The instruction/dependence state is left empty for the next
+    /// stream; registrations and the kernel-word log persist.
+    pub fn seal(&mut self) -> Result<SealedStream, RuntimeError> {
+        let mut finish = DepFlags::NONE;
+        if let Some(idx) = self.last_of[CoreModule::Store.index()] {
+            let deps = self.insns[idx].deps_mut();
+            if !deps.push_prev {
+                deps.push_prev = true;
+            }
+            finish.pop_next = true;
+        }
+        self.push(Instruction::Finish(finish));
+
+        let kernel_writes: Vec<(u32, Vec<u32>)> = self.kernel_writes.clone();
+        let bytes = Instruction::encode_stream(&self.insns)?;
+        let insns = Instruction::decode_stream(&bytes)?;
+        debug_assert_eq!(insns, self.insns);
+
+        self.insns.clear();
+        self.last_of = [None; 3];
+        self.pending_pop = [(false, false); 3];
+        self.uops.reset_residency();
+        Ok(SealedStream { insns, kernel_writes })
+    }
+
     /// Borrow the pending stream (testing / inspection).
     pub fn pending(&self) -> &[Instruction] {
         &self.insns
+    }
+}
+
+/// A finalized, replayable instruction stream — the run-many half of
+/// the compile-once/run-many split.
+///
+/// Produced by [`CommandContext::seal`]; owns everything a replay
+/// needs besides the data buffers: the decoded instruction stream
+/// (FINISH-terminated, already round-tripped through the binary
+/// encoding) and the generated kernel words destined for the plan's
+/// DRAM uop arena. [`SealedStream::run`] is idempotent with respect to
+/// device state outside the stream's own buffers, so a cached plan can
+/// replay it once per inference.
+#[derive(Clone, Debug)]
+pub struct SealedStream {
+    insns: Vec<Instruction>,
+    kernel_writes: Vec<(u32, Vec<u32>)>,
+}
+
+impl SealedStream {
+    /// Number of instructions (including the FINISH sentinel).
+    pub fn len(&self) -> usize {
+        self.insns.len()
+    }
+
+    /// True when the stream holds no instructions.
+    pub fn is_empty(&self) -> bool {
+        self.insns.is_empty()
+    }
+
+    /// The instruction stream (inspection / tests).
+    pub fn insns(&self) -> &[Instruction] {
+        &self.insns
+    }
+
+    /// Execute the stream on `device`: (re)write the generated kernel
+    /// words to the stream's DRAM arena, then run to completion.
+    pub fn run(&self, device: &mut dyn Device) -> Result<SimStats, RuntimeError> {
+        for (tile, words) in &self.kernel_writes {
+            device.write_u32(*tile as usize * 4, words)?;
+        }
+        Ok(device.run(&self.insns)?)
     }
 }
 

@@ -20,7 +20,7 @@ mod device;
 mod uop_kernel;
 
 pub use alloc::{AllocError, FreeListAllocator};
-pub use command::{CommandContext, CoreModule, RuntimeError, VtaRuntime};
+pub use command::{CommandContext, CoreModule, RuntimeError, SealedStream, VtaRuntime};
 pub use device::{Device, SimDevice};
 pub use uop_kernel::{UopCache, UopError, UopKernel, UopKernelBuilder};
 

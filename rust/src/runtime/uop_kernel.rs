@@ -202,6 +202,20 @@ impl UopCache {
         Ok(id)
     }
 
+    /// Forget all residency state (the SRAM allocator and every
+    /// kernel's resident offset) without dropping the registrations.
+    ///
+    /// Used when sealing a replayable stream: the next stream recorded
+    /// against this cache must re-emit a `LOAD.UOP` for every kernel it
+    /// uses, so the stream stays self-contained no matter what ran on
+    /// the device in between (the counters are left untouched).
+    pub fn reset_residency(&mut self) {
+        self.sram.reset();
+        for k in &mut self.kernels {
+            k.resident_at = None;
+        }
+    }
+
     /// Make kernel `id` resident; returns its SRAM uop offset. Emits a
     /// `LOAD.UOP` into `out` on a miss.
     pub fn ensure_resident(

@@ -3,9 +3,12 @@
 //! runtime, must agree bit-exactly with the Rust-native stack (host
 //! references and the VTA behavioral simulator).
 //!
-//! These tests need `make artifacts`; they skip (with a notice) when
-//! the artifact directory is missing so plain `cargo test` stays green
-//! in a fresh checkout.
+//! These tests need `make artifacts` AND the `pjrt` cargo feature
+//! with the `xla` crate added to `[dependencies]` (the offline
+//! default build stubs the XLA backend out); they also
+//! skip (with a notice) when the artifact directory is missing so
+//! plain `cargo test --features pjrt` stays green in a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use vta::arch::VtaConfig;
 use vta::compiler::plan::{MatmulParams, Requant};
