@@ -7,8 +7,8 @@ rejects; the text parser reassigns ids and round-trips cleanly.
 Artifacts (all lowered with ``return_tuple=True``):
 
 * per-operator CPU kernels, named by the scheme in
-  ``rust/src/exec/executor.rs::artifact_name`` (weights are runtime
-  parameters, appended after the activations);
+  ``rust/src/compiler/op.rs`` (each operator's ``VtaOp::artifact_name``;
+  weights are runtime parameters, appended after the activations);
 * ``resnet18_cpu`` — the full CPU-only quantized model, weights as
   parameters in ``model.WEIGHT_ORDER`` (the Fig 16 baseline);
 * ``gemm_pallas_*`` / ``requant_pallas_*`` / ``conv_pallas_*`` — the L1

@@ -102,4 +102,40 @@ fn main() {
         warm.latency_percentile(0.99) * 1e3,
         naive_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-9)
     );
+
+    // ---- op-generic offload: dense + ALU ops join the conv plans ------
+    let (mut g2, _) = fuse(resnet::resnet18(1, 42).unwrap());
+    let (vta2, cpu2) = partition(&mut g2, &PartitionPolicy::offload_all(&cfg));
+    println!(
+        "\n# offload-all policy (conv + dense + residual adds / ReLUs): \
+         {vta2} VTA nodes, {cpu2} CPU nodes"
+    );
+    let mut engine2 = ServingEngine::new(&cfg, 512 << 20, CpuBackend::Native, 2, 64);
+    let t0 = Instant::now();
+    let cold2 = engine2.run_batch(&g2, &inputs).unwrap();
+    let cold2_wall = t0.elapsed();
+    let t0 = Instant::now();
+    let warm2 = engine2.run_batch(&g2, &inputs).unwrap();
+    let warm2_wall = t0.elapsed();
+    for (a, b) in warm.outputs.iter().zip(&warm2.outputs) {
+        assert_eq!(a, b, "offload-all changed model outputs");
+    }
+    assert_eq!(warm2.cache.misses, 0, "warm offload-all batch must not re-lower");
+    let mut kinds: Vec<_> = engine2.cached_kinds().into_iter().collect();
+    kinds.sort();
+    let kinds: Vec<String> = kinds.iter().map(|(k, n)| format!("{k} x{n}")).collect();
+    println!(
+        "cold: host wall {cold2_wall:>8.2?}  misses {}  ({} plans: {})",
+        cold2.cache.misses,
+        engine2.cached_plans(),
+        kinds.join(", ")
+    );
+    println!(
+        "warm: host wall {warm2_wall:>8.2?}  hits {}  model serial {:.1} ms  \
+         pipelined {:.1} ms ({:.2}x)",
+        warm2.cache.hits,
+        warm2.serial_seconds * 1e3,
+        warm2.pipelined_seconds * 1e3,
+        warm2.speedup()
+    );
 }

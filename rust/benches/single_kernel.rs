@@ -1,8 +1,11 @@
-//! Bench: Table 1 — the single-kernel conv2d experiment.
+//! Bench: Table 1 — the single-kernel experiment.
 //!
-//! Regenerates the paper's Table 1 rows plus, for each layer, the
+//! Regenerates the paper's Table 1 rows plus, for each conv layer, the
 //! simulated performance of the lowered kernel (cycles, GOPS, GEMM
-//! utilization) and the host-side compile+simulate wall time.
+//! utilization) and the host-side compile+simulate wall time — then
+//! the non-conv operator classes the registry lowers: the Dense
+//! classifier on the GEMM intrinsic and ALU-class elementwise kernels
+//! (residual add, ReLU) on the tensor-ALU micro-op path.
 //!
 //! Run: `cargo bench --bench single_kernel`
 
@@ -10,8 +13,14 @@ mod common;
 
 use std::time::Instant;
 use vta::arch::VtaConfig;
+use vta::compiler::{
+    compile_dense, compile_eltwise, pack_acc_i32, pack_matrix_a, pack_matrix_w, EltwiseKind,
+    MatmulParams, Requant,
+};
 use vta::graph::resnet::{table1_params, TABLE1};
 use vta::metrics::Roofline;
+use vta::runtime::VtaRuntime;
+use vta::util::{Tensor, XorShiftRng};
 
 fn main() {
     let cfg = VtaConfig::pynq();
@@ -61,5 +70,71 @@ fn main() {
             total_ops as f64 / total_cycles as f64 / cfg.gemm.ops_per_cycle() as f64 * 100.0,
             cfg.peak_gops()
         );
+    }
+
+    non_conv_kernels(&cfg);
+}
+
+/// The operator classes beyond conv2d that the registry lowers: the
+/// FC classifier on the GEMM intrinsic, and elementwise add / ReLU on
+/// the tensor ALU (compile-once, replayed).
+fn non_conv_kernels(cfg: &VtaConfig) {
+    println!(
+        "\n# Non-conv operator kernels (compile-once / run-many, {} @ {:.0} MHz, vt=2)",
+        cfg.gemm,
+        cfg.clock_hz / 1e6
+    );
+    println!(
+        "{:<22} {:>12} {:>10} {:>8} {:>10} {:>10}",
+        "kernel", "elems/MACs", "cycles", "sim ms", "GOPS", "compile ms"
+    );
+    let mut rng = XorShiftRng::new(77);
+    let mut rt = VtaRuntime::new(cfg, 256 << 20);
+
+    // Dense: the ResNet-18 classifier (512 → 1000).
+    let p = MatmulParams { m: 1, k: 512, n: 1000, requant: Requant { shift: 6, relu: false } };
+    let w = Tensor::from_vec(&[p.n, p.k], rng.vec_i8(p.n * p.k, -4, 4)).unwrap();
+    let a = Tensor::from_vec(&[p.m, p.k], rng.vec_i8(p.m * p.k, -16, 16)).unwrap();
+    let t0 = Instant::now();
+    let dense = compile_dense(&mut rt, &p, &pack_matrix_w(cfg, &w), 2).unwrap();
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (_, s) = dense.execute(&mut rt, &[pack_matrix_a(cfg, &a)]).unwrap();
+    println!(
+        "{:<22} {:>12} {:>10} {:>8.3} {:>10.2} {:>10.1}",
+        "dense 512->1000",
+        p.m * p.k * p.n,
+        s.total_cycles,
+        s.total_cycles as f64 / cfg.clock_hz * 1e3,
+        p.ops() as f64 / s.total_cycles as f64 * cfg.clock_hz / 1e9,
+        compile_ms
+    );
+    dense.free(&mut rt).unwrap();
+
+    // ALU elementwise kernels over a mid-network activation tensor.
+    let shape = [1usize, 64, 56, 56];
+    let len: usize = shape.iter().product();
+    let x = Tensor::from_vec(&shape, rng.vec_i8(len, -100, 100)).unwrap();
+    let y = Tensor::from_vec(&shape, rng.vec_i8(len, -100, 100)).unwrap();
+    let alu_cases =
+        [("add 1x64x56x56", EltwiseKind::AddSat), ("relu 1x64x56x56", EltwiseKind::Relu)];
+    for (name, kind) in alu_cases {
+        let t0 = Instant::now();
+        let k = compile_eltwise(&mut rt, kind, len, 2).unwrap();
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let packed = match kind {
+            EltwiseKind::AddSat => vec![pack_acc_i32(cfg, &x), pack_acc_i32(cfg, &y)],
+            EltwiseKind::Relu => vec![pack_acc_i32(cfg, &x)],
+        };
+        let (_, s) = k.execute(&mut rt, &packed).unwrap();
+        println!(
+            "{:<22} {:>12} {:>10} {:>8.3} {:>10.2} {:>10.1}",
+            name,
+            len,
+            s.total_cycles,
+            s.total_cycles as f64 / cfg.clock_hz * 1e3,
+            len as f64 / s.total_cycles as f64 * cfg.clock_hz / 1e9,
+            compile_ms
+        );
+        k.free(&mut rt).unwrap();
     }
 }

@@ -1,0 +1,180 @@
+//! Elementwise operators on the tensor-ALU micro-op path (§2.5).
+//!
+//! The paper's microcode-ISA "can be extended for higher operator
+//! coverage"; this module proves the software side of that claim by
+//! lowering whole-tensor elementwise operators — saturating residual
+//! addition and standalone ReLU — onto ALU micro-ops, the same way
+//! `examples/custom_operator.rs` hand-builds a vector add:
+//!
+//! * operands are widened host-side to the int32 accumulator layout
+//!   ([`super::layout::pack_acc_i32`]) and DMA'd into register-file
+//!   contexts (ACC loads execute on the *compute* module, so loads and
+//!   ALU ops of one strip serialize in program order — no RAW tokens
+//!   needed within a strip),
+//! * one looped ALU micro-op sweeps the strip
+//!   (`acc[dst] = op(acc[dst], acc[src] | imm)`; every write is
+//!   mirrored, narrowed, into the output buffer), and
+//! * the strips rotate across SRAM contexts with the usual
+//!   compute↔store WAR/RAW tokens, so stores of strip *i* overlap
+//!   compute of strip *i + 1* under virtual threading.
+//!
+//! `AddSat` is ADD followed by an `Rq` clamp with a zero shift —
+//! bit-exact saturating int8 addition. `Relu` is a single MAX with a
+//! zero immediate.
+
+use super::conv2d::CompileError;
+use super::plan::EltwisePlan;
+use super::virtual_thread::StripPipeline;
+use crate::graph::Op;
+use crate::isa::{AluOpcode, AluUop, BufferId, Uop};
+use crate::runtime::{CommandContext, RuntimeError, UopKernel, UopKernelBuilder};
+use std::collections::HashMap;
+
+/// Which elementwise operator an ALU-path plan implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EltwiseKind {
+    /// Saturating int8 tensor-tensor addition (residual connections).
+    AddSat,
+    /// ReLU: max with a zero immediate.
+    Relu,
+}
+
+impl EltwiseKind {
+    /// Number of variable input tensors.
+    pub fn operands(&self) -> usize {
+        match self {
+            EltwiseKind::AddSat => 2,
+            EltwiseKind::Relu => 1,
+        }
+    }
+
+    /// The graph operator this kind implements.
+    pub fn graph_op(&self) -> Op {
+        match self {
+            EltwiseKind::AddSat => Op::Add,
+            EltwiseKind::Relu => Op::Relu,
+        }
+    }
+}
+
+/// Tile-granular DRAM base addresses of an elementwise node's images:
+/// operand images in accumulator tiles, output in out-buffer tiles.
+#[derive(Clone, Debug)]
+pub(crate) struct EltwiseDramBase {
+    pub inputs: Vec<u32>,
+    pub out: u32,
+}
+
+/// Emit the full elementwise instruction stream for `plan` into `ctx`,
+/// calling `boundary` once at the end (the stream has no intermediate
+/// drain points). Mirrors the shape of
+/// [`super::conv2d::emit_conv2d`] / [`super::matmul::emit_matmul`].
+pub(crate) fn emit_eltwise<F>(
+    ctx: &mut CommandContext,
+    kind: EltwiseKind,
+    plan: &EltwisePlan,
+    base: &EltwiseDramBase,
+    mut boundary: F,
+) -> Result<(), CompileError>
+where
+    F: FnMut(&mut CommandContext) -> Result<(), CompileError>,
+{
+    let cfg = ctx.config().clone();
+    debug_assert_eq!(base.inputs.len(), kind.operands());
+
+    // Context stride, bounded by the ISA-addressable depth (see
+    // plan.rs) of BOTH the register file and the output buffer: every
+    // ALU write is mirrored into the out buffer at the same index, so
+    // an ACC-only stride would overflow a shallower out SRAM.
+    let acc_ctx_stride = cfg.acc_depth().min(cfg.out_depth()).min(1 << 11) / 2;
+
+    // Kernel cache: (context, strip length) → (id, kernel). The kernel
+    // is a single micro-op swept over the strip; ADD and the Rq clamp
+    // share it (the opcode/immediate live in the CISC instruction).
+    let mut kernels: HashMap<(usize, usize), (usize, UopKernel)> = HashMap::new();
+    let mut pipe = StripPipeline::new(plan.contexts);
+
+    let mut t0 = 0usize;
+    while t0 < plan.tiles {
+        let t_cur = plan.chunk.min(plan.tiles - t0);
+        let tok = pipe.begin();
+        let off = if tok.context == 1 { acc_ctx_stride } else { 0 };
+
+        // WAR against the previous strip on this context: the pop
+        // attaches to the first compute-module instruction below (the
+        // first ACC load).
+        pipe.compute_prologue(ctx, tok)?;
+
+        // Operand loads into the register file. Operand j lives at
+        // [off + j * chunk, off + j * chunk + t_cur).
+        for (j, &inp) in base.inputs.iter().enumerate() {
+            ctx.load_buffer_2d(
+                BufferId::Acc,
+                (off + j * plan.chunk) as u32,
+                inp + t0 as u32,
+                1,
+                t_cur as u16,
+                t_cur as u16,
+                [0; 4],
+            );
+        }
+
+        // Tensor-tensor kinds read operand B at `off + chunk`;
+        // immediate-only kinds keep src == dst (the field is unused but
+        // still encoded in the 11-bit micro-op index).
+        let src_base = if kind.operands() > 1 { off + plan.chunk } else { off };
+        let (kid, kernel) = get_kernel(
+            &mut kernels,
+            ctx,
+            (tok.context, t_cur),
+            off as u16,
+            src_base as u16,
+            t_cur as u16,
+        )?;
+
+        match kind {
+            EltwiseKind::AddSat => {
+                // Tensor-tensor ADD (int32, cannot overflow for int8
+                // operands), then clamp into the int8 range: Rq with a
+                // zero shift is `clamp(a >> 0, -128, 127)` — exactly
+                // `Graph::saturating_add`. The final ALU write narrows
+                // into the output buffer.
+                ctx.push_alu(kid, &kernel, AluOpcode::Add, false, 0)?;
+                ctx.push_alu(kid, &kernel, AluOpcode::Rq, true, 0)?;
+            }
+            EltwiseKind::Relu => {
+                ctx.push_alu(kid, &kernel, AluOpcode::Max, true, 0)?;
+            }
+        }
+        pipe.alu_epilogue(ctx)?;
+
+        ctx.store_buffer_2d(off as u32, base.out + t0 as u32, 1, t_cur as u16, t_cur as u16);
+        pipe.stores_epilogue(ctx)?;
+
+        t0 += t_cur;
+    }
+    boundary(ctx)?;
+    Ok(())
+}
+
+/// One-uop strip kernel, cached per (context, strip length).
+fn get_kernel(
+    cache: &mut HashMap<(usize, usize), (usize, UopKernel)>,
+    ctx: &mut CommandContext,
+    key: (usize, usize),
+    dst: u16,
+    src: u16,
+    extent: u16,
+) -> Result<(usize, UopKernel), CompileError> {
+    if let Some((id, k)) = cache.get(&key) {
+        return Ok((*id, k.clone()));
+    }
+    let mut b = UopKernelBuilder::new();
+    b.loop_begin(extent, 1, 1, 0).map_err(RuntimeError::Uop)?;
+    b.push(Uop::Alu(AluUop { dst_idx: dst, src_idx: src })).map_err(RuntimeError::Uop)?;
+    b.loop_end().map_err(RuntimeError::Uop)?;
+    let kernel = b.finish().map_err(RuntimeError::Uop)?;
+    let id = ctx.register_kernel(&kernel)?;
+    cache.insert(key, (id, kernel.clone()));
+    Ok((id, kernel))
+}

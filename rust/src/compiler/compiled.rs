@@ -1,72 +1,87 @@
 //! Compile-once / run-many lowering (§3's "JIT compiler" applied at
-//! whole-node granularity).
+//! whole-node granularity), for **every** registered operator.
 //!
-//! [`lower_conv2d`](super::lower_conv2d) re-plans, re-packs, re-emits
-//! and re-encodes on every invocation — fine for one-shot benchmarks,
-//! wasteful for serving, where the same (operator params, weights,
-//! `VtaConfig`) triple runs on every inference. [`compile_conv2d`]
-//! performs all input-independent work exactly once and returns a
-//! [`CompiledConv2d`]:
+//! The one-shot paths ([`lower_conv2d`](super::lower_conv2d),
+//! [`lower_matmul`](super::lower_matmul)) re-plan, re-pack, re-emit
+//! and re-encode on every invocation — fine for one-shot benchmarks,
+//! wasteful for serving, where the same (operator params, constants,
+//! `VtaConfig`) triple runs on every inference. The `compile_*`
+//! functions here perform all input-independent work exactly once and
+//! return a [`CompiledNode`]:
 //!
-//! * the tiling plan,
-//! * persistent DRAM buffers for the input, weight, and output images
-//!   (weights are packed and copied in at compile time),
+//! * persistent DRAM buffers for every variable input and the output
+//!   image (constants — packed weights — are copied in at compile
+//!   time),
 //! * a private DRAM micro-kernel arena, and
 //! * one or more [`SealedStream`]s — finalized, replayable instruction
-//!   streams (one per drain boundary; a single stream for most plans).
+//!   streams (one per drain/group boundary; a single stream for most
+//!   plans).
 //!
-//! Executing the node ([`CompiledConv2d::execute`]) is then just: copy
-//! the packed input into the resident input buffer, replay the
-//! streams, copy the output tiles back. Each stream was recorded
-//! against a fresh residency state, so it re-loads every micro-kernel
-//! it uses and can be replayed in any order relative to other compiled
-//! nodes sharing the device.
+//! Executing the node ([`CompiledNode::execute`]) is then just: copy
+//! the packed inputs into the resident buffers, replay the streams,
+//! copy the output tiles back. Each stream was recorded against a
+//! fresh residency state, so it re-loads every micro-kernel it uses
+//! and can be replayed in any order relative to other compiled nodes
+//! sharing the device.
 //!
 //! The serving layer ([`crate::exec::serve`]) caches these under
-//! (config, params, weights) keys — the paper's micro-kernel LRU
-//! cache, extended to whole-node plans.
+//! (config, virtual threads, operator fingerprint) keys — the paper's
+//! micro-kernel LRU cache, extended to whole-node plans. Operator
+//! implementations ([`crate::compiler::op`]) decide which `compile_*`
+//! entry point serves which graph node.
 
+use super::alu::{emit_eltwise, EltwiseDramBase, EltwiseKind};
 use super::conv2d::{bytes_of_i8, emit_conv2d, CompileError, ConvDramBase};
-use super::plan::{plan_conv2d, Conv2dParams, Conv2dPlan};
+use super::matmul::{emit_matmul, MatmulDramBase};
+use super::plan::{plan_conv2d, plan_eltwise, plan_matmul, Conv2dParams, MatmulParams};
+use crate::graph::Op;
 use crate::runtime::{CommandContext, DramBuffer, SealedStream, VtaRuntime};
 use crate::sim::SimStats;
 
-/// Bytes of DRAM reserved per compiled node for generated micro-kernel
-/// words. Generously sized: a node's distinct kernels are bounded by a
-/// few strip-shape variants, each at most one micro-op SRAM deep
-/// (16 KiB on the Pynq point); overflow is caught by the recording
-/// context's arena bound, not silently overwritten.
+/// Bytes of DRAM reserved per compiled GEMM-class node for generated
+/// micro-kernel words. Generously sized: a node's distinct kernels are
+/// bounded by a few strip-shape variants, each at most one micro-op
+/// SRAM deep (16 KiB on the Pynq point); overflow is caught by the
+/// recording context's arena bound, not silently overwritten.
 const NODE_UOP_ARENA_BYTES: usize = 256 * 1024;
 
-/// A conv2d compiled for a specific `VtaConfig` + weight image:
-/// everything input-independent, done once.
+/// Bytes of DRAM reserved per compiled elementwise node: its kernels
+/// are single micro-ops (one per context and tail length).
+const ELTWISE_UOP_ARENA_BYTES: usize = 16 * 1024;
+
+/// A graph node compiled for a specific `VtaConfig` (+ constants):
+/// everything input-independent, done once. Operator-agnostic — the
+/// unit the serving layer's plan cache stores.
 #[derive(Debug)]
-pub struct CompiledConv2d {
-    /// The workload this plan implements.
-    pub params: Conv2dParams,
-    /// The tiling in force.
-    pub plan: Conv2dPlan,
+pub struct CompiledNode {
+    /// The graph operator this artifact implements (carries the shape
+    /// parameters the unpack step needs).
+    pub op: Op,
     /// Replayable instruction streams, in execution order (one per
-    /// drain boundary).
+    /// drain/group boundary).
     pub streams: Vec<SealedStream>,
-    inp_buf: DramBuffer,
-    wgt_buf: DramBuffer,
+    /// One DRAM buffer per variable input, in graph-input order; the
+    /// packed image handed to [`Self::execute`] must match each
+    /// buffer's size exactly.
+    inp_bufs: Vec<DramBuffer>,
+    /// Output image.
     out_buf: DramBuffer,
-    uop_buf: DramBuffer,
-    /// Expected packed-input image size (bytes).
-    inp_bytes: usize,
+    /// Buffers whose contents were baked in at compile time (packed
+    /// weights) plus the private micro-kernel arena.
+    baked_bufs: Vec<DramBuffer>,
 }
 
-impl CompiledConv2d {
-    /// Packed-input image size this plan expects (bytes), as produced
-    /// by [`super::pack_activations`] for a batch-1 NCHW input.
-    pub fn inp_bytes(&self) -> usize {
-        self.inp_bytes
+impl CompiledNode {
+    /// Expected packed size (bytes) of variable input `i`.
+    pub fn inp_bytes(&self, i: usize) -> usize {
+        self.inp_bufs[i].len
     }
 
     /// Total DRAM resident bytes held by this plan (buffers + arena).
     pub fn dram_bytes(&self) -> usize {
-        self.inp_buf.len + self.wgt_buf.len + self.out_buf.len + self.uop_buf.len
+        self.inp_bufs.iter().map(|b| b.len).sum::<usize>()
+            + self.out_buf.len
+            + self.baked_bufs.iter().map(|b| b.len).sum::<usize>()
     }
 
     /// Total instructions across all streams (reporting).
@@ -74,20 +89,29 @@ impl CompiledConv2d {
         self.streams.iter().map(|s| s.len()).sum()
     }
 
-    /// Run the compiled node on one packed input image; returns the
-    /// packed output tiles and the merged simulation statistics.
+    /// Run the compiled node on one set of packed input images;
+    /// returns the packed output image and the merged simulation
+    /// statistics.
     pub fn execute(
         &self,
         rt: &mut VtaRuntime,
-        inp_packed: &[i8],
+        packed_inputs: &[Vec<i8>],
     ) -> Result<(Vec<i8>, SimStats), CompileError> {
         assert_eq!(
-            inp_packed.len(),
-            self.inp_bytes,
-            "packed input size mismatch for compiled conv2d {:?}",
-            self.params
+            packed_inputs.len(),
+            self.inp_bufs.len(),
+            "input count mismatch for compiled {:?}",
+            self.op
         );
-        rt.copy_in(&self.inp_buf, bytes_of_i8(inp_packed))?;
+        for (buf, packed) in self.inp_bufs.iter().zip(packed_inputs) {
+            assert_eq!(
+                packed.len(),
+                buf.len,
+                "packed input size mismatch for compiled {:?}",
+                self.op
+            );
+            rt.copy_in(buf, bytes_of_i8(packed))?;
+        }
         let mut stats = SimStats::default();
         for stream in &self.streams {
             stats.merge(&stream.run(&mut rt.device)?);
@@ -99,15 +123,18 @@ impl CompiledConv2d {
 
     /// Release the plan's DRAM residency (cache eviction).
     pub fn free(self, rt: &mut VtaRuntime) -> Result<(), CompileError> {
-        rt.dram.free(self.inp_buf)?;
-        rt.dram.free(self.wgt_buf)?;
+        for buf in self.inp_bufs {
+            rt.dram.free(buf)?;
+        }
         rt.dram.free(self.out_buf)?;
-        rt.dram.free(self.uop_buf)?;
+        for buf in self.baked_bufs {
+            rt.dram.free(buf)?;
+        }
         Ok(())
     }
 }
 
-/// Compile one conv2d layer into a reusable [`CompiledConv2d`].
+/// Compile one conv2d layer into a reusable [`CompiledNode`].
 ///
 /// `wgt_packed` is the tiled weight image from
 /// [`super::pack_weights`]; it is copied into device DRAM here, once.
@@ -124,7 +151,7 @@ pub fn compile_conv2d(
     p: &Conv2dParams,
     wgt_packed: &[i8],
     virtual_threads: usize,
-) -> Result<CompiledConv2d, CompileError> {
+) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
     let plan = plan_conv2d(&cfg, p, virtual_threads)?;
 
@@ -157,29 +184,107 @@ pub fn compile_conv2d(
         Ok(())
     })?;
 
-    Ok(CompiledConv2d { params: *p, plan, streams, inp_buf, wgt_buf, out_buf, uop_buf, inp_bytes })
+    Ok(CompiledNode {
+        op: Op::Conv2d { p: *p },
+        streams,
+        inp_bufs: vec![inp_buf],
+        out_buf,
+        baked_bufs: vec![wgt_buf, uop_buf],
+    })
 }
 
-/// A compiled graph node — the unit the serving layer's plan cache
-/// stores. Conv2d is the only VTA-resident operator today; the enum
-/// leaves room for matmul (dense offload) and fused subgraphs.
-#[derive(Debug)]
-pub enum CompiledNode {
-    Conv2d(CompiledConv2d),
+/// Compile one dense (matmul) layer into a reusable [`CompiledNode`] —
+/// the compile-once twin of [`super::lower_matmul`], and the path that
+/// puts `Op::Dense` nodes on the VTA.
+///
+/// `wgt_packed` is the tiled `(N, K)` weight image from
+/// [`super::pack_matrix_w`]. One sealed stream per weight group
+/// (matmul always synchronizes between groups).
+pub fn compile_dense(
+    rt: &mut VtaRuntime,
+    p: &MatmulParams,
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+) -> Result<CompiledNode, CompileError> {
+    let cfg = rt.ctx.config().clone();
+    let plan = plan_matmul(&cfg, p, virtual_threads)?;
+    let m_rows = p.m / cfg.gemm.batch;
+
+    let inp_tile_bytes = cfg.inp_tile_bytes();
+    let wgt_tile_bytes = cfg.wgt_tile_bytes();
+    let out_tile_bytes = cfg.out_tile_bytes();
+    let a_bytes = m_rows * plan.kb * inp_tile_bytes;
+    let out_tiles = m_rows * plan.nb;
+
+    let a_buf = rt.alloc_aligned(a_bytes, inp_tile_bytes)?;
+    let w_buf = rt.alloc_aligned(wgt_packed.len(), wgt_tile_bytes)?;
+    let out_buf = rt.alloc_aligned(out_tiles * out_tile_bytes, out_tile_bytes)?;
+    let uop_buf = rt.alloc_aligned(NODE_UOP_ARENA_BYTES, 4)?;
+    rt.copy_in(&w_buf, bytes_of_i8(wgt_packed))?;
+
+    let base = MatmulDramBase {
+        a: (a_buf.addr / inp_tile_bytes) as u32,
+        w: (w_buf.addr / wgt_tile_bytes) as u32,
+        c: (out_buf.addr / out_tile_bytes) as u32,
+    };
+
+    let mut ctx =
+        CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
+    let mut streams = Vec::new();
+    emit_matmul(&mut ctx, p, &plan, base, |ctx| {
+        streams.push(ctx.seal()?);
+        Ok(())
+    })?;
+
+    Ok(CompiledNode {
+        op: Op::Dense { p: *p },
+        streams,
+        inp_bufs: vec![a_buf],
+        out_buf,
+        baked_bufs: vec![w_buf, uop_buf],
+    })
 }
 
-impl CompiledNode {
-    /// DRAM resident bytes.
-    pub fn dram_bytes(&self) -> usize {
-        match self {
-            CompiledNode::Conv2d(c) => c.dram_bytes(),
-        }
-    }
+/// Compile one elementwise tensor-ALU operator over `len` int8
+/// elements into a reusable [`CompiledNode`] (saturating Add or ReLU —
+/// see [`crate::compiler::alu`]). No constants: the only baked buffer
+/// is the micro-kernel arena.
+pub fn compile_eltwise(
+    rt: &mut VtaRuntime,
+    kind: EltwiseKind,
+    len: usize,
+    virtual_threads: usize,
+) -> Result<CompiledNode, CompileError> {
+    let cfg = rt.ctx.config().clone();
+    let plan = plan_eltwise(&cfg, len, kind.operands(), virtual_threads)?;
 
-    /// Release DRAM residency.
-    pub fn free(self, rt: &mut VtaRuntime) -> Result<(), CompileError> {
-        match self {
-            CompiledNode::Conv2d(c) => c.free(rt),
-        }
+    let acc_tile_bytes = cfg.acc_tile_bytes();
+    let out_tile_bytes = cfg.out_tile_bytes();
+    let mut inp_bufs = Vec::with_capacity(kind.operands());
+    for _ in 0..kind.operands() {
+        inp_bufs.push(rt.alloc_aligned(plan.tiles * acc_tile_bytes, acc_tile_bytes)?);
     }
+    let out_buf = rt.alloc_aligned(plan.tiles * out_tile_bytes, out_tile_bytes)?;
+    let uop_buf = rt.alloc_aligned(ELTWISE_UOP_ARENA_BYTES, 4)?;
+
+    let base = EltwiseDramBase {
+        inputs: inp_bufs.iter().map(|b| (b.addr / acc_tile_bytes) as u32).collect(),
+        out: (out_buf.addr / out_tile_bytes) as u32,
+    };
+
+    let mut ctx =
+        CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, ELTWISE_UOP_ARENA_BYTES / 4);
+    let mut streams = Vec::new();
+    emit_eltwise(&mut ctx, kind, &plan, &base, |ctx| {
+        streams.push(ctx.seal()?);
+        Ok(())
+    })?;
+
+    Ok(CompiledNode {
+        op: kind.graph_op(),
+        streams,
+        inp_bufs,
+        out_buf,
+        baked_bufs: vec![uop_buf],
+    })
 }

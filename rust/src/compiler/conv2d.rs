@@ -42,6 +42,10 @@ pub enum CompileError {
     Runtime(#[from] RuntimeError),
     #[error("allocation error: {0}")]
     Alloc(#[from] crate::runtime::AllocError),
+    #[error("op {0} cannot run on the VTA device")]
+    NotOffloadable(&'static str),
+    #[error("missing weights")]
+    MissingWeights,
 }
 
 /// Result of running a lowered conv2d on the device.

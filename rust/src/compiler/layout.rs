@@ -201,6 +201,31 @@ pub fn pack_matrix_w(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
     out
 }
 
+/// Widen an int8 tensor into the int32 accumulator-tile layout the
+/// tensor-ALU path consumes ([`crate::compiler::alu`]): the tensor is
+/// flattened, zero-padded to whole `BATCH x BLOCK_OUT` tiles, and each
+/// lane becomes a little-endian i32 (the element type of the register
+/// file, as `DramState::read_i32` assembles it).
+pub fn pack_acc_i32(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
+    let lanes = cfg.gemm.batch * cfg.gemm.block_out;
+    let tiles = t.len().div_ceil(lanes).max(1);
+    let mut out = vec![0i8; tiles * lanes * 4];
+    for (i, &v) in t.data().iter().enumerate() {
+        for (j, b) in (v as i32).to_le_bytes().iter().enumerate() {
+            out[i * 4 + j] = *b as i8;
+        }
+    }
+    out
+}
+
+/// Inverse of the elementwise output image: the first
+/// `shape.product()` int8 lanes of the packed output tiles (padding
+/// lanes dropped).
+pub fn unpack_eltwise(packed: &[i8], shape: &[usize]) -> Tensor<i8> {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, packed[..n].to_vec()).expect("shape covers the unpacked lanes")
+}
+
 /// Unpack matmul output tiles (`m_b * NB + n_b`, `B x BO` i8) back to a
 /// row-major `(M, N)` matrix.
 pub fn unpack_matrix_c(cfg: &VtaConfig, packed: &[i8], m: usize, n: usize) -> Tensor<i8> {

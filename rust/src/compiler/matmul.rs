@@ -11,12 +11,20 @@
 //! Strip SRAM: a strip covers `m_t` row groups for `n_t` output blocks;
 //! acc index `ctx + n_i * m_t + m` so each `n_i` plane stores as one 2D
 //! STORE with DRAM stride `NB`.
+//!
+//! Like conv2d, the emission core ([`emit_matmul`]) is target-agnostic:
+//! it writes into any [`CommandContext`] and invokes a caller-supplied
+//! *boundary* action at the end of every weight group (matmul always
+//! synchronizes between groups). The two callers are [`lower_matmul`]
+//! (execute immediately — the one-shot path) and
+//! [`crate::compiler::compile_dense`] (seal into replayable streams —
+//! the plan-cache path that puts Dense layers on the VTA).
 
 use super::conv2d::CompileError;
 use super::plan::{plan_matmul, MatmulParams, MatmulPlan};
 use super::virtual_thread::StripPipeline;
 use crate::isa::{AluOpcode, AluUop, BufferId, GemmUop, Uop};
-use crate::runtime::{RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime};
+use crate::runtime::{CommandContext, RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime};
 use crate::sim::SimStats;
 use std::collections::HashMap;
 
@@ -29,7 +37,150 @@ pub struct MatmulOutput {
     pub plan: MatmulPlan,
 }
 
-/// Lower, execute, and read back `C = requant(A x W^T)`.
+/// Tile-granular DRAM base addresses of a matmul's three data images.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MatmulDramBase {
+    pub a: u32,
+    pub w: u32,
+    pub c: u32,
+}
+
+/// Emit the full matmul instruction stream for `plan` into `ctx`,
+/// calling `boundary` at the end of every weight group (the stream
+/// must be finalized there: group g+1's weights overwrite group g's
+/// weight-buffer residency). The boundary action either
+/// executes-and-merges (one-shot lowering) or seals a replayable
+/// stream (plan compilation).
+pub(crate) fn emit_matmul<F>(
+    ctx: &mut CommandContext,
+    p: &MatmulParams,
+    plan: &MatmulPlan,
+    base: MatmulDramBase,
+    mut boundary: F,
+) -> Result<(), CompileError>
+where
+    F: FnMut(&mut CommandContext) -> Result<(), CompileError>,
+{
+    let cfg = ctx.config().clone();
+    let virtual_threads = plan.contexts;
+    let m_rows = p.m / cfg.gemm.batch;
+
+    // Context strides use the ISA-addressable depth (see plan.rs).
+    let inp_ctx_stride = cfg.inp_depth().min(1 << 11) / 2;
+    let acc_ctx_stride = cfg.acc_depth().min(1 << 11) / 2;
+
+    // Kernel cache: (kind, context, m_cur, n_cur) → (id, kernel).
+    let mut kernels: HashMap<(u8, usize, usize, usize), (usize, UopKernel)> = HashMap::new();
+
+    let groups = plan.nb.div_ceil(plan.n_t);
+    for g in 0..groups {
+        let n0 = g * plan.n_t;
+        let n_cur_g = plan.n_t.min(plan.nb - n0);
+        let mut pipe = StripPipeline::new(virtual_threads);
+
+        // Group-resident weights: n_cur_g x KB tiles, contiguous.
+        let wtiles = n_cur_g * plan.kb;
+        ctx.load_buffer_2d(
+            BufferId::Wgt,
+            0,
+            base.w + (n0 * plan.kb) as u32,
+            1,
+            wtiles as u16,
+            wtiles as u16,
+            [0; 4],
+        );
+
+        let mut m0 = 0;
+        while m0 < m_rows {
+            let m_cur = plan.m_t.min(m_rows - m0);
+            let tok = pipe.begin();
+            let inp_off = if tok.context == 1 { inp_ctx_stride } else { 0 };
+            let acc_off = if tok.context == 1 { acc_ctx_stride } else { 0 };
+
+            // Loads: m_cur row groups of A, contiguous tiles.
+            pipe.loads_prologue(ctx, tok)?;
+            let atiles = m_cur * plan.kb;
+            ctx.load_buffer_2d(
+                BufferId::Inp,
+                inp_off as u32,
+                base.a + (m0 * plan.kb) as u32,
+                1,
+                atiles as u16,
+                atiles as u16,
+                [0; 4],
+            );
+            pipe.loads_epilogue(ctx)?;
+
+            pipe.compute_prologue(ctx, tok)?;
+
+            // Reset: one uop swept over (m_cur, n_cur_g).
+            let rkey = (1u8, tok.context, m_cur, n_cur_g);
+            let (rid, rk) = get_kernel(&mut kernels, ctx, rkey, |b| {
+                b.loop_begin(m_cur as u16, 1, 0, 0)?;
+                b.loop_begin(n_cur_g as u16, m_cur as u16, 0, 0)?;
+                b.push(Uop::Gemm(GemmUop { acc_idx: acc_off as u16, inp_idx: 0, wgt_idx: 0 }))?;
+                b.loop_end()?;
+                b.loop_end()?;
+                Ok(())
+            })?;
+            ctx.push_gemm(rid, &rk, true)?;
+
+            // Main: reduce over k blocks.
+            let kb = plan.kb;
+            let mkey = (0u8, tok.context, m_cur, n_cur_g);
+            let (mid, mk) = get_kernel(&mut kernels, ctx, mkey, |b| {
+                b.loop_begin(m_cur as u16, 1, kb as u16, 0)?;
+                b.loop_begin(n_cur_g as u16, m_cur as u16, 0, kb as u16)?;
+                for k_b in 0..kb {
+                    b.push(Uop::Gemm(GemmUop {
+                        acc_idx: acc_off as u16,
+                        inp_idx: (inp_off + k_b) as u16,
+                        wgt_idx: k_b as u16,
+                    }))?;
+                }
+                b.loop_end()?;
+                b.loop_end()?;
+                Ok(())
+            })?;
+            ctx.push_gemm(mid, &mk, false)?;
+            pipe.gemm_epilogue(ctx)?;
+
+            // Requantize.
+            let n_acc = m_cur * n_cur_g;
+            let akey = (2u8, tok.context, m_cur, n_cur_g);
+            let (aid, ak) = get_kernel(&mut kernels, ctx, akey, |b| {
+                b.loop_begin(n_acc as u16, 1, 1, 0)?;
+                b.push(Uop::Alu(AluUop { dst_idx: acc_off as u16, src_idx: acc_off as u16 }))?;
+                b.loop_end()?;
+                Ok(())
+            })?;
+            let rq = p.requant;
+            let op = if rq.relu { AluOpcode::RqRelu } else { AluOpcode::Rq };
+            ctx.push_alu(aid, &ak, op, true, rq.shift as i16)?;
+            pipe.alu_epilogue(ctx)?;
+
+            // Stores: per n_i plane, m_cur rows of 1 tile, stride NB.
+            for n_i in 0..n_cur_g {
+                ctx.store_buffer_2d(
+                    (acc_off + n_i * m_cur) as u32,
+                    base.c + (m0 * plan.nb + n0 + n_i) as u32,
+                    m_cur as u16,
+                    1,
+                    plan.nb as u16,
+                );
+            }
+            pipe.stores_epilogue(ctx)?;
+            m0 += m_cur;
+        }
+
+        boundary(ctx)?;
+    }
+    Ok(())
+}
+
+/// Lower, execute, and read back `C = requant(A x W^T)` — the one-shot
+/// path (re-plans and re-emits on every call; the serving layer uses
+/// [`crate::compiler::compile_dense`] to pay the cost once).
 pub fn lower_matmul(
     rt: &mut VtaRuntime,
     p: &MatmulParams,
@@ -49,120 +200,19 @@ pub fn lower_matmul(
     rt.copy_in(&a_buf, cast_i8(a_packed))?;
     rt.copy_in(&w_buf, cast_i8(w_packed))?;
 
-    let a0 = (a_buf.addr / cfg.inp_tile_bytes()) as u32;
-    let w0 = (w_buf.addr / cfg.wgt_tile_bytes()) as u32;
-    let c0 = (out_buf.addr / cfg.out_tile_bytes()) as u32;
-
-    // Context strides use the ISA-addressable depth (see plan.rs).
-    let inp_ctx_stride = cfg.inp_depth().min(1 << 11) / 2;
-    let acc_ctx_stride = cfg.acc_depth().min(1 << 11) / 2;
+    let base = MatmulDramBase {
+        a: (a_buf.addr / cfg.inp_tile_bytes()) as u32,
+        w: (w_buf.addr / cfg.wgt_tile_bytes()) as u32,
+        c: (out_buf.addr / cfg.out_tile_bytes()) as u32,
+    };
 
     let mut stats = SimStats::default();
-    // Kernel cache: (kind, context, m_cur, n_cur) → (id, kernel).
-    let mut kernels: HashMap<(u8, usize, usize, usize), (usize, UopKernel)> = HashMap::new();
-
-    let groups = plan.nb.div_ceil(plan.n_t);
-    for g in 0..groups {
-        let n0 = g * plan.n_t;
-        let n_cur_g = plan.n_t.min(plan.nb - n0);
-        let mut pipe = StripPipeline::new(virtual_threads);
-
-        // Group-resident weights: n_cur_g x KB tiles, contiguous.
-        let wtiles = n_cur_g * plan.kb;
-        rt.ctx.load_buffer_2d(
-            BufferId::Wgt,
-            0,
-            w0 + (n0 * plan.kb) as u32,
-            1,
-            wtiles as u16,
-            wtiles as u16,
-            [0; 4],
-        );
-
-        let mut m0 = 0;
-        while m0 < m_rows {
-            let m_cur = plan.m_t.min(m_rows - m0);
-            let tok = pipe.begin();
-            let inp_off = if tok.context == 1 { inp_ctx_stride } else { 0 };
-            let acc_off = if tok.context == 1 { acc_ctx_stride } else { 0 };
-
-            // Loads: m_cur row groups of A, contiguous tiles.
-            pipe.loads_prologue(&mut rt.ctx, tok)?;
-            let atiles = m_cur * plan.kb;
-            rt.ctx.load_buffer_2d(
-                BufferId::Inp,
-                inp_off as u32,
-                a0 + (m0 * plan.kb) as u32,
-                1,
-                atiles as u16,
-                atiles as u16,
-                [0; 4],
-            );
-            pipe.loads_epilogue(&mut rt.ctx)?;
-
-            pipe.compute_prologue(&mut rt.ctx, tok)?;
-
-            // Reset: one uop swept over (m_cur, n_cur_g).
-            let rkey = (1u8, tok.context, m_cur, n_cur_g);
-            let (rid, rk) = get_kernel(&mut kernels, rt, rkey, |b| {
-                b.loop_begin(m_cur as u16, 1, 0, 0)?;
-                b.loop_begin(n_cur_g as u16, m_cur as u16, 0, 0)?;
-                b.push(Uop::Gemm(GemmUop { acc_idx: acc_off as u16, inp_idx: 0, wgt_idx: 0 }))?;
-                b.loop_end()?;
-                b.loop_end()?;
-                Ok(())
-            })?;
-            rt.ctx.push_gemm(rid, &rk, true)?;
-
-            // Main: reduce over k blocks.
-            let kb = plan.kb;
-            let mkey = (0u8, tok.context, m_cur, n_cur_g);
-            let (mid, mk) = get_kernel(&mut kernels, rt, mkey, |b| {
-                b.loop_begin(m_cur as u16, 1, kb as u16, 0)?;
-                b.loop_begin(n_cur_g as u16, m_cur as u16, 0, kb as u16)?;
-                for k_b in 0..kb {
-                    b.push(Uop::Gemm(GemmUop {
-                        acc_idx: acc_off as u16,
-                        inp_idx: (inp_off + k_b) as u16,
-                        wgt_idx: k_b as u16,
-                    }))?;
-                }
-                b.loop_end()?;
-                b.loop_end()?;
-                Ok(())
-            })?;
-            rt.ctx.push_gemm(mid, &mk, false)?;
-            pipe.gemm_epilogue(&mut rt.ctx)?;
-
-            // Requantize.
-            let n_acc = m_cur * n_cur_g;
-            let akey = (2u8, tok.context, m_cur, n_cur_g);
-            let (aid, ak) = get_kernel(&mut kernels, rt, akey, |b| {
-                b.loop_begin(n_acc as u16, 1, 1, 0)?;
-                b.push(Uop::Alu(AluUop { dst_idx: acc_off as u16, src_idx: acc_off as u16 }))?;
-                b.loop_end()?;
-                Ok(())
-            })?;
-            let rq = p.requant;
-            let op = if rq.relu { AluOpcode::RqRelu } else { AluOpcode::Rq };
-            rt.ctx.push_alu(aid, &ak, op, true, rq.shift as i16)?;
-            pipe.alu_epilogue(&mut rt.ctx)?;
-
-            // Stores: per n_i plane, m_cur rows of 1 tile, stride NB.
-            for n_i in 0..n_cur_g {
-                rt.ctx.store_buffer_2d(
-                    (acc_off + n_i * m_cur) as u32,
-                    c0 + (m0 * plan.nb + n0 + n_i) as u32,
-                    m_cur as u16,
-                    1,
-                    plan.nb as u16,
-                );
-            }
-            pipe.stores_epilogue(&mut rt.ctx)?;
-            m0 += m_cur;
-        }
-
-        stats.merge(&rt.synchronize()?);
+    {
+        let VtaRuntime { ctx, device, .. } = rt;
+        emit_matmul(ctx, p, &plan, base, |ctx| {
+            stats.merge(&ctx.synchronize(&mut *device)?);
+            Ok(())
+        })?;
     }
 
     let out_bytes = rt.copy_out(&out_buf)?;
@@ -175,7 +225,7 @@ pub fn lower_matmul(
 
 fn get_kernel(
     cache: &mut HashMap<(u8, usize, usize, usize), (usize, UopKernel)>,
-    rt: &mut VtaRuntime,
+    ctx: &mut CommandContext,
     key: (u8, usize, usize, usize),
     build: impl FnOnce(&mut UopKernelBuilder) -> Result<(), crate::runtime::UopError>,
 ) -> Result<(usize, UopKernel), CompileError> {
@@ -185,7 +235,7 @@ fn get_kernel(
     let mut b = UopKernelBuilder::new();
     build(&mut b).map_err(RuntimeError::Uop)?;
     let kernel = b.finish().map_err(RuntimeError::Uop)?;
-    let id = rt.ctx.register_kernel(&kernel)?;
+    let id = ctx.register_kernel(&kernel)?;
     cache.insert(key, (id, kernel.clone()));
     Ok((id, kernel))
 }

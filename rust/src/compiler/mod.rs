@@ -9,32 +9,45 @@
 //!   capacity accounting.
 //! * **Tensorization** (§4.2): [`conv2d`] and [`matmul`] lower loop
 //!   nests onto the `BATCH x BLOCK_IN x BLOCK_OUT` GEMM intrinsic via
-//!   micro-op kernels with affine index compression.
+//!   micro-op kernels with affine index compression; [`alu`] lowers
+//!   elementwise operators onto the tensor-ALU micro-op path.
 //! * **Latency hiding** (§4.3): [`virtual_thread`] interleaves the
 //!   lowered stream across SRAM contexts and inserts the explicit
 //!   RAW/WAR dependence push/pops of Fig 14.
 //!
 //! On top of those, [`compiled`] splits lowering into a compile-once
-//! phase (plan + pack weights + record replayable instruction streams)
-//! and a run-many phase — the substrate of the serving layer's plan
-//! cache ([`crate::exec::serve`]).
+//! phase (plan + pack constants + record replayable instruction
+//! streams) and a run-many phase, and [`op`] exposes the whole thing
+//! through one uniform interface: the [`VtaOp`] trait and the operator
+//! registry. The executor, the serving layer's plan cache
+//! ([`crate::exec::serve`]), and the partition pass all dispatch
+//! through the registry — adding an operator never touches them.
 
+pub mod alu;
 pub mod compiled;
 pub mod conv2d;
 pub mod layout;
 pub mod matmul;
+pub mod op;
 pub mod plan;
 pub mod reference;
 pub mod virtual_thread;
 
-pub use compiled::{compile_conv2d, CompiledConv2d, CompiledNode};
+pub use alu::EltwiseKind;
+pub use compiled::{compile_conv2d, compile_dense, compile_eltwise, CompiledNode};
 pub use conv2d::{lower_conv2d, CompileError, Conv2dOutput};
 pub use layout::{
-    pack_activations, pack_matrix_a, pack_matrix_w, pack_weights, unpack_activations,
-    unpack_matrix_c, unpack_outputs,
+    pack_acc_i32, pack_activations, pack_matrix_a, pack_matrix_w, pack_weights,
+    unpack_activations, unpack_eltwise, unpack_matrix_c, unpack_outputs,
 };
 pub use matmul::{lower_matmul, MatmulOutput};
-pub use plan::{Conv2dParams, Conv2dPlan, MatmulParams, MatmulPlan, PlanError, Requant};
+pub use op::{
+    config_fingerprint, execute_compiled, fnv1a64, lookup, op_impl, weights_fingerprint, VtaOp,
+    REGISTRY,
+};
+pub use plan::{
+    Conv2dParams, Conv2dPlan, EltwisePlan, MatmulParams, MatmulPlan, PlanError, Requant,
+};
 pub use virtual_thread::StripPipeline;
 
 #[cfg(test)]

@@ -1,0 +1,551 @@
+//! The unified operator-lowering API: the [`VtaOp`] trait and the
+//! operator registry.
+//!
+//! The paper's flexibility claim rests on the microcode-ISA
+//! "implement[ing] a wide variety of operators with single-cycle
+//! tensor-tensor operations" (§2.5). This module turns that claim into
+//! an *open* software interface: every graph operator is described by
+//! one [`VtaOp`] implementation that knows how to
+//!
+//! * decide whether a node can be lowered onto a given hardware
+//!   variant ([`VtaOp::offloadable`]) and whether the partition policy
+//!   wants it there ([`VtaOp::offload_policy`], [`VtaOp::cost`]),
+//! * fingerprint everything its compiled artifact depends on
+//!   ([`VtaOp::fingerprint`] — the plan-cache key material),
+//! * compile once into a replayable [`CompiledNode`]
+//!   ([`VtaOp::compile`]) and move data in and out of the packed DRAM
+//!   images ([`VtaOp::pack_inputs`] / [`VtaOp::unpack_output`]), and
+//! * compute the host-side reference semantics ([`VtaOp::reference`])
+//!   — the CPU execution path *and* the verification oracle.
+//!
+//! The executor, the serving engine, and the partition pass dispatch
+//! through [`op_impl`] instead of matching on `Op` variants, so adding
+//! an operator is purely additive: implement the trait, register the
+//! unit struct in [`REGISTRY`], done. `docs/ARCHITECTURE.md` has a
+//! worked "add your own operator" walkthrough.
+
+use super::compiled::{compile_conv2d, compile_dense, compile_eltwise, CompiledNode};
+use super::conv2d::CompileError;
+use super::layout::{
+    pack_acc_i32, pack_activations, pack_matrix_a, pack_weights, unpack_eltwise, unpack_matrix_c,
+    unpack_outputs,
+};
+use super::plan::{plan_conv2d, plan_eltwise, plan_matmul};
+use super::reference;
+use super::EltwiseKind;
+use crate::arch::VtaConfig;
+use crate::graph::{Graph, Node, Op, PartitionPolicy};
+use crate::runtime::VtaRuntime;
+use crate::sim::SimStats;
+use crate::util::Tensor;
+
+// ---------------------------------------------------------------------
+// Fingerprints (plan-cache key material).
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64-bit over a byte stream (same constants as
+/// `python/compile/synth.py::fnv1a64`).
+pub fn fnv1a64(data: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Fingerprint of a `VtaConfig`: plans compiled for one hardware
+/// variant are never served to another (cross-config isolation).
+pub fn config_fingerprint(cfg: &VtaConfig) -> u64 {
+    fnv1a64(format!("{cfg:?}").into_bytes())
+}
+
+/// Fingerprint of a weight tensor (shape + contents).
+pub fn weights_fingerprint(w: &Tensor<i8>) -> u64 {
+    let shape = w.shape().iter().flat_map(|d| (*d as u64).to_le_bytes());
+    let data = w.data().iter().map(|&v| v as u8);
+    fnv1a64(shape.chain(data))
+}
+
+// ---------------------------------------------------------------------
+// The operator trait.
+// ---------------------------------------------------------------------
+
+/// One graph operator's contract with the VTA stack.
+///
+/// Implementations are stateless unit structs; per-node parameters
+/// arrive through the [`Node`] (and its [`Op`] variant — the *only*
+/// place `Op` variants are matched is inside the operator's own
+/// implementation). All methods take `&self` so the trait stays
+/// object-safe and the registry can hold `&'static dyn VtaOp`.
+pub trait VtaOp: Sync {
+    /// Registry key; must equal [`Op::kind`] of the variants served.
+    fn kind(&self) -> &'static str;
+
+    /// True for the graph-input placeholder — the runner injects the
+    /// request tensor instead of executing anything.
+    fn is_input(&self) -> bool {
+        false
+    }
+
+    /// Capability: can this node be lowered onto the accelerator under
+    /// `cfg` with `virtual_threads` SRAM contexts? (Planning
+    /// feasibility, not policy — vt=1 has twice the per-context budget
+    /// of vt=2, so the answer depends on how the node will actually be
+    /// lowered.)
+    fn offloadable(&self, _cfg: &VtaConfig, _node: &Node, _virtual_threads: usize) -> bool {
+        false
+    }
+
+    /// Preference: does the partition `policy` want this (offloadable)
+    /// node on the VTA?
+    fn offload_policy(&self, _node: &Node, _policy: &PartitionPolicy) -> bool {
+        false
+    }
+
+    /// Integer-op cost estimate, used by the partition pass (nodes
+    /// under `policy.min_offload_ops` stay on the CPU) and for Amdahl
+    /// accounting.
+    fn cost(&self, node: &Node) -> u64 {
+        node.op.ops(&node.shape)
+    }
+
+    /// Fingerprint of everything the compiled artifact depends on
+    /// besides the hardware config and virtual-thread count: operator
+    /// parameters, output shape, and any baked-in constants (weights).
+    ///
+    /// The default hashes the `Op` debug form, the inferred output
+    /// shape, and the node's weight image (when present) — sufficient
+    /// for every built-in operator.
+    fn fingerprint(&self, g: &Graph, node: &Node) -> u64 {
+        let wfp = g.weights(node.id).map(weights_fingerprint).unwrap_or(0);
+        fnv1a64(format!("{:?}|{:?}|{wfp:016x}", node.op, node.shape).into_bytes())
+    }
+
+    /// XLA/PJRT artifact name for the CPU backend (naming scheme shared
+    /// with `python/compile/aot.py`); `None` when no artifact exists
+    /// for this operator class.
+    fn artifact_name(&self, _node: &Node) -> Option<String> {
+        None
+    }
+
+    /// Compile-once: perform all input-independent lowering (plan,
+    /// pack + copy constants into DRAM residency, record + seal the
+    /// instruction streams) and return the replayable artifact.
+    ///
+    /// The default refuses — CPU-resident operators report
+    /// [`CompileError::NotOffloadable`].
+    fn compile(
+        &self,
+        _rt: &mut VtaRuntime,
+        _g: &Graph,
+        _node: &Node,
+        _virtual_threads: usize,
+    ) -> Result<CompiledNode, CompileError> {
+        Err(CompileError::NotOffloadable(self.kind()))
+    }
+
+    /// Run-many, input half: pack the node's variable inputs into the
+    /// DRAM images the compiled plan expects (one image per graph
+    /// input, in input order).
+    fn pack_inputs(&self, _cfg: &VtaConfig, _inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        Vec::new()
+    }
+
+    /// Run-many, output half: unpack the compiled plan's output image
+    /// into the node's output tensor.
+    fn unpack_output(
+        &self,
+        _cfg: &VtaConfig,
+        _compiled: &CompiledNode,
+        _packed: &[i8],
+        _inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        unreachable!("operator {} does not compile to the VTA", self.kind())
+    }
+
+    /// Host-side reference semantics: the CPU-native execution path
+    /// and the oracle every lowered path is verified against.
+    fn reference(
+        &self,
+        g: &Graph,
+        node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError>;
+}
+
+/// Run a compiled node on concrete input tensors: pack → replay the
+/// sealed streams → unpack. The shared run-many path of the serial
+/// executor and the serving engine.
+pub fn execute_compiled(
+    entry: &dyn VtaOp,
+    compiled: &CompiledNode,
+    rt: &mut VtaRuntime,
+    inputs: &[&Tensor<i8>],
+) -> Result<(Tensor<i8>, SimStats), CompileError> {
+    let cfg = rt.ctx.config().clone();
+    let packed = entry.pack_inputs(&cfg, inputs);
+    let (out_packed, stats) = compiled.execute(rt, &packed)?;
+    Ok((entry.unpack_output(&cfg, compiled, &out_packed, inputs), stats))
+}
+
+// ---------------------------------------------------------------------
+// The registry.
+// ---------------------------------------------------------------------
+
+/// Every registered operator implementation. Order is presentation
+/// order only; lookup is by [`VtaOp::kind`].
+pub static REGISTRY: &[&'static dyn VtaOp] =
+    &[&InputVta, &Conv2dVta, &DenseVta, &AddVta, &ReluVta, &MaxPoolVta, &GapVta];
+
+/// Look up an operator implementation by kind string.
+pub fn lookup(kind: &str) -> Option<&'static dyn VtaOp> {
+    REGISTRY.iter().copied().find(|e| e.kind() == kind)
+}
+
+/// The implementation serving a graph operator. Every [`Op`] variant
+/// has a registered implementation, so this is total.
+pub fn op_impl(op: &Op) -> &'static dyn VtaOp {
+    lookup(op.kind()).expect("every operator kind is registered")
+}
+
+// ---------------------------------------------------------------------
+// Built-in operator implementations.
+// ---------------------------------------------------------------------
+
+fn shape_tag(s: &[usize]) -> String {
+    s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+}
+
+fn numel(node: &Node) -> usize {
+    node.shape.iter().product()
+}
+
+/// Graph-input placeholder: never executes; the runner injects the
+/// request tensor.
+pub struct InputVta;
+
+impl VtaOp for InputVta {
+    fn kind(&self) -> &'static str {
+        "input"
+    }
+
+    fn is_input(&self) -> bool {
+        true
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        _node: &Node,
+        _inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        unreachable!("graph inputs are injected by the runner")
+    }
+}
+
+/// 2D convolution on the GEMM intrinsic (§4.2) — the flagship
+/// tensorized operator.
+pub struct Conv2dVta;
+
+impl VtaOp for Conv2dVta {
+    fn kind(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        match &node.op {
+            Op::Conv2d { p } => plan_conv2d(cfg, p, virtual_threads).is_ok(),
+            _ => false,
+        }
+    }
+
+    fn offload_policy(&self, node: &Node, policy: &PartitionPolicy) -> bool {
+        match &node.op {
+            Op::Conv2d { p } => p.ic >= policy.min_conv_ic,
+            _ => false,
+        }
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        let Op::Conv2d { p } = &node.op else { return None };
+        Some(format!(
+            "conv_{}_{}_{}_{}_{}_{}",
+            p.h, p.ic, p.oc, p.k, p.s, p.requant.relu as u8
+        ))
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+    ) -> Result<CompiledNode, CompileError> {
+        let Op::Conv2d { p } = &node.op else {
+            return Err(CompileError::NotOffloadable(self.kind()));
+        };
+        let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
+        let cfg = rt.ctx.config().clone();
+        let wp = pack_weights(&cfg, w);
+        compile_conv2d(rt, p, &wp, virtual_threads)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        vec![pack_activations(cfg, inputs[0])]
+    }
+
+    fn unpack_output(
+        &self,
+        cfg: &VtaConfig,
+        compiled: &CompiledNode,
+        packed: &[i8],
+        inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        let Op::Conv2d { p } = &compiled.op else {
+            unreachable!("conv2d artifact carries conv2d params")
+        };
+        unpack_outputs(cfg, packed, inputs[0].shape()[0], p.oc, p.out_h(), p.out_w())
+    }
+
+    fn reference(
+        &self,
+        g: &Graph,
+        node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        let Op::Conv2d { p } = &node.op else {
+            unreachable!("conv2d entry serves conv2d nodes")
+        };
+        let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
+        Ok(reference::conv2d_ref(p, inputs[0], w))
+    }
+}
+
+/// Dense / fully-connected layer on the GEMM intrinsic — the Fig 13
+/// matmul workload, compile-once via [`compile_dense`].
+pub struct DenseVta;
+
+impl VtaOp for DenseVta {
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        match &node.op {
+            Op::Dense { p } => plan_matmul(cfg, p, virtual_threads).is_ok(),
+            _ => false,
+        }
+    }
+
+    fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
+        policy.offload_dense
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        let Op::Dense { p } = &node.op else { return None };
+        Some(format!("dense_{}_{}_{}", p.m, p.k, p.n))
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+    ) -> Result<CompiledNode, CompileError> {
+        let Op::Dense { p } = &node.op else {
+            return Err(CompileError::NotOffloadable(self.kind()));
+        };
+        let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
+        let cfg = rt.ctx.config().clone();
+        let wp = super::layout::pack_matrix_w(&cfg, w);
+        compile_dense(rt, p, &wp, virtual_threads)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        vec![pack_matrix_a(cfg, inputs[0])]
+    }
+
+    fn unpack_output(
+        &self,
+        cfg: &VtaConfig,
+        compiled: &CompiledNode,
+        packed: &[i8],
+        _inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        let Op::Dense { p } = &compiled.op else {
+            unreachable!("dense artifact carries matmul params")
+        };
+        unpack_matrix_c(cfg, packed, p.m, p.n)
+    }
+
+    fn reference(
+        &self,
+        g: &Graph,
+        node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        let Op::Dense { p } = &node.op else {
+            unreachable!("dense entry serves dense nodes")
+        };
+        let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
+        Ok(reference::dense_i8(p, inputs[0], w))
+    }
+}
+
+/// Saturating residual addition on the tensor-ALU micro-op path
+/// (tensor-tensor ADD, then an Rq clamp into the int8 range).
+pub struct AddVta;
+
+impl VtaOp for AddVta {
+    fn kind(&self) -> &'static str {
+        "add"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        plan_eltwise(cfg, numel(node), EltwiseKind::AddSat.operands(), virtual_threads).is_ok()
+    }
+
+    fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
+        policy.offload_alu
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        Some(format!("add_{}", shape_tag(&node.shape)))
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        _g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+    ) -> Result<CompiledNode, CompileError> {
+        compile_eltwise(rt, EltwiseKind::AddSat, numel(node), virtual_threads)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        vec![pack_acc_i32(cfg, inputs[0]), pack_acc_i32(cfg, inputs[1])]
+    }
+
+    fn unpack_output(
+        &self,
+        _cfg: &VtaConfig,
+        _compiled: &CompiledNode,
+        packed: &[i8],
+        inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        unpack_eltwise(packed, inputs[0].shape())
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        _node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        Ok(reference::add_i8(inputs[0], inputs[1]))
+    }
+}
+
+/// Standalone ReLU on the tensor-ALU micro-op path (MAX with a zero
+/// immediate). Most ReLUs fuse into their producer's requant epilogue;
+/// the survivors (after residual adds) can still offload.
+pub struct ReluVta;
+
+impl VtaOp for ReluVta {
+    fn kind(&self) -> &'static str {
+        "relu"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        plan_eltwise(cfg, numel(node), EltwiseKind::Relu.operands(), virtual_threads).is_ok()
+    }
+
+    fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
+        policy.offload_alu
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        _g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+    ) -> Result<CompiledNode, CompileError> {
+        compile_eltwise(rt, EltwiseKind::Relu, numel(node), virtual_threads)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        vec![pack_acc_i32(cfg, inputs[0])]
+    }
+
+    fn unpack_output(
+        &self,
+        _cfg: &VtaConfig,
+        _compiled: &CompiledNode,
+        packed: &[i8],
+        inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        unpack_eltwise(packed, inputs[0].shape())
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        _node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        Ok(reference::relu_i8(inputs[0]))
+    }
+}
+
+/// Max pooling — CPU-resident (the paper's evaluation keeps it on the
+/// ARM core).
+pub struct MaxPoolVta;
+
+impl VtaOp for MaxPoolVta {
+    fn kind(&self) -> &'static str {
+        "maxpool"
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        let Op::MaxPool { k, s, .. } = &node.op else { return None };
+        Some(format!("maxpool_{}_{}_{}", shape_tag(&node.shape), k, s))
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        let Op::MaxPool { k, s, pad } = &node.op else {
+            unreachable!("maxpool entry serves maxpool nodes")
+        };
+        Ok(reference::maxpool_i8(inputs[0], *k, *s, *pad))
+    }
+}
+
+/// Global average pooling — CPU-resident.
+pub struct GapVta;
+
+impl VtaOp for GapVta {
+    fn kind(&self) -> &'static str {
+        "gap"
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        Some(format!("gap_{}", shape_tag(&node.shape)))
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        _node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        Ok(reference::global_avg_pool_i8(inputs[0]))
+    }
+}

@@ -16,6 +16,10 @@ pub enum PlanError {
     InputsDontFit { tiles: usize, depth: usize },
     #[error("micro-kernel of {uops} uops exceeds the micro-op SRAM ({depth})")]
     KernelDoesntFit { uops: usize, depth: usize },
+    #[error(
+        "register file cannot hold one tile per operand ({operands} operands, {budget} tile budget)"
+    )]
+    RegisterFileDoesntFit { operands: usize, budget: usize },
     #[error("batch {n} is not a multiple of the hardware BATCH {b}")]
     BadBatch { n: usize, b: usize },
     #[error("{what} {v} exceeds the {bits}-bit ISA field")]
@@ -357,4 +361,43 @@ pub fn plan_matmul(
     check_width("matmul src f0", kb, 1 << 11)?;
     check_width("matmul wgt f1", kb, 1 << 10)?;
     Ok(MatmulPlan { kb, nb, m_t, n_t, contexts: virtual_threads })
+}
+
+/// Resolved tiling of an elementwise tensor-ALU operator
+/// ([`crate::compiler::alu`]): the flattened tensor, strip-mined over
+/// register-file contexts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EltwisePlan {
+    /// Total `BATCH x BLOCK_OUT` tiles covering the tensor.
+    pub tiles: usize,
+    /// Tiles per strip (per context; each operand occupies one
+    /// `chunk`-sized span of the context's register-file half).
+    pub chunk: usize,
+    /// SRAM contexts (1 = serialized, 2 = store/compute overlap).
+    pub contexts: usize,
+}
+
+/// Plan an elementwise ALU operator over `len` int8 elements with
+/// `operands` input tensors resident per strip.
+pub fn plan_eltwise(
+    cfg: &VtaConfig,
+    len: usize,
+    operands: usize,
+    virtual_threads: usize,
+) -> Result<EltwisePlan, PlanError> {
+    assert!(virtual_threads == 1 || virtual_threads == 2, "1 or 2 virtual threads");
+    assert!(operands >= 1);
+    let lanes = cfg.gemm.batch * cfg.gemm.block_out;
+    let tiles = len.div_ceil(lanes).max(1);
+    // Operands and results live in the register file; results are
+    // mirrored into the output buffer at the same indices, so both
+    // capacities bound the strip (per context).
+    let acc_budget = (cfg.acc_depth().min(1 << 11) / virtual_threads)
+        .min(cfg.out_depth().min(1 << 11) / virtual_threads);
+    let chunk = (acc_budget / operands).min(tiles);
+    if chunk == 0 {
+        return Err(PlanError::RegisterFileDoesntFit { operands, budget: acc_budget });
+    }
+    check_width("eltwise strip", chunk, 1 << 14)?;
+    Ok(EltwisePlan { tiles, chunk, contexts: virtual_threads })
 }

@@ -1,10 +1,15 @@
-//! Host-side golden models: plain NCHW int8 conv2d / matmul with the
-//! same int32 accumulation and shift-clip requantization the hardware
-//! performs. Every lowered kernel is validated against these oracles
-//! (and the oracles themselves against the JAX `ref.py` via the PJRT
-//! integration tests).
+//! Host-side golden models: plain int8 implementations of **every**
+//! graph operator, with the same int32 accumulation and shift-clip
+//! requantization the hardware performs. Every lowered kernel is
+//! validated against these oracles (and the oracles themselves against
+//! the JAX `ref.py` via the PJRT integration tests). They double as
+//! the native CPU execution path of the heterogeneous executor
+//! (re-exported through `crate::exec`), which is what makes
+//! [`crate::compiler::op::VtaOp::reference`] both "how the CPU runs
+//! this op" and "what the accelerator must match".
 
 use super::plan::{Conv2dParams, MatmulParams};
+use crate::graph::Graph;
 use crate::util::Tensor;
 
 /// Reference conv2d: `NCHW` int8 input, `OIHW` int8 weights, SAME
@@ -63,4 +68,80 @@ pub fn matmul_ref(p: &MatmulParams, a: &Tensor<i8>, w: &Tensor<i8>) -> Tensor<i8
         }
     }
     out
+}
+
+/// Max pooling over NCHW int8. Out-of-bounds taps are skipped (taps
+/// initialize at `i8::MIN`), matching the JAX model's `-inf`-padded
+/// `reduce_window`.
+pub fn maxpool_i8(x: &Tensor<i8>, k: usize, s: usize, pad: usize) -> Tensor<i8> {
+    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
+    let oh = (h + 2 * pad - k) / s + 1;
+    let ow = (w + 2 * pad - k) / s + 1;
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let src = x.data();
+    let dst = out.data_mut();
+    for nn in 0..n {
+        for cc in 0..c {
+            let plane = (nn * c + cc) * h * w;
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut m = i8::MIN;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (y * s + ky) as isize - pad as isize;
+                            let ix = (xx * s + kx) as isize - pad as isize;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                m = m.max(src[plane + iy as usize * w + ix as usize]);
+                            }
+                        }
+                    }
+                    dst[((nn * c + cc) * oh + y) * ow + xx] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling NCHW → [N, C], round-to-nearest-even-free
+/// integer mean (truncating division, matching the JAX model).
+pub fn global_avg_pool_i8(x: &Tensor<i8>) -> Tensor<i8> {
+    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
+    let mut out = Tensor::zeros(&[n, c]);
+    let src = x.data();
+    let dst = out.data_mut();
+    let area = (h * w) as i32;
+    for nn in 0..n {
+        for cc in 0..c {
+            let plane = (nn * c + cc) * h * w;
+            let sum: i32 = src[plane..plane + h * w].iter().map(|&v| v as i32).sum();
+            dst[nn * c + cc] = (sum / area).clamp(-128, 127) as i8;
+        }
+    }
+    out
+}
+
+/// Saturating int8 element-wise addition (residual connections) — the
+/// oracle for the ALU-path `AddSat` operator.
+pub fn add_i8(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i8> {
+    assert_eq!(a.shape(), b.shape());
+    let mut out = Tensor::zeros(a.shape());
+    for (o, (&x, &y)) in out.data_mut().iter_mut().zip(a.data().iter().zip(b.data())) {
+        *o = Graph::saturating_add(x, y);
+    }
+    out
+}
+
+/// ReLU — the oracle for the ALU-path `Relu` operator.
+pub fn relu_i8(x: &Tensor<i8>) -> Tensor<i8> {
+    let mut out = Tensor::zeros(x.shape());
+    for (o, &v) in out.data_mut().iter_mut().zip(x.data()) {
+        *o = v.max(0);
+    }
+    out
+}
+
+/// Dense layer `[M, K] x [N, K]^T → [M, N]` with requantization.
+pub fn dense_i8(p: &MatmulParams, x: &Tensor<i8>, w: &Tensor<i8>) -> Tensor<i8> {
+    matmul_ref(p, x, w)
 }

@@ -262,7 +262,7 @@ fn compiled_conv_replays_across_inputs() {
     for seed in 0..3u64 {
         let mut rng = XorShiftRng::new(40 + seed);
         let inp = random_nchw(&mut rng, &[1, p.ic, p.h, p.w]);
-        let (out, stats) = compiled.execute(&mut rt, &pack_activations(&cfg, &inp)).unwrap();
+        let (out, stats) = compiled.execute(&mut rt, &[pack_activations(&cfg, &inp)]).unwrap();
         let got = unpack_outputs(&cfg, &out, 1, p.oc, p.out_h(), p.out_w());
         assert_eq!(got, conv2d_ref(&p, &inp, &wgt), "replay {seed} diverged");
         cycles.push(stats.total_cycles);
@@ -288,7 +288,7 @@ fn compiled_conv_matches_lower_conv2d() {
 
     let mut rt2 = VtaRuntime::new(&cfg, 64 << 20);
     let compiled = compile_conv2d(&mut rt2, &p, &wp, 2).unwrap();
-    let (out, stats) = compiled.execute(&mut rt2, &ip).unwrap();
+    let (out, stats) = compiled.execute(&mut rt2, &[ip.clone()]).unwrap();
 
     assert_eq!(out, one_shot.out, "compiled vs one-shot output");
     assert_eq!(
@@ -323,7 +323,7 @@ fn compiled_conv_drain_groups_replays() {
 
     let expect = conv2d_ref(&p, &inp, &wgt);
     for _ in 0..2 {
-        let (out, _) = compiled.execute(&mut rt, &pack_activations(&cfg, &inp)).unwrap();
+        let (out, _) = compiled.execute(&mut rt, &[pack_activations(&cfg, &inp)]).unwrap();
         assert_eq!(unpack_outputs(&cfg, &out, 1, p.oc, p.out_h(), p.out_w()), expect);
     }
     compiled.free(&mut rt).unwrap();
@@ -380,4 +380,130 @@ fn matmul_fc_shape_matches_reference() {
     // ResNet-18 classifier: 512 → 1000 (batch of 2 rows).
     let p = MatmulParams { m: 2, k: 512, n: 1000, requant: Requant { shift: 7, relu: false } };
     run_matmul_case(&p, 2, 23);
+}
+
+// ---------------------------------------------------------------------
+// Compiled dense (the Dense-offload path).
+// ---------------------------------------------------------------------
+
+/// The compiled dense path matches both the one-shot matmul lowering
+/// (bytes and cycles) and the host reference, and replays across
+/// inputs.
+#[test]
+fn compiled_dense_matches_lower_matmul_and_reference() {
+    let cfg = VtaConfig::pynq();
+    let p = MatmulParams { m: 4, k: 40, n: 50, requant: rq() };
+    let mut rng = XorShiftRng::new(81);
+    let w = random_nchw(&mut rng, &[p.n, p.k]);
+    let wp = pack_matrix_w(&cfg, &w);
+
+    let mut rt = VtaRuntime::new(&cfg, 32 << 20);
+    let compiled = compile_dense(&mut rt, &p, &wp, 2).unwrap();
+    assert!(!compiled.streams.is_empty());
+
+    for seed in 0..3u64 {
+        let mut rng = XorShiftRng::new(90 + seed);
+        let a = random_nchw(&mut rng, &[p.m, p.k]);
+        let ap = pack_matrix_a(&cfg, &a);
+
+        let mut rt1 = VtaRuntime::new(&cfg, 32 << 20);
+        let one_shot = lower_matmul(&mut rt1, &p, &ap, &wp, 2).unwrap();
+
+        let (out, stats) = compiled.execute(&mut rt, &[ap]).unwrap();
+        assert_eq!(out, one_shot.out, "compiled vs one-shot dense output (seed {seed})");
+        assert_eq!(stats.gemm_uops, one_shot.stats.gemm_uops);
+        let got = unpack_matrix_c(&cfg, &out, p.m, p.n);
+        assert_eq!(got, matmul_ref(&p, &a, &w), "replay {seed} diverged from reference");
+    }
+    compiled.free(&mut rt).unwrap();
+}
+
+/// Freeing a compiled dense plan returns every byte of its DRAM
+/// residency.
+#[test]
+fn compiled_dense_free_releases_dram() {
+    let cfg = VtaConfig::pynq();
+    let p = MatmulParams { m: 1, k: 64, n: 32, requant: rq() };
+    let mut rng = XorShiftRng::new(83);
+    let w = random_nchw(&mut rng, &[p.n, p.k]);
+
+    let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+    let used0 = rt.dram.used();
+    let compiled = compile_dense(&mut rt, &p, &pack_matrix_w(&cfg, &w), 2).unwrap();
+    assert!(rt.dram.used() > used0, "plan holds DRAM residency");
+    compiled.free(&mut rt).unwrap();
+    assert_eq!(rt.dram.used(), used0, "free leaked DRAM");
+}
+
+// ---------------------------------------------------------------------
+// Elementwise operators on the tensor-ALU path.
+// ---------------------------------------------------------------------
+
+fn random_wide(rng: &mut XorShiftRng, shape: &[usize]) -> Tensor<i8> {
+    // Wide range so saturating adds actually saturate.
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, rng.vec_i8(n, -120, 120)).unwrap()
+}
+
+/// Saturating ALU add matches the host semantics across a tensor big
+/// enough to strip-mine over multiple register-file chunks and both
+/// contexts — including lanes that saturate.
+#[test]
+fn compiled_eltwise_add_matches_reference() {
+    let cfg = VtaConfig::pynq();
+    let shape = [1usize, 64, 32, 32]; // 65536 lanes → 4096 tiles → 8 strips
+    let mut rng = XorShiftRng::new(91);
+    let a = random_wide(&mut rng, &shape);
+    let b = random_wide(&mut rng, &shape);
+
+    for vt in [1usize, 2] {
+        let mut rt = VtaRuntime::new(&cfg, 64 << 20);
+        let compiled =
+            compile_eltwise(&mut rt, EltwiseKind::AddSat, a.len(), vt).unwrap();
+        let packed = vec![pack_acc_i32(&cfg, &a), pack_acc_i32(&cfg, &b)];
+        let (out, stats) = compiled.execute(&mut rt, &packed).unwrap();
+        let got = unpack_eltwise(&out, &shape);
+        assert_eq!(got, add_i8(&a, &b), "ALU add diverged from reference (vt={vt})");
+        assert!(stats.alu_uops > 0, "the ALU must have executed micro-ops");
+        compiled.free(&mut rt).unwrap();
+    }
+}
+
+/// ALU ReLU matches the host semantics, replays across inputs with
+/// identical timing, and handles a ragged tail (length not a multiple
+/// of the tile lanes).
+#[test]
+fn compiled_eltwise_relu_matches_reference() {
+    let cfg = VtaConfig::pynq();
+    let shape = [1usize, 3, 21, 21]; // 1323 lanes: ragged tail tile
+    let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+    let len: usize = shape.iter().product();
+    let compiled = compile_eltwise(&mut rt, EltwiseKind::Relu, len, 2).unwrap();
+
+    let mut cycles = Vec::new();
+    for seed in 0..3u64 {
+        let mut rng = XorShiftRng::new(95 + seed);
+        let x = random_wide(&mut rng, &shape);
+        let (out, stats) = compiled.execute(&mut rt, &[pack_acc_i32(&cfg, &x)]).unwrap();
+        assert_eq!(unpack_eltwise(&out, &shape), relu_i8(&x), "replay {seed} diverged");
+        cycles.push(stats.total_cycles);
+    }
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "replay timing drifted: {cycles:?}");
+    compiled.free(&mut rt).unwrap();
+}
+
+/// Eltwise planning respects register-file budgets: the strip shrinks
+/// with operand count and virtual threading, and the whole tensor is
+/// covered.
+#[test]
+fn eltwise_plan_respects_budgets() {
+    let cfg = VtaConfig::pynq();
+    let lanes = cfg.gemm.batch * cfg.gemm.block_out;
+    let plan2 = plan_eltwise(&cfg, 100_000, 2, 2).unwrap();
+    let plan1 = plan_eltwise(&cfg, 100_000, 1, 1).unwrap();
+    assert_eq!(plan2.tiles, 100_000usize.div_ceil(lanes));
+    // Two operands, two contexts: a quarter of the addressable file.
+    assert!(plan2.chunk * 2 * 2 <= cfg.acc_depth().min(1 << 11));
+    assert!(plan1.chunk >= plan2.chunk);
+    assert!(plan2.chunk >= 1);
 }

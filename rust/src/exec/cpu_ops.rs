@@ -1,84 +1,8 @@
 //! Native CPU implementations of the operators the paper leaves on the
-//! ARM core (§5): max pooling, global average pooling, the dense
-//! classifier, residual adds, ReLU. All int8 with the same semantics
-//! as the JAX model (`python/compile/model.py`).
+//! ARM core (§5). The kernels themselves live with the compiler's
+//! reference oracles ([`crate::compiler::reference`]) — the operator
+//! registry uses one implementation as both the CPU execution path and
+//! the accelerator verification oracle; this module re-exports them
+//! under their historical `exec` paths.
 
-use crate::compiler::plan::MatmulParams;
-use crate::compiler::reference::matmul_ref;
-use crate::graph::Graph;
-use crate::util::Tensor;
-
-/// Max pooling over NCHW int8. Out-of-bounds taps are skipped (taps
-/// initialize at `i8::MIN`), matching the JAX model's `-inf`-padded
-/// `reduce_window`.
-pub fn maxpool_i8(x: &Tensor<i8>, k: usize, s: usize, pad: usize) -> Tensor<i8> {
-    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
-    let oh = (h + 2 * pad - k) / s + 1;
-    let ow = (w + 2 * pad - k) / s + 1;
-    let mut out = Tensor::zeros(&[n, c, oh, ow]);
-    let src = x.data();
-    let dst = out.data_mut();
-    for nn in 0..n {
-        for cc in 0..c {
-            let plane = (nn * c + cc) * h * w;
-            for y in 0..oh {
-                for xx in 0..ow {
-                    let mut m = i8::MIN;
-                    for ky in 0..k {
-                        for kx in 0..k {
-                            let iy = (y * s + ky) as isize - pad as isize;
-                            let ix = (xx * s + kx) as isize - pad as isize;
-                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                                m = m.max(src[plane + iy as usize * w + ix as usize]);
-                            }
-                        }
-                    }
-                    dst[((nn * c + cc) * oh + y) * ow + xx] = m;
-                }
-            }
-        }
-    }
-    out
-}
-
-/// Global average pooling NCHW → [N, C], round-to-nearest-even-free
-/// integer mean (truncating division, matching the JAX model).
-pub fn global_avg_pool_i8(x: &Tensor<i8>) -> Tensor<i8> {
-    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
-    let mut out = Tensor::zeros(&[n, c]);
-    let src = x.data();
-    let dst = out.data_mut();
-    let area = (h * w) as i32;
-    for nn in 0..n {
-        for cc in 0..c {
-            let plane = (nn * c + cc) * h * w;
-            let sum: i32 = src[plane..plane + h * w].iter().map(|&v| v as i32).sum();
-            dst[nn * c + cc] = (sum / area).clamp(-128, 127) as i8;
-        }
-    }
-    out
-}
-
-/// Saturating int8 element-wise addition (residual connections).
-pub fn add_i8(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i8> {
-    assert_eq!(a.shape(), b.shape());
-    let mut out = Tensor::zeros(a.shape());
-    for (o, (&x, &y)) in out.data_mut().iter_mut().zip(a.data().iter().zip(b.data())) {
-        *o = Graph::saturating_add(x, y);
-    }
-    out
-}
-
-/// ReLU.
-pub fn relu_i8(x: &Tensor<i8>) -> Tensor<i8> {
-    let mut out = Tensor::zeros(x.shape());
-    for (o, &v) in out.data_mut().iter_mut().zip(x.data()) {
-        *o = v.max(0);
-    }
-    out
-}
-
-/// Dense layer `[M, K] x [N, K]^T → [M, N]` with requantization.
-pub fn dense_i8(p: &MatmulParams, x: &Tensor<i8>, w: &Tensor<i8>) -> Tensor<i8> {
-    matmul_ref(p, x, w)
-}
+pub use crate::compiler::reference::{add_i8, dense_i8, global_avg_pool_i8, maxpool_i8, relu_i8};

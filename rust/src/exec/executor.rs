@@ -2,16 +2,20 @@
 //! VTA nodes through the compiler → runtime → simulator stack and CPU
 //! nodes on either native Rust kernels or PJRT executables.
 //!
+//! Dispatch is **op-generic**: every node resolves to its registered
+//! [`VtaOp`](crate::compiler::VtaOp) implementation
+//! ([`crate::compiler::op_impl`]) — the executor never matches on `Op`
+//! variants, so newly registered operators run here without touching
+//! this file.
+//!
 //! The per-node report separates *simulated accelerator time* (cycles ÷
 //! clock) from *measured CPU wall time* — the two quantities Fig 16
 //! stacks against each other.
 
-use super::cpu_ops;
 use super::pjrt::{PjrtCache, PjrtError};
-use crate::compiler::{
-    self, lower_conv2d, pack_activations, pack_weights, unpack_outputs, CompileError,
-};
-use crate::graph::{Graph, Op, Placement};
+use crate::compiler::op::{execute_compiled, op_impl};
+use crate::compiler::CompileError;
+use crate::graph::{Graph, Placement};
 use crate::runtime::VtaRuntime;
 use crate::sim::SimStats;
 use crate::util::Tensor;
@@ -31,6 +35,16 @@ pub enum ExecError {
     NotOffloadable(String, &'static str),
     #[error("plan cache: {0}")]
     PlanCache(CompileError),
+}
+
+/// Lift a compiler-layer error into the executor's error space,
+/// attaching the node name (shared with the serving engine).
+pub(crate) fn lift_compile_err(name: &str, e: CompileError) -> ExecError {
+    match e {
+        CompileError::NotOffloadable(kind) => ExecError::NotOffloadable(name.to_string(), kind),
+        CompileError::MissingWeights => ExecError::MissingWeights(name.to_string()),
+        e => ExecError::Compile(name.to_string(), e),
+    }
 }
 
 /// How CPU-resident nodes execute.
@@ -104,13 +118,27 @@ impl ExecReport {
 pub struct Executor {
     rt: VtaRuntime,
     cpu: CpuBackend,
+    virtual_threads: usize,
 }
 
 impl Executor {
     /// Build over a fresh VTA runtime (`dram_size` bytes) and a CPU
-    /// backend.
+    /// backend; VTA nodes lower with 2 virtual threads (latency hiding
+    /// on — the paper's default, and the default of
+    /// `PartitionPolicy::virtual_threads`, whose capability checks
+    /// must use the same count).
     pub fn new(rt: VtaRuntime, cpu: CpuBackend) -> Self {
-        Executor { rt, cpu }
+        Executor { rt, cpu, virtual_threads: 2 }
+    }
+
+    /// Like [`Self::new`], with an explicit virtual-thread count
+    /// ∈ {1, 2}.
+    pub fn with_virtual_threads(rt: VtaRuntime, cpu: CpuBackend, virtual_threads: usize) -> Self {
+        assert!(
+            virtual_threads == 1 || virtual_threads == 2,
+            "1 or 2 virtual threads"
+        );
+        Executor { rt, cpu, virtual_threads }
     }
 
     /// Run the graph on one input. Nodes must already be partitioned.
@@ -126,44 +154,48 @@ impl Executor {
     }
 
     /// Staged serial execution: stages in order, every node of a stage
-    /// in turn, each node fully finished (pack → lower → simulate →
-    /// unpack) before the next starts.
+    /// in turn, each node fully finished (pack → compile → simulate →
+    /// unpack → free) before the next starts. VTA nodes re-compile on
+    /// every inference — the naive baseline the plan cache removes.
     fn run_staged(
         &mut self,
         g: &Graph,
         input: &Tensor<i8>,
         stages: &[Vec<usize>],
     ) -> Result<ExecReport, ExecError> {
+        let clock_hz = self.rt.ctx.config().clock_hz;
         let mut values: Vec<Option<Tensor<i8>>> = vec![None; g.nodes.len()];
         let mut reports: Vec<Option<NodeReport>> = (0..g.nodes.len()).map(|_| None).collect();
 
         for stage in stages {
             for &id in stage {
                 let node = &g.nodes[id];
+                let entry = op_impl(&node.op);
                 let t0 = Instant::now();
                 let mut sim_seconds = 0.0;
                 let mut stats = None;
 
-                let out = match (&node.op, node.placement) {
-                    (Op::Input { .. }, _) => input.clone(),
-                    (Op::Conv2d { p }, Placement::Vta) => {
-                        let x = values[node.inputs[0]].as_ref().unwrap();
-                        let w = g
-                            .weights(node.id)
-                            .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-                        let cfg = self.rt.ctx.config().clone();
-                        let ip = pack_activations(&cfg, x);
-                        let wp = pack_weights(&cfg, w);
-                        let r = lower_conv2d(&mut self.rt, p, &ip, &wp, 2)
-                            .map_err(|e| ExecError::Compile(node.name.clone(), e))?;
-                        sim_seconds = r.stats.total_cycles as f64 / cfg.clock_hz;
-                        stats = Some(r.stats.clone());
-                        unpack_outputs(&cfg, &r.out, x.shape()[0], p.oc, p.out_h(), p.out_w())
-                    }
-                    (op, Placement::Vta) => {
-                        return Err(ExecError::NotOffloadable(node.name.clone(), op.kind()))
-                    }
-                    (_, _) => exec_cpu_node(&mut self.cpu, g, id, &values)?,
+                let out = if entry.is_input() {
+                    input.clone()
+                } else if node.placement == Placement::Vta {
+                    let inputs: Vec<&Tensor<i8>> =
+                        node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
+                    let compiled = entry
+                        .compile(&mut self.rt, g, node, self.virtual_threads)
+                        .map_err(|e| lift_compile_err(&node.name, e))?;
+                    // Release the plan's DRAM residency even when the
+                    // run fails: the executor is long-lived and a leak
+                    // here would drain the allocator across requests.
+                    let result = execute_compiled(entry, &compiled, &mut self.rt, &inputs);
+                    compiled
+                        .free(&mut self.rt)
+                        .map_err(|e| lift_compile_err(&node.name, e))?;
+                    let (out, s) = result.map_err(|e| lift_compile_err(&node.name, e))?;
+                    sim_seconds = s.total_cycles as f64 / clock_hz;
+                    stats = Some(s);
+                    out
+                } else {
+                    exec_cpu_node(&mut self.cpu, g, id, &values)?
                 };
 
                 reports[id] = Some(NodeReport {
@@ -188,8 +220,9 @@ impl Executor {
 }
 
 /// Execute one CPU-resident node: PJRT artifact when that backend is
-/// selected and an artifact exists, native Rust kernels otherwise.
-/// Shared by the serial [`Executor`] and the serving engine
+/// selected and an artifact exists, native reference kernels otherwise
+/// — both resolved through the operator registry. Shared by the serial
+/// [`Executor`] and the serving engine
 /// ([`super::serve::ServingEngine`]).
 pub(crate) fn exec_cpu_node(
     cpu: &mut CpuBackend,
@@ -198,11 +231,10 @@ pub(crate) fn exec_cpu_node(
     values: &[Option<Tensor<i8>>],
 ) -> Result<Tensor<i8>, ExecError> {
     let node = &g.nodes[id];
-    let op = &node.op;
-    let arg = |i: usize| values[node.inputs[i]].as_ref().unwrap();
+    let entry = op_impl(&node.op);
     // Try the PJRT artifact first when that backend is selected.
     if let CpuBackend::Pjrt(cache) = cpu {
-        if let Some(name) = artifact_name(op, &node.shape) {
+        if let Some(name) = entry.artifact_name(node) {
             if cache.has(&name) {
                 let mut inputs: Vec<&Tensor<i8>> =
                     node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
@@ -218,41 +250,10 @@ pub(crate) fn exec_cpu_node(
             }
         }
     }
-    // Native fallback.
-    Ok(match op {
-        Op::Input { .. } => unreachable!("handled by caller"),
-        Op::Conv2d { p } => {
-            let w = g
-                .weights(id)
-                .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-            compiler::reference::conv2d_ref(p, arg(0), w)
-        }
-        Op::Relu => cpu_ops::relu_i8(arg(0)),
-        Op::MaxPool { k, s, pad } => cpu_ops::maxpool_i8(arg(0), *k, *s, *pad),
-        Op::GlobalAvgPool => cpu_ops::global_avg_pool_i8(arg(0)),
-        Op::Add => cpu_ops::add_i8(arg(0), arg(1)),
-        Op::Dense { p } => {
-            let w = g
-                .weights(id)
-                .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-            cpu_ops::dense_i8(p, arg(0), w)
-        }
-    })
-}
-
-/// Artifact naming scheme shared with `python/compile/aot.py`:
-/// one executable per (op kind, output shape).
-pub fn artifact_name(op: &Op, out_shape: &[usize]) -> Option<String> {
-    let shape_tag = |s: &[usize]| s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
-    match op {
-        Op::Conv2d { p } => Some(format!(
-            "conv_{}_{}_{}_{}_{}_{}",
-            p.h, p.ic, p.oc, p.k, p.s, p.requant.relu as u8
-        )),
-        Op::MaxPool { k, s, .. } => Some(format!("maxpool_{}_{}_{}", shape_tag(out_shape), k, s)),
-        Op::GlobalAvgPool => Some(format!("gap_{}", shape_tag(out_shape))),
-        Op::Add => Some(format!("add_{}", shape_tag(out_shape))),
-        Op::Dense { p } => Some(format!("dense_{}_{}_{}", p.m, p.k, p.n)),
-        Op::Relu | Op::Input { .. } => None,
-    }
+    // Native fallback: the operator's reference semantics.
+    let inputs: Vec<&Tensor<i8>> =
+        node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
+    entry
+        .reference(g, node, &inputs)
+        .map_err(|e| lift_compile_err(&node.name, e))
 }

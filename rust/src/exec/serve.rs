@@ -4,15 +4,17 @@
 //! The paper's runtime hides memory latency behind compute with
 //! explicit task-level pipeline parallelism (§2.3) and reuses JIT'd
 //! micro-kernels through a DRAM-resident cache (§3.2). This module
-//! lifts both ideas from single-kernel to whole-graph granularity:
+//! lifts both ideas from single-kernel to whole-graph granularity —
+//! for **every operator in the registry**, not just conv2d:
 //!
 //! * [`PlanCache`] — an LRU cache of [`CompiledNode`]s keyed by
-//!   ([`VtaConfig`] fingerprint, virtual threads, operator signature,
-//!   weight fingerprint). Lowering a VTA node (tiling, micro-kernel
-//!   generation, instruction-stream recording, weight packing + DRAM
-//!   residency) happens **once** per key; every later inference
-//!   replays the sealed streams. Hit/miss/eviction counters mirror the
-//!   micro-op cache's (ablation A2).
+//!   ([`VtaConfig`] fingerprint, virtual threads, operator kind,
+//!   operator fingerprint). The fingerprint comes from the node's
+//!   [`VtaOp`](crate::compiler::VtaOp) implementation and covers the
+//!   operator parameters, output shape, and baked-in constants
+//!   (weights). Lowering a VTA node happens **once** per key; every
+//!   later inference replays the sealed streams. Hit/miss/eviction
+//!   counters mirror the micro-op cache's (ablation A2).
 //! * [`ServingEngine`] — walks the partitioned graph in topological
 //!   stages and serves single requests ([`ServingEngine::run_one`]) or
 //!   batches ([`ServingEngine::run_batch`]), reporting **both** the
@@ -29,53 +31,26 @@
 //! and dependence constraints, exactly like the simulator replays
 //! dependence tokens against its module timelines.
 
-use super::executor::{exec_cpu_node, CpuBackend, ExecError, NodeReport};
+use super::executor::{exec_cpu_node, lift_compile_err, CpuBackend, ExecError, NodeReport};
 use crate::arch::VtaConfig;
-use crate::compiler::{
-    compile_conv2d, pack_activations, pack_weights, unpack_outputs, CompiledNode, Conv2dParams,
-};
-use crate::graph::{stages, Graph, Op, Placement};
+use crate::compiler::op::{execute_compiled, op_impl};
+use crate::compiler::CompiledNode;
+use crate::graph::{stages, Graph, Node, Placement};
 use crate::runtime::VtaRuntime;
 use crate::util::Tensor;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
+// Fingerprint helpers live with the operator registry; re-exported
+// here for API continuity (and python/compile/synth.py parity).
+pub use crate::compiler::op::{config_fingerprint, fnv1a64, weights_fingerprint};
+
 // ---------------------------------------------------------------------
 // Cache keys.
 // ---------------------------------------------------------------------
 
-/// FNV-1a 64-bit over a byte stream (same constants as
-/// `python/compile/synth.py::fnv1a64`).
-pub fn fnv1a64(data: impl IntoIterator<Item = u8>) -> u64 {
-    let mut h: u64 = 0xCBF29CE484222325;
-    for b in data {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001B3);
-    }
-    h
-}
-
-/// Fingerprint of a `VtaConfig`: plans compiled for one hardware
-/// variant are never served to another (cross-config isolation).
-pub fn config_fingerprint(cfg: &VtaConfig) -> u64 {
-    fnv1a64(format!("{cfg:?}").into_bytes())
-}
-
-/// Fingerprint of a weight tensor (shape + contents).
-pub fn weights_fingerprint(w: &Tensor<i8>) -> u64 {
-    let shape = w.shape().iter().flat_map(|d| (*d as u64).to_le_bytes());
-    let data = w.data().iter().map(|&v| v as u8);
-    fnv1a64(shape.chain(data))
-}
-
-/// The operator signature part of a plan key.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum OpSig {
-    Conv2d(Conv2dParams),
-}
-
 /// Key of one compiled plan: everything the lowered artifact depends
-/// on. Two graph nodes with identical params *and* identical weights
+/// on. Two graph nodes with identical params *and* identical constants
 /// legitimately share a plan; identical params with different weights
 /// do not (the weight image is DRAM-resident inside the plan).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -84,10 +59,12 @@ pub struct PlanKey {
     pub config_fp: u64,
     /// Virtual-thread count the plan was lowered with.
     pub virtual_threads: usize,
-    /// Operator kind + shape parameters.
-    pub sig: OpSig,
-    /// Weight image fingerprint ([`weights_fingerprint`]).
-    pub weights_fp: u64,
+    /// Operator kind (the registry key).
+    pub kind: &'static str,
+    /// Operator fingerprint
+    /// ([`VtaOp::fingerprint`](crate::compiler::VtaOp::fingerprint)):
+    /// shape parameters + output shape + baked constants.
+    pub op_fp: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -111,8 +88,8 @@ struct CacheEntry {
 }
 
 /// LRU cache of compiled plans — the §3.2 micro-kernel cache, extended
-/// to whole-node plans (instruction streams + packed weights + DRAM
-/// residency).
+/// to whole-node plans (instruction streams + packed constants + DRAM
+/// residency) of any registered operator.
 pub struct PlanCache {
     capacity: usize,
     entries: HashMap<PlanKey, CacheEntry>,
@@ -150,6 +127,15 @@ impl PlanCache {
     /// True when `key` is resident (does not touch LRU state).
     pub fn contains(&self, key: &PlanKey) -> bool {
         self.entries.contains_key(key)
+    }
+
+    /// Resident plans per operator kind (reporting / tests).
+    pub fn kinds(&self) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for key in self.entries.keys() {
+            *m.entry(key.kind).or_insert(0) += 1;
+        }
+        m
     }
 
     /// Total DRAM bytes held by resident plans.
@@ -378,45 +364,42 @@ impl ServingEngine {
         self.cache.len()
     }
 
+    /// Resident plans per operator kind.
+    pub fn cached_kinds(&self) -> HashMap<&'static str, usize> {
+        self.cache.kinds()
+    }
+
     /// DRAM bytes held by resident plans.
     pub fn cache_dram_bytes(&self) -> usize {
         self.cache.dram_bytes()
     }
 
-    /// The plan key the engine would use for a VTA conv2d node with
-    /// these weights (tests / introspection).
-    pub fn plan_key(&self, p: &Conv2dParams, w: &Tensor<i8>) -> PlanKey {
+    /// The plan key the engine would use for `node` (any registered
+    /// operator; tests / introspection).
+    pub fn plan_key(&self, g: &Graph, node: &Node) -> PlanKey {
+        let entry = op_impl(&node.op);
         PlanKey {
             config_fp: self.config_fp,
             virtual_threads: self.virtual_threads,
-            sig: OpSig::Conv2d(*p),
-            weights_fp: weights_fingerprint(w),
+            kind: entry.kind(),
+            op_fp: entry.fingerprint(g, node),
         }
     }
 
-    /// Precompute the plan key of every VTA conv node (weight
-    /// fingerprints hash the full weight image — do it once per
-    /// graph, not once per request).
-    fn plan_keys(&self, g: &Graph) -> Result<Vec<Option<PlanKey>>, ExecError> {
-        let mut keys = Vec::with_capacity(g.nodes.len());
-        for node in &g.nodes {
-            keys.push(match (&node.op, node.placement) {
-                (Op::Conv2d { p }, Placement::Vta) => {
-                    let w = g
-                        .weights(node.id)
-                        .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-                    Some(self.plan_key(p, w))
-                }
-                _ => None,
-            });
-        }
-        Ok(keys)
+    /// Precompute the plan key of every VTA-resident node (operator
+    /// fingerprints hash the full weight image — do it once per graph,
+    /// not once per request).
+    fn plan_keys(&self, g: &Graph) -> Vec<Option<PlanKey>> {
+        g.nodes
+            .iter()
+            .map(|node| (node.placement == Placement::Vta).then(|| self.plan_key(g, node)))
+            .collect()
     }
 
     /// Serve one request.
     pub fn run_one(&mut self, g: &Graph, input: &Tensor<i8>) -> Result<ServeReport, ExecError> {
         let stage_order = stages(g);
-        let keys = self.plan_keys(g)?;
+        let keys = self.plan_keys(g);
         let (output, nodes) = self.run_graph(g, input, &stage_order, &keys)?;
         let model = pipeline_schedule(g, std::slice::from_ref(&nodes));
         Ok(ServeReport {
@@ -428,7 +411,7 @@ impl ServingEngine {
     }
 
     /// Serve a batch of requests, amortizing stage computation, plan
-    /// keys (weight fingerprints), plan lookup, and weight packing
+    /// keys (weight fingerprints), plan lookup, and constant packing
     /// across the batch. Outputs are bit-identical to serving each
     /// request alone (and to the serial [`super::Executor`]).
     pub fn run_batch(
@@ -439,7 +422,7 @@ impl ServingEngine {
         let stats0 = self.cache.stats();
         let t0 = Instant::now();
         let stage_order = stages(g);
-        let keys = self.plan_keys(g)?;
+        let keys = self.plan_keys(g);
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut per_request = Vec::with_capacity(inputs.len());
         for input in inputs {
@@ -469,6 +452,10 @@ impl ServingEngine {
     /// cache. `stage_order` and `keys` come from [`crate::graph::stages`]
     /// and [`Self::plan_keys`] (precomputed so batches amortize them).
     /// Returns the output and per-node records indexed by node id.
+    ///
+    /// Dispatch is op-generic: every VTA node compiles and runs
+    /// through its registered [`VtaOp`](crate::compiler::VtaOp)
+    /// implementation.
     fn run_graph(
         &mut self,
         g: &Graph,
@@ -476,49 +463,40 @@ impl ServingEngine {
         stage_order: &[Vec<usize>],
         keys: &[Option<PlanKey>],
     ) -> Result<(Tensor<i8>, Vec<NodeReport>), ExecError> {
+        let clock_hz = self.rt.ctx.config().clock_hz;
         let mut values: Vec<Option<Tensor<i8>>> = vec![None; g.nodes.len()];
         let mut reports: Vec<Option<NodeReport>> = (0..g.nodes.len()).map(|_| None).collect();
 
         for stage in stage_order {
             for &id in stage {
                 let node = &g.nodes[id];
+                let entry = op_impl(&node.op);
                 let t0 = Instant::now();
                 let mut sim_seconds = 0.0;
                 let mut stats = None;
 
-                let out = match (&node.op, node.placement) {
-                    (Op::Input { .. }, _) => input.clone(),
-                    (Op::Conv2d { p }, Placement::Vta) => {
-                        let x = values[node.inputs[0]].as_ref().unwrap();
-                        let w = g
-                            .weights(id)
-                            .ok_or_else(|| ExecError::MissingWeights(node.name.clone()))?;
-                        let cfg = self.rt.ctx.config().clone();
-                        let key = keys[id].as_ref().expect("plan key precomputed for VTA conv");
-                        let vt = self.virtual_threads;
-                        // Split borrows: the cache hands out a plan
-                        // while the runtime executes it.
-                        let rt = &mut self.rt;
-                        let compiled = self.cache.get_or_compile(rt, key, |rt| {
-                            let wp = pack_weights(&cfg, w);
-                            Ok(CompiledNode::Conv2d(
-                                compile_conv2d(rt, p, &wp, vt)
-                                    .map_err(|e| ExecError::Compile(node.name.clone(), e))?,
-                            ))
-                        })?;
-                        let CompiledNode::Conv2d(cc) = compiled;
-                        let ip = pack_activations(&cfg, x);
-                        let (out_packed, s) = cc
-                            .execute(rt, &ip)
-                            .map_err(|e| ExecError::Compile(node.name.clone(), e))?;
-                        sim_seconds = s.total_cycles as f64 / cfg.clock_hz;
-                        stats = Some(s);
-                        unpack_outputs(&cfg, &out_packed, x.shape()[0], p.oc, p.out_h(), p.out_w())
-                    }
-                    (op, Placement::Vta) => {
-                        return Err(ExecError::NotOffloadable(node.name.clone(), op.kind()))
-                    }
-                    (_, _) => exec_cpu_node(&mut self.cpu, g, id, &values)?,
+                let out = if entry.is_input() {
+                    input.clone()
+                } else if node.placement == Placement::Vta {
+                    let inputs: Vec<&Tensor<i8>> =
+                        node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
+                    let key = keys[id].as_ref().expect("plan key precomputed for VTA node");
+                    let vt = self.virtual_threads;
+                    // Split borrows: the cache hands out a plan while
+                    // the runtime executes it.
+                    let rt = &mut self.rt;
+                    let compiled = self.cache.get_or_compile(rt, key, |rt| {
+                        entry
+                            .compile(rt, g, node, vt)
+                            .map_err(|e| lift_compile_err(&node.name, e))
+                    })?;
+                    let (out, s) = execute_compiled(entry, compiled, rt, &inputs)
+                        .map_err(|e| lift_compile_err(&node.name, e))?;
+                    sim_seconds = s.total_cycles as f64 / clock_hz;
+                    stats = Some(s);
+                    out
+                } else {
+                    exec_cpu_node(&mut self.cpu, g, id, &values)?
                 };
 
                 reports[id] = Some(NodeReport {
@@ -545,8 +523,9 @@ impl ServingEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::{Conv2dParams, MatmulParams, Requant};
     use crate::exec::Executor;
-    use crate::graph::{partition, PartitionPolicy};
+    use crate::graph::{partition, Op, PartitionPolicy};
     use crate::util::XorShiftRng;
 
     fn rand_t(seed: u64, shape: &[usize]) -> Tensor<i8> {
@@ -591,6 +570,25 @@ mod tests {
         g.set_weights(c2, rand_t(112, &[16, 16, 3, 3]));
         let add = g.add("add", Op::Add, &[c2, x]).unwrap();
         let _r = g.add("relu", Op::Relu, &[add]).unwrap();
+        g
+    }
+
+    /// A ResNet-style tail with every registered VTA op class: conv,
+    /// residual add, standalone relu, gap, dense classifier.
+    fn mixed_op_graph() -> Graph {
+        let p = conv_p(16, 16, false);
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+        let c1 = g.add("c1", Op::Conv2d { p: conv_p(16, 16, true) }, &[x]).unwrap();
+        g.set_weights(c1, rand_t(121, &[16, 16, 3, 3]));
+        let c2 = g.add("c2", Op::Conv2d { p }, &[c1]).unwrap();
+        g.set_weights(c2, rand_t(122, &[16, 16, 3, 3]));
+        let add = g.add("add", Op::Add, &[c2, x]).unwrap();
+        let r = g.add("relu", Op::Relu, &[add]).unwrap();
+        let gap = g.add("gap", Op::GlobalAvgPool, &[r]).unwrap();
+        let fcp = MatmulParams { m: 1, k: 16, n: 10, requant: Requant { shift: 2, relu: false } };
+        let fc = g.add("fc", Op::Dense { p: fcp }, &[gap]).unwrap();
+        g.set_weights(fc, rand_t(123, &[10, 16]));
         g
     }
 
@@ -662,10 +660,18 @@ mod tests {
     }
 
     #[test]
-    fn plan_keys_isolate_configs_and_weights() {
-        let p = conv_p(16, 16, false);
-        let w1 = rand_t(400, &[16, 16, 3, 3]);
-        let w2 = rand_t(401, &[16, 16, 3, 3]);
+    fn plan_keys_isolate_configs_weights_and_kinds() {
+        // Two single-conv graphs with identical params but different
+        // weights, plus a residual block for the ALU-op kinds.
+        let build = |wseed: u64| {
+            let mut g = Graph::new();
+            let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+            let c = g.add("c", Op::Conv2d { p: conv_p(16, 16, false) }, &[x]).unwrap();
+            g.set_weights(c, rand_t(wseed, &[16, 16, 3, 3]));
+            g
+        };
+        let g1 = build(400);
+        let g2 = build(401);
 
         let pynq = engine(4);
         let mut wide_cfg = VtaConfig::pynq();
@@ -675,12 +681,22 @@ mod tests {
         // Same op + weights under different hardware variants → keys
         // differ (a plan compiled for one variant is never replayed on
         // another).
-        assert_ne!(pynq.plan_key(&p, &w1), wide.plan_key(&p, &w1));
+        assert_ne!(pynq.plan_key(&g1, &g1.nodes[1]), wide.plan_key(&g1, &g1.nodes[1]));
         // Same config + op, different weights → keys differ (weights
         // are baked into the plan's DRAM image).
-        assert_ne!(pynq.plan_key(&p, &w1), pynq.plan_key(&p, &w2));
+        assert_ne!(pynq.plan_key(&g1, &g1.nodes[1]), pynq.plan_key(&g2, &g2.nodes[1]));
         // Identical everything → same key (sharing is intended).
-        assert_eq!(pynq.plan_key(&p, &w1), pynq.plan_key(&p, &w1));
+        assert_eq!(pynq.plan_key(&g1, &g1.nodes[1]), pynq.plan_key(&g1, &g1.nodes[1]));
+
+        // Different op kinds over the same shape → different keys.
+        let rb = residual_block_graph();
+        let add = rb.nodes.iter().find(|n| n.op.kind() == "add").unwrap();
+        let relu = rb.nodes.iter().find(|n| n.op.kind() == "relu").unwrap();
+        let ka = pynq.plan_key(&rb, add);
+        let kr = pynq.plan_key(&rb, relu);
+        assert_ne!(ka, kr);
+        assert_eq!(ka.kind, "add");
+        assert_eq!(kr.kind, "relu");
     }
 
     /// Batched serving produces exactly the serial executor's outputs
@@ -723,6 +739,68 @@ mod tests {
         }
         assert!(batch.throughput() > 0.0);
         assert!(batch.latency_percentile(0.99) >= batch.latency_percentile(0.50));
+    }
+
+    /// Op-generic caching: a graph with conv, add, relu, and dense all
+    /// offloaded compiles each unique node exactly once and reuses
+    /// every plan across the batch — the acceptance scenario of the
+    /// operator-registry redesign.
+    #[test]
+    fn mixed_op_kinds_cache_and_match_serial_executor() {
+        let cfg = VtaConfig::pynq();
+        let mut g = mixed_op_graph();
+        let policy = PartitionPolicy::offload_all(&cfg);
+        let (vta_nodes, _) = partition(&mut g, &policy);
+        assert_eq!(vta_nodes, 5, "conv x2 + add + relu + dense offload");
+
+        let inputs: Vec<_> = (0..3).map(|i| rand_t(600 + i, &[1, 16, 8, 8])).collect();
+        let mut eng = engine(16);
+        let batch = eng.run_batch(&g, &inputs).unwrap();
+
+        // One compile per unique VTA node; every later lookup hits.
+        assert_eq!(batch.cache.misses, 5);
+        assert_eq!(batch.cache.hits, 10);
+        let kinds = eng.cached_kinds();
+        assert_eq!(kinds.get("conv2d"), Some(&2));
+        assert_eq!(kinds.get("add"), Some(&1));
+        assert_eq!(kinds.get("relu"), Some(&1));
+        assert_eq!(kinds.get("dense"), Some(&1));
+
+        // Bit-identical to the serial executor (which itself verifies
+        // against the CPU-only reference in the exec tests).
+        for (i, input) in inputs.iter().enumerate() {
+            let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+            let expect = ex.run(&g, input).unwrap().output;
+            assert_eq!(batch.outputs[i], expect, "request {i} diverged");
+        }
+
+        // Warm batch: pure replay across every op kind.
+        let warm = eng.run_batch(&g, &inputs).unwrap();
+        assert_eq!(warm.cache.misses, 0);
+        assert_eq!(warm.cache.hits, 15);
+    }
+
+    /// Eviction works across mixed op kinds: a cache smaller than the
+    /// working set thrashes but stays correct.
+    #[test]
+    fn mixed_op_kinds_evict_and_stay_correct() {
+        let cfg = VtaConfig::pynq();
+        let mut g = mixed_op_graph();
+        partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+        let input = rand_t(700, &[1, 16, 8, 8]);
+
+        let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+        let expect = ex.run(&g, &input).unwrap().output;
+
+        let mut eng = engine(2);
+        let r1 = eng.run_one(&g, &input).unwrap();
+        let r2 = eng.run_one(&g, &input).unwrap();
+        assert_eq!(r1.output, expect);
+        assert_eq!(r2.output, expect, "eviction must not corrupt mixed-kind results");
+        let s = eng.cache_stats();
+        assert_eq!(s.misses, 10, "5 VTA nodes x 2 requests all miss at capacity 2");
+        assert!(s.evictions >= 8, "thrashing must evict: {s:?}");
+        assert!(eng.cached_plans() <= 2);
     }
 
     /// The schedule respects dependences: no request finishes before

@@ -1,21 +1,50 @@
-//! CPU / VTA partitioning (§5 "End-to-end ResNet Evaluation").
+//! CPU / VTA partitioning (§5 "End-to-end ResNet Evaluation"), driven
+//! by the operator registry.
 //!
 //! The paper offloads every ResNet conv layer to the FPGA except C1
 //! ("due to its low number of input channels"); residual adds, pooling
 //! and the classifier run on the CPU. The policy here encodes exactly
-//! that rule, parameterized so ablations can move the boundary.
+//! that rule, parameterized so ablations can move the boundary — and
+//! with the registry now lowering Dense and ALU-class elementwise ops,
+//! the boundary can move all the way to "everything lowerable".
+//!
+//! The pass itself is op-generic: for every node it asks the node's
+//! [`VtaOp`](crate::compiler::VtaOp) implementation three questions —
+//! *can* it lower under this config
+//! ([`offloadable`](crate::compiler::VtaOp::offloadable)), does the
+//! policy *want* it on the VTA
+//! ([`offload_policy`](crate::compiler::VtaOp::offload_policy)), and
+//! is it *worth* it ([`cost`](crate::compiler::VtaOp::cost) against
+//! [`PartitionPolicy::min_offload_ops`]). Adding an operator never
+//! touches this file.
 
-use super::ir::{Graph, Op, Placement};
+use super::ir::{Graph, Placement};
 use crate::arch::VtaConfig;
+use crate::compiler::op::op_impl;
 
 /// Placement policy knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct PartitionPolicy {
+    /// Hardware variant placements are decided against (capability
+    /// checks plan against it).
+    pub cfg: VtaConfig,
+    /// Virtual-thread count the executor will lower VTA nodes with
+    /// (capability checks plan against it: vt=1 has twice the
+    /// per-context SRAM budget of vt=2). Must match the
+    /// `virtual_threads` of the `Executor` / `ServingEngine` the
+    /// partitioned graph will run on — the CLI wires both to `--vt`.
+    pub virtual_threads: usize,
     /// Minimum input channels for a conv to be worth offloading
     /// (paper: one full `BLOCK_IN`, which C1's 3 channels miss).
     pub min_conv_ic: usize,
     /// Offload dense layers too (paper: no — FC runs on the CPU).
     pub offload_dense: bool,
+    /// Offload ALU-class elementwise ops (residual adds, standalone
+    /// ReLUs) onto the tensor-ALU micro-op path.
+    pub offload_alu: bool,
+    /// Nodes costing fewer integer ops than this stay on the CPU
+    /// (offload overhead floor; 0 = no floor).
+    pub min_offload_ops: u64,
     /// Force everything onto the CPU (the Fig 16 baseline).
     pub cpu_only: bool,
 }
@@ -23,12 +52,43 @@ pub struct PartitionPolicy {
 impl PartitionPolicy {
     /// The paper's evaluation policy for a given VTA variant.
     pub fn paper(cfg: &VtaConfig) -> Self {
-        PartitionPolicy { min_conv_ic: cfg.gemm.block_in, offload_dense: false, cpu_only: false }
+        PartitionPolicy {
+            cfg: cfg.clone(),
+            virtual_threads: 2,
+            min_conv_ic: cfg.gemm.block_in,
+            offload_dense: false,
+            offload_alu: false,
+            min_offload_ops: 0,
+            cpu_only: false,
+        }
     }
 
-    /// CPU-only baseline.
+    /// Offload everything the registry can lower: convs (paper rule),
+    /// dense layers, and ALU-class elementwise ops.
+    pub fn offload_all(cfg: &VtaConfig) -> Self {
+        PartitionPolicy {
+            offload_dense: true,
+            offload_alu: true,
+            ..Self::paper(cfg)
+        }
+    }
+
+    /// CPU-only baseline. The embedded `cfg` is a placeholder that
+    /// [`partition`] never consults (the `cpu_only` flag
+    /// short-circuits every capability check) — to re-enable offload,
+    /// construct a fresh policy via [`Self::paper`] /
+    /// [`Self::offload_all`] with the real hardware variant instead of
+    /// clearing the flag on this one.
     pub fn cpu_only() -> Self {
-        PartitionPolicy { min_conv_ic: usize::MAX, offload_dense: false, cpu_only: true }
+        PartitionPolicy {
+            cfg: VtaConfig::pynq(),
+            virtual_threads: 2,
+            min_conv_ic: usize::MAX,
+            offload_dense: false,
+            offload_alu: false,
+            min_offload_ops: 0,
+            cpu_only: true,
+        }
     }
 }
 
@@ -37,15 +97,15 @@ pub fn partition(g: &mut Graph, policy: &PartitionPolicy) -> (usize, usize) {
     let mut vta = 0;
     let mut cpu = 0;
     for n in &mut g.nodes {
-        let place = if policy.cpu_only {
-            Placement::Cpu
+        let entry = op_impl(&n.op);
+        let place = if !policy.cpu_only
+            && entry.offloadable(&policy.cfg, n, policy.virtual_threads)
+            && entry.offload_policy(n, policy)
+            && entry.cost(n) >= policy.min_offload_ops
+        {
+            Placement::Vta
         } else {
-            match &n.op {
-                Op::Conv2d { p } if p.ic >= policy.min_conv_ic => Placement::Vta,
-                Op::Dense { .. } if policy.offload_dense => Placement::Vta,
-                Op::Input { .. } => Placement::Cpu,
-                _ => Placement::Cpu,
-            }
+            Placement::Cpu
         };
         n.placement = place;
         match place {

@@ -17,10 +17,13 @@
 //!   stream construction, micro-kernel generation + LRU caching, explicit
 //!   dependence push/pop, CPU<->VTA synchronization.
 //! * [`compiler`] — the TVM-like schedule lowering layer: tiling, memory
-//!   scopes, tensorization onto the GEMM intrinsic, and virtual-threading
-//!   based latency hiding.
+//!   scopes, tensorization onto the GEMM intrinsic and the tensor ALU,
+//!   virtual-threading based latency hiding, and the unified operator
+//!   API ([`compiler::op`]): the `VtaOp` trait + registry every
+//!   downstream layer dispatches through.
 //! * [`graph`] — the NNVM-like graph IR: operators, quantization, fusion,
-//!   CPU/VTA partitioning, and the ResNet-18 workload builder.
+//!   registry-driven CPU/VTA partitioning, and the ResNet-18 workload
+//!   builder.
 //! * [`exec`] — the graph executor that co-schedules VTA kernels on the
 //!   simulator and CPU-resident operators on XLA/PJRT executables compiled
 //!   ahead-of-time from JAX (see `python/compile/`).

@@ -3,13 +3,15 @@
 //! Subcommands:
 //! * `info [--config FILE]` — print the architecture summary and the
 //!   §2.6 bandwidth derivation.
-//! * `resnet [--cpu-only] [--vt N] [--pjrt] [--config FILE]` — run
-//!   ResNet-18 inference end-to-end and print the Fig 16 breakdown.
+//! * `resnet [--cpu-only] [--vt N] [--pjrt] [--offload-dense]
+//!   [--offload-alu] [--config FILE]` — run ResNet-18 inference
+//!   end-to-end and print the Fig 16 breakdown.
 //! * `conv <C1..C12> [--vt N] [--config FILE]` — run one Table 1 layer
 //!   and print its roofline point (Fig 15).
-//! * `serve [--batch N] [--vt N] [--cache N] [--config FILE]` — serve a
-//!   batch of ResNet-18 requests through the plan-caching, pipelined
-//!   serving engine and print the serial-vs-pipelined comparison.
+//! * `serve [--batch N] [--vt N] [--cache N] [--offload-all]
+//!   [--config FILE]` — serve a batch of ResNet-18 requests through
+//!   the plan-caching, pipelined serving engine and print the
+//!   serial-vs-pipelined comparison.
 //! * `table1` — print Table 1.
 //!
 //! (Hand-rolled argument parsing: the offline vendor set has no clap —
@@ -42,6 +44,8 @@ struct Flags {
     pjrt: bool,
     batch: usize,
     cache: usize,
+    offload_dense: bool,
+    offload_alu: bool,
     positional: Vec<String>,
 }
 
@@ -53,6 +57,8 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         pjrt: false,
         batch: 4,
         cache: 64,
+        offload_dense: false,
+        offload_alu: false,
         positional: Vec::new(),
     };
     let mut i = 0;
@@ -70,6 +76,7 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     .get(i)
                     .ok_or_else(|| anyhow::anyhow!("--vt needs 1 or 2"))?
                     .parse()?;
+                anyhow::ensure!(f.vt == 1 || f.vt == 2, "--vt needs 1 or 2, got {}", f.vt);
             }
             "--batch" => {
                 i += 1;
@@ -87,6 +94,12 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
             }
             "--cpu-only" => f.cpu_only = true,
             "--pjrt" => f.pjrt = true,
+            "--offload-dense" => f.offload_dense = true,
+            "--offload-alu" => f.offload_alu = true,
+            "--offload-all" => {
+                f.offload_dense = true;
+                f.offload_alu = true;
+            }
             other if other.starts_with("--") => anyhow::bail!("unknown flag {other}"),
             other => f.positional.push(other.to_string()),
         }
@@ -129,6 +142,9 @@ fn print_usage() {
          \x20 --vt N                    virtual threads (1 = no latency hiding, 2 = default)\n\
          \x20 --batch N                 serve: requests per batch (default 4)\n\
          \x20 --cache N                 serve: plan-cache capacity in plans (default 64)\n\
+         \x20 --offload-dense           resnet/serve: lower Dense layers onto the VTA too\n\
+         \x20 --offload-alu             resnet/serve: lower residual adds / ReLUs onto the tensor ALU\n\
+         \x20 --offload-all             shorthand for --offload-dense --offload-alu\n\
          \x20 --cpu-only                resnet: keep every operator on the CPU\n\
          \x20 --pjrt                    resnet: run CPU ops on XLA artifacts (needs `make artifacts`)"
     );
@@ -216,9 +232,22 @@ fn cmd_conv(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Partition policy from the CLI flags: the paper's rule, optionally
+/// widened to Dense / ALU offload.
+fn build_policy(cfg: &VtaConfig, flags: &Flags) -> PartitionPolicy {
+    if flags.cpu_only {
+        return PartitionPolicy::cpu_only();
+    }
+    let mut policy = PartitionPolicy::paper(cfg);
+    policy.virtual_threads = flags.vt;
+    policy.offload_dense = flags.offload_dense;
+    policy.offload_alu = flags.offload_alu;
+    policy
+}
+
 fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
-    let (vta_n, cpu_n) = partition(&mut g, &PartitionPolicy::paper(cfg));
+    let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
     println!(
         "serving ResNet-18: {} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU; \
          batch {}, vt={}, plan cache {} plans",
@@ -245,6 +274,10 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         engine.cached_plans(),
         engine.cache_dram_bytes() as f64 / 1e6
     );
+    let mut kinds: Vec<_> = engine.cached_kinds().into_iter().collect();
+    kinds.sort();
+    let kinds: Vec<String> = kinds.iter().map(|(k, n)| format!("{k} x{n}")).collect();
+    println!("resident plan kinds: {}", kinds.join(", "));
 
     // Warm batch: pure replay — lowering never runs again.
     let t0 = std::time::Instant::now();
@@ -282,9 +315,7 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
 
 fn cmd_resnet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
-    let policy =
-        if flags.cpu_only { PartitionPolicy::cpu_only() } else { PartitionPolicy::paper(cfg) };
-    let (vta_n, cpu_n) = partition(&mut g, &policy);
+    let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
     println!("ResNet-18: {} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU", g.nodes.len());
 
     let cpu = if flags.pjrt {
@@ -292,7 +323,7 @@ fn cmd_resnet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     } else {
         CpuBackend::Native
     };
-    let mut ex = Executor::new(VtaRuntime::new(cfg, 512 << 20), cpu);
+    let mut ex = Executor::with_virtual_threads(VtaRuntime::new(cfg, 512 << 20), cpu, flags.vt);
     let input = synth_input(7, 1, 3, 224, 224);
     let t0 = std::time::Instant::now();
     let report = ex.run(&g, &input)?;
