@@ -8,6 +8,9 @@
 //!                  enough")
 //! * `gemm_shape` — A4: GEMM-core shape sweep (§2.2 ISA fluidity)
 //! * `dram`       — extra: DRAM bandwidth sensitivity (roofline knee)
+//! * `frontier`   — A5: DSE frontier replay — search a small budget of
+//!                  hardware variants + tuned schedules, then replay
+//!                  the found frontier against the pynq baseline
 //!
 //! Run: `cargo bench --bench ablations [-- <name>]`
 
@@ -35,6 +38,65 @@ fn main() {
     if common::selected("dram") {
         dram();
     }
+    if common::selected("frontier") {
+        frontier();
+    }
+}
+
+/// A5: design-space exploration — search, then replay the frontier.
+/// Every replay re-measures the candidate's workloads from scratch
+/// (fresh runtime, same deterministic lowering), confirming the
+/// search's scores are reproducible.
+fn frontier() {
+    use vta::dse::{eval_conv2d, eval_eltwise, eval_matmul, run_dse, suite, DseOptions, Workload};
+
+    println!("# A5: DSE frontier replay — tiny suite, budget 10");
+    let mut opts = DseOptions::new(suite("tiny").expect("tiny suite"));
+    opts.budget = 10;
+    opts.tune_trials = 4;
+    opts.seed = 0xF407;
+    opts.top_k = 3;
+    let report = run_dse(&opts).expect("dse run");
+    println!(
+        "evaluated {} candidates ({} infeasible); baseline (pynq defaults) {} cycles",
+        report.evaluated, report.infeasible, report.baseline.total_cycles
+    );
+
+    println!(
+        "{:>4} {:>9} {:>14} {:>14} {:>8}",
+        "rank", "gemm", "search cycles", "replay cycles", "vs pynq"
+    );
+    for (rank, cand) in report.frontier.iter().enumerate() {
+        // Replay: re-measure each workload with the recorded schedule.
+        let mut replay_total = 0u64;
+        for (w, s) in opts.workloads.iter().zip(&cand.scores) {
+            let cycles = match w {
+                Workload::Conv2d { p, .. } => {
+                    eval_conv2d(&cand.cfg, p, opts.virtual_threads, s.choice.as_ref(), 17)
+                        .expect("frontier conv replays")
+                }
+                Workload::Dense { p, .. } => {
+                    eval_matmul(&cand.cfg, p, opts.virtual_threads, s.choice.as_ref(), 19)
+                        .expect("frontier dense replays")
+                }
+                Workload::Eltwise { kind, len, .. } => {
+                    eval_eltwise(&cand.cfg, *kind, *len, opts.virtual_threads, 23)
+                        .expect("frontier eltwise replays")
+                }
+            };
+            assert_eq!(cycles, s.cycles, "replay must reproduce the search measurement");
+            replay_total += cycles;
+        }
+        println!(
+            "{:>4} {:>9} {:>14} {:>14} {:>7.2}x",
+            rank + 1,
+            format!("{}", cand.cfg.gemm),
+            cand.total_cycles,
+            replay_total,
+            report.baseline.total_cycles as f64 / replay_total as f64
+        );
+    }
+    println!();
 }
 
 /// A1: latency hiding per layer class (bandwidth-bound 1x1 vs

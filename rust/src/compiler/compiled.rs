@@ -33,7 +33,9 @@
 use super::alu::{emit_eltwise, EltwiseDramBase, EltwiseKind};
 use super::conv2d::{bytes_of_i8, emit_conv2d, CompileError, ConvDramBase};
 use super::matmul::{emit_matmul, MatmulDramBase};
-use super::plan::{plan_conv2d, plan_eltwise, plan_matmul, Conv2dParams, MatmulParams};
+use super::plan::{
+    plan_conv2d_tuned, plan_eltwise, plan_matmul_tuned, Conv2dParams, MatmulParams, ScheduleChoice,
+};
 use crate::graph::Op;
 use crate::runtime::{CommandContext, DramBuffer, SealedStream, VtaRuntime};
 use crate::sim::SimStats;
@@ -57,6 +59,10 @@ pub struct CompiledNode {
     /// The graph operator this artifact implements (carries the shape
     /// parameters the unpack step needs).
     pub op: Op,
+    /// The tuned schedule this artifact was lowered with, if any
+    /// (`None` = the planner's greedy default). Introspection for the
+    /// serving layer's tuned-record tests and the `vta serve` report.
+    pub schedule: Option<ScheduleChoice>,
     /// Replayable instruction streams, in execution order (one per
     /// drain/group boundary).
     pub streams: Vec<SealedStream>,
@@ -152,8 +158,22 @@ pub fn compile_conv2d(
     wgt_packed: &[i8],
     virtual_threads: usize,
 ) -> Result<CompiledNode, CompileError> {
+    compile_conv2d_tuned(rt, p, wgt_packed, virtual_threads, None)
+}
+
+/// [`compile_conv2d`] with an optional tuned schedule override — the
+/// path the serving engine takes when the tuning-record store
+/// ([`crate::dse::records`]) knows a better tiling for this
+/// (config, operator) pair.
+pub fn compile_conv2d_tuned(
+    rt: &mut VtaRuntime,
+    p: &Conv2dParams,
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_conv2d(&cfg, p, virtual_threads)?;
+    let plan = plan_conv2d_tuned(&cfg, p, virtual_threads, schedule)?;
 
     let inp_tile_bytes = cfg.inp_tile_bytes();
     let wgt_tile_bytes = cfg.wgt_tile_bytes();
@@ -186,6 +206,7 @@ pub fn compile_conv2d(
 
     Ok(CompiledNode {
         op: Op::Conv2d { p: *p },
+        schedule: schedule.copied(),
         streams,
         inp_bufs: vec![inp_buf],
         out_buf,
@@ -206,8 +227,19 @@ pub fn compile_dense(
     wgt_packed: &[i8],
     virtual_threads: usize,
 ) -> Result<CompiledNode, CompileError> {
+    compile_dense_tuned(rt, p, wgt_packed, virtual_threads, None)
+}
+
+/// [`compile_dense`] with an optional tuned schedule override.
+pub fn compile_dense_tuned(
+    rt: &mut VtaRuntime,
+    p: &MatmulParams,
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_matmul(&cfg, p, virtual_threads)?;
+    let plan = plan_matmul_tuned(&cfg, p, virtual_threads, schedule)?;
     let m_rows = p.m / cfg.gemm.batch;
 
     let inp_tile_bytes = cfg.inp_tile_bytes();
@@ -238,6 +270,7 @@ pub fn compile_dense(
 
     Ok(CompiledNode {
         op: Op::Dense { p: *p },
+        schedule: schedule.copied(),
         streams,
         inp_bufs: vec![a_buf],
         out_buf,
@@ -282,6 +315,7 @@ pub fn compile_eltwise(
 
     Ok(CompiledNode {
         op: kind.graph_op(),
+        schedule: None,
         streams,
         inp_bufs,
         out_buf,

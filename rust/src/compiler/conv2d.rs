@@ -23,7 +23,7 @@
 //! [`crate::compiler::compile_conv2d`] (seal into replayable streams —
 //! the plan-cache path).
 
-use super::plan::{plan_conv2d, Conv2dParams, Conv2dPlan, PlanError};
+use super::plan::{plan_conv2d_tuned, Conv2dParams, Conv2dPlan, PlanError, ScheduleChoice};
 use super::virtual_thread::StripPipeline;
 use crate::isa::{AluOpcode, AluUop, BufferId, GemmUop, Uop};
 use crate::runtime::{
@@ -123,9 +123,13 @@ where
     let virtual_threads = plan.contexts;
     let k = p.k;
 
-    // Context strides use the ISA-addressable depth (see plan.rs).
+    // Context strides use the ISA-addressable depth (see plan.rs). The
+    // acc stride is additionally bounded by the OUT depth: every
+    // compute write mirrors, narrowed, into the out buffer at the same
+    // index, so a DSE-sampled variant with a shallower out SRAM must
+    // not stride past it (same rule as compiler::alu).
     let inp_ctx_stride = cfg.inp_depth().min(1 << 11) / 2;
-    let acc_ctx_stride = cfg.acc_depth().min(1 << 11) / 2;
+    let acc_ctx_stride = cfg.acc_depth().min(cfg.out_depth()).min(1 << 11) / 2;
     let wgt_ctx_stride = cfg.wgt_depth().min(1 << 10) / 2;
 
     let mut kernels = KernelSet::new();
@@ -210,8 +214,21 @@ pub fn lower_conv2d(
     wgt_packed: &[i8],
     virtual_threads: usize,
 ) -> Result<Conv2dOutput, CompileError> {
+    lower_conv2d_tuned(rt, p, inp_packed, wgt_packed, virtual_threads, None)
+}
+
+/// [`lower_conv2d`] with an optional tuned schedule override — the
+/// DSE tuner's measurement path ([`crate::dse::tune`]).
+pub fn lower_conv2d_tuned(
+    rt: &mut VtaRuntime,
+    p: &Conv2dParams,
+    inp_packed: &[i8],
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<Conv2dOutput, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_conv2d(&cfg, p, virtual_threads)?;
+    let plan = plan_conv2d_tuned(&cfg, p, virtual_threads, schedule)?;
 
     // DRAM images (aligned to their tile sizes: dram_base fields are
     // tile-granular).

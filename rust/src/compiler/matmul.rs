@@ -21,7 +21,7 @@
 //! the plan-cache path that puts Dense layers on the VTA).
 
 use super::conv2d::CompileError;
-use super::plan::{plan_matmul, MatmulParams, MatmulPlan};
+use super::plan::{plan_matmul_tuned, MatmulParams, MatmulPlan, ScheduleChoice};
 use super::virtual_thread::StripPipeline;
 use crate::isa::{AluOpcode, AluUop, BufferId, GemmUop, Uop};
 use crate::runtime::{CommandContext, RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime};
@@ -65,9 +65,12 @@ where
     let virtual_threads = plan.contexts;
     let m_rows = p.m / cfg.gemm.batch;
 
-    // Context strides use the ISA-addressable depth (see plan.rs).
+    // Context strides use the ISA-addressable depth (see plan.rs). The
+    // acc stride is additionally bounded by the OUT depth — compute
+    // writes mirror into the out buffer at the same index (see
+    // compiler::alu and the conv2d emitter).
     let inp_ctx_stride = cfg.inp_depth().min(1 << 11) / 2;
-    let acc_ctx_stride = cfg.acc_depth().min(1 << 11) / 2;
+    let acc_ctx_stride = cfg.acc_depth().min(cfg.out_depth()).min(1 << 11) / 2;
 
     // Kernel cache: (kind, context, m_cur, n_cur) → (id, kernel).
     let mut kernels: HashMap<(u8, usize, usize, usize), (usize, UopKernel)> = HashMap::new();
@@ -188,8 +191,21 @@ pub fn lower_matmul(
     w_packed: &[i8],
     virtual_threads: usize,
 ) -> Result<MatmulOutput, CompileError> {
+    lower_matmul_tuned(rt, p, a_packed, w_packed, virtual_threads, None)
+}
+
+/// [`lower_matmul`] with an optional tuned schedule override — the
+/// DSE tuner's measurement path ([`crate::dse::tune`]).
+pub fn lower_matmul_tuned(
+    rt: &mut VtaRuntime,
+    p: &MatmulParams,
+    a_packed: &[i8],
+    w_packed: &[i8],
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<MatmulOutput, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_matmul(&cfg, p, virtual_threads)?;
+    let plan = plan_matmul_tuned(&cfg, p, virtual_threads, schedule)?;
     let m_rows = p.m / cfg.gemm.batch;
 
     let out_tile_bytes = cfg.out_tile_bytes();

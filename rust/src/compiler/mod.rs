@@ -34,19 +34,23 @@ pub mod reference;
 pub mod virtual_thread;
 
 pub use alu::EltwiseKind;
-pub use compiled::{compile_conv2d, compile_dense, compile_eltwise, CompiledNode};
-pub use conv2d::{lower_conv2d, CompileError, Conv2dOutput};
+pub use compiled::{
+    compile_conv2d, compile_conv2d_tuned, compile_dense, compile_dense_tuned, compile_eltwise,
+    CompiledNode,
+};
+pub use conv2d::{lower_conv2d, lower_conv2d_tuned, CompileError, Conv2dOutput};
 pub use layout::{
     pack_acc_i32, pack_activations, pack_matrix_a, pack_matrix_w, pack_weights,
     unpack_activations, unpack_eltwise, unpack_matrix_c, unpack_outputs,
 };
-pub use matmul::{lower_matmul, MatmulOutput};
+pub use matmul::{lower_matmul, lower_matmul_tuned, MatmulOutput};
 pub use op::{
     config_fingerprint, execute_compiled, fnv1a64, lookup, op_impl, weights_fingerprint, VtaOp,
     REGISTRY,
 };
 pub use plan::{
-    Conv2dParams, Conv2dPlan, EltwisePlan, MatmulParams, MatmulPlan, PlanError, Requant,
+    plan_conv2d, plan_conv2d_tuned, plan_eltwise, plan_matmul, plan_matmul_tuned, Conv2dParams,
+    Conv2dPlan, EltwisePlan, MatmulParams, MatmulPlan, PlanError, Requant, ScheduleChoice,
 };
 pub use virtual_thread::StripPipeline;
 

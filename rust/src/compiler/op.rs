@@ -24,13 +24,13 @@
 //! unit struct in [`REGISTRY`], done. `docs/ARCHITECTURE.md` has a
 //! worked "add your own operator" walkthrough.
 
-use super::compiled::{compile_conv2d, compile_dense, compile_eltwise, CompiledNode};
+use super::compiled::{compile_conv2d_tuned, compile_dense_tuned, compile_eltwise, CompiledNode};
 use super::conv2d::CompileError;
 use super::layout::{
     pack_acc_i32, pack_activations, pack_matrix_a, pack_weights, unpack_eltwise, unpack_matrix_c,
     unpack_outputs,
 };
-use super::plan::{plan_conv2d, plan_eltwise, plan_matmul};
+use super::plan::{plan_conv2d, plan_eltwise, plan_matmul, ScheduleChoice};
 use super::reference;
 use super::EltwiseKind;
 use crate::arch::VtaConfig;
@@ -122,6 +122,16 @@ pub trait VtaOp: Sync {
         fnv1a64(format!("{:?}|{:?}|{wfp:016x}", node.op, node.shape).into_bytes())
     }
 
+    /// Fingerprint of everything the *schedule* depends on: operator
+    /// parameters and output shape, but **not** the weights — the
+    /// tuning-record key material ([`crate::dse::records`]). Two nodes
+    /// with identical params share a tuned schedule even when their
+    /// weight images differ, so records produced by `vta dse` on
+    /// synthetic workloads apply to real serving graphs.
+    fn schedule_fingerprint(&self, node: &Node) -> u64 {
+        fnv1a64(format!("{:?}|{:?}", node.op, node.shape).into_bytes())
+    }
+
     /// XLA/PJRT artifact name for the CPU backend (naming scheme shared
     /// with `python/compile/aot.py`); `None` when no artifact exists
     /// for this operator class.
@@ -133,7 +143,9 @@ pub trait VtaOp: Sync {
     /// pack + copy constants into DRAM residency, record + seal the
     /// instruction streams) and return the replayable artifact.
     ///
-    /// The default refuses — CPU-resident operators report
+    /// `schedule` is an optional tuned tiling from the DSE record
+    /// store ([`crate::dse`]); operators without tunable schedules
+    /// ignore it. The default refuses — CPU-resident operators report
     /// [`CompileError::NotOffloadable`].
     fn compile(
         &self,
@@ -141,6 +153,7 @@ pub trait VtaOp: Sync {
         _g: &Graph,
         _node: &Node,
         _virtual_threads: usize,
+        _schedule: Option<&ScheduleChoice>,
     ) -> Result<CompiledNode, CompileError> {
         Err(CompileError::NotOffloadable(self.kind()))
     }
@@ -281,6 +294,7 @@ impl VtaOp for Conv2dVta {
         g: &Graph,
         node: &Node,
         virtual_threads: usize,
+        schedule: Option<&ScheduleChoice>,
     ) -> Result<CompiledNode, CompileError> {
         let Op::Conv2d { p } = &node.op else {
             return Err(CompileError::NotOffloadable(self.kind()));
@@ -288,7 +302,7 @@ impl VtaOp for Conv2dVta {
         let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
         let cfg = rt.ctx.config().clone();
         let wp = pack_weights(&cfg, w);
-        compile_conv2d(rt, p, &wp, virtual_threads)
+        compile_conv2d_tuned(rt, p, &wp, virtual_threads, schedule)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -353,6 +367,7 @@ impl VtaOp for DenseVta {
         g: &Graph,
         node: &Node,
         virtual_threads: usize,
+        schedule: Option<&ScheduleChoice>,
     ) -> Result<CompiledNode, CompileError> {
         let Op::Dense { p } = &node.op else {
             return Err(CompileError::NotOffloadable(self.kind()));
@@ -360,7 +375,7 @@ impl VtaOp for DenseVta {
         let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
         let cfg = rt.ctx.config().clone();
         let wp = super::layout::pack_matrix_w(&cfg, w);
-        compile_dense(rt, p, &wp, virtual_threads)
+        compile_dense_tuned(rt, p, &wp, virtual_threads, schedule)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -421,6 +436,7 @@ impl VtaOp for AddVta {
         _g: &Graph,
         node: &Node,
         virtual_threads: usize,
+        _schedule: Option<&ScheduleChoice>,
     ) -> Result<CompiledNode, CompileError> {
         compile_eltwise(rt, EltwiseKind::AddSat, numel(node), virtual_threads)
     }
@@ -473,6 +489,7 @@ impl VtaOp for ReluVta {
         _g: &Graph,
         node: &Node,
         virtual_threads: usize,
+        _schedule: Option<&ScheduleChoice>,
     ) -> Result<CompiledNode, CompileError> {
         compile_eltwise(rt, EltwiseKind::Relu, numel(node), virtual_threads)
     }

@@ -24,6 +24,36 @@ pub enum PlanError {
     BadBatch { n: usize, b: usize },
     #[error("{what} {v} exceeds the {bits}-bit ISA field")]
     FieldWidth { what: &'static str, v: usize, bits: u32 },
+    #[error("schedule choice for {got} does not apply to {op}")]
+    WrongSchedule { got: &'static str, op: &'static str },
+    #[error("tuned schedule infeasible: {0}")]
+    InfeasibleSchedule(String),
+}
+
+/// A schedule override found by design-space exploration
+/// ([`crate::dse`]): explicit tile sizes replacing the planner's greedy
+/// defaults. Persisted in the tuning-record store and applied at
+/// compile time by [`plan_conv2d_tuned`] / [`plan_matmul_tuned`], which
+/// validate the choice against every SRAM-capacity and ISA-field
+/// constraint before the emitters see it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScheduleChoice {
+    /// Conv2d strip shape: output-channel blocks per weight group and
+    /// output rows / columns per strip.
+    Conv2d { oc_t: usize, oh_t: usize, ow_t: usize },
+    /// Matmul strip shape: M row-groups per strip and N blocks per
+    /// weight group.
+    Matmul { m_t: usize, n_t: usize },
+}
+
+impl ScheduleChoice {
+    /// Operator class this choice tunes (matches [`crate::graph::Op::kind`]).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScheduleChoice::Conv2d { .. } => "conv2d",
+            ScheduleChoice::Matmul { .. } => "dense",
+        }
+    }
 }
 
 /// Requantization applied by the tensor ALU after accumulation
@@ -175,21 +205,161 @@ pub fn plan_conv2d(
     p: &Conv2dParams,
     virtual_threads: usize,
 ) -> Result<Conv2dPlan, PlanError> {
+    plan_conv2d_default(cfg, p, virtual_threads)
+}
+
+/// Plan a conv2d tiling with an optional tuned [`ScheduleChoice`]
+/// override. `None` (and a non-conv choice is an error) falls back to
+/// the greedy default; `Some(Conv2d { .. })` validates the explicit
+/// tile sizes against every capacity and field-width constraint.
+pub fn plan_conv2d_tuned(
+    cfg: &VtaConfig,
+    p: &Conv2dParams,
+    virtual_threads: usize,
+    choice: Option<&ScheduleChoice>,
+) -> Result<Conv2dPlan, PlanError> {
+    match choice {
+        None => plan_conv2d_default(cfg, p, virtual_threads),
+        Some(ScheduleChoice::Conv2d { oc_t, oh_t, ow_t }) => {
+            conv2d_plan_from_choice(cfg, p, virtual_threads, *oc_t, *oh_t, *ow_t)
+        }
+        Some(other) => Err(PlanError::WrongSchedule { got: other.kind(), op: "conv2d" }),
+    }
+}
+
+/// The ISA-clamped SRAM depths and per-context budgets shared by both
+/// conv2d planners.
+///
+/// The Fig 3 micro-op encoding fixes index fields at 11 bits (acc/inp)
+/// and 10 bits (wgt); buffers deeper than that are only partially
+/// addressable by a micro-op base index, so the usable depths clamp to
+/// the encodable range (a real VTA regenerates the ISA widths with the
+/// hardware — we keep the published encoding). Budgets are
+/// per-context: they halve under 2 virtual threads, and the acc budget
+/// is additionally bounded by the OUT depth because every compute
+/// write mirrors into the out buffer at the same index.
+struct ConvBudgets {
+    inp_depth: usize,
+    acc_depth: usize,
+    wgt_depth: usize,
+    inp_budget: usize,
+    acc_budget: usize,
+}
+
+fn conv_budgets(cfg: &VtaConfig, virtual_threads: usize) -> ConvBudgets {
+    let inp_depth = cfg.inp_depth().min(1 << 11);
+    let acc_depth = cfg.acc_depth().min(1 << 11);
+    let out_depth = cfg.out_depth().min(1 << 11);
+    let wgt_depth = cfg.wgt_depth().min(1 << 10);
+    ConvBudgets {
+        inp_depth,
+        acc_depth,
+        wgt_depth,
+        inp_budget: inp_depth / virtual_threads,
+        acc_budget: (acc_depth / virtual_threads).min(out_depth / virtual_threads),
+    }
+}
+
+/// Build and validate a conv2d plan from explicit tile sizes (the
+/// DSE tuner's path). Applies the same weight-context safety rule as
+/// the default planner: a multi-group plan under 2 virtual threads
+/// either double-buffers its weights (group fits half the buffer) or
+/// drains the pipeline between groups.
+fn conv2d_plan_from_choice(
+    cfg: &VtaConfig,
+    p: &Conv2dParams,
+    virtual_threads: usize,
+    oc_t: usize,
+    oh_t: usize,
+    ow_t: usize,
+) -> Result<Conv2dPlan, PlanError> {
+    assert!(virtual_threads == 1 || virtual_threads == 2, "1 or 2 virtual threads");
+    if oc_t == 0 || oh_t == 0 || ow_t == 0 {
+        return Err(PlanError::InfeasibleSchedule("zero tile size".into()));
+    }
+    let icb = p.ic.div_ceil(cfg.gemm.block_in);
+    let ocb = p.oc.div_ceil(cfg.gemm.block_out);
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let pad = p.pad();
+    let ConvBudgets { inp_depth, acc_depth, wgt_depth, inp_budget, acc_budget } =
+        conv_budgets(cfg, virtual_threads);
+
+    // Clamp to the workload extent (a choice tuned on a same-shaped
+    // layer may quote tiles larger than this layer's output).
+    let oc_t = oc_t.min(ocb);
+    let oh_t = oh_t.min(oh);
+    let ow_t = ow_t.min(ow);
+
+    let per_oc_tiles = icb * p.k * p.k;
+    let (wgt_contexts, drain_groups) = if oc_t >= ocb {
+        (1, false)
+    } else if virtual_threads == 2 {
+        if oc_t * per_oc_tiles <= wgt_depth / 2 {
+            (2, false)
+        } else {
+            (1, true)
+        }
+    } else {
+        (1, false)
+    };
+    if oc_t * per_oc_tiles > wgt_depth / wgt_contexts {
+        return Err(PlanError::WeightsDontFit {
+            tiles: oc_t * per_oc_tiles,
+            depth: wgt_depth / wgt_contexts,
+        });
+    }
+    if oc_t * per_oc_tiles > cfg.uop_depth() {
+        return Err(PlanError::KernelDoesntFit {
+            uops: oc_t * per_oc_tiles,
+            depth: cfg.uop_depth(),
+        });
+    }
+
+    let span = |t: usize| (t - 1) * p.s + p.k;
+    if icb * span(oh_t) * span(ow_t) > inp_budget {
+        return Err(PlanError::InfeasibleSchedule(format!(
+            "strip input {} tiles exceeds per-context budget {inp_budget}",
+            icb * span(oh_t) * span(ow_t)
+        )));
+    }
+    if oc_t * oh_t * ow_t > acc_budget {
+        return Err(PlanError::InfeasibleSchedule(format!(
+            "strip accumulator {} tiles exceeds per-context budget {acc_budget}",
+            oc_t * oh_t * ow_t
+        )));
+    }
+
+    let plan = Conv2dPlan {
+        icb,
+        ocb,
+        oc_t,
+        oh_t,
+        ow_t,
+        contexts: virtual_threads,
+        ih_span: span(oh_t),
+        iw_tiles: span(ow_t),
+        oh,
+        ow,
+        pad,
+        wgt_contexts,
+        drain_groups,
+    };
+    check_conv_widths(p, &plan, virtual_threads, inp_depth, acc_depth)?;
+    Ok(plan)
+}
+
+fn plan_conv2d_default(
+    cfg: &VtaConfig,
+    p: &Conv2dParams,
+    virtual_threads: usize,
+) -> Result<Conv2dPlan, PlanError> {
     assert!(virtual_threads == 1 || virtual_threads == 2, "1 or 2 virtual threads");
     let icb = p.ic.div_ceil(cfg.gemm.block_in);
     let ocb = p.oc.div_ceil(cfg.gemm.block_out);
     let (oh, ow) = (p.out_h(), p.out_w());
     let pad = p.pad();
-
-    // The Fig 3 micro-op encoding fixes index fields at 11 bits
-    // (acc/inp) and 10 bits (wgt); buffers deeper than that are only
-    // partially addressable by a micro-op base index, so the usable
-    // depths clamp to the encodable range (a real VTA regenerates the
-    // ISA widths with the hardware — we keep the published encoding).
-    let inp_depth = cfg.inp_depth().min(1 << 11);
-    let acc_depth = cfg.acc_depth().min(1 << 11);
-    let out_depth = cfg.out_depth().min(1 << 11);
-    let wgt_depth = cfg.wgt_depth().min(1 << 10);
+    let ConvBudgets { inp_depth, acc_depth, wgt_depth, inp_budget, acc_budget } =
+        conv_budgets(cfg, virtual_threads);
 
     // 1. Output-channel group size, limited by the weight buffer and
     //    the micro-op cache (main kernel must fit).
@@ -233,8 +403,6 @@ pub fn plan_conv2d(
 
     // 2. Strip shape: start from full width, shrink until the input and
     //    accumulator budgets (per context) hold.
-    let inp_budget = inp_depth / virtual_threads;
-    let acc_budget = (acc_depth / virtual_threads).min(out_depth / virtual_threads);
     let span = |t: usize| (t - 1) * p.s + p.k; // input extent for t outputs
 
     let mut ow_t = ow;
@@ -283,8 +451,20 @@ pub fn plan_conv2d(
         drain_groups,
     };
 
-    // 3. ISA field-width validation (11-bit uop indices, 11/10-bit
-    //    factors, 14-bit loop extents, 4-bit pads).
+    check_conv_widths(p, &plan, virtual_threads, inp_depth, acc_depth)?;
+    Ok(plan)
+}
+
+/// ISA field-width validation shared by the default and tuned conv2d
+/// planners (11-bit uop indices, 11/10-bit factors, 14-bit loop
+/// extents, 4-bit pads).
+fn check_conv_widths(
+    p: &Conv2dParams,
+    plan: &Conv2dPlan,
+    virtual_threads: usize,
+    inp_depth: usize,
+    acc_depth: usize,
+) -> Result<(), PlanError> {
     check_width("uop acc index", plan.acc_tiles() + (virtual_threads - 1) * acc_depth / 2, 1 << 11)?;
     check_width("uop inp index", plan.inp_tiles() + (virtual_threads - 1) * inp_depth / 2, 1 << 11)?;
     check_width("uop wgt index", plan.wgt_tiles(p.k), 1 << 10)?;
@@ -292,8 +472,8 @@ pub fn plan_conv2d(
     check_width("gemm lp1", plan.ow_t, 1 << 14)?;
     check_width("src factor0", p.s * plan.iw_tiles, 1 << 11)?;
     check_width("dst factor0", plan.ow_t, 1 << 11)?;
-    check_width("pad", pad, 1 << 4)?;
-    Ok(plan)
+    check_width("pad", plan.pad, 1 << 4)?;
+    Ok(())
 }
 
 fn check_width(what: &'static str, v: usize, limit: usize) -> Result<(), PlanError> {
@@ -338,6 +518,23 @@ pub fn plan_matmul(
     p: &MatmulParams,
     virtual_threads: usize,
 ) -> Result<MatmulPlan, PlanError> {
+    plan_matmul_tuned(cfg, p, virtual_threads, None)
+}
+
+/// Plan a matmul tiling with an optional tuned [`ScheduleChoice`]
+/// override (`Matmul { m_t, n_t }` caps the strip row-groups and the
+/// weight-resident N blocks).
+pub fn plan_matmul_tuned(
+    cfg: &VtaConfig,
+    p: &MatmulParams,
+    virtual_threads: usize,
+    choice: Option<&ScheduleChoice>,
+) -> Result<MatmulPlan, PlanError> {
+    let tuned = match choice {
+        None => None,
+        Some(ScheduleChoice::Matmul { m_t, n_t }) => Some((*m_t, *n_t)),
+        Some(other) => return Err(PlanError::WrongSchedule { got: other.kind(), op: "dense" }),
+    };
     if p.m % cfg.gemm.batch != 0 {
         return Err(PlanError::BadBatch { n: p.m, b: cfg.gemm.batch });
     }
@@ -347,15 +544,46 @@ pub fn plan_matmul(
     if kb > wgt_depth {
         return Err(PlanError::WeightsDontFit { tiles: kb, depth: wgt_depth });
     }
-    let n_t = nb.min(wgt_depth / kb).min((cfg.uop_depth() / 2 / kb).max(1)).max(1);
     let m_rows = p.m / cfg.gemm.batch;
     let inp_budget = cfg.inp_depth().min(1 << 11) / virtual_threads;
     let acc_budget = (cfg.acc_depth().min(1 << 11) / virtual_threads)
         .min(cfg.out_depth().min(1 << 11) / virtual_threads);
-    let m_t = m_rows.min(inp_budget / kb).min(acc_budget / n_t).max(1);
     if kb > inp_budget {
         return Err(PlanError::InputsDontFit { tiles: kb, depth: inp_budget });
     }
+    let (m_t, n_t) = match tuned {
+        None => {
+            let n_t = nb.min(wgt_depth / kb).min((cfg.uop_depth() / 2 / kb).max(1)).max(1);
+            let m_t = m_rows.min(inp_budget / kb).min(acc_budget / n_t).max(1);
+            (m_t, n_t)
+        }
+        Some((m_t, n_t)) => {
+            if m_t == 0 || n_t == 0 {
+                return Err(PlanError::InfeasibleSchedule("zero tile size".into()));
+            }
+            let m_t = m_t.min(m_rows);
+            let n_t = n_t.min(nb);
+            if n_t * kb > wgt_depth {
+                return Err(PlanError::WeightsDontFit { tiles: n_t * kb, depth: wgt_depth });
+            }
+            if kb > cfg.uop_depth() {
+                return Err(PlanError::KernelDoesntFit { uops: kb, depth: cfg.uop_depth() });
+            }
+            if m_t * kb > inp_budget {
+                return Err(PlanError::InfeasibleSchedule(format!(
+                    "strip input {} tiles exceeds per-context budget {inp_budget}",
+                    m_t * kb
+                )));
+            }
+            if m_t * n_t > acc_budget {
+                return Err(PlanError::InfeasibleSchedule(format!(
+                    "strip accumulator {} tiles exceeds per-context budget {acc_budget}",
+                    m_t * n_t
+                )));
+            }
+            (m_t, n_t)
+        }
+    };
     check_width("matmul lp0", m_t, 1 << 14)?;
     check_width("matmul lp1", n_t, 1 << 14)?;
     check_width("matmul src f0", kb, 1 << 11)?;

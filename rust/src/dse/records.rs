@@ -1,0 +1,462 @@
+//! The tuning-record store: best-known schedules found by design-space
+//! exploration, persisted as JSON so they survive restarts.
+//!
+//! A record maps (hardware-config fingerprint, virtual threads,
+//! schedule fingerprint) → the best [`ScheduleChoice`] measured for
+//! that operator on that variant, plus the simulated cycle count it
+//! achieved. The schedule fingerprint
+//! ([`crate::compiler::VtaOp::schedule_fingerprint`]) covers operator
+//! parameters and output shape but **not** weights, so records tuned
+//! on synthetic workloads apply to any serving graph with the same
+//! layer shapes.
+//!
+//! The on-disk format is plain JSON (the offline vendor set has no
+//! serde, so [`json`] implements the small subset needed here —
+//! objects, arrays, strings, unsigned integers, booleans):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "records": [
+//!     { "config_fp": 123, "vt": 2, "sched_fp": 456, "cycles": 7890,
+//!       "choice": { "op": "conv2d", "oc_t": 2, "oh_t": 7, "ow_t": 28 } }
+//!   ]
+//! }
+//! ```
+
+use crate::compiler::ScheduleChoice;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Identity of one tuning record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RecordKey {
+    /// Hardware variant ([`crate::compiler::config_fingerprint`]).
+    pub config_fp: u64,
+    /// Virtual-thread count the schedule was tuned for.
+    pub virtual_threads: usize,
+    /// Operator schedule fingerprint
+    /// ([`crate::compiler::VtaOp::schedule_fingerprint`]).
+    pub sched_fp: u64,
+}
+
+/// One stored tuning result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuningRecord {
+    /// The winning schedule.
+    pub choice: ScheduleChoice,
+    /// Simulated cycles measured when the record was produced (used to
+    /// keep the better record on key collisions).
+    pub cycles: u64,
+}
+
+/// In-memory store of tuning records, with JSON load/save.
+#[derive(Clone, Debug, Default)]
+pub struct TuningRecords {
+    map: HashMap<RecordKey, TuningRecord>,
+}
+
+impl TuningRecords {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no records are stored.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// The best-known schedule for this (config, vt, operator) triple.
+    pub fn lookup(&self, config_fp: u64, virtual_threads: usize, sched_fp: u64) -> Option<ScheduleChoice> {
+        self.map
+            .get(&RecordKey { config_fp, virtual_threads, sched_fp })
+            .map(|r| r.choice)
+    }
+
+    /// Insert a record, keeping the better (fewer-cycle) one on
+    /// collision. Returns true when the store changed.
+    pub fn insert(&mut self, key: RecordKey, rec: TuningRecord) -> bool {
+        match self.map.get(&key) {
+            Some(old) if old.cycles <= rec.cycles => false,
+            _ => {
+                self.map.insert(key, rec);
+                true
+            }
+        }
+    }
+
+    /// Merge another store, record by record (better cycles win).
+    pub fn merge(&mut self, other: &TuningRecords) {
+        for (k, r) in &other.map {
+            self.insert(*k, *r);
+        }
+    }
+
+    /// Iterate over all records.
+    pub fn iter(&self) -> impl Iterator<Item = (&RecordKey, &TuningRecord)> {
+        self.map.iter()
+    }
+
+    /// Serialize to the JSON record format (keys sorted for stable
+    /// output).
+    pub fn to_json(&self) -> String {
+        let mut entries: Vec<(&RecordKey, &TuningRecord)> = self.map.iter().collect();
+        entries.sort_by_key(|(k, _)| (k.config_fp, k.virtual_threads, k.sched_fp));
+        let mut s = String::new();
+        s.push_str("{\n  \"version\": 1,\n  \"records\": [");
+        for (i, (k, r)) in entries.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n    {{ \"config_fp\": {}, \"vt\": {}, \"sched_fp\": {}, \"cycles\": {}, \"choice\": ",
+                k.config_fp, k.virtual_threads, k.sched_fp, r.cycles
+            );
+            match r.choice {
+                ScheduleChoice::Conv2d { oc_t, oh_t, ow_t } => {
+                    let _ = write!(
+                        s,
+                        "{{ \"op\": \"conv2d\", \"oc_t\": {oc_t}, \"oh_t\": {oh_t}, \"ow_t\": {ow_t} }}"
+                    );
+                }
+                ScheduleChoice::Matmul { m_t, n_t } => {
+                    let _ = write!(s, "{{ \"op\": \"dense\", \"m_t\": {m_t}, \"n_t\": {n_t} }}");
+                }
+            }
+            s.push_str(" }");
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    /// Parse the JSON record format.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let root = json::parse(text)?;
+        let version = root.get("version").and_then(json::Value::as_u64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported tuning-record version {version}");
+        }
+        let mut store = TuningRecords::new();
+        let records = root
+            .get("records")
+            .and_then(json::Value::as_array)
+            .context("missing \"records\" array")?;
+        for (i, rec) in records.iter().enumerate() {
+            let field = |name: &str| -> Result<u64> {
+                rec.get(name)
+                    .and_then(json::Value::as_u64)
+                    .with_context(|| format!("record {i}: missing integer field {name:?}"))
+            };
+            let key = RecordKey {
+                config_fp: field("config_fp")?,
+                virtual_threads: field("vt")? as usize,
+                sched_fp: field("sched_fp")?,
+            };
+            let cycles = field("cycles")?;
+            let choice_obj = rec.get("choice").context("missing \"choice\"")?;
+            let cfield = |name: &str| -> Result<usize> {
+                choice_obj
+                    .get(name)
+                    .and_then(json::Value::as_u64)
+                    .map(|v| v as usize)
+                    .with_context(|| format!("record {i}: choice missing field {name:?}"))
+            };
+            let op = choice_obj
+                .get("op")
+                .and_then(json::Value::as_str)
+                .with_context(|| format!("record {i}: choice missing \"op\""))?;
+            let choice = match op {
+                "conv2d" => ScheduleChoice::Conv2d {
+                    oc_t: cfield("oc_t")?,
+                    oh_t: cfield("oh_t")?,
+                    ow_t: cfield("ow_t")?,
+                },
+                "dense" => ScheduleChoice::Matmul { m_t: cfield("m_t")?, n_t: cfield("n_t")? },
+                other => bail!("record {i}: unknown choice op {other:?}"),
+            };
+            store.insert(key, TuningRecord { choice, cycles });
+        }
+        Ok(store)
+    }
+
+    /// Write the store to `path` as JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing tuning records to {}", path.display()))
+    }
+
+    /// Load a store from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tuning records from {}", path.display()))?;
+        Self::from_json(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// The minimal JSON subset the record store needs: objects, arrays,
+/// strings (no escapes beyond `\"` and `\\`), unsigned integers,
+/// booleans, null.
+pub mod json {
+    use anyhow::{bail, Result};
+
+    /// A parsed JSON value.
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Value {
+        Obj(Vec<(String, Value)>),
+        Arr(Vec<Value>),
+        Str(String),
+        Num(u64),
+        Bool(bool),
+        Null,
+    }
+
+    impl Value {
+        /// Object field by key.
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        /// Unsigned-integer view.
+        pub fn as_u64(&self) -> Option<u64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+
+        /// String view.
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        /// Array view.
+        pub fn as_array(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+    }
+
+    /// Parse one JSON document.
+    pub fn parse(text: &str) -> Result<Value> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing content at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+            *pos += 1;
+        }
+    }
+
+    fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == c {
+            *pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", c as char, *pos)
+        }
+    }
+
+    fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value> {
+        skip_ws(b, pos);
+        let Some(&c) = b.get(*pos) else { bail!("unexpected end of input") };
+        match c {
+            b'{' => {
+                *pos += 1;
+                let mut fields = Vec::new();
+                skip_ws(b, pos);
+                if b.get(*pos) == Some(&b'}') {
+                    *pos += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                loop {
+                    skip_ws(b, pos);
+                    let key = match parse_value(b, pos)? {
+                        Value::Str(s) => s,
+                        other => bail!("object key must be a string, got {other:?}"),
+                    };
+                    expect(b, pos, b':')?;
+                    let val = parse_value(b, pos)?;
+                    fields.push((key, val));
+                    skip_ws(b, pos);
+                    match b.get(*pos) {
+                        Some(&b',') => *pos += 1,
+                        Some(&b'}') => {
+                            *pos += 1;
+                            return Ok(Value::Obj(fields));
+                        }
+                        _ => bail!("expected ',' or '}}' at byte {}", *pos),
+                    }
+                }
+            }
+            b'[' => {
+                *pos += 1;
+                let mut items = Vec::new();
+                skip_ws(b, pos);
+                if b.get(*pos) == Some(&b']') {
+                    *pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                loop {
+                    items.push(parse_value(b, pos)?);
+                    skip_ws(b, pos);
+                    match b.get(*pos) {
+                        Some(&b',') => *pos += 1,
+                        Some(&b']') => {
+                            *pos += 1;
+                            return Ok(Value::Arr(items));
+                        }
+                        _ => bail!("expected ',' or ']' at byte {}", *pos),
+                    }
+                }
+            }
+            b'"' => {
+                *pos += 1;
+                let mut s = String::new();
+                loop {
+                    let Some(&c) = b.get(*pos) else { bail!("unterminated string") };
+                    *pos += 1;
+                    match c {
+                        b'"' => return Ok(Value::Str(s)),
+                        b'\\' => {
+                            let Some(&e) = b.get(*pos) else { bail!("unterminated escape") };
+                            *pos += 1;
+                            match e {
+                                b'"' => s.push('"'),
+                                b'\\' => s.push('\\'),
+                                other => bail!("unsupported escape \\{}", other as char),
+                            }
+                        }
+                        other => s.push(other as char),
+                    }
+                }
+            }
+            b'0'..=b'9' => {
+                let start = *pos;
+                while *pos < b.len() && b[*pos].is_ascii_digit() {
+                    *pos += 1;
+                }
+                let text = std::str::from_utf8(&b[start..*pos]).expect("digits are ascii");
+                Ok(Value::Num(text.parse()?))
+            }
+            b't' if b[*pos..].starts_with(b"true") => {
+                *pos += 4;
+                Ok(Value::Bool(true))
+            }
+            b'f' if b[*pos..].starts_with(b"false") => {
+                *pos += 5;
+                Ok(Value::Bool(false))
+            }
+            b'n' if b[*pos..].starts_with(b"null") => {
+                *pos += 4;
+                Ok(Value::Null)
+            }
+            other => bail!("unexpected character {:?} at byte {}", other as char, *pos),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(c: u64, vt: usize, s: u64) -> RecordKey {
+        RecordKey { config_fp: c, virtual_threads: vt, sched_fp: s }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_record() {
+        let mut store = TuningRecords::new();
+        store.insert(
+            key(0xDEAD_BEEF_0000_0001, 2, 42),
+            TuningRecord {
+                choice: ScheduleChoice::Conv2d { oc_t: 2, oh_t: 7, ow_t: 28 },
+                cycles: 123_456,
+            },
+        );
+        store.insert(
+            key(u64::MAX, 1, u64::MAX - 1),
+            TuningRecord { choice: ScheduleChoice::Matmul { m_t: 4, n_t: 16 }, cycles: 99 },
+        );
+        let text = store.to_json();
+        let back = TuningRecords::from_json(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back.lookup(0xDEAD_BEEF_0000_0001, 2, 42),
+            Some(ScheduleChoice::Conv2d { oc_t: 2, oh_t: 7, ow_t: 28 })
+        );
+        assert_eq!(
+            back.lookup(u64::MAX, 1, u64::MAX - 1),
+            Some(ScheduleChoice::Matmul { m_t: 4, n_t: 16 })
+        );
+        // Round-tripping again is byte-identical (sorted, stable).
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn insert_keeps_the_better_record() {
+        let mut store = TuningRecords::new();
+        let k = key(1, 2, 3);
+        let slow = TuningRecord { choice: ScheduleChoice::Matmul { m_t: 1, n_t: 1 }, cycles: 100 };
+        let fast = TuningRecord { choice: ScheduleChoice::Matmul { m_t: 2, n_t: 2 }, cycles: 50 };
+        assert!(store.insert(k, slow));
+        assert!(store.insert(k, fast), "faster record must replace");
+        assert!(!store.insert(k, slow), "slower record must not replace");
+        assert_eq!(store.lookup(1, 2, 3), Some(fast.choice));
+    }
+
+    #[test]
+    fn missing_lookup_is_none_and_bad_json_is_rejected() {
+        let store = TuningRecords::new();
+        assert_eq!(store.lookup(1, 2, 3), None);
+        assert!(TuningRecords::from_json("not json").is_err());
+        assert!(TuningRecords::from_json("{\"version\": 2, \"records\": []}").is_err());
+        // A record with an unknown choice op is rejected, not skipped.
+        let bad = "{\"version\": 1, \"records\": [{\"config_fp\": 1, \"vt\": 2, \
+                   \"sched_fp\": 3, \"cycles\": 4, \"choice\": {\"op\": \"pool\"}}]}";
+        assert!(TuningRecords::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn save_and_load_roundtrip_through_disk() {
+        let mut store = TuningRecords::new();
+        store.insert(
+            key(7, 2, 8),
+            TuningRecord {
+                choice: ScheduleChoice::Conv2d { oc_t: 1, oh_t: 2, ow_t: 3 },
+                cycles: 10,
+            },
+        );
+        let path = std::env::temp_dir().join("vta_dse_records_test.json");
+        store.save(&path).unwrap();
+        let back = TuningRecords::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.lookup(7, 2, 8), Some(ScheduleChoice::Conv2d { oc_t: 1, oh_t: 2, ow_t: 3 }));
+    }
+}

@@ -1,0 +1,208 @@
+//! The hardware candidate space: enumerable [`VtaConfig`] axes under
+//! an FPGA resource model.
+//!
+//! The paper's flow "performs design space exploration to generate a
+//! customized hardware architecture" — candidates are only meaningful
+//! if they would actually place and route on the target part, so every
+//! sampled variant is filtered through [`ResourceBudget::fits`]
+//! (BRAM / DSP / LUT cost functions over the config) on top of
+//! [`VtaConfig::validate`].
+
+use crate::arch::{GemmShape, VtaConfig};
+use crate::util::XorShiftRng;
+
+/// Estimated FPGA resource usage of a VTA variant — the cost side of
+/// the resource model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResourceUsage {
+    /// 18 kbit block RAMs backing the five scratchpads.
+    pub bram18: usize,
+    /// DSP48 slices backing the GEMM multipliers.
+    pub dsp: usize,
+    /// Logic LUTs: control + GEMM adder trees + the tensor ALU lanes.
+    pub lut: usize,
+}
+
+impl ResourceUsage {
+    /// Cost functions over a config. The models are deliberately
+    /// simple, monotone approximations:
+    /// * BRAM: total SRAM bytes across the five buffers, packed into
+    ///   18 kbit blocks.
+    /// * DSP: one multiplier per MAC lane; two int8 multiplies pack
+    ///   into one DSP48 slice (the standard 8-bit packing trick), and
+    ///   wider operands take a full slice each.
+    /// * LUT: a fixed control overhead, plus the GEMM adder tree and
+    ///   the vector ALU lanes.
+    pub fn of(cfg: &VtaConfig) -> Self {
+        let sram_bytes = cfg.inp_buf_bytes
+            + cfg.wgt_buf_bytes
+            + cfg.acc_buf_bytes
+            + cfg.out_buf_bytes
+            + cfg.uop_buf_bytes;
+        let bram18 = (sram_bytes * 8).div_ceil(18 * 1024);
+        let macs = cfg.gemm.macs_per_cycle();
+        let dsp = if cfg.inp_bits <= 8 && cfg.wgt_bits <= 8 { macs.div_ceil(2) } else { macs };
+        let lut = 8_000 + 30 * macs + 250 * cfg.alu_lanes;
+        ResourceUsage { bram18, dsp, lut }
+    }
+}
+
+/// An FPGA resource budget the hardware search must stay inside.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResourceBudget {
+    pub bram18: usize,
+    pub dsp: usize,
+    pub lut: usize,
+}
+
+impl ResourceBudget {
+    /// The paper's evaluation part: the Pynq board's Zynq-7020
+    /// (140 BRAM36 = 280 BRAM18, 220 DSP48, 53 200 LUTs).
+    pub fn zynq7020() -> Self {
+        ResourceBudget { bram18: 280, dsp: 220, lut: 53_200 }
+    }
+
+    /// True when `cfg`'s estimated usage fits this budget.
+    pub fn fits(&self, cfg: &VtaConfig) -> bool {
+        let u = ResourceUsage::of(cfg);
+        u.bram18 <= self.bram18 && u.dsp <= self.dsp && u.lut <= self.lut
+    }
+}
+
+/// Menu of values per tunable axis. Kept as constants so sampling and
+/// mutation draw from the same sets.
+const BLOCK_DIMS: [usize; 3] = [8, 16, 32];
+const INP_KIB: [usize; 4] = [16, 32, 64, 128];
+const WGT_KIB: [usize; 4] = [64, 128, 256, 512];
+const ACC_KIB: [usize; 4] = [32, 64, 128, 256];
+const OUT_KIB: [usize; 3] = [16, 32, 64];
+const UOP_KIB: [usize; 4] = [8, 16, 32, 64];
+const ALU_LANES: [usize; 4] = [8, 16, 32, 64];
+
+fn pick<const N: usize>(menu: &[usize; N], rng: &mut XorShiftRng) -> usize {
+    menu[rng.next_below(N as u64) as usize]
+}
+
+/// The enumerable hardware design space (GEMM geometry, SRAM depths,
+/// ALU width) under a resource budget. Clock and DRAM model are held
+/// at the Pynq point so candidate scores stay cycle-comparable.
+#[derive(Clone, Copy, Debug)]
+pub struct ConfigSpace {
+    pub budget: ResourceBudget,
+}
+
+impl ConfigSpace {
+    /// Space over the default Zynq-7020 budget.
+    pub fn new() -> Self {
+        ConfigSpace { budget: ResourceBudget::zynq7020() }
+    }
+
+    /// Draw one random candidate: rejection-sample until the variant
+    /// both validates and fits the budget (the menus are small enough
+    /// that this terminates in a handful of draws).
+    pub fn sample(&self, rng: &mut XorShiftRng) -> VtaConfig {
+        loop {
+            let mut cfg = VtaConfig::pynq();
+            cfg.gemm = GemmShape {
+                batch: 1,
+                block_in: pick(&BLOCK_DIMS, rng),
+                block_out: pick(&BLOCK_DIMS, rng),
+            };
+            cfg.inp_buf_bytes = pick(&INP_KIB, rng) * 1024;
+            cfg.wgt_buf_bytes = pick(&WGT_KIB, rng) * 1024;
+            cfg.acc_buf_bytes = pick(&ACC_KIB, rng) * 1024;
+            cfg.out_buf_bytes = pick(&OUT_KIB, rng) * 1024;
+            cfg.uop_buf_bytes = pick(&UOP_KIB, rng) * 1024;
+            cfg.alu_lanes = pick(&ALU_LANES, rng).min(cfg.gemm.batch * cfg.gemm.block_out);
+            if self.accepts(&cfg) {
+                return cfg;
+            }
+        }
+    }
+
+    /// Mutate one axis of `base` to a neighboring menu value — the
+    /// greedy-refine move. Falls back to a fresh sample if no valid
+    /// single-axis mutation is found after a few tries.
+    pub fn mutate(&self, base: &VtaConfig, rng: &mut XorShiftRng) -> VtaConfig {
+        for _ in 0..16 {
+            let mut cfg = base.clone();
+            match rng.next_below(8) {
+                0 => cfg.gemm.block_in = pick(&BLOCK_DIMS, rng),
+                1 => cfg.gemm.block_out = pick(&BLOCK_DIMS, rng),
+                2 => cfg.inp_buf_bytes = pick(&INP_KIB, rng) * 1024,
+                3 => cfg.wgt_buf_bytes = pick(&WGT_KIB, rng) * 1024,
+                4 => cfg.acc_buf_bytes = pick(&ACC_KIB, rng) * 1024,
+                5 => cfg.uop_buf_bytes = pick(&UOP_KIB, rng) * 1024,
+                6 => cfg.out_buf_bytes = pick(&OUT_KIB, rng) * 1024,
+                _ => cfg.alu_lanes = pick(&ALU_LANES, rng),
+            }
+            cfg.alu_lanes = cfg.alu_lanes.min(cfg.gemm.batch * cfg.gemm.block_out);
+            if cfg != *base && self.accepts(&cfg) {
+                return cfg;
+            }
+        }
+        self.sample(rng)
+    }
+
+    /// Validity + budget filter.
+    pub fn accepts(&self, cfg: &VtaConfig) -> bool {
+        cfg.validate().is_empty() && self.budget.fits(cfg)
+    }
+}
+
+impl Default for ConfigSpace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pynq_fits_the_zynq7020_budget() {
+        let budget = ResourceBudget::zynq7020();
+        let pynq = VtaConfig::pynq();
+        assert!(budget.fits(&pynq), "usage {:?}", ResourceUsage::of(&pynq));
+    }
+
+    #[test]
+    fn oversized_variants_are_rejected() {
+        let budget = ResourceBudget::zynq7020();
+        // A 32x32 GEMM core needs 512 packed-int8 DSPs — over the 220
+        // on the part.
+        let mut big = VtaConfig::pynq();
+        big.gemm = GemmShape { batch: 1, block_in: 32, block_out: 32 };
+        assert!(!budget.fits(&big));
+        // Doubling every SRAM blows the BRAM budget.
+        let mut deep = VtaConfig::pynq();
+        deep.inp_buf_bytes *= 4;
+        deep.wgt_buf_bytes *= 4;
+        deep.acc_buf_bytes *= 4;
+        assert!(!budget.fits(&deep));
+    }
+
+    #[test]
+    fn sampled_candidates_are_valid_and_in_budget() {
+        let space = ConfigSpace::new();
+        let mut rng = XorShiftRng::new(0xD5E);
+        for _ in 0..50 {
+            let cfg = space.sample(&mut rng);
+            assert!(cfg.validate().is_empty(), "invalid sample: {cfg:?}");
+            assert!(space.budget.fits(&cfg), "over budget: {cfg:?}");
+            assert!(cfg.alu_lanes <= cfg.gemm.batch * cfg.gemm.block_out);
+        }
+    }
+
+    #[test]
+    fn mutation_stays_in_budget_and_moves() {
+        let space = ConfigSpace::new();
+        let mut rng = XorShiftRng::new(0xD5E2);
+        let base = VtaConfig::pynq();
+        for _ in 0..20 {
+            let m = space.mutate(&base, &mut rng);
+            assert!(space.accepts(&m));
+        }
+    }
+}

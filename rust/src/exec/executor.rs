@@ -181,7 +181,7 @@ impl Executor {
                     let inputs: Vec<&Tensor<i8>> =
                         node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
                     let compiled = entry
-                        .compile(&mut self.rt, g, node, self.virtual_threads)
+                        .compile(&mut self.rt, g, node, self.virtual_threads, None)
                         .map_err(|e| lift_compile_err(&node.name, e))?;
                     // Release the plan's DRAM residency even when the
                     // run fails: the executor is long-lived and a leak

@@ -34,7 +34,8 @@
 use super::executor::{exec_cpu_node, lift_compile_err, CpuBackend, ExecError, NodeReport};
 use crate::arch::VtaConfig;
 use crate::compiler::op::{execute_compiled, op_impl};
-use crate::compiler::CompiledNode;
+use crate::compiler::{CompiledNode, ScheduleChoice};
+use crate::dse::records::TuningRecords;
 use crate::graph::{stages, Graph, Node, Placement};
 use crate::runtime::VtaRuntime;
 use crate::util::Tensor;
@@ -127,6 +128,12 @@ impl PlanCache {
     /// True when `key` is resident (does not touch LRU state).
     pub fn contains(&self, key: &PlanKey) -> bool {
         self.entries.contains_key(key)
+    }
+
+    /// The resident plan for `key`, if any (does not touch LRU state;
+    /// tests / introspection).
+    pub fn peek(&self, key: &PlanKey) -> Option<&CompiledNode> {
+        self.entries.get(key).map(|e| &e.node)
     }
 
     /// Resident plans per operator kind (reporting / tests).
@@ -327,6 +334,11 @@ pub struct ServingEngine {
     cache: PlanCache,
     virtual_threads: usize,
     config_fp: u64,
+    /// Tuned schedules from `vta dse`, consulted at compile time. Fixed
+    /// for the engine's lifetime, so [`PlanKey`] does not need to carry
+    /// a schedule fingerprint — within one engine, (config, vt, op)
+    /// still uniquely determines the compiled artifact.
+    records: TuningRecords,
 }
 
 impl ServingEngine {
@@ -341,6 +353,23 @@ impl ServingEngine {
         virtual_threads: usize,
         cache_capacity: usize,
     ) -> Self {
+        Self::with_records(cfg, dram_size, cpu, virtual_threads, cache_capacity, TuningRecords::new())
+    }
+
+    /// Like [`Self::new`], seeded with a tuning-record store (usually
+    /// loaded from the JSON file `vta dse` persisted): every VTA node
+    /// whose (config, operator) pair has a record compiles with the
+    /// tuned schedule instead of the planner's greedy default, so
+    /// tuned schedules survive restarts and serving traffic
+    /// automatically runs the tuned plan.
+    pub fn with_records(
+        cfg: &VtaConfig,
+        dram_size: usize,
+        cpu: CpuBackend,
+        virtual_threads: usize,
+        cache_capacity: usize,
+        records: TuningRecords,
+    ) -> Self {
         assert!(
             virtual_threads == 1 || virtual_threads == 2,
             "1 or 2 virtual threads"
@@ -351,7 +380,27 @@ impl ServingEngine {
             cache: PlanCache::new(cache_capacity),
             virtual_threads,
             config_fp: config_fingerprint(cfg),
+            records,
         }
+    }
+
+    /// Number of tuning records the engine consults.
+    pub fn tuned_records(&self) -> usize {
+        self.records.len()
+    }
+
+    /// The tuned schedule the engine would apply to `node`, if its
+    /// record store has one for this (config, operator) pair.
+    pub fn tuned_schedule(&self, node: &Node) -> Option<ScheduleChoice> {
+        let entry = op_impl(&node.op);
+        self.records.lookup(self.config_fp, self.virtual_threads, entry.schedule_fingerprint(node))
+    }
+
+    /// The schedule baked into the resident compiled plan for `key`
+    /// (`None` = no resident plan, or the plan uses the default
+    /// schedule). Tests / introspection.
+    pub fn cached_schedule(&self, key: &PlanKey) -> Option<ScheduleChoice> {
+        self.cache.peek(key).and_then(|node| node.schedule)
     }
 
     /// Cumulative plan-cache counters.
@@ -396,11 +445,31 @@ impl ServingEngine {
             .collect()
     }
 
+    /// Precompute the tuned schedule of every VTA-resident node (the
+    /// record lookup hashes the operator's debug form — once per
+    /// graph, like the plan keys, not once per request).
+    fn tuned_schedules(&self, g: &Graph) -> Vec<Option<ScheduleChoice>> {
+        if self.records.is_empty() {
+            return vec![None; g.nodes.len()];
+        }
+        g.nodes
+            .iter()
+            .map(|node| {
+                if node.placement == Placement::Vta {
+                    self.tuned_schedule(node)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
     /// Serve one request.
     pub fn run_one(&mut self, g: &Graph, input: &Tensor<i8>) -> Result<ServeReport, ExecError> {
         let stage_order = stages(g);
         let keys = self.plan_keys(g);
-        let (output, nodes) = self.run_graph(g, input, &stage_order, &keys)?;
+        let schedules = self.tuned_schedules(g);
+        let (output, nodes) = self.run_graph(g, input, &stage_order, &keys, &schedules)?;
         let model = pipeline_schedule(g, std::slice::from_ref(&nodes));
         Ok(ServeReport {
             output,
@@ -423,10 +492,11 @@ impl ServingEngine {
         let t0 = Instant::now();
         let stage_order = stages(g);
         let keys = self.plan_keys(g);
+        let schedules = self.tuned_schedules(g);
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut per_request = Vec::with_capacity(inputs.len());
         for input in inputs {
-            let (out, nodes) = self.run_graph(g, input, &stage_order, &keys)?;
+            let (out, nodes) = self.run_graph(g, input, &stage_order, &keys, &schedules)?;
             outputs.push(out);
             per_request.push(nodes);
         }
@@ -462,6 +532,7 @@ impl ServingEngine {
         input: &Tensor<i8>,
         stage_order: &[Vec<usize>],
         keys: &[Option<PlanKey>],
+        schedules: &[Option<ScheduleChoice>],
     ) -> Result<(Tensor<i8>, Vec<NodeReport>), ExecError> {
         let clock_hz = self.rt.ctx.config().clock_hz;
         let mut values: Vec<Option<Tensor<i8>>> = vec![None; g.nodes.len()];
@@ -482,12 +553,16 @@ impl ServingEngine {
                         node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
                     let key = keys[id].as_ref().expect("plan key precomputed for VTA node");
                     let vt = self.virtual_threads;
+                    // Best-known schedule from the DSE record store
+                    // (None = the planner's greedy default),
+                    // precomputed per graph.
+                    let schedule = schedules[id];
                     // Split borrows: the cache hands out a plan while
                     // the runtime executes it.
                     let rt = &mut self.rt;
                     let compiled = self.cache.get_or_compile(rt, key, |rt| {
                         entry
-                            .compile(rt, g, node, vt)
+                            .compile(rt, g, node, vt, schedule.as_ref())
                             .map_err(|e| lift_compile_err(&node.name, e))
                     })?;
                     let (out, s) = execute_compiled(entry, compiled, rt, &inputs)

@@ -229,6 +229,180 @@ fn random_insn(rng: &mut XorShiftRng) -> Instruction {
     }
 }
 
+/// Property test: randomized micro-ops (both interpretations) round-trip
+/// bit-exactly through the shared 32-bit encoding.
+#[test]
+fn random_uop_roundtrip_property() {
+    let mut rng = XorShiftRng::new(0x500B);
+    for _ in 0..2000 {
+        if rng.next_below(2) == 0 {
+            let g = GemmUop {
+                acc_idx: rng.next_below(1 << 11) as u16,
+                inp_idx: rng.next_below(1 << 11) as u16,
+                wgt_idx: rng.next_below(1 << 10) as u16,
+            };
+            let w = Uop::Gemm(g).encode().unwrap();
+            assert_eq!(Uop::decode_gemm(w), g, "gemm uop roundtrip for {g:?}");
+        } else {
+            let a = AluUop {
+                dst_idx: rng.next_below(1 << 11) as u16,
+                src_idx: rng.next_below(1 << 11) as u16,
+            };
+            let w = Uop::Alu(a).encode().unwrap();
+            assert_eq!(Uop::decode_alu(w), a, "alu uop roundtrip for {a:?}");
+        }
+    }
+}
+
+/// Property test: full encoded streams of randomized instructions
+/// round-trip through the byte-level stream codec.
+#[test]
+fn random_stream_roundtrip_property() {
+    let mut rng = XorShiftRng::new(0x57BEA);
+    for _ in 0..50 {
+        let n = 1 + rng.next_below(40) as usize;
+        let insns: Vec<Instruction> = (0..n).map(|_| random_insn(&mut rng)).collect();
+        let bytes = Instruction::encode_stream(&insns).unwrap();
+        assert_eq!(bytes.len(), n * INSN_BYTES);
+        assert_eq!(Instruction::decode_stream(&bytes).unwrap(), insns);
+    }
+}
+
+/// Property test: pushing any single field past its encoded width must
+/// be rejected — randomized over fields and overflow magnitudes.
+#[test]
+fn random_out_of_range_fields_are_rejected() {
+    let mut rng = XorShiftRng::new(0x0F10);
+    for _ in 0..500 {
+        // Overflow amount: 1 up to a factor of 16 past the field limit.
+        let over = |limit: u64, rng: &mut XorShiftRng| limit + 1 + rng.next_below(limit * 15);
+        match rng.next_below(6) {
+            0 => {
+                // MemInsn.sram_base is the only mem field wider than its
+                // Rust type's range check: 22 bits inside a u32.
+                let mut m = sample_mem(DepFlags::NONE);
+                m.sram_base = over((1 << 22) - 1, &mut rng) as u32;
+                assert!(
+                    matches!(
+                        Instruction::Load(m).encode(),
+                        Err(IsaError::FieldOverflow { field: "sram_base", .. })
+                    ),
+                    "sram_base {} must overflow",
+                    m.sram_base
+                );
+            }
+            1 => {
+                let mut g = GemmInsn {
+                    deps: DepFlags::NONE,
+                    reset: false,
+                    uop_begin: 0,
+                    uop_end: 1,
+                    lp0: 1,
+                    lp1: 1,
+                    acc_factor0: 0,
+                    acc_factor1: 0,
+                    inp_factor0: 0,
+                    inp_factor1: 0,
+                    wgt_factor0: 0,
+                    wgt_factor1: 0,
+                };
+                // 14-bit loop fields live in u16: overflow range is
+                // [1 << 14, u16::MAX].
+                let v = (1u64 << 14) + rng.next_below((1 << 16) - (1 << 14));
+                match rng.next_below(4) {
+                    0 => g.uop_begin = v as u16,
+                    1 => g.uop_end = v as u16,
+                    2 => g.lp0 = v as u16,
+                    _ => g.lp1 = v as u16,
+                }
+                assert!(Instruction::Gemm(g).encode().is_err(), "14-bit field {v} must overflow");
+            }
+            2 => {
+                let mut g = GemmInsn {
+                    deps: DepFlags::NONE,
+                    reset: false,
+                    uop_begin: 0,
+                    uop_end: 1,
+                    lp0: 1,
+                    lp1: 1,
+                    acc_factor0: 0,
+                    acc_factor1: 0,
+                    inp_factor0: 0,
+                    inp_factor1: 0,
+                    wgt_factor0: 0,
+                    wgt_factor1: 0,
+                };
+                // 11-bit acc/inp and 10-bit wgt factors.
+                match rng.next_below(3) {
+                    0 => g.acc_factor0 = ((1u64 << 11) + rng.next_below((1 << 16) - (1 << 11))) as u16,
+                    1 => g.inp_factor1 = ((1u64 << 11) + rng.next_below((1 << 16) - (1 << 11))) as u16,
+                    _ => g.wgt_factor0 = ((1u64 << 10) + rng.next_below((1 << 16) - (1 << 10))) as u16,
+                }
+                assert!(Instruction::Gemm(g).encode().is_err());
+            }
+            3 => {
+                let mut a = AluInsn {
+                    deps: DepFlags::NONE,
+                    op: AluOpcode::Add,
+                    use_imm: true,
+                    imm: 0,
+                    uop_begin: 0,
+                    uop_end: 1,
+                    lp0: 1,
+                    lp1: 1,
+                    dst_factor0: 0,
+                    dst_factor1: 0,
+                    src_factor0: 0,
+                    src_factor1: 0,
+                };
+                let v = ((1u64 << 11) + rng.next_below((1 << 16) - (1 << 11))) as u16;
+                match rng.next_below(4) {
+                    0 => a.dst_factor0 = v,
+                    1 => a.dst_factor1 = v,
+                    2 => a.src_factor0 = v,
+                    _ => a.src_factor1 = v,
+                }
+                assert!(Instruction::Alu(a).encode().is_err(), "11-bit ALU factor {v} must overflow");
+            }
+            4 => {
+                // GEMM uop index fields: 11/11/10 bits.
+                let bad = match rng.next_below(3) {
+                    0 => GemmUop {
+                        acc_idx: ((1u64 << 11) + rng.next_below((1 << 16) - (1 << 11))) as u16,
+                        inp_idx: 0,
+                        wgt_idx: 0,
+                    },
+                    1 => GemmUop {
+                        acc_idx: 0,
+                        inp_idx: ((1u64 << 11) + rng.next_below((1 << 16) - (1 << 11))) as u16,
+                        wgt_idx: 0,
+                    },
+                    _ => GemmUop {
+                        acc_idx: 0,
+                        inp_idx: 0,
+                        wgt_idx: ((1u64 << 10) + rng.next_below((1 << 16) - (1 << 10))) as u16,
+                    },
+                };
+                assert!(Uop::Gemm(bad).encode().is_err(), "uop {bad:?} must overflow");
+            }
+            _ => {
+                let bad = if rng.next_below(2) == 0 {
+                    AluUop {
+                        dst_idx: ((1u64 << 11) + rng.next_below((1 << 16) - (1 << 11))) as u16,
+                        src_idx: 0,
+                    }
+                } else {
+                    AluUop {
+                        dst_idx: 0,
+                        src_idx: ((1u64 << 11) + rng.next_below((1 << 16) - (1 << 11))) as u16,
+                    }
+                };
+                assert!(Uop::Alu(bad).encode().is_err(), "uop {bad:?} must overflow");
+            }
+        }
+    }
+}
+
 #[test]
 fn fused_requant_semantics() {
     assert_eq!(AluOpcode::Rq.apply(1000, 2), 127);

@@ -24,6 +24,10 @@
 //! * [`graph`] — the NNVM-like graph IR: operators, quantization, fusion,
 //!   registry-driven CPU/VTA partitioning, and the ResNet-18 workload
 //!   builder.
+//! * [`dse`] — design-space exploration and autotuning: hardware
+//!   candidates under an FPGA resource model, measured schedule tuning
+//!   per (config, operator), and the JSON tuning-record store the
+//!   serving engine consults at compile time.
 //! * [`exec`] — the graph executor that co-schedules VTA kernels on the
 //!   simulator and CPU-resident operators on XLA/PJRT executables compiled
 //!   ahead-of-time from JAX (see `python/compile/`).
@@ -40,6 +44,7 @@
 
 pub mod arch;
 pub mod compiler;
+pub mod dse;
 pub mod exec;
 pub mod graph;
 pub mod isa;

@@ -9,9 +9,16 @@
 //! * `conv <C1..C12> [--vt N] [--config FILE]` — run one Table 1 layer
 //!   and print its roofline point (Fig 15).
 //! * `serve [--batch N] [--vt N] [--cache N] [--offload-all]
-//!   [--config FILE]` — serve a batch of ResNet-18 requests through
-//!   the plan-caching, pipelined serving engine and print the
-//!   serial-vs-pipelined comparison.
+//!   [--records FILE] [--config FILE]` — serve a batch of ResNet-18
+//!   requests through the plan-caching, pipelined serving engine
+//!   (tuned schedules loaded from a `vta dse` record store) and print
+//!   the serial-vs-pipelined comparison.
+//! * `dse [--budget N] [--tune-trials N] [--seed N] [--top N]
+//!   [--workload tiny|resnet] [--records FILE]
+//!   [--require-improvement]` — design-space exploration: search
+//!   hardware variants under a Zynq-7020 resource budget plus
+//!   per-operator schedule tuning, report the frontier with roofline
+//!   placement, persist the tuning records.
 //! * `table1` — print Table 1.
 //!
 //! (Hand-rolled argument parsing: the offline vendor set has no clap —
@@ -20,6 +27,7 @@
 use std::process::ExitCode;
 use vta::arch::{load_config, VtaConfig};
 use vta::compiler::{lower_conv2d, pack_activations, pack_weights};
+use vta::dse::{run_dse, DseOptions, TuningRecords};
 use vta::exec::{CpuBackend, Executor, PjrtCache, ServingEngine};
 use vta::graph::resnet::{self, synth_input, TABLE1};
 use vta::graph::{fuse, partition, PartitionPolicy, Placement};
@@ -46,6 +54,13 @@ struct Flags {
     cache: usize,
     offload_dense: bool,
     offload_alu: bool,
+    records: Option<String>,
+    budget: usize,
+    tune_trials: usize,
+    seed: u64,
+    top: usize,
+    workload: String,
+    require_improvement: bool,
     positional: Vec<String>,
 }
 
@@ -59,6 +74,13 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         cache: 64,
         offload_dense: false,
         offload_alu: false,
+        records: None,
+        budget: 16,
+        tune_trials: 4,
+        seed: 0xD5E,
+        top: 5,
+        workload: "resnet".to_string(),
+        require_improvement: false,
         positional: Vec::new(),
     };
     let mut i = 0;
@@ -92,6 +114,44 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     .ok_or_else(|| anyhow::anyhow!("--cache needs a plan count"))?
                     .parse()?;
             }
+            "--records" => {
+                i += 1;
+                f.records = Some(
+                    args.get(i).ok_or_else(|| anyhow::anyhow!("--records needs a path"))?.clone(),
+                );
+            }
+            "--budget" => {
+                i += 1;
+                f.budget = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--budget needs a candidate count"))?
+                    .parse()?;
+            }
+            "--tune-trials" => {
+                i += 1;
+                f.tune_trials = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--tune-trials needs a count"))?
+                    .parse()?;
+            }
+            "--seed" => {
+                i += 1;
+                f.seed =
+                    args.get(i).ok_or_else(|| anyhow::anyhow!("--seed needs a value"))?.parse()?;
+            }
+            "--top" => {
+                i += 1;
+                f.top =
+                    args.get(i).ok_or_else(|| anyhow::anyhow!("--top needs a count"))?.parse()?;
+            }
+            "--workload" => {
+                i += 1;
+                f.workload = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--workload needs a suite name"))?
+                    .clone();
+            }
+            "--require-improvement" => f.require_improvement = true,
             "--cpu-only" => f.cpu_only = true,
             "--pjrt" => f.pjrt = true,
             "--offload-dense" => f.offload_dense = true,
@@ -121,6 +181,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "conv" => cmd_conv(&cfg, &flags),
         "resnet" => cmd_resnet(&cfg, &flags),
         "serve" => cmd_serve(&cfg, &flags),
+        "dse" => cmd_dse(&cfg, &flags),
         other => {
             print_usage();
             anyhow::bail!("unknown command {other}")
@@ -137,11 +198,19 @@ fn print_usage() {
          \x20 conv <C1..C12>            run one conv layer on the simulator\n\
          \x20 resnet                    run ResNet-18 end to end\n\
          \x20 serve                     batched ResNet-18 serving (plan cache + pipeline)\n\
+         \x20 dse                       design-space exploration + schedule autotuning\n\
          flags:\n\
          \x20 --config FILE             VTA variant config (key = value)\n\
          \x20 --vt N                    virtual threads (1 = no latency hiding, 2 = default)\n\
          \x20 --batch N                 serve: requests per batch (default 4)\n\
          \x20 --cache N                 serve: plan-cache capacity in plans (default 64)\n\
+         \x20 --records FILE            serve: load tuned schedules; dse: persist them\n\
+         \x20 --budget N                dse: hardware candidates to evaluate (default 16)\n\
+         \x20 --tune-trials N           dse: schedule candidates per (config, op) (default 4)\n\
+         \x20 --seed N                  dse: search seed (default 3422)\n\
+         \x20 --top N                   dse: frontier size to report (default 5)\n\
+         \x20 --workload SUITE          dse: tiny | resnet (default resnet)\n\
+         \x20 --require-improvement     dse: exit nonzero unless the frontier matches/beats the baseline\n\
          \x20 --offload-dense           resnet/serve: lower Dense layers onto the VTA too\n\
          \x20 --offload-alu             resnet/serve: lower residual adds / ReLUs onto the tensor ALU\n\
          \x20 --offload-all             shorthand for --offload-dense --offload-alu\n\
@@ -257,8 +326,32 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         flags.cache
     );
 
-    let mut engine =
-        ServingEngine::new(cfg, 512 << 20, CpuBackend::Native, flags.vt, flags.cache);
+    // Tuned schedules from a prior `vta dse` run, applied at compile
+    // time to every matching (config, operator) pair.
+    let records = match &flags.records {
+        Some(path) => {
+            let r = TuningRecords::load(path)?;
+            println!("loaded {} tuning record(s) from {path}", r.len());
+            r
+        }
+        None => TuningRecords::new(),
+    };
+    let mut engine = ServingEngine::with_records(
+        cfg,
+        512 << 20,
+        CpuBackend::Native,
+        flags.vt,
+        flags.cache,
+        records,
+    );
+    if engine.tuned_records() > 0 {
+        let tuned_nodes = g
+            .nodes
+            .iter()
+            .filter(|n| n.placement == Placement::Vta && engine.tuned_schedule(n).is_some())
+            .count();
+        println!("tuned schedules apply to {tuned_nodes} VTA node(s)");
+    }
     let inputs: Vec<_> =
         (0..flags.batch).map(|i| synth_input(7 + i as u64, 1, 3, 224, 224)).collect();
 
@@ -310,6 +403,123 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         warm.latency_percentile(0.90) * 1e3,
         warm.latency_percentile(0.99) * 1e3
     );
+    Ok(())
+}
+
+/// `vta dse`: budgeted random + greedy-refine search over hardware
+/// variants and per-operator schedules; prints the top-k frontier with
+/// roofline placement and optionally persists the tuning records.
+/// `--config` sets the baseline variant the search must match or beat
+/// (and which enters the search tuned, as candidate zero).
+fn cmd_dse(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    let workloads = vta::dse::suite(&flags.workload)?;
+    let names: Vec<&str> = workloads.iter().map(|w| w.name()).collect();
+    println!(
+        "DSE: budget {} candidates, {} tune trials/op, vt={}, seed {}, suite {:?} ({})",
+        flags.budget,
+        flags.tune_trials,
+        flags.vt,
+        flags.seed,
+        flags.workload,
+        names.join(", ")
+    );
+    let mut opts = DseOptions::new(workloads);
+    opts.baseline = cfg.clone();
+    opts.budget = flags.budget;
+    opts.tune_trials = flags.tune_trials;
+    opts.virtual_threads = flags.vt;
+    opts.seed = flags.seed;
+    opts.top_k = flags.top;
+
+    let t0 = std::time::Instant::now();
+    let report = run_dse(&opts)?;
+    println!(
+        "evaluated {} candidate(s) ({} infeasible) in {:.1?}\n",
+        report.evaluated,
+        report.infeasible,
+        t0.elapsed()
+    );
+
+    let base = &report.baseline;
+    println!(
+        "baseline ({} @ {:.0} MHz, default schedules): {} total cycles over the suite",
+        base.cfg.gemm,
+        base.cfg.clock_hz / 1e6,
+        base.total_cycles
+    );
+    println!(
+        "{:<4} {:>9} {:>14} {:>8} {:>22} {:>8} {:>6} {:>7}",
+        "rank", "gemm", "total cycles", "vs base", "buffers i/w/a/o/u kB", "bram18", "dsp", "tuned"
+    );
+    for (rank, cand) in report.frontier.iter().enumerate() {
+        let c = &cand.cfg;
+        let tuned = cand.scores.iter().filter(|s| s.choice.is_some()).count();
+        println!(
+            "{:<4} {:>9} {:>14} {:>7.2}x {:>22} {:>8} {:>6} {:>7}",
+            rank + 1,
+            format!("{}", c.gemm),
+            cand.total_cycles,
+            base.total_cycles as f64 / cand.total_cycles as f64,
+            format!(
+                "{}/{}/{}/{}/{}",
+                c.inp_buf_bytes / 1024,
+                c.wgt_buf_bytes / 1024,
+                c.acc_buf_bytes / 1024,
+                c.out_buf_bytes / 1024,
+                c.uop_buf_bytes / 1024
+            ),
+            cand.usage.bram18,
+            cand.usage.dsp,
+            tuned
+        );
+    }
+
+    // Roofline placement of the best candidate, per workload.
+    let best = report.best();
+    let roof = Roofline::of(&best.cfg);
+    println!(
+        "\nbest candidate roofline (peak {:.1} GOPS, knee {:.1} ops/byte):",
+        roof.peak_gops(),
+        roof.knee_intensity()
+    );
+    println!(
+        "{:<8} {:>12} {:>12} {:>8} {:>30}",
+        "workload", "cycles", "baseline", "speedup", "tuned schedule"
+    );
+    for (s, b) in best.scores.iter().zip(&base.scores) {
+        println!(
+            "{:<8} {:>12} {:>12} {:>7.2}x {:>30}",
+            s.name,
+            s.cycles,
+            b.cycles,
+            b.cycles as f64 / s.cycles as f64,
+            match s.choice {
+                Some(c) => format!("{c:?}"),
+                None => "planner default".to_string(),
+            }
+        );
+    }
+    println!(
+        "\nbest candidate resources: {} BRAM18, {} DSP, {} LUT (Zynq-7020 budget: 280/220/53200)",
+        best.usage.bram18, best.usage.dsp, best.usage.lut
+    );
+
+    if let Some(path) = &flags.records {
+        let store = report.export_records();
+        store.save(path)?;
+        println!(
+            "persisted {} tuning record(s) to {path} — replay with `vta serve --records {path}`",
+            store.len()
+        );
+    }
+
+    if flags.require_improvement && !report.improved() {
+        anyhow::bail!(
+            "no candidate matched the baseline: best {} > baseline {}",
+            report.best().total_cycles,
+            report.baseline.total_cycles
+        );
+    }
     Ok(())
 }
 

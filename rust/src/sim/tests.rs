@@ -341,6 +341,151 @@ fn task_level_pipeline_parallelism_hides_latency() {
     assert_eq!(pipelined.gemm_uops, serial.gemm_uops);
 }
 
+// ---------------------------------------------------------------------
+// Hazard-model streams: deliberate RAW/WAR dependence-token patterns
+// across the load / compute / store queues. Ordering is proven
+// *functionally*: if the simulator executed past a hazard, the stored
+// results would be the wrong operand's product.
+// ---------------------------------------------------------------------
+
+/// WAR across load↔compute: a second input load overwrites the tile a
+/// GEMM is still reading, fenced by the compute→load WAR token. The
+/// first result must be computed from the first operand.
+#[test]
+fn war_token_orders_input_reload_behind_compute() {
+    let mut s = sim();
+    let u0 = Uop::Gemm(GemmUop { acc_idx: 0, inp_idx: 0, wgt_idx: 0 }).encode().unwrap();
+    let u1 = Uop::Gemm(GemmUop { acc_idx: 1, inp_idx: 0, wgt_idx: 0 }).encode().unwrap();
+    s.dram.write_u32(0, &[u0, u1]).unwrap();
+    let a: Vec<i8> = (0..16).map(|i| i as i8 - 8).collect();
+    let b: Vec<i8> = (0..16).map(|i| 7 - i as i8).collect();
+    let wgt: Vec<i8> = (0..256).map(|i| ((i * 5) % 17) as i8 - 8).collect();
+    s.dram.write_i8(1024, &a).unwrap();
+    s.dram.write_i8(1040, &b).unwrap();
+    s.dram.write_i8(2048, &wgt).unwrap();
+
+    let reset = GemmInsn {
+        lp0: 2,
+        acc_factor0: 1,
+        reset: true,
+        deps: no_deps(),
+        ..gemm1(no_deps(), true)
+    };
+    let gemm_at = |uop: u16, deps: DepFlags| {
+        Instruction::Gemm(GemmInsn { uop_begin: uop, uop_end: uop + 1, ..gemm1(deps, false) })
+    };
+    let stream = vec![
+        Instruction::Load(mem(BufferId::Uop, no_deps(), 0, UOP_DRAM, 2)),
+        Instruction::Gemm(reset),
+        Instruction::Load(mem(BufferId::Inp, no_deps(), 0, INP_DRAM, 1)), // tile0 ← A
+        Instruction::Load(mem(BufferId::Wgt, d(false, false, false, true), 0, WGT_DRAM, 1)),
+        // acc0 += A x W; WAR token back to the load module.
+        gemm_at(0, d(true, false, true, false)),
+        // tile0 ← B: must wait for the WAR token (the GEMM still reads
+        // tile0), then RAW-signal the second GEMM.
+        Instruction::Load(mem(BufferId::Inp, d(false, true, false, true), 0, INP_DRAM + 1, 1)),
+        // acc1 += B x W; RAW token to the store.
+        gemm_at(1, d(true, false, false, true)),
+        Instruction::Store(mem(BufferId::Out, d(true, false, true, false), 0, OUT_DRAM, 2)),
+        Instruction::Finish(d(false, true, false, false)),
+    ];
+    let stats = s.run(&stream).unwrap();
+
+    let got = s.dram.read_i8(3072, 32).unwrap().to_vec();
+    assert_eq!(&got[..16], reference_out(&a, &wgt), "acc0 must see operand A, not the reload");
+    assert_eq!(&got[16..], reference_out(&b, &wgt), "acc1 must see operand B");
+    // Token traffic: [l2c, c2l, c2s, s2c].
+    assert_eq!(stats.tokens_pushed, [2, 1, 1, 1]);
+}
+
+/// RAW + WAR chained across all three queues: the out/acc tile is
+/// reused by a second phase that must wait for the store→compute WAR
+/// token before overwriting it. Neither phase may deadlock or reorder.
+#[test]
+fn store_war_token_orders_accumulator_reuse() {
+    let mut s = sim();
+    let u0 = Uop::Gemm(GemmUop { acc_idx: 0, inp_idx: 0, wgt_idx: 0 }).encode().unwrap();
+    let u1 = Uop::Gemm(GemmUop { acc_idx: 0, inp_idx: 1, wgt_idx: 0 }).encode().unwrap();
+    s.dram.write_u32(0, &[u0, u1]).unwrap();
+    let a: Vec<i8> = (0..16).map(|i| (i as i8 % 5) - 2).collect();
+    let b: Vec<i8> = (0..16).map(|i| 3 - (i as i8 % 7)).collect();
+    let mut inp = a.clone();
+    inp.extend_from_slice(&b);
+    let wgt: Vec<i8> = (0..256).map(|i| ((i * 11) % 13) as i8 - 6).collect();
+    s.dram.write_i8(1024, &inp).unwrap();
+    s.dram.write_i8(2048, &wgt).unwrap();
+
+    let gemm_at = |uop: u16, deps: DepFlags| {
+        Instruction::Gemm(GemmInsn { uop_begin: uop, uop_end: uop + 1, ..gemm1(deps, false) })
+    };
+    let stream = vec![
+        Instruction::Load(mem(BufferId::Uop, no_deps(), 0, UOP_DRAM, 2)),
+        Instruction::Load(mem(BufferId::Inp, no_deps(), 0, INP_DRAM, 2)),
+        Instruction::Load(mem(BufferId::Wgt, d(false, false, false, true), 0, WGT_DRAM, 1)),
+        Instruction::Gemm(gemm1(no_deps(), true)), // reset acc0
+        gemm_at(0, d(true, false, false, true)),   // acc0 = A x W → RAW to store
+        Instruction::Store(mem(BufferId::Out, d(true, false, true, false), 0, OUT_DRAM, 1)),
+        // Phase 2 reset overwrites acc0/out0: must pop the store's WAR
+        // token first (the Fig 5 write-during-read scenario, fenced).
+        Instruction::Gemm(GemmInsn { deps: d(false, true, false, false), ..gemm1(no_deps(), true) }),
+        gemm_at(1, d(false, false, false, true)), // acc0 = B x W → RAW to store
+        Instruction::Store(mem(BufferId::Out, d(true, false, true, false), 0, OUT_DRAM + 1, 1)),
+        Instruction::Finish(d(false, true, false, false)),
+    ];
+    let stats = s.run(&stream).unwrap();
+
+    let got = s.dram.read_i8(3072, 32).unwrap().to_vec();
+    assert_eq!(&got[..16], reference_out(&a, &wgt), "phase 1 store must precede the acc reuse");
+    assert_eq!(&got[16..], reference_out(&b, &wgt), "phase 2 must see operand B");
+    assert_eq!(stats.tokens_pushed, [1, 0, 2, 2]);
+    // The deep chain retired without deadlock and executed everything.
+    assert_eq!(stats.insn_gemm, 4);
+    assert_eq!(stats.insn_store, 2);
+}
+
+/// The same reload pattern with the WAR token deliberately omitted:
+/// the stream must still terminate (no deadlock), and the hazard
+/// checker must flag the race on the input buffer.
+#[test]
+fn hazard_checker_flags_missing_war_on_input_reload() {
+    let mut s = sim();
+    s.set_mode(ExecMode::CheckHazards);
+    let u0 = Uop::Gemm(GemmUop { acc_idx: 0, inp_idx: 0, wgt_idx: 0 }).encode().unwrap();
+    let u1 = Uop::Gemm(GemmUop { acc_idx: 1, inp_idx: 0, wgt_idx: 0 }).encode().unwrap();
+    s.dram.write_u32(0, &[u0, u1]).unwrap();
+    s.dram.write_i8(1024, &[1i8; 32]).unwrap();
+    s.dram.write_i8(2048, &[2i8; 256]).unwrap();
+
+    let gemm_at = |uop: u16, deps: DepFlags| {
+        Instruction::Gemm(GemmInsn { uop_begin: uop, uop_end: uop + 1, ..gemm1(deps, false) })
+    };
+    let stream = vec![
+        Instruction::Load(mem(BufferId::Uop, no_deps(), 0, UOP_DRAM, 2)),
+        Instruction::Gemm(GemmInsn {
+            lp0: 2,
+            acc_factor0: 1,
+            reset: true,
+            deps: no_deps(),
+            ..gemm1(no_deps(), true)
+        }),
+        Instruction::Load(mem(BufferId::Inp, no_deps(), 0, INP_DRAM, 1)),
+        Instruction::Load(mem(BufferId::Wgt, d(false, false, false, true), 0, WGT_DRAM, 1)),
+        gemm_at(0, d(true, false, false, false)),
+        // Missing pop_next: overwrites tile0 while the GEMM may still
+        // be reading it.
+        Instruction::Load(mem(BufferId::Inp, no_deps(), 0, INP_DRAM + 1, 1)),
+        gemm_at(1, no_deps()),
+        Instruction::Store(mem(BufferId::Out, no_deps(), 0, OUT_DRAM, 2)),
+        Instruction::Finish(no_deps()),
+    ];
+    let _ = s.run(&stream).unwrap();
+    assert!(
+        s.hazards().iter().any(|h| h.buffer == BufferId::Inp),
+        "expected a race on the input buffer, got {:?}",
+        s.hazards()
+    );
+}
+
 #[test]
 fn gemm_affine_loop_indexing() {
     // 2x2 grid of accumulator tiles computed from strided uop bases:

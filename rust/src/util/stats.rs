@@ -4,9 +4,14 @@
 use std::time::{Duration, Instant};
 
 /// Collects wall-clock samples of a closure and reports robust summary
-/// statistics (median / mean / min / p95).
+/// statistics (median / mean / min / p95 / p99).
+///
+/// Samples are kept sorted by insertion (binary search + shift, O(n)
+/// per push) so every percentile query is O(1) — the previous
+/// implementation re-sorted the whole vector on every `push_ns`.
 #[derive(Clone, Debug, Default)]
 pub struct BenchStats {
+    /// Sorted ascending.
     samples_ns: Vec<u128>,
 }
 
@@ -20,15 +25,15 @@ impl BenchStats {
             f();
             samples_ns.push(t0.elapsed().as_nanos());
         }
-        let mut s = BenchStats { samples_ns };
-        s.samples_ns.sort_unstable();
-        s
+        samples_ns.sort_unstable();
+        BenchStats { samples_ns }
     }
 
-    /// Record a pre-measured sample (nanoseconds).
+    /// Record a pre-measured sample (nanoseconds). Inserts in sorted
+    /// position — no re-sort.
     pub fn push_ns(&mut self, ns: u128) {
-        self.samples_ns.push(ns);
-        self.samples_ns.sort_unstable();
+        let idx = self.samples_ns.partition_point(|&x| x <= ns);
+        self.samples_ns.insert(idx, ns);
     }
 
     /// Number of samples.
@@ -36,12 +41,28 @@ impl BenchStats {
         self.samples_ns.len()
     }
 
-    /// Median sample.
-    pub fn median(&self) -> Duration {
-        if self.samples_ns.is_empty() {
+    /// Percentile `p` ∈ [0, 1] with linear interpolation between
+    /// closest ranks (the NIST / numpy `linear` method): the value at
+    /// fractional rank `p * (n - 1)`. Returns zero with no samples;
+    /// with one sample every percentile is that sample.
+    pub fn percentile(&self, p: f64) -> Duration {
+        let n = self.samples_ns.len();
+        if n == 0 {
             return Duration::ZERO;
         }
-        Duration::from_nanos(self.samples_ns[self.samples_ns.len() / 2] as u64)
+        let p = p.clamp(0.0, 1.0);
+        let rank = p * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        let a = self.samples_ns[lo] as f64;
+        let b = self.samples_ns[hi.min(n - 1)] as f64;
+        Duration::from_nanos((a + (b - a) * frac).round() as u64)
+    }
+
+    /// Median sample (p50).
+    pub fn median(&self) -> Duration {
+        self.percentile(0.5)
     }
 
     /// Arithmetic mean.
@@ -60,21 +81,23 @@ impl BenchStats {
 
     /// 95th-percentile sample.
     pub fn p95(&self) -> Duration {
-        if self.samples_ns.is_empty() {
-            return Duration::ZERO;
-        }
-        let idx = ((self.samples_ns.len() as f64) * 0.95).ceil() as usize - 1;
-        Duration::from_nanos(self.samples_ns[idx.min(self.samples_ns.len() - 1)] as u64)
+        self.percentile(0.95)
+    }
+
+    /// 99th-percentile sample.
+    pub fn p99(&self) -> Duration {
+        self.percentile(0.99)
     }
 
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
-            "median {:>10.3?}  mean {:>10.3?}  min {:>10.3?}  p95 {:>10.3?}  (n={})",
+            "p50 {:>10.3?}  mean {:>10.3?}  min {:>10.3?}  p95 {:>10.3?}  p99 {:>10.3?}  (n={})",
             self.median(),
             self.mean(),
             self.min(),
             self.p95(),
+            self.p99(),
             self.count()
         )
     }

@@ -80,3 +80,60 @@ fn bench_stats_basic() {
     assert_eq!(s.min().as_nanos(), 10);
     assert_eq!(s.mean().as_nanos(), 30);
 }
+
+#[test]
+fn bench_stats_empty_is_all_zero() {
+    let s = BenchStats::default();
+    assert_eq!(s.count(), 0);
+    assert_eq!(s.percentile(0.0), std::time::Duration::ZERO);
+    assert_eq!(s.percentile(0.5), std::time::Duration::ZERO);
+    assert_eq!(s.percentile(1.0), std::time::Duration::ZERO);
+    assert_eq!(s.median(), std::time::Duration::ZERO);
+    assert_eq!(s.mean(), std::time::Duration::ZERO);
+    assert_eq!(s.min(), std::time::Duration::ZERO);
+    assert_eq!(s.p99(), std::time::Duration::ZERO);
+}
+
+#[test]
+fn bench_stats_single_sample_is_every_percentile() {
+    let mut s = BenchStats::default();
+    s.push_ns(42);
+    for p in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+        assert_eq!(s.percentile(p).as_nanos(), 42, "p={p}");
+    }
+}
+
+#[test]
+fn bench_stats_percentile_interpolates_between_ranks() {
+    let mut s = BenchStats::default();
+    // Out-of-order pushes must still land sorted.
+    for ns in [100u128, 0, 300, 200] {
+        s.push_ns(ns);
+    }
+    // n=4: rank = p * 3. p=0.5 → rank 1.5 → midpoint of 100 and 200.
+    assert_eq!(s.percentile(0.5).as_nanos(), 150);
+    // p=1/3 → rank 1.0 → exactly the second sample.
+    assert_eq!(s.percentile(1.0 / 3.0).as_nanos(), 100);
+    // Endpoints are exact; out-of-range p clamps.
+    assert_eq!(s.percentile(0.0).as_nanos(), 0);
+    assert_eq!(s.percentile(1.0).as_nanos(), 300);
+    assert_eq!(s.percentile(-1.0).as_nanos(), 0);
+    assert_eq!(s.percentile(2.0).as_nanos(), 300);
+    // p95 on n=4: rank 2.85 → 200 + 0.85 * 100 = 285.
+    assert_eq!(s.p95().as_nanos(), 285);
+}
+
+#[test]
+fn bench_stats_summary_reports_p50_and_p99() {
+    let mut s = BenchStats::default();
+    for ns in 1..=100u128 {
+        s.push_ns(ns * 1000);
+    }
+    let text = s.summary();
+    assert!(text.contains("p50"), "{text}");
+    assert!(text.contains("p99"), "{text}");
+    assert!(text.contains("n=100"), "{text}");
+    // p99 over 1..=100 µs: rank 98.01 → ~99.01 µs.
+    let p99 = s.p99().as_nanos();
+    assert!((99_000..=99_020).contains(&p99), "p99 = {p99}");
+}
