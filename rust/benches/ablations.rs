@@ -11,6 +11,9 @@
 //! * `frontier`   — A5: DSE frontier replay — search a small budget of
 //!                  hardware variants + tuned schedules, then replay
 //!                  the found frontier against the pynq baseline
+//! * `style`      — A6: style-transfer offload boundary — cpu-only vs
+//!                  paper vs offload-all placement of the style graph,
+//!                  bit-exact outputs across all three
 //!
 //! Run: `cargo bench --bench ablations [-- <name>]`
 
@@ -41,6 +44,63 @@ fn main() {
     if common::selected("frontier") {
         frontier();
     }
+    if common::selected("style") {
+        style();
+    }
+}
+
+/// A6: style-transfer offload boundary — how much of the
+/// fast-style-transfer graph's model time moves to the accelerator as
+/// the partition policy widens from the paper's conv-only rule to
+/// offload-all (convs + adds + Min/Shr epilogue + Upsample2x), with
+/// bit-exact outputs across all three placements.
+fn style() {
+    use vta::exec::{CpuBackend, Executor};
+    use vta::graph::style::style_transfer;
+    use vta::graph::{fuse, partition, PartitionPolicy, Placement};
+
+    println!("# A6: style-transfer offload boundary (32x32, vt=2)");
+    let cfg = VtaConfig::pynq();
+    let input = vta::graph::resnet::synth_input(11, 1, 3, 32, 32);
+    let policies: [(&str, PartitionPolicy); 3] = [
+        ("cpu-only", PartitionPolicy::cpu_only()),
+        ("paper (convs)", PartitionPolicy::paper(&cfg)),
+        ("offload-all", PartitionPolicy::offload_all(&cfg)),
+    ];
+    println!(
+        "{:<15} {:>4} {:>4} {:>12} {:>12} {:>12}",
+        "policy", "vta", "cpu", "cpu wall ms", "sim ms", "model ms"
+    );
+    let mut outputs = Vec::new();
+    for (name, policy) in policies {
+        let (mut g, _) = fuse(style_transfer(1, 42).expect("style graph"));
+        let (vta_n, cpu_n) = partition(&mut g, &policy);
+        let mut ex = Executor::new(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native);
+        let report = ex.run(&g, &input).expect("style run");
+        println!(
+            "{:<15} {:>4} {:>4} {:>12.3} {:>12.3} {:>12.3}",
+            name,
+            vta_n,
+            cpu_n,
+            report.cpu_time().as_secs_f64() * 1e3,
+            report.vta_seconds() * 1e3,
+            report.total_seconds() * 1e3
+        );
+        if name == "offload-all" {
+            let upsampled = report
+                .nodes
+                .iter()
+                .filter(|n| n.kind == "upsample2x" && n.placement == Placement::Vta)
+                .count();
+            assert!(upsampled > 0, "offload-all must place Upsample2x on the VTA");
+        }
+        outputs.push(report.output);
+    }
+    assert!(
+        outputs.windows(2).all(|w| w[0] == w[1]),
+        "placement must not change style outputs"
+    );
+    println!();
 }
 
 /// A5: design-space exploration — search, then replay the frontier.
@@ -48,7 +108,10 @@ fn main() {
 /// (fresh runtime, same deterministic lowering), confirming the
 /// search's scores are reproducible.
 fn frontier() {
-    use vta::dse::{eval_conv2d, eval_eltwise, eval_matmul, run_dse, suite, DseOptions, Workload};
+    use vta::dse::{
+        eval_conv2d, eval_eltwise, eval_matmul, eval_upsample2x, run_dse, suite, DseOptions,
+        Workload,
+    };
 
     println!("# A5: DSE frontier replay — tiny suite, budget 10");
     let mut opts = DseOptions::new(suite("tiny").expect("tiny suite"));
@@ -82,6 +145,10 @@ fn frontier() {
                 Workload::Eltwise { kind, len, .. } => {
                     eval_eltwise(&cand.cfg, *kind, *len, opts.virtual_threads, 23)
                         .expect("frontier eltwise replays")
+                }
+                Workload::Upsample2x { c, h, w, .. } => {
+                    eval_upsample2x(&cand.cfg, *c, *h, *w, opts.virtual_threads, 29)
+                        .expect("frontier upsample replays")
                 }
             };
             assert_eq!(cycles, s.cycles, "replay must reproduce the search measurement");

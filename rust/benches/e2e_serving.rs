@@ -17,7 +17,7 @@ use std::time::Instant;
 use vta::arch::VtaConfig;
 use vta::exec::{CpuBackend, Executor, ServingEngine};
 use vta::graph::resnet::{self, synth_input};
-use vta::graph::{fuse, partition, PartitionPolicy};
+use vta::graph::{fuse, partition, style, PartitionPolicy};
 use vta::runtime::VtaRuntime;
 
 fn main() {
@@ -137,5 +137,50 @@ fn main() {
         warm2.serial_seconds * 1e3,
         warm2.pipelined_seconds * 1e3,
         warm2.speedup()
+    );
+
+    // ---- style-transfer workload: the second end-to-end scenario ------
+    let (mut gs, _) = fuse(style::style_transfer(1, 42).unwrap());
+    let (vta_s, cpu_s) = partition(&mut gs, &PartitionPolicy::offload_all(&cfg));
+    println!(
+        "\n# style-transfer (32x32, offload-all: convs + adds + Min/Shr + Upsample2x): \
+         {vta_s} VTA nodes, {cpu_s} CPU nodes"
+    );
+    let style_inputs: Vec<_> =
+        (0..batch).map(|i| synth_input(50 + i as u64, 1, 3, 32, 32)).collect();
+    let mut engine3 = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, 2, 64);
+    let t0 = Instant::now();
+    let cold3 = engine3.run_batch(&gs, &style_inputs).unwrap();
+    let cold3_wall = t0.elapsed();
+    let t0 = Instant::now();
+    let warm3 = engine3.run_batch(&gs, &style_inputs).unwrap();
+    let warm3_wall = t0.elapsed();
+    assert_eq!(warm3.cache.misses, 0, "warm style batch must not re-lower");
+    for (a, b) in cold3.outputs.iter().zip(&warm3.outputs) {
+        assert_eq!(a, b, "style cold and warm batches disagree");
+    }
+    // Per-request bit-exact equivalence with the serial executor.
+    let mut ex3 = Executor::new(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native);
+    for (i, input) in style_inputs.iter().enumerate() {
+        let expect = ex3.run(&gs, input).unwrap().output;
+        assert_eq!(warm3.outputs[i], expect, "style serving diverged from the serial executor");
+    }
+    let mut kinds3: Vec<_> = engine3.cached_kinds().into_iter().collect();
+    kinds3.sort();
+    let kinds3: Vec<String> = kinds3.iter().map(|(k, n)| format!("{k} x{n}")).collect();
+    println!(
+        "cold: host wall {cold3_wall:>8.2?}  misses {}  ({} plans: {})",
+        cold3.cache.misses,
+        engine3.cached_plans(),
+        kinds3.join(", ")
+    );
+    println!(
+        "warm: host wall {warm3_wall:>8.2?}  hits {}  model serial {:.1} ms  \
+         pipelined {:.1} ms ({:.2}x); throughput {:.1} inf/s",
+        warm3.cache.hits,
+        warm3.serial_seconds * 1e3,
+        warm3.pipelined_seconds * 1e3,
+        warm3.speedup(),
+        warm3.throughput()
     );
 }

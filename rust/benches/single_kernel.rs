@@ -115,15 +115,19 @@ fn non_conv_kernels(cfg: &VtaConfig) {
     let len: usize = shape.iter().product();
     let x = Tensor::from_vec(&shape, rng.vec_i8(len, -100, 100)).unwrap();
     let y = Tensor::from_vec(&shape, rng.vec_i8(len, -100, 100)).unwrap();
-    let alu_cases =
-        [("add 1x64x56x56", EltwiseKind::AddSat), ("relu 1x64x56x56", EltwiseKind::Relu)];
+    let alu_cases = [
+        ("add 1x64x56x56", EltwiseKind::AddSat),
+        ("relu 1x64x56x56", EltwiseKind::Relu),
+        ("shr 1x64x56x56", EltwiseKind::ShrImm(1)),
+        ("min 1x64x56x56", EltwiseKind::MinImm(100)),
+    ];
     for (name, kind) in alu_cases {
         let t0 = Instant::now();
         let k = compile_eltwise(&mut rt, kind, len, 2).unwrap();
         let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
         let packed = match kind {
             EltwiseKind::AddSat => vec![pack_acc_i32(cfg, &x), pack_acc_i32(cfg, &y)],
-            EltwiseKind::Relu => vec![pack_acc_i32(cfg, &x)],
+            _ => vec![pack_acc_i32(cfg, &x)],
         };
         let (_, s) = k.execute(&mut rt, &packed).unwrap();
         println!(

@@ -20,7 +20,9 @@
 //!
 //! `AddSat` is ADD followed by an `Rq` clamp with a zero shift —
 //! bit-exact saturating int8 addition. `Relu` is a single MAX with a
-//! zero immediate.
+//! zero immediate. `MinImm` / `ShrImm` are single MIN / SHR ops with a
+//! broadcast immediate — the two halves of a requantization epilogue
+//! (scale, clamp) expressed in microcode instead of CPU fixups.
 
 use super::conv2d::CompileError;
 use super::plan::EltwisePlan;
@@ -37,6 +39,12 @@ pub enum EltwiseKind {
     AddSat,
     /// ReLU: max with a zero immediate.
     Relu,
+    /// Element-wise minimum with a broadcast immediate — the `MIN`
+    /// opcode, the clamping half of a microcoded requant epilogue.
+    MinImm(i16),
+    /// Element-wise arithmetic shift-right by an immediate — the `SHR`
+    /// opcode, the scaling half of a microcoded requant epilogue.
+    ShrImm(u8),
 }
 
 impl EltwiseKind {
@@ -44,7 +52,7 @@ impl EltwiseKind {
     pub fn operands(&self) -> usize {
         match self {
             EltwiseKind::AddSat => 2,
-            EltwiseKind::Relu => 1,
+            EltwiseKind::Relu | EltwiseKind::MinImm(_) | EltwiseKind::ShrImm(_) => 1,
         }
     }
 
@@ -53,6 +61,8 @@ impl EltwiseKind {
         match self {
             EltwiseKind::AddSat => Op::Add,
             EltwiseKind::Relu => Op::Relu,
+            EltwiseKind::MinImm(imm) => Op::MinImm { imm: *imm },
+            EltwiseKind::ShrImm(shift) => Op::ShrImm { shift: *shift },
         }
     }
 }
@@ -145,6 +155,18 @@ where
             EltwiseKind::Relu => {
                 ctx.push_alu(kid, &kernel, AluOpcode::Max, true, 0)?;
             }
+            EltwiseKind::MinImm(imm) => {
+                // Single MIN with the broadcast immediate; the write
+                // narrows into the output buffer (exact whenever `imm`
+                // is in the int8 range — the oracle mirrors the wrap
+                // otherwise).
+                ctx.push_alu(kid, &kernel, AluOpcode::Min, true, imm)?;
+            }
+            EltwiseKind::ShrImm(shift) => {
+                // Arithmetic shift-right; int8 inputs stay in range, so
+                // the narrowing out-buffer write is always exact.
+                ctx.push_alu(kid, &kernel, AluOpcode::Shr, true, shift as i16)?;
+            }
         }
         pipe.alu_epilogue(ctx)?;
 
@@ -157,8 +179,10 @@ where
     Ok(())
 }
 
-/// One-uop strip kernel, cached per (context, strip length).
-fn get_kernel(
+/// One-uop strip kernel, cached per (context, strip length). Shared
+/// with the upsampling pass ([`super::upsample`]), whose identity
+/// sweep uses `src == dst`.
+pub(crate) fn get_kernel(
     cache: &mut HashMap<(usize, usize), (usize, UopKernel)>,
     ctx: &mut CommandContext,
     key: (usize, usize),

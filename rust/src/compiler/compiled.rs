@@ -34,8 +34,10 @@ use super::alu::{emit_eltwise, EltwiseDramBase, EltwiseKind};
 use super::conv2d::{bytes_of_i8, emit_conv2d, CompileError, ConvDramBase};
 use super::matmul::{emit_matmul, MatmulDramBase};
 use super::plan::{
-    plan_conv2d_tuned, plan_eltwise, plan_matmul_tuned, Conv2dParams, MatmulParams, ScheduleChoice,
+    plan_conv2d_tuned, plan_eltwise, plan_matmul_tuned, plan_upsample2x, Conv2dParams,
+    MatmulParams, ScheduleChoice,
 };
+use super::upsample::{emit_upsample2x, UpsampleDramBase};
 use crate::graph::Op;
 use crate::runtime::{CommandContext, DramBuffer, SealedStream, VtaRuntime};
 use crate::sim::SimStats;
@@ -318,6 +320,50 @@ pub fn compile_eltwise(
         schedule: None,
         streams,
         inp_bufs,
+        out_buf,
+        baked_bufs: vec![uop_buf],
+    })
+}
+
+/// Compile one nearest-neighbor 2x upsampling over an `[n, c, h, w]`
+/// input into a reusable [`CompiledNode`] — a strided store/copy pass
+/// ([`crate::compiler::upsample`]). No constants; like the elementwise
+/// path, the only baked buffer is the micro-kernel arena.
+pub fn compile_upsample2x(
+    rt: &mut VtaRuntime,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    virtual_threads: usize,
+) -> Result<CompiledNode, CompileError> {
+    let cfg = rt.ctx.config().clone();
+    let plan = plan_upsample2x(&cfg, n, c, h, w, virtual_threads)?;
+
+    let acc_tile_bytes = cfg.acc_tile_bytes();
+    let out_tile_bytes = cfg.out_tile_bytes();
+    let inp_buf = rt.alloc_aligned(plan.in_tiles() * acc_tile_bytes, acc_tile_bytes)?;
+    let out_buf = rt.alloc_aligned(plan.out_tiles() * out_tile_bytes, out_tile_bytes)?;
+    let uop_buf = rt.alloc_aligned(ELTWISE_UOP_ARENA_BYTES, 4)?;
+
+    let base = UpsampleDramBase {
+        inp: (inp_buf.addr / acc_tile_bytes) as u32,
+        out: (out_buf.addr / out_tile_bytes) as u32,
+    };
+
+    let mut ctx =
+        CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, ELTWISE_UOP_ARENA_BYTES / 4);
+    let mut streams = Vec::new();
+    emit_upsample2x(&mut ctx, &plan, base, |ctx| {
+        streams.push(ctx.seal()?);
+        Ok(())
+    })?;
+
+    Ok(CompiledNode {
+        op: Op::Upsample2x,
+        schedule: None,
+        streams,
+        inp_bufs: vec![inp_buf],
         out_buf,
         baked_bufs: vec![uop_buf],
     })

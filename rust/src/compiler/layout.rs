@@ -218,6 +218,45 @@ pub fn pack_acc_i32(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
     out
 }
 
+/// Widen an `NCHW` int8 activation tensor into the int32
+/// accumulator-tile layout the upsampling path consumes
+/// ([`crate::compiler::upsample`]): channel blocks of
+/// `BATCH x BLOCK_OUT` lanes per pixel, tile index
+/// `((n_b * CB + c_b) * H + y) * W + x` — the output-buffer tiling
+/// that [`unpack_outputs`] reads back, widened to the register file's
+/// i32 lanes. Channel padding lanes are zero.
+pub fn pack_acc_nchw(cfg: &VtaConfig, t: &Tensor<i8>) -> Vec<i8> {
+    let (bo, b) = (cfg.gemm.block_out, cfg.gemm.batch);
+    let [n, c, h, w] = [t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]];
+    assert_eq!(n % b, 0, "batch {n} not a multiple of BATCH {b}");
+    let cb = blocks(c, bo);
+    let tile = b * bo;
+    let mut out = vec![0i8; (n / b) * cb * h * w * tile * 4];
+    let src = t.data();
+    for nb in 0..n / b {
+        for cb_i in 0..cb {
+            for y in 0..h {
+                for x in 0..w {
+                    let t_idx = ((nb * cb + cb_i) * h + y) * w + x;
+                    for bb in 0..b {
+                        for ci in 0..bo {
+                            let cc = cb_i * bo + ci;
+                            if cc < c {
+                                let s = (((nb * b + bb) * c + cc) * h + y) * w + x;
+                                let lane = t_idx * tile + bb * bo + ci;
+                                for (j, byte) in (src[s] as i32).to_le_bytes().iter().enumerate() {
+                                    out[lane * 4 + j] = *byte as i8;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Inverse of the elementwise output image: the first
 /// `shape.product()` int8 lanes of the packed output tiles (padding
 /// lanes dropped).

@@ -10,7 +10,9 @@
 //! * **Tensorization** (§4.2): [`conv2d`] and [`matmul`] lower loop
 //!   nests onto the `BATCH x BLOCK_IN x BLOCK_OUT` GEMM intrinsic via
 //!   micro-op kernels with affine index compression; [`alu`] lowers
-//!   elementwise operators onto the tensor-ALU micro-op path.
+//!   elementwise operators onto the tensor-ALU micro-op path, and
+//!   [`upsample`] lowers nearest-neighbor 2x upsampling as a strided
+//!   store/copy pass (the style-transfer resize-convolution block).
 //! * **Latency hiding** (§4.3): [`virtual_thread`] interleaves the
 //!   lowered stream across SRAM contexts and inserts the explicit
 //!   RAW/WAR dependence push/pops of Fig 14.
@@ -31,16 +33,17 @@ pub mod matmul;
 pub mod op;
 pub mod plan;
 pub mod reference;
+pub mod upsample;
 pub mod virtual_thread;
 
 pub use alu::EltwiseKind;
 pub use compiled::{
     compile_conv2d, compile_conv2d_tuned, compile_dense, compile_dense_tuned, compile_eltwise,
-    CompiledNode,
+    compile_upsample2x, CompiledNode,
 };
 pub use conv2d::{lower_conv2d, lower_conv2d_tuned, CompileError, Conv2dOutput};
 pub use layout::{
-    pack_acc_i32, pack_activations, pack_matrix_a, pack_matrix_w, pack_weights,
+    pack_acc_i32, pack_acc_nchw, pack_activations, pack_matrix_a, pack_matrix_w, pack_weights,
     unpack_activations, unpack_eltwise, unpack_matrix_c, unpack_outputs,
 };
 pub use matmul::{lower_matmul, lower_matmul_tuned, MatmulOutput};
@@ -49,8 +52,9 @@ pub use op::{
     REGISTRY,
 };
 pub use plan::{
-    plan_conv2d, plan_conv2d_tuned, plan_eltwise, plan_matmul, plan_matmul_tuned, Conv2dParams,
-    Conv2dPlan, EltwisePlan, MatmulParams, MatmulPlan, PlanError, Requant, ScheduleChoice,
+    plan_conv2d, plan_conv2d_tuned, plan_eltwise, plan_matmul, plan_matmul_tuned, plan_upsample2x,
+    Conv2dParams, Conv2dPlan, EltwisePlan, MatmulParams, MatmulPlan, PlanError, Requant,
+    ScheduleChoice, UpsamplePlan,
 };
 pub use virtual_thread::StripPipeline;
 

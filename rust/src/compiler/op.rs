@@ -24,13 +24,15 @@
 //! unit struct in [`REGISTRY`], done. `docs/ARCHITECTURE.md` has a
 //! worked "add your own operator" walkthrough.
 
-use super::compiled::{compile_conv2d_tuned, compile_dense_tuned, compile_eltwise, CompiledNode};
+use super::compiled::{
+    compile_conv2d_tuned, compile_dense_tuned, compile_eltwise, compile_upsample2x, CompiledNode,
+};
 use super::conv2d::CompileError;
 use super::layout::{
-    pack_acc_i32, pack_activations, pack_matrix_a, pack_weights, unpack_eltwise, unpack_matrix_c,
-    unpack_outputs,
+    pack_acc_i32, pack_acc_nchw, pack_activations, pack_matrix_a, pack_weights, unpack_eltwise,
+    unpack_matrix_c, unpack_outputs,
 };
-use super::plan::{plan_conv2d, plan_eltwise, plan_matmul, ScheduleChoice};
+use super::plan::{plan_conv2d, plan_eltwise, plan_matmul, plan_upsample2x, ScheduleChoice};
 use super::reference;
 use super::EltwiseKind;
 use crate::arch::VtaConfig;
@@ -208,8 +210,18 @@ pub fn execute_compiled(
 
 /// Every registered operator implementation. Order is presentation
 /// order only; lookup is by [`VtaOp::kind`].
-pub static REGISTRY: &[&'static dyn VtaOp] =
-    &[&InputVta, &Conv2dVta, &DenseVta, &AddVta, &ReluVta, &MaxPoolVta, &GapVta];
+pub static REGISTRY: &[&'static dyn VtaOp] = &[
+    &InputVta,
+    &Conv2dVta,
+    &DenseVta,
+    &AddVta,
+    &ReluVta,
+    &MinVta,
+    &ShrVta,
+    &UpsampleVta,
+    &MaxPoolVta,
+    &GapVta,
+];
 
 /// Look up an operator implementation by kind string.
 pub fn lookup(kind: &str) -> Option<&'static dyn VtaOp> {
@@ -515,6 +527,200 @@ impl VtaOp for ReluVta {
         inputs: &[&Tensor<i8>],
     ) -> Result<Tensor<i8>, CompileError> {
         Ok(reference::relu_i8(inputs[0]))
+    }
+}
+
+/// Element-wise minimum with a broadcast immediate on the tensor-ALU
+/// micro-op path (a single `MIN`) — the clamping half of a
+/// requantization epilogue expressed in microcode instead of a CPU
+/// fixup.
+pub struct MinVta;
+
+impl VtaOp for MinVta {
+    fn kind(&self) -> &'static str {
+        "min"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        plan_eltwise(cfg, numel(node), 1, virtual_threads).is_ok()
+    }
+
+    fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
+        policy.offload_alu
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        Some(format!("min_{}", shape_tag(&node.shape)))
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        _g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+        _schedule: Option<&ScheduleChoice>,
+    ) -> Result<CompiledNode, CompileError> {
+        let Op::MinImm { imm } = &node.op else {
+            return Err(CompileError::NotOffloadable(self.kind()));
+        };
+        compile_eltwise(rt, EltwiseKind::MinImm(*imm), numel(node), virtual_threads)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        vec![pack_acc_i32(cfg, inputs[0])]
+    }
+
+    fn unpack_output(
+        &self,
+        _cfg: &VtaConfig,
+        _compiled: &CompiledNode,
+        packed: &[i8],
+        inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        unpack_eltwise(packed, inputs[0].shape())
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        let Op::MinImm { imm } = &node.op else {
+            unreachable!("min entry serves min nodes")
+        };
+        Ok(reference::min_imm_i8(inputs[0], *imm))
+    }
+}
+
+/// Element-wise arithmetic shift-right on the tensor-ALU micro-op path
+/// (a single `SHR`) — the scaling half of a microcoded requantization
+/// epilogue.
+pub struct ShrVta;
+
+impl VtaOp for ShrVta {
+    fn kind(&self) -> &'static str {
+        "shr"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        plan_eltwise(cfg, numel(node), 1, virtual_threads).is_ok()
+    }
+
+    fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
+        policy.offload_alu
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        Some(format!("shr_{}", shape_tag(&node.shape)))
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        _g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+        _schedule: Option<&ScheduleChoice>,
+    ) -> Result<CompiledNode, CompileError> {
+        let Op::ShrImm { shift } = &node.op else {
+            return Err(CompileError::NotOffloadable(self.kind()));
+        };
+        compile_eltwise(rt, EltwiseKind::ShrImm(*shift), numel(node), virtual_threads)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        vec![pack_acc_i32(cfg, inputs[0])]
+    }
+
+    fn unpack_output(
+        &self,
+        _cfg: &VtaConfig,
+        _compiled: &CompiledNode,
+        packed: &[i8],
+        inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        unpack_eltwise(packed, inputs[0].shape())
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        let Op::ShrImm { shift } = &node.op else {
+            unreachable!("shr entry serves shr nodes")
+        };
+        Ok(reference::shr_imm_i8(inputs[0], *shift))
+    }
+}
+
+/// Nearest-neighbor 2x upsampling as a strided store/copy pass over
+/// register-file contexts — the style-transfer resize-convolution
+/// block (`Upsample2x → Conv2d` replaces a stride-2 transposed
+/// convolution, reusing the conv2d emission core unchanged).
+pub struct UpsampleVta;
+
+impl VtaOp for UpsampleVta {
+    fn kind(&self) -> &'static str {
+        "upsample2x"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        // `node.shape` is the doubled output; the input is half the
+        // spatial size in each dimension.
+        let s = &node.shape;
+        matches!(&node.op, Op::Upsample2x)
+            && plan_upsample2x(cfg, s[0], s[1], s[2] / 2, s[3] / 2, virtual_threads).is_ok()
+    }
+
+    fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
+        policy.offload_upsample
+    }
+
+    fn artifact_name(&self, node: &Node) -> Option<String> {
+        Some(format!("upsample2x_{}", shape_tag(&node.shape)))
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        _g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+        _schedule: Option<&ScheduleChoice>,
+    ) -> Result<CompiledNode, CompileError> {
+        if !matches!(&node.op, Op::Upsample2x) {
+            return Err(CompileError::NotOffloadable(self.kind()));
+        }
+        let s = &node.shape;
+        compile_upsample2x(rt, s[0], s[1], s[2] / 2, s[3] / 2, virtual_threads)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        vec![pack_acc_nchw(cfg, inputs[0])]
+    }
+
+    fn unpack_output(
+        &self,
+        cfg: &VtaConfig,
+        _compiled: &CompiledNode,
+        packed: &[i8],
+        inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        let s = inputs[0].shape();
+        unpack_outputs(cfg, packed, s[0], s[1], 2 * s[2], 2 * s[3])
+    }
+
+    fn reference(
+        &self,
+        _g: &Graph,
+        _node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        Ok(reference::upsample2x_i8(inputs[0]))
     }
 }
 

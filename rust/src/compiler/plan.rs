@@ -28,6 +28,8 @@ pub enum PlanError {
     WrongSchedule { got: &'static str, op: &'static str },
     #[error("tuned schedule infeasible: {0}")]
     InfeasibleSchedule(String),
+    #[error("upsample row of {tiles} tiles exceeds the per-context register-file budget ({budget})")]
+    UpsampleRowDoesntFit { tiles: usize, budget: usize },
 }
 
 /// A schedule override found by design-space exploration
@@ -628,4 +630,75 @@ pub fn plan_eltwise(
     }
     check_width("eltwise strip", chunk, 1 << 14)?;
     Ok(EltwisePlan { tiles, chunk, contexts: virtual_threads })
+}
+
+/// Resolved tiling of the nearest-neighbor 2x upsampling operator
+/// ([`crate::compiler::upsample`]): the input is viewed as rows of `w`
+/// channel-block tiles (`BATCH x BLOCK_OUT` lanes each, the
+/// output-buffer tiling), and whole rows are strip-mined over
+/// register-file contexts — the strided duplicating stores need
+/// row-aligned strips.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UpsamplePlan {
+    /// Batch-row groups (N / BATCH).
+    pub nb: usize,
+    /// Channel blocks (`BLOCK_OUT` channels each) covering C.
+    pub cb: usize,
+    /// Input spatial size (each row is `w` tiles).
+    pub h: usize,
+    pub w: usize,
+    /// Input rows per strip (per context).
+    pub rows_per_strip: usize,
+    /// SRAM contexts (1 = serialized, 2 = store/compute overlap).
+    pub contexts: usize,
+}
+
+impl UpsamplePlan {
+    /// Total input rows ((N/B) * CB * H) — the strip-mined unit.
+    pub fn rows(&self) -> usize {
+        self.nb * self.cb * self.h
+    }
+
+    /// Input tiles.
+    pub fn in_tiles(&self) -> usize {
+        self.rows() * self.w
+    }
+
+    /// Output tiles (every input tile is duplicated 2x2).
+    pub fn out_tiles(&self) -> usize {
+        4 * self.in_tiles()
+    }
+}
+
+/// Plan a nearest-neighbor 2x upsampling over an `[n, c, h, w]` input.
+/// Rows must fit whole in the per-context register-file budget (the
+/// four duplicating stores of a row address it as one contiguous SRAM
+/// span); tensors whose rows don't fit stay on the CPU.
+pub fn plan_upsample2x(
+    cfg: &VtaConfig,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    virtual_threads: usize,
+) -> Result<UpsamplePlan, PlanError> {
+    assert!(virtual_threads == 1 || virtual_threads == 2, "1 or 2 virtual threads");
+    if n % cfg.gemm.batch != 0 {
+        return Err(PlanError::BadBatch { n, b: cfg.gemm.batch });
+    }
+    let nb = n / cfg.gemm.batch;
+    let cb = c.div_ceil(cfg.gemm.block_out);
+    // Rows live in the register file and mirror into the out buffer at
+    // the same indices, so both capacities bound the strip (per
+    // context) — the same rule as `plan_eltwise`.
+    let acc_budget = (cfg.acc_depth().min(1 << 11) / virtual_threads)
+        .min(cfg.out_depth().min(1 << 11) / virtual_threads);
+    if w == 0 || w > acc_budget {
+        return Err(PlanError::UpsampleRowDoesntFit { tiles: w, budget: acc_budget });
+    }
+    let rows = nb * cb * h;
+    let rows_per_strip = (acc_budget / w).min(rows.max(1));
+    check_width("upsample strip", rows_per_strip * w, 1 << 14)?;
+    check_width("upsample store rows", w, 1 << 16)?;
+    Ok(UpsamplePlan { nb, cb, h, w, rows_per_strip, contexts: virtual_threads })
 }

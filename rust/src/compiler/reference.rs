@@ -145,3 +145,46 @@ pub fn relu_i8(x: &Tensor<i8>) -> Tensor<i8> {
 pub fn dense_i8(p: &MatmulParams, x: &Tensor<i8>, w: &Tensor<i8>) -> Tensor<i8> {
     matmul_ref(p, x, w)
 }
+
+/// Nearest-neighbor 2x upsampling over NCHW — the oracle for the
+/// strided-store `Upsample2x` operator.
+pub fn upsample2x_i8(x: &Tensor<i8>) -> Tensor<i8> {
+    let [n, c, h, w] = [x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]];
+    let (oh, ow) = (2 * h, 2 * w);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let src = x.data();
+    let dst = out.data_mut();
+    for plane in 0..n * c {
+        let (sp, dp) = (plane * h * w, plane * oh * ow);
+        for y in 0..oh {
+            for xx in 0..ow {
+                dst[dp + y * ow + xx] = src[sp + (y / 2) * w + xx / 2];
+            }
+        }
+    }
+    out
+}
+
+/// Element-wise minimum with a broadcast immediate — the oracle for
+/// the ALU-path `MinImm` operator. The narrowing mirrors the
+/// hardware's out-buffer write (`as i8`), exact whenever `imm` is in
+/// the int8 range.
+pub fn min_imm_i8(x: &Tensor<i8>, imm: i16) -> Tensor<i8> {
+    let mut out = Tensor::zeros(x.shape());
+    for (o, &v) in out.data_mut().iter_mut().zip(x.data()) {
+        *o = (v as i32).min(imm as i32) as i8;
+    }
+    out
+}
+
+/// Element-wise arithmetic shift-right by an immediate — the oracle
+/// for the ALU-path `ShrImm` operator (the shift masks to 5 bits,
+/// exactly as the tensor ALU does).
+pub fn shr_imm_i8(x: &Tensor<i8>, shift: u8) -> Tensor<i8> {
+    let s = (shift & 31) as u32;
+    let mut out = Tensor::zeros(x.shape());
+    for (o, &v) in out.data_mut().iter_mut().zip(x.data()) {
+        *o = ((v as i32) >> s) as i8;
+    }
+    out
+}

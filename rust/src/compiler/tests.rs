@@ -507,3 +507,184 @@ fn eltwise_plan_respects_budgets() {
     assert!(plan1.chunk >= plan2.chunk);
     assert!(plan2.chunk >= 1);
 }
+
+/// The Min/Shr requant-epilogue kinds match their host oracles — the
+/// `Min` / `Shr` ALU opcodes driven end to end through the microcode
+/// path, across both threading modes, including negative inputs
+/// (arithmetic shift) and saturating immediates.
+#[test]
+fn compiled_eltwise_min_and_shr_match_reference() {
+    let cfg = VtaConfig::pynq();
+    let shape = [1usize, 8, 9, 9]; // 648 lanes: ragged tail tile
+    let mut rng = XorShiftRng::new(97);
+    let x = random_wide(&mut rng, &shape);
+
+    for vt in [1usize, 2] {
+        for (kind, expect) in [
+            (EltwiseKind::MinImm(100), min_imm_i8(&x, 100)),
+            (EltwiseKind::MinImm(-3), min_imm_i8(&x, -3)),
+            (EltwiseKind::ShrImm(0), shr_imm_i8(&x, 0)),
+            (EltwiseKind::ShrImm(3), shr_imm_i8(&x, 3)),
+        ] {
+            let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+            let compiled = compile_eltwise(&mut rt, kind, x.len(), vt).unwrap();
+            let (out, stats) = compiled.execute(&mut rt, &[pack_acc_i32(&cfg, &x)]).unwrap();
+            assert_eq!(
+                unpack_eltwise(&out, &shape),
+                expect,
+                "{kind:?} diverged from reference (vt={vt})"
+            );
+            assert!(stats.alu_uops > 0);
+            compiled.free(&mut rt).unwrap();
+        }
+    }
+}
+
+/// Fuzz the eltwise strip-mining over tensor lengths that are NOT
+/// multiples of the lane count or the register-file chunk, on a
+/// deliberately shallow register file so short tensors still span
+/// multiple strips and both contexts — every kind, both threading
+/// modes, compared lane-for-lane against the host oracles.
+#[test]
+fn eltwise_strip_mining_fuzz_over_ragged_lengths() {
+    // 32-tile register file / out buffer: the per-context chunk is at
+    // most 16 tiles at vt=2 (8 for two operands), so lengths of a few
+    // hundred lanes strip-mine several times over.
+    let mut cfg = VtaConfig::pynq();
+    cfg.acc_buf_bytes = 32 * cfg.acc_tile_bytes();
+    cfg.out_buf_bytes = 32 * cfg.out_tile_bytes();
+    let lanes = cfg.gemm.batch * cfg.gemm.block_out;
+
+    let mut rng = XorShiftRng::new(0x7A11);
+    let mut lengths = vec![1, lanes - 1, lanes, lanes + 1, 8 * lanes - 1, 16 * lanes + 7];
+    for _ in 0..6 {
+        lengths.push(1 + rng.next_below(40 * lanes as u64) as usize);
+    }
+    for &len in &lengths {
+        let shape = [len];
+        let a = Tensor::from_vec(&shape, rng.vec_i8(len, -120, 120)).unwrap();
+        let b = Tensor::from_vec(&shape, rng.vec_i8(len, -120, 120)).unwrap();
+        for vt in [1usize, 2] {
+            let cases: [(EltwiseKind, Tensor<i8>, usize); 4] = [
+                (EltwiseKind::AddSat, add_i8(&a, &b), 2),
+                (EltwiseKind::Relu, relu_i8(&a), 1),
+                (EltwiseKind::MinImm(37), min_imm_i8(&a, 37), 1),
+                (EltwiseKind::ShrImm(2), shr_imm_i8(&a, 2), 1),
+            ];
+            for (kind, expect, operands) in cases {
+                let plan = plan_eltwise(&cfg, len, operands, vt).unwrap();
+                let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+                let compiled = compile_eltwise(&mut rt, kind, len, vt).unwrap();
+                let packed: Vec<Vec<i8>> = if operands == 2 {
+                    vec![pack_acc_i32(&cfg, &a), pack_acc_i32(&cfg, &b)]
+                } else {
+                    vec![pack_acc_i32(&cfg, &a)]
+                };
+                let (out, _) = compiled.execute(&mut rt, &packed).unwrap();
+                assert_eq!(
+                    unpack_eltwise(&out, &shape),
+                    expect,
+                    "{kind:?} len={len} vt={vt} (tiles={}, chunk={}) diverged",
+                    plan.tiles,
+                    plan.chunk
+                );
+                compiled.free(&mut rt).unwrap();
+            }
+        }
+    }
+}
+
+/// Regression: a tail strip shorter than the register-file chunk —
+/// crossing a context boundary so the final partial strip lands on
+/// context 1 — stays bit-exact (the tail kernel's loop extent must be
+/// the tail length, not the chunk).
+#[test]
+fn eltwise_tail_strip_on_second_context_is_exact() {
+    let mut cfg = VtaConfig::pynq();
+    cfg.acc_buf_bytes = 32 * cfg.acc_tile_bytes();
+    cfg.out_buf_bytes = 32 * cfg.out_tile_bytes();
+    let lanes = cfg.gemm.batch * cfg.gemm.block_out;
+    // vt=2, one operand → chunk = 16 tiles. One full strip on context
+    // 0, then a ragged 3-tile, 1-lane-short tail strip on context 1.
+    let len = (16 + 3) * lanes - 1;
+    let shape = [len];
+    let mut rng = XorShiftRng::new(0x7A12);
+    let x = Tensor::from_vec(&shape, rng.vec_i8(len, -120, 120)).unwrap();
+    let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+    let compiled = compile_eltwise(&mut rt, EltwiseKind::ShrImm(1), len, 2).unwrap();
+    let (out, _) = compiled.execute(&mut rt, &[pack_acc_i32(&cfg, &x)]).unwrap();
+    assert_eq!(unpack_eltwise(&out, &shape), shr_imm_i8(&x, 1));
+    compiled.free(&mut rt).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Nearest-neighbor upsampling (the strided store/copy pass).
+// ---------------------------------------------------------------------
+
+/// The compiled Upsample2x pass matches the host oracle across shapes
+/// (ragged channel blocks included), both threading modes, and strips
+/// that span both SRAM contexts on a shallow register file.
+#[test]
+fn compiled_upsample2x_matches_reference() {
+    let cfg = VtaConfig::pynq();
+    let mut rng = XorShiftRng::new(0x0521);
+    for (c, h, w) in [(16usize, 4, 5), (3, 7, 7), (48, 2, 3), (16, 8, 8)] {
+        let x = random_nchw(&mut rng, &[1, c, h, w]);
+        let expect = upsample2x_i8(&x);
+        for vt in [1usize, 2] {
+            let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+            let compiled = compile_upsample2x(&mut rt, 1, c, h, w, vt).unwrap();
+            let (out, stats) = compiled.execute(&mut rt, &[pack_acc_nchw(&cfg, &x)]).unwrap();
+            let got = unpack_outputs(&cfg, &out, 1, c, 2 * h, 2 * w);
+            assert_eq!(got, expect, "upsample {c}x{h}x{w} vt={vt} diverged");
+            assert!(stats.alu_uops > 0, "the identity ALU pass must have run");
+            compiled.free(&mut rt).unwrap();
+        }
+    }
+}
+
+/// On a shallow register file the pass strip-mines across both
+/// contexts (several strips) and still matches the oracle, with
+/// deterministic replay timing.
+#[test]
+fn upsample2x_strip_mines_on_shallow_register_file() {
+    let mut cfg = VtaConfig::pynq();
+    cfg.acc_buf_bytes = 16 * cfg.acc_tile_bytes();
+    cfg.out_buf_bytes = 16 * cfg.out_tile_bytes();
+    let (c, h, w) = (32usize, 6, 4); // cb=2 → 12 rows of 4 tiles
+    let plan = plan_upsample2x(&cfg, 1, c, h, w, 2).unwrap();
+    assert!(
+        plan.rows_per_strip < plan.rows(),
+        "premise: the pass must take multiple strips to rotate contexts"
+    );
+    let mut rng = XorShiftRng::new(0x0522);
+    let x = random_nchw(&mut rng, &[1, c, h, w]);
+    let mut rt = VtaRuntime::new(&cfg, 16 << 20);
+    let compiled = compile_upsample2x(&mut rt, 1, c, h, w, 2).unwrap();
+    let mut cycles = Vec::new();
+    for _ in 0..2 {
+        let (out, stats) = compiled.execute(&mut rt, &[pack_acc_nchw(&cfg, &x)]).unwrap();
+        assert_eq!(unpack_outputs(&cfg, &out, 1, c, 2 * h, 2 * w), upsample2x_i8(&x));
+        cycles.push(stats.total_cycles);
+    }
+    assert_eq!(cycles[0], cycles[1], "replay timing drifted");
+    compiled.free(&mut rt).unwrap();
+}
+
+/// Rows wider than the per-context register-file budget are rejected
+/// at planning time (the node falls back to the CPU), and batch
+/// mismatches are caught.
+#[test]
+fn upsample2x_plan_rejects_infeasible_geometry() {
+    let mut tiny = VtaConfig::pynq();
+    tiny.acc_buf_bytes = 4 * tiny.acc_tile_bytes();
+    assert!(matches!(
+        plan_upsample2x(&tiny, 1, 16, 4, 16, 2),
+        Err(PlanError::UpsampleRowDoesntFit { .. })
+    ));
+    let two_batch = VtaConfig::bandwidth_example(); // BATCH = 2
+    assert!(matches!(
+        plan_upsample2x(&two_batch, 1, 16, 4, 4, 1),
+        Err(PlanError::BadBatch { .. })
+    ));
+}

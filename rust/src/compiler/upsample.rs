@@ -1,0 +1,133 @@
+//! Nearest-neighbor 2x upsampling on the VTA — the style-transfer
+//! scenario's "transposed convolution" building block, and the proof
+//! that the two-level ISA absorbs a *data-movement* operator without
+//! new hardware (§2.5: the microcode ISA "can be extended for higher
+//! operator coverage").
+//!
+//! Fast style-transfer networks replace their stride-2 transposed
+//! convolutions with resize-convolution: nearest-neighbor upsample
+//! followed by a stride-1 conv (`Upsample2x → Conv2d`, which reuses
+//! the existing `emit_conv2d` core unchanged). The upsample itself
+//! lowers as a **strided store/copy pass** over register-file
+//! contexts:
+//!
+//! * input pixels arrive in the channel-blocked accumulator layout
+//!   ([`super::layout::pack_acc_nchw`]) and DMA into the register file
+//!   (ACC loads execute on the *compute* module, so a strip's load and
+//!   ALU op serialize in program order — no RAW tokens needed within a
+//!   strip),
+//! * one looped `SHR`-by-zero ALU micro-op sweeps the strip — an
+//!   identity on the int32 lanes whose only job is mirroring every
+//!   tile, narrowed back to int8, into the output buffer, and
+//! * each input row then drains through **four 2D strided stores**:
+//!   two x-duplicating stores (`x_stride = 2`, DRAM offsets 0 and 1)
+//!   for each of the output rows `2y` and `2y + 1` — nearest-neighbor
+//!   duplication done entirely by the store engine's address
+//!   generator, at zero data-path cost.
+//!
+//! Strips rotate across SRAM contexts with the usual compute↔store
+//! WAR/RAW tokens, so the stores of strip *i* overlap the load + ALU
+//! pass of strip *i + 1* under virtual threading.
+
+use super::alu::get_kernel;
+use super::conv2d::CompileError;
+use super::plan::UpsamplePlan;
+use super::virtual_thread::StripPipeline;
+use crate::isa::{AluOpcode, BufferId};
+use crate::runtime::{CommandContext, UopKernel};
+use std::collections::HashMap;
+
+/// Tile-granular DRAM base addresses of an upsampling node's images:
+/// input in accumulator tiles, output in out-buffer tiles.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct UpsampleDramBase {
+    pub inp: u32,
+    pub out: u32,
+}
+
+/// Emit the full upsampling instruction stream for `plan` into `ctx`,
+/// calling `boundary` once at the end (the stream has no intermediate
+/// drain points). Mirrors the shape of [`super::alu::emit_eltwise`].
+pub(crate) fn emit_upsample2x<F>(
+    ctx: &mut CommandContext,
+    plan: &UpsamplePlan,
+    base: UpsampleDramBase,
+    mut boundary: F,
+) -> Result<(), CompileError>
+where
+    F: FnMut(&mut CommandContext) -> Result<(), CompileError>,
+{
+    let cfg = ctx.config().clone();
+
+    // Context stride, bounded by the ISA-addressable depth of BOTH the
+    // register file and the output buffer (every ALU write is mirrored
+    // into the out buffer at the same index — see compiler::alu).
+    let acc_ctx_stride = cfg.acc_depth().min(cfg.out_depth()).min(1 << 11) / 2;
+    let (h, w) = (plan.h, plan.w);
+    let (oh, ow) = (2 * h, 2 * w);
+
+    // Kernel cache: (context, strip tiles) → (id, kernel).
+    let mut kernels: HashMap<(usize, usize), (usize, UopKernel)> = HashMap::new();
+    let mut pipe = StripPipeline::new(plan.contexts);
+
+    let rows = plan.rows();
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let r_cur = plan.rows_per_strip.min(rows - r0);
+        let tok = pipe.begin();
+        let off = if tok.context == 1 { acc_ctx_stride } else { 0 };
+        let strip_tiles = r_cur * w;
+
+        // WAR against the previous strip on this context: the pop
+        // attaches to the first compute-module instruction (the ACC
+        // load below).
+        pipe.compute_prologue(ctx, tok)?;
+        ctx.load_buffer_2d(
+            BufferId::Acc,
+            off as u32,
+            base.inp + (r0 * w) as u32,
+            1,
+            strip_tiles as u16,
+            strip_tiles as u16,
+            [0; 4],
+        );
+
+        // Identity pass: SHR by a zero immediate mirrors every lane,
+        // narrowed back to int8, into the output buffer (src == dst —
+        // the shared one-uop strip kernel of the eltwise path).
+        let (kid, kernel) = get_kernel(
+            &mut kernels,
+            ctx,
+            (tok.context, strip_tiles),
+            off as u16,
+            off as u16,
+            strip_tiles as u16,
+        )?;
+        ctx.push_alu(kid, &kernel, AluOpcode::Shr, true, 0)?;
+        pipe.alu_epilogue(ctx)?;
+
+        // Four duplicating stores per input row: x-duplication via
+        // `x_stride = 2` at DRAM offsets 0 / 1, for output rows 2y and
+        // 2y + 1 (`block` enumerates (batch-row, channel-block) pairs).
+        for r in 0..r_cur {
+            let row = r0 + r;
+            let (block, y) = (row / h, row % h);
+            let out_row = base.out + ((block * oh + 2 * y) * ow) as u32;
+            for dy in 0..2u32 {
+                for dx in 0..2u32 {
+                    ctx.store_buffer_2d(
+                        (off + r * w) as u32,
+                        out_row + dy * ow as u32 + dx,
+                        w as u16,
+                        1,
+                        2,
+                    );
+                }
+            }
+        }
+        pipe.stores_epilogue(ctx)?;
+        r0 += r_cur;
+    }
+    boundary(ctx)?;
+    Ok(())
+}

@@ -31,7 +31,9 @@ pub mod tune;
 
 pub use records::{RecordKey, TuningRecord, TuningRecords};
 pub use space::{ConfigSpace, ResourceBudget, ResourceUsage};
-pub use tune::{eval_conv2d, eval_eltwise, eval_matmul, tune_conv2d, tune_matmul, TuneOutcome};
+pub use tune::{
+    eval_conv2d, eval_eltwise, eval_matmul, eval_upsample2x, tune_conv2d, tune_matmul, TuneOutcome,
+};
 
 use crate::arch::VtaConfig;
 use crate::compiler::{
@@ -51,6 +53,9 @@ pub enum Workload {
     Dense { name: &'static str, p: MatmulParams },
     /// An elementwise tensor-ALU operator over `len` int8 elements.
     Eltwise { name: &'static str, kind: EltwiseKind, len: usize },
+    /// Nearest-neighbor 2x upsampling over a `[1, c, h, w]` image (the
+    /// style-transfer strided store/copy pass).
+    Upsample2x { name: &'static str, c: usize, h: usize, w: usize },
 }
 
 impl Workload {
@@ -59,7 +64,8 @@ impl Workload {
         match self {
             Workload::Conv2d { name, .. }
             | Workload::Dense { name, .. }
-            | Workload::Eltwise { name, .. } => name,
+            | Workload::Eltwise { name, .. }
+            | Workload::Upsample2x { name, .. } => name,
         }
     }
 }
@@ -78,6 +84,9 @@ const RQ: Requant = Requant { shift: 6, relu: false };
 /// * `resnet` — representative ResNet-18 layers (compute-bound 3x3,
 ///   bandwidth-bound 1x1, the deep C12, the classifier, a residual
 ///   add).
+/// * `style` — the fast-style-transfer pipeline's structurally
+///   different mix (stride-2 down-conv, bottleneck residual conv,
+///   store-bound upsampling, and the Min/Shr requant-epilogue ops).
 pub fn suite(name: &str) -> Result<Vec<Workload>> {
     match name {
         "tiny" => Ok(vec![
@@ -106,7 +115,21 @@ pub fn suite(name: &str) -> Result<Vec<Workload>> {
             },
             Workload::Eltwise { name: "add", kind: EltwiseKind::AddSat, len: 64 * 56 * 56 },
         ]),
-        other => bail!("unknown workload suite {other:?} (expected tiny|resnet)"),
+        "style" => Ok(vec![
+            Workload::Conv2d {
+                name: "down2",
+                p: Conv2dParams { h: 16, w: 16, ic: 16, oc: 32, k: 3, s: 2, requant: RQ },
+            },
+            Workload::Conv2d {
+                name: "res",
+                p: Conv2dParams { h: 8, w: 8, ic: 32, oc: 32, k: 3, s: 1, requant: RQ },
+            },
+            Workload::Upsample2x { name: "up", c: 32, h: 8, w: 8 },
+            Workload::Eltwise { name: "add", kind: EltwiseKind::AddSat, len: 32 * 8 * 8 },
+            Workload::Eltwise { name: "shr", kind: EltwiseKind::ShrImm(1), len: 3 * 32 * 32 },
+            Workload::Eltwise { name: "min", kind: EltwiseKind::MinImm(100), len: 3 * 32 * 32 },
+        ]),
+        other => bail!("unknown workload suite {other:?} (expected tiny|resnet|style)"),
     }
 }
 
@@ -305,8 +328,14 @@ fn evaluate_candidate(
                 let kind_name = match kind {
                     EltwiseKind::AddSat => "add",
                     EltwiseKind::Relu => "relu",
+                    EltwiseKind::MinImm(_) => "min",
+                    EltwiseKind::ShrImm(_) => "shr",
                 };
                 WorkloadScore { name: *name, kind: kind_name, cycles, choice: None, sched_fp: 0 }
+            }
+            Workload::Upsample2x { name, c, h, w } => {
+                let cycles = eval_upsample2x(cfg, *c, *h, *w, vt, 29).ok()?;
+                WorkloadScore { name: *name, kind: "upsample2x", cycles, choice: None, sched_fp: 0 }
             }
         };
         total = total.saturating_add(score.cycles);

@@ -12,9 +12,10 @@
 
 use crate::arch::VtaConfig;
 use crate::compiler::{
-    compile_eltwise, lower_conv2d_tuned, lower_matmul_tuned, pack_acc_i32, pack_activations,
-    pack_matrix_a, pack_matrix_w, pack_weights, plan_conv2d, plan_conv2d_tuned, plan_matmul,
-    plan_matmul_tuned, CompileError, Conv2dParams, EltwiseKind, MatmulParams, ScheduleChoice,
+    compile_eltwise, compile_upsample2x, lower_conv2d_tuned, lower_matmul_tuned, pack_acc_i32,
+    pack_acc_nchw, pack_activations, pack_matrix_a, pack_matrix_w, pack_weights, plan_conv2d,
+    plan_conv2d_tuned, plan_matmul, plan_matmul_tuned, CompileError, Conv2dParams, EltwiseKind,
+    MatmulParams, ScheduleChoice,
 };
 use crate::runtime::VtaRuntime;
 use crate::util::{Tensor, XorShiftRng};
@@ -108,6 +109,27 @@ pub fn eval_eltwise(
         })
         .collect();
     let (_, stats) = compiled.execute(&mut rt, &packed)?;
+    compiled.free(&mut rt)?;
+    Ok(stats.total_cycles)
+}
+
+/// Measure one nearest-neighbor 2x upsampling pass (no tunable
+/// schedule — whole rows strip-mine at the maximal chunk; the hardware
+/// axes still move its store-bound cycle count across configs).
+pub fn eval_upsample2x(
+    cfg: &VtaConfig,
+    c: usize,
+    h: usize,
+    w: usize,
+    virtual_threads: usize,
+    seed: u64,
+) -> Result<u64, CompileError> {
+    let mut rng = XorShiftRng::new(seed);
+    let mut rt = VtaRuntime::new(cfg, TUNE_DRAM);
+    let compiled = compile_upsample2x(&mut rt, 1, c, h, w, virtual_threads)?;
+    let t = Tensor::from_vec(&[1, c, h, w], rng.vec_i8(c * h * w, -100, 100))
+        .expect("synth input");
+    let (_, stats) = compiled.execute(&mut rt, &[pack_acc_nchw(cfg, &t)])?;
     compiled.free(&mut rt)?;
     Ok(stats.total_cycles)
 }

@@ -54,6 +54,16 @@ pub enum Op {
     Add,
     /// Dense / fully-connected layer (`x W^T`, requantized).
     Dense { p: MatmulParams },
+    /// Element-wise minimum with a broadcast immediate (the clamping
+    /// half of a microcoded requant epilogue; tensor-ALU `MIN`).
+    MinImm { imm: i16 },
+    /// Element-wise arithmetic shift-right (the scaling half of a
+    /// microcoded requant epilogue; tensor-ALU `SHR`).
+    ShrImm { shift: u8 },
+    /// Nearest-neighbor 2x spatial upsampling over NCHW (the
+    /// style-transfer resize-convolution block; a strided store/copy
+    /// pass on the VTA).
+    Upsample2x,
 }
 
 /// A graph node.
@@ -176,6 +186,14 @@ impl Graph {
                 }
                 Ok(vec![sh[0], p.n])
             }
+            Op::MinImm { .. } | Op::ShrImm { .. } => Ok(in_shape(0).clone()),
+            Op::Upsample2x => {
+                let sh = in_shape(0);
+                if sh.len() != 4 {
+                    return Err(err(format!("upsample2x expects NCHW, got {sh:?}")));
+                }
+                Ok(vec![sh[0], sh[1], 2 * sh[2], 2 * sh[3]])
+            }
         }
     }
 
@@ -228,6 +246,9 @@ impl Op {
             Op::GlobalAvgPool => "gap",
             Op::Add => "add",
             Op::Dense { .. } => "dense",
+            Op::MinImm { .. } => "min",
+            Op::ShrImm { .. } => "shr",
+            Op::Upsample2x => "upsample2x",
         }
     }
 
@@ -237,7 +258,9 @@ impl Op {
             Op::Conv2d { p } => p.ops(),
             Op::Dense { p } => p.ops(),
             Op::MaxPool { k, .. } => (out_shape.iter().product::<usize>() * k * k) as u64,
-            Op::Add | Op::Relu => out_shape.iter().product::<usize>() as u64,
+            Op::Add | Op::Relu | Op::MinImm { .. } | Op::ShrImm { .. } | Op::Upsample2x => {
+                out_shape.iter().product::<usize>() as u64
+            }
             Op::GlobalAvgPool | Op::Input { .. } => 0,
         }
     }

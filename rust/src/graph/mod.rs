@@ -10,6 +10,9 @@
 //!   CPU).
 //! * [`resnet`] — the ResNet-18 workload builder with deterministic
 //!   synthetic int8 weights (Table 1's twelve conv configurations).
+//! * [`style`] — the fast style-transfer workload builder (down-convs,
+//!   residual blocks, `Upsample2x → Conv2d` resize-convolutions, and a
+//!   microcoded requant epilogue) — the paper's second scenario.
 //! * [`stages`] — topological (ASAP) stage computation, consumed by
 //!   the pipelined serving executor in [`crate::exec::serve`].
 
@@ -18,6 +21,7 @@ mod ir;
 mod partition;
 pub mod resnet;
 mod stage;
+pub mod style;
 
 pub use fusion::fuse;
 pub use ir::{Graph, GraphError, Node, NodeId, Op, Placement, TensorShape};

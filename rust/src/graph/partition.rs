@@ -40,8 +40,12 @@ pub struct PartitionPolicy {
     /// Offload dense layers too (paper: no — FC runs on the CPU).
     pub offload_dense: bool,
     /// Offload ALU-class elementwise ops (residual adds, standalone
-    /// ReLUs) onto the tensor-ALU micro-op path.
+    /// ReLUs, Min/Shr requant-epilogue steps) onto the tensor-ALU
+    /// micro-op path.
     pub offload_alu: bool,
+    /// Offload nearest-neighbor 2x upsampling (the style-transfer
+    /// resize-convolution block) onto the strided store/copy pass.
+    pub offload_upsample: bool,
     /// Nodes costing fewer integer ops than this stay on the CPU
     /// (offload overhead floor; 0 = no floor).
     pub min_offload_ops: u64,
@@ -58,17 +62,19 @@ impl PartitionPolicy {
             min_conv_ic: cfg.gemm.block_in,
             offload_dense: false,
             offload_alu: false,
+            offload_upsample: false,
             min_offload_ops: 0,
             cpu_only: false,
         }
     }
 
     /// Offload everything the registry can lower: convs (paper rule),
-    /// dense layers, and ALU-class elementwise ops.
+    /// dense layers, ALU-class elementwise ops, and upsampling.
     pub fn offload_all(cfg: &VtaConfig) -> Self {
         PartitionPolicy {
             offload_dense: true,
             offload_alu: true,
+            offload_upsample: true,
             ..Self::paper(cfg)
         }
     }
@@ -86,6 +92,7 @@ impl PartitionPolicy {
             min_conv_ic: usize::MAX,
             offload_dense: false,
             offload_alu: false,
+            offload_upsample: false,
             min_offload_ops: 0,
             cpu_only: true,
         }

@@ -1,0 +1,105 @@
+//! Fast style-transfer workload builder — the paper's second
+//! evaluation scenario ("object classification **and style transfer**
+//! on edge-class FPGAs"), mirroring [`super::resnet`].
+//!
+//! Architecture (Johnson et al.'s fast neural style network, adapted
+//! to the int8 regime with deterministic synthetic weights — the
+//! evaluation measures performance, not artistic merit):
+//!
+//! * two stride-2 down-convolutions,
+//! * five residual blocks at the bottleneck resolution,
+//! * two upsample+conv stages — the network's stride-2 *transposed*
+//!   convolutions lowered as `Upsample2x → Conv2d` (the standard
+//!   resize-convolution replacement), which reuses the existing
+//!   conv2d emission core instead of needing a new GEMM emitter,
+//! * a final wide conv back to 3 channels, and
+//! * a microcoded requantization epilogue: `ShrImm` range compression
+//!   followed by a `MinImm` clamp — expressed as tensor-ALU graph
+//!   nodes instead of CPU fixups (the `Shr` / `Min` opcodes end to
+//!   end).
+
+use super::ir::{Graph, GraphError, Op};
+use super::resnet::synth_conv_weights;
+use crate::compiler::{Conv2dParams, Requant};
+
+/// Requantization shift used by every style conv layer (same healthy
+/// int8 band as [`super::resnet::LAYER_SHIFT`]).
+pub const STYLE_SHIFT: u8 = 6;
+
+/// Output epilogue: fixed-point range compression...
+pub const OUT_SHIFT: u8 = 1;
+/// ...and upper clamp of the final image (microcoded `MIN`).
+pub const OUT_CLAMP: i16 = 100;
+
+/// Build the default fast-style-transfer graph: 32x32 input, 16 base
+/// channels. Small enough for seconds-scale simulation, deep enough to
+/// exercise every operator class the pipeline adds.
+pub fn style_transfer(n: usize, seed: u64) -> Result<Graph, GraphError> {
+    style_net(n, 32, 16, seed)
+}
+
+/// Build a fast-style-transfer graph for batch size `n` over a
+/// `size x size` RGB input with `base_c` stem channels (the bottleneck
+/// runs at `2 * base_c`). `size` must be divisible by 4 (two stride-2
+/// stages down, two 2x upsamplings back).
+pub fn style_net(n: usize, size: usize, base_c: usize, seed: u64) -> Result<Graph, GraphError> {
+    assert!(size % 4 == 0, "size must be divisible by 4 (two stride-2 stages)");
+    let mut g = Graph::new();
+    let rq = |relu: bool| Requant { shift: STYLE_SHIFT, relu };
+    let mut wseed = seed;
+    let mut next_seed = move || {
+        wseed = wseed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        wseed
+    };
+    let c1 = base_c;
+    let c2 = 2 * base_c;
+    let (s2, s4) = (size / 2, size / 4);
+
+    let input = g.add("input", Op::Input { shape: vec![n, 3, size, size] }, &[])?;
+
+    // Two stride-2 down-convolutions. Like ResNet's C1, the first has
+    // too few input channels to be worth offloading (the paper's
+    // min-IC rule keeps it on the CPU).
+    let pd1 = Conv2dParams { h: size, w: size, ic: 3, oc: c1, k: 3, s: 2, requant: rq(true) };
+    let d1 = g.add("down1", Op::Conv2d { p: pd1 }, &[input])?;
+    g.set_weights(d1, synth_conv_weights(next_seed(), c1, 3, 3));
+    let pd2 = Conv2dParams { h: s2, w: s2, ic: c1, oc: c2, k: 3, s: 2, requant: rq(true) };
+    let d2 = g.add("down2", Op::Conv2d { p: pd2 }, &[d1])?;
+    g.set_weights(d2, synth_conv_weights(next_seed(), c2, c1, 3));
+
+    // Five residual blocks at the bottleneck resolution (fast-style
+    // blocks carry no activation after the residual add).
+    let mut x = d2;
+    for block in 0..5 {
+        let name = |part: &str| format!("res{block}.{part}");
+        let pa = Conv2dParams { h: s4, w: s4, ic: c2, oc: c2, k: 3, s: 1, requant: rq(true) };
+        let a = g.add(name("conv1"), Op::Conv2d { p: pa }, &[x])?;
+        g.set_weights(a, synth_conv_weights(next_seed(), c2, c2, 3));
+        let pb = Conv2dParams { h: s4, w: s4, ic: c2, oc: c2, k: 3, s: 1, requant: rq(false) };
+        let b = g.add(name("conv2"), Op::Conv2d { p: pb }, &[a])?;
+        g.set_weights(b, synth_conv_weights(next_seed(), c2, c2, 3));
+        x = g.add(name("add"), Op::Add, &[b, x])?;
+    }
+
+    // Two upsample+conv stages: stride-2 transposed convolutions
+    // lowered as resize-convolution (`Upsample2x → Conv2d`).
+    let u1 = g.add("up1.upsample", Op::Upsample2x, &[x])?;
+    let pu1 = Conv2dParams { h: s2, w: s2, ic: c2, oc: c1, k: 3, s: 1, requant: rq(true) };
+    let uc1 = g.add("up1.conv", Op::Conv2d { p: pu1 }, &[u1])?;
+    g.set_weights(uc1, synth_conv_weights(next_seed(), c1, c2, 3));
+    let u2 = g.add("up2.upsample", Op::Upsample2x, &[uc1])?;
+    let pu2 = Conv2dParams { h: size, w: size, ic: c1, oc: c1, k: 3, s: 1, requant: rq(true) };
+    let uc2 = g.add("up2.conv", Op::Conv2d { p: pu2 }, &[u2])?;
+    g.set_weights(uc2, synth_conv_weights(next_seed(), c1, c1, 3));
+
+    // Final wide conv back to RGB, then the requantization epilogue in
+    // microcode: shift-based range compression + upper clamp.
+    let po = Conv2dParams { h: size, w: size, ic: c1, oc: 3, k: 9, s: 1, requant: rq(false) };
+    let out_conv = g.add("out.conv", Op::Conv2d { p: po }, &[uc2])?;
+    g.set_weights(out_conv, synth_conv_weights(next_seed(), 3, c1, 9));
+    let shr = g.add("out.shr", Op::ShrImm { shift: OUT_SHIFT }, &[out_conv])?;
+    let _clamp = g.add("out.clamp", Op::MinImm { imm: OUT_CLAMP }, &[shr])?;
+
+    g.validate()?;
+    Ok(g)
+}

@@ -403,6 +403,67 @@ fn random_out_of_range_fields_are_rejected() {
     }
 }
 
+/// Property test: ALU instructions carrying the requant-epilogue
+/// opcodes (`Min`, `Shr`) round-trip bit-exactly — opcode, immediate
+/// (including negative), and every index/factor field — and the 3-bit
+/// opcode field rejects every out-of-range value.
+#[test]
+fn random_min_shr_alu_roundtrips_and_bad_opcodes_rejected() {
+    let mut rng = XorShiftRng::new(0x514B);
+    for _ in 0..1000 {
+        let op = if rng.next_below(2) == 0 { AluOpcode::Min } else { AluOpcode::Shr };
+        let a = AluInsn {
+            deps: random_deps(&mut rng),
+            op,
+            use_imm: rng.next_below(2) == 1,
+            imm: rng.next_u64() as i16,
+            uop_begin: rng.next_below(1 << 14) as u16,
+            uop_end: rng.next_below(1 << 14) as u16,
+            lp0: rng.next_below(1 << 14) as u16,
+            lp1: rng.next_below(1 << 14) as u16,
+            dst_factor0: rng.next_below(1 << 11) as u16,
+            dst_factor1: rng.next_below(1 << 11) as u16,
+            src_factor0: rng.next_below(1 << 11) as u16,
+            src_factor1: rng.next_below(1 << 11) as u16,
+        };
+        let insn = Instruction::Alu(a);
+        let dec = Instruction::decode(insn.encode().unwrap()).unwrap();
+        assert_eq!(dec, insn, "Min/Shr roundtrip mismatch for {a:?}");
+        if let Instruction::Alu(d) = dec {
+            assert_eq!(d.op, op);
+            assert_eq!(d.imm, a.imm);
+        }
+    }
+    // The opcode field is 3 bits: every encodable value decodes, and
+    // everything past it is rejected.
+    for v in 0..8 {
+        assert!(AluOpcode::from_u64(v).is_ok(), "3-bit opcode {v} must decode");
+    }
+    for _ in 0..100 {
+        let v = 8 + rng.next_below(1 << 20);
+        assert!(
+            matches!(AluOpcode::from_u64(v), Err(IsaError::BadAluOpcode(_))),
+            "opcode {v} must be rejected"
+        );
+    }
+}
+
+/// Property test: the `Min` / `Shr` lane semantics agree with a wide
+/// (i64) model on random 32-bit operands — min is exact, shift is
+/// arithmetic (sign-propagating) with the 5-bit mask the hardware
+/// applies.
+#[test]
+fn random_min_shr_semantics_match_wide_model() {
+    let mut rng = XorShiftRng::new(0x514C);
+    for _ in 0..2000 {
+        let a = rng.next_u64() as u32 as i32;
+        let b = rng.next_u64() as u32 as i32;
+        assert_eq!(AluOpcode::Min.apply(a, b), a.min(b), "min({a}, {b})");
+        let wide = (a as i64) >> ((b & 31) as u32);
+        assert_eq!(AluOpcode::Shr.apply(a, b), wide as i32, "shr({a}, {b})");
+    }
+}
+
 #[test]
 fn fused_requant_semantics() {
     assert_eq!(AluOpcode::Rq.apply(1000, 2), 127);

@@ -22,8 +22,8 @@
 //!   API ([`compiler::op`]): the `VtaOp` trait + registry every
 //!   downstream layer dispatches through.
 //! * [`graph`] — the NNVM-like graph IR: operators, quantization, fusion,
-//!   registry-driven CPU/VTA partitioning, and the ResNet-18 workload
-//!   builder.
+//!   registry-driven CPU/VTA partitioning, and the ResNet-18 and fast
+//!   style-transfer workload builders.
 //! * [`dse`] — design-space exploration and autotuning: hardware
 //!   candidates under an FPGA resource model, measured schedule tuning
 //!   per (config, operator), and the JSON tuning-record store the

@@ -8,9 +8,14 @@
 //!   end-to-end and print the Fig 16 breakdown.
 //! * `conv <C1..C12> [--vt N] [--config FILE]` — run one Table 1 layer
 //!   and print its roofline point (Fig 15).
-//! * `serve [--batch N] [--vt N] [--cache N] [--offload-all]
-//!   [--records FILE] [--config FILE]` — serve a batch of ResNet-18
-//!   requests through the plan-caching, pipelined serving engine
+//! * `style [--size N] [--vt N] [--offload-all] [--cpu-only]
+//!   [--config FILE]` — run the fast style-transfer net end-to-end
+//!   (down-convs → residual blocks → upsample+conv → microcoded
+//!   requant epilogue) and verify the output against the CPU
+//!   reference bit-exactly.
+//! * `serve [--model resnet|style] [--batch N] [--vt N] [--cache N]
+//!   [--offload-all] [--records FILE] [--config FILE]` — serve a batch
+//!   of requests through the plan-caching, pipelined serving engine
 //!   (tuned schedules loaded from a `vta dse` record store) and print
 //!   the serial-vs-pipelined comparison.
 //! * `dse [--budget N] [--tune-trials N] [--seed N] [--top N]
@@ -30,7 +35,7 @@ use vta::compiler::{lower_conv2d, pack_activations, pack_weights};
 use vta::dse::{run_dse, DseOptions, TuningRecords};
 use vta::exec::{CpuBackend, Executor, PjrtCache, ServingEngine};
 use vta::graph::resnet::{self, synth_input, TABLE1};
-use vta::graph::{fuse, partition, PartitionPolicy, Placement};
+use vta::graph::{fuse, partition, style, PartitionPolicy, Placement};
 use vta::metrics::Roofline;
 use vta::runtime::VtaRuntime;
 
@@ -54,6 +59,9 @@ struct Flags {
     cache: usize,
     offload_dense: bool,
     offload_alu: bool,
+    offload_upsample: bool,
+    model: String,
+    size: usize,
     records: Option<String>,
     budget: usize,
     tune_trials: usize,
@@ -74,6 +82,9 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         cache: 64,
         offload_dense: false,
         offload_alu: false,
+        offload_upsample: false,
+        model: "resnet".to_string(),
+        size: 32,
         records: None,
         budget: 16,
         tune_trials: 4,
@@ -151,14 +162,35 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     .ok_or_else(|| anyhow::anyhow!("--workload needs a suite name"))?
                     .clone();
             }
+            "--model" => {
+                i += 1;
+                f.model = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--model needs resnet or style"))?
+                    .clone();
+            }
+            "--size" => {
+                i += 1;
+                f.size = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--size needs a pixel count"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    f.size >= 4 && f.size % 4 == 0,
+                    "--size must be a positive multiple of 4, got {}",
+                    f.size
+                );
+            }
             "--require-improvement" => f.require_improvement = true,
             "--cpu-only" => f.cpu_only = true,
             "--pjrt" => f.pjrt = true,
             "--offload-dense" => f.offload_dense = true,
             "--offload-alu" => f.offload_alu = true,
+            "--offload-upsample" => f.offload_upsample = true,
             "--offload-all" => {
                 f.offload_dense = true;
                 f.offload_alu = true;
+                f.offload_upsample = true;
             }
             other if other.starts_with("--") => anyhow::bail!("unknown flag {other}"),
             other => f.positional.push(other.to_string()),
@@ -180,6 +212,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "table1" => cmd_table1(),
         "conv" => cmd_conv(&cfg, &flags),
         "resnet" => cmd_resnet(&cfg, &flags),
+        "style" => cmd_style(&cfg, &flags),
         "serve" => cmd_serve(&cfg, &flags),
         "dse" => cmd_dse(&cfg, &flags),
         other => {
@@ -197,11 +230,14 @@ fn print_usage() {
          \x20 table1                    print the paper's Table 1\n\
          \x20 conv <C1..C12>            run one conv layer on the simulator\n\
          \x20 resnet                    run ResNet-18 end to end\n\
-         \x20 serve                     batched ResNet-18 serving (plan cache + pipeline)\n\
+         \x20 style                     run the fast style-transfer net end to end (verifies vs CPU)\n\
+         \x20 serve                     batched serving (plan cache + pipeline; --model resnet|style)\n\
          \x20 dse                       design-space exploration + schedule autotuning\n\
          flags:\n\
          \x20 --config FILE             VTA variant config (key = value)\n\
          \x20 --vt N                    virtual threads (1 = no latency hiding, 2 = default)\n\
+         \x20 --model NAME              serve: graph to serve, resnet | style (default resnet)\n\
+         \x20 --size N                  style: input resolution, multiple of 4 (default 32)\n\
          \x20 --batch N                 serve: requests per batch (default 4)\n\
          \x20 --cache N                 serve: plan-cache capacity in plans (default 64)\n\
          \x20 --records FILE            serve: load tuned schedules; dse: persist them\n\
@@ -209,12 +245,13 @@ fn print_usage() {
          \x20 --tune-trials N           dse: schedule candidates per (config, op) (default 4)\n\
          \x20 --seed N                  dse: search seed (default 3422)\n\
          \x20 --top N                   dse: frontier size to report (default 5)\n\
-         \x20 --workload SUITE          dse: tiny | resnet (default resnet)\n\
+         \x20 --workload SUITE          dse: tiny | resnet | style (default resnet)\n\
          \x20 --require-improvement     dse: exit nonzero unless the frontier matches/beats the baseline\n\
-         \x20 --offload-dense           resnet/serve: lower Dense layers onto the VTA too\n\
-         \x20 --offload-alu             resnet/serve: lower residual adds / ReLUs onto the tensor ALU\n\
-         \x20 --offload-all             shorthand for --offload-dense --offload-alu\n\
-         \x20 --cpu-only                resnet: keep every operator on the CPU\n\
+         \x20 --offload-dense           resnet/style/serve: lower Dense layers onto the VTA too\n\
+         \x20 --offload-alu             resnet/style/serve: lower adds / ReLUs / Min / Shr onto the tensor ALU\n\
+         \x20 --offload-upsample        style/serve: lower Upsample2x onto the strided-store pass\n\
+         \x20 --offload-all             shorthand for --offload-dense --offload-alu --offload-upsample\n\
+         \x20 --cpu-only                resnet/style: keep every operator on the CPU\n\
          \x20 --pjrt                    resnet: run CPU ops on XLA artifacts (needs `make artifacts`)"
     );
 }
@@ -311,14 +348,38 @@ fn build_policy(cfg: &VtaConfig, flags: &Flags) -> PartitionPolicy {
     policy.virtual_threads = flags.vt;
     policy.offload_dense = flags.offload_dense;
     policy.offload_alu = flags.offload_alu;
+    policy.offload_upsample = flags.offload_upsample;
     policy
 }
 
+/// The one place the CLI's style graph is constructed (geometry, base
+/// channels, weight seed): `vta style` and `vta serve --model style`
+/// must serve the identical network.
+fn build_style(flags: &Flags) -> anyhow::Result<(vta::graph::Graph, usize)> {
+    Ok(fuse(style::style_net(1, flags.size, 16, 42)?))
+}
+
+/// Build the graph selected by `--model`, plus its display name and
+/// input channel/size geometry (shared by `serve`).
+fn build_model(flags: &Flags) -> anyhow::Result<(vta::graph::Graph, usize, String, usize)> {
+    match flags.model.as_str() {
+        "resnet" => {
+            let (g, fused) = fuse(resnet::resnet18(1, 42)?);
+            Ok((g, fused, "ResNet-18".to_string(), 224))
+        }
+        "style" => {
+            let (g, fused) = build_style(flags)?;
+            Ok((g, fused, format!("style-transfer {0}x{0}", flags.size), flags.size))
+        }
+        other => anyhow::bail!("unknown --model {other} (expected resnet|style)"),
+    }
+}
+
 fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
-    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
+    let (mut g, fused, model_name, size) = build_model(flags)?;
     let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
     println!(
-        "serving ResNet-18: {} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU; \
+        "serving {model_name}: {} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU; \
          batch {}, vt={}, plan cache {} plans",
         g.nodes.len(),
         flags.batch,
@@ -353,7 +414,7 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         println!("tuned schedules apply to {tuned_nodes} VTA node(s)");
     }
     let inputs: Vec<_> =
-        (0..flags.batch).map(|i| synth_input(7 + i as u64, 1, 3, 224, 224)).collect();
+        (0..flags.batch).map(|i| synth_input(7 + i as u64, 1, 3, size, size)).collect();
 
     // Cold batch: every unique VTA node compiles exactly once.
     let t0 = std::time::Instant::now();
@@ -575,5 +636,72 @@ fn cmd_resnet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
             s.bytes_moved() as f64 / 1e6
         );
     }
+    Ok(())
+}
+
+/// `vta style`: run the fast style-transfer network end-to-end, print
+/// the per-node Fig 16-style breakdown, and verify the heterogeneous
+/// output against the CPU reference bit-exactly — the acceptance check
+/// that the microcode ISA absorbed the new operator classes
+/// (Upsample2x, Min, Shr) without variant-matching regressions.
+fn cmd_style(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    let (mut g, fused) = build_style(flags)?;
+    let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
+    println!(
+        "style-transfer ({0}x{0}): {1} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU",
+        flags.size,
+        g.nodes.len()
+    );
+
+    let cpu = if flags.pjrt {
+        CpuBackend::Pjrt(PjrtCache::new("artifacts")?)
+    } else {
+        CpuBackend::Native
+    };
+    let mut ex = Executor::with_virtual_threads(VtaRuntime::new(cfg, 512 << 20), cpu, flags.vt);
+    let input = synth_input(7, 1, 3, flags.size, flags.size);
+    let t0 = std::time::Instant::now();
+    let report = ex.run(&g, &input)?;
+    let wall = t0.elapsed();
+
+    println!(
+        "\n{:<14} {:>10} {:>5} {:>12} {:>12} {:>8}",
+        "node", "kind", "place", "cpu wall", "sim (ms)", "MOPs"
+    );
+    for n in &report.nodes {
+        if n.kind == "input" {
+            continue;
+        }
+        println!(
+            "{:<14} {:>10} {:>5} {:>12.3?} {:>12.3} {:>8.3}",
+            n.name,
+            n.kind,
+            match n.placement {
+                Placement::Vta => "VTA",
+                _ => "CPU",
+            },
+            n.wall,
+            n.sim_seconds * 1e3,
+            n.ops as f64 / 1e6
+        );
+    }
+    println!(
+        "\ntotals: cpu {:.3?}, vta-simulated {:.3} ms, model total {:.3} ms (host wall {wall:.2?})",
+        report.cpu_time(),
+        report.vta_seconds() * 1e3,
+        report.total_seconds() * 1e3
+    );
+
+    // Golden check: the heterogeneous run must be bit-identical to the
+    // CPU-only reference.
+    let (mut g_ref, _) = build_style(flags)?;
+    partition(&mut g_ref, &PartitionPolicy::cpu_only());
+    let mut cpu_ex = Executor::new(VtaRuntime::new(cfg, 512 << 20), CpuBackend::Native);
+    let expect = cpu_ex.run(&g_ref, &input)?.output;
+    anyhow::ensure!(
+        report.output == expect,
+        "heterogeneous style output diverged from the CPU reference"
+    );
+    println!("output matches the CPU reference bit-exactly");
     Ok(())
 }

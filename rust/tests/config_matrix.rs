@@ -1,12 +1,14 @@
-//! Config-matrix equivalence: conv2d + dense + Add/ReLU VTA-vs-reference
-//! checks across a sampled grid of hardware variants (GEMM geometry,
-//! SRAM depths, virtual threads), so DSE-generated configs are trusted
-//! end-to-end — not just the hand-picked `pynq()` point.
+//! Config-matrix equivalence: conv2d + dense + Add/ReLU + the
+//! style-transfer operator classes (Upsample2x, Min/Shr requant-epilogue
+//! steps) VTA-vs-reference checks across a sampled grid of hardware
+//! variants (GEMM geometry, SRAM depths, virtual threads), so
+//! DSE-generated configs are trusted end-to-end — not just the
+//! hand-picked `pynq()` point.
 //!
-//! Method: one mixed graph (conv → conv → residual add → relu → gap →
-//! dense) sized relative to each variant's GEMM geometry, executed
-//! twice — everything offloaded vs everything on the CPU reference
-//! kernels — and compared bit-for-bit.
+//! Method: one mixed graph (conv → conv → residual add → shr → min →
+//! relu → upsample2x → gap → dense) sized relative to each variant's
+//! GEMM geometry, executed twice — everything offloaded vs everything
+//! on the CPU reference kernels — and compared bit-for-bit.
 
 use vta::arch::{GemmShape, VtaConfig};
 use vta::compiler::{Conv2dParams, MatmulParams, Requant};
@@ -97,8 +99,13 @@ fn mixed_graph(cfg: &VtaConfig, seed: u64) -> Graph {
     let c2 = g.add("conv2", Op::Conv2d { p: p2 }, &[c1]).unwrap();
     g.set_weights(c2, Tensor::from_vec(&[oc, oc, 3, 3], rng.vec_i8(oc * oc * 9, -3, 3)).unwrap());
     let add = g.add("add", Op::Add, &[c2, c1]).unwrap();
-    let r = g.add("relu", Op::Relu, &[add]).unwrap();
-    let gap = g.add("gap", Op::GlobalAvgPool, &[r]).unwrap();
+    // The style-transfer requant epilogue in microcode (SHR then MIN),
+    // a surviving ReLU, and the nearest-neighbor upsampling pass.
+    let shr = g.add("shr", Op::ShrImm { shift: 1 }, &[add]).unwrap();
+    let clamp = g.add("min", Op::MinImm { imm: 48 }, &[shr]).unwrap();
+    let r = g.add("relu", Op::Relu, &[clamp]).unwrap();
+    let up = g.add("up", Op::Upsample2x, &[r]).unwrap();
+    let gap = g.add("gap", Op::GlobalAvgPool, &[up]).unwrap();
     let fcp = MatmulParams { m: 1, k: oc, n: 10, requant: Requant { shift: 2, relu: false } };
     let fc = g.add("fc", Op::Dense { p: fcp }, &[gap]).unwrap();
     g.set_weights(fc, Tensor::from_vec(&[10, oc], rng.vec_i8(10 * oc, -3, 3)).unwrap());
@@ -132,11 +139,13 @@ fn vta_matches_reference_across_the_config_grid() {
         policy.virtual_threads = vt;
         let (vta_nodes, _) = partition(&mut g_vta, &policy);
         assert!(
-            vta_nodes >= 4,
-            "{name}: expected conv/add/relu/dense offload, got {vta_nodes} VTA nodes"
+            vta_nodes >= 7,
+            "{name}: expected conv/add/shr/min/relu/upsample/dense offload, got {vta_nodes} VTA \
+             nodes"
         );
         for node in &g_vta.nodes {
-            if node.op.kind() == "conv2d" || node.op.kind() == "dense" {
+            let kind = node.op.kind();
+            if matches!(kind, "conv2d" | "dense" | "upsample2x" | "min" | "shr") {
                 assert_eq!(
                     node.placement,
                     Placement::Vta,

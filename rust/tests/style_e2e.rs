@@ -1,0 +1,327 @@
+//! End-to-end golden equivalence for the style-transfer workload: the
+//! full fast-style-transfer graph (down-convs → residual blocks →
+//! `Upsample2x → Conv2d` resize-convolutions → microcoded `Shr`/`Min`
+//! requant epilogue) executed through the heterogeneous stack must be
+//! **bit-exact** against the CPU reference across virtual-thread modes,
+//! partition policies, hardware variants, and the serving engine — the
+//! acceptance scenario for opening the paper's second workload.
+
+use vta::arch::{GemmShape, VtaConfig};
+use vta::compiler::Requant;
+use vta::exec::{CpuBackend, Executor, ServingEngine};
+use vta::graph::style::{style_net, style_transfer};
+use vta::graph::{partition, Graph, Op, PartitionPolicy, Placement};
+use vta::runtime::VtaRuntime;
+use vta::util::{Tensor, XorShiftRng};
+
+fn synth_image(seed: u64, size: usize) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(&[1, 3, size, size], rng.vec_i8(3 * size * size, -16, 16)).unwrap()
+}
+
+/// CPU-only reference output for a freshly built style graph.
+fn cpu_reference(cfg: &VtaConfig, size: usize, input: &Tensor<i8>) -> Tensor<i8> {
+    let mut g = style_net(1, size, 16, 42).unwrap();
+    partition(&mut g, &PartitionPolicy::cpu_only());
+    let mut ex = Executor::new(VtaRuntime::new(cfg, 256 << 20), CpuBackend::Native);
+    ex.run(&g, input).unwrap().output
+}
+
+/// The tentpole gate: style graph VTA-vs-reference, bit-exact, across
+/// vt = 1 / vt = 2 and the paper-default vs offload-all partition
+/// policies.
+#[test]
+fn style_graph_matches_reference_across_vt_and_policies() {
+    let cfg = VtaConfig::pynq();
+    let input = synth_image(1001, 32);
+    let expect = cpu_reference(&cfg, 32, &input);
+
+    for vt in [1usize, 2] {
+        for offload_all in [false, true] {
+            let mut g = style_net(1, 32, 16, 42).unwrap();
+            let mut policy = if offload_all {
+                PartitionPolicy::offload_all(&cfg)
+            } else {
+                PartitionPolicy::paper(&cfg)
+            };
+            policy.virtual_threads = vt;
+            let (vta_nodes, _) = partition(&mut g, &policy);
+            assert!(vta_nodes > 0, "vt={vt} offload_all={offload_all}: nothing offloaded");
+            if offload_all {
+                // The new operator classes must actually reach the VTA
+                // for the equivalence to mean anything.
+                for kind in ["upsample2x", "min", "shr", "add"] {
+                    assert!(
+                        g.nodes
+                            .iter()
+                            .any(|n| n.op.kind() == kind && n.placement == Placement::Vta),
+                        "vt={vt}: no {kind} node placed on the VTA"
+                    );
+                }
+            }
+            let mut ex = Executor::with_virtual_threads(
+                VtaRuntime::new(&cfg, 256 << 20),
+                CpuBackend::Native,
+                vt,
+            );
+            let got = ex.run(&g, &input).unwrap().output;
+            assert_eq!(
+                got, expect,
+                "vt={vt} offload_all={offload_all}: style output diverged from the CPU reference"
+            );
+        }
+    }
+}
+
+/// Acceptance criterion: the style graph runs through `ServingEngine`
+/// with VTA offload and matches the CPU reference bit-exactly on two
+/// hardware configs (the pynq point and an 8x8-GEMM variant).
+#[test]
+fn style_serving_matches_reference_on_two_configs() {
+    let mut small = VtaConfig::pynq();
+    small.gemm = GemmShape { batch: 1, block_in: 8, block_out: 8 };
+    small.alu_lanes = 8;
+    for (name, cfg) in [("pynq", VtaConfig::pynq()), ("gemm8x8", small)] {
+        assert!(cfg.validate().is_empty(), "{name}: invalid config");
+        let input = synth_image(1002, 32);
+        let expect = cpu_reference(&cfg, 32, &input);
+
+        let mut g = style_net(1, 32, 16, 42).unwrap();
+        partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+        let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, 2, 64);
+        let r1 = eng.run_one(&g, &input).unwrap();
+        assert_eq!(r1.output, expect, "{name}: served style output diverged");
+
+        // The new operator classes are resident in the plan cache, and
+        // a second (warm) request is pure replay.
+        let kinds = eng.cached_kinds();
+        assert_eq!(kinds.get("upsample2x"), Some(&2), "{name}: both upsamplings cached");
+        assert_eq!(kinds.get("min"), Some(&1), "{name}: min plan cached");
+        assert_eq!(kinds.get("shr"), Some(&1), "{name}: shr plan cached");
+        let misses = eng.cache_stats().misses;
+        let r2 = eng.run_one(&g, &input).unwrap();
+        assert_eq!(r2.output, expect, "{name}: warm replay diverged");
+        assert_eq!(eng.cache_stats().misses, misses, "{name}: warm request re-compiled");
+    }
+}
+
+/// Style-graph nodes produce distinct `PlanKey` fingerprints from
+/// shape-identical resnet-style nodes (same conv params, different
+/// weights), while identical everything shares — and different op
+/// kinds over the same tensor shape never collide.
+#[test]
+fn style_plan_keys_are_distinct_from_shape_identical_nodes() {
+    let cfg = VtaConfig::pynq();
+    let eng = ServingEngine::new(&cfg, 64 << 20, CpuBackend::Native, 2, 4);
+
+    // Two graphs with the *same* conv params (the style net's down2
+    // shape) but different weight streams — a style node and a
+    // shape-identical "resnet" node.
+    let p = vta::compiler::Conv2dParams {
+        h: 16,
+        w: 16,
+        ic: 16,
+        oc: 32,
+        k: 3,
+        s: 2,
+        requant: Requant { shift: 6, relu: true },
+    };
+    let build = |wseed: u64| {
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 16, 16] }, &[]).unwrap();
+        let c = g.add("conv", Op::Conv2d { p }, &[x]).unwrap();
+        let mut rng = XorShiftRng::new(wseed);
+        g.set_weights(c, Tensor::from_vec(&[32, 16, 3, 3], rng.vec_i8(32 * 16 * 9, -4, 4)).unwrap());
+        g
+    };
+    let style_g = build(7001);
+    let resnet_g = build(7002);
+    assert_ne!(
+        eng.plan_key(&style_g, &style_g.nodes[1]),
+        eng.plan_key(&resnet_g, &resnet_g.nodes[1]),
+        "shape-identical nodes with different weights must not share a plan"
+    );
+    assert_eq!(
+        eng.plan_key(&style_g, &style_g.nodes[1]),
+        eng.plan_key(&style_g, &style_g.nodes[1]),
+        "identical node must share its own plan"
+    );
+
+    // Different op kinds over the same tensor shape → different keys.
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let shr = g.add("shr", Op::ShrImm { shift: 1 }, &[x]).unwrap();
+    let min = g.add("min", Op::MinImm { imm: 100 }, &[shr]).unwrap();
+    let relu = g.add("relu", Op::Relu, &[min]).unwrap();
+    let up = g.add("up", Op::Upsample2x, &[relu]).unwrap();
+    let keys: Vec<_> = [shr, min, relu, up]
+        .iter()
+        .map(|&id| eng.plan_key(&g, &g.nodes[id]))
+        .collect();
+    for i in 0..keys.len() {
+        for j in i + 1..keys.len() {
+            assert_ne!(keys[i], keys[j], "op kinds {i} and {j} collide");
+        }
+    }
+    // Two Min nodes with different immediates must not share a plan
+    // (the immediate is baked into the sealed stream).
+    let min2 = g.add("min2", Op::MinImm { imm: 50 }, &[x]).unwrap();
+    assert_ne!(
+        eng.plan_key(&g, &g.nodes[min]),
+        eng.plan_key(&g, &g.nodes[min2]),
+        "Min immediates must be part of the fingerprint"
+    );
+}
+
+/// Mixed-workload serving: one engine serves the style graph and a
+/// resnet-style residual block back to back; hit/miss/eviction
+/// counters stay exact (one compile per unique plan key — the five
+/// weight-free residual adds legitimately share one plan) and results
+/// stay bit-identical.
+#[test]
+fn mixed_style_and_resnet_workloads_keep_cache_counters_exact() {
+    use std::collections::HashSet;
+    let cfg = VtaConfig::pynq();
+
+    fn build_block(seed: u64) -> Graph {
+        let p = vta::compiler::Conv2dParams {
+            h: 8,
+            w: 8,
+            ic: 16,
+            oc: 16,
+            k: 3,
+            s: 1,
+            requant: Requant { shift: 6, relu: false },
+        };
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+        let mut rng = XorShiftRng::new(seed);
+        let c1 = g.add("c1", Op::Conv2d { p }, &[x]).unwrap();
+        g.set_weights(
+            c1,
+            Tensor::from_vec(&[16, 16, 3, 3], rng.vec_i8(16 * 16 * 9, -4, 4)).unwrap(),
+        );
+        let c2 = g.add("c2", Op::Conv2d { p }, &[c1]).unwrap();
+        g.set_weights(
+            c2,
+            Tensor::from_vec(&[16, 16, 3, 3], rng.vec_i8(16 * 16 * 9, -4, 4)).unwrap(),
+        );
+        let add = g.add("add", Op::Add, &[c2, x]).unwrap();
+        let _r = g.add("relu", Op::Relu, &[add]).unwrap();
+        g
+    }
+
+    // Small style net (16x16) plus a residual block.
+    let mut style_g = style_net(1, 16, 16, 42).unwrap();
+    let style_vta = partition(&mut style_g, &PartitionPolicy::offload_all(&cfg)).0;
+    let mut block_g = build_block(8001);
+    let block_vta = partition(&mut block_g, &PartitionPolicy::offload_all(&cfg)).0;
+
+    let style_in = synth_image(1003, 16);
+    let block_in = {
+        let mut rng = XorShiftRng::new(1004);
+        Tensor::from_vec(&[1, 16, 8, 8], rng.vec_i8(16 * 64, -8, 8)).unwrap()
+    };
+    let style_expect = cpu_reference(&cfg, 16, &style_in);
+    let block_expect = {
+        let mut g = build_block(8001);
+        partition(&mut g, &PartitionPolicy::cpu_only());
+        let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+        ex.run(&g, &block_in).unwrap().output
+    };
+
+    let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, 2, 64);
+    // Expected compile counts: one per *unique* plan key, not per node
+    // (the five residual adds share params, shape, and have no
+    // weights, so they share one plan by design).
+    let unique_keys = |eng: &ServingEngine, g: &Graph| -> usize {
+        g.nodes
+            .iter()
+            .filter(|n| n.placement == Placement::Vta)
+            .map(|n| eng.plan_key(g, n))
+            .collect::<HashSet<_>>()
+            .len()
+    };
+    let style_unique = unique_keys(&eng, &style_g);
+    let block_unique = unique_keys(&eng, &block_g);
+    assert!(style_unique < style_vta, "premise: the residual adds share a plan");
+
+    let r_style = eng.run_one(&style_g, &style_in).unwrap();
+    let s1 = eng.cache_stats();
+    assert_eq!(r_style.output, style_expect, "style request diverged");
+    assert_eq!(s1.misses as usize, style_unique, "one compile per unique style plan key");
+    assert_eq!(s1.hits as usize, style_vta - style_unique, "shared plans hit");
+
+    let r_block = eng.run_one(&block_g, &block_in).unwrap();
+    let s2 = eng.cache_stats();
+    assert_eq!(r_block.output, block_expect, "block request diverged");
+    assert_eq!(
+        (s2.misses - s1.misses) as usize,
+        block_unique,
+        "one compile per unique block plan key — no cross-graph collisions"
+    );
+
+    // Warm replays of both graphs: hits only, outputs unchanged.
+    let r_style2 = eng.run_one(&style_g, &style_in).unwrap();
+    let r_block2 = eng.run_one(&block_g, &block_in).unwrap();
+    let s3 = eng.cache_stats();
+    assert_eq!(r_style2.output, style_expect);
+    assert_eq!(r_block2.output, block_expect);
+    assert_eq!(s3.misses, s2.misses, "warm requests must not compile");
+    assert_eq!(
+        (s3.hits - s2.hits) as usize,
+        style_vta + block_vta,
+        "every warm lookup hits"
+    );
+    assert_eq!(s3.evictions, 0, "capacity 64 must not evict this working set");
+}
+
+/// A plan cache smaller than the style working set thrashes but stays
+/// bit-exact (mixed op kinds evict cleanly, releasing DRAM).
+#[test]
+fn style_cache_eviction_stays_correct() {
+    let cfg = VtaConfig::pynq();
+    let input = synth_image(1005, 16);
+    let expect = cpu_reference(&cfg, 16, &input);
+
+    let mut g = style_net(1, 16, 16, 42).unwrap();
+    let (vta_nodes, _) = partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, 2, 4);
+    let r1 = eng.run_one(&g, &input).unwrap();
+    let r2 = eng.run_one(&g, &input).unwrap();
+    assert_eq!(r1.output, expect);
+    assert_eq!(r2.output, expect, "eviction must not corrupt style results");
+    let s = eng.cache_stats();
+    assert!(vta_nodes > 4, "premise: working set exceeds the cache");
+    assert!(s.evictions > 0, "capacity 4 must thrash on {vta_nodes} plans: {s:?}");
+    assert!(eng.cached_plans() <= 4);
+}
+
+/// The default style net is what the docs claim it is: the full
+/// operator mix, with every conv-transpose expressed as
+/// `Upsample2x → Conv2d`.
+#[test]
+fn style_graph_structure_is_as_documented() {
+    let g = style_transfer(1, 42).unwrap();
+    let count = |k: &str| g.nodes.iter().filter(|n| n.op.kind() == k).count();
+    assert_eq!(count("conv2d"), 2 + 10 + 2 + 1, "down x2, res x10, up x2, out x1");
+    assert_eq!(count("upsample2x"), 2);
+    assert_eq!(count("add"), 5);
+    assert_eq!(count("min"), 1);
+    assert_eq!(count("shr"), 1);
+    // Every Upsample2x feeds a stride-1 conv (resize-convolution).
+    for n in &g.nodes {
+        if let Op::Conv2d { p } = &n.op {
+            let from_upsample = n
+                .inputs
+                .iter()
+                .any(|&i| matches!(g.nodes[i].op, Op::Upsample2x));
+            if from_upsample {
+                assert_eq!(p.s, 1, "resize-convolution must be stride 1");
+            }
+        }
+    }
+    // Output shape is the input image shape.
+    let out = g.nodes.last().unwrap();
+    assert_eq!(out.shape, vec![1, 3, 32, 32]);
+}
