@@ -14,6 +14,10 @@
 //! * `style`      — A6: style-transfer offload boundary — cpu-only vs
 //!                  paper vs offload-all placement of the style graph,
 //!                  bit-exact outputs across all three
+//! * `pool`       — A7: dynamic-batching knobs over a 4-replica device
+//!                  pool — max_batch x deadline sweep on the style
+//!                  graph: batching trades p50 latency for modeled
+//!                  throughput, outputs bit-exact across every setting
 //!
 //! Run: `cargo bench --bench ablations [-- <name>]`
 
@@ -47,6 +51,61 @@ fn main() {
     if common::selected("style") {
         style();
     }
+    if common::selected("pool") {
+        pool();
+    }
+}
+
+/// A7: dynamic-batching knobs over a device pool — how `max_batch` and
+/// the simulated `batch_deadline` shape batching, latency, and modeled
+/// throughput on a fixed 4-replica pool serving a 1 ms-spaced request
+/// stream, with outputs bit-exact across every setting.
+fn pool() {
+    use vta::exec::{CpuBackend, Scheduler, SchedulerOptions};
+    use vta::graph::style::style_transfer;
+    use vta::graph::{fuse, partition, PartitionPolicy};
+
+    println!("# A7: dynamic batching over a 4-replica pool — style 32x32, 16 requests 1 ms apart");
+    let cfg = VtaConfig::pynq();
+    let (mut g, _) = fuse(style_transfer(1, 42).expect("style graph"));
+    partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    let inputs: Vec<_> =
+        (0..16).map(|i| vta::graph::resnet::synth_input(80 + i as u64, 1, 3, 32, 32)).collect();
+    println!(
+        "{:>9} {:>12} {:>8} {:>13} {:>12} {:>10} {:>10}",
+        "max_batch", "deadline ms", "batches", "makespan ms", "thr inf/s", "p50 ms", "p99 ms"
+    );
+    let mut outputs: Option<Vec<Tensor<i8>>> = None;
+    for (max_batch, deadline_ms) in [(1usize, 0.0f64), (4, 0.0), (4, 4.0), (8, 8.0)] {
+        let opts = SchedulerOptions {
+            devices: 4,
+            max_batch,
+            batch_deadline: deadline_ms * 1e-3,
+            cache_capacity: 64,
+            virtual_threads: 2,
+            dram_size: 256 << 20,
+        };
+        let mut sched = Scheduler::new(&cfg, CpuBackend::Native, opts);
+        for (i, input) in inputs.iter().enumerate() {
+            sched.submit(i as f64 * 1e-3, input.clone());
+        }
+        let r = sched.run(&g).expect("pool run");
+        match &outputs {
+            None => outputs = Some(r.outputs.clone()),
+            Some(expect) => {
+                assert_eq!(&r.outputs, expect, "batching knobs must not change outputs")
+            }
+        }
+        println!(
+            "{max_batch:>9} {deadline_ms:>12.1} {:>8} {:>13.1} {:>12.1} {:>10.1} {:>10.1}",
+            r.batches.len(),
+            r.makespan_seconds * 1e3,
+            r.throughput(),
+            r.latency_percentile(0.50) * 1e3,
+            r.latency_percentile(0.99) * 1e3
+        );
+    }
+    println!();
 }
 
 /// A6: style-transfer offload boundary — how much of the

@@ -15,10 +15,70 @@
 
 use std::time::Instant;
 use vta::arch::VtaConfig;
-use vta::exec::{CpuBackend, Executor, ServingEngine};
+use vta::exec::{CpuBackend, Executor, Scheduler, SchedulerOptions, ServingEngine};
 use vta::graph::resnet::{self, synth_input};
-use vta::graph::{fuse, partition, style, PartitionPolicy};
+use vta::graph::{fuse, partition, style, Graph, PartitionPolicy};
 use vta::runtime::VtaRuntime;
+use vta::util::Tensor;
+
+/// Drain the same 4-request stream through pools of 1, 2, and 4
+/// replicas (dynamic batches of 1, all arrivals at t = 0): modeled
+/// throughput must increase monotonically with pool size, and the
+/// outputs must stay bit-identical to the single-device engine
+/// (`expect_prefix`) and across pool sizes.
+fn device_sweep(
+    cfg: &VtaConfig,
+    name: &str,
+    g: &Graph,
+    seed0: u64,
+    size: usize,
+    expect_prefix: &[Tensor<i8>],
+) {
+    let inputs: Vec<_> = (0..4).map(|i| synth_input(seed0 + i as u64, 1, 3, size, size)).collect();
+    let mut reference: Option<Vec<Tensor<i8>>> = None;
+    let mut last = 0.0f64;
+    for devices in [1usize, 2, 4] {
+        let opts = SchedulerOptions {
+            devices,
+            max_batch: 1,
+            batch_deadline: 0.0,
+            cache_capacity: 64,
+            virtual_threads: 2,
+            dram_size: 512 << 20,
+        };
+        let mut sched = Scheduler::new(cfg, CpuBackend::Native, opts);
+        for input in &inputs {
+            sched.submit(0.0, input.clone());
+        }
+        let r = sched.run(g).unwrap();
+        match &reference {
+            None => {
+                for (a, b) in r.outputs.iter().zip(expect_prefix) {
+                    assert_eq!(a, b, "{name}: pool diverged from the single-device engine");
+                }
+                reference = Some(r.outputs.clone());
+            }
+            Some(expect) => assert_eq!(&r.outputs, expect, "{name}: pool size changed outputs"),
+        }
+        let thr = r.throughput();
+        assert!(
+            thr > last,
+            "{name}: modeled throughput must increase monotonically with pool size \
+             ({devices} devices: {thr} vs previous {last})"
+        );
+        let utils: Vec<String> =
+            (0..devices).map(|d| format!("{:.0}%", r.utilization(d) * 100.0)).collect();
+        println!(
+            "{name:<8} {devices:>8} {:>13.1} {:>17.1} {:>8} {:>8}  [{}]",
+            r.makespan_seconds * 1e3,
+            thr,
+            r.cache.misses,
+            r.batches.len(),
+            utils.join(" ")
+        );
+        last = thr;
+    }
+}
 
 fn main() {
     let batch: usize = std::env::args()
@@ -183,4 +243,16 @@ fn main() {
         warm3.speedup(),
         warm3.throughput()
     );
+
+    // ---- device-scaling sweep: the multi-device scheduler -------------
+    println!(
+        "\n# device-scaling sweep: 4 requests through pools of 1/2/4 replicas \
+         (compile-once per pool, least-loaded dispatch)"
+    );
+    println!(
+        "{:<8} {:>8} {:>13} {:>17} {:>8} {:>8}  util/device",
+        "model", "devices", "makespan ms", "throughput inf/s", "misses", "batches"
+    );
+    device_sweep(&cfg, "resnet", &g, 7, 224, &warm.outputs);
+    device_sweep(&cfg, "style", &gs, 50, 32, &warm3.outputs);
 }

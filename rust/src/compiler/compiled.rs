@@ -39,7 +39,7 @@ use super::plan::{
 };
 use super::upsample::{emit_upsample2x, UpsampleDramBase};
 use crate::graph::Op;
-use crate::runtime::{CommandContext, DramBuffer, SealedStream, VtaRuntime};
+use crate::runtime::{CommandContext, Device, DramBuffer, RuntimeError, SealedStream, VtaRuntime};
 use crate::sim::SimStats;
 
 /// Bytes of DRAM reserved per compiled GEMM-class node for generated
@@ -77,6 +77,12 @@ pub struct CompiledNode {
     /// Buffers whose contents were baked in at compile time (packed
     /// weights) plus the private micro-kernel arena.
     baked_bufs: Vec<DramBuffer>,
+    /// Every DRAM allocation above with the alignment it was made
+    /// with, **in allocation order** — the record [`Self::replicate_to`]
+    /// replays to reproduce the identical DRAM layout on a replica
+    /// device (sealed streams bake tile addresses in, so a replica's
+    /// buffers must land at the same addresses).
+    layout: Vec<(DramBuffer, usize)>,
 }
 
 impl CompiledNode {
@@ -140,6 +146,95 @@ impl CompiledNode {
         }
         Ok(())
     }
+
+    /// Clone this compiled plan onto a replica runtime of the *same*
+    /// `VtaConfig` — the device pool's shared compile-once path:
+    /// lowering (planning, packing, emission, sealing) ran exactly
+    /// once, on the source device; every replica gets the finished
+    /// artifact for the price of a byte copy.
+    ///
+    /// Replays the plan's DRAM allocation sequence on `dst` (same
+    /// sizes, alignments, order) and copies the baked buffers' packed
+    /// constants from the source device; the sealed streams — which
+    /// bake DRAM tile addresses in — then replay verbatim. This is
+    /// only sound when `dst`'s allocator history matches the source's
+    /// (the pool drives every per-device plan cache through the same
+    /// insert/evict sequence); a diverged layout is reported as
+    /// [`CompileError::ReplicaDiverged`], never silently mis-addressed.
+    ///
+    /// Variable-input and output images need no copy: every
+    /// [`Self::execute`] overwrites them, and every
+    /// [`SealedStream::run`] rewrites the kernel arena.
+    pub fn replicate_to(
+        &self,
+        src: &VtaRuntime,
+        dst: &mut VtaRuntime,
+    ) -> Result<CompiledNode, CompileError> {
+        let mut allocated: Vec<DramBuffer> = Vec::with_capacity(self.layout.len());
+        for &(buf, align) in &self.layout {
+            let got = match dst.alloc_aligned(buf.len, align) {
+                Ok(b) => b,
+                Err(e) => {
+                    for b in allocated {
+                        let _ = dst.dram.free(b);
+                    }
+                    return Err(e.into());
+                }
+            };
+            if got.addr != buf.addr {
+                for b in allocated {
+                    let _ = dst.dram.free(b);
+                }
+                let _ = dst.dram.free(got);
+                return Err(CompileError::ReplicaDiverged { expected: buf.addr, got: got.addr });
+            }
+            allocated.push(got);
+        }
+        for buf in &self.baked_bufs {
+            let bytes = src.device.read(buf.addr, buf.len).map_err(RuntimeError::Sim)?;
+            dst.device.write(buf.addr, &bytes).map_err(RuntimeError::Sim)?;
+        }
+        Ok(CompiledNode {
+            op: self.op.clone(),
+            schedule: self.schedule,
+            streams: self.streams.clone(),
+            inp_bufs: self.inp_bufs.clone(),
+            out_buf: self.out_buf,
+            baked_bufs: self.baked_bufs.clone(),
+            layout: self.layout.clone(),
+        })
+    }
+}
+
+/// Allocate a plan's DRAM buffers as one atomic group: on any failure
+/// the already-made allocations are released, so a failed compile
+/// never perturbs the runtime's allocator state. Single-device, a
+/// partial-alloc leak would merely drain DRAM across requests; on a
+/// device pool it would silently diverge replica 0's allocator history
+/// from the other replicas' and poison every later
+/// [`CompiledNode::replicate_to`].
+fn alloc_group(
+    rt: &mut VtaRuntime,
+    reqs: &[(usize, usize)],
+) -> Result<Vec<DramBuffer>, CompileError> {
+    let mut bufs: Vec<DramBuffer> = Vec::with_capacity(reqs.len());
+    for &(len, align) in reqs {
+        match rt.alloc_aligned(len, align) {
+            Ok(b) => bufs.push(b),
+            Err(e) => {
+                free_group(rt, &bufs);
+                return Err(e.into());
+            }
+        }
+    }
+    Ok(bufs)
+}
+
+/// Best-effort release of a buffer group (error-path unwinding).
+fn free_group(rt: &mut VtaRuntime, bufs: &[DramBuffer]) {
+    for &b in bufs {
+        let _ = rt.dram.free(b);
+    }
 }
 
 /// Compile one conv2d layer into a reusable [`CompiledNode`].
@@ -184,11 +279,20 @@ pub fn compile_conv2d_tuned(
     let inp_bytes = icb * p.h * p.w * inp_tile_bytes;
     let out_tiles = plan.ocb * plan.oh * plan.ow;
 
-    let inp_buf = rt.alloc_aligned(inp_bytes, inp_tile_bytes)?;
-    let wgt_buf = rt.alloc_aligned(wgt_packed.len(), wgt_tile_bytes)?;
-    let out_buf = rt.alloc_aligned(out_tiles * out_tile_bytes, out_tile_bytes)?;
-    let uop_buf = rt.alloc_aligned(NODE_UOP_ARENA_BYTES, 4)?;
-    rt.copy_in(&wgt_buf, bytes_of_i8(wgt_packed))?;
+    let bufs = alloc_group(
+        rt,
+        &[
+            (inp_bytes, inp_tile_bytes),
+            (wgt_packed.len(), wgt_tile_bytes),
+            (out_tiles * out_tile_bytes, out_tile_bytes),
+            (NODE_UOP_ARENA_BYTES, 4),
+        ],
+    )?;
+    let (inp_buf, wgt_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2], bufs[3]);
+    if let Err(e) = rt.copy_in(&wgt_buf, bytes_of_i8(wgt_packed)) {
+        free_group(rt, &bufs);
+        return Err(e.into());
+    }
 
     let base = ConvDramBase {
         inp: (inp_buf.addr / inp_tile_bytes) as u32,
@@ -201,10 +305,13 @@ pub fn compile_conv2d_tuned(
     let mut ctx =
         CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
     let mut streams = Vec::new();
-    emit_conv2d(&mut ctx, p, &plan, base, |ctx| {
+    if let Err(e) = emit_conv2d(&mut ctx, p, &plan, base, |ctx| {
         streams.push(ctx.seal()?);
         Ok(())
-    })?;
+    }) {
+        free_group(rt, &bufs);
+        return Err(e);
+    }
 
     Ok(CompiledNode {
         op: Op::Conv2d { p: *p },
@@ -213,6 +320,12 @@ pub fn compile_conv2d_tuned(
         inp_bufs: vec![inp_buf],
         out_buf,
         baked_bufs: vec![wgt_buf, uop_buf],
+        layout: vec![
+            (inp_buf, inp_tile_bytes),
+            (wgt_buf, wgt_tile_bytes),
+            (out_buf, out_tile_bytes),
+            (uop_buf, 4),
+        ],
     })
 }
 
@@ -250,11 +363,20 @@ pub fn compile_dense_tuned(
     let a_bytes = m_rows * plan.kb * inp_tile_bytes;
     let out_tiles = m_rows * plan.nb;
 
-    let a_buf = rt.alloc_aligned(a_bytes, inp_tile_bytes)?;
-    let w_buf = rt.alloc_aligned(wgt_packed.len(), wgt_tile_bytes)?;
-    let out_buf = rt.alloc_aligned(out_tiles * out_tile_bytes, out_tile_bytes)?;
-    let uop_buf = rt.alloc_aligned(NODE_UOP_ARENA_BYTES, 4)?;
-    rt.copy_in(&w_buf, bytes_of_i8(wgt_packed))?;
+    let bufs = alloc_group(
+        rt,
+        &[
+            (a_bytes, inp_tile_bytes),
+            (wgt_packed.len(), wgt_tile_bytes),
+            (out_tiles * out_tile_bytes, out_tile_bytes),
+            (NODE_UOP_ARENA_BYTES, 4),
+        ],
+    )?;
+    let (a_buf, w_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2], bufs[3]);
+    if let Err(e) = rt.copy_in(&w_buf, bytes_of_i8(wgt_packed)) {
+        free_group(rt, &bufs);
+        return Err(e.into());
+    }
 
     let base = MatmulDramBase {
         a: (a_buf.addr / inp_tile_bytes) as u32,
@@ -265,10 +387,13 @@ pub fn compile_dense_tuned(
     let mut ctx =
         CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
     let mut streams = Vec::new();
-    emit_matmul(&mut ctx, p, &plan, base, |ctx| {
+    if let Err(e) = emit_matmul(&mut ctx, p, &plan, base, |ctx| {
         streams.push(ctx.seal()?);
         Ok(())
-    })?;
+    }) {
+        free_group(rt, &bufs);
+        return Err(e);
+    }
 
     Ok(CompiledNode {
         op: Op::Dense { p: *p },
@@ -277,6 +402,12 @@ pub fn compile_dense_tuned(
         inp_bufs: vec![a_buf],
         out_buf,
         baked_bufs: vec![w_buf, uop_buf],
+        layout: vec![
+            (a_buf, inp_tile_bytes),
+            (w_buf, wgt_tile_bytes),
+            (out_buf, out_tile_bytes),
+            (uop_buf, 4),
+        ],
     })
 }
 
@@ -295,12 +426,14 @@ pub fn compile_eltwise(
 
     let acc_tile_bytes = cfg.acc_tile_bytes();
     let out_tile_bytes = cfg.out_tile_bytes();
-    let mut inp_bufs = Vec::with_capacity(kind.operands());
-    for _ in 0..kind.operands() {
-        inp_bufs.push(rt.alloc_aligned(plan.tiles * acc_tile_bytes, acc_tile_bytes)?);
-    }
-    let out_buf = rt.alloc_aligned(plan.tiles * out_tile_bytes, out_tile_bytes)?;
-    let uop_buf = rt.alloc_aligned(ELTWISE_UOP_ARENA_BYTES, 4)?;
+    let mut alloc_reqs =
+        vec![(plan.tiles * acc_tile_bytes, acc_tile_bytes); kind.operands()];
+    alloc_reqs.push((plan.tiles * out_tile_bytes, out_tile_bytes));
+    alloc_reqs.push((ELTWISE_UOP_ARENA_BYTES, 4));
+    let bufs = alloc_group(rt, &alloc_reqs)?;
+    let inp_bufs: Vec<DramBuffer> = bufs[..kind.operands()].to_vec();
+    let out_buf = bufs[kind.operands()];
+    let uop_buf = bufs[kind.operands() + 1];
 
     let base = EltwiseDramBase {
         inputs: inp_bufs.iter().map(|b| (b.addr / acc_tile_bytes) as u32).collect(),
@@ -310,11 +443,18 @@ pub fn compile_eltwise(
     let mut ctx =
         CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, ELTWISE_UOP_ARENA_BYTES / 4);
     let mut streams = Vec::new();
-    emit_eltwise(&mut ctx, kind, &plan, &base, |ctx| {
+    if let Err(e) = emit_eltwise(&mut ctx, kind, &plan, &base, |ctx| {
         streams.push(ctx.seal()?);
         Ok(())
-    })?;
+    }) {
+        free_group(rt, &bufs);
+        return Err(e);
+    }
 
+    let mut layout: Vec<(DramBuffer, usize)> =
+        inp_bufs.iter().map(|&b| (b, acc_tile_bytes)).collect();
+    layout.push((out_buf, out_tile_bytes));
+    layout.push((uop_buf, 4));
     Ok(CompiledNode {
         op: kind.graph_op(),
         schedule: None,
@@ -322,6 +462,7 @@ pub fn compile_eltwise(
         inp_bufs,
         out_buf,
         baked_bufs: vec![uop_buf],
+        layout,
     })
 }
 
@@ -342,9 +483,15 @@ pub fn compile_upsample2x(
 
     let acc_tile_bytes = cfg.acc_tile_bytes();
     let out_tile_bytes = cfg.out_tile_bytes();
-    let inp_buf = rt.alloc_aligned(plan.in_tiles() * acc_tile_bytes, acc_tile_bytes)?;
-    let out_buf = rt.alloc_aligned(plan.out_tiles() * out_tile_bytes, out_tile_bytes)?;
-    let uop_buf = rt.alloc_aligned(ELTWISE_UOP_ARENA_BYTES, 4)?;
+    let bufs = alloc_group(
+        rt,
+        &[
+            (plan.in_tiles() * acc_tile_bytes, acc_tile_bytes),
+            (plan.out_tiles() * out_tile_bytes, out_tile_bytes),
+            (ELTWISE_UOP_ARENA_BYTES, 4),
+        ],
+    )?;
+    let (inp_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2]);
 
     let base = UpsampleDramBase {
         inp: (inp_buf.addr / acc_tile_bytes) as u32,
@@ -354,10 +501,13 @@ pub fn compile_upsample2x(
     let mut ctx =
         CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, ELTWISE_UOP_ARENA_BYTES / 4);
     let mut streams = Vec::new();
-    emit_upsample2x(&mut ctx, &plan, base, |ctx| {
+    if let Err(e) = emit_upsample2x(&mut ctx, &plan, base, |ctx| {
         streams.push(ctx.seal()?);
         Ok(())
-    })?;
+    }) {
+        free_group(rt, &bufs);
+        return Err(e);
+    }
 
     Ok(CompiledNode {
         op: Op::Upsample2x,
@@ -366,5 +516,6 @@ pub fn compile_upsample2x(
         inp_bufs: vec![inp_buf],
         out_buf,
         baked_bufs: vec![uop_buf],
+        layout: vec![(inp_buf, acc_tile_bytes), (out_buf, out_tile_bytes), (uop_buf, 4)],
     })
 }

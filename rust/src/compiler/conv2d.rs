@@ -46,6 +46,11 @@ pub enum CompileError {
     NotOffloadable(&'static str),
     #[error("missing weights")]
     MissingWeights,
+    #[error(
+        "replica DRAM layout diverged: expected a buffer at {expected:#x}, allocator returned \
+         {got:#x} — pool caches were not driven in lockstep"
+    )]
+    ReplicaDiverged { expected: usize, got: usize },
 }
 
 /// Result of running a lowered conv2d on the device.

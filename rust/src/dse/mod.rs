@@ -24,6 +24,14 @@
 //! best-so-far). The tuned baseline variant (pynq by default) is
 //! always candidate zero, so the frontier never loses to the paper's
 //! hand-picked design.
+//!
+//! Candidates are scored at **pool level**
+//! ([`DseOptions::pool_devices`], [`pool_makespan_cycles`]): the
+//! objective is the modeled makespan of the suite dispatched
+//! least-loaded across N replicas — the same dispatch rule the
+//! multi-device serving scheduler uses — which reduces to the classic
+//! cycle sum on a one-device pool. `vta dse --devices N` threads the
+//! pool size here.
 
 pub mod records;
 pub mod space;
@@ -152,6 +160,14 @@ pub struct DseOptions {
     pub seed: u64,
     /// Frontier size to keep / report.
     pub top_k: usize,
+    /// Replicas in the serving pool the candidates are scored for.
+    /// With 1 (the default) the objective is the classic sum of
+    /// per-workload cycles; with N the objective is the modeled pool
+    /// **makespan** — the suite's workloads dispatched least-loaded
+    /// across N replicas ([`pool_makespan_cycles`]) — so candidates
+    /// whose one dominant workload would bottleneck a pool rank
+    /// accordingly.
+    pub pool_devices: usize,
     /// The scoring suite.
     pub workloads: Vec<Workload>,
 }
@@ -166,9 +182,32 @@ impl DseOptions {
             virtual_threads: 2,
             seed: 0xD5E,
             top_k: 5,
+            pool_devices: 1,
             workloads,
         }
     }
+}
+
+/// Modeled pool-level makespan of a set of independent workloads over
+/// `devices` identical replicas: longest-processing-time-first greedy
+/// assignment (each workload goes to the least-loaded replica), the
+/// same least-loaded rule the serving scheduler
+/// ([`crate::exec::serve::Scheduler`]) dispatches with. With one
+/// device this is exactly the sum; it is always at least the largest
+/// single workload and at least the ideal `ceil(sum / devices)`.
+pub fn pool_makespan_cycles(cycles: &[u64], devices: usize) -> u64 {
+    assert!(devices >= 1, "a pool has at least one device");
+    if devices == 1 {
+        return cycles.iter().fold(0u64, |a, &c| a.saturating_add(c));
+    }
+    let mut sorted: Vec<u64> = cycles.to_vec();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let mut load = vec![0u64; devices];
+    for c in sorted {
+        let d = (0..devices).min_by_key(|&d| load[d]).expect("non-empty pool");
+        load[d] = load[d].saturating_add(c);
+    }
+    load.into_iter().max().unwrap_or(0)
 }
 
 /// One workload's score under a candidate.
@@ -195,8 +234,13 @@ pub struct CandidateResult {
     pub config_fp: u64,
     pub usage: ResourceUsage,
     pub scores: Vec<WorkloadScore>,
-    /// Sum of per-workload cycles — the scalar search objective.
+    /// Sum of per-workload cycles (the single-device objective).
     pub total_cycles: u64,
+    /// Modeled pool makespan of the suite over
+    /// [`DseOptions::pool_devices`] replicas
+    /// ([`pool_makespan_cycles`]); equals `total_cycles` when the pool
+    /// has one device. **The scalar search objective.**
+    pub pool_cycles: u64,
 }
 
 /// The search outcome: baseline, frontier, counters.
@@ -228,9 +272,10 @@ impl DseReport {
     }
 
     /// True when the best candidate beats or matches the baseline —
-    /// the `dse-smoke` CI gate.
+    /// the `dse-smoke` CI gate. Compared at the pool level (identical
+    /// to total cycles on a one-device pool).
     pub fn improved(&self) -> bool {
-        self.best().total_cycles <= self.baseline.total_cycles
+        self.best().pool_cycles <= self.baseline.pool_cycles
     }
 
     /// Export the tuned schedules of the frontier **and** the tuned
@@ -341,12 +386,14 @@ fn evaluate_candidate(
         total = total.saturating_add(score.cycles);
         scores.push(score);
     }
+    let per_workload: Vec<u64> = scores.iter().map(|s| s.cycles).collect();
     Some(CandidateResult {
         cfg: cfg.clone(),
         config_fp: config_fingerprint(cfg),
         usage: ResourceUsage::of(cfg),
         scores,
         total_cycles: total,
+        pool_cycles: pool_makespan_cycles(&per_workload, opts.pool_devices),
     })
 }
 
@@ -358,6 +405,7 @@ pub fn run_dse(opts: &DseOptions) -> Result<DseReport> {
         "1 or 2 virtual threads"
     );
     anyhow::ensure!(opts.budget >= 1, "DSE needs a budget of at least one candidate");
+    anyhow::ensure!(opts.pool_devices >= 1, "DSE pools need at least one device");
     let space = ConfigSpace::new();
     let base_cfg = opts.baseline.clone();
     let mut rng = XorShiftRng::new(opts.seed);
@@ -383,7 +431,7 @@ pub fn run_dse(opts: &DseOptions) -> Result<DseReport> {
             // Greedy refine around the best-so-far.
             let best = results
                 .iter()
-                .min_by_key(|r| r.total_cycles)
+                .min_by_key(|r| r.pool_cycles)
                 .map(|r| r.cfg.clone())
                 .unwrap_or_else(|| base_cfg.clone());
             space.mutate(&best, &mut rng)
@@ -402,7 +450,7 @@ pub fn run_dse(opts: &DseOptions) -> Result<DseReport> {
 
     let base_fp = config_fingerprint(&base_cfg);
     let tuned_baseline = results.iter().find(|r| r.config_fp == base_fp).cloned();
-    results.sort_by_key(|r| r.total_cycles);
+    results.sort_by_key(|r| r.pool_cycles);
     results.truncate(opts.top_k.max(1));
     Ok(DseReport {
         baseline,
@@ -488,6 +536,7 @@ mod tests {
                     sched_fp: conv_sched_fp(&p),
                 }],
                 total_cycles: 100,
+                pool_cycles: 100,
             }],
             virtual_threads: 2,
             evaluated: 1,
@@ -555,5 +604,56 @@ mod tests {
             Some(choice),
             "the compiled plan must carry the tuned schedule"
         );
+    }
+
+    /// Pool-level scoring: the makespan model is exact on one device,
+    /// monotone (weakly) in pool size, never better than the ideal
+    /// split, and never hides the dominant workload.
+    #[test]
+    fn pool_makespan_model_is_sane() {
+        let cycles = [700u64, 300, 200, 100, 100];
+        let sum: u64 = cycles.iter().sum();
+        assert_eq!(pool_makespan_cycles(&cycles, 1), sum);
+        // LPT on 2 devices: 700/{300,200,100,100} → max(700, 700) = 700.
+        assert_eq!(pool_makespan_cycles(&cycles, 2), 700);
+        let mut prev = u64::MAX;
+        for devices in 1..=6 {
+            let m = pool_makespan_cycles(&cycles, devices);
+            assert!(m <= prev, "makespan must not grow with pool size");
+            assert!(m >= *cycles.iter().max().unwrap(), "dominant workload bounds below");
+            assert!(m >= sum.div_ceil(devices as u64), "ideal split bounds below");
+            prev = m;
+        }
+        // Degenerate cases.
+        assert_eq!(pool_makespan_cycles(&[], 3), 0);
+        assert_eq!(pool_makespan_cycles(&[42], 4), 42);
+    }
+
+    /// `pool_devices` threads into candidate scoring: every evaluated
+    /// candidate carries a pool makespan consistent with its
+    /// per-workload scores, and a one-device pool reduces to the
+    /// classic total.
+    #[test]
+    fn dse_scores_candidates_at_pool_level() {
+        let mut opts = tiny_opts(2);
+        opts.pool_devices = 3;
+        let report = run_dse(&opts).unwrap();
+        for cand in report.frontier.iter().chain([&report.baseline]) {
+            let per: Vec<u64> = cand.scores.iter().map(|s| s.cycles).collect();
+            assert_eq!(cand.pool_cycles, pool_makespan_cycles(&per, 3));
+            assert!(cand.pool_cycles <= cand.total_cycles);
+        }
+        // The frontier is ranked by the pool objective.
+        for pair in report.frontier.windows(2) {
+            assert!(
+                pair[0].pool_cycles <= pair[1].pool_cycles,
+                "frontier must sort by pool makespan"
+            );
+        }
+
+        let single = run_dse(&tiny_opts(2)).unwrap();
+        for cand in single.frontier.iter().chain([&single.baseline]) {
+            assert_eq!(cand.pool_cycles, cand.total_cycles, "one-device pool = classic total");
+        }
     }
 }

@@ -3,7 +3,7 @@
 //! CPU-resident nodes run either natively or on AOT-compiled XLA/PJRT
 //! executables produced by the JAX build path (`python/compile/`).
 //!
-//! Two execution disciplines:
+//! Three execution disciplines:
 //!
 //! * [`Executor`] — naive serial: every node back-to-back, re-lowering
 //!   VTA nodes from scratch on every inference (the paper's Fig 16
@@ -12,6 +12,11 @@
 //!   [`serve::PlanCache`] of reusable compiled plans plus a pipelined,
 //!   batched front-end that overlaps CPU wall time with simulated VTA
 //!   time.
+//! * [`serve::Scheduler`] — multi-device: a request queue with dynamic
+//!   batching and least-loaded dispatch over a
+//!   [`DevicePool`](crate::runtime::DevicePool) of accelerator
+//!   replicas, with per-device plan caches driven in lockstep from a
+//!   shared compile-once path.
 
 mod cpu_ops;
 mod executor;
@@ -22,8 +27,8 @@ pub use cpu_ops::{add_i8, dense_i8, global_avg_pool_i8, maxpool_i8, relu_i8};
 pub use executor::{CpuBackend, ExecError, ExecReport, Executor, NodeReport};
 pub use pjrt::{PjrtCache, PjrtError};
 pub use serve::{
-    pipeline_schedule, BatchReport, PipelineModel, PlanCache, PlanCacheStats, PlanKey,
-    ServeReport, ServingEngine,
+    pipeline_schedule, BatchRecord, BatchReport, PipelineModel, PlanCache, PlanCacheStats,
+    PlanKey, PoolReport, Scheduler, SchedulerOptions, ServeReport, ServingEngine,
 };
 
 #[cfg(test)]

@@ -1,0 +1,247 @@
+//! The plan cache: keys and the LRU of compiled plans.
+//!
+//! The §3.2 micro-kernel cache, extended to whole-node plans
+//! (instruction streams + packed constants + DRAM residency) of any
+//! registered operator. Besides the closure-driven single-device path
+//! ([`PlanCache::get_or_compile`]), the cache exposes a decomposed
+//! touch / note-miss / make-room / insert API (crate-private) that the
+//! multi-device scheduler uses to drive one cache **per pool replica
+//! in lockstep**: identical lookup and eviction sequences keep every
+//! replica's DRAM allocator history identical, which is what lets a
+//! plan compiled on one device byte-replicate onto the others
+//! ([`crate::compiler::CompiledNode::replicate_to`]).
+
+use super::super::executor::ExecError;
+use crate::compiler::op::op_impl;
+use crate::compiler::CompiledNode;
+use crate::graph::{Graph, Node};
+use crate::runtime::VtaRuntime;
+use std::collections::HashMap;
+
+/// Key of one compiled plan: everything the lowered artifact depends
+/// on. Two graph nodes with identical params *and* identical constants
+/// legitimately share a plan; identical params with different weights
+/// do not (the weight image is DRAM-resident inside the plan).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Hardware variant fingerprint
+    /// ([`config_fingerprint`](super::config_fingerprint)).
+    pub config_fp: u64,
+    /// Virtual-thread count the plan was lowered with.
+    pub virtual_threads: usize,
+    /// Operator kind (the registry key).
+    pub kind: &'static str,
+    /// Operator fingerprint
+    /// ([`VtaOp::fingerprint`](crate::compiler::VtaOp::fingerprint)):
+    /// shape parameters + output shape + baked constants.
+    pub op_fp: u64,
+}
+
+/// The plan key for `node` under a given config fingerprint and
+/// virtual-thread count — shared by the single-device engine and the
+/// pool scheduler so both always compute identical keys.
+pub fn plan_key_for(config_fp: u64, virtual_threads: usize, g: &Graph, node: &Node) -> PlanKey {
+    let entry = op_impl(&node.op);
+    PlanKey { config_fp, virtual_threads, kind: entry.kind(), op_fp: entry.fingerprint(g, node) }
+}
+
+/// Cumulative plan-cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups served by an already-compiled plan.
+    pub hits: u64,
+    /// Lookups that had to compile.
+    pub misses: u64,
+    /// Plans evicted (LRU) to make room.
+    pub evictions: u64,
+}
+
+struct CacheEntry {
+    node: CompiledNode,
+    last_use: u64,
+}
+
+/// LRU cache of compiled plans — the §3.2 micro-kernel cache, extended
+/// to whole-node plans (instruction streams + packed constants + DRAM
+/// residency) of any registered operator.
+pub struct PlanCache {
+    capacity: usize,
+    entries: HashMap<PlanKey, CacheEntry>,
+    clock: u64,
+    stats: PlanCacheStats,
+    /// DRAM bytes held by resident plans, tracked incrementally on
+    /// insert / evict / flush. Always equal to
+    /// [`Self::recomputed_dram_bytes`] — the eviction-accounting
+    /// regression tests assert it stays that way across
+    /// evict → recompile cycles of the same key.
+    resident_bytes: usize,
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity` compiled plans.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "plan cache needs at least one slot");
+        PlanCache {
+            capacity,
+            entries: HashMap::new(),
+            clock: 0,
+            stats: PlanCacheStats::default(),
+            resident_bytes: 0,
+        }
+    }
+
+    /// Cumulative counters.
+    pub fn stats(&self) -> PlanCacheStats {
+        self.stats
+    }
+
+    /// Number of resident plans.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no plans are resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Maximum resident plans.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// True when `key` is resident (does not touch LRU state).
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// The resident plan for `key`, if any (does not touch LRU state;
+    /// tests / introspection).
+    pub fn peek(&self, key: &PlanKey) -> Option<&CompiledNode> {
+        self.entries.get(key).map(|e| &e.node)
+    }
+
+    /// Resident plans per operator kind (reporting / tests).
+    pub fn kinds(&self) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for key in self.entries.keys() {
+            *m.entry(key.kind).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Total DRAM bytes held by resident plans (incrementally tracked;
+    /// consistent across eviction + re-insert of the same key).
+    pub fn dram_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// DRAM residency recomputed from scratch by summing every
+    /// resident plan — the consistency oracle for [`Self::dram_bytes`]
+    /// (tests / debugging; O(n) in resident plans).
+    pub fn recomputed_dram_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.node.dram_bytes()).sum()
+    }
+
+    /// Hit path: if `key` is resident, bump its LRU position and the
+    /// hit counter. Returns whether it was resident.
+    pub(crate) fn touch(&mut self, key: &PlanKey) -> bool {
+        if let Some(e) = self.entries.get_mut(key) {
+            self.clock += 1;
+            e.last_use = self.clock;
+            self.stats.hits += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Count one miss (the compile that follows is accounted even if
+    /// it later fails — a lookup either hits or misses).
+    pub(crate) fn note_miss(&mut self) {
+        self.stats.misses += 1;
+    }
+
+    /// Evict least-recently-used plans — releasing their DRAM
+    /// residency into `rt` — until an insert fits. Runs *before* the
+    /// miss path compiles, so the evicted plans' DRAM is available to
+    /// the new plan (and, on a pool, every replica's allocator sees
+    /// the same free-then-allocate order).
+    pub(crate) fn make_room(&mut self, rt: &mut VtaRuntime) -> Result<(), ExecError> {
+        while self.entries.len() >= self.capacity {
+            let victim =
+                self.entries.iter().min_by_key(|(_, e)| e.last_use).map(|(k, _)| k.clone());
+            let Some(vk) = victim else { break };
+            let entry = self.entries.remove(&vk).expect("victim key resident");
+            self.resident_bytes -= entry.node.dram_bytes();
+            entry.node.free(rt).map_err(ExecError::PlanCache)?;
+            self.stats.evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// Insert a freshly compiled (or replicated) plan. The caller must
+    /// have called [`Self::make_room`] first; a full cache here is a
+    /// lockstep-protocol bug.
+    pub(crate) fn insert(&mut self, key: PlanKey, node: CompiledNode) {
+        debug_assert!(
+            self.entries.len() < self.capacity,
+            "insert without make_room: cache already at capacity"
+        );
+        self.clock += 1;
+        self.resident_bytes += node.dram_bytes();
+        self.entries.insert(key, CacheEntry { node, last_use: self.clock });
+    }
+
+    /// Remove `key`'s plan (if resident), releasing its DRAM into
+    /// `rt` — the pool scheduler's error-path unwinding: when
+    /// replication onto one replica fails, the copies already inserted
+    /// on other replicas are removed again so every cache (and every
+    /// allocator) lands back in the same state.
+    pub(crate) fn remove(&mut self, key: &PlanKey, rt: &mut VtaRuntime) -> Result<(), ExecError> {
+        if let Some(entry) = self.entries.remove(key) {
+            self.resident_bytes -= entry.node.dram_bytes();
+            entry.node.free(rt).map_err(ExecError::PlanCache)?;
+        }
+        Ok(())
+    }
+
+    /// Look up `key`, compiling (and inserting) on a miss. Evicts
+    /// least-recently-used plans — releasing their DRAM residency —
+    /// before the compile when the cache is full.
+    pub fn get_or_compile<F>(
+        &mut self,
+        rt: &mut VtaRuntime,
+        key: &PlanKey,
+        compile: F,
+    ) -> Result<&CompiledNode, ExecError>
+    where
+        F: FnOnce(&mut VtaRuntime) -> Result<CompiledNode, ExecError>,
+    {
+        if self.touch(key) {
+            return Ok(&self.entries[key].node);
+        }
+        self.note_miss();
+        self.make_room(rt)?;
+        let node = compile(rt)?;
+        self.insert(key.clone(), node);
+        Ok(&self.entries[key].node)
+    }
+
+    /// Drop every resident plan, releasing its DRAM. Every plan is
+    /// freed (and the residency accounting zeroed) even when one free
+    /// fails; the first error is reported after the drain completes.
+    pub fn flush(&mut self, rt: &mut VtaRuntime) -> Result<(), ExecError> {
+        let mut first_err = None;
+        for (_, entry) in self.entries.drain() {
+            if let Err(e) = entry.node.free(rt) {
+                first_err.get_or_insert(ExecError::PlanCache(e));
+            }
+        }
+        self.resident_bytes = 0;
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}

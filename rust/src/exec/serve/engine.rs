@@ -1,0 +1,229 @@
+//! The single-device serving engine: compile-once/run-many over one
+//! runtime, with a pipelined, batched front-end.
+//!
+//! [`ServingEngine`] walks the partitioned graph in topological stages
+//! and serves single requests ([`ServingEngine::run_one`]) or batches
+//! ([`ServingEngine::run_batch`]), reporting **both** the naive-serial
+//! end-to-end time (every node back-to-back, the
+//! [`Executor`](crate::exec::Executor) discipline) and the
+//! **pipelined** time under the two-resource overlap model of
+//! [`super::schedule`]. The multi-device analogue — a request queue,
+//! dynamic batching, and least-loaded dispatch over a device pool —
+//! is [`super::Scheduler`].
+
+use super::super::executor::{lift_compile_err, CpuBackend, ExecError};
+use super::cache::{plan_key_for, PlanCache, PlanCacheStats, PlanKey};
+use super::report::{BatchReport, ServeReport};
+use super::run::{plan_keys_for, run_graph, tuned_schedules_for, VtaNodeExec};
+use super::schedule::pipeline_schedule;
+use crate::arch::VtaConfig;
+use crate::compiler::op::{config_fingerprint, execute_compiled, op_impl};
+use crate::compiler::ScheduleChoice;
+use crate::dse::records::TuningRecords;
+use crate::graph::{stages, Graph, Node};
+use crate::runtime::VtaRuntime;
+use crate::sim::SimStats;
+use crate::util::Tensor;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// The batched, plan-caching serving engine.
+pub struct ServingEngine {
+    rt: VtaRuntime,
+    cpu: CpuBackend,
+    cache: PlanCache,
+    virtual_threads: usize,
+    config_fp: u64,
+    /// Tuned schedules from `vta dse`, consulted at compile time. Fixed
+    /// for the engine's lifetime, so [`PlanKey`] does not need to carry
+    /// a schedule fingerprint — within one engine, (config, vt, op)
+    /// still uniquely determines the compiled artifact.
+    records: TuningRecords,
+}
+
+impl ServingEngine {
+    /// Build an engine over a fresh runtime with `dram_size` bytes of
+    /// device DRAM (compiled plans hold their buffers resident there),
+    /// a CPU backend, `virtual_threads` ∈ {1, 2}, and a plan cache of
+    /// `cache_capacity` entries.
+    pub fn new(
+        cfg: &VtaConfig,
+        dram_size: usize,
+        cpu: CpuBackend,
+        virtual_threads: usize,
+        cache_capacity: usize,
+    ) -> Self {
+        Self::with_records(
+            cfg,
+            dram_size,
+            cpu,
+            virtual_threads,
+            cache_capacity,
+            TuningRecords::new(),
+        )
+    }
+
+    /// Like [`Self::new`], seeded with a tuning-record store (usually
+    /// loaded from the JSON file `vta dse` persisted): every VTA node
+    /// whose (config, operator) pair has a record compiles with the
+    /// tuned schedule instead of the planner's greedy default, so
+    /// tuned schedules survive restarts and serving traffic
+    /// automatically runs the tuned plan.
+    pub fn with_records(
+        cfg: &VtaConfig,
+        dram_size: usize,
+        cpu: CpuBackend,
+        virtual_threads: usize,
+        cache_capacity: usize,
+        records: TuningRecords,
+    ) -> Self {
+        assert!(
+            virtual_threads == 1 || virtual_threads == 2,
+            "1 or 2 virtual threads"
+        );
+        ServingEngine {
+            rt: VtaRuntime::new(cfg, dram_size),
+            cpu,
+            cache: PlanCache::new(cache_capacity),
+            virtual_threads,
+            config_fp: config_fingerprint(cfg),
+            records,
+        }
+    }
+
+    /// Number of tuning records the engine consults.
+    pub fn tuned_records(&self) -> usize {
+        self.records.len()
+    }
+
+    /// The tuned schedule the engine would apply to `node`, if its
+    /// record store has one for this (config, operator) pair.
+    pub fn tuned_schedule(&self, node: &Node) -> Option<ScheduleChoice> {
+        let entry = op_impl(&node.op);
+        self.records.lookup(self.config_fp, self.virtual_threads, entry.schedule_fingerprint(node))
+    }
+
+    /// The schedule baked into the resident compiled plan for `key`
+    /// (`None` = no resident plan, or the plan uses the default
+    /// schedule). Tests / introspection.
+    pub fn cached_schedule(&self, key: &PlanKey) -> Option<ScheduleChoice> {
+        self.cache.peek(key).and_then(|node| node.schedule)
+    }
+
+    /// Cumulative plan-cache counters.
+    pub fn cache_stats(&self) -> PlanCacheStats {
+        self.cache.stats()
+    }
+
+    /// Number of resident compiled plans.
+    pub fn cached_plans(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Resident plans per operator kind.
+    pub fn cached_kinds(&self) -> HashMap<&'static str, usize> {
+        self.cache.kinds()
+    }
+
+    /// DRAM bytes held by resident plans.
+    pub fn cache_dram_bytes(&self) -> usize {
+        self.cache.dram_bytes()
+    }
+
+    /// The plan key the engine would use for `node` (any registered
+    /// operator; tests / introspection).
+    pub fn plan_key(&self, g: &Graph, node: &Node) -> PlanKey {
+        plan_key_for(self.config_fp, self.virtual_threads, g, node)
+    }
+
+    /// Serve one request.
+    pub fn run_one(&mut self, g: &Graph, input: &Tensor<i8>) -> Result<ServeReport, ExecError> {
+        let stage_order = stages(g);
+        let keys = plan_keys_for(self.config_fp, self.virtual_threads, g);
+        let schedules = tuned_schedules_for(&self.records, self.config_fp, self.virtual_threads, g);
+        let (output, nodes) = run_graph(self, g, input, &stage_order, &keys, &schedules)?;
+        let model = pipeline_schedule(g, std::slice::from_ref(&nodes));
+        Ok(ServeReport {
+            output,
+            nodes,
+            serial_seconds: model.serial_seconds,
+            pipelined_seconds: model.makespan_seconds,
+        })
+    }
+
+    /// Serve a batch of requests, amortizing stage computation, plan
+    /// keys (weight fingerprints), plan lookup, and constant packing
+    /// across the batch. Outputs are bit-identical to serving each
+    /// request alone (and to the serial [`crate::exec::Executor`]).
+    pub fn run_batch(
+        &mut self,
+        g: &Graph,
+        inputs: &[Tensor<i8>],
+    ) -> Result<BatchReport, ExecError> {
+        let stats0 = self.cache.stats();
+        let t0 = Instant::now();
+        let stage_order = stages(g);
+        let keys = plan_keys_for(self.config_fp, self.virtual_threads, g);
+        let schedules = tuned_schedules_for(&self.records, self.config_fp, self.virtual_threads, g);
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut per_request = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let (out, nodes) = run_graph(self, g, input, &stage_order, &keys, &schedules)?;
+            outputs.push(out);
+            per_request.push(nodes);
+        }
+        let host_wall = t0.elapsed();
+        let model = pipeline_schedule(g, &per_request);
+        let s1 = self.cache.stats();
+        Ok(BatchReport {
+            outputs,
+            per_request,
+            serial_seconds: model.serial_seconds,
+            pipelined_seconds: model.makespan_seconds,
+            completion_seconds: model.completion_seconds,
+            cache: PlanCacheStats {
+                hits: s1.hits - stats0.hits,
+                misses: s1.misses - stats0.misses,
+                evictions: s1.evictions - stats0.evictions,
+            },
+            host_wall,
+        })
+    }
+}
+
+/// The engine's side of the shared graph walker
+/// ([`super::run::run_graph`]): VTA nodes go through the plan cache's
+/// closure-driven compile-on-miss path. Dispatch is op-generic — every
+/// VTA node compiles and runs through its registered
+/// [`VtaOp`](crate::compiler::VtaOp) implementation.
+impl VtaNodeExec for ServingEngine {
+    fn clock_hz(&self) -> f64 {
+        self.rt.ctx.config().clock_hz
+    }
+
+    fn cpu_mut(&mut self) -> &mut CpuBackend {
+        &mut self.cpu
+    }
+
+    fn exec_vta_node(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<(Tensor<i8>, SimStats), ExecError> {
+        let node = &g.nodes[id];
+        let entry = op_impl(&node.op);
+        let vt = self.virtual_threads;
+        // Split borrows: the cache hands out a plan while the runtime
+        // executes it.
+        let rt = &mut self.rt;
+        let compiled = self.cache.get_or_compile(rt, key, |rt| {
+            entry
+                .compile(rt, g, node, vt, schedule.as_ref())
+                .map_err(|e| lift_compile_err(&node.name, e))
+        })?;
+        execute_compiled(entry, compiled, rt, inputs).map_err(|e| lift_compile_err(&node.name, e))
+    }
+}

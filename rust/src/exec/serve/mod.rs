@@ -1,0 +1,61 @@
+//! The serving runtime: a JIT **compiled-plan cache**, a **pipelined,
+//! batched** single-device engine, and a **multi-device scheduler**
+//! over a pool of accelerator replicas.
+//!
+//! The paper's runtime hides memory latency behind compute with
+//! explicit task-level pipeline parallelism (§2.3) and reuses JIT'd
+//! micro-kernels through a DRAM-resident cache (§3.2). This module
+//! lifts both ideas from single-kernel to whole-graph granularity —
+//! for **every operator in the registry** — and then from one device
+//! to many:
+//!
+//! * [`cache`] — [`PlanCache`]: an LRU cache of
+//!   [`CompiledNode`](crate::compiler::CompiledNode)s keyed by
+//!   ([`crate::arch::VtaConfig`] fingerprint, virtual threads,
+//!   operator kind, operator fingerprint). Lowering a VTA node happens
+//!   **once** per key; every later inference replays the sealed
+//!   streams. Hit/miss/eviction counters mirror the micro-op cache's
+//!   (ablation A2), and DRAM residency is tracked explicitly.
+//! * [`schedule`] — [`pipeline_schedule`]: replay measured per-node
+//!   durations (host wall for CPU nodes, simulated cycles ÷ clock for
+//!   VTA nodes) against a two-resource, double-buffered dependence
+//!   schedule — the graph-level analogue of the two SRAM contexts in
+//!   §4.3's virtual threading.
+//! * [`report`] — [`ServeReport`] / [`BatchReport`]: per-request and
+//!   per-batch outputs, model times, cache counters, latency
+//!   percentiles (via the one shared interpolating percentile in
+//!   [`crate::util`]).
+//! * [`engine`] — [`ServingEngine`]: the single-device
+//!   compile-once/run-many front-end ([`ServingEngine::run_one`] /
+//!   [`ServingEngine::run_batch`]).
+//! * [`scheduler`] — [`Scheduler`]: the multi-device runtime. A
+//!   request queue with **dynamic batching** (`max_batch` +
+//!   `batch_deadline`, both in simulated time) feeds **least-loaded
+//!   dispatch** across a [`DevicePool`](crate::runtime::DevicePool) of
+//!   replicas; per-device simulated clocks advance independently, so
+//!   modeled throughput genuinely scales with pool size. Per-device
+//!   plan caches are driven in **lockstep** from a shared compile-once
+//!   path: a plan is lowered exactly once per pool and byte-replicated
+//!   ([`crate::compiler::CompiledNode::replicate_to`]) onto every
+//!   replica. Queue depth, per-device utilization, and latency
+//!   percentiles export through [`crate::metrics::PoolMetrics`].
+
+mod cache;
+mod engine;
+mod report;
+mod run;
+mod schedule;
+mod scheduler;
+
+pub use cache::{plan_key_for, PlanCache, PlanCacheStats, PlanKey};
+pub use engine::ServingEngine;
+pub use report::{BatchReport, ServeReport};
+pub use schedule::{pipeline_schedule, PipelineModel};
+pub use scheduler::{BatchRecord, PoolReport, Scheduler, SchedulerOptions};
+
+// Fingerprint helpers live with the operator registry; re-exported
+// here for API continuity (and python/compile/synth.py parity).
+pub use crate::compiler::op::{config_fingerprint, fnv1a64, weights_fingerprint};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,74 @@
+//! Serving reports: per-request and per-batch outcomes of the
+//! single-device engine.
+//!
+//! Latency percentiles delegate to the one shared interpolating
+//! percentile implementation in [`crate::util`] — the same math the
+//! bench harness's `BenchStats` uses, so serving reports and bench
+//! output can never disagree about what "p99" means.
+
+use super::super::executor::NodeReport;
+use super::cache::PlanCacheStats;
+use crate::util::{percentile_sorted, Tensor};
+use std::time::Duration;
+
+/// Report for one served request.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Final output tensor.
+    pub output: Tensor<i8>,
+    /// Per-node records, indexed by node id.
+    pub nodes: Vec<NodeReport>,
+    /// Naive serial end-to-end model time (sum of all node durations).
+    pub serial_seconds: f64,
+    /// Pipelined model time for this single request (intra-request
+    /// overlap only).
+    pub pipelined_seconds: f64,
+}
+
+/// Report for a served batch.
+#[derive(Debug)]
+pub struct BatchReport {
+    /// Per-request outputs, in request order.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Per-request, per-node records.
+    pub per_request: Vec<Vec<NodeReport>>,
+    /// Naive serial end-to-end model time of the whole batch.
+    pub serial_seconds: f64,
+    /// Pipelined, double-buffered end-to-end model time of the batch.
+    pub pipelined_seconds: f64,
+    /// Per-request completion times under the pipelined schedule.
+    pub completion_seconds: Vec<f64>,
+    /// Plan-cache counters *for this batch* (end minus start).
+    pub cache: PlanCacheStats,
+    /// Real host wall time of serving the batch (includes compiles on
+    /// cold caches).
+    pub host_wall: Duration,
+}
+
+impl BatchReport {
+    /// Requests per modeled second under the pipelined schedule.
+    pub fn throughput(&self) -> f64 {
+        if self.pipelined_seconds > 0.0 {
+            self.outputs.len() as f64 / self.pipelined_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Serial ÷ pipelined model time.
+    pub fn speedup(&self) -> f64 {
+        if self.pipelined_seconds > 0.0 {
+            self.serial_seconds / self.pipelined_seconds
+        } else {
+            1.0
+        }
+    }
+
+    /// Latency percentile (`q` in [0, 1], interpolating) over
+    /// per-request completion times (all requests arrive at t = 0).
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let mut sorted = self.completion_seconds.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        percentile_sorted(&sorted, q)
+    }
+}

@@ -1,0 +1,141 @@
+//! The shared graph walker of the serving runtime: one staged
+//! execution loop used by both the single-device engine and the
+//! multi-device scheduler, so the two disciplines stay bit-identical
+//! **by construction** (the property the determinism suites assert).
+//! Only the "produce a compiled plan and run it" step differs between
+//! them — closure-driven plan cache vs. lockstep pool caches — so that
+//! step is the trait.
+
+use super::super::executor::{exec_cpu_node, CpuBackend, ExecError, NodeReport};
+use super::cache::{plan_key_for, PlanKey};
+use crate::compiler::op::op_impl;
+use crate::compiler::ScheduleChoice;
+use crate::dse::records::TuningRecords;
+use crate::graph::{Graph, Placement};
+use crate::sim::SimStats;
+use crate::util::Tensor;
+use std::time::Instant;
+
+/// How a serving front-end executes one VTA-resident node. Implemented
+/// by [`ServingEngine`](super::ServingEngine) (plan cache over one
+/// runtime) and by the scheduler's per-dispatch device view (lockstep
+/// caches + a chosen pool replica).
+pub(crate) trait VtaNodeExec {
+    /// Simulated clock of the executing device (Hz).
+    fn clock_hz(&self) -> f64;
+
+    /// The CPU backend for CPU-resident nodes.
+    fn cpu_mut(&mut self) -> &mut CpuBackend;
+
+    /// Compile (or fetch) node `id`'s plan and execute it on the
+    /// accelerator.
+    fn exec_vta_node(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<(Tensor<i8>, SimStats), ExecError>;
+}
+
+/// The plan key of every VTA-resident node, `None` elsewhere
+/// (operator fingerprints hash the full weight image — computed once
+/// per graph, not once per request).
+pub(crate) fn plan_keys_for(
+    config_fp: u64,
+    virtual_threads: usize,
+    g: &Graph,
+) -> Vec<Option<PlanKey>> {
+    g.nodes
+        .iter()
+        .map(|node| {
+            (node.placement == Placement::Vta)
+                .then(|| plan_key_for(config_fp, virtual_threads, g, node))
+        })
+        .collect()
+}
+
+/// The tuned schedule of every VTA-resident node under `records`
+/// (the record lookup hashes the operator's debug form — once per
+/// graph, like the plan keys).
+pub(crate) fn tuned_schedules_for(
+    records: &TuningRecords,
+    config_fp: u64,
+    virtual_threads: usize,
+    g: &Graph,
+) -> Vec<Option<ScheduleChoice>> {
+    if records.is_empty() {
+        return vec![None; g.nodes.len()];
+    }
+    g.nodes
+        .iter()
+        .map(|node| {
+            if node.placement == Placement::Vta {
+                let entry = op_impl(&node.op);
+                records.lookup(config_fp, virtual_threads, entry.schedule_fingerprint(node))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Execute the graph once, in topological stages: input nodes take the
+/// request tensor, VTA nodes go through [`VtaNodeExec::exec_vta_node`],
+/// CPU nodes through the shared CPU backend. `stage_order`, `keys`,
+/// and `schedules` are precomputed per graph so batches amortize them.
+/// Returns the output and per-node records indexed by node id.
+pub(crate) fn run_graph<E: VtaNodeExec>(
+    ex: &mut E,
+    g: &Graph,
+    input: &Tensor<i8>,
+    stage_order: &[Vec<usize>],
+    keys: &[Option<PlanKey>],
+    schedules: &[Option<ScheduleChoice>],
+) -> Result<(Tensor<i8>, Vec<NodeReport>), ExecError> {
+    let clock_hz = ex.clock_hz();
+    let mut values: Vec<Option<Tensor<i8>>> = vec![None; g.nodes.len()];
+    let mut reports: Vec<Option<NodeReport>> = (0..g.nodes.len()).map(|_| None).collect();
+
+    for stage in stage_order {
+        for &id in stage {
+            let node = &g.nodes[id];
+            let entry = op_impl(&node.op);
+            let t0 = Instant::now();
+            let mut sim_seconds = 0.0;
+            let mut stats = None;
+
+            let out = if entry.is_input() {
+                input.clone()
+            } else if node.placement == Placement::Vta {
+                let key = keys[id].as_ref().expect("plan key precomputed for VTA node");
+                let inputs: Vec<&Tensor<i8>> =
+                    node.inputs.iter().map(|&i| values[i].as_ref().unwrap()).collect();
+                let (out, s) = ex.exec_vta_node(g, id, key, schedules[id], &inputs)?;
+                sim_seconds = s.total_cycles as f64 / clock_hz;
+                stats = Some(s);
+                out
+            } else {
+                exec_cpu_node(ex.cpu_mut(), g, id, &values)?
+            };
+
+            reports[id] = Some(NodeReport {
+                name: node.name.clone(),
+                kind: node.op.kind(),
+                placement: node.placement,
+                wall: t0.elapsed(),
+                sim_seconds,
+                stats,
+                ops: node.op.ops(&node.shape),
+            });
+            values[id] = Some(out);
+        }
+    }
+
+    let out_id = g.output().expect("non-empty graph");
+    Ok((
+        values[out_id].take().unwrap(),
+        reports.into_iter().map(|r| r.expect("stages cover every node")).collect(),
+    ))
+}

@@ -1,0 +1,492 @@
+//! The multi-device scheduler: a request queue with dynamic batching
+//! and least-loaded dispatch over a [`DevicePool`] of accelerator
+//! replicas.
+//!
+//! Three moving parts:
+//!
+//! * **Dynamic batching.** Requests carry a simulated arrival time.
+//!   The scheduler closes a batch when it reaches
+//!   [`SchedulerOptions::max_batch`] requests, or when the oldest
+//!   queued request has waited [`SchedulerOptions::batch_deadline`]
+//!   simulated seconds (a partial batch also flushes when the request
+//!   stream ends — waiting past the last arrival buys nothing).
+//! * **Least-loaded dispatch.** Each replica keeps its own simulated
+//!   clock (`free_at`); a closed batch goes to the replica that frees
+//!   up earliest (ties → lowest index), starts at
+//!   `max(batch ready, device free)`, and occupies the device for the
+//!   batch's pipelined makespan ([`super::pipeline_schedule`]). With N
+//!   replicas, N batches are genuinely in flight in simulated time —
+//!   modeled throughput scales with pool size.
+//! * **Lockstep plan caches — the shared compile-once path.** Every
+//!   replica has a [`PlanCache`], but all caches see the *same*
+//!   lookup/eviction sequence: on a pool-level miss every cache evicts
+//!   the same victims first, then the plan is lowered **once** (on
+//!   replica 0) and byte-replicated onto the others
+//!   ([`CompiledNode::replicate_to`](crate::compiler::CompiledNode::replicate_to)
+//!   — identical allocator histories guarantee identical DRAM
+//!   addresses, so the sealed streams replay verbatim). A plan is
+//!   compiled exactly once per pool, not once per device; any replica
+//!   can then serve any request.
+//!
+//! Outputs are bit-identical to the single-device
+//! [`ServingEngine`](super::ServingEngine) and to the serial
+//! [`Executor`](crate::exec::Executor) — execution is exact; only the
+//! timing is modeled.
+
+use super::super::executor::{lift_compile_err, CpuBackend, ExecError};
+use super::cache::{PlanCache, PlanCacheStats, PlanKey};
+use super::run::{plan_keys_for, run_graph, tuned_schedules_for, VtaNodeExec};
+use super::schedule::pipeline_schedule;
+use crate::arch::VtaConfig;
+use crate::compiler::op::{config_fingerprint, execute_compiled, op_impl};
+use crate::compiler::ScheduleChoice;
+use crate::dse::records::TuningRecords;
+use crate::graph::{stages, Graph, Node};
+use crate::metrics::PoolMetrics;
+use crate::runtime::DevicePool;
+use crate::sim::SimStats;
+use crate::util::{percentile_sorted, Tensor};
+use std::time::{Duration, Instant};
+
+/// Knobs of the multi-device serving runtime.
+#[derive(Clone, Debug)]
+pub struct SchedulerOptions {
+    /// Pool replicas.
+    pub devices: usize,
+    /// Maximum requests per dispatched batch.
+    pub max_batch: usize,
+    /// Dynamic-batching deadline in **simulated** seconds: a partial
+    /// batch is dispatched once its oldest request has waited this
+    /// long.
+    pub batch_deadline: f64,
+    /// Plan-cache capacity per replica (caches run in lockstep, so
+    /// every replica holds the same plans).
+    pub cache_capacity: usize,
+    /// Virtual threads VTA nodes are lowered with, ∈ {1, 2}.
+    pub virtual_threads: usize,
+    /// Device DRAM bytes per replica.
+    pub dram_size: usize,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions {
+            devices: 1,
+            max_batch: 8,
+            batch_deadline: 1e-3,
+            cache_capacity: 64,
+            virtual_threads: 2,
+            dram_size: 256 << 20,
+        }
+    }
+}
+
+/// One dispatched batch, for reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchRecord {
+    /// Replica the batch ran on.
+    pub device: usize,
+    /// Requests in the batch.
+    pub size: usize,
+    /// Simulated time the batch closed (full, deadline, or stream
+    /// end).
+    pub ready: f64,
+    /// Simulated time service began (`max(ready, device free)`).
+    pub start: f64,
+    /// Simulated time service completed.
+    pub finish: f64,
+}
+
+/// Outcome of draining the request queue through the pool.
+#[derive(Debug)]
+pub struct PoolReport {
+    /// Per-request outputs, in submission order.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Per-request arrival times, in submission order.
+    pub arrivals: Vec<f64>,
+    /// Per-request completion times (simulated), in submission order.
+    pub completions: Vec<f64>,
+    /// Every dispatched batch, in dispatch order.
+    pub batches: Vec<BatchRecord>,
+    /// Simulated busy seconds per replica.
+    pub device_busy: Vec<f64>,
+    /// End of the simulated span: the last batch completion (0 with no
+    /// requests).
+    pub makespan_seconds: f64,
+    /// Plan-cache counters for this run (replica 0 — the caches run in
+    /// lockstep, so its counters are the pool's).
+    pub cache: PlanCacheStats,
+    /// Real host wall time of the drain (includes pool-level compiles
+    /// on cold caches).
+    pub host_wall: Duration,
+    /// Queue-depth samples and per-device counters.
+    pub metrics: PoolMetrics,
+}
+
+impl PoolReport {
+    /// Requests per modeled second over the whole span.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_seconds > 0.0 {
+            self.outputs.len() as f64 / self.makespan_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Request latency (completion − arrival) percentile, `q` ∈
+    /// [0, 1], interpolating — the shared [`percentile_sorted`].
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let mut lat: Vec<f64> = self
+            .completions
+            .iter()
+            .zip(&self.arrivals)
+            .map(|(c, a)| c - a)
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        percentile_sorted(&lat, q)
+    }
+
+    /// Busy fraction of replica `d` over the simulated span.
+    pub fn utilization(&self, d: usize) -> f64 {
+        if self.makespan_seconds > 0.0 {
+            (self.device_busy[d] / self.makespan_seconds).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The multi-device serving runtime: queue → dynamic batches →
+/// least-loaded replicas, over lockstep per-device plan caches.
+pub struct Scheduler {
+    pool: DevicePool,
+    caches: Vec<PlanCache>,
+    cpu: CpuBackend,
+    opts: SchedulerOptions,
+    config_fp: u64,
+    records: TuningRecords,
+    /// Pending requests: (arrival, input), in submission order.
+    queue: Vec<(f64, Tensor<i8>)>,
+}
+
+impl Scheduler {
+    /// Build a scheduler over `opts.devices` fresh replicas of `cfg`.
+    pub fn new(cfg: &VtaConfig, cpu: CpuBackend, opts: SchedulerOptions) -> Self {
+        Self::with_records(cfg, cpu, opts, TuningRecords::new())
+    }
+
+    /// Like [`Self::new`], seeded with a `vta dse` tuning-record store
+    /// (consulted at compile time, exactly as in
+    /// [`ServingEngine::with_records`](super::ServingEngine::with_records)).
+    pub fn with_records(
+        cfg: &VtaConfig,
+        cpu: CpuBackend,
+        opts: SchedulerOptions,
+        records: TuningRecords,
+    ) -> Self {
+        assert!(
+            opts.virtual_threads == 1 || opts.virtual_threads == 2,
+            "1 or 2 virtual threads"
+        );
+        assert!(opts.max_batch >= 1, "max_batch must be at least 1");
+        assert!(
+            opts.batch_deadline >= 0.0 && opts.batch_deadline.is_finite(),
+            "batch_deadline must be a finite non-negative simulated time"
+        );
+        let pool = DevicePool::new(cfg, opts.dram_size, opts.devices);
+        let caches = (0..opts.devices).map(|_| PlanCache::new(opts.cache_capacity)).collect();
+        Scheduler {
+            pool,
+            caches,
+            cpu,
+            opts,
+            config_fp: config_fingerprint(cfg),
+            records,
+            queue: Vec::new(),
+        }
+    }
+
+    /// Pool size.
+    pub fn devices(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Requests waiting in the queue.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Cumulative plan-cache counters (replica 0 — lockstep makes it
+    /// the pool's).
+    pub fn cache_stats(&self) -> PlanCacheStats {
+        self.caches[0].stats()
+    }
+
+    /// Resident compiled plans per replica (identical across the pool
+    /// by lockstep).
+    pub fn cached_plans(&self) -> usize {
+        self.caches[0].len()
+    }
+
+    /// DRAM bytes held by resident plans, per replica.
+    pub fn cache_dram_bytes(&self) -> usize {
+        self.caches[0].dram_bytes()
+    }
+
+    /// Enqueue a request arriving at simulated time `arrival`.
+    pub fn submit(&mut self, arrival: f64, input: Tensor<i8>) {
+        assert!(
+            arrival >= 0.0 && arrival.is_finite(),
+            "arrival must be a finite non-negative simulated time"
+        );
+        self.queue.push((arrival, input));
+    }
+
+    /// Drain the queue: form dynamic batches, dispatch them across the
+    /// pool, execute every request exactly (bit-identical to the
+    /// single-device engine), and report modeled times + metrics.
+    pub fn run(&mut self, g: &Graph) -> Result<PoolReport, ExecError> {
+        let ndev = self.pool.len();
+        let t0 = Instant::now();
+        let stats0 = self.caches[0].stats();
+        let n = self.queue.len();
+        if n == 0 {
+            return Ok(PoolReport {
+                outputs: Vec::new(),
+                arrivals: Vec::new(),
+                completions: Vec::new(),
+                batches: Vec::new(),
+                device_busy: vec![0.0; ndev],
+                makespan_seconds: 0.0,
+                cache: PlanCacheStats::default(),
+                host_wall: t0.elapsed(),
+                metrics: PoolMetrics::new(ndev),
+            });
+        }
+
+        let vt = self.opts.virtual_threads;
+        let stage_order = stages(g);
+        let keys = plan_keys_for(self.config_fp, vt, g);
+        let schedules = tuned_schedules_for(&self.records, self.config_fp, vt, g);
+
+        // Requests in arrival order (stable: equal arrivals keep
+        // submission order), remembering the submission index so the
+        // report lines up with the caller's inputs.
+        let mut reqs: Vec<(usize, f64, Tensor<i8>)> = self
+            .queue
+            .drain(..)
+            .enumerate()
+            .map(|(i, (arrival, input))| (i, arrival, input))
+            .collect();
+        reqs.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite arrivals"));
+
+        // Dynamic batching over the arrival-ordered stream: close on
+        // max_batch, on the deadline, or at stream end.
+        let maxb = self.opts.max_batch;
+        let deadline = self.opts.batch_deadline;
+        let last_arrival = reqs.last().expect("non-empty queue").1;
+        let mut batches: Vec<Vec<usize>> = Vec::new();
+        let mut current: Vec<usize> = Vec::new();
+        for r in 0..reqs.len() {
+            if !current.is_empty()
+                && (current.len() >= maxb || reqs[r].1 > reqs[current[0]].1 + deadline)
+            {
+                batches.push(std::mem::take(&mut current));
+            }
+            current.push(r);
+        }
+        if !current.is_empty() {
+            batches.push(current);
+        }
+
+        // Dispatch: least-loaded replica, per-device simulated clocks.
+        let mut free_at = vec![0.0f64; ndev];
+        let mut busy = vec![0.0f64; ndev];
+        let mut metrics = PoolMetrics::new(ndev);
+        let mut batch_records = Vec::with_capacity(batches.len());
+        let mut outputs: Vec<Option<Tensor<i8>>> = (0..n).map(|_| None).collect();
+        let mut arrivals = vec![0.0f64; n];
+        let mut completions = vec![0.0f64; n];
+        let mut dispatched = 0usize;
+
+        for members in &batches {
+            let first_arrival = reqs[members[0]].1;
+            let last_member_arrival = reqs[*members.last().expect("non-empty batch")].1;
+            let ready = if members.len() >= maxb {
+                last_member_arrival
+            } else {
+                (first_arrival + deadline).min(last_arrival)
+            };
+
+            let mut d = 0;
+            for i in 1..ndev {
+                if free_at[i] < free_at[d] {
+                    d = i;
+                }
+            }
+            let start = ready.max(free_at[d]);
+            // Queue depth at the dispatch instant: requests that have
+            // *arrived* by `start` and are not yet dispatched (batch
+            // starts are non-decreasing, so every earlier dispatch
+            // covers only arrivals ≤ this one's start).
+            let arrived = reqs.partition_point(|r| r.1 <= start);
+            metrics.queue.record(start, arrived.saturating_sub(dispatched));
+
+            // Execute every member exactly, on replica `d`.
+            let mut per_request = Vec::with_capacity(members.len());
+            let mut batch_cycles = 0u64;
+            for &r in members {
+                let (submit_idx, arrival, ref input) = reqs[r];
+                let (out, reports) = run_graph(
+                    &mut DeviceRun { sched: &mut *self, device: d },
+                    g,
+                    input,
+                    &stage_order,
+                    &keys,
+                    &schedules,
+                )?;
+                batch_cycles += reports
+                    .iter()
+                    .filter_map(|nr| nr.stats.as_ref())
+                    .map(|s| s.total_cycles)
+                    .sum::<u64>();
+                outputs[submit_idx] = Some(out);
+                arrivals[submit_idx] = arrival;
+                per_request.push(reports);
+            }
+
+            // The batch occupies the replica for its pipelined
+            // makespan; member completions are offsets within it.
+            let model = pipeline_schedule(g, &per_request);
+            for (k, &r) in members.iter().enumerate() {
+                completions[reqs[r].0] = start + model.completion_seconds[k];
+            }
+            let finish = start + model.makespan_seconds;
+            free_at[d] = finish;
+            busy[d] += model.makespan_seconds;
+            dispatched += members.len();
+            metrics.devices[d].record_batch(members.len(), model.makespan_seconds, batch_cycles);
+            batch_records.push(BatchRecord {
+                device: d,
+                size: members.len(),
+                ready,
+                start,
+                finish,
+            });
+        }
+
+        let makespan = batch_records.iter().map(|b| b.finish).fold(0.0f64, f64::max);
+        let s1 = self.caches[0].stats();
+        Ok(PoolReport {
+            outputs: outputs.into_iter().map(|o| o.expect("every request served")).collect(),
+            arrivals,
+            completions,
+            batches: batch_records,
+            device_busy: busy,
+            makespan_seconds: makespan,
+            cache: PlanCacheStats {
+                hits: s1.hits - stats0.hits,
+                misses: s1.misses - stats0.misses,
+                evictions: s1.evictions - stats0.evictions,
+            },
+            host_wall: t0.elapsed(),
+            metrics,
+        })
+    }
+
+    /// The shared compile-once path: make `key`'s plan resident in
+    /// **every** replica's cache, in lockstep.
+    ///
+    /// Hit: touch every cache (identical LRU updates). Miss: every
+    /// cache evicts the same victims first (identical allocator
+    /// frees), then the plan is lowered once on replica 0 and
+    /// byte-replicated onto the rest — identical allocator histories
+    /// put every replica's copy at identical DRAM addresses, so the
+    /// sealed streams replay verbatim.
+    ///
+    /// Error paths preserve the lockstep invariant: a failed compile
+    /// leaves replica 0's allocator untouched (the `compile_*` paths
+    /// allocate atomically), and a failed replication unwinds — the
+    /// already-replicated copies and the source plan are all freed —
+    /// so every replica's allocator lands in the same state and the
+    /// pool stays serviceable.
+    fn ensure_compiled(
+        &mut self,
+        g: &Graph,
+        node: &Node,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+    ) -> Result<(), ExecError> {
+        if self.caches[0].contains(key) {
+            for c in &mut self.caches {
+                let hit = c.touch(key);
+                debug_assert!(hit, "pool plan caches fell out of lockstep");
+            }
+            return Ok(());
+        }
+        let entry = op_impl(&node.op);
+        for (c, rt) in self.caches.iter_mut().zip(self.pool.devices_mut()) {
+            c.note_miss();
+            c.make_room(rt)?;
+        }
+        let vt = self.opts.virtual_threads;
+        let compiled = entry
+            .compile(self.pool.device_mut(0), g, node, vt, schedule.as_ref())
+            .map_err(|e| lift_compile_err(&node.name, e))?;
+        for d in 1..self.pool.len() {
+            let (src, dst) = self.pool.pair_mut(0, d);
+            match compiled.replicate_to(src, dst) {
+                Ok(clone) => self.caches[d].insert(key.clone(), clone),
+                Err(e) => {
+                    for u in 1..d {
+                        let rt_u = self.pool.device_mut(u);
+                        let _ = self.caches[u].remove(key, rt_u);
+                    }
+                    let _ = compiled.free(self.pool.device_mut(0));
+                    return Err(lift_compile_err(&node.name, e));
+                }
+            }
+        }
+        self.caches[0].insert(key.clone(), compiled);
+        Ok(())
+    }
+}
+
+/// One dispatch's device view: the scheduler plus the replica a batch
+/// was assigned to — the scheduler's side of the shared graph walker
+/// ([`super::run::run_graph`]). VTA nodes go through the lockstep
+/// caches ([`Scheduler::ensure_compiled`]) and execute on the chosen
+/// replica.
+struct DeviceRun<'a> {
+    sched: &'a mut Scheduler,
+    device: usize,
+}
+
+impl VtaNodeExec for DeviceRun<'_> {
+    fn clock_hz(&self) -> f64 {
+        self.sched.pool.config().clock_hz
+    }
+
+    fn cpu_mut(&mut self) -> &mut CpuBackend {
+        &mut self.sched.cpu
+    }
+
+    fn exec_vta_node(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<(Tensor<i8>, SimStats), ExecError> {
+        let node = &g.nodes[id];
+        let entry = op_impl(&node.op);
+        self.sched.ensure_compiled(g, node, key, schedule)?;
+        // Split borrows: the chosen replica executes a plan held by
+        // its own (disjoint) cache.
+        let rt = self.sched.pool.device_mut(self.device);
+        let compiled =
+            self.sched.caches[self.device].peek(key).expect("plan resident after ensure_compiled");
+        execute_compiled(entry, compiled, rt, inputs).map_err(|e| lift_compile_err(&node.name, e))
+    }
+}

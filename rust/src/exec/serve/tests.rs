@@ -1,0 +1,527 @@
+use super::*;
+use crate::arch::VtaConfig;
+use crate::compiler::{compile_eltwise, Conv2dParams, EltwiseKind, MatmulParams, Requant};
+use crate::exec::{CpuBackend, ExecError, Executor};
+use crate::graph::{partition, Graph, Op, PartitionPolicy, Placement};
+use crate::runtime::VtaRuntime;
+use crate::util::{Tensor, XorShiftRng};
+
+fn rand_t(seed: u64, shape: &[usize]) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(shape, rng.vec_i8(shape.iter().product(), -8, 8)).unwrap()
+}
+
+fn conv_p(ic: usize, oc: usize, relu: bool) -> Conv2dParams {
+    Conv2dParams {
+        h: 8,
+        w: 8,
+        ic,
+        oc,
+        k: 3,
+        s: 1,
+        requant: crate::compiler::Requant { shift: 6, relu },
+    }
+}
+
+/// Two VTA convs with identical params but different weights →
+/// distinct plans. A batch of three requests compiles each exactly
+/// once and hits on every later lookup.
+fn two_conv_graph() -> Graph {
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let c1 = g.add("c1", Op::Conv2d { p: conv_p(16, 16, true) }, &[x]).unwrap();
+    g.set_weights(c1, rand_t(101, &[16, 16, 3, 3]));
+    let c2 = g.add("c2", Op::Conv2d { p: conv_p(16, 16, false) }, &[c1]).unwrap();
+    g.set_weights(c2, rand_t(102, &[16, 16, 3, 3]));
+    let _p = g.add("pool", Op::MaxPool { k: 2, s: 2, pad: 0 }, &[c2]).unwrap();
+    g
+}
+
+/// A small ResNet basic block: conv → conv, residual add, relu.
+fn residual_block_graph() -> Graph {
+    let p = conv_p(16, 16, false);
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let c1 = g.add("c1", Op::Conv2d { p }, &[x]).unwrap();
+    g.set_weights(c1, rand_t(111, &[16, 16, 3, 3]));
+    let c2 = g.add("c2", Op::Conv2d { p }, &[c1]).unwrap();
+    g.set_weights(c2, rand_t(112, &[16, 16, 3, 3]));
+    let add = g.add("add", Op::Add, &[c2, x]).unwrap();
+    let _r = g.add("relu", Op::Relu, &[add]).unwrap();
+    g
+}
+
+/// A ResNet-style tail with every registered VTA op class: conv,
+/// residual add, standalone relu, gap, dense classifier.
+fn mixed_op_graph() -> Graph {
+    let p = conv_p(16, 16, false);
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let c1 = g.add("c1", Op::Conv2d { p: conv_p(16, 16, true) }, &[x]).unwrap();
+    g.set_weights(c1, rand_t(121, &[16, 16, 3, 3]));
+    let c2 = g.add("c2", Op::Conv2d { p }, &[c1]).unwrap();
+    g.set_weights(c2, rand_t(122, &[16, 16, 3, 3]));
+    let add = g.add("add", Op::Add, &[c2, x]).unwrap();
+    let r = g.add("relu", Op::Relu, &[add]).unwrap();
+    let gap = g.add("gap", Op::GlobalAvgPool, &[r]).unwrap();
+    let fcp = MatmulParams { m: 1, k: 16, n: 10, requant: Requant { shift: 2, relu: false } };
+    let fc = g.add("fc", Op::Dense { p: fcp }, &[gap]).unwrap();
+    g.set_weights(fc, rand_t(123, &[10, 16]));
+    g
+}
+
+fn engine(cap: usize) -> ServingEngine {
+    ServingEngine::new(&VtaConfig::pynq(), 64 << 20, CpuBackend::Native, 2, cap)
+}
+
+#[test]
+fn plan_cache_counts_hits_and_misses() {
+    let cfg = VtaConfig::pynq();
+    let mut g = two_conv_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+
+    let mut eng = engine(8);
+    let inputs: Vec<_> = (0..3).map(|i| rand_t(200 + i, &[1, 16, 8, 8])).collect();
+    let batch = eng.run_batch(&g, &inputs).unwrap();
+
+    // Lowering ran once per unique VTA node, despite 3 requests x
+    // 2 conv nodes = 6 lookups.
+    assert_eq!(batch.cache.misses, 2, "one compile per unique (params, weights)");
+    assert_eq!(batch.cache.hits, 4, "every later lookup hits");
+    assert_eq!(batch.cache.evictions, 0);
+    assert_eq!(eng.cached_plans(), 2);
+
+    // A second (warm) batch never compiles.
+    let warm = eng.run_batch(&g, &inputs).unwrap();
+    assert_eq!(warm.cache.misses, 0);
+    assert_eq!(warm.cache.hits, 6);
+}
+
+#[test]
+fn plan_cache_evicts_lru_and_stays_correct() {
+    let cfg = VtaConfig::pynq();
+    let mut g = two_conv_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+    let input = rand_t(300, &[1, 16, 8, 8]);
+
+    // Reference output from the serial executor.
+    let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+    let expect = ex.run(&g, &input).unwrap().output;
+
+    // Capacity 1: the two conv plans thrash, evicting each other.
+    let mut eng = engine(1);
+    let r1 = eng.run_one(&g, &input).unwrap();
+    let r2 = eng.run_one(&g, &input).unwrap();
+    assert_eq!(r1.output, expect);
+    assert_eq!(r2.output, expect, "eviction must not corrupt results");
+    let s = eng.cache_stats();
+    assert_eq!(s.hits, 0, "capacity 1 cannot retain either plan");
+    assert_eq!(s.misses, 4);
+    assert!(s.evictions >= 3, "thrashing must evict: {s:?}");
+    assert_eq!(eng.cached_plans(), 1);
+}
+
+#[test]
+fn eviction_releases_dram() {
+    let cfg = VtaConfig::pynq();
+    let mut g = two_conv_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+    let input = rand_t(310, &[1, 16, 8, 8]);
+
+    let mut eng = engine(1);
+    eng.run_one(&g, &input).unwrap();
+    let one_plan = eng.cache_dram_bytes();
+    eng.run_one(&g, &input).unwrap();
+    // Still exactly one resident plan's worth of DRAM (same shapes
+    // → same footprint), not an accumulating leak.
+    assert_eq!(eng.cache_dram_bytes(), one_plan);
+}
+
+/// Satellite regression: the cache's incrementally tracked DRAM
+/// residency stays consistent with the recomputed sum across
+/// evict → recompile cycles of the same key, and flush zeroes it —
+/// returning the runtime allocator to its pre-cache watermark.
+#[test]
+fn dram_accounting_survives_evict_and_reinsert() {
+    let cfg = VtaConfig::pynq();
+    let mut rt = VtaRuntime::new(&cfg, 64 << 20);
+    let baseline_used = rt.dram.used();
+
+    let key = |op_fp: u64, kind: &'static str| PlanKey {
+        config_fp: 1,
+        virtual_threads: 2,
+        kind,
+        op_fp,
+    };
+    let compile_add = |len: usize| {
+        move |rt: &mut VtaRuntime| {
+            compile_eltwise(rt, EltwiseKind::AddSat, len, 2).map_err(ExecError::PlanCache)
+        }
+    };
+
+    let mut cache = PlanCache::new(1);
+    assert_eq!(cache.dram_bytes(), 0);
+    cache.get_or_compile(&mut rt, &key(0xA, "add"), compile_add(4096)).unwrap();
+    let one_plan = cache.dram_bytes();
+    assert!(one_plan > 0);
+    assert_eq!(cache.dram_bytes(), cache.recomputed_dram_bytes());
+
+    // Thrash two same-footprint keys through the single slot: each
+    // round evicts and recompiles, and the tracked residency must
+    // stay exact (no drift up or down).
+    for round in 0..3 {
+        cache.get_or_compile(&mut rt, &key(0xB, "add"), compile_add(4096)).unwrap();
+        assert_eq!(cache.dram_bytes(), one_plan, "round {round}: B resident");
+        assert_eq!(cache.dram_bytes(), cache.recomputed_dram_bytes(), "round {round}");
+        cache.get_or_compile(&mut rt, &key(0xA, "add"), compile_add(4096)).unwrap();
+        assert_eq!(cache.dram_bytes(), one_plan, "round {round}: A resident again");
+        assert_eq!(cache.dram_bytes(), cache.recomputed_dram_bytes(), "round {round}");
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses, 7, "every lookup misses at capacity 1");
+    assert_eq!(s.evictions, 6, "each recompile evicted the prior plan");
+
+    // A different-footprint plan: the tracked count follows it.
+    cache.get_or_compile(&mut rt, &key(0xC, "add"), compile_add(16 * 4096)).unwrap();
+    assert_ne!(cache.dram_bytes(), one_plan);
+    assert_eq!(cache.dram_bytes(), cache.recomputed_dram_bytes());
+
+    // Flush: residency zero, allocator back at its watermark.
+    cache.flush(&mut rt).unwrap();
+    assert_eq!(cache.dram_bytes(), 0);
+    assert_eq!(cache.recomputed_dram_bytes(), 0);
+    assert_eq!(rt.dram.used(), baseline_used, "flush must return every DRAM byte");
+}
+
+#[test]
+fn plan_keys_isolate_configs_weights_and_kinds() {
+    // Two single-conv graphs with identical params but different
+    // weights, plus a residual block for the ALU-op kinds.
+    let build = |wseed: u64| {
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+        let c = g.add("c", Op::Conv2d { p: conv_p(16, 16, false) }, &[x]).unwrap();
+        g.set_weights(c, rand_t(wseed, &[16, 16, 3, 3]));
+        g
+    };
+    let g1 = build(400);
+    let g2 = build(401);
+
+    let pynq = engine(4);
+    let mut wide_cfg = VtaConfig::pynq();
+    wide_cfg.uop_buf_bytes *= 2;
+    let wide = ServingEngine::new(&wide_cfg, 64 << 20, CpuBackend::Native, 2, 4);
+
+    // Same op + weights under different hardware variants → keys
+    // differ (a plan compiled for one variant is never replayed on
+    // another).
+    assert_ne!(pynq.plan_key(&g1, &g1.nodes[1]), wide.plan_key(&g1, &g1.nodes[1]));
+    // Same config + op, different weights → keys differ (weights
+    // are baked into the plan's DRAM image).
+    assert_ne!(pynq.plan_key(&g1, &g1.nodes[1]), pynq.plan_key(&g2, &g2.nodes[1]));
+    // Identical everything → same key (sharing is intended).
+    assert_eq!(pynq.plan_key(&g1, &g1.nodes[1]), pynq.plan_key(&g1, &g1.nodes[1]));
+
+    // Different op kinds over the same shape → different keys.
+    let rb = residual_block_graph();
+    let add = rb.nodes.iter().find(|n| n.op.kind() == "add").unwrap();
+    let relu = rb.nodes.iter().find(|n| n.op.kind() == "relu").unwrap();
+    let ka = pynq.plan_key(&rb, add);
+    let kr = pynq.plan_key(&rb, relu);
+    assert_ne!(ka, kr);
+    assert_eq!(ka.kind, "add");
+    assert_eq!(kr.kind, "relu");
+}
+
+/// Batched serving produces exactly the serial executor's outputs
+/// on a ResNet basic block — per request, bit-identical.
+#[test]
+fn batched_matches_sequential_executor_on_residual_block() {
+    let cfg = VtaConfig::pynq();
+    let mut g = residual_block_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+    let inputs: Vec<_> = (0..3).map(|i| rand_t(500 + i, &[1, 16, 8, 8])).collect();
+
+    let mut eng = engine(8);
+    let batch = eng.run_batch(&g, &inputs).unwrap();
+
+    for (i, input) in inputs.iter().enumerate() {
+        let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+        let expect = ex.run(&g, input).unwrap().output;
+        assert_eq!(batch.outputs[i], expect, "request {i} diverged from serial executor");
+    }
+
+    // The pipelined model can only help, and with both CPU and VTA
+    // work in flight across 3 requests it must strictly help
+    // (guarded on the CPU side having measurable duration, so a
+    // pathological zero-resolution clock can't flake the test).
+    assert!(batch.pipelined_seconds <= batch.serial_seconds + 1e-12);
+    let cpu_seconds: f64 = batch
+        .per_request
+        .iter()
+        .flatten()
+        .filter(|n| n.placement != Placement::Vta)
+        .map(|n| n.wall.as_secs_f64())
+        .sum();
+    if cpu_seconds > 0.0 {
+        assert!(
+            batch.pipelined_seconds < batch.serial_seconds,
+            "no overlap found: pipelined {} vs serial {}",
+            batch.pipelined_seconds,
+            batch.serial_seconds
+        );
+    }
+    assert!(batch.throughput() > 0.0);
+    assert!(batch.latency_percentile(0.99) >= batch.latency_percentile(0.50));
+}
+
+/// Op-generic caching: a graph with conv, add, relu, and dense all
+/// offloaded compiles each unique node exactly once and reuses
+/// every plan across the batch — the acceptance scenario of the
+/// operator-registry redesign.
+#[test]
+fn mixed_op_kinds_cache_and_match_serial_executor() {
+    let cfg = VtaConfig::pynq();
+    let mut g = mixed_op_graph();
+    let policy = PartitionPolicy::offload_all(&cfg);
+    let (vta_nodes, _) = partition(&mut g, &policy);
+    assert_eq!(vta_nodes, 5, "conv x2 + add + relu + dense offload");
+
+    let inputs: Vec<_> = (0..3).map(|i| rand_t(600 + i, &[1, 16, 8, 8])).collect();
+    let mut eng = engine(16);
+    let batch = eng.run_batch(&g, &inputs).unwrap();
+
+    // One compile per unique VTA node; every later lookup hits.
+    assert_eq!(batch.cache.misses, 5);
+    assert_eq!(batch.cache.hits, 10);
+    let kinds = eng.cached_kinds();
+    assert_eq!(kinds.get("conv2d"), Some(&2));
+    assert_eq!(kinds.get("add"), Some(&1));
+    assert_eq!(kinds.get("relu"), Some(&1));
+    assert_eq!(kinds.get("dense"), Some(&1));
+
+    // Bit-identical to the serial executor (which itself verifies
+    // against the CPU-only reference in the exec tests).
+    for (i, input) in inputs.iter().enumerate() {
+        let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+        let expect = ex.run(&g, input).unwrap().output;
+        assert_eq!(batch.outputs[i], expect, "request {i} diverged");
+    }
+
+    // Warm batch: pure replay across every op kind.
+    let warm = eng.run_batch(&g, &inputs).unwrap();
+    assert_eq!(warm.cache.misses, 0);
+    assert_eq!(warm.cache.hits, 15);
+}
+
+/// Eviction works across mixed op kinds: a cache smaller than the
+/// working set thrashes but stays correct.
+#[test]
+fn mixed_op_kinds_evict_and_stay_correct() {
+    let cfg = VtaConfig::pynq();
+    let mut g = mixed_op_graph();
+    partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    let input = rand_t(700, &[1, 16, 8, 8]);
+
+    let mut ex = Executor::new(VtaRuntime::new(&cfg, 64 << 20), CpuBackend::Native);
+    let expect = ex.run(&g, &input).unwrap().output;
+
+    let mut eng = engine(2);
+    let r1 = eng.run_one(&g, &input).unwrap();
+    let r2 = eng.run_one(&g, &input).unwrap();
+    assert_eq!(r1.output, expect);
+    assert_eq!(r2.output, expect, "eviction must not corrupt mixed-kind results");
+    let s = eng.cache_stats();
+    assert_eq!(s.misses, 10, "5 VTA nodes x 2 requests all miss at capacity 2");
+    assert!(s.evictions >= 8, "thrashing must evict: {s:?}");
+    assert!(eng.cached_plans() <= 2);
+}
+
+/// The schedule respects dependences: no request finishes before
+/// the sum of its critical-path durations, and completions are
+/// bounded by the makespan.
+#[test]
+fn pipeline_schedule_is_sane() {
+    let cfg = VtaConfig::pynq();
+    let mut g = residual_block_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+    let inputs: Vec<_> = (0..4).map(|i| rand_t(600 + i, &[1, 16, 8, 8])).collect();
+
+    let mut eng = engine(8);
+    let batch = eng.run_batch(&g, &inputs).unwrap();
+    let model = pipeline_schedule(&g, &batch.per_request);
+
+    assert_eq!(model.completion_seconds.len(), 4);
+    for (r, &c) in model.completion_seconds.iter().enumerate() {
+        assert!(c <= model.makespan_seconds + 1e-12);
+        // Completions are at least the request's own chain time on
+        // the critical path (here: the whole graph is one chain
+        // except the shortcut).
+        let own: f64 = batch.per_request[r]
+            .iter()
+            .map(|n| n.wall.as_secs_f64() + n.sim_seconds)
+            .sum();
+        assert!(c <= model.serial_seconds + 1e-12);
+        assert!(own > 0.0);
+    }
+    // Makespan is monotone in batch size: a prefix of requests
+    // cannot take longer than the full batch.
+    let prefix = pipeline_schedule(&g, &batch.per_request[..2]);
+    assert!(prefix.makespan_seconds <= model.makespan_seconds + 1e-12);
+}
+
+// ---------------------------------------------------------------------
+// Multi-device scheduler.
+// ---------------------------------------------------------------------
+
+fn scheduler(cfg: &VtaConfig, devices: usize, max_batch: usize, deadline: f64) -> Scheduler {
+    let opts = SchedulerOptions {
+        devices,
+        max_batch,
+        batch_deadline: deadline,
+        cache_capacity: 16,
+        virtual_threads: 2,
+        dram_size: 64 << 20,
+    };
+    Scheduler::new(cfg, CpuBackend::Native, opts)
+}
+
+/// The tentpole compile-once-per-pool property: a 3-replica pool
+/// serving a mixed-op graph compiles each unique plan exactly once
+/// (pool-level misses == unique keys, not devices × keys), replicas
+/// hold identical residency, and every output is bit-identical to the
+/// single-device engine.
+#[test]
+fn pool_compiles_once_and_matches_single_device_engine() {
+    let cfg = VtaConfig::pynq();
+    let mut g = mixed_op_graph();
+    partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    let inputs: Vec<_> = (0..6).map(|i| rand_t(900 + i, &[1, 16, 8, 8])).collect();
+
+    let mut eng = engine(16);
+    let expect = eng.run_batch(&g, &inputs).unwrap();
+
+    let mut sched = scheduler(&cfg, 3, 2, 0.0);
+    for input in &inputs {
+        sched.submit(0.0, input.clone());
+    }
+    let report = sched.run(&g).unwrap();
+
+    assert_eq!(report.outputs.len(), inputs.len());
+    for (i, out) in report.outputs.iter().enumerate() {
+        assert_eq!(out, &expect.outputs[i], "request {i} diverged from the engine");
+    }
+    // 5 unique VTA plans; the pool compiled each exactly once even
+    // though 3 replicas each need it resident.
+    assert_eq!(report.cache.misses, 5, "one compile per unique plan key per POOL");
+    assert_eq!(sched.cached_plans(), 5);
+    assert_eq!(sched.cache_dram_bytes(), eng.cache_dram_bytes(), "replica residency matches");
+
+    // 6 requests at t=0, max_batch 2 → 3 batches over 3 replicas: all
+    // replicas served work, and the modeled span beats one device
+    // doing the batches back to back.
+    assert_eq!(report.batches.len(), 3);
+    let used: std::collections::HashSet<usize> =
+        report.batches.iter().map(|b| b.device).collect();
+    assert_eq!(used.len(), 3, "least-loaded dispatch must spread 3 batches over 3 replicas");
+    let serial_sum: f64 = report.batches.iter().map(|b| b.finish - b.start).sum();
+    assert!(report.makespan_seconds < serial_sum, "pool must overlap batches in simulated time");
+
+    // Warm drain: no further compiles.
+    for input in &inputs {
+        sched.submit(0.0, input.clone());
+    }
+    let warm = sched.run(&g).unwrap();
+    assert_eq!(warm.cache.misses, 0, "warm pool drain must not re-lower");
+    for (i, out) in warm.outputs.iter().enumerate() {
+        assert_eq!(out, &expect.outputs[i], "warm request {i} diverged");
+    }
+}
+
+/// Dynamic batching: max_batch closes full batches, the simulated
+/// deadline splits sparse streams, and the final partial batch
+/// flushes at stream end.
+#[test]
+fn dynamic_batching_respects_max_batch_and_deadline() {
+    let cfg = VtaConfig::pynq();
+    let mut g = two_conv_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+
+    // Five requests at t = 0 with max_batch 2 → batches of 2/2/1.
+    let mut sched = scheduler(&cfg, 1, 2, 1.0);
+    for i in 0..5 {
+        sched.submit(0.0, rand_t(1000 + i, &[1, 16, 8, 8]));
+    }
+    let r = sched.run(&g).unwrap();
+    let sizes: Vec<usize> = r.batches.iter().map(|b| b.size).collect();
+    assert_eq!(sizes, vec![2, 2, 1]);
+    // The trailing partial batch flushes at stream end (t = 0), not
+    // after the full 1s deadline.
+    assert_eq!(r.batches[2].ready, 0.0);
+
+    // A sparse stream: the second request arrives past the first's
+    // deadline, so they cannot share a batch even with room to spare.
+    let mut sched = scheduler(&cfg, 1, 8, 0.5e-3);
+    sched.submit(0.0, rand_t(1100, &[1, 16, 8, 8]));
+    sched.submit(2e-3, rand_t(1101, &[1, 16, 8, 8]));
+    let r = sched.run(&g).unwrap();
+    assert_eq!(r.batches.len(), 2, "deadline must split the sparse stream");
+    assert_eq!(r.batches[0].size, 1);
+    // The first batch dispatched at its deadline, the second at
+    // stream end (its own arrival).
+    assert!((r.batches[0].ready - 0.5e-3).abs() < 1e-12);
+    assert!((r.batches[1].ready - 2e-3).abs() < 1e-12);
+    // Latencies account the batching wait: request 0 completed no
+    // earlier than its deadline.
+    assert!(r.completions[0] >= 0.5e-3);
+    // Queue depth counts *arrived* undispatched requests: request 1
+    // had not arrived when batch 0 dispatched, so the gauge never saw
+    // a backlog of 2.
+    assert_eq!(r.metrics.queue.max_depth(), 1, "not-yet-arrived requests must not count");
+}
+
+/// Throughput scales with pool size: the same request stream drains
+/// in no more simulated time on a larger pool, and the per-device
+/// utilization + queue metrics are sane.
+#[test]
+fn pool_scaling_is_monotone_and_metrics_are_sane() {
+    let cfg = VtaConfig::pynq();
+    let mut g = two_conv_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+    let inputs: Vec<_> = (0..8).map(|i| rand_t(1200 + i, &[1, 16, 8, 8])).collect();
+
+    let mut spans = Vec::new();
+    let mut all_outputs: Vec<Vec<Tensor<i8>>> = Vec::new();
+    for devices in [1usize, 2, 4] {
+        let mut sched = scheduler(&cfg, devices, 2, 0.0);
+        for input in &inputs {
+            sched.submit(0.0, input.clone());
+        }
+        let r = sched.run(&g).unwrap();
+        assert_eq!(r.device_busy.len(), devices);
+        assert_eq!(r.metrics.devices.len(), devices);
+        // Queue depth starts at the full backlog and is sampled at
+        // every dispatch.
+        assert_eq!(r.metrics.queue.max_depth(), inputs.len());
+        assert_eq!(r.metrics.queue.samples().len(), r.batches.len());
+        for d in 0..devices {
+            let u = r.utilization(d);
+            assert!((0.0..=1.0).contains(&u), "utilization out of range: {u}");
+            assert_eq!(r.metrics.devices[d].busy_seconds, r.device_busy[d]);
+        }
+        let served: u64 = r.metrics.devices.iter().map(|c| c.requests).sum();
+        assert_eq!(served, inputs.len() as u64);
+        assert!(r.latency_percentile(0.99) >= r.latency_percentile(0.50));
+        spans.push(r.makespan_seconds);
+        all_outputs.push(r.outputs);
+    }
+    // VTA-dominated spans shrink (weakly) as replicas are added; the
+    // 4-replica pool must strictly beat one device on 4 batches.
+    assert!(spans[1] <= spans[0] + 1e-9, "2 devices slower than 1: {spans:?}");
+    assert!(spans[2] <= spans[1] + 1e-9, "4 devices slower than 2: {spans:?}");
+    assert!(spans[2] < spans[0], "4 devices must beat 1 outright: {spans:?}");
+    // Pool size must never change results.
+    for outs in &all_outputs[1..] {
+        assert_eq!(outs, &all_outputs[0], "pool size changed outputs");
+    }
+}

@@ -31,10 +31,11 @@
 //! * [`exec`] — the graph executor that co-schedules VTA kernels on the
 //!   simulator and CPU-resident operators on XLA/PJRT executables compiled
 //!   ahead-of-time from JAX (see `python/compile/`).
-//! * [`exec::serve`] — the serving engine: a JIT compiled-plan cache
-//!   (compile-once/run-many lowering via [`compiler::compiled`]) and a
-//!   pipelined, batched front-end that overlaps CPU wall time with
-//!   simulated VTA time.
+//! * [`exec::serve`] — the serving runtime: a JIT compiled-plan cache
+//!   (compile-once/run-many lowering via [`compiler::compiled`]), a
+//!   pipelined, batched single-device engine, and a multi-device
+//!   scheduler (request queue, dynamic batching, least-loaded
+//!   dispatch) over a [`runtime::DevicePool`] of accelerator replicas.
 //! * [`metrics`] — roofline accounting: GOPS, arithmetic intensity,
 //!   utilization.
 //!

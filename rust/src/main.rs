@@ -14,15 +14,20 @@
 //!   requant epilogue) and verify the output against the CPU
 //!   reference bit-exactly.
 //! * `serve [--model resnet|style] [--batch N] [--vt N] [--cache N]
-//!   [--offload-all] [--records FILE] [--config FILE]` — serve a batch
-//!   of requests through the plan-caching, pipelined serving engine
-//!   (tuned schedules loaded from a `vta dse` record store) and print
-//!   the serial-vs-pipelined comparison.
+//!   [--devices N] [--max-batch N] [--batch-deadline MS]
+//!   [--require-scaling X] [--offload-all] [--records FILE]
+//!   [--config FILE]` — serve requests through the plan-caching,
+//!   pipelined serving engine (tuned schedules loaded from a `vta dse`
+//!   record store), print the serial-vs-pipelined comparison, then
+//!   drain the same traffic through the multi-device scheduler
+//!   (`--devices` replicas, dynamic batching) and self-verify the pool
+//!   outputs bit-exactly against the single-device engine.
 //! * `dse [--budget N] [--tune-trials N] [--seed N] [--top N]
-//!   [--workload tiny|resnet] [--records FILE]
+//!   [--devices N] [--workload tiny|resnet] [--records FILE]
 //!   [--require-improvement]` — design-space exploration: search
 //!   hardware variants under a Zynq-7020 resource budget plus
-//!   per-operator schedule tuning, report the frontier with roofline
+//!   per-operator schedule tuning — candidates scored at pool level
+//!   with `--devices` replicas — report the frontier with roofline
 //!   placement, persist the tuning records.
 //! * `table1` — print Table 1.
 //!
@@ -33,7 +38,7 @@ use std::process::ExitCode;
 use vta::arch::{load_config, VtaConfig};
 use vta::compiler::{lower_conv2d, pack_activations, pack_weights};
 use vta::dse::{run_dse, DseOptions, TuningRecords};
-use vta::exec::{CpuBackend, Executor, PjrtCache, ServingEngine};
+use vta::exec::{CpuBackend, Executor, PjrtCache, Scheduler, SchedulerOptions, ServingEngine};
 use vta::graph::resnet::{self, synth_input, TABLE1};
 use vta::graph::{fuse, partition, style, PartitionPolicy, Placement};
 use vta::metrics::Roofline;
@@ -57,6 +62,10 @@ struct Flags {
     pjrt: bool,
     batch: usize,
     cache: usize,
+    devices: usize,
+    max_batch: usize,
+    batch_deadline_ms: f64,
+    require_scaling: Option<f64>,
     offload_dense: bool,
     offload_alu: bool,
     offload_upsample: bool,
@@ -80,6 +89,10 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         pjrt: false,
         batch: 4,
         cache: 64,
+        devices: 1,
+        max_batch: 8,
+        batch_deadline_ms: 1.0,
+        require_scaling: None,
         offload_dense: false,
         offload_alu: false,
         offload_upsample: false,
@@ -124,6 +137,45 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     .get(i)
                     .ok_or_else(|| anyhow::anyhow!("--cache needs a plan count"))?
                     .parse()?;
+            }
+            "--devices" => {
+                i += 1;
+                f.devices = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--devices needs a replica count"))?
+                    .parse()?;
+                anyhow::ensure!(f.devices >= 1, "--devices needs at least 1, got {}", f.devices);
+            }
+            "--max-batch" => {
+                i += 1;
+                f.max_batch = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--max-batch needs a request count"))?
+                    .parse()?;
+                anyhow::ensure!(f.max_batch >= 1, "--max-batch needs at least 1");
+            }
+            "--batch-deadline" => {
+                i += 1;
+                f.batch_deadline_ms = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--batch-deadline needs simulated ms"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    f.batch_deadline_ms >= 0.0 && f.batch_deadline_ms.is_finite(),
+                    "--batch-deadline must be a finite non-negative simulated ms value"
+                );
+            }
+            "--require-scaling" => {
+                i += 1;
+                let x: f64 = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--require-scaling needs a factor"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    x > 0.0 && x.is_finite(),
+                    "--require-scaling must be a positive factor"
+                );
+                f.require_scaling = Some(x);
             }
             "--records" => {
                 i += 1;
@@ -240,6 +292,10 @@ fn print_usage() {
          \x20 --size N                  style: input resolution, multiple of 4 (default 32)\n\
          \x20 --batch N                 serve: requests per batch (default 4)\n\
          \x20 --cache N                 serve: plan-cache capacity in plans (default 64)\n\
+         \x20 --devices N               serve: accelerator replicas in the pool; dse: pool size candidates are scored for (default 1)\n\
+         \x20 --max-batch N             serve: dynamic-batching batch-size cap (default 8)\n\
+         \x20 --batch-deadline MS       serve: dynamic-batching deadline in simulated ms (default 1.0)\n\
+         \x20 --require-scaling X       serve: exit nonzero unless the pool models >= X x the 1-device throughput\n\
          \x20 --records FILE            serve: load tuned schedules; dse: persist them\n\
          \x20 --budget N                dse: hardware candidates to evaluate (default 16)\n\
          \x20 --tune-trials N           dse: schedule candidates per (config, op) (default 4)\n\
@@ -403,7 +459,7 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         CpuBackend::Native,
         flags.vt,
         flags.cache,
-        records,
+        records.clone(),
     );
     if engine.tuned_records() > 0 {
         let tuned_nodes = g
@@ -464,6 +520,98 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         warm.latency_percentile(0.90) * 1e3,
         warm.latency_percentile(0.99) * 1e3
     );
+
+    // ---- multi-device pool: the same model through the scheduler ------
+    // With N > 1 replicas, serve exactly N full dynamic batches
+    // (N x max_batch requests, all arriving at t = 0) so every replica
+    // has work and the 1-device comparison is well-conditioned; with
+    // one device, reuse the engine's batch size.
+    let pool_n = if flags.devices > 1 { flags.devices * flags.max_batch } else { flags.batch };
+    let pool_inputs: Vec<_> =
+        (0..pool_n).map(|i| synth_input(7 + i as u64, 1, 3, size, size)).collect();
+    let opts = SchedulerOptions {
+        devices: flags.devices,
+        max_batch: flags.max_batch,
+        batch_deadline: flags.batch_deadline_ms * 1e-3,
+        cache_capacity: flags.cache,
+        virtual_threads: flags.vt,
+        dram_size: 512 << 20,
+    };
+    let mut sched =
+        Scheduler::with_records(cfg, CpuBackend::Native, opts.clone(), records.clone());
+    for input in &pool_inputs {
+        sched.submit(0.0, input.clone());
+    }
+    let pool = sched.run(&g)?;
+    println!(
+        "\npool of {} device(s): {} requests in {} batch(es) (max-batch {}, deadline {} ms); \
+         plan-cache misses {} (compile-once per pool), makespan {:.1} ms, \
+         modeled throughput {:.1} inf/s",
+        flags.devices,
+        pool_n,
+        pool.batches.len(),
+        flags.max_batch,
+        flags.batch_deadline_ms,
+        pool.cache.misses,
+        pool.makespan_seconds * 1e3,
+        pool.throughput()
+    );
+    let utils: Vec<String> =
+        (0..flags.devices).map(|d| format!("d{d} {:.0}%", pool.utilization(d) * 100.0)).collect();
+    println!(
+        "per-device utilization: {}; queue depth max {} / mean {:.1}; \
+         latency p50 {:.1} ms, p99 {:.1} ms",
+        utils.join(", "),
+        pool.metrics.queue.max_depth(),
+        pool.metrics.queue.mean_depth(),
+        pool.latency_percentile(0.50) * 1e3,
+        pool.latency_percentile(0.99) * 1e3
+    );
+
+    // Self-verification, part 1: pool requests share the engine's synth
+    // seeds, so every overlapping request must match the single-device
+    // engine bit-exactly.
+    for (i, out) in pool.outputs.iter().take(warm.outputs.len()).enumerate() {
+        anyhow::ensure!(
+            out == &warm.outputs[i],
+            "pool output {i} diverged from the single-device engine"
+        );
+    }
+
+    if flags.devices > 1 {
+        // Self-verification, part 2: drain the identical request stream
+        // through a 1-replica pool — outputs must be bit-identical and
+        // the modeled makespan gives the device-scaling factor.
+        let mut base_opts = opts;
+        base_opts.devices = 1;
+        let mut base = Scheduler::with_records(cfg, CpuBackend::Native, base_opts, records);
+        for input in &pool_inputs {
+            base.submit(0.0, input.clone());
+        }
+        let one = base.run(&g)?;
+        for (i, out) in one.outputs.iter().enumerate() {
+            anyhow::ensure!(out == &pool.outputs[i], "pool size changed outputs (request {i})");
+        }
+        let scaling = one.makespan_seconds / pool.makespan_seconds.max(1e-12);
+        println!(
+            "device scaling: 1-device makespan {:.1} ms -> {}-device {:.1} ms \
+             ({:.2}x modeled throughput)",
+            one.makespan_seconds * 1e3,
+            flags.devices,
+            pool.makespan_seconds * 1e3,
+            scaling
+        );
+        println!("pool outputs match the single-device engine bit-exactly");
+        if let Some(need) = flags.require_scaling {
+            anyhow::ensure!(
+                scaling >= need,
+                "pool scaling {scaling:.2}x is below the required {need:.2}x"
+            );
+            println!("scaling gate passed: {scaling:.2}x >= {need:.2}x");
+        }
+    } else if let Some(need) = flags.require_scaling {
+        anyhow::bail!("--require-scaling {need} needs --devices > 1");
+    }
     Ok(())
 }
 
@@ -476,13 +624,15 @@ fn cmd_dse(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     let workloads = vta::dse::suite(&flags.workload)?;
     let names: Vec<&str> = workloads.iter().map(|w| w.name()).collect();
     println!(
-        "DSE: budget {} candidates, {} tune trials/op, vt={}, seed {}, suite {:?} ({})",
+        "DSE: budget {} candidates, {} tune trials/op, vt={}, seed {}, suite {:?} ({}), \
+         scored for a pool of {} device(s)",
         flags.budget,
         flags.tune_trials,
         flags.vt,
         flags.seed,
         flags.workload,
-        names.join(", ")
+        names.join(", "),
+        flags.devices
     );
     let mut opts = DseOptions::new(workloads);
     opts.baseline = cfg.clone();
@@ -491,6 +641,7 @@ fn cmd_dse(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     opts.virtual_threads = flags.vt;
     opts.seed = flags.seed;
     opts.top_k = flags.top;
+    opts.pool_devices = flags.devices;
 
     let t0 = std::time::Instant::now();
     let report = run_dse(&opts)?;
@@ -508,6 +659,13 @@ fn cmd_dse(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         base.cfg.clock_hz / 1e6,
         base.total_cycles
     );
+    if flags.devices > 1 {
+        println!(
+            "pool objective ({} devices, least-loaded): baseline makespan {} cycles; \
+             candidates rank by pool makespan",
+            flags.devices, base.pool_cycles
+        );
+    }
     println!(
         "{:<4} {:>9} {:>14} {:>8} {:>22} {:>8} {:>6} {:>7}",
         "rank", "gemm", "total cycles", "vs base", "buffers i/w/a/o/u kB", "bram18", "dsp", "tuned"
@@ -576,9 +734,9 @@ fn cmd_dse(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
 
     if flags.require_improvement && !report.improved() {
         anyhow::bail!(
-            "no candidate matched the baseline: best {} > baseline {}",
-            report.best().total_cycles,
-            report.baseline.total_cycles
+            "no candidate matched the baseline: best pool makespan {} > baseline {}",
+            report.best().pool_cycles,
+            report.baseline.pool_cycles
         );
     }
     Ok(())

@@ -1,9 +1,16 @@
-//! Roofline accounting (§5, Fig 15).
+//! Roofline accounting (§5, Fig 15) and serving-runtime counters.
 //!
 //! The roofline model bounds attainable throughput by
 //! `min(peak_compute, bandwidth x arithmetic_intensity)`. The paper
 //! plots each ResNet conv layer's measured GOPS against this envelope,
 //! with and without latency hiding.
+//!
+//! The pool counters ([`PoolMetrics`], [`QueueDepthGauge`],
+//! [`DeviceCounter`]) are the observability side of the multi-device
+//! serving runtime: the scheduler ([`crate::exec::serve::Scheduler`])
+//! samples queue depth at every dispatch and accounts per-device busy
+//! time, batches, requests, and simulated cycles, so pool utilization
+//! and queueing behavior are first-class outputs, not log grep.
 
 use crate::arch::VtaConfig;
 use crate::sim::SimStats;
@@ -79,6 +86,107 @@ impl Roofline {
     }
 }
 
+// ---------------------------------------------------------------------
+// Serving-pool counters.
+// ---------------------------------------------------------------------
+
+/// Queue-depth gauge: `(simulated time, waiting requests)` samples
+/// recorded by the scheduler at every batch dispatch, in
+/// non-decreasing time order.
+#[derive(Clone, Debug, Default)]
+pub struct QueueDepthGauge {
+    samples: Vec<(f64, usize)>,
+}
+
+impl QueueDepthGauge {
+    /// Record the queue depth observed at simulated time `t`.
+    pub fn record(&mut self, t: f64, depth: usize) {
+        self.samples.push((t, depth));
+    }
+
+    /// The raw samples, in record order.
+    pub fn samples(&self) -> &[(f64, usize)] {
+        &self.samples
+    }
+
+    /// Deepest observed queue.
+    pub fn max_depth(&self) -> usize {
+        self.samples.iter().map(|&(_, d)| d).max().unwrap_or(0)
+    }
+
+    /// Time-weighted mean depth over the observation window: between
+    /// consecutive samples the depth is the earlier sample's. Falls
+    /// back to the plain mean when the window is degenerate (fewer
+    /// than two samples, or zero elapsed time).
+    pub fn mean_depth(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let span = self.samples.last().unwrap().0 - self.samples[0].0;
+        if self.samples.len() < 2 || span <= 0.0 {
+            let sum: usize = self.samples.iter().map(|&(_, d)| d).sum();
+            return sum as f64 / self.samples.len() as f64;
+        }
+        let mut weighted = 0.0;
+        for w in self.samples.windows(2) {
+            weighted += w[0].1 as f64 * (w[1].0 - w[0].0);
+        }
+        weighted / span
+    }
+}
+
+/// Per-device counters accumulated by the scheduler.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceCounter {
+    /// Simulated seconds this device spent serving batches.
+    pub busy_seconds: f64,
+    /// Batches dispatched to this device.
+    pub batches: u64,
+    /// Requests served by this device.
+    pub requests: u64,
+    /// Total simulated accelerator cycles executed on this device.
+    pub sim_cycles: u64,
+}
+
+impl DeviceCounter {
+    /// Account one dispatched batch.
+    pub fn record_batch(&mut self, requests: usize, busy_seconds: f64, sim_cycles: u64) {
+        self.busy_seconds += busy_seconds;
+        self.batches += 1;
+        self.requests += requests as u64;
+        self.sim_cycles += sim_cycles;
+    }
+
+    /// Busy fraction of an observation span (clamped to [0, 1]).
+    pub fn utilization(&self, span_seconds: f64) -> f64 {
+        if span_seconds <= 0.0 {
+            0.0
+        } else {
+            (self.busy_seconds / span_seconds).min(1.0)
+        }
+    }
+}
+
+/// The scheduler's exported counters: one queue gauge plus one
+/// [`DeviceCounter`] per pool replica.
+#[derive(Clone, Debug, Default)]
+pub struct PoolMetrics {
+    /// Queue depth sampled at every dispatch.
+    pub queue: QueueDepthGauge,
+    /// Per-device counters, indexed by replica.
+    pub devices: Vec<DeviceCounter>,
+}
+
+impl PoolMetrics {
+    /// Fresh counters for a pool of `devices` replicas.
+    pub fn new(devices: usize) -> Self {
+        PoolMetrics {
+            queue: QueueDepthGauge::default(),
+            devices: vec![DeviceCounter::default(); devices],
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +216,45 @@ mod tests {
         assert!((pt.gops - 25.6).abs() < 1e-9);
         assert!((pt.efficiency - 0.5).abs() < 1e-9);
         assert!((pt.utilization - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_depth_gauge_max_and_time_weighted_mean() {
+        let mut q = QueueDepthGauge::default();
+        assert_eq!(q.max_depth(), 0);
+        assert_eq!(q.mean_depth(), 0.0);
+
+        // Depth 4 for 1s, depth 2 for 3s, final sample closes the
+        // window: mean = (4·1 + 2·3) / 4 = 2.5.
+        q.record(0.0, 4);
+        q.record(1.0, 2);
+        q.record(4.0, 0);
+        assert_eq!(q.max_depth(), 4);
+        assert!((q.mean_depth() - 2.5).abs() < 1e-12);
+        assert_eq!(q.samples().len(), 3);
+
+        // Degenerate window (all samples at one instant): plain mean.
+        let mut flat = QueueDepthGauge::default();
+        flat.record(0.0, 3);
+        flat.record(0.0, 1);
+        assert_eq!(flat.max_depth(), 3);
+        assert!((flat.mean_depth() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_counters_accumulate_and_bound_utilization() {
+        let mut m = PoolMetrics::new(2);
+        m.devices[0].record_batch(4, 0.5, 1000);
+        m.devices[0].record_batch(2, 0.25, 500);
+        m.devices[1].record_batch(1, 0.1, 100);
+        assert_eq!(m.devices[0].batches, 2);
+        assert_eq!(m.devices[0].requests, 6);
+        assert_eq!(m.devices[0].sim_cycles, 1500);
+        assert!((m.devices[0].busy_seconds - 0.75).abs() < 1e-12);
+        // Utilization over a 1s span; clamped at 1, zero-span safe.
+        assert!((m.devices[0].utilization(1.0) - 0.75).abs() < 1e-12);
+        assert!((m.devices[1].utilization(1.0) - 0.1).abs() < 1e-12);
+        assert_eq!(m.devices[0].utilization(0.0), 0.0);
+        assert_eq!(m.devices[0].utilization(0.5), 1.0);
     }
 }

@@ -13,15 +13,20 @@
 //! * [`CommandContext::synchronize`] — `VTASynchronize`: finalize the
 //!   stream (FINISH sentinel), hand off to the device, wait for
 //!   completion.
+//! * [`DevicePool`] — N independent runtime replicas of one variant:
+//!   the substrate of the multi-device serving runtime
+//!   ([`crate::exec::serve`]).
 
 mod alloc;
 mod command;
 mod device;
+mod pool;
 mod uop_kernel;
 
 pub use alloc::{AllocError, FreeListAllocator};
 pub use command::{CommandContext, CoreModule, RuntimeError, SealedStream, VtaRuntime};
 pub use device::{Device, SimDevice};
+pub use pool::DevicePool;
 pub use uop_kernel::{UopCache, UopError, UopKernel, UopKernelBuilder};
 
 /// A DRAM buffer handle returned by the allocator: physically

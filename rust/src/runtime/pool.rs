@@ -1,0 +1,76 @@
+//! The device pool: N independent accelerator replicas of one
+//! `VtaConfig`, each a full [`VtaRuntime`] (own simulator, own DRAM,
+//! own command context) — the hardware substrate of the multi-device
+//! serving runtime in [`crate::exec::serve`].
+//!
+//! Replicas are *identical by construction*: same config, same DRAM
+//! size, same fresh allocator state. The serving layer exploits that
+//! to compile a plan **once per pool** and byte-replicate it
+//! ([`crate::compiler::CompiledNode::replicate_to`]) onto every other
+//! replica — provided it drives every replica's allocator through the
+//! same allocation/eviction sequence, which the pool-lockstep plan
+//! caches guarantee. The pool itself is policy-free: it owns the
+//! replicas and hands out disjoint mutable borrows; queueing,
+//! batching, and dispatch live in the scheduler.
+
+use super::VtaRuntime;
+use crate::arch::VtaConfig;
+
+/// N independent `SimDevice` + `VtaRuntime` replicas of one hardware
+/// variant.
+pub struct DevicePool {
+    cfg: VtaConfig,
+    replicas: Vec<VtaRuntime>,
+}
+
+impl DevicePool {
+    /// Build `devices` fresh replicas of `cfg`, each with `dram_size`
+    /// bytes of device DRAM.
+    pub fn new(cfg: &VtaConfig, dram_size: usize, devices: usize) -> Self {
+        assert!(devices >= 1, "a device pool needs at least one replica");
+        DevicePool {
+            cfg: cfg.clone(),
+            replicas: (0..devices).map(|_| VtaRuntime::new(cfg, dram_size)).collect(),
+        }
+    }
+
+    /// The hardware variant every replica implements.
+    pub fn config(&self) -> &VtaConfig {
+        &self.cfg
+    }
+
+    /// Number of replicas.
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Always false (construction requires at least one replica); here
+    /// for the conventional `len`/`is_empty` pair.
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Mutable access to replica `i`.
+    pub fn device_mut(&mut self, i: usize) -> &mut VtaRuntime {
+        &mut self.replicas[i]
+    }
+
+    /// Mutable access to every replica (lockstep cache maintenance).
+    pub fn devices_mut(&mut self) -> &mut [VtaRuntime] {
+        &mut self.replicas
+    }
+
+    /// Disjoint mutable borrows of replicas `a` and `b` (`a != b`) —
+    /// the plan-replication path reads source DRAM while writing the
+    /// destination.
+    pub fn pair_mut(&mut self, a: usize, b: usize) -> (&mut VtaRuntime, &mut VtaRuntime) {
+        assert_ne!(a, b, "pair_mut needs two distinct replicas");
+        if a < b {
+            let (lo, hi) = self.replicas.split_at_mut(b);
+            (&mut lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = self.replicas.split_at_mut(a);
+            (&mut hi[0], &mut lo[b])
+        }
+    }
+}

@@ -6,7 +6,7 @@ mod stats;
 mod tensor;
 
 pub use rng::XorShiftRng;
-pub use stats::BenchStats;
+pub use stats::{percentile_rank, percentile_sorted, BenchStats};
 pub use tensor::{Tensor, TensorError};
 
 #[cfg(test)]

@@ -3,6 +3,42 @@
 
 use std::time::{Duration, Instant};
 
+/// Fractional-rank decomposition of percentile `p` ∈ [0, 1] over `n`
+/// sorted samples: the NIST / numpy `linear` method places percentile
+/// `p` at rank `p * (n - 1)` and interpolates between the two closest
+/// ranks. Returns `(lo, hi, frac)` with the interpolated value being
+/// `sample[lo] + (sample[hi] - sample[lo]) * frac`, or `None` with no
+/// samples; with one sample every percentile is that sample
+/// (`lo == hi == 0`). Out-of-range `p` clamps.
+///
+/// This is the **one** percentile implementation in the codebase:
+/// [`BenchStats::percentile`] and the serving-layer latency reports
+/// ([`crate::exec::serve`]) both delegate here, so the bench harness
+/// and the serving engine can never disagree about what "p99" means.
+pub fn percentile_rank(n: usize, p: f64) -> Option<(usize, usize, f64)> {
+    if n == 0 {
+        return None;
+    }
+    let p = p.clamp(0.0, 1.0);
+    let rank = p * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = (rank.ceil() as usize).min(n - 1);
+    Some((lo, hi, rank - lo as f64))
+}
+
+/// Interpolating percentile over pre-sorted ascending `f64` samples
+/// (see [`percentile_rank`]). Returns zero with no samples.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    match percentile_rank(sorted.len(), p) {
+        None => 0.0,
+        Some((lo, hi, frac)) => {
+            let a = sorted[lo];
+            let b = sorted[hi];
+            a + (b - a) * frac
+        }
+    }
+}
+
 /// Collects wall-clock samples of a closure and reports robust summary
 /// statistics (median / mean / min / p95 / p99).
 ///
@@ -42,21 +78,15 @@ impl BenchStats {
     }
 
     /// Percentile `p` ∈ [0, 1] with linear interpolation between
-    /// closest ranks (the NIST / numpy `linear` method): the value at
-    /// fractional rank `p * (n - 1)`. Returns zero with no samples;
-    /// with one sample every percentile is that sample.
+    /// closest ranks — the shared [`percentile_rank`] decomposition.
+    /// Returns zero with no samples; with one sample every percentile
+    /// is that sample.
     pub fn percentile(&self, p: f64) -> Duration {
-        let n = self.samples_ns.len();
-        if n == 0 {
+        let Some((lo, hi, frac)) = percentile_rank(self.samples_ns.len(), p) else {
             return Duration::ZERO;
-        }
-        let p = p.clamp(0.0, 1.0);
-        let rank = p * (n - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        let frac = rank - lo as f64;
+        };
         let a = self.samples_ns[lo] as f64;
-        let b = self.samples_ns[hi.min(n - 1)] as f64;
+        let b = self.samples_ns[hi] as f64;
         Duration::from_nanos((a + (b - a) * frac).round() as u64)
     }
 

@@ -70,6 +70,54 @@ fn tensor_reshape() {
 }
 
 #[test]
+fn percentile_sorted_handles_empty_and_single_sample() {
+    // Empty: every percentile is zero (and `percentile_rank` reports
+    // the degenerate case explicitly).
+    assert_eq!(percentile_rank(0, 0.5), None);
+    assert_eq!(percentile_sorted(&[], 0.0), 0.0);
+    assert_eq!(percentile_sorted(&[], 0.5), 0.0);
+    assert_eq!(percentile_sorted(&[], 1.0), 0.0);
+    // Single sample: every percentile is that sample.
+    assert_eq!(percentile_rank(1, 0.99), Some((0, 0, 0.0)));
+    for p in [0.0, 0.25, 0.5, 0.99, 1.0] {
+        assert_eq!(percentile_sorted(&[7.5], p), 7.5, "p={p}");
+    }
+}
+
+#[test]
+fn percentile_sorted_interpolates_and_clamps() {
+    let s = [0.0, 100.0, 200.0, 300.0];
+    // n=4: rank = p * 3. p=0.5 → rank 1.5 → midpoint of 100 and 200.
+    assert_eq!(percentile_sorted(&s, 0.5), 150.0);
+    // Exact rank hits the sample.
+    assert_eq!(percentile_sorted(&s, 1.0 / 3.0), 100.0);
+    // Endpoints exact; out-of-range p clamps.
+    assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+    assert_eq!(percentile_sorted(&s, 1.0), 300.0);
+    assert_eq!(percentile_sorted(&s, -1.0), 0.0);
+    assert_eq!(percentile_sorted(&s, 2.0), 300.0);
+}
+
+#[test]
+fn bench_stats_and_percentile_sorted_agree() {
+    // One interpolating implementation: the Duration-typed BenchStats
+    // view and the f64 view must report identical percentiles.
+    let ns: Vec<u128> = vec![10_000, 20_000, 30_000, 40_000, 70_000];
+    let mut s = BenchStats::default();
+    for &v in &ns {
+        s.push_ns(v);
+    }
+    let f: Vec<f64> = ns.iter().map(|&v| v as f64).collect();
+    for p in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+        assert_eq!(
+            s.percentile(p).as_nanos() as f64,
+            percentile_sorted(&f, p).round(),
+            "p={p}"
+        );
+    }
+}
+
+#[test]
 fn bench_stats_basic() {
     let mut s = BenchStats::default();
     for ns in [10u128, 20, 30, 40, 50] {

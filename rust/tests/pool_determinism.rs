@@ -1,0 +1,123 @@
+//! Multi-device determinism: a pool of 1 / 2 / 4 accelerator replicas
+//! driven by the dynamic-batching [`Scheduler`] must produce outputs
+//! **bit-exact** with the single-device [`ServingEngine`] — on a
+//! resnet-family graph and the style-transfer graph, across
+//! virtual-thread modes (vt = 1 / 2) and partition policies (paper
+//! conv-only rule vs offload-all). Execution is exact in this stack;
+//! only the timing is modeled — pool size must never leak into
+//! results.
+
+use vta::arch::VtaConfig;
+use vta::compiler::{Conv2dParams, MatmulParams, Requant};
+use vta::exec::{CpuBackend, Scheduler, SchedulerOptions, ServingEngine};
+use vta::graph::style::style_net;
+use vta::graph::{partition, Graph, Op, PartitionPolicy};
+use vta::util::{Tensor, XorShiftRng};
+
+fn rand_t(seed: u64, shape: &[usize]) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(shape, rng.vec_i8(shape.iter().product(), -8, 8)).unwrap()
+}
+
+fn conv_p(h: usize, ic: usize, oc: usize, relu: bool) -> Conv2dParams {
+    Conv2dParams { h, w: h, ic, oc, k: 3, s: 1, requant: Requant { shift: 6, relu } }
+}
+
+/// A miniature ResNet: conv stem, two residual basic blocks, global
+/// average pooling, dense classifier — the ResNet-18 topology at test
+/// scale (16x16 input, 16 channels), deterministic in its weight seed.
+fn mini_resnet(wseed: u64) -> Graph {
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 3, 16, 16] }, &[]).unwrap();
+    let stem = g.add("stem", Op::Conv2d { p: conv_p(16, 3, 16, true) }, &[x]).unwrap();
+    g.set_weights(stem, rand_t(wseed, &[16, 3, 3, 3]));
+    let mut cur = stem;
+    for b in 0u64..2 {
+        let c1 = g
+            .add(&format!("b{b}c1"), Op::Conv2d { p: conv_p(16, 16, 16, true) }, &[cur])
+            .unwrap();
+        g.set_weights(c1, rand_t(wseed + 10 + b * 2, &[16, 16, 3, 3]));
+        let c2 = g
+            .add(&format!("b{b}c2"), Op::Conv2d { p: conv_p(16, 16, 16, false) }, &[c1])
+            .unwrap();
+        g.set_weights(c2, rand_t(wseed + 11 + b * 2, &[16, 16, 3, 3]));
+        let add = g.add(&format!("b{b}add"), Op::Add, &[c2, cur]).unwrap();
+        cur = g.add(&format!("b{b}relu"), Op::Relu, &[add]).unwrap();
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, &[cur]).unwrap();
+    let p = MatmulParams { m: 1, k: 16, n: 10, requant: Requant { shift: 2, relu: false } };
+    let fc = g.add("fc", Op::Dense { p }, &[gap]).unwrap();
+    g.set_weights(fc, rand_t(wseed + 99, &[10, 16]));
+    g
+}
+
+/// The shared matrix: for every (vt, policy) cell, serve the same
+/// 6-request stream through the single-device engine (the reference)
+/// and through pools of 1 / 2 / 4 replicas; every output must be
+/// bit-identical, and the pool must have compiled each plan exactly
+/// once.
+fn check_pool_determinism<F: Fn() -> Graph>(name: &str, build: F, size: usize) {
+    let cfg = VtaConfig::pynq();
+    let inputs: Vec<_> = (0..6).map(|i| rand_t(3000 + i as u64, &[1, 3, size, size])).collect();
+    for vt in [1usize, 2] {
+        for offload_all in [false, true] {
+            let mut g = build();
+            let mut policy = if offload_all {
+                PartitionPolicy::offload_all(&cfg)
+            } else {
+                PartitionPolicy::paper(&cfg)
+            };
+            policy.virtual_threads = vt;
+            let (vta_nodes, _) = partition(&mut g, &policy);
+            assert!(vta_nodes > 0, "{name} vt={vt} offload_all={offload_all}: nothing offloaded");
+
+            // Single-device engine: the reference behavior.
+            let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, vt, 64);
+            let batch = eng.run_batch(&g, &inputs).unwrap();
+            let expect = batch.outputs;
+            let unique_plans = batch.cache.misses;
+
+            for devices in [1usize, 2, 4] {
+                let opts = SchedulerOptions {
+                    devices,
+                    max_batch: 2,
+                    batch_deadline: 0.0,
+                    cache_capacity: 64,
+                    virtual_threads: vt,
+                    dram_size: 256 << 20,
+                };
+                let mut sched = Scheduler::new(&cfg, CpuBackend::Native, opts);
+                for input in &inputs {
+                    sched.submit(0.0, input.clone());
+                }
+                let r = sched.run(&g).unwrap();
+                assert_eq!(r.outputs.len(), inputs.len());
+                for (i, out) in r.outputs.iter().enumerate() {
+                    assert_eq!(
+                        out, &expect[i],
+                        "{name} vt={vt} offload_all={offload_all} devices={devices}: \
+                         request {i} diverged from the single-device engine"
+                    );
+                }
+                // The shared compile-once path: pool-level misses equal
+                // the engine's unique-plan count, independent of pool
+                // size.
+                assert_eq!(
+                    r.cache.misses, unique_plans,
+                    "{name} vt={vt} offload_all={offload_all} devices={devices}: \
+                     pool must compile each plan exactly once"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn resnet_pool_outputs_are_bit_exact_across_pool_sizes() {
+    check_pool_determinism("mini-resnet", || mini_resnet(7), 16);
+}
+
+#[test]
+fn style_pool_outputs_are_bit_exact_across_pool_sizes() {
+    check_pool_determinism("style", || style_net(1, 16, 16, 42).unwrap(), 16);
+}
