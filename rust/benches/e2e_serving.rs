@@ -1,6 +1,8 @@
-//! Bench: end-to-end ResNet-18 *serving* — the naive per-node serial
-//! executor (re-lowers every VTA node on every inference) against the
-//! batched, pipelined serving engine with a warm plan cache.
+//! Bench: end-to-end *serving* — the naive per-node serial executor
+//! (re-lowers every VTA node on every inference) against the batched,
+//! pipelined serving engine with a warm plan cache, the simulated
+//! multi-device scheduler, and the real-threads pool under open-loop
+//! load.
 //!
 //! Reports the two costs separately:
 //!
@@ -11,11 +13,30 @@
 //!   accounting; the pipelined schedule overlaps the two across
 //!   requests (double-buffered), the serial baseline does not.
 //!
-//! Run: `cargo bench --bench e2e_serving [-- --batch N]`
+//! The threaded section measures *real* wall-clock concurrency: the
+//! style trace through 1/2/4 worker threads (each run self-verified
+//! bit-exactly against the simulated scheduler oracle, cache counters
+//! included) and an open-loop Poisson ramp with per-step latency
+//! percentiles and SLO attainment.
+//!
+//! Run: `cargo bench --bench e2e_serving [-- --batch N] [--fast]
+//!       [--json PATH] [--check BASELINE]`
+//!
+//! `--fast` skips the ResNet-18 sections (CI speed); `--json` writes
+//! the serving snapshot (`BENCH_serving.json` schema); `--check` diffs
+//! the snapshot against a committed baseline — deterministic fields
+//! must match exactly (a `null` baseline field is unpinned: reported,
+//! not enforced), measured fields are schema-checked only.
 
 use std::time::Instant;
 use vta::arch::VtaConfig;
-use vta::exec::{CpuBackend, Executor, Scheduler, SchedulerOptions, ServingEngine};
+use vta::dse::records::json::{self, Value};
+use vta::dse::TuningRecords;
+use vta::exec::serve::fnv1a64;
+use vta::exec::{
+    open_loop, serve_trace, CpuBackend, Executor, LoadgenOptions, Scheduler, SchedulerOptions,
+    ServingEngine, ThreadedOptions, ThreadedReport,
+};
 use vta::graph::resnet::{self, synth_input};
 use vta::graph::{fuse, partition, style, Graph, PartitionPolicy};
 use vta::runtime::VtaRuntime;
@@ -80,23 +101,19 @@ fn device_sweep(
     }
 }
 
-fn main() {
-    let batch: usize = std::env::args()
-        .skip_while(|a| a != "--batch")
-        .nth(1)
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(4);
-
-    let cfg = VtaConfig::pynq();
+/// The ResNet-18 sections: naive serial vs cached/pipelined engine,
+/// the widened offload boundary, and the resnet device sweep. Skipped
+/// under `--fast` (CI runs the style + threaded sections only).
+fn resnet_sections(cfg: &VtaConfig, batch: usize) {
     let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap());
-    let (vta_nodes, cpu_nodes) = partition(&mut g, &PartitionPolicy::paper(&cfg));
+    let (vta_nodes, cpu_nodes) = partition(&mut g, &PartitionPolicy::paper(cfg));
     let inputs: Vec<_> = (0..batch).map(|i| synth_input(7 + i as u64, 1, 3, 224, 224)).collect();
     println!(
         "# e2e serving: ResNet-18, batch {batch}, {vta_nodes} VTA nodes, {cpu_nodes} CPU nodes\n"
     );
 
     // ---- naive serial baseline: Executor per request ------------------
-    let mut ex = Executor::new(VtaRuntime::new(&cfg, 512 << 20), CpuBackend::Native);
+    let mut ex = Executor::new(VtaRuntime::new(cfg, 512 << 20), CpuBackend::Native);
     let t0 = Instant::now();
     let mut naive_outputs = Vec::new();
     let mut naive_model = 0.0;
@@ -114,7 +131,7 @@ fn main() {
     );
 
     // ---- serving engine: cold batch (compiles), warm batch (replays) --
-    let mut engine = ServingEngine::new(&cfg, 512 << 20, CpuBackend::Native, 2, 64);
+    let mut engine = ServingEngine::new(cfg, 512 << 20, CpuBackend::Native, 2, 64);
     let t0 = Instant::now();
     let cold = engine.run_batch(&g, &inputs).unwrap();
     let cold_wall = t0.elapsed();
@@ -165,12 +182,12 @@ fn main() {
 
     // ---- op-generic offload: dense + ALU ops join the conv plans ------
     let (mut g2, _) = fuse(resnet::resnet18(1, 42).unwrap());
-    let (vta2, cpu2) = partition(&mut g2, &PartitionPolicy::offload_all(&cfg));
+    let (vta2, cpu2) = partition(&mut g2, &PartitionPolicy::offload_all(cfg));
     println!(
         "\n# offload-all policy (conv + dense + residual adds / ReLUs): \
          {vta2} VTA nodes, {cpu2} CPU nodes"
     );
-    let mut engine2 = ServingEngine::new(&cfg, 512 << 20, CpuBackend::Native, 2, 64);
+    let mut engine2 = ServingEngine::new(cfg, 512 << 20, CpuBackend::Native, 2, 64);
     let t0 = Instant::now();
     let cold2 = engine2.run_batch(&g2, &inputs).unwrap();
     let cold2_wall = t0.elapsed();
@@ -198,6 +215,43 @@ fn main() {
         warm2.pipelined_seconds * 1e3,
         warm2.speedup()
     );
+
+    // ---- device-scaling sweep: the multi-device scheduler -------------
+    println!(
+        "\n# resnet device-scaling sweep: 4 requests through pools of 1/2/4 replicas \
+         (compile-once per pool, least-loaded dispatch)"
+    );
+    println!(
+        "{:<8} {:>8} {:>13} {:>17} {:>8} {:>8}  util/device",
+        "model", "devices", "makespan ms", "throughput inf/s", "misses", "batches"
+    );
+    device_sweep(cfg, "resnet", &g, 7, 224, &warm.outputs);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let batch: usize = argv
+        .iter()
+        .position(|a| a == "--batch")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let fast = argv.iter().any(|a| a == "--fast");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let check_path = argv
+        .iter()
+        .position(|a| a == "--check")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+
+    let cfg = VtaConfig::pynq();
+    if !fast {
+        resnet_sections(&cfg, batch);
+    }
 
     // ---- style-transfer workload: the second end-to-end scenario ------
     let (mut gs, _) = fuse(style::style_transfer(1, 42).unwrap());
@@ -244,15 +298,276 @@ fn main() {
         warm3.throughput()
     );
 
-    // ---- device-scaling sweep: the multi-device scheduler -------------
-    println!(
-        "\n# device-scaling sweep: 4 requests through pools of 1/2/4 replicas \
-         (compile-once per pool, least-loaded dispatch)"
-    );
+    println!("\n# style device-scaling sweep: 4 requests through pools of 1/2/4 replicas");
     println!(
         "{:<8} {:>8} {:>13} {:>17} {:>8} {:>8}  util/device",
         "model", "devices", "makespan ms", "throughput inf/s", "misses", "batches"
     );
-    device_sweep(&cfg, "resnet", &g, 7, 224, &warm.outputs);
     device_sweep(&cfg, "style", &gs, 50, 32, &warm3.outputs);
+
+    // ---- real threads: the style trace through 1/2/4 workers ----------
+    // Oracle: the simulated scheduler drains the identical trace; every
+    // threaded run must reproduce its outputs bit-exactly and land on
+    // the same pool-level cache counters.
+    let records = TuningRecords::new();
+    let oracle_opts = SchedulerOptions {
+        devices: 1,
+        max_batch: 2,
+        batch_deadline: 0.0,
+        cache_capacity: 64,
+        virtual_threads: 2,
+        dram_size: 256 << 20,
+    };
+    let mut sched = Scheduler::new(&cfg, CpuBackend::Native, oracle_opts);
+    for input in &style_inputs {
+        sched.submit(0.0, input.clone());
+    }
+    let oracle = sched.run(&gs).unwrap();
+    for (a, b) in oracle.outputs.iter().zip(&warm3.outputs) {
+        assert_eq!(a, b, "oracle scheduler diverged from the serving engine");
+    }
+
+    let mut topts = ThreadedOptions::new(1);
+    topts.virtual_threads = 2;
+    topts.max_batch = 2;
+    topts.dram_size = 256 << 20;
+    println!("\n# threaded pool: the same style trace through real worker threads");
+    println!(
+        "{:>8} {:>12} {:>17} {:>8} {:>8}",
+        "threads", "wall ms", "measured inf/s", "misses", "hits"
+    );
+    let mut thread_throughput: Vec<(usize, f64)> = Vec::new();
+    let mut last_threaded: Option<ThreadedReport> = None;
+    for threads in [1usize, 2, 4] {
+        let mut o = topts.clone();
+        o.threads = threads;
+        let r = serve_trace(&cfg, &o, &records, &gs, &style_inputs).unwrap();
+        assert_eq!(
+            r.outputs.len(),
+            oracle.outputs.len(),
+            "threaded pool lost or duplicated responses"
+        );
+        for (i, out) in r.outputs.iter().enumerate() {
+            assert_eq!(
+                out, &oracle.outputs[i],
+                "threaded pool ({threads} threads) diverged from the oracle at request {i}"
+            );
+        }
+        assert_eq!(
+            (r.cache.misses, r.cache.hits),
+            (oracle.cache.misses, oracle.cache.hits),
+            "threaded plan directory fell out of step with the oracle ({threads} threads)"
+        );
+        println!(
+            "{threads:>8} {:>12.1} {:>17.1} {:>8} {:>8}",
+            r.wall.as_secs_f64() * 1e3,
+            r.throughput_rps(),
+            r.cache.misses,
+            r.cache.hits
+        );
+        thread_throughput.push((threads, r.throughput_rps()));
+        last_threaded = Some(r);
+    }
+    let threaded = last_threaded.expect("thread sweep ran");
+    println!("threaded outputs and cache counters match the simulated oracle bit-exactly");
+
+    // ---- open-loop Poisson ramp against the 4-thread pool -------------
+    let ramp_requests = if fast { 16 } else { 32 };
+    let slo = 0.050;
+    let lopts = LoadgenOptions::ramp(&[100.0, 400.0], ramp_requests, slo);
+    let mut ramp_opts = topts.clone();
+    ramp_opts.threads = 4;
+    ramp_opts.queue_capacity = 16;
+    let (load, _ramp) = vta::exec::run_threaded(&cfg, &ramp_opts, &records, &gs, |handle| {
+        open_loop(handle, &lopts, |i| synth_input(50 + (i % 4), 1, 3, 32, 32))
+    })
+    .unwrap();
+    println!("\n# open-loop ramp: 4 threads, queue 16, SLO {:.0} ms", slo * 1e3);
+    println!(
+        "{:>8} {:>8} {:>6} {:>9} {:>9} {:>9} {:>8} {:>10}",
+        "qps", "offered", "shed", "p50 ms", "p99 ms", "p99.9 ms", "SLO %", "meas inf/s"
+    );
+    for s in &load.steps {
+        println!(
+            "{:>8.1} {:>8} {:>6} {:>9.2} {:>9.2} {:>9.2} {:>7.1}% {:>10.1}",
+            s.qps,
+            s.offered,
+            s.rejected,
+            s.p50 * 1e3,
+            s.p99 * 1e3,
+            s.p999 * 1e3,
+            s.slo_attainment * 100.0,
+            s.throughput_rps
+        );
+    }
+
+    // ---- serving snapshot: emit / diff BENCH_serving.json -------------
+    let snapshot = render_snapshot(
+        vta_s,
+        cpu_s,
+        &style_inputs,
+        &oracle.cache,
+        &threaded,
+        &thread_throughput,
+        &load,
+    );
+    if let Some(path) = &json_path {
+        std::fs::write(path, &snapshot).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("\nwrote serving snapshot to {path}");
+    }
+    if let Some(path) = &check_path {
+        check_against_baseline(&snapshot, path);
+    }
+}
+
+/// Render the `BENCH_serving.json` snapshot. The `deterministic`
+/// section must be byte-reproducible across runs and hosts (counters,
+/// fingerprints, node counts); `measured` is wall-clock and varies.
+#[allow(clippy::too_many_arguments)]
+fn render_snapshot(
+    vta_nodes: usize,
+    cpu_nodes: usize,
+    inputs: &[Tensor<i8>],
+    oracle_cache: &vta::exec::PlanCacheStats,
+    threaded: &ThreadedReport,
+    thread_throughput: &[(usize, f64)],
+    load: &vta::exec::LoadReport,
+) -> String {
+    let fps: Vec<String> = threaded
+        .outputs
+        .iter()
+        .map(|t| fnv1a64(t.data().iter().map(|&v| v as u8)).to_string())
+        .collect();
+    let lookups = oracle_cache.hits + oracle_cache.misses;
+    let hit_rate = if lookups == 0 { 0.0 } else { oracle_cache.hits as f64 / lookups as f64 };
+    let thr: Vec<String> = thread_throughput
+        .iter()
+        .map(|(t, rps)| format!("      {{\"threads\": {t}, \"throughput_rps\": {rps:.3}}}"))
+        .collect();
+    let steps: Vec<String> = load
+        .steps
+        .iter()
+        .map(|s| {
+            format!(
+                "      {{\"qps\": {:.3}, \"offered\": {}, \"shed\": {}, \"p50_ms\": {:.4}, \
+                 \"p99_ms\": {:.4}, \"p999_ms\": {:.4}, \"slo_attainment\": {:.4}, \
+                 \"throughput_rps\": {:.3}}}",
+                s.qps,
+                s.offered,
+                s.rejected,
+                s.p50 * 1e3,
+                s.p99 * 1e3,
+                s.p999 * 1e3,
+                s.slo_attainment,
+                s.throughput_rps
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"schema\": 1,\n  \"workload\": \"style-transfer-32x32\",\n  \
+         \"deterministic\": {{\n    \"requests\": {},\n    \"vta_nodes\": {},\n    \
+         \"cpu_nodes\": {},\n    \"unique_plans\": {},\n    \"hits\": {},\n    \
+         \"lookups\": {},\n    \"output_fp\": [{}]\n  }},\n  \"measured\": {{\n    \
+         \"cache_hit_rate\": {:.6},\n    \"queue_wait_p50_ms\": {:.4},\n    \
+         \"queue_wait_p99_ms\": {:.4},\n    \"service_p50_ms\": {:.4},\n    \
+         \"service_p99_ms\": {:.4},\n    \"thread_sweep\": [\n{}\n    ],\n    \
+         \"ramp\": [\n{}\n    ]\n  }}\n}}\n",
+        inputs.len(),
+        vta_nodes,
+        cpu_nodes,
+        oracle_cache.misses,
+        oracle_cache.hits,
+        lookups,
+        fps.join(", "),
+        hit_rate,
+        threaded.queue_wait.percentile(0.50) * 1e3,
+        threaded.queue_wait.percentile(0.99) * 1e3,
+        threaded.service.percentile(0.50) * 1e3,
+        threaded.service.percentile(0.99) * 1e3,
+        thr.join(",\n"),
+        steps.join(",\n")
+    )
+}
+
+/// Diff the freshly rendered snapshot against a committed baseline.
+///
+/// * `deterministic.*`: every non-`null` baseline field must match the
+///   current run **exactly** — a mismatch fails the bench (and CI). A
+///   `null` baseline field is *unpinned*: its current value is printed
+///   so a maintainer can pin it, but nothing fails.
+/// * `measured.*`: keys present in the baseline must exist in the
+///   current snapshot (schema drift check); values are never compared.
+fn check_against_baseline(snapshot: &str, baseline_path: &str) {
+    let text = std::fs::read_to_string(baseline_path)
+        .unwrap_or_else(|e| panic!("reading baseline {baseline_path}: {e}"));
+    let base = json::parse(&text).unwrap_or_else(|e| panic!("baseline {baseline_path}: {e}"));
+    let cur = json::parse(snapshot).expect("freshly rendered snapshot parses");
+
+    let mut errors = Vec::new();
+    let mut unpinned = Vec::new();
+    diff_deterministic(
+        "deterministic",
+        base.get("deterministic").expect("baseline has a deterministic section"),
+        cur.get("deterministic").expect("snapshot has a deterministic section"),
+        &mut errors,
+        &mut unpinned,
+    );
+    match (base.get("schema"), cur.get("schema")) {
+        (Some(b), Some(c)) if b == c => {}
+        (b, c) => errors.push(format!("schema version changed: {b:?} -> {c:?}")),
+    }
+    if let Some(Value::Obj(fields)) = base.get("measured") {
+        let cm = cur.get("measured").expect("snapshot has a measured section");
+        for (k, _) in fields {
+            if cm.get(k).is_none() {
+                errors.push(format!("measured.{k} disappeared from the snapshot"));
+            }
+        }
+    }
+    for path in &unpinned {
+        println!("baseline: {path} is unpinned (null) — current value accepted");
+    }
+    if !errors.is_empty() {
+        panic!("serving snapshot diverged from {baseline_path}:\n  {}", errors.join("\n  "));
+    }
+    println!("serving snapshot matches the committed baseline ({baseline_path})");
+}
+
+/// Exact structural diff of the deterministic section. Baseline `null`
+/// leaves a field unpinned; objects/arrays recurse; leaves must be
+/// equal.
+fn diff_deterministic(
+    path: &str,
+    base: &Value,
+    cur: &Value,
+    errors: &mut Vec<String>,
+    unpinned: &mut Vec<String>,
+) {
+    match (base, cur) {
+        (Value::Null, _) => unpinned.push(path.to_string()),
+        (Value::Obj(bf), _) => {
+            for (k, bv) in bf {
+                match cur.get(k) {
+                    Some(cv) => {
+                        diff_deterministic(&format!("{path}.{k}"), bv, cv, errors, unpinned)
+                    }
+                    None => errors.push(format!("{path}.{k} missing from the current snapshot")),
+                }
+            }
+        }
+        (Value::Arr(bv), Value::Arr(cv)) => {
+            if bv.len() != cv.len() {
+                errors.push(format!("{path}: length {} -> {}", bv.len(), cv.len()));
+            } else {
+                for (i, (b, c)) in bv.iter().zip(cv).enumerate() {
+                    diff_deterministic(&format!("{path}[{i}]"), b, c, errors, unpinned);
+                }
+            }
+        }
+        (b, c) => {
+            if b != c {
+                errors.push(format!("{path}: baseline {b:?} != current {c:?}"));
+            }
+        }
+    }
 }

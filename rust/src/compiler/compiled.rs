@@ -170,6 +170,35 @@ impl CompiledNode {
         src: &VtaRuntime,
         dst: &mut VtaRuntime,
     ) -> Result<CompiledNode, CompileError> {
+        self.replay_layout(dst)?;
+        for buf in &self.baked_bufs {
+            let bytes = src.device.read(buf.addr, buf.len).map_err(RuntimeError::Sim)?;
+            dst.device.write(buf.addr, &bytes).map_err(RuntimeError::Sim)?;
+        }
+        Ok(self.clone_artifact())
+    }
+
+    /// Detach this plan into a device-independent [`PlanBlueprint`]:
+    /// the sealed streams, the DRAM layout record, and a byte image of
+    /// every baked buffer read back from the compiling device `src`.
+    /// The blueprint is what the threaded serving runtime publishes
+    /// through its shared plan directory — unlike [`Self::replicate_to`]
+    /// it needs no live borrow of the source runtime at materialize
+    /// time, so worker threads can install plans compiled by their
+    /// peers without any cross-thread device access.
+    pub fn blueprint(&self, src: &VtaRuntime) -> Result<PlanBlueprint, CompileError> {
+        let mut baked_images = Vec::with_capacity(self.baked_bufs.len());
+        for buf in &self.baked_bufs {
+            baked_images.push(src.device.read(buf.addr, buf.len).map_err(RuntimeError::Sim)?);
+        }
+        Ok(PlanBlueprint { node: self.clone_artifact(), baked_images })
+    }
+
+    /// Replay the plan's allocation sequence on `dst`, asserting every
+    /// buffer lands at the address the sealed streams baked in. On any
+    /// failure the allocations already made are unwound, leaving
+    /// `dst`'s allocator untouched.
+    fn replay_layout(&self, dst: &mut VtaRuntime) -> Result<(), CompileError> {
         let mut allocated: Vec<DramBuffer> = Vec::with_capacity(self.layout.len());
         for &(buf, align) in &self.layout {
             let got = match dst.alloc_aligned(buf.len, align) {
@@ -190,11 +219,13 @@ impl CompiledNode {
             }
             allocated.push(got);
         }
-        for buf in &self.baked_bufs {
-            let bytes = src.device.read(buf.addr, buf.len).map_err(RuntimeError::Sim)?;
-            dst.device.write(buf.addr, &bytes).map_err(RuntimeError::Sim)?;
-        }
-        Ok(CompiledNode {
+        Ok(())
+    }
+
+    /// A handle-level copy of the artifact (streams + buffer handles;
+    /// no device state).
+    fn clone_artifact(&self) -> CompiledNode {
+        CompiledNode {
             op: self.op.clone(),
             schedule: self.schedule,
             streams: self.streams.clone(),
@@ -202,7 +233,54 @@ impl CompiledNode {
             out_buf: self.out_buf,
             baked_bufs: self.baked_bufs.clone(),
             layout: self.layout.clone(),
-        })
+        }
+    }
+}
+
+/// A compiled plan detached from its device: sealed streams, the DRAM
+/// layout record, and byte images of the baked buffers (packed weights
+/// + micro-kernel arena contents). Plain owned data — `Send + Sync` —
+/// so the threaded serving runtime can publish one through a shared
+/// directory and let every worker materialize it onto its own replica.
+///
+/// Materialization is only sound when the destination allocator's
+/// history matches the compiling replica's — the same lockstep
+/// precondition as [`CompiledNode::replicate_to`], enforced the same
+/// way (address check, [`CompileError::ReplicaDiverged`]).
+#[derive(Debug)]
+pub struct PlanBlueprint {
+    node: CompiledNode,
+    /// Contents of each `baked_bufs[i]`, read from the compiling device.
+    baked_images: Vec<Vec<u8>>,
+}
+
+impl PlanBlueprint {
+    /// Total DRAM bytes the materialized plan will hold resident.
+    pub fn dram_bytes(&self) -> usize {
+        self.node.dram_bytes()
+    }
+
+    /// The operator the plan implements.
+    pub fn op(&self) -> &Op {
+        &self.node.op
+    }
+
+    /// Instantiate the plan on `dst`: replay the allocation sequence
+    /// (same sizes, alignments, order — addresses must match, else
+    /// [`CompileError::ReplicaDiverged`]) and write the baked byte
+    /// images. Variable inputs and the output need no initialization;
+    /// every [`CompiledNode::execute`] overwrites them.
+    pub fn materialize(&self, dst: &mut VtaRuntime) -> Result<CompiledNode, CompileError> {
+        self.node.replay_layout(dst)?;
+        for (buf, image) in self.node.baked_bufs.iter().zip(&self.baked_images) {
+            if let Err(e) = dst.device.write(buf.addr, image).map_err(RuntimeError::Sim) {
+                for &(b, _) in &self.node.layout {
+                    let _ = dst.dram.free(b);
+                }
+                return Err(e.into());
+            }
+        }
+        Ok(self.node.clone_artifact())
     }
 }
 

@@ -204,9 +204,12 @@ impl TuningRecords {
     }
 }
 
-/// The minimal JSON subset the record store needs: objects, arrays,
-/// strings (no escapes beyond `\"` and `\\`), unsigned integers,
-/// booleans, null.
+/// The minimal JSON subset the record store (and the bench baselines)
+/// need: objects, arrays, strings (no escapes beyond `\"` and `\\`),
+/// numbers, booleans, null. Pure-digit integers parse to [`Value::Num`]
+/// losslessly (the record store keys are full-range `u64` fingerprints);
+/// anything with a sign, decimal point, or exponent parses to
+/// [`Value::Float`].
 pub mod json {
     use anyhow::{bail, Result};
 
@@ -217,6 +220,7 @@ pub mod json {
         Arr(Vec<Value>),
         Str(String),
         Num(u64),
+        Float(f64),
         Bool(bool),
         Null,
     }
@@ -230,10 +234,20 @@ pub mod json {
             }
         }
 
-        /// Unsigned-integer view.
+        /// Unsigned-integer view (exact — floats do not coerce).
         pub fn as_u64(&self) -> Option<u64> {
             match self {
                 Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+
+        /// Numeric view: floats as-is, integers widened (lossy above
+        /// 2^53, like every JSON reader).
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n as f64),
+                Value::Float(x) => Some(*x),
                 _ => None,
             }
         }
@@ -357,13 +371,31 @@ pub mod json {
                     }
                 }
             }
-            b'0'..=b'9' => {
+            b'0'..=b'9' | b'-' => {
                 let start = *pos;
-                while *pos < b.len() && b[*pos].is_ascii_digit() {
+                if b[*pos] == b'-' {
                     *pos += 1;
                 }
-                let text = std::str::from_utf8(&b[start..*pos]).expect("digits are ascii");
-                Ok(Value::Num(text.parse()?))
+                let mut float = b[start] == b'-';
+                while *pos < b.len() {
+                    match b[*pos] {
+                        b'0'..=b'9' => {}
+                        b'.' | b'e' | b'E' | b'+' => float = true,
+                        b'-' if float => {} // exponent sign, e.g. 1e-3
+                        _ => break,
+                    }
+                    *pos += 1;
+                }
+                let text = std::str::from_utf8(&b[start..*pos]).expect("number chars are ascii");
+                if float {
+                    let x: f64 = text.parse()?;
+                    if !x.is_finite() {
+                        bail!("non-finite number {text:?}");
+                    }
+                    Ok(Value::Float(x))
+                } else {
+                    Ok(Value::Num(text.parse()?))
+                }
             }
             b't' if b[*pos..].starts_with(b"true") => {
                 *pos += 4;
@@ -417,6 +449,33 @@ mod tests {
         );
         // Round-tripping again is byte-identical (sorted, stable).
         assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn json_parser_handles_floats_without_losing_u64_exactness() {
+        use super::json::{parse, Value};
+        let v = parse(
+            r#"{"int": 18446744073709551615, "pi": 3.25, "neg": -1.5,
+                "exp": 2e-3, "negint": -7, "arr": [1, 0.5]}"#,
+        )
+        .unwrap();
+        // Full-range integers stay exact (u64::MAX is not representable
+        // in f64) ...
+        assert_eq!(v.get("int").unwrap().as_u64(), Some(u64::MAX));
+        // ... and never silently coerce from floats.
+        assert_eq!(v.get("pi").unwrap().as_u64(), None);
+        assert_eq!(v.get("pi").unwrap().as_f64(), Some(3.25));
+        assert_eq!(v.get("neg").unwrap().as_f64(), Some(-1.5));
+        assert_eq!(v.get("exp").unwrap().as_f64(), Some(2e-3));
+        // Signed integers parse through the float path (the record
+        // store never writes them; bench baselines may).
+        assert_eq!(v.get("negint").unwrap(), &Value::Float(-7.0));
+        let arr = v.get("arr").unwrap().as_array().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1], Value::Float(0.5));
+        // Malformed numbers are rejected, not truncated.
+        assert!(parse("--5").is_err());
+        assert!(parse("1.2.3").is_err());
     }
 
     #[test]

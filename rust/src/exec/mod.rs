@@ -27,8 +27,10 @@ pub use cpu_ops::{add_i8, dense_i8, global_avg_pool_i8, maxpool_i8, relu_i8};
 pub use executor::{CpuBackend, ExecError, ExecReport, Executor, NodeReport};
 pub use pjrt::{PjrtCache, PjrtError};
 pub use serve::{
-    pipeline_schedule, BatchRecord, BatchReport, PipelineModel, PlanCache, PlanCacheStats,
-    PlanKey, PoolReport, Scheduler, SchedulerOptions, ServeReport, ServingEngine,
+    open_loop, pipeline_schedule, run_threaded, serve_trace, BatchRecord, BatchReport, Completion,
+    LoadReport, LoadgenOptions, PipelineModel, PlanCache, PlanCacheStats, PlanKey, PoolHandle,
+    PoolReport, QpsStep, Scheduler, SchedulerOptions, ServeReport, ServingEngine, StepReport,
+    SubmitRejected, ThreadedOptions, ThreadedReport,
 };
 
 #[cfg(test)]

@@ -1,0 +1,169 @@
+//! Open-loop load generation against the threaded serving runtime:
+//! Poisson arrivals at a target QPS, stepped ramps, and per-step
+//! latency / SLO accounting.
+//!
+//! Open-loop means arrival times are drawn from the target process and
+//! never wait for responses — the generator that exposes queueing
+//! collapse, unlike closed-loop replay whose arrival rate self-throttles
+//! to the service rate. Requests that find the bounded queue full are
+//! **shed** (counted, not retried): admission control is part of the
+//! system under test, and SLO attainment charges every shed request as
+//! a miss.
+//!
+//! Inter-arrival gaps are exponential, `-ln(1 - u) / qps`, with `u`
+//! from the deterministic [`XorShiftRng`] — the arrival *schedule* is
+//! reproducible bit-for-bit for a given seed even though measured
+//! latencies are not.
+
+use super::threaded::PoolHandle;
+use crate::util::{percentile_sorted, Tensor, XorShiftRng};
+use std::time::{Duration, Instant};
+
+/// One step of a QPS ramp.
+#[derive(Clone, Copy, Debug)]
+pub struct QpsStep {
+    /// Target offered rate (requests per second).
+    pub qps: f64,
+    /// Requests offered during this step.
+    pub requests: usize,
+}
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// The ramp: each step offers `requests` arrivals at `qps`.
+    pub steps: Vec<QpsStep>,
+    /// Latency SLO (seconds); a request attains it when
+    /// `queue_wait + service <= slo`. Shed requests never attain.
+    pub slo: f64,
+    /// Seed of the arrival process (per-step streams derive from it).
+    pub seed: u64,
+}
+
+impl LoadgenOptions {
+    /// A ramp over `qps_points`, each offering `requests` arrivals.
+    pub fn ramp(qps_points: &[f64], requests: usize, slo: f64) -> Self {
+        LoadgenOptions {
+            steps: qps_points.iter().map(|&qps| QpsStep { qps, requests }).collect(),
+            slo,
+            seed: 0x10ad,
+        }
+    }
+}
+
+/// Measured outcome of one ramp step.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Target offered rate.
+    pub qps: f64,
+    /// Arrivals offered.
+    pub offered: u64,
+    /// Arrivals admitted by the bounded queue.
+    pub accepted: u64,
+    /// Arrivals shed by admission control.
+    pub rejected: u64,
+    /// p50 end-to-end latency (seconds) over accepted requests.
+    pub p50: f64,
+    /// p99 end-to-end latency (seconds).
+    pub p99: f64,
+    /// p99.9 end-to-end latency (seconds).
+    pub p999: f64,
+    /// Fraction of *offered* requests completed within the SLO.
+    pub slo_attainment: f64,
+    /// Completed requests over the step's wall span (includes drain).
+    pub throughput_rps: f64,
+    /// Wall span of the step: first arrival to last completion.
+    pub wall: Duration,
+}
+
+/// Whole-ramp outcome.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// One report per ramp step, in ramp order.
+    pub steps: Vec<StepReport>,
+}
+
+impl LoadReport {
+    /// Total arrivals offered across the ramp.
+    pub fn offered(&self) -> u64 {
+        self.steps.iter().map(|s| s.offered).sum()
+    }
+
+    /// Total arrivals shed across the ramp.
+    pub fn rejected(&self) -> u64 {
+        self.steps.iter().map(|s| s.rejected).sum()
+    }
+}
+
+/// Drive an open-loop ramp against a running pool. `make_input` builds
+/// the request tensor for global arrival sequence number `i` (drawing
+/// from a seeded RNG keeps the workload deterministic). The pool
+/// quiesces between steps — each step's latencies are not polluted by
+/// the previous step's backlog.
+pub fn open_loop(
+    handle: &mut PoolHandle<'_>,
+    opts: &LoadgenOptions,
+    mut make_input: impl FnMut(u64) -> Tensor<i8>,
+) -> LoadReport {
+    let mut report = LoadReport::default();
+    let mut seq = 0u64;
+    for (step_idx, step) in opts.steps.iter().enumerate() {
+        let mut rng = XorShiftRng::new(opts.seed ^ (step_idx as u64).wrapping_mul(0x9E37_79B9));
+        let qps = step.qps.max(1e-6);
+        let t0 = Instant::now();
+        let mut next_arrival = Duration::ZERO;
+        let mut ids = Vec::with_capacity(step.requests);
+        let mut rejected = 0u64;
+
+        for _ in 0..step.requests {
+            // Exponential inter-arrival gap; 1 - u is in (0, 1].
+            let gap = -(1.0 - rng.next_f64()).ln() / qps;
+            next_arrival += Duration::from_secs_f64(gap);
+            let elapsed = t0.elapsed();
+            if next_arrival > elapsed {
+                std::thread::sleep(next_arrival - elapsed);
+            }
+            let input = make_input(seq);
+            seq += 1;
+            match handle.try_submit(input) {
+                Ok(id) => ids.push(id),
+                Err(_) => rejected += 1,
+            }
+            // Keep draining completions so the response channel never
+            // backs up behind the arrival loop.
+            handle.poll();
+        }
+
+        // Quiesce: wait out this step's accepted requests.
+        handle.wait_all();
+        let wall = t0.elapsed();
+
+        let mut latencies: Vec<f64> = ids
+            .iter()
+            .map(|&id| {
+                handle
+                    .completion(id)
+                    .expect("accepted request completed after wait_all")
+                    .latency()
+                    .as_secs_f64()
+            })
+            .collect();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let offered = ids.len() as u64 + rejected;
+        let attained = latencies.iter().filter(|&&l| l <= opts.slo).count() as u64;
+        let secs = wall.as_secs_f64();
+        report.steps.push(StepReport {
+            qps: step.qps,
+            offered,
+            accepted: ids.len() as u64,
+            rejected,
+            p50: percentile_sorted(&latencies, 0.50),
+            p99: percentile_sorted(&latencies, 0.99),
+            p999: percentile_sorted(&latencies, 0.999),
+            slo_attainment: if offered == 0 { 1.0 } else { attained as f64 / offered as f64 },
+            throughput_rps: if secs <= 0.0 { 0.0 } else { ids.len() as f64 / secs },
+            wall,
+        });
+    }
+    report
+}

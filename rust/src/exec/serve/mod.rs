@@ -40,18 +40,40 @@
 //!   replica. Queue depth, per-device utilization, and latency
 //!   percentiles export through [`crate::metrics::PoolMetrics`].
 
+//!
+//! Two later additions promote the pool from simulated to real
+//! concurrency:
+//!
+//! * [`threaded`](self) — the **real-threads** pool
+//!   ([`run_threaded`] / [`serve_trace`]): one OS worker thread per
+//!   replica, a bounded MPMC queue with admission control, and
+//!   cross-thread plan sharing via a publish-barrier event log. The
+//!   simulated [`Scheduler`] stays on as its deterministic oracle —
+//!   for any trace, outputs are bit-identical and pool-level cache
+//!   counters match.
+//! * [`open_loop`] — open-loop Poisson load generation (target-QPS
+//!   ramps, p50/p99/p99.9 latency, SLO attainment) against the
+//!   threaded pool.
+
 mod cache;
 mod engine;
+mod loadgen;
 mod report;
 mod run;
 mod schedule;
 mod scheduler;
+mod threaded;
 
 pub use cache::{plan_key_for, PlanCache, PlanCacheStats, PlanKey};
 pub use engine::ServingEngine;
+pub use loadgen::{open_loop, LoadReport, LoadgenOptions, QpsStep, StepReport};
 pub use report::{BatchReport, ServeReport};
 pub use schedule::{pipeline_schedule, PipelineModel};
 pub use scheduler::{BatchRecord, PoolReport, Scheduler, SchedulerOptions};
+pub use threaded::{
+    run_threaded, serve_trace, Completion, PoolHandle, SubmitRejected, ThreadedOptions,
+    ThreadedReport,
+};
 
 // Fingerprint helpers live with the operator registry; re-exported
 // here for API continuity (and python/compile/synth.py parity).

@@ -1,0 +1,850 @@
+//! The real-threads serving runtime: one OS worker thread per
+//! [`DevicePool`] replica, a bounded MPMC request queue with
+//! backpressure, and cross-thread plan sharing — the promotion of the
+//! simulated-time [`Scheduler`](super::Scheduler) (which stays on as
+//! the deterministic oracle) to genuine task-level parallelism, the
+//! paper's §3 runtime argument measured instead of modeled.
+//!
+//! ## Queue and admission control
+//!
+//! [`RequestQueue`] is a `Mutex<VecDeque>` + two condvars bounded at
+//! `queue_capacity`. [`PoolHandle::try_submit`] rejects with a reason
+//! ([`SubmitRejected::QueueFull`] / [`SubmitRejected::ShuttingDown`])
+//! instead of blocking — the admission-control path an open-loop load
+//! generator needs — while [`PoolHandle::submit`] blocks for
+//! closed-loop trace replay. Workers pull *opportunistic batches* of up
+//! to `max_batch` requests per queue visit; whatever remains at stream
+//! end drains as a trailing partial batch. Shutdown closes the queue,
+//! lets every worker drain what was already admitted, then joins.
+//!
+//! ## Plan sharing: compile-on-first-miss with a publish barrier
+//!
+//! Sealed instruction streams bake DRAM addresses in, so a plan only
+//! replays on a replica whose allocator history matches the compiling
+//! replica's. The simulated scheduler guarantees that by driving every
+//! per-replica [`PlanCache`](super::PlanCache) in lockstep from one
+//! thread; across real threads the same invariant is kept by an
+//! append-only **event log** in the shared [`PlanDirectory`]:
+//!
+//! * every cache mutation (install / evict) is an event appended under
+//!   the directory mutex — the publish barrier; compiles are serialized
+//!   by it, so the log order *is* the canonical allocator history;
+//! * the first worker to miss a key applies any unapplied log prefix to
+//!   its own replica, compiles, and publishes a device-independent
+//!   [`PlanBlueprint`] (streams + layout + baked bytes);
+//! * every other worker materializes lazily: on its next directory
+//!   interaction it replays the pending events against its own replica,
+//!   and because all replicas apply the same event sequence from
+//!   identical fresh allocators, every allocation lands at the baked
+//!   address (enforced, never assumed — a mismatch is
+//!   [`CompileError::ReplicaDiverged`](crate::compiler::CompileError)).
+//!
+//! Pool-level hit/miss/eviction counters live in the directory, so —
+//! like the simulated scheduler — a plan compiles **once per pool**,
+//! and the oracle-equivalence suite asserts the counts match exactly.
+//!
+//! ## Oracle equivalence
+//!
+//! Workers execute requests through the *same* shared graph walker
+//! ([`run_graph`]) as the engine and the simulated scheduler, so
+//! outputs are bit-identical by construction, independent of thread
+//! interleaving: plan execution is deterministic and per-replica.
+//! `tests/threaded_oracle.rs` asserts it end to end across thread
+//! counts, virtual-thread modes, and partition policies.
+
+use super::super::executor::{lift_compile_err, CpuBackend, ExecError};
+use super::cache::{PlanCacheStats, PlanKey};
+use super::run::{plan_keys_for, run_graph, tuned_schedules_for, VtaNodeExec};
+use crate::arch::VtaConfig;
+use crate::compiler::op::{config_fingerprint, execute_compiled, op_impl};
+use crate::compiler::{CompiledNode, PlanBlueprint, ScheduleChoice};
+use crate::dse::records::TuningRecords;
+use crate::graph::{stages, Graph};
+use crate::metrics::{LatencyHistogram, ThreadCounter};
+use crate::runtime::{DevicePool, VtaRuntime};
+use crate::sim::SimStats;
+use crate::util::Tensor;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Configuration of one threaded pool run.
+#[derive(Clone, Debug)]
+pub struct ThreadedOptions {
+    /// Worker threads — one per pool replica.
+    pub threads: usize,
+    /// Bounded request-queue capacity (admission control).
+    pub queue_capacity: usize,
+    /// Most requests a worker pulls per queue visit.
+    pub max_batch: usize,
+    /// Plan-directory capacity (compiled plans resident per replica).
+    pub cache_capacity: usize,
+    /// Virtual threads the plans are lowered with (1 or 2).
+    pub virtual_threads: usize,
+    /// Device DRAM bytes per replica.
+    pub dram_size: usize,
+    /// Start with workers gated: nothing is served until
+    /// [`PoolHandle::resume`] (deterministic queue-full tests).
+    pub start_paused: bool,
+}
+
+impl ThreadedOptions {
+    /// Defaults matching the simulated scheduler's test configuration.
+    pub fn new(threads: usize) -> Self {
+        ThreadedOptions {
+            threads: threads.max(1),
+            queue_capacity: 64,
+            max_batch: 2,
+            cache_capacity: 64,
+            virtual_threads: 1,
+            dram_size: 256 << 20,
+            start_paused: false,
+        }
+    }
+}
+
+/// Why an admission-controlled submit was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitRejected {
+    /// The bounded queue is at capacity — backpressure; retry later or
+    /// count the request as shed.
+    #[error("request queue full ({capacity} waiting)")]
+    QueueFull {
+        /// The queue's capacity at rejection time.
+        capacity: usize,
+    },
+    /// The pool is draining; no new work is admitted.
+    #[error("pool is shutting down")]
+    ShuttingDown,
+}
+
+/// One admitted request, queued for a worker.
+struct Request {
+    id: u64,
+    input: Tensor<i8>,
+    submitted: Instant,
+}
+
+/// One served request, reported back to the pool handle.
+struct Response {
+    id: u64,
+    result: Result<Tensor<i8>, ExecError>,
+    queue_wait: Duration,
+    service: Duration,
+    worker: usize,
+    batch: usize,
+}
+
+/// Completion record of one request (timing only; outputs are
+/// collected separately, in submission order).
+#[derive(Clone, Debug)]
+pub struct Completion {
+    /// Submission id (dense, in admission order).
+    pub id: u64,
+    /// Time spent waiting in the bounded queue.
+    pub queue_wait: Duration,
+    /// Time spent executing the graph on the worker.
+    pub service: Duration,
+    /// Worker thread that served the request.
+    pub worker: usize,
+    /// Size of the batch the request was pulled in.
+    pub batch: usize,
+}
+
+impl Completion {
+    /// End-to-end latency: queue wait + service.
+    pub fn latency(&self) -> Duration {
+        self.queue_wait + self.service
+    }
+}
+
+// ---------------------------------------------------------------------
+// The bounded MPMC request queue.
+// ---------------------------------------------------------------------
+
+struct QueueState {
+    buf: VecDeque<Request>,
+    closed: bool,
+    paused: bool,
+}
+
+/// Bounded MPMC queue: producers reject or block at capacity, workers
+/// pull opportunistic batches, close() drains gracefully.
+struct RequestQueue {
+    capacity: usize,
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl RequestQueue {
+    fn new(capacity: usize, paused: bool) -> Self {
+        RequestQueue {
+            capacity: capacity.max(1),
+            state: Mutex::new(QueueState { buf: VecDeque::new(), closed: false, paused }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Admission-controlled push: never blocks.
+    fn try_push(&self, req: Request) -> Result<(), SubmitRejected> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(SubmitRejected::ShuttingDown);
+        }
+        if st.buf.len() >= self.capacity {
+            return Err(SubmitRejected::QueueFull { capacity: self.capacity });
+        }
+        st.buf.push_back(req);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for room (closed-loop trace replay).
+    fn push_wait(&self, req: Request) -> Result<(), SubmitRejected> {
+        let mut st = self.lock();
+        while !st.closed && st.buf.len() >= self.capacity {
+            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.closed {
+            return Err(SubmitRejected::ShuttingDown);
+        }
+        st.buf.push_back(req);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pull up to `max` requests; blocks while the queue is empty (or
+    /// paused) and open. `None` means closed *and* drained — the
+    /// worker-exit signal. A non-full final pull is the trailing
+    /// partial batch at stream end.
+    fn pop_batch(&self, max: usize) -> Option<Vec<Request>> {
+        let mut st = self.lock();
+        loop {
+            if !st.paused && !st.buf.is_empty() {
+                let n = st.buf.len().min(max.max(1));
+                let batch: Vec<Request> = st.buf.drain(..n).collect();
+                drop(st);
+                self.not_full.notify_all();
+                return Some(batch);
+            }
+            if st.closed && st.buf.is_empty() {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.lock().buf.len()
+    }
+
+    /// Ungate paused workers.
+    fn resume(&self) {
+        self.lock().paused = false;
+        self.not_empty.notify_all();
+    }
+
+    /// Stop admitting; already-admitted requests still drain. Also
+    /// ungates paused workers so shutdown cannot deadlock.
+    fn close(&self) {
+        let mut st = self.lock();
+        st.closed = true;
+        st.paused = false;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------
+// The shared plan directory (publish barrier).
+// ---------------------------------------------------------------------
+
+/// One entry of the canonical cache-mutation history.
+#[derive(Clone)]
+enum PlanEvent {
+    Install(PlanKey, Arc<PlanBlueprint>),
+    Evict(PlanKey),
+}
+
+struct DirectoryState {
+    /// Pool-resident keys with their last-use clock (LRU victims).
+    resident: HashMap<PlanKey, u64>,
+    clock: u64,
+    /// Append-only event log — the canonical allocator history every
+    /// replica replays. Grows with unique compiles + evictions, not
+    /// with request volume.
+    log: Vec<PlanEvent>,
+    stats: PlanCacheStats,
+}
+
+/// The pool-shared plan directory: membership, LRU bookkeeping,
+/// pool-level counters, and the event log. Its mutex is the publish
+/// barrier — compiles happen under it, so log order is total.
+struct PlanDirectory {
+    capacity: usize,
+    state: Mutex<DirectoryState>,
+}
+
+impl PlanDirectory {
+    fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "plan directory needs at least one slot");
+        PlanDirectory {
+            capacity,
+            state: Mutex::new(DirectoryState {
+                resident: HashMap::new(),
+                clock: 0,
+                log: Vec::new(),
+                stats: PlanCacheStats::default(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, DirectoryState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Fast-path hit accounting for a key already materialized on the
+    /// calling replica.
+    fn count_local_hit(&self, key: &PlanKey) {
+        let mut st = self.lock();
+        st.stats.hits += 1;
+        st.clock += 1;
+        let clock = st.clock;
+        if let Some(last_use) = st.resident.get_mut(key) {
+            *last_use = clock;
+        }
+    }
+
+    fn stats(&self) -> PlanCacheStats {
+        self.lock().stats
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side.
+// ---------------------------------------------------------------------
+
+/// One worker's view of its pool replica: the runtime plus the locally
+/// materialized plans and the event-log cursor.
+struct Replica<'rt> {
+    rt: &'rt mut VtaRuntime,
+    plans: HashMap<PlanKey, CompiledNode>,
+    /// Log prefix already applied to this replica's allocator.
+    applied: usize,
+}
+
+impl Replica<'_> {
+    /// Apply a slice of canonical events in order: installs materialize
+    /// the published blueprint (allocations must land at the baked
+    /// addresses), evicts free the local copy.
+    fn apply(&mut self, events: &[PlanEvent]) -> Result<(), ExecError> {
+        for event in events {
+            match event {
+                PlanEvent::Install(key, blueprint) => {
+                    let node = blueprint.materialize(self.rt).map_err(ExecError::PlanCache)?;
+                    self.plans.insert(key.clone(), node);
+                }
+                PlanEvent::Evict(key) => {
+                    if let Some(node) = self.plans.remove(key) {
+                        node.free(self.rt).map_err(ExecError::PlanCache)?;
+                    }
+                }
+            }
+            self.applied += 1;
+        }
+        Ok(())
+    }
+}
+
+/// The worker's side of the shared graph walker: VTA nodes resolve
+/// through the local plan map, falling back to the directory protocol.
+struct WorkerExec<'rt, 'p> {
+    replica: Replica<'rt>,
+    directory: &'p PlanDirectory,
+    cpu: CpuBackend,
+    virtual_threads: usize,
+    clock_hz: f64,
+}
+
+impl WorkerExec<'_, '_> {
+    /// Directory path for a key not resident locally: count the pool
+    /// lookup, replay pending events, and — if the pool as a whole has
+    /// never seen the key — compile and publish under the barrier.
+    fn sync_plan(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+    ) -> Result<(), ExecError> {
+        let node = &g.nodes[id];
+        let mut st = self.directory.lock();
+        if st.resident.contains_key(key) {
+            // Pool hit: some worker already published this plan; catch
+            // up on the log (its Install is in our unapplied suffix).
+            st.stats.hits += 1;
+            st.clock += 1;
+            let clock = st.clock;
+            st.resident.insert(key.clone(), clock);
+            let pending: Vec<PlanEvent> = st.log[self.replica.applied..].to_vec();
+            drop(st);
+            self.replica.apply(&pending)?;
+            return Ok(());
+        }
+
+        // Pool miss: this worker compiles, holding the directory lock
+        // as the publish barrier. Evictions come first (mirroring the
+        // lockstep caches' make_room-before-compile order) so the freed
+        // DRAM is available to the new plan on every replica.
+        st.stats.misses += 1;
+        while st.resident.len() >= self.directory.capacity {
+            let victim = st
+                .resident
+                .iter()
+                .min_by_key(|&(_, &last_use)| last_use)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            st.resident.remove(&victim);
+            st.stats.evictions += 1;
+            st.log.push(PlanEvent::Evict(victim));
+        }
+        let pending: Vec<PlanEvent> = st.log[self.replica.applied..].to_vec();
+        self.replica.apply(&pending)?;
+
+        let entry = op_impl(&node.op);
+        let compiled = entry
+            .compile(self.replica.rt, g, node, self.virtual_threads, schedule.as_ref())
+            .map_err(|e| lift_compile_err(&node.name, e))?;
+        // A failed compile above unwinds its allocations (alloc_group)
+        // and publishes nothing: the canonical history is untouched and
+        // the next lookup simply misses again.
+        let blueprint =
+            compiled.blueprint(self.replica.rt).map_err(|e| lift_compile_err(&node.name, e))?;
+        st.clock += 1;
+        let clock = st.clock;
+        st.resident.insert(key.clone(), clock);
+        st.log.push(PlanEvent::Install(key.clone(), Arc::new(blueprint)));
+        self.replica.applied += 1; // our own install is already in effect
+        self.replica.plans.insert(key.clone(), compiled);
+        Ok(())
+    }
+}
+
+impl VtaNodeExec for WorkerExec<'_, '_> {
+    fn clock_hz(&self) -> f64 {
+        self.clock_hz
+    }
+
+    fn cpu_mut(&mut self) -> &mut CpuBackend {
+        &mut self.cpu
+    }
+
+    fn exec_vta_node(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<(Tensor<i8>, SimStats), ExecError> {
+        if self.replica.plans.contains_key(key) {
+            // Fast path: no event replay needed; one short directory
+            // lock to keep pool-level counters exact.
+            self.directory.count_local_hit(key);
+        } else {
+            self.sync_plan(g, id, key, schedule)?;
+        }
+        let node = &g.nodes[id];
+        let entry = op_impl(&node.op);
+        let compiled = self.replica.plans.get(key).expect("plan resident after sync");
+        execute_compiled(entry, compiled, self.replica.rt, inputs)
+            .map_err(|e| lift_compile_err(&node.name, e))
+    }
+}
+
+/// Everything a worker thread borrows from the pool run (shared,
+/// read-only or internally synchronized).
+struct PoolShared<'a> {
+    queue: &'a RequestQueue,
+    directory: &'a PlanDirectory,
+    g: &'a Graph,
+    stage_order: &'a [Vec<usize>],
+    keys: &'a [Option<PlanKey>],
+    schedules: &'a [Option<ScheduleChoice>],
+    virtual_threads: usize,
+    max_batch: usize,
+    clock_hz: f64,
+}
+
+fn worker_loop(
+    worker: usize,
+    rt: &mut VtaRuntime,
+    shared: &PoolShared<'_>,
+    tx: mpsc::Sender<Response>,
+) -> ThreadCounter {
+    let mut ex = WorkerExec {
+        replica: Replica { rt, plans: HashMap::new(), applied: 0 },
+        directory: shared.directory,
+        cpu: CpuBackend::Native,
+        virtual_threads: shared.virtual_threads,
+        clock_hz: shared.clock_hz,
+    };
+    let mut counter = ThreadCounter::default();
+    while let Some(batch) = shared.queue.pop_batch(shared.max_batch) {
+        let t0 = Instant::now();
+        let batch_size = batch.len();
+        for req in batch {
+            let queue_wait = req.submitted.elapsed();
+            let s0 = Instant::now();
+            let result = run_graph(
+                &mut ex,
+                shared.g,
+                &req.input,
+                shared.stage_order,
+                shared.keys,
+                shared.schedules,
+            )
+            .map(|(out, _)| out);
+            let response = Response {
+                id: req.id,
+                result,
+                queue_wait,
+                service: s0.elapsed(),
+                worker,
+                batch: batch_size,
+            };
+            if tx.send(response).is_err() {
+                // Receiver gone: the pool run is being torn down.
+                return counter;
+            }
+        }
+        counter.record_batch(batch_size, t0.elapsed());
+    }
+    counter
+}
+
+// ---------------------------------------------------------------------
+// The pool handle and runner.
+// ---------------------------------------------------------------------
+
+/// The driver's interface to a running threaded pool: submit requests
+/// (blocking or admission-controlled), poll completions, and inspect
+/// live counters. Handed to the driver closure of [`run_threaded`];
+/// when the closure returns, the queue closes and the pool drains.
+pub struct PoolHandle<'s> {
+    queue: &'s RequestQueue,
+    rx: mpsc::Receiver<Response>,
+    next_id: u64,
+    accepted: u64,
+    rejected_full: u64,
+    rejected_shutdown: u64,
+    outputs: Vec<Option<Tensor<i8>>>,
+    completions: Vec<Option<Completion>>,
+    received: u64,
+    first_error: Option<ExecError>,
+    queue_wait: LatencyHistogram,
+    service: LatencyHistogram,
+}
+
+impl PoolHandle<'_> {
+    fn record(&mut self, resp: Response) {
+        let idx = resp.id as usize;
+        match resp.result {
+            Ok(out) => self.outputs[idx] = Some(out),
+            Err(e) => {
+                self.first_error.get_or_insert(e);
+            }
+        }
+        self.queue_wait.record(resp.queue_wait.as_secs_f64());
+        self.service.record(resp.service.as_secs_f64());
+        self.completions[idx] = Some(Completion {
+            id: resp.id,
+            queue_wait: resp.queue_wait,
+            service: resp.service,
+            worker: resp.worker,
+            batch: resp.batch,
+        });
+        self.received += 1;
+    }
+
+    /// Admission-controlled submit: rejects with a reason instead of
+    /// blocking. Returns the request's submission id.
+    pub fn try_submit(&mut self, input: Tensor<i8>) -> Result<u64, SubmitRejected> {
+        let id = self.next_id;
+        match self.queue.try_push(Request { id, input, submitted: Instant::now() }) {
+            Ok(()) => {
+                self.next_id += 1;
+                self.accepted += 1;
+                self.outputs.push(None);
+                self.completions.push(None);
+                Ok(id)
+            }
+            Err(e) => {
+                match e {
+                    SubmitRejected::QueueFull { .. } => self.rejected_full += 1,
+                    SubmitRejected::ShuttingDown => self.rejected_shutdown += 1,
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocking submit: waits for queue room (closed-loop replay).
+    pub fn submit(&mut self, input: Tensor<i8>) -> Result<u64, SubmitRejected> {
+        let id = self.next_id;
+        match self.queue.push_wait(Request { id, input, submitted: Instant::now() }) {
+            Ok(()) => {
+                self.next_id += 1;
+                self.accepted += 1;
+                self.outputs.push(None);
+                self.completions.push(None);
+                Ok(id)
+            }
+            Err(e) => {
+                self.rejected_shutdown += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Drain every completion that has already arrived (non-blocking).
+    /// Returns the newly observed completions, in arrival order.
+    pub fn poll(&mut self) -> Vec<Completion> {
+        let mut fresh = Vec::new();
+        loop {
+            // Two steps (receive, then match) so the channel borrow ends
+            // before `record` re-borrows self mutably.
+            let received = self.rx.try_recv();
+            let resp = match received {
+                Ok(resp) => resp,
+                Err(_) => break,
+            };
+            let id = resp.id as usize;
+            self.record(resp);
+            if let Some(c) = &self.completions[id] {
+                fresh.push(c.clone());
+            }
+        }
+        fresh
+    }
+
+    /// Block until every accepted request has completed.
+    pub fn wait_all(&mut self) {
+        while self.received < self.accepted {
+            match self.rx.recv() {
+                Ok(resp) => self.record(resp),
+                Err(_) => break, // workers gone; remaining never arrive
+            }
+        }
+    }
+
+    /// Completion record of request `id`, if it has finished.
+    pub fn completion(&self, id: u64) -> Option<&Completion> {
+        self.completions.get(id as usize).and_then(|c| c.as_ref())
+    }
+
+    /// Requests admitted so far.
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Requests rejected by admission control so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_shutdown
+    }
+
+    /// Completions observed so far.
+    pub fn completed(&self) -> u64 {
+        self.received
+    }
+
+    /// Current bounded-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Ungate a pool started with `start_paused`.
+    pub fn resume(&mut self) {
+        self.queue.resume();
+    }
+}
+
+/// Final report of one threaded pool run.
+#[derive(Debug)]
+pub struct ThreadedReport {
+    /// One output per accepted request, in submission order — the
+    /// vector compared bit-for-bit against the simulated oracle's.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Per-request timing, indexed like `outputs`.
+    pub completions: Vec<Completion>,
+    /// Pool-level plan counters (hits + misses = VTA-node lookups;
+    /// misses = unique plans compiled, exactly once per pool).
+    pub cache: PlanCacheStats,
+    /// Per-worker counters, indexed by worker thread.
+    pub threads: Vec<ThreadCounter>,
+    /// Queue-wait distribution across all requests.
+    pub queue_wait: LatencyHistogram,
+    /// Service-time distribution across all requests.
+    pub service: LatencyHistogram,
+    /// Requests admitted.
+    pub accepted: u64,
+    /// Requests shed by admission control.
+    pub rejected: u64,
+    /// Wall-clock span of the whole run (spawn → drained).
+    pub wall: Duration,
+}
+
+impl ThreadedReport {
+    /// Measured (not modeled) throughput: accepted requests over the
+    /// run's wall-clock span.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.accepted as f64 / secs
+        }
+    }
+}
+
+/// Run a threaded pool over `g`: spawn one worker per replica, hand the
+/// driver a [`PoolHandle`] to feed the queue, then close, drain, join,
+/// and assemble the [`ThreadedReport`]. Worker threads are scoped — the
+/// graph, the precomputed plan keys, and the pool replicas are borrowed,
+/// not cloned.
+pub fn run_threaded<T>(
+    cfg: &VtaConfig,
+    opts: &ThreadedOptions,
+    records: &TuningRecords,
+    g: &Graph,
+    driver: impl FnOnce(&mut PoolHandle) -> T,
+) -> Result<(T, ThreadedReport), ExecError> {
+    assert!(opts.virtual_threads == 1 || opts.virtual_threads == 2, "1 or 2 virtual threads");
+    let t0 = Instant::now();
+    let config_fp = config_fingerprint(cfg);
+    let stage_order = stages(g);
+    let keys = plan_keys_for(config_fp, opts.virtual_threads, g);
+    let schedules = tuned_schedules_for(records, config_fp, opts.virtual_threads, g);
+    let threads = opts.threads.max(1);
+    let mut pool = DevicePool::new(cfg, opts.dram_size, threads);
+    let queue = RequestQueue::new(opts.queue_capacity, opts.start_paused);
+    let directory = PlanDirectory::new(opts.cache_capacity);
+    let clock_hz = cfg.clock_hz;
+    let (tx, rx) = mpsc::channel::<Response>();
+
+    let shared = PoolShared {
+        queue: &queue,
+        directory: &directory,
+        g,
+        stage_order: &stage_order,
+        keys: &keys,
+        schedules: &schedules,
+        virtual_threads: opts.virtual_threads,
+        max_batch: opts.max_batch,
+        clock_hz,
+    };
+
+    let (value, mut handle, counters) = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(threads);
+        for (worker, rt) in pool.iter_mut().enumerate() {
+            let tx = tx.clone();
+            let shared = &shared;
+            joins.push(scope.spawn(move || worker_loop(worker, rt, shared, tx)));
+        }
+        drop(tx);
+
+        let mut handle = PoolHandle {
+            queue: &queue,
+            rx,
+            next_id: 0,
+            accepted: 0,
+            rejected_full: 0,
+            rejected_shutdown: 0,
+            outputs: Vec::new(),
+            completions: Vec::new(),
+            received: 0,
+            first_error: None,
+            queue_wait: LatencyHistogram::default(),
+            service: LatencyHistogram::default(),
+        };
+        let value = driver(&mut handle);
+
+        // Graceful drain: stop admitting, serve what's queued, join.
+        queue.close();
+        let mut counters = Vec::with_capacity(joins.len());
+        for join in joins {
+            match join.join() {
+                Ok(counter) => counters.push(counter),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        // Workers are gone; pick up every remaining response.
+        loop {
+            let received = handle.rx.try_recv();
+            let resp = match received {
+                Ok(resp) => resp,
+                Err(_) => break,
+            };
+            handle.record(resp);
+        }
+        (value, handle, counters)
+    });
+
+    if let Some(e) = handle.first_error.take() {
+        return Err(e);
+    }
+    let outputs: Vec<Tensor<i8>> = handle
+        .outputs
+        .into_iter()
+        .map(|o| o.expect("every accepted request produced an output"))
+        .collect();
+    let completions: Vec<Completion> = handle
+        .completions
+        .into_iter()
+        .map(|c| c.expect("every accepted request completed"))
+        .collect();
+    Ok((
+        value,
+        ThreadedReport {
+            outputs,
+            completions,
+            cache: directory.stats(),
+            threads: counters,
+            queue_wait: handle.queue_wait,
+            service: handle.service,
+            accepted: handle.accepted,
+            rejected: handle.rejected_full + handle.rejected_shutdown,
+            wall: t0.elapsed(),
+        },
+    ))
+}
+
+/// Closed-loop convenience: replay a request trace through a threaded
+/// pool (blocking submits — nothing is shed) and return the drained
+/// report. The exact counterpart of feeding the same trace to the
+/// simulated [`Scheduler`](super::Scheduler), which is what the
+/// oracle-equivalence suite does.
+pub fn serve_trace(
+    cfg: &VtaConfig,
+    opts: &ThreadedOptions,
+    records: &TuningRecords,
+    g: &Graph,
+    inputs: &[Tensor<i8>],
+) -> Result<ThreadedReport, ExecError> {
+    let ((), report) = run_threaded(cfg, opts, records, g, |handle| {
+        for input in inputs {
+            handle.submit(input.clone()).expect("queue open while driver runs");
+        }
+    })?;
+    Ok(report)
+}

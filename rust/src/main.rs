@@ -21,7 +21,14 @@
 //!   record store), print the serial-vs-pipelined comparison, then
 //!   drain the same traffic through the multi-device scheduler
 //!   (`--devices` replicas, dynamic batching) and self-verify the pool
-//!   outputs bit-exactly against the single-device engine.
+//!   outputs bit-exactly against the single-device engine. With
+//!   `--threads N` the same trace also runs through the **real-threads**
+//!   pool (one OS worker per replica, bounded queue, shared plan
+//!   directory), self-verified bit-exactly against the simulated
+//!   scheduler oracle; `--qps LIST` then drives an open-loop Poisson
+//!   ramp and prints per-step latency percentiles and SLO attainment,
+//!   and `--require-speedup X` gates measured multi-thread throughput
+//!   against the 1-thread baseline.
 //! * `dse [--budget N] [--tune-trials N] [--seed N] [--top N]
 //!   [--devices N] [--workload tiny|resnet] [--records FILE]
 //!   [--require-improvement]` — design-space exploration: search
@@ -38,7 +45,10 @@ use std::process::ExitCode;
 use vta::arch::{load_config, VtaConfig};
 use vta::compiler::{lower_conv2d, pack_activations, pack_weights};
 use vta::dse::{run_dse, DseOptions, TuningRecords};
-use vta::exec::{CpuBackend, Executor, PjrtCache, Scheduler, SchedulerOptions, ServingEngine};
+use vta::exec::{
+    open_loop, run_threaded, serve_trace, CpuBackend, Executor, LoadgenOptions, PjrtCache,
+    Scheduler, SchedulerOptions, ServingEngine, ThreadedOptions,
+};
 use vta::graph::resnet::{self, synth_input, TABLE1};
 use vta::graph::{fuse, partition, style, PartitionPolicy, Placement};
 use vta::metrics::Roofline;
@@ -66,6 +76,12 @@ struct Flags {
     max_batch: usize,
     batch_deadline_ms: f64,
     require_scaling: Option<f64>,
+    threads: usize,
+    queue: usize,
+    qps: Vec<f64>,
+    qps_requests: usize,
+    slo_ms: f64,
+    require_speedup: Option<f64>,
     offload_dense: bool,
     offload_alu: bool,
     offload_upsample: bool,
@@ -93,6 +109,12 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         max_batch: 8,
         batch_deadline_ms: 1.0,
         require_scaling: None,
+        threads: 0,
+        queue: 64,
+        qps: Vec::new(),
+        qps_requests: 32,
+        slo_ms: 50.0,
+        require_speedup: None,
         offload_dense: false,
         offload_alu: false,
         offload_upsample: false,
@@ -176,6 +198,66 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     "--require-scaling must be a positive factor"
                 );
                 f.require_scaling = Some(x);
+            }
+            "--threads" => {
+                i += 1;
+                f.threads = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--threads needs a worker count"))?
+                    .parse()?;
+            }
+            "--queue" => {
+                i += 1;
+                f.queue = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--queue needs a capacity"))?
+                    .parse()?;
+                anyhow::ensure!(f.queue >= 1, "--queue needs at least 1 slot");
+            }
+            "--qps" => {
+                i += 1;
+                let spec = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--qps needs a comma-separated rate list"))?;
+                f.qps = spec
+                    .split(',')
+                    .map(|s| s.trim().parse::<f64>())
+                    .collect::<Result<Vec<_>, _>>()?;
+                anyhow::ensure!(
+                    !f.qps.is_empty() && f.qps.iter().all(|&q| q > 0.0 && q.is_finite()),
+                    "--qps rates must be positive and finite"
+                );
+            }
+            "--qps-requests" => {
+                i += 1;
+                f.qps_requests = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--qps-requests needs a count"))?
+                    .parse()?;
+                anyhow::ensure!(f.qps_requests >= 1, "--qps-requests needs at least 1");
+            }
+            "--slo" => {
+                i += 1;
+                f.slo_ms = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--slo needs milliseconds"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    f.slo_ms > 0.0 && f.slo_ms.is_finite(),
+                    "--slo must be positive finite milliseconds"
+                );
+            }
+            "--require-speedup" => {
+                i += 1;
+                let x: f64 = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--require-speedup needs a factor"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    x > 0.0 && x.is_finite(),
+                    "--require-speedup must be a positive factor"
+                );
+                f.require_speedup = Some(x);
             }
             "--records" => {
                 i += 1;
@@ -296,6 +378,12 @@ fn print_usage() {
          \x20 --max-batch N             serve: dynamic-batching batch-size cap (default 8)\n\
          \x20 --batch-deadline MS       serve: dynamic-batching deadline in simulated ms (default 1.0)\n\
          \x20 --require-scaling X       serve: exit nonzero unless the pool models >= X x the 1-device throughput\n\
+         \x20 --threads N               serve: real worker threads (0 = simulated pool only, default 0)\n\
+         \x20 --queue N                 serve: threaded request-queue capacity (default 64)\n\
+         \x20 --qps LIST                serve: open-loop ramp rates, comma-separated (e.g. 50,200,800)\n\
+         \x20 --qps-requests N          serve: arrivals offered per ramp step (default 32)\n\
+         \x20 --slo MS                  serve: latency SLO for ramp attainment, wall ms (default 50)\n\
+         \x20 --require-speedup X       serve: exit nonzero unless N threads measure >= X x the 1-thread throughput\n\
          \x20 --records FILE            serve: load tuned schedules; dse: persist them\n\
          \x20 --budget N                dse: hardware candidates to evaluate (default 16)\n\
          \x20 --tune-trials N           dse: schedule candidates per (config, op) (default 4)\n\
@@ -584,7 +672,7 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         // the modeled makespan gives the device-scaling factor.
         let mut base_opts = opts;
         base_opts.devices = 1;
-        let mut base = Scheduler::with_records(cfg, CpuBackend::Native, base_opts, records);
+        let mut base = Scheduler::with_records(cfg, CpuBackend::Native, base_opts, records.clone());
         for input in &pool_inputs {
             base.submit(0.0, input.clone());
         }
@@ -611,6 +699,141 @@ fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         }
     } else if let Some(need) = flags.require_scaling {
         anyhow::bail!("--require-scaling {need} needs --devices > 1");
+    }
+
+    // ---- real threads: the same trace through the threaded pool -------
+    if flags.threads > 0 {
+        cmd_serve_threaded(cfg, flags, &g, &pool_inputs, &pool, &records, size)?;
+    } else {
+        anyhow::ensure!(
+            flags.qps.is_empty() && flags.require_speedup.is_none(),
+            "--qps and --require-speedup need --threads > 0"
+        );
+    }
+    Ok(())
+}
+
+/// The `--threads` leg of `vta serve`: replay the pool trace through
+/// the real-threads runtime, self-verify bit-exactly against the
+/// simulated scheduler oracle, then (optionally) drive an open-loop
+/// Poisson ramp and gate measured thread scaling.
+fn cmd_serve_threaded(
+    cfg: &VtaConfig,
+    flags: &Flags,
+    g: &vta::graph::Graph,
+    pool_inputs: &[vta::util::Tensor<i8>],
+    oracle: &vta::exec::PoolReport,
+    records: &TuningRecords,
+    size: usize,
+) -> anyhow::Result<()> {
+    let mut topts = ThreadedOptions::new(flags.threads);
+    topts.queue_capacity = flags.queue;
+    topts.max_batch = flags.max_batch;
+    topts.cache_capacity = flags.cache;
+    topts.virtual_threads = flags.vt;
+    topts.dram_size = 512 << 20;
+
+    let report = serve_trace(cfg, &topts, records, g, pool_inputs)?;
+    println!(
+        "\nthreaded pool of {} worker(s): {} requests, wall {:.2?}, \
+         measured throughput {:.1} inf/s; plan directory misses {} / hits {}",
+        flags.threads,
+        pool_inputs.len(),
+        report.wall,
+        report.throughput_rps(),
+        report.cache.misses,
+        report.cache.hits
+    );
+    println!(
+        "queue wait p50 {:.2} ms / p99 {:.2} ms; service p50 {:.2} ms / p99 {:.2} ms",
+        report.queue_wait.percentile(0.50) * 1e3,
+        report.queue_wait.percentile(0.99) * 1e3,
+        report.service.percentile(0.50) * 1e3,
+        report.service.percentile(0.99) * 1e3
+    );
+    let per_thread: Vec<String> = report
+        .threads
+        .iter()
+        .enumerate()
+        .map(|(t, c)| format!("t{t} {}req/{}batch", c.requests, c.batches))
+        .collect();
+    println!("per-thread: {}", per_thread.join(", "));
+
+    // Oracle equivalence: the simulated scheduler served this exact
+    // trace above — outputs must be bit-identical in submission order
+    // and pool-level cache counters must agree.
+    anyhow::ensure!(
+        report.outputs.len() == oracle.outputs.len(),
+        "threaded pool answered {} of {} requests",
+        report.outputs.len(),
+        oracle.outputs.len()
+    );
+    for (i, out) in report.outputs.iter().enumerate() {
+        anyhow::ensure!(
+            out == &oracle.outputs[i],
+            "threaded output {i} diverged from the simulated scheduler oracle"
+        );
+    }
+    anyhow::ensure!(
+        report.cache.misses == oracle.cache.misses && report.cache.hits == oracle.cache.hits,
+        "threaded plan directory ({} misses / {} hits) fell out of step with the \
+         oracle ({} misses / {} hits)",
+        report.cache.misses,
+        report.cache.hits,
+        oracle.cache.misses,
+        oracle.cache.hits
+    );
+    println!("threaded outputs and cache counters match the simulated oracle bit-exactly");
+
+    // Measured thread scaling (wall-clock, so only meaningful on a
+    // multi-core host — CI gates it, laptops just print it).
+    if let Some(need) = flags.require_speedup {
+        anyhow::ensure!(flags.threads > 1, "--require-speedup {need} needs --threads > 1");
+        let mut one = topts.clone();
+        one.threads = 1;
+        let base = serve_trace(cfg, &one, records, g, pool_inputs)?;
+        let speedup = base.wall.as_secs_f64() / report.wall.as_secs_f64().max(1e-9);
+        println!(
+            "thread scaling: 1 thread {:.2?} -> {} threads {:.2?} ({speedup:.2}x measured)",
+            base.wall, flags.threads, report.wall
+        );
+        anyhow::ensure!(
+            speedup >= need,
+            "measured thread speedup {speedup:.2}x is below the required {need:.2}x"
+        );
+        println!("speedup gate passed: {speedup:.2}x >= {need:.2}x");
+    }
+
+    // Open-loop Poisson ramp against a fresh pool.
+    if !flags.qps.is_empty() {
+        let lopts = LoadgenOptions::ramp(&flags.qps, flags.qps_requests, flags.slo_ms * 1e-3);
+        let (load, ramp_report) = run_threaded(cfg, &topts, records, g, |handle| {
+            open_loop(handle, &lopts, |i| synth_input(7 + i, 1, 3, size, size))
+        })?;
+        println!("\nopen-loop ramp ({} step(s), SLO {:.0} ms):", load.steps.len(), flags.slo_ms);
+        println!(
+            "{:>8} {:>8} {:>9} {:>9} {:>9} {:>9} {:>8} {:>10}",
+            "qps", "offered", "shed", "p50 ms", "p99 ms", "p99.9 ms", "SLO %", "meas inf/s"
+        );
+        for s in &load.steps {
+            println!(
+                "{:>8.1} {:>8} {:>9} {:>9.2} {:>9.2} {:>9.2} {:>7.1}% {:>10.1}",
+                s.qps,
+                s.offered,
+                s.rejected,
+                s.p50 * 1e3,
+                s.p99 * 1e3,
+                s.p999 * 1e3,
+                s.slo_attainment * 100.0,
+                s.throughput_rps
+            );
+        }
+        println!(
+            "ramp totals: {} offered, {} shed, {} plan compiles across the pool",
+            load.offered(),
+            load.rejected(),
+            ramp_report.cache.misses
+        );
     }
     Ok(())
 }

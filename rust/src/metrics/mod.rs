@@ -167,6 +167,155 @@ impl DeviceCounter {
     }
 }
 
+/// Wall-clock latency histogram for the threaded serving runtime:
+/// power-of-two microsecond buckets plus exact count / sum / min / max,
+/// so queue-wait and service-time distributions can be accumulated
+/// online without retaining per-request samples. Percentile queries
+/// interpolate inside the covering bucket and clamp to the exact
+/// observed `[min, max]` — an empty histogram reports zero everywhere,
+/// and a single-sample histogram reports that sample at every
+/// percentile (the two edge cases the unit tests pin down).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// `buckets[b]` counts samples with `floor(log2(micros)) == b`
+    /// (sub-microsecond samples land in bucket 0; the last bucket is
+    /// open-ended).
+    buckets: [u64; LATENCY_BUCKETS],
+    count: u64,
+    sum_seconds: f64,
+    min_seconds: f64,
+    max_seconds: f64,
+}
+
+/// 48 power-of-two buckets: 1 µs up to ~2^47 µs (≈ 4.5 years) — wide
+/// enough that the open-ended tail bucket is never hit in practice.
+const LATENCY_BUCKETS: usize = 48;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: [0; LATENCY_BUCKETS],
+            count: 0,
+            sum_seconds: 0.0,
+            min_seconds: 0.0,
+            max_seconds: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(seconds: f64) -> usize {
+        let micros = (seconds.max(0.0) * 1e6) as u64;
+        (63 - micros.max(1).leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Record one latency sample (seconds; negatives clamp to zero).
+    pub fn record(&mut self, seconds: f64) {
+        let s = seconds.max(0.0);
+        if self.count == 0 {
+            self.min_seconds = s;
+            self.max_seconds = s;
+        } else {
+            self.min_seconds = self.min_seconds.min(s);
+            self.max_seconds = self.max_seconds.max(s);
+        }
+        self.count += 1;
+        self.sum_seconds += s;
+        self.buckets[Self::bucket_of(s)] += 1;
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency in seconds (zero when empty).
+    pub fn mean_seconds(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_seconds / self.count as f64
+        }
+    }
+
+    /// Smallest recorded sample (zero when empty).
+    pub fn min_seconds(&self) -> f64 {
+        self.min_seconds
+    }
+
+    /// Largest recorded sample (zero when empty).
+    pub fn max_seconds(&self) -> f64 {
+        self.max_seconds
+    }
+
+    /// Approximate percentile `p` ∈ [0, 1] in seconds: the sample at
+    /// rank `ceil(p·count)` located by cumulative bucket counts, read
+    /// off as the bucket midpoint and clamped to the exact observed
+    /// range. Zero when empty; exact with a single sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                let lo = (1u64 << b) as f64 * 1e-6;
+                let mid = lo * 1.5;
+                return mid.clamp(self.min_seconds, self.max_seconds);
+            }
+        }
+        self.max_seconds
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min_seconds = other.min_seconds;
+            self.max_seconds = other.max_seconds;
+        } else {
+            self.min_seconds = self.min_seconds.min(other.min_seconds);
+            self.max_seconds = self.max_seconds.max(other.max_seconds);
+        }
+        self.count += other.count;
+        self.sum_seconds += other.sum_seconds;
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+}
+
+/// Per-worker-thread counters of the threaded serving runtime — the
+/// real-time analogue of [`DeviceCounter`] (which accounts *simulated*
+/// busy seconds under the simulated-time scheduler).
+#[derive(Clone, Debug, Default)]
+pub struct ThreadCounter {
+    /// Requests this worker served.
+    pub requests: u64,
+    /// Batches this worker pulled off the shared queue.
+    pub batches: u64,
+    /// Wall-clock time spent serving (outside the queue wait).
+    pub busy: std::time::Duration,
+    /// Largest batch this worker pulled (≤ the configured `max_batch`;
+    /// trailing partial batches at stream end make smaller ones
+    /// common).
+    pub max_batch: usize,
+}
+
+impl ThreadCounter {
+    /// Account one batch of `requests` served in `busy` wall time.
+    pub fn record_batch(&mut self, requests: usize, busy: std::time::Duration) {
+        self.requests += requests as u64;
+        self.batches += 1;
+        self.busy += busy;
+        self.max_batch = self.max_batch.max(requests);
+    }
+}
+
 /// The scheduler's exported counters: one queue gauge plus one
 /// [`DeviceCounter`] per pool replica.
 #[derive(Clone, Debug, Default)]
@@ -239,6 +388,98 @@ mod tests {
         flat.record(0.0, 1);
         assert_eq!(flat.max_depth(), 3);
         assert!((flat.mean_depth() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_histogram_empty_reports_zero_everywhere() {
+        // The empty-queue edge case: a pool that never saw a request
+        // must report zeros, not NaNs or panics.
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_seconds(), 0.0);
+        assert_eq!(h.min_seconds(), 0.0);
+        assert_eq!(h.max_seconds(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.percentile(0.999), 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_single_sample_is_exact_at_every_percentile() {
+        let mut h = LatencyHistogram::default();
+        h.record(0.0042);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean_seconds() - 0.0042).abs() < 1e-12);
+        assert_eq!(h.min_seconds(), 0.0042);
+        assert_eq!(h.max_seconds(), 0.0042);
+        // min == max, so the bucket-midpoint estimate clamps to the
+        // exact sample at every percentile.
+        for p in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.percentile(p), 0.0042, "p={p}");
+        }
+    }
+
+    #[test]
+    fn latency_histogram_percentiles_are_ordered_and_bounded() {
+        let mut h = LatencyHistogram::default();
+        // 99 fast samples at 1 ms, one slow outlier at 1 s.
+        for _ in 0..99 {
+            h.record(0.001);
+        }
+        h.record(1.0);
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        let p999 = h.percentile(0.999);
+        assert!(p50 <= p99 && p99 <= p999, "p50={p50} p99={p99} p999={p999}");
+        assert!(p50 >= h.min_seconds() && p999 <= h.max_seconds());
+        // The p99.9 must see the outlier's bucket, not the fast mode.
+        assert!(p999 > 0.1, "p999={p999} should reflect the 1 s outlier");
+        // Negative samples clamp to zero instead of corrupting state.
+        h.record(-1.0);
+        assert_eq!(h.min_seconds(), 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_merge_matches_combined_recording() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        let mut both = LatencyHistogram::default();
+        for &s in &[0.001, 0.002, 0.004] {
+            a.record(s);
+            both.record(s);
+        }
+        for &s in &[0.0005, 0.080] {
+            b.record(s);
+            both.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert!((a.mean_seconds() - both.mean_seconds()).abs() < 1e-12);
+        assert_eq!(a.min_seconds(), both.min_seconds());
+        assert_eq!(a.max_seconds(), both.max_seconds());
+        for p in [0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile(p), both.percentile(p), "p={p}");
+        }
+        // Merging an empty histogram is a no-op.
+        let before = a.clone();
+        a.merge(&LatencyHistogram::default());
+        assert_eq!(a.count(), before.count());
+        assert_eq!(a.min_seconds(), before.min_seconds());
+    }
+
+    #[test]
+    fn thread_counters_accumulate_batches() {
+        use std::time::Duration;
+        let mut t = ThreadCounter::default();
+        assert_eq!(t.requests, 0);
+        assert_eq!(t.max_batch, 0);
+        t.record_batch(2, Duration::from_millis(10));
+        t.record_batch(4, Duration::from_millis(30));
+        t.record_batch(1, Duration::from_millis(5)); // trailing partial batch
+        assert_eq!(t.requests, 7);
+        assert_eq!(t.batches, 3);
+        assert_eq!(t.max_batch, 4);
+        assert_eq!(t.busy, Duration::from_millis(45));
     }
 
     #[test]

@@ -60,6 +60,14 @@ impl DevicePool {
         &mut self.replicas
     }
 
+    /// Disjoint mutable borrows of **all** replicas at once — the
+    /// threaded serving runtime hands one to each worker thread
+    /// (`VtaRuntime` is plain owned data, hence `Send`; scoped threads
+    /// borrow the replicas for the lifetime of the pool run).
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, VtaRuntime> {
+        self.replicas.iter_mut()
+    }
+
     /// Disjoint mutable borrows of replicas `a` and `b` (`a != b`) —
     /// the plan-replication path reads source DRAM while writing the
     /// destination.

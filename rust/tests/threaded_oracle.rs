@@ -1,0 +1,173 @@
+//! Real-threads oracle equivalence: the threaded pool (one OS worker
+//! per replica, bounded queue, publish-barrier plan directory) must
+//! reproduce the simulated-time [`Scheduler`] **bit-exactly** — on a
+//! resnet-family graph and the style-transfer graph, across
+//! virtual-thread modes (vt = 1 / 2), partition policies (paper
+//! conv-only rule vs offload-all), and thread counts (1 / 2 / 4).
+//! Execution is exact in this stack; real concurrency must never leak
+//! into results, and the pool-level plan-directory counters (misses =
+//! unique plans, compiled once per pool; hits = the rest of the
+//! lookups) must land exactly where the simulated oracle's lockstep
+//! caches do.
+
+use vta::arch::VtaConfig;
+use vta::compiler::{Conv2dParams, MatmulParams, Requant};
+use vta::dse::TuningRecords;
+use vta::exec::{
+    serve_trace, CpuBackend, Scheduler, SchedulerOptions, ServingEngine, ThreadedOptions,
+};
+use vta::graph::style::style_net;
+use vta::graph::{partition, Graph, Op, PartitionPolicy};
+use vta::util::{Tensor, XorShiftRng};
+
+fn rand_t(seed: u64, shape: &[usize]) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(shape, rng.vec_i8(shape.iter().product(), -8, 8)).unwrap()
+}
+
+fn conv_p(h: usize, ic: usize, oc: usize, relu: bool) -> Conv2dParams {
+    Conv2dParams { h, w: h, ic, oc, k: 3, s: 1, requant: Requant { shift: 6, relu } }
+}
+
+/// A miniature ResNet: conv stem, two residual basic blocks, global
+/// average pooling, dense classifier — the ResNet-18 topology at test
+/// scale (16x16 input, 16 channels), deterministic in its weight seed.
+fn mini_resnet(wseed: u64) -> Graph {
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 3, 16, 16] }, &[]).unwrap();
+    let stem = g.add("stem", Op::Conv2d { p: conv_p(16, 3, 16, true) }, &[x]).unwrap();
+    g.set_weights(stem, rand_t(wseed, &[16, 3, 3, 3]));
+    let mut cur = stem;
+    for b in 0u64..2 {
+        let c1 = g
+            .add(&format!("b{b}c1"), Op::Conv2d { p: conv_p(16, 16, 16, true) }, &[cur])
+            .unwrap();
+        g.set_weights(c1, rand_t(wseed + 10 + b * 2, &[16, 16, 3, 3]));
+        let c2 = g
+            .add(&format!("b{b}c2"), Op::Conv2d { p: conv_p(16, 16, 16, false) }, &[c1])
+            .unwrap();
+        g.set_weights(c2, rand_t(wseed + 11 + b * 2, &[16, 16, 3, 3]));
+        let add = g.add(&format!("b{b}add"), Op::Add, &[c2, cur]).unwrap();
+        cur = g.add(&format!("b{b}relu"), Op::Relu, &[add]).unwrap();
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, &[cur]).unwrap();
+    let p = MatmulParams { m: 1, k: 16, n: 10, requant: Requant { shift: 2, relu: false } };
+    let fc = g.add("fc", Op::Dense { p }, &[gap]).unwrap();
+    g.set_weights(fc, rand_t(wseed + 99, &[10, 16]));
+    g
+}
+
+/// The shared matrix: for every (vt, policy) cell, serve the same
+/// 6-request trace through the single-device engine (the plan-count
+/// reference), the simulated scheduler (the oracle), and threaded
+/// pools of 1 / 2 / 4 workers. Every threaded output must be
+/// bit-identical to the oracle's in submission order, and the plan
+/// directory's hit/miss totals must equal the oracle's exactly.
+fn check_threaded_oracle<F: Fn() -> Graph>(name: &str, build: F, size: usize) {
+    let cfg = VtaConfig::pynq();
+    let records = TuningRecords::new();
+    let inputs: Vec<_> = (0..6).map(|i| rand_t(3000 + i as u64, &[1, 3, size, size])).collect();
+    for vt in [1usize, 2] {
+        for offload_all in [false, true] {
+            let mut g = build();
+            let mut policy = if offload_all {
+                PartitionPolicy::offload_all(&cfg)
+            } else {
+                PartitionPolicy::paper(&cfg)
+            };
+            policy.virtual_threads = vt;
+            let (vta_nodes, _) = partition(&mut g, &policy);
+            assert!(vta_nodes > 0, "{name} vt={vt} offload_all={offload_all}: nothing offloaded");
+
+            // Single-device engine: the unique-plan reference.
+            let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, vt, 64);
+            let batch = eng.run_batch(&g, &inputs).unwrap();
+            let unique_plans = batch.cache.misses;
+
+            // Simulated scheduler: the deterministic oracle.
+            let opts = SchedulerOptions {
+                devices: 1,
+                max_batch: 2,
+                batch_deadline: 0.0,
+                cache_capacity: 64,
+                virtual_threads: vt,
+                dram_size: 256 << 20,
+            };
+            let mut sched = Scheduler::new(&cfg, CpuBackend::Native, opts);
+            for input in &inputs {
+                sched.submit(0.0, input.clone());
+            }
+            let oracle = sched.run(&g).unwrap();
+            for (i, out) in oracle.outputs.iter().enumerate() {
+                assert_eq!(
+                    out, &batch.outputs[i],
+                    "{name} vt={vt} offload_all={offload_all}: \
+                     oracle diverged from the engine at request {i}"
+                );
+            }
+            assert_eq!(
+                oracle.cache.misses, unique_plans,
+                "{name} vt={vt} offload_all={offload_all}: oracle must compile once per plan"
+            );
+
+            for threads in [1usize, 2, 4] {
+                let mut topts = ThreadedOptions::new(threads);
+                topts.virtual_threads = vt;
+                topts.max_batch = 2;
+                topts.dram_size = 256 << 20;
+                let r = serve_trace(&cfg, &topts, &records, &g, &inputs).unwrap();
+
+                // Bit-exactness, order-independent: outputs come back
+                // keyed by submission id no matter which worker served
+                // them or in what order they finished.
+                assert_eq!(
+                    r.outputs.len(),
+                    inputs.len(),
+                    "{name} vt={vt} offload_all={offload_all} threads={threads}: \
+                     lost or duplicated responses"
+                );
+                for (i, out) in r.outputs.iter().enumerate() {
+                    assert_eq!(
+                        out, &oracle.outputs[i],
+                        "{name} vt={vt} offload_all={offload_all} threads={threads}: \
+                         request {i} diverged from the simulated oracle"
+                    );
+                }
+
+                // Compile-once per pool: directory misses equal the
+                // engine's unique-plan count regardless of how many
+                // workers raced for the publish barrier — and the
+                // hit/miss totals match the oracle's lockstep caches.
+                assert_eq!(
+                    r.cache.misses, unique_plans,
+                    "{name} vt={vt} offload_all={offload_all} threads={threads}: \
+                     pool must compile each plan exactly once"
+                );
+                assert_eq!(
+                    (r.cache.misses, r.cache.hits),
+                    (oracle.cache.misses, oracle.cache.hits),
+                    "{name} vt={vt} offload_all={offload_all} threads={threads}: \
+                     plan-directory counters fell out of step with the oracle"
+                );
+                assert_eq!(r.accepted, inputs.len() as u64);
+                assert_eq!(r.rejected, 0, "closed-loop trace must shed nothing");
+                let served: u64 = r.threads.iter().map(|t| t.requests).sum();
+                assert_eq!(
+                    served,
+                    inputs.len() as u64,
+                    "{name} threads={threads}: per-worker counters must sum to the trace"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn resnet_threaded_pool_matches_the_simulated_oracle() {
+    check_threaded_oracle("mini-resnet", || mini_resnet(7), 16);
+}
+
+#[test]
+fn style_threaded_pool_matches_the_simulated_oracle() {
+    check_threaded_oracle("style", || style_net(1, 16, 16, 42).unwrap(), 16);
+}

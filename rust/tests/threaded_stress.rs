@@ -1,0 +1,217 @@
+//! Threaded-pool stress: admission control under a deliberately tiny
+//! queue, trailing partial-batch flush, graceful shutdown with
+//! in-flight requests, repeated fresh-pool cycles, and a seeded
+//! 200-request soak across 4 workers — no response may ever be lost,
+//! duplicated, or bitwise wrong.
+//!
+//! The deterministic parts use `start_paused`: workers stay gated
+//! until [`PoolHandle::resume`] (or shutdown), so queue contents are
+//! exact at assertion time instead of racing the consumers.
+
+use vta::arch::VtaConfig;
+use vta::compiler::{Conv2dParams, Requant};
+use vta::dse::TuningRecords;
+use vta::exec::{
+    run_threaded, serve_trace, CpuBackend, ServingEngine, SubmitRejected, ThreadedOptions,
+};
+use vta::graph::{partition, Graph, Op, PartitionPolicy};
+use vta::util::{Tensor, XorShiftRng};
+
+fn rand_t(seed: u64, shape: &[usize]) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(shape, rng.vec_i8(shape.iter().product(), -8, 8)).unwrap()
+}
+
+/// The smallest serveable VTA graph: one 8x8 conv — cheap enough for a
+/// 200-request soak in debug builds.
+fn tiny_conv(wseed: u64) -> Graph {
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 3, 8, 8] }, &[]).unwrap();
+    let p = Conv2dParams {
+        h: 8,
+        w: 8,
+        ic: 3,
+        oc: 16,
+        k: 3,
+        s: 1,
+        requant: Requant { shift: 6, relu: true },
+    };
+    let c = g.add("conv", Op::Conv2d { p }, &[x]).unwrap();
+    g.set_weights(c, rand_t(wseed, &[16, 3, 3, 3]));
+    g
+}
+
+/// Partitioned tiny graph plus the engine's reference outputs for the
+/// given inputs (vt = 1, matching `ThreadedOptions::new`).
+fn tiny_with_reference(inputs: &[Tensor<i8>]) -> (Graph, Vec<Tensor<i8>>, u64) {
+    let cfg = VtaConfig::pynq();
+    let mut g = tiny_conv(11);
+    let mut policy = PartitionPolicy::paper(&cfg);
+    policy.virtual_threads = 1;
+    let (vta_nodes, _) = partition(&mut g, &policy);
+    assert!(vta_nodes > 0, "tiny graph must offload its conv");
+    let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, 1, 64);
+    let batch = eng.run_batch(&g, inputs).unwrap();
+    (g, batch.outputs, batch.cache.misses)
+}
+
+#[test]
+fn queue_full_rejects_with_reason_then_drains_cleanly() {
+    let cfg = VtaConfig::pynq();
+    let inputs: Vec<_> = (0..5).map(|i| rand_t(900 + i as u64, &[1, 3, 8, 8])).collect();
+    let (g, expect, _) = tiny_with_reference(&inputs);
+
+    let mut opts = ThreadedOptions::new(2);
+    opts.queue_capacity = 2;
+    opts.start_paused = true;
+    let ((), report) = run_threaded(&cfg, &opts, &TuningRecords::new(), &g, |handle| {
+        // Workers are gated: the first two submissions fill the queue,
+        // the rest must be rejected with the queue-full reason.
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        for input in &inputs {
+            match handle.try_submit(input.clone()) {
+                Ok(_) => accepted += 1,
+                Err(e) => {
+                    assert_eq!(e, SubmitRejected::QueueFull { capacity: 2 });
+                    rejected += 1;
+                }
+            }
+        }
+        assert_eq!((accepted, rejected), (2, 3));
+        assert_eq!(handle.queue_depth(), 2, "gated workers must not have consumed");
+        assert_eq!(handle.accepted(), 2);
+        assert_eq!(handle.rejected(), 3);
+        // Ungate and wait the backlog out: rejection is not loss.
+        handle.resume();
+        handle.wait_all();
+        assert_eq!(handle.completed(), 2);
+    })
+    .unwrap();
+
+    assert_eq!(report.accepted, 2);
+    assert_eq!(report.rejected, 3);
+    assert_eq!(report.outputs.len(), 2, "both admitted requests answered");
+    for (i, out) in report.outputs.iter().enumerate() {
+        assert_eq!(out, &expect[i], "admitted request {i} must still be bit-exact");
+    }
+}
+
+#[test]
+fn trailing_partial_batch_flushes_on_shutdown_with_in_flight_requests() {
+    let cfg = VtaConfig::pynq();
+    let inputs: Vec<_> = (0..6).map(|i| rand_t(700 + i as u64, &[1, 3, 8, 8])).collect();
+    let (g, expect, _) = tiny_with_reference(&inputs);
+
+    // One gated worker, batches of 4, six queued requests: the driver
+    // returns without waiting — shutdown must ungate the worker, flush
+    // a full batch of 4 and the trailing partial batch of 2, and only
+    // then join.
+    let mut opts = ThreadedOptions::new(1);
+    opts.max_batch = 4;
+    opts.queue_capacity = 16;
+    opts.start_paused = true;
+    let ((), report) = run_threaded(&cfg, &opts, &TuningRecords::new(), &g, |handle| {
+        for input in &inputs {
+            handle.submit(input.clone()).unwrap();
+        }
+        // Deliberately no resume(), no wait_all(): everything is
+        // in flight when the driver hands control back.
+    })
+    .unwrap();
+
+    assert_eq!(report.outputs.len(), 6, "graceful drain must serve every queued request");
+    for (i, out) in report.outputs.iter().enumerate() {
+        assert_eq!(out, &expect[i], "request {i} diverged during shutdown drain");
+    }
+    let mut batch_sizes: Vec<usize> = report.completions.iter().map(|c| c.batch).collect();
+    batch_sizes.sort_unstable();
+    assert_eq!(
+        batch_sizes,
+        vec![2, 2, 4, 4, 4, 4],
+        "one full batch of 4 plus the trailing partial batch of 2"
+    );
+    assert_eq!(report.threads.len(), 1);
+    assert_eq!(report.threads[0].requests, 6);
+    assert_eq!(report.threads[0].batches, 2);
+    assert_eq!(report.threads[0].max_batch, 4);
+}
+
+#[test]
+fn repeated_pool_cycles_are_identical() {
+    let cfg = VtaConfig::pynq();
+    let inputs: Vec<_> = (0..8).map(|i| rand_t(500 + i as u64, &[1, 3, 8, 8])).collect();
+    let (g, expect, unique_plans) = tiny_with_reference(&inputs);
+
+    let mut opts = ThreadedOptions::new(2);
+    opts.max_batch = 3;
+    let records = TuningRecords::new();
+    // Every cycle builds a fresh pool: a cold directory must recompile
+    // (compile-once per pool, not per process) and land on identical
+    // outputs and counters each time.
+    for cycle in 0..3 {
+        let r = serve_trace(&cfg, &opts, &records, &g, &inputs).unwrap();
+        assert_eq!(r.outputs.len(), inputs.len(), "cycle {cycle}: lost responses");
+        for (i, out) in r.outputs.iter().enumerate() {
+            assert_eq!(out, &expect[i], "cycle {cycle}: request {i} diverged");
+        }
+        assert_eq!(r.cache.misses, unique_plans, "cycle {cycle}: cold pool compiles once");
+        assert_eq!(
+            r.cache.hits + r.cache.misses,
+            inputs.len() as u64,
+            "cycle {cycle}: one VTA lookup per request on the tiny graph"
+        );
+    }
+}
+
+#[test]
+fn seeded_soak_loses_and_duplicates_nothing() {
+    let cfg = VtaConfig::pynq();
+    const SOAK: usize = 200;
+    const UNIQUE: usize = 8;
+    let unique_inputs: Vec<_> =
+        (0..UNIQUE).map(|i| rand_t(1234 + i as u64, &[1, 3, 8, 8])).collect();
+    let (g, expect, unique_plans) = tiny_with_reference(&unique_inputs);
+
+    let mut opts = ThreadedOptions::new(4);
+    opts.queue_capacity = 32;
+    opts.max_batch = 3;
+    let ((), report) = run_threaded(&cfg, &opts, &TuningRecords::new(), &g, |handle| {
+        for i in 0..SOAK {
+            // Blocking submit: backpressure throttles the producer when
+            // all four workers fall behind.
+            handle.submit(unique_inputs[i % UNIQUE].clone()).unwrap();
+            if i % 16 == 0 {
+                handle.poll();
+            }
+        }
+        handle.wait_all();
+        assert_eq!(handle.accepted(), SOAK as u64);
+        assert_eq!(handle.completed(), SOAK as u64);
+    })
+    .unwrap();
+
+    // No lost, duplicated, or reordered responses: one output per
+    // submission id, each bit-exact with the engine's answer for that
+    // input.
+    assert_eq!(report.outputs.len(), SOAK);
+    assert_eq!(report.completions.len(), SOAK);
+    for (i, out) in report.outputs.iter().enumerate() {
+        assert_eq!(out, &expect[i % UNIQUE], "soak request {i} got the wrong answer");
+    }
+    let mut ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), SOAK, "completion ids must be dense and unique");
+    assert_eq!((ids[0], ids[SOAK - 1]), (0, SOAK as u64 - 1));
+
+    let served: u64 = report.threads.iter().map(|t| t.requests).sum();
+    assert_eq!(served, SOAK as u64, "per-worker counters must sum to the soak");
+    assert_eq!(report.cache.misses, unique_plans, "soak compiles each plan once");
+    assert_eq!(
+        report.cache.hits + report.cache.misses,
+        SOAK as u64,
+        "one directory lookup per request on the tiny graph"
+    );
+    assert_eq!(report.rejected, 0, "blocking submits shed nothing");
+}
