@@ -18,10 +18,23 @@
 //!                  pool — max_batch x deadline sweep on the style
 //!                  graph: batching trades p50 latency for modeled
 //!                  throughput, outputs bit-exact across every setting
+//! * `fleet`      — A8: heterogeneous fleet vs homogeneous pools — the
+//!                  same mixed conv+eltwise trace through a two-group
+//!                  fleet under cost-model vs round-robin routing and
+//!                  through same-budget homogeneous pools; outputs
+//!                  bit-exact across every composition and policy
 //!
-//! Run: `cargo bench --bench ablations [-- <name>]`
+//! Run: `cargo bench --bench ablations [-- <name>]
+//!       [--json PATH] [--check BASELINE] [--pin BASELINE]`
+//!
+//! The snapshot flags cover the `fleet` section and speak the
+//! `BENCH_ablations.json` schema — `--check` enforces every pinned
+//! (non-`null`) deterministic field, `--pin` fills the `null` ones
+//! from the current run (see `common::baseline` for the CI flow).
 
 mod common;
+
+use common::baseline;
 
 use vta::arch::{parse_config_str, VtaConfig};
 use vta::compiler::{lower_conv2d, pack_activations, pack_weights, Conv2dParams, Requant};
@@ -54,6 +67,214 @@ fn main() {
     if common::selected("pool") {
         pool();
     }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = baseline::flag_value(&argv, "--json");
+    let check_path = baseline::flag_value(&argv, "--check");
+    let pin_path = baseline::flag_value(&argv, "--pin");
+    let mut snapshot = None;
+    if common::selected("fleet") {
+        snapshot = Some(fleet());
+    }
+    if json_path.is_some() || check_path.is_some() || pin_path.is_some() {
+        let snapshot = snapshot
+            .expect("--json/--check/--pin snapshot the fleet section, but the filter excluded it");
+        if let Some(path) = &json_path {
+            std::fs::write(path, &snapshot).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+            println!("wrote ablations snapshot to {path}");
+        }
+        if let Some(path) = &pin_path {
+            baseline::pin_baseline("ablations", &snapshot, path);
+        }
+        if let Some(path) = &check_path {
+            baseline::check_against_baseline("ablations", &snapshot, path);
+        }
+    }
+}
+
+/// One fleet ablation run, reduced to what the table and the
+/// `BENCH_ablations.json` snapshot need.
+struct FleetRun {
+    /// Modeled makespan (seconds) of the routed trace.
+    modeled: f64,
+    /// Simulated makespan (seconds) from the fleet scheduler.
+    sim: f64,
+    /// Per-request routed group.
+    routes: Vec<usize>,
+    /// Per-group plan-cache misses / hits.
+    misses: Vec<u64>,
+    hits: Vec<u64>,
+    /// Host wall clock of the simulated run (measured, varies).
+    host_wall_ms: f64,
+    /// FNV-1a fingerprints of the outputs, in submission order.
+    fps: Vec<u64>,
+}
+
+/// A8: heterogeneous fleet vs homogeneous pools — a balanced
+/// conv+eltwise trace (resnet-mini under the paper rule, style net
+/// fully offloaded, both 16x16) through the example two-group fleet
+/// (half-lane ALU variant + stock pynq) under cost-model and
+/// round-robin routing, and through two-device homogeneous pools of
+/// each variant alone. Composition and routing shape timing, never
+/// results: outputs are bit-exact across every run, and cost-model
+/// routing must strictly beat round-robin on the modeled makespan —
+/// the same inequality `serve --fleet --require-routing-win` gates
+/// on. Returns the `BENCH_ablations.json` snapshot.
+fn fleet() -> String {
+    use vta::exec::serve::fleet::{
+        modeled_fleet_makespan, FleetMember, FleetOptions, FleetScheduler, FleetSpec, RoutePolicy,
+    };
+    use vta::exec::serve::fnv1a64;
+    use vta::exec::CpuBackend;
+    use vta::graph::resnet::{resnet_mini, synth_input};
+    use vta::graph::style::style_net;
+    use vta::graph::{partition, Graph, PartitionPolicy};
+
+    println!(
+        "# A8: heterogeneous fleet vs homogeneous pools — mixed resnet-mini + style, \
+         16x16, 8 requests"
+    );
+    let pynq = VtaConfig::pynq();
+    let mut lanes8 = pynq.clone();
+    lanes8.alu_lanes = 8;
+
+    // The two traffic classes (vt=2): conv-bound (resnet-mini, convs
+    // only — models identically on both variants) and eltwise-heavy
+    // (style net fully offloaded — strictly slower on half the lanes).
+    let vt = 2usize;
+    let mut conv_g = resnet_mini(1, 16, 42).expect("resnet-mini graph");
+    let mut conv_p = PartitionPolicy::paper(&pynq);
+    conv_p.virtual_threads = vt;
+    partition(&mut conv_g, &conv_p);
+    let mut style_g = style_net(1, 16, 16, 42).expect("style graph");
+    let mut style_p = PartitionPolicy::offload_all(&pynq);
+    style_p.virtual_threads = vt;
+    partition(&mut style_g, &style_p);
+    let graphs: Vec<&Graph> = vec![&conv_g, &style_g];
+
+    // Balanced alternating trace opening with style (class 1):
+    // round-robin's parity then lands style on the narrow-ALU group.
+    let n_req = 8usize;
+    let classes: Vec<usize> = (0..n_req).map(|i| 1 - i % 2).collect();
+    let inputs: Vec<Tensor<i8>> =
+        (0..n_req).map(|i| synth_input(90 + i as u64, 1, 3, 16, 16)).collect();
+
+    let hetero = FleetSpec::new(vec![
+        FleetMember { cfg: lanes8.clone(), devices: 1 },
+        FleetMember { cfg: pynq.clone(), devices: 1 },
+    ]);
+    let runs: [(&str, FleetSpec, RoutePolicy); 4] = [
+        ("hetero 1+1", hetero.clone(), RoutePolicy::CostModel),
+        ("hetero 1+1", hetero, RoutePolicy::RoundRobin),
+        ("homog lanes8 x2", FleetSpec::homogeneous(&lanes8, 2), RoutePolicy::CostModel),
+        ("homog pynq x2", FleetSpec::homogeneous(&pynq, 2), RoutePolicy::CostModel),
+    ];
+
+    println!(
+        "{:<16} {:<11} {:>11} {:>13} {:>8} {:>14}",
+        "composition", "routing", "modeled ms", "makespan ms", "batches", "routes/group"
+    );
+    let mut outputs: Option<Vec<Tensor<i8>>> = None;
+    let mut results: Vec<FleetRun> = Vec::new();
+    for (name, spec, policy) in runs {
+        let opts = FleetOptions {
+            policy,
+            max_batch: 2,
+            batch_deadline: 0.0,
+            cache_capacity: 64,
+            virtual_threads: vt,
+            dram_size: 256 << 20,
+        };
+        let mut sched = FleetScheduler::new(&spec, CpuBackend::Native, opts);
+        for (i, &c) in classes.iter().enumerate() {
+            sched.submit(0.0, c, inputs[i].clone());
+        }
+        let group_cfgs = sched.group_configs();
+        let group_devices = sched.group_devices();
+        let r = sched.run(&graphs).expect("fleet run");
+        let modeled =
+            modeled_fleet_makespan(&group_cfgs, &group_devices, &graphs, &classes, &r.routes);
+        let spread: Vec<usize> = (0..group_devices.len())
+            .map(|g| r.routes.iter().filter(|&&x| x == g).count())
+            .collect();
+        println!(
+            "{name:<16} {:<11} {:>11.3} {:>13.3} {:>8} {:>14}",
+            format!("{policy:?}"),
+            modeled * 1e3,
+            r.makespan_seconds * 1e3,
+            r.batches.len(),
+            format!("{spread:?}")
+        );
+        match &outputs {
+            None => outputs = Some(r.outputs.clone()),
+            Some(expect) => assert_eq!(
+                &r.outputs, expect,
+                "{name} ({policy:?}): fleet composition/routing changed outputs"
+            ),
+        }
+        results.push(FleetRun {
+            modeled,
+            sim: r.makespan_seconds,
+            routes: r.routes.clone(),
+            misses: r.group_cache.iter().map(|c| c.misses).collect(),
+            hits: r.group_cache.iter().map(|c| c.hits).collect(),
+            host_wall_ms: r.host_wall.as_secs_f64() * 1e3,
+            fps: r
+                .outputs
+                .iter()
+                .map(|t| fnv1a64(t.data().iter().map(|&v| v as u8)))
+                .collect(),
+        });
+    }
+    let (cm, rr) = (&results[0], &results[1]);
+    assert!(
+        cm.modeled < rr.modeled,
+        "cost-model routing must strictly beat round-robin on the modeled makespan: \
+         {:.6e} vs {:.6e}",
+        cm.modeled,
+        rr.modeled
+    );
+    println!(
+        "outputs bit-exact across all compositions and policies; cost-model routing beats \
+         round-robin {:.2}x modeled ({:.2}x simulated)\n",
+        rr.modeled / cm.modeled,
+        rr.sim / cm.sim.max(1e-12)
+    );
+    render_fleet_snapshot(&classes, cm, rr)
+}
+
+/// Render the `BENCH_ablations.json` snapshot from the heterogeneous
+/// cost-model and round-robin runs. Deterministic fields are counters,
+/// routes, fingerprints, and modeled/simulated times (pure functions
+/// of the trace — both timing models are exact arithmetic); `measured`
+/// is host wall clock.
+fn render_fleet_snapshot(classes: &[usize], cm: &FleetRun, rr: &FleetRun) -> String {
+    let join = |v: &[usize]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ");
+    let join64 = |v: &[u64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ");
+    let ns = |s: f64| (s * 1e9).round() as u64;
+    format!(
+        "{{\n  \"schema\": 1,\n  \"workload\": \"fleet-mixed-16x16\",\n  \
+         \"deterministic\": {{\n    \"requests\": {},\n    \"groups\": {},\n    \
+         \"classes\": [{}],\n    \"cost_routes\": [{}],\n    \"roundrobin_routes\": [{}],\n    \
+         \"cost_beats_roundrobin\": {},\n    \"group_misses\": [{}],\n    \
+         \"group_hits\": [{}],\n    \"output_fp\": [{}],\n    \"modeled_cost_ns\": {},\n    \
+         \"modeled_roundrobin_ns\": {},\n    \"sim_cost_ns\": {},\n    \
+         \"sim_roundrobin_ns\": {}\n  }},\n  \"measured\": {{\n    \
+         \"sim_host_wall_ms\": {:.4}\n  }}\n}}\n",
+        classes.len(),
+        cm.misses.len(),
+        join(classes),
+        join(&cm.routes),
+        join(&rr.routes),
+        cm.modeled < rr.modeled,
+        join64(&cm.misses),
+        join64(&cm.hits),
+        join64(&cm.fps),
+        ns(cm.modeled),
+        ns(rr.modeled),
+        ns(cm.sim),
+        ns(rr.sim),
+        cm.host_wall_ms
+    )
 }
 
 /// A7: dynamic-batching knobs over a device pool — how `max_batch` and

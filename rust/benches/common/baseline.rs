@@ -1,0 +1,233 @@
+//! Snapshot-baseline plumbing shared by the bench binaries that keep a
+//! committed JSON baseline (`BENCH_serving.json`,
+//! `BENCH_ablations.json`).
+//!
+//! Every baseline-carrying bench speaks the same three flags:
+//!
+//! * `--json PATH`  — write the freshly rendered snapshot.
+//! * `--check PATH` — diff against a baseline: every non-`null`
+//!   `deterministic.*` field must match the current run **exactly**
+//!   (a `null` baseline field is *unpinned*: reported, not enforced);
+//!   `measured.*` keys are schema-checked only; the schema version
+//!   must match.
+//! * `--pin PATH`   — rewrite the baseline in place, filling every
+//!   `null` deterministic field with the current run's value. Already
+//!   pinned fields and the `measured` schema are left untouched, so
+//!   pinning never weakens a baseline.
+//!
+//! CI composes them: run 1 `--check`s the committed baseline and
+//! `--pin`s a scratch copy; run 2 `--check`s the scratch copy — so
+//! *every* deterministic field is value-diffed across two fresh runs
+//! even while the committed file still carries `null`s. A maintainer
+//! pins the committed file for good with
+//! `cargo bench --bench <name> -- ... --pin BENCH_<name>.json`.
+
+#![allow(dead_code)] // each bench binary uses the subset it needs
+
+use std::fmt::Write as _;
+use vta::dse::records::json::{self, Value};
+
+/// `--name PATH` lookup in a raw argv slice.
+pub fn flag_value(argv: &[String], name: &str) -> Option<String> {
+    argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1)).cloned()
+}
+
+/// Diff a freshly rendered snapshot against a committed baseline.
+///
+/// * `deterministic.*`: every non-`null` baseline field must match the
+///   current run **exactly** — a mismatch fails the bench (and CI). A
+///   `null` baseline field is *unpinned*: its current value is printed
+///   so a maintainer can pin it, but nothing fails.
+/// * `measured.*`: keys present in the baseline must exist in the
+///   current snapshot (schema drift check); values are never compared.
+pub fn check_against_baseline(kind: &str, snapshot: &str, baseline_path: &str) {
+    let text = std::fs::read_to_string(baseline_path)
+        .unwrap_or_else(|e| panic!("reading baseline {baseline_path}: {e}"));
+    let base = json::parse(&text).unwrap_or_else(|e| panic!("baseline {baseline_path}: {e}"));
+    let cur = json::parse(snapshot).expect("freshly rendered snapshot parses");
+
+    let mut errors = Vec::new();
+    let mut unpinned = Vec::new();
+    diff_deterministic(
+        "deterministic",
+        base.get("deterministic").expect("baseline has a deterministic section"),
+        cur.get("deterministic").expect("snapshot has a deterministic section"),
+        &mut errors,
+        &mut unpinned,
+    );
+    match (base.get("schema"), cur.get("schema")) {
+        (Some(b), Some(c)) if b == c => {}
+        (b, c) => errors.push(format!("schema version changed: {b:?} -> {c:?}")),
+    }
+    if let Some(Value::Obj(fields)) = base.get("measured") {
+        let cm = cur.get("measured").expect("snapshot has a measured section");
+        for (k, _) in fields {
+            if cm.get(k).is_none() {
+                errors.push(format!("measured.{k} disappeared from the snapshot"));
+            }
+        }
+    }
+    for path in &unpinned {
+        println!("baseline: {path} is unpinned (null) — current value accepted");
+    }
+    if !errors.is_empty() {
+        panic!("{kind} snapshot diverged from {baseline_path}:\n  {}", errors.join("\n  "));
+    }
+    println!("{kind} snapshot matches the committed baseline ({baseline_path})");
+}
+
+/// Rewrite the baseline at `baseline_path`, pinning every `null`
+/// deterministic field to the current run's value. Non-`null` fields
+/// (and everything outside `deterministic`) pass through unchanged.
+pub fn pin_baseline(kind: &str, snapshot: &str, baseline_path: &str) {
+    let text = std::fs::read_to_string(baseline_path)
+        .unwrap_or_else(|e| panic!("reading baseline {baseline_path}: {e}"));
+    let mut base = json::parse(&text).unwrap_or_else(|e| panic!("baseline {baseline_path}: {e}"));
+    let cur = json::parse(snapshot).expect("freshly rendered snapshot parses");
+    let cur_det = cur.get("deterministic").expect("snapshot has a deterministic section");
+
+    let Value::Obj(fields) = &mut base else {
+        panic!("baseline {baseline_path} is not a JSON object");
+    };
+    let det = fields
+        .iter_mut()
+        .find(|(k, _)| k == "deterministic")
+        .map(|(_, v)| v)
+        .unwrap_or_else(|| panic!("baseline {baseline_path} has no deterministic section"));
+    let pinned = fill_nulls(det, cur_det);
+
+    let mut out = String::new();
+    render(&base, 0, &mut out);
+    out.push('\n');
+    std::fs::write(baseline_path, out).unwrap_or_else(|e| panic!("writing {baseline_path}: {e}"));
+    println!("pinned {pinned} deterministic field(s) of the {kind} baseline ({baseline_path})");
+}
+
+/// Exact structural diff of the deterministic section. Baseline `null`
+/// leaves a field unpinned; objects/arrays recurse; leaves must be
+/// equal.
+fn diff_deterministic(
+    path: &str,
+    base: &Value,
+    cur: &Value,
+    errors: &mut Vec<String>,
+    unpinned: &mut Vec<String>,
+) {
+    match (base, cur) {
+        (Value::Null, _) => unpinned.push(path.to_string()),
+        (Value::Obj(bf), _) => {
+            for (k, bv) in bf {
+                match cur.get(k) {
+                    Some(cv) => {
+                        diff_deterministic(&format!("{path}.{k}"), bv, cv, errors, unpinned)
+                    }
+                    None => errors.push(format!("{path}.{k} missing from the current snapshot")),
+                }
+            }
+        }
+        (Value::Arr(bv), Value::Arr(cv)) => {
+            if bv.len() != cv.len() {
+                errors.push(format!("{path}: length {} -> {}", bv.len(), cv.len()));
+            } else {
+                for (i, (b, c)) in bv.iter().zip(cv).enumerate() {
+                    diff_deterministic(&format!("{path}[{i}]"), b, c, errors, unpinned);
+                }
+            }
+        }
+        (b, c) => {
+            if b != c {
+                errors.push(format!("{path}: baseline {b:?} != current {c:?}"));
+            }
+        }
+    }
+}
+
+/// Replace every `null` in `base` with the matching value from `cur`
+/// (objects by key, equal-length arrays elementwise — a whole-`null`
+/// array field pins wholesale). Returns the number of fields pinned.
+fn fill_nulls(base: &mut Value, cur: &Value) -> usize {
+    match base {
+        Value::Null => {
+            *base = cur.clone();
+            1
+        }
+        Value::Obj(fields) => fields
+            .iter_mut()
+            .filter_map(|(k, v)| cur.get(k).map(|c| fill_nulls(v, c)))
+            .sum(),
+        Value::Arr(items) => match cur {
+            Value::Arr(c) if c.len() == items.len() => {
+                items.iter_mut().zip(c).map(|(b, c)| fill_nulls(b, c)).sum()
+            }
+            _ => 0,
+        },
+        _ => 0,
+    }
+}
+
+/// True for values that render on one line inside an array.
+fn is_scalar(v: &Value) -> bool {
+    !matches!(v, Value::Obj(_) | Value::Arr(_))
+}
+
+/// Render a parsed [`Value`] back to JSON: 2-space indent, objects and
+/// arrays-of-containers multiline, scalar arrays inline — enough to
+/// rewrite a pinned baseline readably, not a general serializer.
+fn render(v: &Value, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    match v {
+        Value::Obj(fields) if fields.is_empty() => out.push_str("{}"),
+        Value::Obj(fields) => {
+            out.push_str("{\n");
+            for (i, (k, val)) in fields.iter().enumerate() {
+                let _ = write!(out, "{}\"{}\": ", "  ".repeat(indent + 1), escape(k));
+                render(val, indent + 1, out);
+                out.push_str(if i + 1 < fields.len() { ",\n" } else { "\n" });
+            }
+            out.push_str(&pad);
+            out.push('}');
+        }
+        Value::Arr(items) if items.is_empty() => out.push_str("[]"),
+        Value::Arr(items) if items.iter().all(is_scalar) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                render(item, indent, out);
+            }
+            out.push(']');
+        }
+        Value::Arr(items) => {
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                out.push_str(&"  ".repeat(indent + 1));
+                render(item, indent + 1, out);
+                out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+            }
+            out.push_str(&pad);
+            out.push(']');
+        }
+        Value::Str(s) => {
+            let _ = write!(out, "\"{}\"", escape(s));
+        }
+        Value::Num(n) => {
+            let _ = write!(out, "{n}");
+        }
+        // `{:?}` prints the shortest decimal that round-trips — always
+        // a valid JSON number for finite floats (the parser rejects
+        // non-finite ones on the way in).
+        Value::Float(x) => {
+            let _ = write!(out, "{x:?}");
+        }
+        Value::Bool(b) => {
+            let _ = write!(out, "{b}");
+        }
+        Value::Null => out.push_str("null"),
+    }
+}
+
+/// The two escapes the in-tree JSON parser understands.
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}

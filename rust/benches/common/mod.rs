@@ -1,5 +1,7 @@
 //! Shared helpers for the `harness = false` bench binaries.
 
+pub mod baseline;
+
 use vta::arch::VtaConfig;
 use vta::compiler::{lower_conv2d, pack_activations, pack_weights, Conv2dOutput, Conv2dParams};
 use vta::runtime::VtaRuntime;
@@ -20,9 +22,24 @@ pub fn run_conv(cfg: &VtaConfig, p: &Conv2dParams, vt: usize, seed: u64) -> Conv
         .expect("bench conv lowering")
 }
 
-/// Filter from argv: `cargo bench --bench X -- <filter>`.
+/// Filter from argv: `cargo bench --bench X -- <filter>`. The snapshot
+/// flags (`--json/--check/--pin PATH`) and their path values are not
+/// filters and are skipped.
 pub fn arg_filter() -> Option<String> {
-    std::env::args().skip(1).find(|a| !a.starts_with('-'))
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0usize;
+    while i < argv.len() {
+        let a = &argv[i];
+        if matches!(a.as_str(), "--json" | "--check" | "--pin" | "--batch") {
+            i += 2;
+            continue;
+        }
+        if !a.starts_with('-') {
+            return Some(a.clone());
+        }
+        i += 1;
+    }
+    None
 }
 
 /// True when the bench name matches the CLI filter (or no filter given).

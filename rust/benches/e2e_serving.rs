@@ -20,17 +20,22 @@
 //! percentiles and SLO attainment.
 //!
 //! Run: `cargo bench --bench e2e_serving [-- --batch N] [--fast]
-//!       [--json PATH] [--check BASELINE]`
+//!       [--json PATH] [--check BASELINE] [--pin BASELINE]`
 //!
 //! `--fast` skips the ResNet-18 sections (CI speed); `--json` writes
 //! the serving snapshot (`BENCH_serving.json` schema); `--check` diffs
 //! the snapshot against a committed baseline — deterministic fields
 //! must match exactly (a `null` baseline field is unpinned: reported,
-//! not enforced), measured fields are schema-checked only.
+//! not enforced), measured fields are schema-checked only; `--pin`
+//! rewrites a baseline with its `null` deterministic fields filled
+//! from the current run (see `common::baseline` for the CI flow).
 
+#[allow(dead_code)] // this bench uses only the baseline half of common
+mod common;
+
+use common::baseline;
 use std::time::Instant;
 use vta::arch::VtaConfig;
-use vta::dse::records::json::{self, Value};
 use vta::dse::TuningRecords;
 use vta::exec::serve::fnv1a64;
 use vta::exec::{
@@ -237,16 +242,9 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(4);
     let fast = argv.iter().any(|a| a == "--fast");
-    let json_path = argv
-        .iter()
-        .position(|a| a == "--json")
-        .and_then(|i| argv.get(i + 1))
-        .cloned();
-    let check_path = argv
-        .iter()
-        .position(|a| a == "--check")
-        .and_then(|i| argv.get(i + 1))
-        .cloned();
+    let json_path = baseline::flag_value(&argv, "--json");
+    let check_path = baseline::flag_value(&argv, "--check");
+    let pin_path = baseline::flag_value(&argv, "--pin");
 
     let cfg = VtaConfig::pynq();
     if !fast {
@@ -415,8 +413,11 @@ fn main() {
         std::fs::write(path, &snapshot).unwrap_or_else(|e| panic!("writing {path}: {e}"));
         println!("\nwrote serving snapshot to {path}");
     }
+    if let Some(path) = &pin_path {
+        baseline::pin_baseline("serving", &snapshot, path);
+    }
     if let Some(path) = &check_path {
-        check_against_baseline(&snapshot, path);
+        baseline::check_against_baseline("serving", &snapshot, path);
     }
 }
 
@@ -487,87 +488,4 @@ fn render_snapshot(
         thr.join(",\n"),
         steps.join(",\n")
     )
-}
-
-/// Diff the freshly rendered snapshot against a committed baseline.
-///
-/// * `deterministic.*`: every non-`null` baseline field must match the
-///   current run **exactly** — a mismatch fails the bench (and CI). A
-///   `null` baseline field is *unpinned*: its current value is printed
-///   so a maintainer can pin it, but nothing fails.
-/// * `measured.*`: keys present in the baseline must exist in the
-///   current snapshot (schema drift check); values are never compared.
-fn check_against_baseline(snapshot: &str, baseline_path: &str) {
-    let text = std::fs::read_to_string(baseline_path)
-        .unwrap_or_else(|e| panic!("reading baseline {baseline_path}: {e}"));
-    let base = json::parse(&text).unwrap_or_else(|e| panic!("baseline {baseline_path}: {e}"));
-    let cur = json::parse(snapshot).expect("freshly rendered snapshot parses");
-
-    let mut errors = Vec::new();
-    let mut unpinned = Vec::new();
-    diff_deterministic(
-        "deterministic",
-        base.get("deterministic").expect("baseline has a deterministic section"),
-        cur.get("deterministic").expect("snapshot has a deterministic section"),
-        &mut errors,
-        &mut unpinned,
-    );
-    match (base.get("schema"), cur.get("schema")) {
-        (Some(b), Some(c)) if b == c => {}
-        (b, c) => errors.push(format!("schema version changed: {b:?} -> {c:?}")),
-    }
-    if let Some(Value::Obj(fields)) = base.get("measured") {
-        let cm = cur.get("measured").expect("snapshot has a measured section");
-        for (k, _) in fields {
-            if cm.get(k).is_none() {
-                errors.push(format!("measured.{k} disappeared from the snapshot"));
-            }
-        }
-    }
-    for path in &unpinned {
-        println!("baseline: {path} is unpinned (null) — current value accepted");
-    }
-    if !errors.is_empty() {
-        panic!("serving snapshot diverged from {baseline_path}:\n  {}", errors.join("\n  "));
-    }
-    println!("serving snapshot matches the committed baseline ({baseline_path})");
-}
-
-/// Exact structural diff of the deterministic section. Baseline `null`
-/// leaves a field unpinned; objects/arrays recurse; leaves must be
-/// equal.
-fn diff_deterministic(
-    path: &str,
-    base: &Value,
-    cur: &Value,
-    errors: &mut Vec<String>,
-    unpinned: &mut Vec<String>,
-) {
-    match (base, cur) {
-        (Value::Null, _) => unpinned.push(path.to_string()),
-        (Value::Obj(bf), _) => {
-            for (k, bv) in bf {
-                match cur.get(k) {
-                    Some(cv) => {
-                        diff_deterministic(&format!("{path}.{k}"), bv, cv, errors, unpinned)
-                    }
-                    None => errors.push(format!("{path}.{k} missing from the current snapshot")),
-                }
-            }
-        }
-        (Value::Arr(bv), Value::Arr(cv)) => {
-            if bv.len() != cv.len() {
-                errors.push(format!("{path}: length {} -> {}", bv.len(), cv.len()));
-            } else {
-                for (i, (b, c)) in bv.iter().zip(cv).enumerate() {
-                    diff_deterministic(&format!("{path}[{i}]"), b, c, errors, unpinned);
-                }
-            }
-        }
-        (b, c) => {
-            if b != c {
-                errors.push(format!("{path}: baseline {b:?} != current {c:?}"));
-            }
-        }
-    }
 }

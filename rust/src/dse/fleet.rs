@@ -1,0 +1,484 @@
+//! Fleet allocation: search **compositions** of frontier configs — a
+//! multiset of hardware variants with replica counts — instead of one
+//! config replicated N times.
+//!
+//! The hardware DSE ([`crate::dse::run_dse`]) answers "which single
+//! variant serves this suite best?". Under mixed traffic that framing
+//! leaves performance on the table: conv-heavy and eltwise-heavy
+//! request classes want different silicon, and a real deployment can
+//! split its FPGA budget across both. `run_fleet_dse` enumerates every
+//! multiset of candidate configs whose **total** BRAM/DSP/LUT spend
+//! fits a fleet-wide [`ResourceBudget`] and whose device count fits
+//! `max_devices`, scores each with the cost-routed modeled makespan
+//! ([`modeled_fleet_makespan`]) over a deterministic mixed trace, and
+//! emits the winner as a deployable [`FleetSpec`].
+//!
+//! Every single-config composition is in the search space, so the best
+//! fleet **matches or beats the best homogeneous pool by
+//! construction** — the `fleet-smoke` CI gate
+//! ([`FleetDseReport::improved`]) can only fail if scoring itself
+//! regresses. The search is exhaustive and deterministic: strict `<`
+//! comparisons keep the first composition found in enumeration order
+//! on ties.
+
+use crate::arch::VtaConfig;
+use crate::compiler::{config_fingerprint, op_impl};
+use crate::dse::space::{ResourceBudget, ResourceUsage};
+use crate::exec::serve::fleet::{
+    modeled_fleet_makespan, FleetMember, FleetSpec, RoutePolicy, Router,
+};
+use crate::graph::{Graph, Placement};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Candidate configs entered into the composition enumeration are
+/// capped here (best first, as the caller orders them): the multiset
+/// count grows as C(n + d, d) and the frontier rarely holds more than
+/// a handful of genuinely distinct variants anyway.
+pub const MAX_FLEET_CANDIDATES: usize = 8;
+
+/// Fleet-search options.
+#[derive(Clone, Debug)]
+pub struct FleetDseOptions {
+    /// Total replicas across the fleet (≥ 1).
+    pub max_devices: usize,
+    /// **Fleet-wide** resource budget: the summed usage of every
+    /// replica must fit. Defaults to `max_devices` Zynq-7020 boards.
+    pub budget: ResourceBudget,
+    /// Mixed-traffic composition: requests per workload class, aligned
+    /// with the `class_graphs` passed to [`run_fleet_dse`]. The scored
+    /// trace interleaves them proportionally ([`interleave_classes`]).
+    pub requests_per_class: Vec<usize>,
+    /// Virtual threads the candidates must lower every class graph
+    /// under, ∈ {1, 2}.
+    pub virtual_threads: usize,
+}
+
+impl FleetDseOptions {
+    /// Defaults: one Zynq-7020 of budget per device, vt = 2.
+    pub fn new(max_devices: usize, requests_per_class: Vec<usize>) -> Self {
+        FleetDseOptions {
+            max_devices,
+            budget: total_budget(ResourceBudget::zynq7020(), max_devices),
+            requests_per_class,
+            virtual_threads: 2,
+        }
+    }
+}
+
+/// `boards` boards' worth of a per-board budget — the fleet-wide
+/// resource pool a composition's summed usage is checked against.
+pub fn total_budget(per_board: ResourceBudget, boards: usize) -> ResourceBudget {
+    ResourceBudget {
+        bram18: per_board.bram18 * boards,
+        dsp: per_board.dsp * boards,
+        lut: per_board.lut * boards,
+    }
+}
+
+/// Deterministic proportional interleave of class indices: emits
+/// `counts[c]` requests of each class `c`, highest-quotient-first
+/// (D'Hondt), ties preferring the **later** class. The later-class
+/// tie-break is deliberate: with two equal classes the trace opens
+/// with class 1, so a round-robin router (which pins routes to trace
+/// parity) misroutes it onto group 0 — keeping the routing ablation's
+/// baseline honest instead of accidentally cost-model-aligned.
+pub fn interleave_classes(counts: &[usize]) -> Vec<usize> {
+    let total: usize = counts.iter().sum();
+    let mut emitted = vec![0usize; counts.len()];
+    let mut out = Vec::with_capacity(total);
+    for _ in 0..total {
+        let mut best: Option<usize> = None;
+        for c in 0..counts.len() {
+            if emitted[c] >= counts[c] {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                // counts[c]/(emitted[c]+1) vs the incumbent, compared
+                // by cross-multiplication; >= keeps the later class on
+                // ties.
+                Some(b) => counts[c] * (emitted[b] + 1) >= counts[b] * (emitted[c] + 1),
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+        let c = best.expect("fewer than `total` requests emitted");
+        emitted[c] += 1;
+        out.push(c);
+    }
+    out
+}
+
+/// One scored fleet composition.
+#[derive(Clone, Debug)]
+pub struct FleetComposition {
+    /// The deployable artifact (`vta serve --fleet` consumes this).
+    pub spec: FleetSpec,
+    /// Summed resource usage across every replica.
+    pub usage: ResourceUsage,
+    /// Modeled makespan of the trace under cost-model routing — the
+    /// search objective.
+    pub cost_makespan: f64,
+    /// The same trace under round-robin routing (the routing-win
+    /// ablation's baseline).
+    pub roundrobin_makespan: f64,
+    /// True when the composition uses a single config (a homogeneous
+    /// pool).
+    pub homogeneous: bool,
+}
+
+/// The fleet-search outcome.
+#[derive(Clone, Debug)]
+pub struct FleetDseReport {
+    /// Best composition overall (lowest cost-routed makespan; first
+    /// found in enumeration order on ties).
+    pub best: FleetComposition,
+    /// Best **single-config** composition — the strongest homogeneous
+    /// pool the same budget buys.
+    pub best_homogeneous: FleetComposition,
+    /// Distinct feasible candidate configs entered into enumeration.
+    pub candidates: usize,
+    /// Compositions scored (incl. over-budget ones).
+    pub evaluated: usize,
+    /// Compositions rejected for exceeding the fleet budget.
+    pub infeasible: usize,
+    /// The class trace every composition was scored on.
+    pub trace: Vec<usize>,
+}
+
+impl FleetDseReport {
+    /// True when the best fleet matches or beats the best homogeneous
+    /// pool — the `fleet-smoke` CI gate. Holds by construction (every
+    /// single-config composition is enumerated), so a failure means
+    /// the scoring itself broke.
+    pub fn improved(&self) -> bool {
+        self.best.cost_makespan <= self.best_homogeneous.cost_makespan
+    }
+}
+
+struct SearchState<'a> {
+    configs: &'a [VtaConfig],
+    usages: &'a [ResourceUsage],
+    class_graphs: &'a [&'a Graph],
+    trace: &'a [usize],
+    budget: ResourceBudget,
+    evaluated: usize,
+    infeasible: usize,
+    best: Option<FleetComposition>,
+    best_homogeneous: Option<FleetComposition>,
+}
+
+impl SearchState<'_> {
+    /// Assign `counts[idx..]` every split of `remaining` devices, in
+    /// deterministic lexicographic order, scoring each completed
+    /// assignment.
+    fn visit(&mut self, counts: &mut [usize], idx: usize, remaining: usize) {
+        if idx == counts.len() {
+            self.score(counts);
+            return;
+        }
+        for c in 0..=remaining {
+            counts[idx] = c;
+            self.visit(counts, idx + 1, remaining - c);
+        }
+        counts[idx] = 0;
+    }
+
+    fn score(&mut self, counts: &[usize]) {
+        if counts.iter().all(|&c| c == 0) {
+            return;
+        }
+        self.evaluated += 1;
+        let mut usage = ResourceUsage { bram18: 0, dsp: 0, lut: 0 };
+        for (u, &c) in self.usages.iter().zip(counts) {
+            usage.bram18 += u.bram18 * c;
+            usage.dsp += u.dsp * c;
+            usage.lut += u.lut * c;
+        }
+        if usage.bram18 > self.budget.bram18
+            || usage.dsp > self.budget.dsp
+            || usage.lut > self.budget.lut
+        {
+            self.infeasible += 1;
+            return;
+        }
+        let mut cfgs: Vec<VtaConfig> = Vec::new();
+        let mut devices: Vec<usize> = Vec::new();
+        for (cfg, &c) in self.configs.iter().zip(counts) {
+            if c > 0 {
+                cfgs.push(cfg.clone());
+                devices.push(c);
+            }
+        }
+        let cost_routes = Router::new(RoutePolicy::CostModel, &cfgs, self.class_graphs)
+            .route_trace(self.trace);
+        let rr_routes = Router::new(RoutePolicy::RoundRobin, &cfgs, self.class_graphs)
+            .route_trace(self.trace);
+        let cost =
+            modeled_fleet_makespan(&cfgs, &devices, self.class_graphs, self.trace, &cost_routes);
+        let rr = modeled_fleet_makespan(&cfgs, &devices, self.class_graphs, self.trace, &rr_routes);
+        let comp = FleetComposition {
+            spec: FleetSpec::new(
+                cfgs.iter()
+                    .zip(&devices)
+                    .map(|(cfg, &d)| FleetMember { cfg: cfg.clone(), devices: d })
+                    .collect(),
+            ),
+            usage,
+            cost_makespan: cost,
+            roundrobin_makespan: rr,
+            homogeneous: cfgs.len() == 1,
+        };
+        if self.best.as_ref().map_or(true, |b| comp.cost_makespan < b.cost_makespan) {
+            self.best = Some(comp.clone());
+        }
+        if comp.homogeneous
+            && self
+                .best_homogeneous
+                .as_ref()
+                .map_or(true, |b| comp.cost_makespan < b.cost_makespan)
+        {
+            self.best_homogeneous = Some(comp);
+        }
+    }
+}
+
+/// Search fleet compositions of `configs` serving `class_graphs` under
+/// the mixed traffic in `opts`. `configs` should arrive best-first
+/// (DSE frontier order) — only the first [`MAX_FLEET_CANDIDATES`]
+/// distinct feasible candidates enter the enumeration.
+///
+/// A candidate is feasible when it validates and lowers **every**
+/// VTA-placed node of every class graph at `opts.virtual_threads` —
+/// the same offloadability contract the fleet runtimes enforce, so an
+/// emitted [`FleetSpec`] is serveable by construction.
+pub fn run_fleet_dse(
+    configs: &[VtaConfig],
+    class_graphs: &[&Graph],
+    opts: &FleetDseOptions,
+) -> Result<FleetDseReport> {
+    ensure!(!configs.is_empty(), "fleet DSE needs at least one candidate config");
+    ensure!(!class_graphs.is_empty(), "fleet DSE needs at least one workload class");
+    ensure!(opts.max_devices >= 1, "a fleet has at least one device");
+    ensure!(
+        opts.virtual_threads == 1 || opts.virtual_threads == 2,
+        "1 or 2 virtual threads"
+    );
+    ensure!(
+        opts.requests_per_class.len() == class_graphs.len(),
+        "one request count per workload class ({} counts, {} classes)",
+        opts.requests_per_class.len(),
+        class_graphs.len()
+    );
+    ensure!(
+        opts.requests_per_class.iter().any(|&n| n > 0),
+        "the scored trace needs at least one request"
+    );
+
+    // Feasible, distinct candidates, capped best-first.
+    let mut candidates: Vec<VtaConfig> = Vec::new();
+    let mut seen: Vec<u64> = Vec::new();
+    for cfg in configs {
+        if candidates.len() >= MAX_FLEET_CANDIDATES {
+            break;
+        }
+        let fp = config_fingerprint(cfg);
+        if seen.contains(&fp) || !cfg.validate().is_empty() {
+            continue;
+        }
+        let offloads_all = class_graphs.iter().all(|g| {
+            g.nodes
+                .iter()
+                .filter(|n| n.placement == Placement::Vta)
+                .all(|n| op_impl(&n.op).offloadable(cfg, n, opts.virtual_threads))
+        });
+        if !offloads_all {
+            continue;
+        }
+        seen.push(fp);
+        candidates.push(cfg.clone());
+    }
+    if candidates.is_empty() {
+        bail!("no candidate config lowers every workload class at vt={}", opts.virtual_threads);
+    }
+
+    let usages: Vec<ResourceUsage> = candidates.iter().map(ResourceUsage::of).collect();
+    let trace = interleave_classes(&opts.requests_per_class);
+    let mut st = SearchState {
+        configs: &candidates,
+        usages: &usages,
+        class_graphs,
+        trace: &trace,
+        budget: opts.budget,
+        evaluated: 0,
+        infeasible: 0,
+        best: None,
+        best_homogeneous: None,
+    };
+    let mut counts = vec![0usize; candidates.len()];
+    st.visit(&mut counts, 0, opts.max_devices);
+
+    let best = st.best.context("no fleet composition fits the resource budget")?;
+    // Any feasible composition contains a feasible single-config one
+    // (drop all but one config: usage only shrinks), so `best` existing
+    // implies a homogeneous best exists.
+    let best_homogeneous =
+        st.best_homogeneous.expect("a feasible fleet implies a feasible homogeneous pool");
+    Ok(FleetDseReport {
+        best,
+        best_homogeneous,
+        candidates: candidates.len(),
+        evaluated: st.evaluated,
+        infeasible: st.infeasible,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{Conv2dParams, Requant};
+    use crate::graph::{partition, Op, PartitionPolicy};
+    use crate::util::{Tensor, XorShiftRng};
+
+    fn conv_graph(cfg: &VtaConfig) -> Graph {
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+        let p = Conv2dParams {
+            h: 8,
+            w: 8,
+            ic: 16,
+            oc: 16,
+            k: 3,
+            s: 1,
+            requant: Requant { shift: 6, relu: false },
+        };
+        let c = g.add("conv", Op::Conv2d { p }, &[x]).unwrap();
+        let mut rng = XorShiftRng::new(11);
+        g.set_weights(c, Tensor::from_vec(&[16, 16, 3, 3], rng.vec_i8(16 * 16 * 9, -4, 4)).unwrap());
+        partition(&mut g, &PartitionPolicy::paper(cfg));
+        g
+    }
+
+    fn alu_graph(cfg: &VtaConfig) -> Graph {
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+        let r = g.add("relu", Op::Relu, &[x]).unwrap();
+        let a = g.add("add", Op::Add, &[r, x]).unwrap();
+        let _ = g.add("shr", Op::ShrImm { shift: 1 }, &[a]).unwrap();
+        partition(&mut g, &PartitionPolicy::offload_all(cfg));
+        g
+    }
+
+    /// The two-variant pair from the router tests: a conv-focused
+    /// lanes-8 pynq (cheaper in LUTs, slower on eltwise) and stock
+    /// pynq.
+    fn candidate_pair() -> Vec<VtaConfig> {
+        let pynq = VtaConfig::pynq();
+        let mut conv_tuned = pynq.clone();
+        conv_tuned.alu_lanes = 8;
+        vec![conv_tuned, pynq]
+    }
+
+    #[test]
+    fn interleave_is_proportional_and_opens_with_the_later_class() {
+        let t = interleave_classes(&[8, 8]);
+        assert_eq!(t.len(), 16);
+        assert_eq!(t[0], 1, "equal classes: the later class leads");
+        // Perfectly alternating on equal counts.
+        for (i, &c) in t.iter().enumerate() {
+            assert_eq!(c, (i + 1) % 2);
+        }
+        let t = interleave_classes(&[2, 4]);
+        assert_eq!(t.iter().filter(|&&c| c == 0).count(), 2);
+        assert_eq!(t.iter().filter(|&&c| c == 1).count(), 4);
+        assert_eq!(t, interleave_classes(&[2, 4]), "deterministic");
+        assert!(interleave_classes(&[0, 0]).is_empty());
+    }
+
+    /// Under a LUT budget that rules out two stock-pynq replicas, the
+    /// search finds the mixed lanes-8 + stock fleet and it strictly
+    /// beats every homogeneous option — the heterogeneity win the
+    /// whole subsystem exists for.
+    #[test]
+    fn budget_squeezed_search_prefers_the_mixed_fleet() {
+        let cands = candidate_pair();
+        let conv = conv_graph(&cands[0]);
+        let alu = alu_graph(&cands[0]);
+        let graphs: Vec<&Graph> = vec![&conv, &alu];
+        let mut opts = FleetDseOptions::new(2, vec![8, 8]);
+        // Two boards of BRAM/DSP, but a LUT pool that fits
+        // lanes8+lanes8 and lanes8+stock while excluding stock+stock.
+        opts.budget = ResourceBudget { bram18: 560, dsp: 440, lut: 38_000 };
+        let report = run_fleet_dse(&cands, &graphs, &opts).unwrap();
+
+        assert_eq!(report.candidates, 2);
+        assert!(report.infeasible >= 1, "stock+stock must be over budget");
+        assert!(report.improved());
+        assert_eq!(report.best.spec.members.len(), 2, "the winner is the mixed fleet");
+        assert_eq!(report.best.spec.total_devices(), 2);
+        assert!(
+            report.best.cost_makespan < report.best_homogeneous.cost_makespan,
+            "mixed fleet must strictly beat the best homogeneous pool: {} vs {}",
+            report.best.cost_makespan,
+            report.best_homogeneous.cost_makespan
+        );
+        assert!(report.best.usage.lut <= opts.budget.lut);
+
+        // Determinism: same inputs, same winner.
+        let again = run_fleet_dse(&cands, &graphs, &opts).unwrap();
+        assert_eq!(again.best.spec, report.best.spec);
+        assert_eq!(again.best.cost_makespan, report.best.cost_makespan);
+    }
+
+    /// With a roomy budget the single-config compositions are all in
+    /// the space, so the fleet can only match or beat them — and the
+    /// report says which homogeneous pool it had to beat.
+    #[test]
+    fn fleet_matches_or_beats_the_best_homogeneous_pool() {
+        let cands = candidate_pair();
+        let conv = conv_graph(&cands[0]);
+        let alu = alu_graph(&cands[0]);
+        let graphs: Vec<&Graph> = vec![&conv, &alu];
+        let opts = FleetDseOptions::new(2, vec![8, 8]);
+        let report = run_fleet_dse(&cands, &graphs, &opts).unwrap();
+        assert!(report.improved());
+        assert!(report.best.cost_makespan <= report.best_homogeneous.cost_makespan);
+        assert!(report.best_homogeneous.homogeneous);
+        // C(2 cands + 2 devices, 2) - 1 empty = 5 non-empty multisets.
+        assert_eq!(report.evaluated, 5);
+        assert_eq!(report.infeasible, 0);
+        // The scored trace follows the requested mix.
+        assert_eq!(report.trace.len(), 16);
+        assert_eq!(report.trace.iter().filter(|&&c| c == 0).count(), 8);
+    }
+
+    /// Candidates that cannot lower a class graph are filtered before
+    /// enumeration, and an impossible budget is a hard error.
+    #[test]
+    fn infeasible_candidates_and_budgets_are_rejected() {
+        let cands = candidate_pair();
+        let conv = conv_graph(&cands[0]);
+        let alu = alu_graph(&cands[0]);
+        let graphs: Vec<&Graph> = vec![&conv, &alu];
+
+        // Duplicate candidates collapse to one.
+        let dup = vec![cands[1].clone(), cands[1].clone()];
+        let report = run_fleet_dse(&dup, &graphs, &FleetDseOptions::new(2, vec![4, 4])).unwrap();
+        assert_eq!(report.candidates, 1);
+        assert!(report.best.homogeneous);
+
+        // A budget no composition fits.
+        let mut opts = FleetDseOptions::new(2, vec![4, 4]);
+        opts.budget = ResourceBudget { bram18: 1, dsp: 1, lut: 1 };
+        assert!(run_fleet_dse(&cands, &graphs, &opts).is_err());
+
+        // A config too small to lower the conv is filtered; with no
+        // survivors the search reports the offloadability failure.
+        let mut tiny = VtaConfig::pynq();
+        tiny.inp_buf_bytes = 0;
+        let err = run_fleet_dse(&[tiny], &graphs, &FleetDseOptions::new(1, vec![1, 1]));
+        assert!(err.is_err());
+    }
+}

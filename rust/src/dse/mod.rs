@@ -12,6 +12,13 @@
 //!   tiling factors the planners otherwise pick greedily are searched
 //!   by measured cost, yielding a [`ScheduleChoice`] per operator.
 //!
+//! And one search **over** the first: **fleet allocation** ([`fleet`])
+//! enumerates multisets of frontier configs under a fleet-wide
+//! resource budget, scored by the cost-routed modeled makespan of
+//! mixed traffic, and emits the winning composition as a
+//! [`FleetSpec`](crate::exec::serve::fleet::FleetSpec) that
+//! `vta serve --fleet` deploys.
+//!
 //! Winning (config, schedule) pairs persist to a JSON tuning-record
 //! store ([`records`]) that the serving engine consults at compile
 //! time, so tuned schedules survive restarts and serving traffic
@@ -33,10 +40,15 @@
 //! cycle sum on a one-device pool. `vta dse --devices N` threads the
 //! pool size here.
 
+pub mod fleet;
 pub mod records;
 pub mod space;
 pub mod tune;
 
+pub use fleet::{
+    interleave_classes, run_fleet_dse, total_budget, FleetComposition, FleetDseOptions,
+    FleetDseReport,
+};
 pub use records::{RecordKey, TuningRecord, TuningRecords};
 pub use space::{ConfigSpace, ResourceBudget, ResourceUsage};
 pub use tune::{

@@ -1,0 +1,43 @@
+//! Heterogeneous fleet serving: one request stream over mixed-config
+//! accelerator replicas.
+//!
+//! The homogeneous serving stack replicates a single `VtaConfig` N
+//! times; this module serves divergent traffic across a
+//! [`HeterogeneousPool`](crate::runtime::HeterogeneousPool) of
+//! per-replica variants instead — wide-GEMM replicas for conv traffic,
+//! ALU-rich replicas for eltwise-heavy style traffic — turning the DSE
+//! frontier from a report into a deployable artifact.
+//!
+//! Pieces, in lifecycle order:
+//!
+//! * [`FleetSpec`] — the deployable composition: (config, replica
+//!   count) members, as versioned JSON. Emitted by `vta dse --fleet`,
+//!   consumed by `vta serve --fleet`.
+//! * [`Router`] / [`RoutePolicy`] — the group chooser: cost-model
+//!   scoring of each workload class against each config group
+//!   (analytical roofline, [`graph_model_seconds`]), with round-robin
+//!   and static-pin baselines so the routing win is measurable.
+//! * [`FleetScheduler`] — the simulated-time fleet runtime: per-group
+//!   dynamic batching, least-loaded dispatch within the routed group,
+//!   group-wise lockstep plan caches. The deterministic oracle.
+//! * [`run_fleet_threaded`] / [`serve_fleet_trace`] — the real-threads
+//!   fleet runtime: per-group bounded queues and plan directories, one
+//!   worker per replica. Bit-identical outputs and per-group cache
+//!   counters against the oracle.
+//!
+//! The fleet *composition search* lives in [`crate::dse::fleet`].
+
+mod router;
+mod scheduler;
+mod spec;
+mod threaded;
+
+pub use router::{
+    graph_model_cycles, graph_model_seconds, modeled_fleet_makespan, node_model_cycles,
+    RoutePolicy, Router,
+};
+pub use scheduler::{FleetBatchRecord, FleetOptions, FleetReport, FleetScheduler};
+pub use spec::{FleetMember, FleetSpec};
+pub use threaded::{
+    run_fleet_threaded, serve_fleet_trace, FleetHandle, FleetThreadedOptions, FleetThreadedReport,
+};

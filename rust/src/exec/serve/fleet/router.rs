@@ -1,0 +1,314 @@
+//! Cost-aware request routing across the config groups of a fleet.
+//!
+//! The router decides **which group** serves a request; dispatch
+//! *within* the group (least-loaded member) stays with the scheduler,
+//! exactly like the homogeneous pool. Keeping the group decision a
+//! pure function of the request's workload class — never of live load
+//! — is what makes the simulated and threaded fleet runtimes route
+//! identically by construction, so the oracle-equivalence suite can
+//! compare them bit for bit.
+//!
+//! The cost model ([`graph_model_cycles`]) is the DSE family's
+//! analytical roofline, applied per graph node: a VTA node costs the
+//! max of its compute occupancy (GEMM ops through
+//! [`GemmShape::ops_per_cycle`](crate::arch::GemmShape::ops_per_cycle),
+//! tensor-ALU ops through `alu_lanes / alu_ii`) and its memory
+//! occupancy (operand + weight + result bytes through the DRAM port),
+//! plus the fixed DMA latency. Groups are compared in modeled
+//! **seconds** (cycles ÷ the group's own clock), since fleet members
+//! may clock differently.
+
+use crate::arch::VtaConfig;
+use crate::graph::{Graph, Node, Placement};
+use anyhow::{bail, Result};
+
+/// How requests are assigned to config groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Ignore cost: groups take turns in submission order (the
+    /// baseline the cost model is measured against).
+    RoundRobin,
+    /// Each workload class goes to the group with the lowest modeled
+    /// graph seconds (ties → lowest group index).
+    CostModel,
+    /// Every request goes to one fixed group (debugging / ablations).
+    Static(usize),
+}
+
+impl RoutePolicy {
+    /// Parse the CLI spelling: `roundrobin`, `cost`, or `static:G`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "roundrobin" => Ok(RoutePolicy::RoundRobin),
+            "cost" => Ok(RoutePolicy::CostModel),
+            other => match other.strip_prefix("static:") {
+                Some(g) => Ok(RoutePolicy::Static(g.parse()?)),
+                None => bail!("unknown route policy {other:?} (expected roundrobin|cost|static:G)"),
+            },
+        }
+    }
+}
+
+/// Modeled cycles of one VTA-resident node on `cfg` — the roofline
+/// max of compute and DRAM occupancy, plus the DMA latency.
+pub fn node_model_cycles(cfg: &VtaConfig, g: &Graph, node: &Node) -> u64 {
+    let ops = node.op.ops(&node.shape) as f64;
+    let ops_per_cycle = match node.op.kind() {
+        // GEMM-core operators (1 MAC = 2 ops, the peak-GOPS convention).
+        "conv2d" | "dense" => cfg.gemm.ops_per_cycle() as f64,
+        // Everything else runs on the tensor ALU: `alu_lanes` lanes,
+        // one issue per `alu_ii` cycles.
+        _ => cfg.alu_lanes as f64 / cfg.alu_ii as f64,
+    };
+    let compute = ops / ops_per_cycle;
+    let in_elems: usize =
+        node.inputs.iter().map(|&i| g.nodes[i].shape.iter().product::<usize>()).sum();
+    let w_elems = g.weights(node.id).map(|w| w.len()).unwrap_or(0);
+    let out_elems: usize = node.shape.iter().product();
+    // int8 end to end: one byte per element through the shared port.
+    let mem = (in_elems + w_elems + out_elems) as f64 / cfg.dram.bytes_per_cycle;
+    compute.max(mem).ceil() as u64 + cfg.dram.latency
+}
+
+/// Modeled cycles of one whole graph on `cfg`: the sum over
+/// VTA-resident nodes (CPU nodes cost the accelerator nothing here —
+/// the model ranks *accelerator variants*, and CPU time is identical
+/// across them).
+pub fn graph_model_cycles(cfg: &VtaConfig, g: &Graph) -> u64 {
+    g.nodes
+        .iter()
+        .filter(|n| n.placement == Placement::Vta)
+        .map(|n| node_model_cycles(cfg, g, n))
+        .fold(0u64, |a, c| a.saturating_add(c))
+}
+
+/// [`graph_model_cycles`] in seconds of the variant's own clock —
+/// the unit fleet groups are compared in.
+pub fn graph_model_seconds(cfg: &VtaConfig, g: &Graph) -> f64 {
+    graph_model_cycles(cfg, g) as f64 / cfg.clock_hz
+}
+
+/// The group chooser: one per fleet run, consulted once per request
+/// at submission, in submission order.
+pub struct Router {
+    policy: RoutePolicy,
+    ngroups: usize,
+    /// Per-class best group under the cost model (precomputed — the
+    /// CostModel route is a pure function of the class).
+    best_group: Vec<usize>,
+    /// RoundRobin cursor.
+    cursor: usize,
+}
+
+impl Router {
+    /// Build a router over `cfgs` (one per config group, in group
+    /// order) for the given workload classes. `Static(g)` must name an
+    /// existing group.
+    pub fn new(policy: RoutePolicy, cfgs: &[VtaConfig], class_graphs: &[&Graph]) -> Self {
+        assert!(!cfgs.is_empty(), "a router needs at least one group");
+        if let RoutePolicy::Static(g) = policy {
+            assert!(g < cfgs.len(), "static route to group {g} of {}", cfgs.len());
+        }
+        let best_group = class_graphs
+            .iter()
+            .map(|g| {
+                let mut best = 0usize;
+                let mut best_secs = graph_model_seconds(&cfgs[0], g);
+                for (gi, cfg) in cfgs.iter().enumerate().skip(1) {
+                    let secs = graph_model_seconds(cfg, g);
+                    if secs < best_secs {
+                        best = gi;
+                        best_secs = secs;
+                    }
+                }
+                best
+            })
+            .collect();
+        Router { policy, ngroups: cfgs.len(), best_group, cursor: 0 }
+    }
+
+    /// Number of config groups routed over.
+    pub fn groups(&self) -> usize {
+        self.ngroups
+    }
+
+    /// The cost model's per-class choice (regardless of the active
+    /// policy — reporting / tests).
+    pub fn best_group_for(&self, class: usize) -> usize {
+        self.best_group[class]
+    }
+
+    /// Route the next request of `class`. Mutable: RoundRobin advances
+    /// its cursor. Deterministic in (policy, class sequence).
+    pub fn route(&mut self, class: usize) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let g = self.cursor % self.ngroups;
+                self.cursor += 1;
+                g
+            }
+            RoutePolicy::CostModel => self.best_group[class],
+            RoutePolicy::Static(g) => g,
+        }
+    }
+
+    /// Route a whole class sequence (the trace-replay convenience used
+    /// by the DSE fleet scorer).
+    pub fn route_trace(&mut self, classes: &[usize]) -> Vec<usize> {
+        classes.iter().map(|&c| self.route(c)).collect()
+    }
+}
+
+/// Modeled fleet makespan of a routed trace: each request (in order)
+/// goes to the least-loaded replica of its routed group, loaded by its
+/// class's modeled graph seconds on that group's variant; the makespan
+/// is the heaviest replica. This is the quantity `dse --fleet`
+/// optimizes and `serve --fleet --require-routing-win` gates on —
+/// deliberately the same model on both sides, so the searched
+/// composition and the serving-time routing agree about what "better"
+/// means.
+pub fn modeled_fleet_makespan(
+    cfgs: &[VtaConfig],
+    group_devices: &[usize],
+    class_graphs: &[&Graph],
+    classes: &[usize],
+    routes: &[usize],
+) -> f64 {
+    assert_eq!(cfgs.len(), group_devices.len(), "one device count per group");
+    assert_eq!(classes.len(), routes.len(), "one route per request");
+    let secs: Vec<Vec<f64>> = cfgs
+        .iter()
+        .map(|cfg| class_graphs.iter().map(|g| graph_model_seconds(cfg, g)).collect())
+        .collect();
+    // Per-group per-member loads.
+    let mut load: Vec<Vec<f64>> = group_devices.iter().map(|&n| vec![0.0f64; n]).collect();
+    for (&class, &group) in classes.iter().zip(routes) {
+        let members = &mut load[group];
+        let mut d = 0usize;
+        for i in 1..members.len() {
+            if members[i] < members[d] {
+                d = i;
+            }
+        }
+        members[d] += secs[group][class];
+    }
+    load.iter().flatten().fold(0.0f64, |a, &l| a.max(l))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{partition, PartitionPolicy};
+    use crate::graph::{Graph, Op};
+    use crate::util::{Tensor, XorShiftRng};
+
+    /// A tiny ALU-heavy graph (relu/add chain) and a conv-only graph.
+    fn alu_graph(cfg: &VtaConfig) -> Graph {
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+        let r = g.add("relu", Op::Relu, &[x]).unwrap();
+        let a = g.add("add", Op::Add, &[r, x]).unwrap();
+        let _ = g.add("shr", Op::ShrImm { shift: 1 }, &[a]).unwrap();
+        partition(&mut g, &PartitionPolicy::offload_all(cfg));
+        g
+    }
+
+    fn conv_graph(cfg: &VtaConfig) -> Graph {
+        use crate::compiler::{Conv2dParams, Requant};
+        let mut g = Graph::new();
+        let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+        let p = Conv2dParams {
+            h: 8,
+            w: 8,
+            ic: 16,
+            oc: 16,
+            k: 3,
+            s: 1,
+            requant: Requant { shift: 6, relu: false },
+        };
+        let c = g.add("conv", Op::Conv2d { p }, &[x]).unwrap();
+        let mut rng = XorShiftRng::new(7);
+        g.set_weights(c, Tensor::from_vec(&[16, 16, 3, 3], rng.vec_i8(16 * 16 * 9, -4, 4)).unwrap());
+        partition(&mut g, &PartitionPolicy::paper(cfg));
+        g
+    }
+
+    /// The two-variant fleet the examples and CI use: group 0 pares
+    /// the tensor ALU down to 8 lanes (conv-focused — the GEMM core is
+    /// untouched, so conv cycles tie with stock pynq and the
+    /// cost-model tie-break keeps conv traffic here), group 1 is stock
+    /// pynq (full 16-lane ALU — on the lanes-8 variant every ALU op is
+    /// compute-bound, so eltwise traffic is strictly cheaper here).
+    fn two_group_cfgs() -> [VtaConfig; 2] {
+        let pynq = VtaConfig::pynq();
+        let mut conv_tuned = pynq.clone();
+        conv_tuned.alu_lanes = 8;
+        [conv_tuned, pynq]
+    }
+
+    #[test]
+    fn cost_model_prefers_the_right_group_per_class() {
+        let cfgs = two_group_cfgs();
+        let conv = conv_graph(&cfgs[0]);
+        let alu_g = alu_graph(&cfgs[0]);
+        let graphs: Vec<&Graph> = vec![&conv, &alu_g];
+        let router = Router::new(RoutePolicy::CostModel, &cfgs, &graphs);
+        // Conv class: GEMM cost ties, so the tie-break picks group 0.
+        assert_eq!(
+            graph_model_cycles(&cfgs[0], &conv),
+            graph_model_cycles(&cfgs[1], &conv)
+        );
+        assert_eq!(router.best_group_for(0), 0);
+        // ALU class: strictly cheaper on the full-width ALU group.
+        assert!(graph_model_seconds(&cfgs[1], &alu_g) < graph_model_seconds(&cfgs[0], &alu_g));
+        assert_eq!(router.best_group_for(1), 1);
+    }
+
+    #[test]
+    fn policies_route_deterministically() {
+        let cfgs = two_group_cfgs();
+        let conv = conv_graph(&cfgs[0]);
+        let alu_g = alu_graph(&cfgs[0]);
+        let graphs: Vec<&Graph> = vec![&conv, &alu_g];
+        let classes = [0usize, 1, 0, 1, 1];
+
+        let mut rr = Router::new(RoutePolicy::RoundRobin, &cfgs, &graphs);
+        assert_eq!(rr.route_trace(&classes), vec![0, 1, 0, 1, 0]);
+        let mut cm = Router::new(RoutePolicy::CostModel, &cfgs, &graphs);
+        assert_eq!(cm.route_trace(&classes), vec![0, 1, 0, 1, 1]);
+        let mut st = Router::new(RoutePolicy::Static(1), &cfgs, &graphs);
+        assert_eq!(st.route_trace(&classes), vec![1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn cost_routing_beats_round_robin_on_the_modeled_makespan() {
+        let cfgs = two_group_cfgs().to_vec();
+        let devices = vec![1usize, 1];
+        let conv = conv_graph(&cfgs[0]);
+        let alu_g = alu_graph(&cfgs[0]);
+        let graphs: Vec<&Graph> = vec![&conv, &alu_g];
+        // Balanced mixed trace, ALU class first: round-robin's
+        // index-parity grouping then lands the ALU requests on the
+        // narrow-ALU group (a misrouting the cost model never makes).
+        let classes: Vec<usize> = (0..16).map(|i| (i + 1) % 2).collect();
+
+        let rr_routes =
+            Router::new(RoutePolicy::RoundRobin, &cfgs, &graphs).route_trace(&classes);
+        let cm_routes = Router::new(RoutePolicy::CostModel, &cfgs, &graphs).route_trace(&classes);
+        let rr = modeled_fleet_makespan(&cfgs, &devices, &graphs, &classes, &rr_routes);
+        let cm = modeled_fleet_makespan(&cfgs, &devices, &graphs, &classes, &cm_routes);
+        assert!(
+            cm < rr,
+            "cost-model routing must beat round-robin: {cm} vs {rr}"
+        );
+    }
+
+    #[test]
+    fn route_policy_parses_cli_spellings() {
+        assert_eq!(RoutePolicy::parse("roundrobin").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("cost").unwrap(), RoutePolicy::CostModel);
+        assert_eq!(RoutePolicy::parse("static:2").unwrap(), RoutePolicy::Static(2));
+        assert!(RoutePolicy::parse("fastest").is_err());
+        assert!(RoutePolicy::parse("static:x").is_err());
+    }
+}

@@ -1,0 +1,612 @@
+//! The fleet scheduler: the multi-device serving runtime of
+//! [`super::super::Scheduler`] generalized to a
+//! [`HeterogeneousPool`] — mixed-config replicas, cost-aware routing,
+//! and **group-wise** lockstep plan caches.
+//!
+//! What changes relative to the homogeneous scheduler:
+//!
+//! * **Routing.** Requests carry a workload *class* (an index into the
+//!   class graphs handed to [`FleetScheduler::run`]); a [`Router`]
+//!   assigns each request to a config group at the head of the run, in
+//!   submission order — the same sequence of decisions the threaded
+//!   fleet runtime makes at submit time, so the two runtimes route
+//!   identically by construction. Dispatch *within* the group is
+//!   unchanged: least-loaded member, per-replica simulated clocks.
+//! * **Per-group batching.** Each group batches its own routed
+//!   substream. A batch additionally closes when the workload class
+//!   changes — a batch executes one graph, so it can only hold
+//!   same-class requests.
+//! * **Group-wise lockstep caches.** Every replica still has its own
+//!   [`PlanCache`], but the compile-once/byte-replicate discipline
+//!   ([`CompiledNode::replicate_to`](crate::compiler::CompiledNode::replicate_to))
+//!   now runs per config group: a plan is lowered once on the group's
+//!   lead member and replicated onto the rest of the *group* only.
+//!   Replication across groups is never attempted — compiled streams
+//!   bake in config-dependent tiling, so each group compiles its own
+//!   plans under its own [`PlanKey`] (the key carries the config
+//!   fingerprint, so groups never collide in reporting either).
+//!
+//! Outputs are bit-identical to running every request on a
+//! single-device [`ServingEngine`](super::super::ServingEngine) of its
+//! routed group's config — execution is exact; only timing is modeled.
+
+use super::super::super::executor::{lift_compile_err, CpuBackend, ExecError};
+use super::super::cache::{PlanCache, PlanCacheStats, PlanKey};
+use super::super::run::{plan_keys_for, run_graph, tuned_schedules_for, VtaNodeExec};
+use super::super::schedule::pipeline_schedule;
+use super::router::{RoutePolicy, Router};
+use super::spec::FleetSpec;
+use crate::arch::VtaConfig;
+use crate::compiler::op::{config_fingerprint, execute_compiled, op_impl};
+use crate::compiler::ScheduleChoice;
+use crate::dse::records::TuningRecords;
+use crate::graph::{stages, Graph, Node, Placement};
+use crate::metrics::PoolMetrics;
+use crate::runtime::HeterogeneousPool;
+use crate::sim::SimStats;
+use crate::util::{percentile_sorted, Tensor};
+use std::time::{Duration, Instant};
+
+/// Knobs of the fleet serving runtime (the per-pool knobs of
+/// [`SchedulerOptions`](super::super::SchedulerOptions), plus the
+/// route policy; replica counts come from the [`FleetSpec`]).
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// How requests are assigned to config groups.
+    pub policy: RoutePolicy,
+    /// Maximum requests per dispatched batch.
+    pub max_batch: usize,
+    /// Dynamic-batching deadline in **simulated** seconds.
+    pub batch_deadline: f64,
+    /// Plan-cache capacity per replica (a group's caches run in
+    /// lockstep, so every member of a group holds the same plans).
+    pub cache_capacity: usize,
+    /// Virtual threads VTA nodes are lowered with, ∈ {1, 2}.
+    pub virtual_threads: usize,
+    /// Device DRAM bytes per replica.
+    pub dram_size: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            policy: RoutePolicy::CostModel,
+            max_batch: 8,
+            batch_deadline: 1e-3,
+            cache_capacity: 64,
+            virtual_threads: 2,
+            dram_size: 256 << 20,
+        }
+    }
+}
+
+/// One dispatched fleet batch, for reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetBatchRecord {
+    /// Config group the batch was routed to.
+    pub group: usize,
+    /// Replica (global index) the batch ran on.
+    pub device: usize,
+    /// Workload class of every member.
+    pub class: usize,
+    /// Requests in the batch.
+    pub size: usize,
+    /// Simulated time the batch closed.
+    pub ready: f64,
+    /// Simulated time service began (`max(ready, device free)`).
+    pub start: f64,
+    /// Simulated time service completed.
+    pub finish: f64,
+}
+
+/// Outcome of draining a mixed request stream through the fleet.
+#[derive(Debug)]
+pub struct FleetReport {
+    /// Per-request outputs, in submission order.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Per-request workload classes, in submission order.
+    pub classes: Vec<usize>,
+    /// Per-request routed config group, in submission order.
+    pub routes: Vec<usize>,
+    /// Per-request arrival times, in submission order.
+    pub arrivals: Vec<f64>,
+    /// Per-request completion times (simulated), in submission order.
+    pub completions: Vec<f64>,
+    /// Every dispatched batch, in dispatch order.
+    pub batches: Vec<FleetBatchRecord>,
+    /// Simulated busy seconds per replica (global index).
+    pub device_busy: Vec<f64>,
+    /// End of the simulated span: the last batch completion (0 with no
+    /// requests).
+    pub makespan_seconds: f64,
+    /// Per-group plan-cache counters for this run (each group's lead
+    /// member — within a group the caches run in lockstep, so the
+    /// lead's counters are the group's).
+    pub group_cache: Vec<PlanCacheStats>,
+    /// Real host wall time of the drain (includes per-group compiles
+    /// on cold caches).
+    pub host_wall: Duration,
+    /// Queue-depth samples and per-device counters (global replica
+    /// indices).
+    pub metrics: PoolMetrics,
+}
+
+impl FleetReport {
+    /// Requests per modeled second over the whole span.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_seconds > 0.0 {
+            self.outputs.len() as f64 / self.makespan_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Request latency (completion − arrival) percentile, `q` ∈
+    /// [0, 1], interpolating — the shared [`percentile_sorted`].
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let mut lat: Vec<f64> = self
+            .completions
+            .iter()
+            .zip(&self.arrivals)
+            .map(|(c, a)| c - a)
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        percentile_sorted(&lat, q)
+    }
+
+    /// Busy fraction of replica `d` (global index) over the simulated
+    /// span.
+    pub fn utilization(&self, d: usize) -> f64 {
+        if self.makespan_seconds > 0.0 {
+            (self.device_busy[d] / self.makespan_seconds).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The fleet serving runtime: routed queue → per-group dynamic
+/// batches → least-loaded group members, over group-wise lockstep
+/// plan caches.
+pub struct FleetScheduler {
+    pool: HeterogeneousPool,
+    caches: Vec<PlanCache>,
+    cpu: CpuBackend,
+    opts: FleetOptions,
+    /// Config fingerprint per group, in group order.
+    group_fps: Vec<u64>,
+    records: TuningRecords,
+    /// Pending requests: (arrival, class, input), in submission order.
+    queue: Vec<(f64, usize, Tensor<i8>)>,
+}
+
+impl FleetScheduler {
+    /// Build a fleet over `spec` (which must pass
+    /// [`FleetSpec::validate`]).
+    pub fn new(spec: &FleetSpec, cpu: CpuBackend, opts: FleetOptions) -> Self {
+        Self::with_records(spec, cpu, opts, TuningRecords::new())
+    }
+
+    /// Like [`Self::new`], seeded with a `vta dse` tuning-record store
+    /// (consulted at compile time; records are keyed by config
+    /// fingerprint, so each group picks up its own tuned schedules).
+    pub fn with_records(
+        spec: &FleetSpec,
+        cpu: CpuBackend,
+        opts: FleetOptions,
+        records: TuningRecords,
+    ) -> Self {
+        if let Err(e) = spec.validate() {
+            panic!("invalid fleet spec: {e}");
+        }
+        assert!(
+            opts.virtual_threads == 1 || opts.virtual_threads == 2,
+            "1 or 2 virtual threads"
+        );
+        assert!(opts.max_batch >= 1, "max_batch must be at least 1");
+        assert!(
+            opts.batch_deadline >= 0.0 && opts.batch_deadline.is_finite(),
+            "batch_deadline must be a finite non-negative simulated time"
+        );
+        let cfgs = spec.configs();
+        let pool = HeterogeneousPool::new(&cfgs, opts.dram_size);
+        if let RoutePolicy::Static(g) = opts.policy {
+            assert!(g < pool.group_count(), "static route to group {g} of {}", pool.group_count());
+        }
+        let caches = (0..pool.len()).map(|_| PlanCache::new(opts.cache_capacity)).collect();
+        let group_fps = pool.groups().iter().map(|g| config_fingerprint(&g.cfg)).collect();
+        FleetScheduler {
+            pool,
+            caches,
+            cpu,
+            opts,
+            group_fps,
+            records,
+            queue: Vec::new(),
+        }
+    }
+
+    /// Total replicas across all groups.
+    pub fn devices(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Number of config groups.
+    pub fn group_count(&self) -> usize {
+        self.pool.group_count()
+    }
+
+    /// The config of each group, in group order.
+    pub fn group_configs(&self) -> Vec<VtaConfig> {
+        self.pool.groups().iter().map(|g| g.cfg.clone()).collect()
+    }
+
+    /// Replica count of each group, in group order.
+    pub fn group_devices(&self) -> Vec<usize> {
+        self.pool.groups().iter().map(|g| g.members.len()).collect()
+    }
+
+    /// Requests waiting in the queue.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Fresh pool counters with every device stamped with its config
+    /// fingerprint, so mixed-fleet utilization stays attributable per
+    /// variant.
+    fn fresh_metrics(&self) -> PoolMetrics {
+        let mut metrics = PoolMetrics::new(self.pool.len());
+        for (d, counter) in metrics.devices.iter_mut().enumerate() {
+            counter.config_fingerprint = self.group_fps[self.pool.group_of(d)];
+        }
+        metrics
+    }
+
+    /// Cumulative plan-cache counters of group `g` (its lead member —
+    /// group lockstep makes it the group's).
+    pub fn group_cache_stats(&self, g: usize) -> PlanCacheStats {
+        self.caches[self.pool.groups()[g].members[0]].stats()
+    }
+
+    /// Enqueue a request of workload class `class` arriving at
+    /// simulated time `arrival`.
+    pub fn submit(&mut self, arrival: f64, class: usize, input: Tensor<i8>) {
+        assert!(
+            arrival >= 0.0 && arrival.is_finite(),
+            "arrival must be a finite non-negative simulated time"
+        );
+        self.queue.push((arrival, class, input));
+    }
+
+    /// Drain the queue against `class_graphs` (request classes index
+    /// into this slice): route every request to a config group, form
+    /// per-group dynamic batches, dispatch them to least-loaded group
+    /// members, execute every request exactly, and report modeled
+    /// times + metrics.
+    pub fn run(&mut self, class_graphs: &[&Graph]) -> Result<FleetReport, ExecError> {
+        let ndev = self.pool.len();
+        let ngroups = self.pool.group_count();
+        let t0 = Instant::now();
+
+        // Every group must be able to serve every class — a node
+        // offloadable under one variant may not lower under another,
+        // and routing must be free to send any class anywhere.
+        let vt = self.opts.virtual_threads;
+        for group in self.pool.groups() {
+            for g in class_graphs {
+                for node in g.nodes.iter().filter(|n| n.placement == Placement::Vta) {
+                    if !op_impl(&node.op).offloadable(&group.cfg, node, vt) {
+                        return Err(ExecError::NotOffloadable(node.name.clone(), node.op.kind()));
+                    }
+                }
+            }
+        }
+
+        let stats0: Vec<PlanCacheStats> =
+            (0..ngroups).map(|g| self.group_cache_stats(g)).collect();
+        let n = self.queue.len();
+        if n == 0 {
+            return Ok(FleetReport {
+                outputs: Vec::new(),
+                classes: Vec::new(),
+                routes: Vec::new(),
+                arrivals: Vec::new(),
+                completions: Vec::new(),
+                batches: Vec::new(),
+                device_busy: vec![0.0; ndev],
+                makespan_seconds: 0.0,
+                group_cache: vec![PlanCacheStats::default(); ngroups],
+                host_wall: t0.elapsed(),
+                metrics: self.fresh_metrics(),
+            });
+        }
+
+        // Route in submission order — the same decision sequence the
+        // threaded runtime makes at submit time, so both runtimes
+        // agree on every request's group by construction.
+        let group_cfgs = self.group_configs();
+        let mut router = Router::new(self.opts.policy, &group_cfgs, class_graphs);
+        let routes_by_submission: Vec<usize> =
+            self.queue.iter().map(|&(_, class, _)| router.route(class)).collect();
+
+        // Per-(group, class) compile-time context: plan keys and tuned
+        // schedules are fingerprint-specific; stage order is per class.
+        let stage_order: Vec<Vec<Vec<usize>>> = class_graphs.iter().map(|g| stages(g)).collect();
+        let keys: Vec<Vec<Vec<Option<PlanKey>>>> = self
+            .group_fps
+            .iter()
+            .map(|&fp| class_graphs.iter().map(|g| plan_keys_for(fp, vt, g)).collect())
+            .collect();
+        let schedules: Vec<Vec<Vec<Option<ScheduleChoice>>>> = self
+            .group_fps
+            .iter()
+            .map(|&fp| {
+                class_graphs.iter().map(|g| tuned_schedules_for(&self.records, fp, vt, g)).collect()
+            })
+            .collect();
+
+        // Requests in arrival order (stable: equal arrivals keep
+        // submission order), remembering the submission index so the
+        // report lines up with the caller's inputs.
+        let mut reqs: Vec<(usize, f64, usize, usize, Tensor<i8>)> = self
+            .queue
+            .drain(..)
+            .enumerate()
+            .map(|(i, (arrival, class, input))| (i, arrival, class, routes_by_submission[i], input))
+            .collect();
+        reqs.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite arrivals"));
+
+        // Per-group dynamic batching over the routed substreams: close
+        // on max_batch, on the deadline, on a class change (a batch
+        // executes one graph), or at substream end.
+        let maxb = self.opts.max_batch;
+        let deadline = self.opts.batch_deadline;
+        // (group, class, members, ready), in group-major formation order.
+        let mut formed: Vec<(usize, usize, Vec<usize>, f64)> = Vec::new();
+        for gi in 0..ngroups {
+            let sub: Vec<usize> = (0..reqs.len()).filter(|&r| reqs[r].3 == gi).collect();
+            if sub.is_empty() {
+                continue;
+            }
+            let group_last_arrival = reqs[*sub.last().expect("non-empty substream")].1;
+            let flush = |members: &mut Vec<usize>,
+                         limit: f64,
+                         formed: &mut Vec<(usize, usize, Vec<usize>, f64)>,
+                         reqs: &[(usize, f64, usize, usize, Tensor<i8>)]| {
+                let first_arrival = reqs[members[0]].1;
+                let last_member_arrival = reqs[*members.last().expect("non-empty batch")].1;
+                let ready = if members.len() >= maxb {
+                    last_member_arrival
+                } else {
+                    (first_arrival + deadline).min(limit)
+                };
+                let class = reqs[members[0]].2;
+                formed.push((gi, class, std::mem::take(members), ready));
+            };
+            let mut current: Vec<usize> = Vec::new();
+            for &r in &sub {
+                if !current.is_empty()
+                    && (current.len() >= maxb
+                        || reqs[r].2 != reqs[current[0]].2
+                        || reqs[r].1 > reqs[current[0]].1 + deadline)
+                {
+                    // Closed by the arrival of `r`: the group knows no
+                    // earlier-flushing request will extend this batch.
+                    flush(&mut current, reqs[r].1.min(group_last_arrival), &mut formed, &reqs);
+                }
+                current.push(r);
+            }
+            if !current.is_empty() {
+                flush(&mut current, group_last_arrival, &mut formed, &reqs);
+            }
+        }
+        // Dispatch in ready order (stable sort: ties keep group-major
+        // formation order — deterministic).
+        formed.sort_by(|a, b| a.3.partial_cmp(&b.3).expect("finite ready times"));
+
+        // Least-loaded member within the routed group, per-replica
+        // simulated clocks (global indices).
+        let mut free_at = vec![0.0f64; ndev];
+        let mut busy = vec![0.0f64; ndev];
+        let mut metrics = self.fresh_metrics();
+        let mut batch_records = Vec::with_capacity(formed.len());
+        let mut outputs: Vec<Option<Tensor<i8>>> = (0..n).map(|_| None).collect();
+        let mut classes_out = vec![0usize; n];
+        let mut arrivals = vec![0.0f64; n];
+        let mut completions = vec![0.0f64; n];
+        let mut dispatched = 0usize;
+
+        for (gi, class, members, ready) in &formed {
+            let g = class_graphs[*class];
+            let group_members = self.pool.groups()[*gi].members.clone();
+            let mut d = group_members[0];
+            for &m in &group_members[1..] {
+                if free_at[m] < free_at[d] {
+                    d = m;
+                }
+            }
+            let start = ready.max(free_at[d]);
+            // Queue depth at the dispatch instant: requests that have
+            // *arrived* by `start` and are not yet dispatched.
+            let arrived = reqs.partition_point(|r| r.1 <= start);
+            metrics.queue.record(start, arrived.saturating_sub(dispatched));
+
+            // Execute every member exactly, on replica `d` of group
+            // `gi`.
+            let mut per_request = Vec::with_capacity(members.len());
+            let mut batch_cycles = 0u64;
+            for &r in members {
+                let (submit_idx, arrival, req_class, _, ref input) = reqs[r];
+                let (out, reports) = run_graph(
+                    &mut FleetDeviceRun { sched: &mut *self, device: d, group: *gi },
+                    g,
+                    input,
+                    &stage_order[*class],
+                    &keys[*gi][*class],
+                    &schedules[*gi][*class],
+                )?;
+                batch_cycles += reports
+                    .iter()
+                    .filter_map(|nr| nr.stats.as_ref())
+                    .map(|s| s.total_cycles)
+                    .sum::<u64>();
+                outputs[submit_idx] = Some(out);
+                classes_out[submit_idx] = req_class;
+                arrivals[submit_idx] = arrival;
+                per_request.push(reports);
+            }
+
+            // The batch occupies the replica for its pipelined
+            // makespan; member completions are offsets within it.
+            let model = pipeline_schedule(g, &per_request);
+            for (k, &r) in members.iter().enumerate() {
+                completions[reqs[r].0] = start + model.completion_seconds[k];
+            }
+            let finish = start + model.makespan_seconds;
+            free_at[d] = finish;
+            busy[d] += model.makespan_seconds;
+            dispatched += members.len();
+            metrics.devices[d].record_batch(members.len(), model.makespan_seconds, batch_cycles);
+            batch_records.push(FleetBatchRecord {
+                group: *gi,
+                device: d,
+                class: *class,
+                size: members.len(),
+                ready: *ready,
+                start,
+                finish,
+            });
+        }
+
+        let makespan = batch_records.iter().map(|b| b.finish).fold(0.0f64, f64::max);
+        let group_cache = (0..ngroups)
+            .map(|g| {
+                let s1 = self.group_cache_stats(g);
+                PlanCacheStats {
+                    hits: s1.hits - stats0[g].hits,
+                    misses: s1.misses - stats0[g].misses,
+                    evictions: s1.evictions - stats0[g].evictions,
+                }
+            })
+            .collect();
+        let mut routes_out = vec![0usize; n];
+        for r in &reqs {
+            routes_out[r.0] = r.3;
+        }
+        Ok(FleetReport {
+            outputs: outputs.into_iter().map(|o| o.expect("every request served")).collect(),
+            classes: classes_out,
+            routes: routes_out,
+            arrivals,
+            completions,
+            batches: batch_records,
+            device_busy: busy,
+            makespan_seconds: makespan,
+            group_cache,
+            host_wall: t0.elapsed(),
+            metrics,
+        })
+    }
+
+    /// The group-wise compile-once path: make `key`'s plan resident in
+    /// **every member of group `gi`**, in lockstep.
+    ///
+    /// Hit: touch every member cache (identical LRU updates). Miss:
+    /// every member cache evicts the same victims first (identical
+    /// allocator frees), then the plan is lowered once on the group's
+    /// lead member and byte-replicated onto the rest — identical
+    /// allocator histories within the group put every member's copy at
+    /// identical DRAM addresses, so the sealed streams replay
+    /// verbatim. Other groups are untouched: replication across
+    /// configs is never valid.
+    ///
+    /// Error paths preserve the group-lockstep invariant, exactly as
+    /// in the homogeneous scheduler: a failed compile leaves the lead
+    /// allocator untouched, and a failed replication unwinds the
+    /// already-replicated copies and the source plan.
+    fn ensure_compiled(
+        &mut self,
+        gi: usize,
+        g: &Graph,
+        node: &Node,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+    ) -> Result<(), ExecError> {
+        let members = self.pool.groups()[gi].members.clone();
+        let lead = members[0];
+        if self.caches[lead].contains(key) {
+            for &m in &members {
+                let hit = self.caches[m].touch(key);
+                debug_assert!(hit, "group plan caches fell out of lockstep");
+            }
+            return Ok(());
+        }
+        let entry = op_impl(&node.op);
+        for &m in &members {
+            self.caches[m].note_miss();
+            self.caches[m].make_room(self.pool.device_mut(m))?;
+        }
+        let vt = self.opts.virtual_threads;
+        let compiled = entry
+            .compile(self.pool.device_mut(lead), g, node, vt, schedule.as_ref())
+            .map_err(|e| lift_compile_err(&node.name, e))?;
+        for di in 1..members.len() {
+            let d = members[di];
+            let (src, dst) = self.pool.pair_mut(lead, d);
+            match compiled.replicate_to(src, dst) {
+                Ok(clone) => self.caches[d].insert(key.clone(), clone),
+                Err(e) => {
+                    for &u in &members[1..di] {
+                        let rt_u = self.pool.device_mut(u);
+                        let _ = self.caches[u].remove(key, rt_u);
+                    }
+                    let _ = compiled.free(self.pool.device_mut(lead));
+                    return Err(lift_compile_err(&node.name, e));
+                }
+            }
+        }
+        self.caches[lead].insert(key.clone(), compiled);
+        Ok(())
+    }
+}
+
+/// One dispatch's device view: the fleet scheduler plus the replica a
+/// batch was assigned to and the config group it belongs to — the
+/// fleet side of the shared graph walker
+/// ([`super::super::run::run_graph`]). VTA nodes go through the
+/// group-lockstep caches ([`FleetScheduler::ensure_compiled`]) and
+/// execute on the chosen replica.
+struct FleetDeviceRun<'a> {
+    sched: &'a mut FleetScheduler,
+    device: usize,
+    group: usize,
+}
+
+impl VtaNodeExec for FleetDeviceRun<'_> {
+    fn clock_hz(&self) -> f64 {
+        self.sched.pool.config_of(self.device).clock_hz
+    }
+
+    fn cpu_mut(&mut self) -> &mut CpuBackend {
+        &mut self.sched.cpu
+    }
+
+    fn exec_vta_node(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<(Tensor<i8>, SimStats), ExecError> {
+        let node = &g.nodes[id];
+        let entry = op_impl(&node.op);
+        self.sched.ensure_compiled(self.group, g, node, key, schedule)?;
+        // Split borrows: the chosen replica executes a plan held by
+        // its own (disjoint) cache.
+        let rt = self.sched.pool.device_mut(self.device);
+        let compiled =
+            self.sched.caches[self.device].peek(key).expect("plan resident after ensure_compiled");
+        execute_compiled(entry, compiled, rt, inputs).map_err(|e| lift_compile_err(&node.name, e))
+    }
+}

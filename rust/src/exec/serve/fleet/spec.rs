@@ -1,0 +1,281 @@
+//! The fleet specification: the deployable artifact connecting
+//! `vta dse --fleet` to `vta serve --fleet`.
+//!
+//! A [`FleetSpec`] is an ordered list of [`FleetMember`]s — (hardware
+//! variant, replica count) pairs. Member order is meaningful: it fixes
+//! the config-group order of the pool
+//! ([`HeterogeneousPool`](crate::runtime::HeterogeneousPool) groups by
+//! first appearance), which in turn fixes [`RoutePolicy`] tie-breaks
+//! (`RoutePolicy::Static(g)` and cost-model ties both resolve by group
+//! index).
+//!
+//! The on-disk format is plain JSON through the same hand-rolled
+//! subset the tuning-record store uses ([`crate::dse::records::json`]):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "members": [
+//!     { "devices": 2, "config": { "gemm": { "batch": 1, ... }, ... } }
+//!   ]
+//! }
+//! ```
+//!
+//! [`RoutePolicy`]: super::RoutePolicy
+
+use crate::arch::{DramModel, GemmShape, VtaConfig};
+use crate::dse::records::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One config group of a fleet: `devices` identical replicas of `cfg`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetMember {
+    /// The hardware variant of this group.
+    pub cfg: VtaConfig,
+    /// Replica count (≥ 1).
+    pub devices: usize,
+}
+
+/// An ordered fleet composition — the `dse --fleet` output and the
+/// `serve --fleet` input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    /// Config groups, in group order.
+    pub members: Vec<FleetMember>,
+}
+
+impl FleetSpec {
+    /// A fleet of the given members.
+    pub fn new(members: Vec<FleetMember>) -> Self {
+        FleetSpec { members }
+    }
+
+    /// The homogeneous special case: `devices` replicas of one config.
+    pub fn homogeneous(cfg: &VtaConfig, devices: usize) -> Self {
+        FleetSpec { members: vec![FleetMember { cfg: cfg.clone(), devices }] }
+    }
+
+    /// Total replicas across all members.
+    pub fn total_devices(&self) -> usize {
+        self.members.iter().map(|m| m.devices).sum()
+    }
+
+    /// One config per replica, in group order — the constructor input
+    /// of [`HeterogeneousPool`](crate::runtime::HeterogeneousPool).
+    /// Distinct members with equal configs collapse into one pool
+    /// group; [`Self::validate`] rejects that, so a validated spec's
+    /// member order *is* the pool's group order.
+    pub fn configs(&self) -> Vec<VtaConfig> {
+        let mut out = Vec::with_capacity(self.total_devices());
+        for m in &self.members {
+            for _ in 0..m.devices {
+                out.push(m.cfg.clone());
+            }
+        }
+        out
+    }
+
+    /// Structural checks: at least one member, every member has at
+    /// least one replica and a sound config, and no two members share
+    /// a config (duplicates would silently merge into one pool group,
+    /// breaking the member-index ↔ group-index correspondence).
+    pub fn validate(&self) -> Result<()> {
+        if self.members.is_empty() {
+            bail!("a fleet needs at least one member");
+        }
+        for (i, m) in self.members.iter().enumerate() {
+            if m.devices < 1 {
+                bail!("fleet member {i} has no replicas");
+            }
+            let errs = m.cfg.validate();
+            if !errs.is_empty() {
+                bail!("fleet member {i} config invalid: {}", errs.join("; "));
+            }
+            if self.members[..i].iter().any(|prev| prev.cfg == m.cfg) {
+                bail!("fleet member {i} duplicates an earlier member's config");
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the versioned JSON format.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"version\": 1,\n  \"members\": [");
+        for (i, m) in self.members.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\n    {{ \"devices\": {}, \"config\": ", m.devices);
+            write_config(&mut s, &m.cfg);
+            s.push_str(" }");
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    /// Parse the versioned JSON format (and [`Self::validate`] the
+    /// result).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let root = json::parse(text)?;
+        let version = root.get("version").and_then(Value::as_u64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported fleet-spec version {version}");
+        }
+        let members_json =
+            root.get("members").and_then(Value::as_array).context("missing \"members\" array")?;
+        let mut members = Vec::with_capacity(members_json.len());
+        for (i, m) in members_json.iter().enumerate() {
+            let devices = m
+                .get("devices")
+                .and_then(Value::as_u64)
+                .with_context(|| format!("member {i}: missing integer field \"devices\""))?
+                as usize;
+            let cfg_json = m.get("config").with_context(|| format!("member {i}: missing \"config\""))?;
+            let cfg = parse_config(cfg_json).with_context(|| format!("member {i}: bad config"))?;
+            members.push(FleetMember { cfg, devices });
+        }
+        let spec = FleetSpec { members };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Write the spec to `path` as JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing fleet spec to {}", path.display()))
+    }
+
+    /// Load a spec from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fleet spec from {}", path.display()))?;
+        Self::from_json(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Serialize one `VtaConfig` as a JSON object (floats via `{:?}` so
+/// whole values keep a trailing `.0` and re-parse as floats).
+fn write_config(s: &mut String, cfg: &VtaConfig) {
+    let _ = write!(
+        s,
+        "{{ \"gemm\": {{ \"batch\": {}, \"block_in\": {}, \"block_out\": {} }}, \
+           \"inp_bits\": {}, \"wgt_bits\": {}, \"acc_bits\": {}, \"out_bits\": {}, \
+           \"inp_buf_bytes\": {}, \"wgt_buf_bytes\": {}, \"acc_buf_bytes\": {}, \
+           \"out_buf_bytes\": {}, \"uop_buf_bytes\": {}, \"clock_hz\": {:?}, \
+           \"dram\": {{ \"bytes_per_cycle\": {:?}, \"latency\": {} }}, \
+           \"cmd_queue_depth\": {}, \"dep_queue_depth\": {}, \"alu_ii\": {}, \"alu_lanes\": {} }}",
+        cfg.gemm.batch,
+        cfg.gemm.block_in,
+        cfg.gemm.block_out,
+        cfg.inp_bits,
+        cfg.wgt_bits,
+        cfg.acc_bits,
+        cfg.out_bits,
+        cfg.inp_buf_bytes,
+        cfg.wgt_buf_bytes,
+        cfg.acc_buf_bytes,
+        cfg.out_buf_bytes,
+        cfg.uop_buf_bytes,
+        cfg.clock_hz,
+        cfg.dram.bytes_per_cycle,
+        cfg.dram.latency,
+        cfg.cmd_queue_depth,
+        cfg.dep_queue_depth,
+        cfg.alu_ii,
+        cfg.alu_lanes,
+    );
+}
+
+/// Parse one `VtaConfig` from its JSON object form.
+fn parse_config(v: &Value) -> Result<VtaConfig> {
+    let uint = |obj: &Value, name: &str| -> Result<usize> {
+        obj.get(name)
+            .and_then(Value::as_u64)
+            .map(|n| n as usize)
+            .with_context(|| format!("missing integer field {name:?}"))
+    };
+    let float = |obj: &Value, name: &str| -> Result<f64> {
+        obj.get(name).and_then(Value::as_f64).with_context(|| format!("missing number field {name:?}"))
+    };
+    let gemm = v.get("gemm").context("missing \"gemm\"")?;
+    let dram = v.get("dram").context("missing \"dram\"")?;
+    Ok(VtaConfig {
+        gemm: GemmShape {
+            batch: uint(gemm, "batch")?,
+            block_in: uint(gemm, "block_in")?,
+            block_out: uint(gemm, "block_out")?,
+        },
+        inp_bits: uint(v, "inp_bits")?,
+        wgt_bits: uint(v, "wgt_bits")?,
+        acc_bits: uint(v, "acc_bits")?,
+        out_bits: uint(v, "out_bits")?,
+        inp_buf_bytes: uint(v, "inp_buf_bytes")?,
+        wgt_buf_bytes: uint(v, "wgt_buf_bytes")?,
+        acc_buf_bytes: uint(v, "acc_buf_bytes")?,
+        out_buf_bytes: uint(v, "out_buf_bytes")?,
+        uop_buf_bytes: uint(v, "uop_buf_bytes")?,
+        clock_hz: float(v, "clock_hz")?,
+        dram: DramModel {
+            bytes_per_cycle: float(dram, "bytes_per_cycle")?,
+            latency: dram
+                .get("latency")
+                .and_then(Value::as_u64)
+                .context("missing integer field \"latency\"")?,
+        },
+        cmd_queue_depth: uint(v, "cmd_queue_depth")?,
+        dep_queue_depth: uint(v, "dep_queue_depth")?,
+        alu_ii: v.get("alu_ii").and_then(Value::as_u64).context("missing integer field \"alu_ii\"")?,
+        alu_lanes: uint(v, "alu_lanes")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alt_cfg() -> VtaConfig {
+        let mut c = VtaConfig::pynq();
+        c.alu_ii = 1;
+        c
+    }
+
+    #[test]
+    fn fleet_spec_json_roundtrip_is_exact() {
+        let spec = FleetSpec::new(vec![
+            FleetMember { cfg: VtaConfig::pynq(), devices: 2 },
+            FleetMember { cfg: alt_cfg(), devices: 1 },
+        ]);
+        spec.validate().unwrap();
+        let text = spec.to_json();
+        let back = FleetSpec::from_json(&text).unwrap();
+        assert_eq!(back, spec);
+        // Round-tripping again is byte-identical.
+        assert_eq!(back.to_json(), text);
+        assert_eq!(back.total_devices(), 3);
+        assert_eq!(back.configs().len(), 3);
+        assert_eq!(back.configs()[0], VtaConfig::pynq());
+        assert_eq!(back.configs()[2], alt_cfg());
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        assert!(FleetSpec::new(vec![]).validate().is_err(), "empty fleet");
+        let zero = FleetSpec::new(vec![FleetMember { cfg: VtaConfig::pynq(), devices: 0 }]);
+        assert!(zero.validate().is_err(), "zero-replica member");
+        let dup = FleetSpec::new(vec![
+            FleetMember { cfg: VtaConfig::pynq(), devices: 1 },
+            FleetMember { cfg: VtaConfig::pynq(), devices: 1 },
+        ]);
+        assert!(dup.validate().is_err(), "duplicate config");
+        let mut bad = VtaConfig::pynq();
+        bad.alu_ii = 0;
+        let invalid = FleetSpec::new(vec![FleetMember { cfg: bad, devices: 1 }]);
+        assert!(invalid.validate().is_err(), "invalid member config");
+        assert!(FleetSpec::from_json("{\"version\": 2, \"members\": []}").is_err());
+    }
+}

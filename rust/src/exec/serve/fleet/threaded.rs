@@ -1,0 +1,546 @@
+//! The real-threads fleet runtime: the threaded pool of
+//! [`super::super::threaded`] generalized to a [`HeterogeneousPool`] —
+//! one bounded request queue **per config group**, one plan directory
+//! **per config group**, and the [`Router`] consulted at submit time.
+//!
+//! Structure:
+//!
+//! * **Routing at submit.** [`FleetHandle::submit`] /
+//!   [`FleetHandle::try_submit`] take a workload class; the router
+//!   picks the config group and the request lands in that group's
+//!   queue. The route decision is a pure function of the class (plus
+//!   the round-robin cursor, which advances in submission order), so
+//!   the simulated [`FleetScheduler`](super::FleetScheduler) — which
+//!   routes the same submission sequence — assigns every request to
+//!   the same group. That is what lets the fleet oracle-equivalence
+//!   suite compare the two runtimes group by group.
+//! * **Per-group publish barriers.** Replication-by-replay (blueprint
+//!   → [`materialize`](crate::compiler::PlanBlueprint::materialize))
+//!   is only valid between replicas of one variant with identical
+//!   allocator histories, so each group has its own
+//!   [`PlanDirectory`] and event log; a group's workers share plans
+//!   exactly as the homogeneous pool's workers do, and groups never
+//!   exchange plans. Pool counters are therefore *per group*, and
+//!   match the simulated fleet's per-group lockstep caches exactly.
+//! * **Per-class graphs.** Workers execute through the same shared
+//!   graph walker ([`run_graph`]); the request's class selects the
+//!   graph and the per-(group, class) plan keys / tuned schedules.
+//!
+//! Outputs are bit-identical to the simulated fleet and to per-config
+//! single-device engines — execution is exact on every variant.
+
+use super::super::super::executor::{CpuBackend, ExecError};
+use super::super::cache::{PlanCacheStats, PlanKey};
+use super::super::run::{plan_keys_for, run_graph, tuned_schedules_for};
+use super::super::threaded::{
+    PlanDirectory, Replica, Request, RequestQueue, Response, SubmitRejected, WorkerExec,
+};
+use super::super::Completion;
+use super::router::{RoutePolicy, Router};
+use super::spec::FleetSpec;
+use crate::compiler::op::{config_fingerprint, op_impl};
+use crate::compiler::ScheduleChoice;
+use crate::dse::records::TuningRecords;
+use crate::graph::{stages, Graph, Placement};
+use crate::metrics::{LatencyHistogram, ThreadCounter};
+use crate::runtime::{HeterogeneousPool, VtaRuntime};
+use crate::util::Tensor;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Configuration of one threaded fleet run (replica counts come from
+/// the [`FleetSpec`]).
+#[derive(Clone, Debug)]
+pub struct FleetThreadedOptions {
+    /// How requests are assigned to config groups.
+    pub policy: RoutePolicy,
+    /// Bounded request-queue capacity **per group** (admission
+    /// control).
+    pub queue_capacity: usize,
+    /// Most requests a worker pulls per queue visit.
+    pub max_batch: usize,
+    /// Plan-directory capacity per group (compiled plans resident per
+    /// replica).
+    pub cache_capacity: usize,
+    /// Virtual threads the plans are lowered with (1 or 2).
+    pub virtual_threads: usize,
+    /// Device DRAM bytes per replica.
+    pub dram_size: usize,
+    /// Start with workers gated: nothing is served until
+    /// [`FleetHandle::resume`].
+    pub start_paused: bool,
+}
+
+impl FleetThreadedOptions {
+    /// Defaults matching the homogeneous threaded pool's.
+    pub fn new(policy: RoutePolicy) -> Self {
+        FleetThreadedOptions {
+            policy,
+            queue_capacity: 64,
+            max_batch: 2,
+            cache_capacity: 64,
+            virtual_threads: 1,
+            dram_size: 256 << 20,
+            start_paused: false,
+        }
+    }
+}
+
+/// Everything a fleet worker thread borrows for its group (shared,
+/// read-only or internally synchronized).
+struct GroupShared<'a> {
+    queue: &'a RequestQueue,
+    directory: &'a PlanDirectory,
+    graphs: &'a [&'a Graph],
+    /// Per-class stage order (shared across groups).
+    stage_order: &'a [Vec<Vec<usize>>],
+    /// Per-class plan keys under this group's config fingerprint.
+    keys: &'a [Vec<Option<PlanKey>>],
+    /// Per-class tuned schedules under this group's fingerprint.
+    schedules: &'a [Vec<Option<ScheduleChoice>>],
+    virtual_threads: usize,
+    max_batch: usize,
+    clock_hz: f64,
+}
+
+fn fleet_worker_loop(
+    worker: usize,
+    rt: &mut VtaRuntime,
+    shared: &GroupShared<'_>,
+    tx: mpsc::Sender<Response>,
+) -> ThreadCounter {
+    let mut ex = WorkerExec {
+        replica: Replica { rt, plans: HashMap::new(), applied: 0 },
+        directory: shared.directory,
+        cpu: CpuBackend::Native,
+        virtual_threads: shared.virtual_threads,
+        clock_hz: shared.clock_hz,
+    };
+    let mut counter = ThreadCounter::default();
+    while let Some(batch) = shared.queue.pop_batch(shared.max_batch) {
+        let t0 = Instant::now();
+        let batch_size = batch.len();
+        for req in batch {
+            let queue_wait = req.submitted.elapsed();
+            let class = req.class;
+            let s0 = Instant::now();
+            let result = run_graph(
+                &mut ex,
+                shared.graphs[class],
+                &req.input,
+                &shared.stage_order[class],
+                &shared.keys[class],
+                &shared.schedules[class],
+            )
+            .map(|(out, _)| out);
+            let response = Response {
+                id: req.id,
+                result,
+                queue_wait,
+                service: s0.elapsed(),
+                worker,
+                batch: batch_size,
+            };
+            if tx.send(response).is_err() {
+                // Receiver gone: the fleet run is being torn down.
+                return counter;
+            }
+        }
+        counter.record_batch(batch_size, t0.elapsed());
+    }
+    counter
+}
+
+/// The driver's interface to a running threaded fleet: submit classed
+/// requests (blocking or admission-controlled), poll completions, and
+/// inspect live counters. Handed to the driver closure of
+/// [`run_fleet_threaded`]; when the closure returns, every group queue
+/// closes and the fleet drains.
+pub struct FleetHandle<'s> {
+    queues: &'s [RequestQueue],
+    router: Router,
+    rx: mpsc::Receiver<Response>,
+    next_id: u64,
+    accepted: u64,
+    rejected_full: u64,
+    rejected_shutdown: u64,
+    outputs: Vec<Option<Tensor<i8>>>,
+    completions: Vec<Option<Completion>>,
+    classes: Vec<usize>,
+    routes: Vec<usize>,
+    received: u64,
+    first_error: Option<ExecError>,
+    queue_wait: LatencyHistogram,
+    service: LatencyHistogram,
+}
+
+impl FleetHandle<'_> {
+    fn record(&mut self, resp: Response) {
+        let idx = resp.id as usize;
+        match resp.result {
+            Ok(out) => self.outputs[idx] = Some(out),
+            Err(e) => {
+                self.first_error.get_or_insert(e);
+            }
+        }
+        self.queue_wait.record(resp.queue_wait.as_secs_f64());
+        self.service.record(resp.service.as_secs_f64());
+        self.completions[idx] = Some(Completion {
+            id: resp.id,
+            queue_wait: resp.queue_wait,
+            service: resp.service,
+            worker: resp.worker,
+            batch: resp.batch,
+        });
+        self.received += 1;
+    }
+
+    /// Admission-controlled submit of a class-`class` request: routes,
+    /// then rejects with a reason instead of blocking. Returns the
+    /// request's submission id. The route decision (and the
+    /// round-robin cursor) advances per attempt, accepted or not —
+    /// matching the simulated fleet, which routes every submission.
+    pub fn try_submit(&mut self, class: usize, input: Tensor<i8>) -> Result<u64, SubmitRejected> {
+        let group = self.router.route(class);
+        let id = self.next_id;
+        match self.queues[group].try_push(Request {
+            id,
+            class,
+            input,
+            submitted: Instant::now(),
+        }) {
+            Ok(()) => {
+                self.next_id += 1;
+                self.accepted += 1;
+                self.outputs.push(None);
+                self.completions.push(None);
+                self.classes.push(class);
+                self.routes.push(group);
+                Ok(id)
+            }
+            Err(e) => {
+                match e {
+                    SubmitRejected::QueueFull { .. } => self.rejected_full += 1,
+                    SubmitRejected::ShuttingDown => self.rejected_shutdown += 1,
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocking submit: routes, then waits for room in the routed
+    /// group's queue (closed-loop replay).
+    pub fn submit(&mut self, class: usize, input: Tensor<i8>) -> Result<u64, SubmitRejected> {
+        let group = self.router.route(class);
+        let id = self.next_id;
+        match self.queues[group].push_wait(Request {
+            id,
+            class,
+            input,
+            submitted: Instant::now(),
+        }) {
+            Ok(()) => {
+                self.next_id += 1;
+                self.accepted += 1;
+                self.outputs.push(None);
+                self.completions.push(None);
+                self.classes.push(class);
+                self.routes.push(group);
+                Ok(id)
+            }
+            Err(e) => {
+                self.rejected_shutdown += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Drain every completion that has already arrived (non-blocking).
+    /// Returns the newly observed completions, in arrival order.
+    pub fn poll(&mut self) -> Vec<Completion> {
+        let mut fresh = Vec::new();
+        loop {
+            let received = self.rx.try_recv();
+            let resp = match received {
+                Ok(resp) => resp,
+                Err(_) => break,
+            };
+            let id = resp.id as usize;
+            self.record(resp);
+            if let Some(c) = &self.completions[id] {
+                fresh.push(c.clone());
+            }
+        }
+        fresh
+    }
+
+    /// Block until every accepted request has completed.
+    pub fn wait_all(&mut self) {
+        while self.received < self.accepted {
+            match self.rx.recv() {
+                Ok(resp) => self.record(resp),
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Completion record of request `id`, if it has finished.
+    pub fn completion(&self, id: u64) -> Option<&Completion> {
+        self.completions.get(id as usize).and_then(|c| c.as_ref())
+    }
+
+    /// The group request `id` was routed to.
+    pub fn route_of(&self, id: u64) -> Option<usize> {
+        self.routes.get(id as usize).copied()
+    }
+
+    /// Requests admitted so far.
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Requests rejected by admission control so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_shutdown
+    }
+
+    /// Completions observed so far.
+    pub fn completed(&self) -> u64 {
+        self.received
+    }
+
+    /// Current bounded-queue depth of group `g`.
+    pub fn queue_depth(&self, g: usize) -> usize {
+        self.queues[g].depth()
+    }
+
+    /// Ungate a fleet started with `start_paused`.
+    pub fn resume(&mut self) {
+        for q in self.queues {
+            q.resume();
+        }
+    }
+}
+
+/// Final report of one threaded fleet run.
+#[derive(Debug)]
+pub struct FleetThreadedReport {
+    /// One output per accepted request, in submission order — the
+    /// vector compared bit-for-bit against the simulated fleet's.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Per-request timing, indexed like `outputs`.
+    pub completions: Vec<Completion>,
+    /// Per-request workload classes, in submission order.
+    pub classes: Vec<usize>,
+    /// Per-request routed config group, in submission order.
+    pub routes: Vec<usize>,
+    /// Per-group plan counters (hits + misses = the group's VTA-node
+    /// lookups; misses = unique plans compiled, exactly once per
+    /// group).
+    pub group_cache: Vec<PlanCacheStats>,
+    /// Per-worker counters, indexed by global replica index.
+    pub threads: Vec<ThreadCounter>,
+    /// Queue-wait distribution across all requests.
+    pub queue_wait: LatencyHistogram,
+    /// Service-time distribution across all requests.
+    pub service: LatencyHistogram,
+    /// Requests admitted.
+    pub accepted: u64,
+    /// Requests shed by admission control.
+    pub rejected: u64,
+    /// Wall-clock span of the whole run (spawn → drained).
+    pub wall: Duration,
+}
+
+impl FleetThreadedReport {
+    /// Measured (not modeled) throughput: accepted requests over the
+    /// run's wall-clock span.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.accepted as f64 / secs
+        }
+    }
+}
+
+/// Run a threaded fleet over `class_graphs`: spawn one worker per
+/// replica of every group, hand the driver a [`FleetHandle`] to feed
+/// the routed queues, then close, drain, join, and assemble the
+/// [`FleetThreadedReport`]. Worker threads are scoped — the graphs,
+/// the per-(group, class) plan keys, and the pool replicas are
+/// borrowed, not cloned.
+pub fn run_fleet_threaded<T>(
+    spec: &FleetSpec,
+    opts: &FleetThreadedOptions,
+    records: &TuningRecords,
+    class_graphs: &[&Graph],
+    driver: impl FnOnce(&mut FleetHandle) -> T,
+) -> Result<(T, FleetThreadedReport), ExecError> {
+    if let Err(e) = spec.validate() {
+        panic!("invalid fleet spec: {e}");
+    }
+    assert!(opts.virtual_threads == 1 || opts.virtual_threads == 2, "1 or 2 virtual threads");
+    let t0 = Instant::now();
+    let vt = opts.virtual_threads;
+    let cfgs = spec.configs();
+    let mut pool = HeterogeneousPool::new(&cfgs, opts.dram_size);
+    let ngroups = pool.group_count();
+    if let RoutePolicy::Static(g) = opts.policy {
+        assert!(g < ngroups, "static route to group {g} of {ngroups}");
+    }
+
+    // Every group must be able to serve every class (routing is free
+    // to send any class anywhere).
+    for group in pool.groups() {
+        for g in class_graphs {
+            for node in g.nodes.iter().filter(|n| n.placement == Placement::Vta) {
+                if !op_impl(&node.op).offloadable(&group.cfg, node, vt) {
+                    return Err(ExecError::NotOffloadable(node.name.clone(), node.op.kind()));
+                }
+            }
+        }
+    }
+
+    let group_cfgs: Vec<_> = pool.groups().iter().map(|g| g.cfg.clone()).collect();
+    let group_of: Vec<usize> = (0..pool.len()).map(|i| pool.group_of(i)).collect();
+    let stage_order: Vec<Vec<Vec<usize>>> = class_graphs.iter().map(|g| stages(g)).collect();
+    let keys: Vec<Vec<Vec<Option<PlanKey>>>> = group_cfgs
+        .iter()
+        .map(|cfg| {
+            let fp = config_fingerprint(cfg);
+            class_graphs.iter().map(|g| plan_keys_for(fp, vt, g)).collect()
+        })
+        .collect();
+    let schedules: Vec<Vec<Vec<Option<ScheduleChoice>>>> = group_cfgs
+        .iter()
+        .map(|cfg| {
+            let fp = config_fingerprint(cfg);
+            class_graphs.iter().map(|g| tuned_schedules_for(records, fp, vt, g)).collect()
+        })
+        .collect();
+
+    let queues: Vec<RequestQueue> =
+        (0..ngroups).map(|_| RequestQueue::new(opts.queue_capacity, opts.start_paused)).collect();
+    let directories: Vec<PlanDirectory> =
+        (0..ngroups).map(|_| PlanDirectory::new(opts.cache_capacity)).collect();
+    let (tx, rx) = mpsc::channel::<Response>();
+
+    let shareds: Vec<GroupShared<'_>> = (0..ngroups)
+        .map(|gi| GroupShared {
+            queue: &queues[gi],
+            directory: &directories[gi],
+            graphs: class_graphs,
+            stage_order: &stage_order,
+            keys: &keys[gi],
+            schedules: &schedules[gi],
+            virtual_threads: vt,
+            max_batch: opts.max_batch,
+            clock_hz: group_cfgs[gi].clock_hz,
+        })
+        .collect();
+
+    let (value, mut handle, counters) = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(pool.len());
+        for (worker, rt) in pool.iter_mut().enumerate() {
+            let tx = tx.clone();
+            let shared = &shareds[group_of[worker]];
+            joins.push(scope.spawn(move || fleet_worker_loop(worker, rt, shared, tx)));
+        }
+        drop(tx);
+
+        let mut handle = FleetHandle {
+            queues: &queues,
+            router: Router::new(opts.policy, &group_cfgs, class_graphs),
+            rx,
+            next_id: 0,
+            accepted: 0,
+            rejected_full: 0,
+            rejected_shutdown: 0,
+            outputs: Vec::new(),
+            completions: Vec::new(),
+            classes: Vec::new(),
+            routes: Vec::new(),
+            received: 0,
+            first_error: None,
+            queue_wait: LatencyHistogram::default(),
+            service: LatencyHistogram::default(),
+        };
+        let value = driver(&mut handle);
+
+        // Graceful drain: stop admitting everywhere, serve what's
+        // queued, join.
+        for q in &queues {
+            q.close();
+        }
+        let mut counters = Vec::with_capacity(joins.len());
+        for join in joins {
+            match join.join() {
+                Ok(counter) => counters.push(counter),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        // Workers are gone; pick up every remaining response.
+        loop {
+            let received = handle.rx.try_recv();
+            let resp = match received {
+                Ok(resp) => resp,
+                Err(_) => break,
+            };
+            handle.record(resp);
+        }
+        (value, handle, counters)
+    });
+
+    if let Some(e) = handle.first_error.take() {
+        return Err(e);
+    }
+    let outputs: Vec<Tensor<i8>> = handle
+        .outputs
+        .into_iter()
+        .map(|o| o.expect("every accepted request produced an output"))
+        .collect();
+    let completions: Vec<Completion> = handle
+        .completions
+        .into_iter()
+        .map(|c| c.expect("every accepted request completed"))
+        .collect();
+    Ok((
+        value,
+        FleetThreadedReport {
+            outputs,
+            completions,
+            classes: handle.classes,
+            routes: handle.routes,
+            group_cache: directories.iter().map(|d| d.stats()).collect(),
+            threads: counters,
+            queue_wait: handle.queue_wait,
+            service: handle.service,
+            accepted: handle.accepted,
+            rejected: handle.rejected_full + handle.rejected_shutdown,
+            wall: t0.elapsed(),
+        },
+    ))
+}
+
+/// Closed-loop convenience: replay a classed request trace through a
+/// threaded fleet (blocking submits — nothing is shed) and return the
+/// drained report. The exact counterpart of feeding the same trace to
+/// the simulated [`FleetScheduler`](super::FleetScheduler), which is
+/// what the fleet oracle-equivalence suite does.
+pub fn serve_fleet_trace(
+    spec: &FleetSpec,
+    opts: &FleetThreadedOptions,
+    records: &TuningRecords,
+    class_graphs: &[&Graph],
+    trace: &[(usize, Tensor<i8>)],
+) -> Result<FleetThreadedReport, ExecError> {
+    let ((), report) = run_fleet_threaded(spec, opts, records, class_graphs, |handle| {
+        for (class, input) in trace {
+            handle.submit(*class, input.clone()).expect("queue open while driver runs");
+        }
+    })?;
+    Ok(report)
+}

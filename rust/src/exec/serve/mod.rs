@@ -54,9 +54,21 @@
 //! * [`open_loop`] — open-loop Poisson load generation (target-QPS
 //!   ramps, p50/p99/p99.9 latency, SLO attainment) against the
 //!   threaded pool.
+//!
+//! And one generalization from N identical replicas to a mixed fleet:
+//!
+//! * [`fleet`] — **heterogeneous fleet serving**: a
+//!   [`HeterogeneousPool`](crate::runtime::HeterogeneousPool) of
+//!   per-replica configs grouped by variant, a cost-aware
+//!   [`Router`](fleet::Router) assigning each workload class to its
+//!   best config group, group-wise lockstep plan caches (simulated)
+//!   and per-group plan directories (threaded), all deployed from a
+//!   [`FleetSpec`](fleet::FleetSpec) that `vta dse --fleet` searches
+//!   for and `vta serve --fleet` consumes.
 
 mod cache;
 mod engine;
+pub mod fleet;
 mod loadgen;
 mod report;
 mod run;

@@ -113,13 +113,17 @@ pub struct PoolReport {
     /// End of the simulated span: the last batch completion (0 with no
     /// requests).
     pub makespan_seconds: f64,
-    /// Plan-cache counters for this run (replica 0 — the caches run in
-    /// lockstep, so its counters are the pool's).
+    /// Plan-cache counters for this run. This pool is one config group
+    /// — all replicas run the same variant and their caches run in
+    /// lockstep — so replica 0's counters are the pool's. (The fleet
+    /// generalization reports one such entry per config group:
+    /// [`FleetReport::group_cache`](super::fleet::FleetReport).)
     pub cache: PlanCacheStats,
     /// Real host wall time of the drain (includes pool-level compiles
     /// on cold caches).
     pub host_wall: Duration,
-    /// Queue-depth samples and per-device counters.
+    /// Queue-depth samples and per-device counters, each stamped with
+    /// this pool's config fingerprint.
     pub metrics: PoolMetrics,
 }
 
@@ -216,6 +220,16 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Fresh pool counters with every device stamped with the pool's
+    /// (single) config fingerprint.
+    fn fresh_metrics(&self) -> PoolMetrics {
+        let mut metrics = PoolMetrics::new(self.pool.len());
+        for counter in &mut metrics.devices {
+            counter.config_fingerprint = self.config_fp;
+        }
+        metrics
+    }
+
     /// Cumulative plan-cache counters (replica 0 — lockstep makes it
     /// the pool's).
     pub fn cache_stats(&self) -> PlanCacheStats {
@@ -260,7 +274,7 @@ impl Scheduler {
                 makespan_seconds: 0.0,
                 cache: PlanCacheStats::default(),
                 host_wall: t0.elapsed(),
-                metrics: PoolMetrics::new(ndev),
+                metrics: self.fresh_metrics(),
             });
         }
 
@@ -302,7 +316,7 @@ impl Scheduler {
         // Dispatch: least-loaded replica, per-device simulated clocks.
         let mut free_at = vec![0.0f64; ndev];
         let mut busy = vec![0.0f64; ndev];
-        let mut metrics = PoolMetrics::new(ndev);
+        let mut metrics = self.fresh_metrics();
         let mut batch_records = Vec::with_capacity(batches.len());
         let mut outputs: Vec<Option<Tensor<i8>>> = (0..n).map(|_| None).collect();
         let mut arrivals = vec![0.0f64; n];

@@ -119,21 +119,24 @@ pub enum SubmitRejected {
     ShuttingDown,
 }
 
-/// One admitted request, queued for a worker.
-struct Request {
-    id: u64,
-    input: Tensor<i8>,
-    submitted: Instant,
+/// One admitted request, queued for a worker. Shared with the fleet
+/// runtime ([`super::fleet`]), whose workers pick the graph by
+/// `class`; the single-graph pool always submits class 0.
+pub(crate) struct Request {
+    pub(crate) id: u64,
+    pub(crate) class: usize,
+    pub(crate) input: Tensor<i8>,
+    pub(crate) submitted: Instant,
 }
 
 /// One served request, reported back to the pool handle.
-struct Response {
-    id: u64,
-    result: Result<Tensor<i8>, ExecError>,
-    queue_wait: Duration,
-    service: Duration,
-    worker: usize,
-    batch: usize,
+pub(crate) struct Response {
+    pub(crate) id: u64,
+    pub(crate) result: Result<Tensor<i8>, ExecError>,
+    pub(crate) queue_wait: Duration,
+    pub(crate) service: Duration,
+    pub(crate) worker: usize,
+    pub(crate) batch: usize,
 }
 
 /// Completion record of one request (timing only; outputs are
@@ -170,8 +173,9 @@ struct QueueState {
 }
 
 /// Bounded MPMC queue: producers reject or block at capacity, workers
-/// pull opportunistic batches, close() drains gracefully.
-struct RequestQueue {
+/// pull opportunistic batches, close() drains gracefully. The fleet
+/// runtime instantiates one per config group.
+pub(crate) struct RequestQueue {
     capacity: usize,
     state: Mutex<QueueState>,
     not_empty: Condvar,
@@ -179,7 +183,7 @@ struct RequestQueue {
 }
 
 impl RequestQueue {
-    fn new(capacity: usize, paused: bool) -> Self {
+    pub(crate) fn new(capacity: usize, paused: bool) -> Self {
         RequestQueue {
             capacity: capacity.max(1),
             state: Mutex::new(QueueState { buf: VecDeque::new(), closed: false, paused }),
@@ -193,7 +197,7 @@ impl RequestQueue {
     }
 
     /// Admission-controlled push: never blocks.
-    fn try_push(&self, req: Request) -> Result<(), SubmitRejected> {
+    pub(crate) fn try_push(&self, req: Request) -> Result<(), SubmitRejected> {
         let mut st = self.lock();
         if st.closed {
             return Err(SubmitRejected::ShuttingDown);
@@ -208,7 +212,7 @@ impl RequestQueue {
     }
 
     /// Blocking push: waits for room (closed-loop trace replay).
-    fn push_wait(&self, req: Request) -> Result<(), SubmitRejected> {
+    pub(crate) fn push_wait(&self, req: Request) -> Result<(), SubmitRejected> {
         let mut st = self.lock();
         while !st.closed && st.buf.len() >= self.capacity {
             st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
@@ -226,7 +230,7 @@ impl RequestQueue {
     /// paused) and open. `None` means closed *and* drained — the
     /// worker-exit signal. A non-full final pull is the trailing
     /// partial batch at stream end.
-    fn pop_batch(&self, max: usize) -> Option<Vec<Request>> {
+    pub(crate) fn pop_batch(&self, max: usize) -> Option<Vec<Request>> {
         let mut st = self.lock();
         loop {
             if !st.paused && !st.buf.is_empty() {
@@ -243,19 +247,19 @@ impl RequestQueue {
         }
     }
 
-    fn depth(&self) -> usize {
+    pub(crate) fn depth(&self) -> usize {
         self.lock().buf.len()
     }
 
     /// Ungate paused workers.
-    fn resume(&self) {
+    pub(crate) fn resume(&self) {
         self.lock().paused = false;
         self.not_empty.notify_all();
     }
 
     /// Stop admitting; already-admitted requests still drain. Also
     /// ungates paused workers so shutdown cannot deadlock.
-    fn close(&self) {
+    pub(crate) fn close(&self) {
         let mut st = self.lock();
         st.closed = true;
         st.paused = false;
@@ -289,14 +293,17 @@ struct DirectoryState {
 
 /// The pool-shared plan directory: membership, LRU bookkeeping,
 /// pool-level counters, and the event log. Its mutex is the publish
-/// barrier — compiles happen under it, so log order is total.
-struct PlanDirectory {
+/// barrier — compiles happen under it, so log order is total. The
+/// fleet runtime instantiates one per config group: replication-by-
+/// replay is only valid between replicas of one variant, so each
+/// group keeps its own canonical history.
+pub(crate) struct PlanDirectory {
     capacity: usize,
     state: Mutex<DirectoryState>,
 }
 
 impl PlanDirectory {
-    fn new(capacity: usize) -> Self {
+    pub(crate) fn new(capacity: usize) -> Self {
         assert!(capacity >= 1, "plan directory needs at least one slot");
         PlanDirectory {
             capacity,
@@ -325,7 +332,7 @@ impl PlanDirectory {
         }
     }
 
-    fn stats(&self) -> PlanCacheStats {
+    pub(crate) fn stats(&self) -> PlanCacheStats {
         self.lock().stats
     }
 }
@@ -336,11 +343,11 @@ impl PlanDirectory {
 
 /// One worker's view of its pool replica: the runtime plus the locally
 /// materialized plans and the event-log cursor.
-struct Replica<'rt> {
-    rt: &'rt mut VtaRuntime,
-    plans: HashMap<PlanKey, CompiledNode>,
+pub(crate) struct Replica<'rt> {
+    pub(crate) rt: &'rt mut VtaRuntime,
+    pub(crate) plans: HashMap<PlanKey, CompiledNode>,
     /// Log prefix already applied to this replica's allocator.
-    applied: usize,
+    pub(crate) applied: usize,
 }
 
 impl Replica<'_> {
@@ -368,12 +375,14 @@ impl Replica<'_> {
 
 /// The worker's side of the shared graph walker: VTA nodes resolve
 /// through the local plan map, falling back to the directory protocol.
-struct WorkerExec<'rt, 'p> {
-    replica: Replica<'rt>,
-    directory: &'p PlanDirectory,
-    cpu: CpuBackend,
-    virtual_threads: usize,
-    clock_hz: f64,
+/// Shared with the fleet runtime, whose workers point `directory` at
+/// their own group's directory.
+pub(crate) struct WorkerExec<'rt, 'p> {
+    pub(crate) replica: Replica<'rt>,
+    pub(crate) directory: &'p PlanDirectory,
+    pub(crate) cpu: CpuBackend,
+    pub(crate) virtual_threads: usize,
+    pub(crate) clock_hz: f64,
 }
 
 impl WorkerExec<'_, '_> {
@@ -581,7 +590,7 @@ impl PoolHandle<'_> {
     /// blocking. Returns the request's submission id.
     pub fn try_submit(&mut self, input: Tensor<i8>) -> Result<u64, SubmitRejected> {
         let id = self.next_id;
-        match self.queue.try_push(Request { id, input, submitted: Instant::now() }) {
+        match self.queue.try_push(Request { id, class: 0, input, submitted: Instant::now() }) {
             Ok(()) => {
                 self.next_id += 1;
                 self.accepted += 1;
@@ -602,7 +611,7 @@ impl PoolHandle<'_> {
     /// Blocking submit: waits for queue room (closed-loop replay).
     pub fn submit(&mut self, input: Tensor<i8>) -> Result<u64, SubmitRejected> {
         let id = self.next_id;
-        match self.queue.push_wait(Request { id, input, submitted: Instant::now() }) {
+        match self.queue.push_wait(Request { id, class: 0, input, submitted: Instant::now() }) {
             Ok(()) => {
                 self.next_id += 1;
                 self.accepted += 1;

@@ -146,6 +146,64 @@ pub fn resnet18(n: usize, seed: u64) -> Result<Graph, GraphError> {
     Ok(g)
 }
 
+/// A miniature ResNet for serving tests and mixed-traffic drivers:
+/// conv stem (3 → `base_c` channels), two residual basic blocks,
+/// global average pooling, dense classifier with 10 classes — the
+/// ResNet-18 topology at bench scale, deterministic in `seed`.
+/// `size` is the (square) input resolution for batch size `n`.
+///
+/// This is the conv-heavy workload class of the fleet-serving mixed
+/// traffic (`vta serve --fleet --model mixed` pairs it with
+/// [`style_net`](super::style::style_net)).
+pub fn resnet_mini(n: usize, size: usize, seed: u64) -> Result<Graph, GraphError> {
+    let base_c = 16usize;
+    let rq = |relu: bool| Requant { shift: LAYER_SHIFT, relu };
+    let mut g = Graph::new();
+    let input = g.add("input", Op::Input { shape: vec![n, 3, size, size] }, &[])?;
+
+    let stem_p =
+        Conv2dParams { h: size, w: size, ic: 3, oc: base_c, k: 3, s: 1, requant: rq(true) };
+    let stem = g.add("stem", Op::Conv2d { p: stem_p }, &[input])?;
+    g.set_weights(stem, synth_conv_weights(seed, base_c, 3, 3));
+
+    let mut x = stem;
+    for b in 0u64..2 {
+        let p1 = Conv2dParams {
+            h: size,
+            w: size,
+            ic: base_c,
+            oc: base_c,
+            k: 3,
+            s: 1,
+            requant: rq(true),
+        };
+        let c1 = g.add(format!("block{b}.conv1"), Op::Conv2d { p: p1 }, &[x])?;
+        g.set_weights(c1, synth_conv_weights(seed + 10 + b * 2, base_c, base_c, 3));
+        let p2 = Conv2dParams {
+            h: size,
+            w: size,
+            ic: base_c,
+            oc: base_c,
+            k: 3,
+            s: 1,
+            requant: rq(false),
+        };
+        let c2 = g.add(format!("block{b}.conv2"), Op::Conv2d { p: p2 }, &[c1])?;
+        g.set_weights(c2, synth_conv_weights(seed + 11 + b * 2, base_c, base_c, 3));
+        let sum = g.add(format!("block{b}.add"), Op::Add, &[c2, x])?;
+        x = g.add(format!("block{b}.relu"), Op::Relu, &[sum])?;
+    }
+
+    let gap = g.add("avgpool", Op::GlobalAvgPool, &[x])?;
+    let fcp = MatmulParams { m: n, k: base_c, n: 10, requant: Requant { shift: 2, relu: false } };
+    let fc = g.add("fc", Op::Dense { p: fcp }, &[gap])?;
+    let mut rng = XorShiftRng::new(seed ^ 0x5EED);
+    g.set_weights(fc, Tensor::from_vec(&[10, base_c], rng.vec_i8(10 * base_c, -4, 4)).unwrap());
+
+    g.validate()?;
+    Ok(g)
+}
+
 /// Map each conv node of a built graph to its Table 1 label (by shape
 /// match). Nodes that share a configuration share the label, as in the
 /// paper ("configurations of all conv2d operators" — duplicates

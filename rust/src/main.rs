@@ -28,14 +28,27 @@
 //!   scheduler oracle; `--qps LIST` then drives an open-loop Poisson
 //!   ramp and prints per-step latency percentiles and SLO attainment,
 //!   and `--require-speedup X` gates measured multi-thread throughput
-//!   against the 1-thread baseline.
+//!   against the 1-thread baseline. With `--fleet SPEC.json` the
+//!   command instead serves a **heterogeneous fleet**: mixed traffic
+//!   (`--model mixed` pairs a conv-bound resnet-mini class with an
+//!   ALU-bound style class) routed across mixed-config device groups
+//!   by `--route cost|roundrobin|static:G`, self-verified bit-exactly
+//!   against per-config single-device engines and the threaded fleet
+//!   runtime; `--require-routing-win` gates cost-model vs round-robin
+//!   modeled makespan.
 //! * `dse [--budget N] [--tune-trials N] [--seed N] [--top N]
 //!   [--devices N] [--workload tiny|resnet] [--records FILE]
 //!   [--require-improvement]` — design-space exploration: search
 //!   hardware variants under a Zynq-7020 resource budget plus
 //!   per-operator schedule tuning — candidates scored at pool level
 //!   with `--devices` replicas — report the frontier with roofline
-//!   placement, persist the tuning records.
+//!   placement, persist the tuning records. With `--fleet OUT.json
+//!   [--fleet-devices N] [--fleet-budget B,D,L]` the frontier also
+//!   feeds a fleet-composition search (multisets of variants under a
+//!   fleet-wide resource budget, scored by mixed-traffic modeled
+//!   makespan) and the winning spec is written for `vta serve
+//!   --fleet`; `--require-fleet-improvement` gates it against the
+//!   best homogeneous pool.
 //! * `table1` — print Table 1.
 //!
 //! (Hand-rolled argument parsing: the offline vendor set has no clap —
@@ -44,7 +57,14 @@
 use std::process::ExitCode;
 use vta::arch::{load_config, VtaConfig};
 use vta::compiler::{lower_conv2d, pack_activations, pack_weights};
-use vta::dse::{run_dse, DseOptions, TuningRecords};
+use vta::dse::{
+    interleave_classes, run_dse, run_fleet_dse, DseOptions, FleetDseOptions, ResourceBudget,
+    TuningRecords,
+};
+use vta::exec::serve::fleet::{
+    modeled_fleet_makespan, serve_fleet_trace, FleetOptions, FleetScheduler, FleetSpec,
+    FleetThreadedOptions, RoutePolicy, Router,
+};
 use vta::exec::{
     open_loop, run_threaded, serve_trace, CpuBackend, Executor, LoadgenOptions, PjrtCache,
     Scheduler, SchedulerOptions, ServingEngine, ThreadedOptions,
@@ -94,6 +114,12 @@ struct Flags {
     top: usize,
     workload: String,
     require_improvement: bool,
+    fleet: Option<String>,
+    fleet_devices: usize,
+    fleet_budget: Option<(usize, usize, usize)>,
+    route: String,
+    require_routing_win: bool,
+    require_fleet_improvement: bool,
     positional: Vec<String>,
 }
 
@@ -127,6 +153,12 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         top: 5,
         workload: "resnet".to_string(),
         require_improvement: false,
+        fleet: None,
+        fleet_devices: 2,
+        fleet_budget: None,
+        route: "cost".to_string(),
+        require_routing_win: false,
+        require_fleet_improvement: false,
         positional: Vec::new(),
     };
     let mut i = 0;
@@ -315,6 +347,45 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     f.size
                 );
             }
+            "--fleet" => {
+                i += 1;
+                f.fleet = Some(
+                    args.get(i).ok_or_else(|| anyhow::anyhow!("--fleet needs a spec path"))?.clone(),
+                );
+            }
+            "--fleet-devices" => {
+                i += 1;
+                f.fleet_devices = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--fleet-devices needs a replica count"))?
+                    .parse()?;
+                anyhow::ensure!(f.fleet_devices >= 1, "--fleet-devices needs at least 1");
+            }
+            "--fleet-budget" => {
+                i += 1;
+                let spec = args.get(i).ok_or_else(|| {
+                    anyhow::anyhow!("--fleet-budget needs BRAM18,DSP,LUT counts")
+                })?;
+                let parts: Vec<usize> = spec
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<Result<Vec<_>, _>>()?;
+                anyhow::ensure!(
+                    parts.len() == 3,
+                    "--fleet-budget needs exactly BRAM18,DSP,LUT (got {} value(s))",
+                    parts.len()
+                );
+                f.fleet_budget = Some((parts[0], parts[1], parts[2]));
+            }
+            "--route" => {
+                i += 1;
+                f.route = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--route needs cost|roundrobin|static:G"))?
+                    .clone();
+            }
+            "--require-routing-win" => f.require_routing_win = true,
+            "--require-fleet-improvement" => f.require_fleet_improvement = true,
             "--require-improvement" => f.require_improvement = true,
             "--cpu-only" => f.cpu_only = true,
             "--pjrt" => f.pjrt = true,
@@ -370,7 +441,7 @@ fn print_usage() {
          flags:\n\
          \x20 --config FILE             VTA variant config (key = value)\n\
          \x20 --vt N                    virtual threads (1 = no latency hiding, 2 = default)\n\
-         \x20 --model NAME              serve: graph to serve, resnet | style (default resnet)\n\
+         \x20 --model NAME              serve: graph to serve, resnet | style (default resnet); with --fleet also mixed (resnet-mini + style classes)\n\
          \x20 --size N                  style: input resolution, multiple of 4 (default 32)\n\
          \x20 --batch N                 serve: requests per batch (default 4)\n\
          \x20 --cache N                 serve: plan-cache capacity in plans (default 64)\n\
@@ -384,6 +455,12 @@ fn print_usage() {
          \x20 --qps-requests N          serve: arrivals offered per ramp step (default 32)\n\
          \x20 --slo MS                  serve: latency SLO for ramp attainment, wall ms (default 50)\n\
          \x20 --require-speedup X       serve: exit nonzero unless N threads measure >= X x the 1-thread throughput\n\
+         \x20 --fleet FILE              serve: serve across the FleetSpec's mixed-config groups; dse: search fleet compositions and write the winner here\n\
+         \x20 --route POLICY            serve --fleet: cost | roundrobin | static:G (default cost)\n\
+         \x20 --require-routing-win     serve --fleet: exit nonzero unless cost-model routing beats round-robin on modeled makespan\n\
+         \x20 --fleet-devices N         dse --fleet: total replicas across the fleet (default 2)\n\
+         \x20 --fleet-budget B,D,L      dse --fleet: fleet-wide BRAM18,DSP,LUT budget (default N Zynq-7020 boards)\n\
+         \x20 --require-fleet-improvement  dse --fleet: exit nonzero unless the best fleet matches/beats the best homogeneous pool\n\
          \x20 --records FILE            serve: load tuned schedules; dse: persist them\n\
          \x20 --budget N                dse: hardware candidates to evaluate (default 16)\n\
          \x20 --tune-trials N           dse: schedule candidates per (config, op) (default 4)\n\
@@ -515,11 +592,15 @@ fn build_model(flags: &Flags) -> anyhow::Result<(vta::graph::Graph, usize, Strin
             let (g, fused) = build_style(flags)?;
             Ok((g, fused, format!("style-transfer {0}x{0}", flags.size), flags.size))
         }
+        "mixed" => anyhow::bail!("--model mixed needs --fleet (mixed traffic is fleet-only)"),
         other => anyhow::bail!("unknown --model {other} (expected resnet|style)"),
     }
 }
 
 fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    if flags.fleet.is_some() {
+        return cmd_serve_fleet(cfg, flags);
+    }
     let (mut g, fused, model_name, size) = build_model(flags)?;
     let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
     println!(
@@ -838,6 +919,301 @@ fn cmd_serve_threaded(
     Ok(())
 }
 
+/// Workload classes of `serve --fleet` / `dse --fleet`, per `--model`.
+///
+/// `mixed` is the pair the fleet exists for: `resnet_mini` partitioned
+/// under the paper rule (its VTA work is pure conv — GEMM-bound) plus
+/// `style_net` with the ALU chain offloaded (eltwise-bound). The
+/// per-class policies are pinned rather than taken from `--offload-*`:
+/// offloading resnet's adds would make both classes ALU-hungry and
+/// erase the routing decision the fleet is meant to exercise.
+/// `resnet` / `style` run single-class traffic through the fleet.
+/// Returns class-aligned (partitioned graphs, names, input sizes).
+fn build_fleet_classes(
+    cfg: &VtaConfig,
+    flags: &Flags,
+) -> anyhow::Result<(Vec<vta::graph::Graph>, Vec<String>, Vec<usize>)> {
+    match flags.model.as_str() {
+        "mixed" => {
+            let (mut conv_g, _) = fuse(resnet::resnet_mini(1, flags.size, 42)?);
+            let mut conv_p = PartitionPolicy::paper(cfg);
+            conv_p.virtual_threads = flags.vt;
+            partition(&mut conv_g, &conv_p);
+            let (mut style_g, _) = build_style(flags)?;
+            let mut style_p = PartitionPolicy::offload_all(cfg);
+            style_p.virtual_threads = flags.vt;
+            partition(&mut style_g, &style_p);
+            Ok((
+                vec![conv_g, style_g],
+                vec![
+                    format!("resnet-mini {0}x{0}", flags.size),
+                    format!("style {0}x{0}", flags.size),
+                ],
+                vec![flags.size, flags.size],
+            ))
+        }
+        "resnet" | "style" => {
+            let (mut g, _, name, size) = build_model(flags)?;
+            partition(&mut g, &build_policy(cfg, flags));
+            Ok((vec![g], vec![name], vec![size]))
+        }
+        other => anyhow::bail!("unknown --model {other} (expected mixed|resnet|style)"),
+    }
+}
+
+/// Split `total` requests as evenly as possible over `classes` classes
+/// (remainder to the later classes, mirroring [`interleave_classes`]'
+/// later-class tie-break), each class serving at least one request.
+fn split_requests(total: usize, classes: usize) -> Vec<usize> {
+    let total = total.max(classes);
+    let base = total / classes;
+    let rem = total % classes;
+    (0..classes).map(|c| base + usize::from(c >= classes - rem)).collect()
+}
+
+/// One-line description of a fleet member / config group.
+fn describe_config(cfg: &VtaConfig) -> String {
+    format!(
+        "{} @ {:.0} MHz, ALU {} lane(s)/ii={}",
+        cfg.gemm,
+        cfg.clock_hz / 1e6,
+        cfg.alu_lanes,
+        cfg.alu_ii
+    )
+}
+
+/// The `--fleet` leg of `vta serve`: load a [`FleetSpec`], route a
+/// classed trace across its config groups with `--route`, then prove
+/// the heterogeneous runtimes exact — every request bit-identical to
+/// a single-device engine of its routed group's config, and the
+/// real-threads fleet bit-identical (outputs, routes, per-group cache
+/// counters) to the simulated oracle. `--require-routing-win` gates
+/// cost-model routing strictly beating round-robin on the modeled
+/// makespan both sides of the stack agree on.
+fn cmd_serve_fleet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        flags.qps.is_empty() && flags.require_speedup.is_none() && flags.require_scaling.is_none(),
+        "--qps / --require-speedup / --require-scaling apply to the homogeneous pool, not --fleet"
+    );
+    let path = flags.fleet.as_deref().unwrap();
+    let spec = FleetSpec::load(path)?;
+    spec.validate().map_err(|e| anyhow::anyhow!("invalid fleet spec {path}: {e}"))?;
+    let policy = RoutePolicy::parse(&flags.route)?;
+
+    let (class_graphs, class_names, class_sizes) = build_fleet_classes(cfg, flags)?;
+    let graphs: Vec<&vta::graph::Graph> = class_graphs.iter().collect();
+
+    // Trace: one full dynamic batch per device, classes split evenly
+    // and proportionally interleaved (the interleave opens with the
+    // *later* class, so a parity-pinned round-robin baseline does not
+    // accidentally route like the cost model).
+    let total = spec.total_devices() * flags.max_batch;
+    let counts = split_requests(total, graphs.len());
+    let classes = interleave_classes(&counts);
+    let inputs: Vec<vta::util::Tensor<i8>> = classes
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| synth_input(7 + i as u64, 1, 3, class_sizes[c], class_sizes[c]))
+        .collect();
+
+    let records = match &flags.records {
+        Some(path) => {
+            let r = TuningRecords::load(path)?;
+            println!("loaded {} tuning record(s) from {path}", r.len());
+            r
+        }
+        None => TuningRecords::new(),
+    };
+
+    let fopts = FleetOptions {
+        policy,
+        max_batch: flags.max_batch,
+        batch_deadline: flags.batch_deadline_ms * 1e-3,
+        cache_capacity: flags.cache,
+        virtual_threads: flags.vt,
+        dram_size: 512 << 20,
+    };
+    let mut sched = FleetScheduler::with_records(&spec, CpuBackend::Native, fopts.clone(), records.clone());
+    println!(
+        "fleet of {} device(s) in {} config group(s) from {path} (route {:?}):",
+        sched.devices(),
+        sched.group_count(),
+        policy
+    );
+    let group_cfgs = sched.group_configs();
+    let group_devices = sched.group_devices();
+    for (g, (gc, nd)) in group_cfgs.iter().zip(&group_devices).enumerate() {
+        println!("  group {g}: {nd} device(s), {}", describe_config(gc));
+    }
+    let mix: Vec<String> = class_names
+        .iter()
+        .zip(&counts)
+        .map(|(n, c)| format!("{c}x {n}"))
+        .collect();
+    println!("traffic: {} request(s) — {}; vt={}", classes.len(), mix.join(", "), flags.vt);
+
+    for (i, &c) in classes.iter().enumerate() {
+        sched.submit(0.0, c, inputs[i].clone());
+    }
+    let report = sched.run(&graphs)?;
+
+    // Who went where.
+    let mut routed = vec![vec![0usize; group_cfgs.len()]; graphs.len()];
+    for (&c, &g) in report.classes.iter().zip(&report.routes) {
+        routed[c][g] += 1;
+    }
+    for (c, name) in class_names.iter().enumerate() {
+        let spread: Vec<String> =
+            routed[c].iter().enumerate().map(|(g, n)| format!("g{g}:{n}")).collect();
+        println!("routes for {name}: {}", spread.join(" "));
+    }
+    println!(
+        "simulated fleet: {} batch(es), makespan {:.2} ms, modeled throughput {:.1} inf/s",
+        report.batches.len(),
+        report.makespan_seconds * 1e3,
+        report.throughput()
+    );
+    for (g, stats) in report.group_cache.iter().enumerate() {
+        println!(
+            "  group {g} plan cache: {} miss(es) / {} hit(s) (lockstep across its replicas)",
+            stats.misses, stats.hits
+        );
+    }
+    let utils: Vec<String> = (0..sched.devices())
+        .map(|d| {
+            format!(
+                "d{d}[{:08x}] {:.0}%",
+                report.metrics.devices[d].config_fingerprint & 0xffff_ffff,
+                report.utilization(d) * 100.0
+            )
+        })
+        .collect();
+    println!("per-device utilization (config fp): {}", utils.join(", "));
+
+    // Self-verification, part 1: every request must be bit-identical
+    // to a single-device ServingEngine built from its routed group's
+    // exact config — heterogeneity must not change a single answer.
+    for (g, gcfg) in group_cfgs.iter().enumerate() {
+        let mut engine = ServingEngine::with_records(
+            gcfg,
+            512 << 20,
+            CpuBackend::Native,
+            flags.vt,
+            flags.cache,
+            records.clone(),
+        );
+        for (c, graph) in graphs.iter().enumerate() {
+            let idxs: Vec<usize> = (0..classes.len())
+                .filter(|&i| report.routes[i] == g && report.classes[i] == c)
+                .collect();
+            if idxs.is_empty() {
+                continue;
+            }
+            let batch: Vec<_> = idxs.iter().map(|&i| inputs[i].clone()).collect();
+            let out = engine.run_batch(graph, &batch)?;
+            for (k, &i) in idxs.iter().enumerate() {
+                anyhow::ensure!(
+                    out.outputs[k] == report.outputs[i],
+                    "fleet output {i} (class {c}, group {g}) diverged from the single-device engine"
+                );
+            }
+        }
+    }
+    println!("fleet outputs match per-config single-device engines bit-exactly");
+
+    // Self-verification, part 2: the same trace through the
+    // real-threads fleet — outputs, routes, and per-group plan-cache
+    // counters must all match the simulated oracle.
+    let mut topts = FleetThreadedOptions::new(policy);
+    topts.queue_capacity = flags.queue;
+    topts.max_batch = flags.max_batch;
+    topts.cache_capacity = flags.cache;
+    topts.virtual_threads = flags.vt;
+    topts.dram_size = 512 << 20;
+    let trace: Vec<(usize, vta::util::Tensor<i8>)> =
+        classes.iter().zip(&inputs).map(|(&c, t)| (c, t.clone())).collect();
+    let threaded = serve_fleet_trace(&spec, &topts, &records, &graphs, &trace)?;
+    anyhow::ensure!(
+        threaded.outputs.len() == report.outputs.len(),
+        "threaded fleet answered {} of {} requests",
+        threaded.outputs.len(),
+        report.outputs.len()
+    );
+    for (i, out) in threaded.outputs.iter().enumerate() {
+        anyhow::ensure!(
+            out == &report.outputs[i],
+            "threaded fleet output {i} diverged from the simulated oracle"
+        );
+    }
+    anyhow::ensure!(
+        threaded.routes == report.routes,
+        "threaded fleet routed the trace differently from the simulated oracle"
+    );
+    for (g, (t, s)) in threaded.group_cache.iter().zip(&report.group_cache).enumerate() {
+        anyhow::ensure!(
+            t.misses == s.misses && t.hits == s.hits,
+            "group {g} plan directory ({} misses / {} hits) fell out of step with the \
+             oracle ({} misses / {} hits)",
+            t.misses,
+            t.hits,
+            s.misses,
+            s.hits
+        );
+    }
+    println!(
+        "threaded fleet ({} worker(s), wall {:.2?}, {:.1} inf/s) matches the simulated \
+         oracle bit-exactly (outputs, routes, per-group caches)",
+        spec.total_devices(),
+        threaded.wall,
+        threaded.throughput_rps()
+    );
+
+    // The routing ablation: the same trace under cost-model and
+    // round-robin routing, scored by the modeled makespan both `dse
+    // --fleet` and this gate optimize.
+    let cm_routes = Router::new(RoutePolicy::CostModel, &group_cfgs, &graphs).route_trace(&classes);
+    let rr_routes =
+        Router::new(RoutePolicy::RoundRobin, &group_cfgs, &graphs).route_trace(&classes);
+    let cm = modeled_fleet_makespan(&group_cfgs, &group_devices, &graphs, &classes, &cm_routes);
+    let rr = modeled_fleet_makespan(&group_cfgs, &group_devices, &graphs, &classes, &rr_routes);
+    println!(
+        "modeled makespan: cost-model routing {:.3} ms vs round-robin {:.3} ms ({:.2}x)",
+        cm * 1e3,
+        rr * 1e3,
+        rr / cm.max(1e-12)
+    );
+    if flags.require_routing_win {
+        anyhow::ensure!(
+            sched.group_count() >= 2,
+            "--require-routing-win needs a fleet with >= 2 config groups (got {})",
+            sched.group_count()
+        );
+        // Simulated round-robin run for visibility alongside the gate.
+        let mut rr_opts = fopts;
+        rr_opts.policy = RoutePolicy::RoundRobin;
+        let mut rr_sched =
+            FleetScheduler::with_records(&spec, CpuBackend::Native, rr_opts, records.clone());
+        for (i, &c) in classes.iter().enumerate() {
+            rr_sched.submit(0.0, c, inputs[i].clone());
+        }
+        let rr_report = rr_sched.run(&graphs)?;
+        println!(
+            "simulated makespan: {:?} routing {:.2} ms vs round-robin {:.2} ms",
+            policy,
+            report.makespan_seconds * 1e3,
+            rr_report.makespan_seconds * 1e3
+        );
+        anyhow::ensure!(
+            cm < rr,
+            "cost-model routing ({:.3} ms modeled) does not beat round-robin ({:.3} ms)",
+            cm * 1e3,
+            rr * 1e3
+        );
+        println!("routing gate passed: cost-model beats round-robin by {:.2}x", rr / cm);
+    }
+    Ok(())
+}
+
 /// `vta dse`: budgeted random + greedy-refine search over hardware
 /// variants and per-operator schedules; prints the top-k frontier with
 /// roofline placement and optionally persists the tuning records.
@@ -952,6 +1328,84 @@ fn cmd_dse(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         println!(
             "persisted {} tuning record(s) to {path} — replay with `vta serve --records {path}`",
             store.len()
+        );
+    }
+
+    // ---- fleet allocation: compose the frontier, don't just rank it ----
+    if let Some(path) = &flags.fleet {
+        let mut candidates: Vec<VtaConfig> =
+            report.frontier.iter().map(|c| c.cfg.clone()).collect();
+        candidates.push(cfg.clone());
+        let (class_graphs, class_names, _) = build_fleet_classes(cfg, flags)?;
+        let graphs: Vec<&vta::graph::Graph> = class_graphs.iter().collect();
+        let per_class =
+            split_requests(flags.fleet_devices * flags.max_batch, graphs.len());
+        let mut fopts = FleetDseOptions::new(flags.fleet_devices, per_class.clone());
+        fopts.virtual_threads = flags.vt;
+        if let Some((bram18, dsp, lut)) = flags.fleet_budget {
+            fopts.budget = ResourceBudget { bram18, dsp, lut };
+        }
+        let names: Vec<String> = class_names
+            .iter()
+            .zip(&per_class)
+            .map(|(n, c)| format!("{c}x {n}"))
+            .collect();
+        println!(
+            "\nfleet allocation: up to {} device(s), budget {}/{}/{} BRAM18/DSP/LUT, \
+             traffic {}",
+            flags.fleet_devices,
+            fopts.budget.bram18,
+            fopts.budget.dsp,
+            fopts.budget.lut,
+            names.join(" + ")
+        );
+        let freport = run_fleet_dse(&candidates, &graphs, &fopts)?;
+        println!(
+            "enumerated {} composition(s) over {} candidate config(s) ({} infeasible)",
+            freport.evaluated, freport.candidates, freport.infeasible
+        );
+        let best = &freport.best;
+        println!("best fleet (modeled makespan {:.3} ms cost-routed, {:.3} ms round-robin):",
+            best.cost_makespan * 1e3,
+            best.roundrobin_makespan * 1e3
+        );
+        for m in &best.spec.members {
+            println!("  {} x {}", m.devices, describe_config(&m.cfg));
+        }
+        println!(
+            "  resources {}/{}/{} BRAM18/DSP/LUT{}",
+            best.usage.bram18,
+            best.usage.dsp,
+            best.usage.lut,
+            if best.homogeneous { " (homogeneous)" } else { " (mixed-config)" }
+        );
+        let homog = &freport.best_homogeneous;
+        println!(
+            "best homogeneous pool: {} x {} — modeled makespan {:.3} ms ({:.2}x vs fleet)",
+            homog.spec.members[0].devices,
+            describe_config(&homog.spec.members[0].cfg),
+            homog.cost_makespan * 1e3,
+            homog.cost_makespan / best.cost_makespan.max(1e-12)
+        );
+        best.spec.save(path)?;
+        println!(
+            "wrote the winning FleetSpec to {path} — serve it with \
+             `vta serve --fleet {path} --model mixed`"
+        );
+        if flags.require_fleet_improvement && !freport.improved() {
+            anyhow::bail!(
+                "best fleet ({:.6} ms) does not match the best homogeneous pool ({:.6} ms)",
+                best.cost_makespan * 1e3,
+                homog.cost_makespan * 1e3
+            );
+        }
+        if flags.require_fleet_improvement {
+            println!("fleet gate passed: best fleet matches/beats the best homogeneous pool");
+        }
+    } else {
+        anyhow::ensure!(
+            !flags.require_fleet_improvement,
+            "--require-fleet-improvement needs --fleet OUT.json"
         );
     }
 

@@ -136,8 +136,18 @@ impl QueueDepthGauge {
 }
 
 /// Per-device counters accumulated by the scheduler.
+///
+/// Devices in a heterogeneous fleet run different hardware variants,
+/// so each counter carries its device's config fingerprint
+/// ([`crate::compiler::config_fingerprint`]) — per-device utilization
+/// can then be grouped by variant instead of assuming every replica is
+/// the same machine. Homogeneous pools leave it at the default 0 or
+/// set every device to the one shared fingerprint; fleet runtimes set
+/// it per replica.
 #[derive(Clone, Debug, Default)]
 pub struct DeviceCounter {
+    /// Fingerprint of the [`VtaConfig`] this device runs (0 = unset).
+    pub config_fingerprint: u64,
     /// Simulated seconds this device spent serving batches.
     pub busy_seconds: f64,
     /// Batches dispatched to this device.
@@ -317,7 +327,9 @@ impl ThreadCounter {
 }
 
 /// The scheduler's exported counters: one queue gauge plus one
-/// [`DeviceCounter`] per pool replica.
+/// [`DeviceCounter`] per pool replica. Replicas need not be identical
+/// — the fleet runtimes stamp each device's `config_fingerprint` so
+/// mixed pools stay attributable per variant.
 #[derive(Clone, Debug, Default)]
 pub struct PoolMetrics {
     /// Queue depth sampled at every dispatch.

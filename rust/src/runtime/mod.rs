@@ -13,8 +13,9 @@
 //! * [`CommandContext::synchronize`] — `VTASynchronize`: finalize the
 //!   stream (FINISH sentinel), hand off to the device, wait for
 //!   completion.
-//! * [`DevicePool`] — N independent runtime replicas of one variant:
-//!   the substrate of the multi-device serving runtime
+//! * [`DevicePool`] / [`HeterogeneousPool`] — N independent runtime
+//!   replicas (of one variant, or grouped per-replica variants): the
+//!   substrate of the multi-device serving runtime
 //!   ([`crate::exec::serve`]).
 
 mod alloc;
@@ -26,7 +27,7 @@ mod uop_kernel;
 pub use alloc::{AllocError, FreeListAllocator};
 pub use command::{CommandContext, CoreModule, RuntimeError, SealedStream, VtaRuntime};
 pub use device::{Device, SimDevice};
-pub use pool::DevicePool;
+pub use pool::{ConfigGroup, DevicePool, HeterogeneousPool};
 pub use uop_kernel::{UopCache, UopError, UopKernel, UopKernelBuilder};
 
 /// A DRAM buffer handle returned by the allocator: physically

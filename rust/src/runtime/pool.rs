@@ -1,45 +1,83 @@
-//! The device pool: N independent accelerator replicas of one
-//! `VtaConfig`, each a full [`VtaRuntime`] (own simulator, own DRAM,
-//! own command context) — the hardware substrate of the multi-device
-//! serving runtime in [`crate::exec::serve`].
+//! The device pool: N independent accelerator replicas, each a full
+//! [`VtaRuntime`] (own simulator, own DRAM, own command context) — the
+//! hardware substrate of the multi-device serving runtime in
+//! [`crate::exec::serve`].
 //!
-//! Replicas are *identical by construction*: same config, same DRAM
-//! size, same fresh allocator state. The serving layer exploits that
-//! to compile a plan **once per pool** and byte-replicate it
-//! ([`crate::compiler::CompiledNode::replicate_to`]) onto every other
-//! replica — provided it drives every replica's allocator through the
-//! same allocation/eviction sequence, which the pool-lockstep plan
-//! caches guarantee. The pool itself is policy-free: it owns the
-//! replicas and hands out disjoint mutable borrows; queueing,
-//! batching, and dispatch live in the scheduler.
+//! Two shapes exist. The general one is [`HeterogeneousPool`]: every
+//! replica carries its **own** `VtaConfig`, and construction groups
+//! replicas that share a config (by structural equality) into
+//! [`ConfigGroup`]s. Replicas *within* a group are identical by
+//! construction — same config, same DRAM size, same fresh allocator
+//! state — so the serving layer can compile a plan **once per group**
+//! and byte-replicate it
+//! ([`crate::compiler::CompiledNode::replicate_to`]) onto the other
+//! group members, provided it drives every member's allocator through
+//! the same allocation/eviction sequence (the group-lockstep plan
+//! caches guarantee that). Replication across *groups* is never valid:
+//! compiled streams bake in config-dependent tiling and buffer
+//! layouts.
+//!
+//! [`DevicePool`] is the homogeneous special case — N replicas of one
+//! config, i.e. a heterogeneous pool with exactly one group — kept as
+//! a thin wrapper because the single-config scheduler and threaded
+//! runtime want the simpler API.
+//!
+//! The pool itself is policy-free: it owns the replicas and hands out
+//! disjoint mutable borrows; queueing, batching, routing, and dispatch
+//! live in the scheduler / router layers.
 
 use super::VtaRuntime;
 use crate::arch::VtaConfig;
 
-/// N independent `SimDevice` + `VtaRuntime` replicas of one hardware
-/// variant.
-pub struct DevicePool {
-    cfg: VtaConfig,
-    replicas: Vec<VtaRuntime>,
+/// The replicas of a [`HeterogeneousPool`] that share one `VtaConfig`
+/// (structural equality). Plan byte-replication is valid exactly
+/// within one group.
+#[derive(Clone, Debug)]
+pub struct ConfigGroup {
+    /// The hardware variant every member implements.
+    pub cfg: VtaConfig,
+    /// Global replica indices of the members, in construction order.
+    pub members: Vec<usize>,
 }
 
-impl DevicePool {
-    /// Build `devices` fresh replicas of `cfg`, each with `dram_size`
-    /// bytes of device DRAM.
-    pub fn new(cfg: &VtaConfig, dram_size: usize, devices: usize) -> Self {
-        assert!(devices >= 1, "a device pool needs at least one replica");
-        DevicePool {
-            cfg: cfg.clone(),
-            replicas: (0..devices).map(|_| VtaRuntime::new(cfg, dram_size)).collect(),
+/// N independent `SimDevice` + `VtaRuntime` replicas with per-replica
+/// hardware configs, grouped by config equality.
+pub struct HeterogeneousPool {
+    groups: Vec<ConfigGroup>,
+    replicas: Vec<VtaRuntime>,
+    /// `group_of[replica] -> group index`.
+    group_of: Vec<usize>,
+}
+
+impl HeterogeneousPool {
+    /// Build one fresh replica per entry of `cfgs`, each with
+    /// `dram_size` bytes of device DRAM. Consecutive *and*
+    /// non-consecutive repeats of a config land in the same group;
+    /// groups are ordered by first appearance.
+    pub fn new(cfgs: &[VtaConfig], dram_size: usize) -> Self {
+        assert!(!cfgs.is_empty(), "a device pool needs at least one replica");
+        let mut groups: Vec<ConfigGroup> = Vec::new();
+        let mut group_of = Vec::with_capacity(cfgs.len());
+        for (i, cfg) in cfgs.iter().enumerate() {
+            match groups.iter().position(|g| &g.cfg == cfg) {
+                Some(gi) => {
+                    groups[gi].members.push(i);
+                    group_of.push(gi);
+                }
+                None => {
+                    group_of.push(groups.len());
+                    groups.push(ConfigGroup { cfg: cfg.clone(), members: vec![i] });
+                }
+            }
+        }
+        HeterogeneousPool {
+            groups,
+            replicas: cfgs.iter().map(|cfg| VtaRuntime::new(cfg, dram_size)).collect(),
+            group_of,
         }
     }
 
-    /// The hardware variant every replica implements.
-    pub fn config(&self) -> &VtaConfig {
-        &self.cfg
-    }
-
-    /// Number of replicas.
+    /// Total number of replicas across all groups.
     pub fn len(&self) -> usize {
         self.replicas.len()
     }
@@ -50,12 +88,33 @@ impl DevicePool {
         self.replicas.is_empty()
     }
 
-    /// Mutable access to replica `i`.
+    /// The config groups, ordered by first appearance.
+    pub fn groups(&self) -> &[ConfigGroup] {
+        &self.groups
+    }
+
+    /// Number of distinct config groups.
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The group index replica `i` belongs to.
+    pub fn group_of(&self, i: usize) -> usize {
+        self.group_of[i]
+    }
+
+    /// The hardware variant of replica `i`.
+    pub fn config_of(&self, i: usize) -> &VtaConfig {
+        &self.groups[self.group_of[i]].cfg
+    }
+
+    /// Mutable access to replica `i` (global index).
     pub fn device_mut(&mut self, i: usize) -> &mut VtaRuntime {
         &mut self.replicas[i]
     }
 
-    /// Mutable access to every replica (lockstep cache maintenance).
+    /// Mutable access to every replica (lockstep cache maintenance
+    /// walks a group's members through this slice).
     pub fn devices_mut(&mut self) -> &mut [VtaRuntime] {
         &mut self.replicas
     }
@@ -70,7 +129,9 @@ impl DevicePool {
 
     /// Disjoint mutable borrows of replicas `a` and `b` (`a != b`) —
     /// the plan-replication path reads source DRAM while writing the
-    /// destination.
+    /// destination. Callers replicate only within a config group; the
+    /// pool does not enforce that here because the borrow itself is
+    /// config-agnostic.
     pub fn pair_mut(&mut self, a: usize, b: usize) -> (&mut VtaRuntime, &mut VtaRuntime) {
         assert_ne!(a, b, "pair_mut needs two distinct replicas");
         if a < b {
@@ -80,5 +141,61 @@ impl DevicePool {
             let (lo, hi) = self.replicas.split_at_mut(a);
             (&mut hi[0], &mut lo[b])
         }
+    }
+}
+
+/// N independent `SimDevice` + `VtaRuntime` replicas of **one**
+/// hardware variant — a [`HeterogeneousPool`] with exactly one config
+/// group.
+pub struct DevicePool {
+    inner: HeterogeneousPool,
+}
+
+impl DevicePool {
+    /// Build `devices` fresh replicas of `cfg`, each with `dram_size`
+    /// bytes of device DRAM.
+    pub fn new(cfg: &VtaConfig, dram_size: usize, devices: usize) -> Self {
+        assert!(devices >= 1, "a device pool needs at least one replica");
+        let cfgs = vec![cfg.clone(); devices];
+        DevicePool { inner: HeterogeneousPool::new(&cfgs, dram_size) }
+    }
+
+    /// The hardware variant every replica implements.
+    pub fn config(&self) -> &VtaConfig {
+        &self.inner.groups()[0].cfg
+    }
+
+    /// Number of replicas.
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Always false (construction requires at least one replica); here
+    /// for the conventional `len`/`is_empty` pair.
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Mutable access to replica `i`.
+    pub fn device_mut(&mut self, i: usize) -> &mut VtaRuntime {
+        self.inner.device_mut(i)
+    }
+
+    /// Mutable access to every replica (lockstep cache maintenance).
+    pub fn devices_mut(&mut self) -> &mut [VtaRuntime] {
+        self.inner.devices_mut()
+    }
+
+    /// Disjoint mutable borrows of **all** replicas at once — see
+    /// [`HeterogeneousPool::iter_mut`].
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, VtaRuntime> {
+        self.inner.iter_mut()
+    }
+
+    /// Disjoint mutable borrows of replicas `a` and `b` (`a != b`) —
+    /// the plan-replication path reads source DRAM while writing the
+    /// destination.
+    pub fn pair_mut(&mut self, a: usize, b: usize) -> (&mut VtaRuntime, &mut VtaRuntime) {
+        self.inner.pair_mut(a, b)
     }
 }

@@ -1,0 +1,313 @@
+//! Heterogeneous fleet determinism: mixed-config device pools driven
+//! by the [`FleetScheduler`] must produce outputs **bit-exact** with
+//! single-device [`ServingEngine`]s of each routed config — across
+//! route policies, replica layouts, and virtual-thread modes — and the
+//! real-threads fleet runtime must match the simulated oracle
+//! (outputs, routes, per-group plan-cache counters). Execution is
+//! exact in this stack; only the timing is modeled — neither fleet
+//! composition nor routing may leak into results.
+//!
+//! The two-group fleet under test is the one the CLI example ships:
+//! group 0 is a Pynq variant with half the tensor-ALU lanes (every
+//! eltwise op strictly slower, conv work identical), group 1 is the
+//! stock Pynq. Mixed traffic pairs a conv-bound resnet-mini class with
+//! an eltwise-heavy style class, so the cost model has a real decision
+//! to make.
+
+use vta::arch::VtaConfig;
+use vta::dse::TuningRecords;
+use vta::exec::serve::fleet::{
+    graph_model_seconds, modeled_fleet_makespan, serve_fleet_trace, FleetMember, FleetOptions,
+    FleetScheduler, FleetSpec, FleetThreadedOptions, RoutePolicy, Router,
+};
+use vta::exec::{CpuBackend, Scheduler, SchedulerOptions, ServingEngine};
+use vta::graph::resnet::resnet_mini;
+use vta::graph::style::style_net;
+use vta::graph::{partition, Graph, PartitionPolicy};
+use vta::util::{Tensor, XorShiftRng};
+
+fn rand_t(seed: u64, shape: &[usize]) -> Tensor<i8> {
+    let mut rng = XorShiftRng::new(seed);
+    Tensor::from_vec(shape, rng.vec_i8(shape.iter().product(), -8, 8)).unwrap()
+}
+
+/// The ALU-starved variant: conv/GEMM identical to stock Pynq, eltwise
+/// strictly slower (8 lanes instead of 16).
+fn lanes8() -> VtaConfig {
+    let mut c = VtaConfig::pynq();
+    c.alu_lanes = 8;
+    c
+}
+
+fn two_group_spec(d0: usize, d1: usize) -> FleetSpec {
+    FleetSpec::new(vec![
+        FleetMember { cfg: lanes8(), devices: d0 },
+        FleetMember { cfg: VtaConfig::pynq(), devices: d1 },
+    ])
+}
+
+/// Class 0: conv-bound (resnet-mini under the paper rule — its VTA
+/// work is pure conv, so it models identically on both groups).
+/// Class 1: eltwise-heavy (style net with everything offloaded — adds,
+/// shifts, and clamps run on the tensor ALU, strictly slower on
+/// group 0).
+fn mixed_classes(vt: usize) -> Vec<Graph> {
+    let cfg = VtaConfig::pynq();
+    let mut conv_g = resnet_mini(1, 16, 42).unwrap();
+    let mut conv_p = PartitionPolicy::paper(&cfg);
+    conv_p.virtual_threads = vt;
+    let (n, _) = partition(&mut conv_g, &conv_p);
+    assert!(n > 0, "conv class offloaded nothing");
+    let mut style_g = style_net(1, 16, 16, 42).unwrap();
+    let mut style_p = PartitionPolicy::offload_all(&cfg);
+    style_p.virtual_threads = vt;
+    let (n, _) = partition(&mut style_g, &style_p);
+    assert!(n > 0, "style class offloaded nothing");
+    vec![conv_g, style_g]
+}
+
+/// Alternating mixed trace opening with the style class (class 1), so
+/// a parity-pinned round-robin router genuinely disagrees with the
+/// cost model.
+fn alternating_classes(n: usize) -> Vec<usize> {
+    (0..n).map(|i| 1 - i % 2).collect()
+}
+
+/// Serve an alternating mixed trace through the fleet, then replay
+/// every request through a fresh single-device engine of its routed
+/// group's exact config: outputs must be bit-identical and each
+/// group's lockstep plan cache must have compiled exactly one plan set
+/// per class it served.
+fn check_fleet_vs_single_device(spec: &FleetSpec, policy: RoutePolicy, vt: usize, n_req: usize) {
+    let label = format!("policy={policy:?} vt={vt} layout={:?}", spec.members.iter().map(|m| m.devices).collect::<Vec<_>>());
+    let graphs_owned = mixed_classes(vt);
+    let graphs: Vec<&Graph> = graphs_owned.iter().collect();
+    let classes = alternating_classes(n_req);
+    let inputs: Vec<_> = (0..n_req).map(|i| rand_t(3000 + i as u64, &[1, 3, 16, 16])).collect();
+
+    let opts = FleetOptions {
+        policy,
+        max_batch: 2,
+        batch_deadline: 0.0,
+        cache_capacity: 64,
+        virtual_threads: vt,
+        dram_size: 256 << 20,
+    };
+    let mut sched = FleetScheduler::new(spec, CpuBackend::Native, opts);
+    for (i, &c) in classes.iter().enumerate() {
+        sched.submit(0.0, c, inputs[i].clone());
+    }
+    let r = sched.run(&graphs).unwrap();
+    assert_eq!(r.outputs.len(), n_req, "{label}: lost requests");
+    assert_eq!(r.classes, classes, "{label}: classes reordered");
+
+    for (g, member) in spec.members.iter().enumerate() {
+        let mut eng = ServingEngine::new(&member.cfg, 256 << 20, CpuBackend::Native, vt, 64);
+        let mut expect_misses = 0u64;
+        for (c, graph) in graphs.iter().enumerate() {
+            let idxs: Vec<usize> =
+                (0..n_req).filter(|&i| r.routes[i] == g && classes[i] == c).collect();
+            if idxs.is_empty() {
+                continue;
+            }
+            let batch: Vec<_> = idxs.iter().map(|&i| inputs[i].clone()).collect();
+            let out = eng.run_batch(graph, &batch).unwrap();
+            expect_misses += out.cache.misses;
+            for (k, &i) in idxs.iter().enumerate() {
+                assert_eq!(
+                    out.outputs[k], r.outputs[i],
+                    "{label}: request {i} (class {c}, group {g}) diverged from the \
+                     single-device engine"
+                );
+            }
+        }
+        assert_eq!(
+            r.group_cache[g].misses, expect_misses,
+            "{label}: group {g} must compile each routed class's plans exactly once"
+        );
+    }
+}
+
+#[test]
+fn fleet_outputs_are_bit_exact_across_layouts_policies_and_vt() {
+    for vt in [1usize, 2] {
+        for (d0, d1) in [(1usize, 1usize), (2, 2)] {
+            for policy in [RoutePolicy::CostModel, RoutePolicy::RoundRobin] {
+                check_fleet_vs_single_device(&two_group_spec(d0, d1), policy, vt, 8);
+            }
+        }
+    }
+}
+
+#[test]
+fn static_routing_pins_every_request_to_one_group() {
+    check_fleet_vs_single_device(&two_group_spec(2, 1), RoutePolicy::Static(0), 2, 6);
+    check_fleet_vs_single_device(&two_group_spec(2, 1), RoutePolicy::Static(1), 1, 6);
+}
+
+/// The real-threads fleet must match the simulated oracle bit for bit:
+/// same outputs in submission order, same routes (routing is a pure
+/// function of the class sequence), same per-group cache counters
+/// (group-wise lockstep on both sides).
+fn check_threaded_matches_oracle(spec: &FleetSpec, policy: RoutePolicy, vt: usize, n_req: usize) {
+    let label = format!("policy={policy:?} vt={vt}");
+    let graphs_owned = mixed_classes(vt);
+    let graphs: Vec<&Graph> = graphs_owned.iter().collect();
+    let classes = alternating_classes(n_req);
+    let inputs: Vec<_> = (0..n_req).map(|i| rand_t(5000 + i as u64, &[1, 3, 16, 16])).collect();
+
+    let opts = FleetOptions {
+        policy,
+        max_batch: 2,
+        batch_deadline: 0.0,
+        cache_capacity: 64,
+        virtual_threads: vt,
+        dram_size: 256 << 20,
+    };
+    let mut sched = FleetScheduler::new(spec, CpuBackend::Native, opts);
+    for (i, &c) in classes.iter().enumerate() {
+        sched.submit(0.0, c, inputs[i].clone());
+    }
+    let oracle = sched.run(&graphs).unwrap();
+
+    let mut topts = FleetThreadedOptions::new(policy);
+    topts.max_batch = 2;
+    topts.cache_capacity = 64;
+    topts.virtual_threads = vt;
+    topts.dram_size = 256 << 20;
+    let trace: Vec<(usize, Tensor<i8>)> =
+        classes.iter().zip(&inputs).map(|(&c, t)| (c, t.clone())).collect();
+    let threaded = serve_fleet_trace(spec, &topts, &TuningRecords::new(), &graphs, &trace).unwrap();
+
+    assert_eq!(threaded.outputs.len(), oracle.outputs.len(), "{label}: lost requests");
+    for (i, out) in threaded.outputs.iter().enumerate() {
+        assert_eq!(out, &oracle.outputs[i], "{label}: threaded output {i} diverged");
+    }
+    assert_eq!(threaded.routes, oracle.routes, "{label}: threaded fleet routed differently");
+    for (g, (t, s)) in threaded.group_cache.iter().zip(&oracle.group_cache).enumerate() {
+        assert_eq!(
+            (t.misses, t.hits),
+            (s.misses, s.hits),
+            "{label}: group {g} plan directory fell out of step with the oracle"
+        );
+    }
+}
+
+#[test]
+fn threaded_fleet_matches_the_simulated_oracle() {
+    for policy in [RoutePolicy::CostModel, RoutePolicy::RoundRobin] {
+        check_threaded_matches_oracle(&two_group_spec(1, 1), policy, 1, 6);
+        check_threaded_matches_oracle(&two_group_spec(2, 2), policy, 2, 8);
+    }
+}
+
+/// A single-member fleet is the homogeneous pool: same outputs, same
+/// compile-once cache counters as the classic [`Scheduler`] on the
+/// identical trace.
+#[test]
+fn homogeneous_fleet_reduces_to_the_classic_pool() {
+    let cfg = VtaConfig::pynq();
+    let vt = 2;
+    let graphs_owned = mixed_classes(vt);
+    let g = &graphs_owned[0];
+    let inputs: Vec<_> = (0..6).map(|i| rand_t(7000 + i as u64, &[1, 3, 16, 16])).collect();
+
+    let spec = FleetSpec::homogeneous(&cfg, 2);
+    let fopts = FleetOptions {
+        policy: RoutePolicy::CostModel,
+        max_batch: 2,
+        batch_deadline: 0.0,
+        cache_capacity: 64,
+        virtual_threads: vt,
+        dram_size: 256 << 20,
+    };
+    let mut fleet = FleetScheduler::new(&spec, CpuBackend::Native, fopts);
+    for input in &inputs {
+        fleet.submit(0.0, 0, input.clone());
+    }
+    let fr = fleet.run(&[g]).unwrap();
+    assert!(fr.routes.iter().all(|&r| r == 0), "one group — every route must be 0");
+
+    let popts = SchedulerOptions {
+        devices: 2,
+        max_batch: 2,
+        batch_deadline: 0.0,
+        cache_capacity: 64,
+        virtual_threads: vt,
+        dram_size: 256 << 20,
+    };
+    let mut pool = Scheduler::new(&cfg, CpuBackend::Native, popts);
+    for input in &inputs {
+        pool.submit(0.0, input.clone());
+    }
+    let pr = pool.run(g).unwrap();
+
+    assert_eq!(fr.outputs.len(), pr.outputs.len());
+    for (i, out) in fr.outputs.iter().enumerate() {
+        assert_eq!(out, &pr.outputs[i], "homogeneous fleet output {i} diverged from the pool");
+    }
+    assert_eq!(
+        (fr.group_cache[0].misses, fr.group_cache[0].hits),
+        (pr.cache.misses, pr.cache.hits),
+        "homogeneous fleet cache counters diverged from the pool"
+    );
+}
+
+/// The routing win the CLI gate (`serve --fleet --require-routing-win`)
+/// relies on: on the example two-group fleet, the cost model keeps
+/// conv traffic on the ALU-starved group (a modeled tie, broken by
+/// index) and sends eltwise-heavy traffic to the stock group, strictly
+/// beating round-robin's parity routing on the modeled makespan.
+#[test]
+fn cost_model_routing_beats_round_robin_on_the_mixed_trace() {
+    let vt = 2;
+    let graphs_owned = mixed_classes(vt);
+    let graphs: Vec<&Graph> = graphs_owned.iter().collect();
+    let cfgs = [lanes8(), VtaConfig::pynq()];
+
+    // Conv work models identically on both variants (the GEMM core is
+    // unchanged); the style class is strictly slower on half the lanes.
+    assert_eq!(
+        graph_model_seconds(&cfgs[0], graphs[0]),
+        graph_model_seconds(&cfgs[1], graphs[0]),
+        "conv class must tie across the groups"
+    );
+    assert!(
+        graph_model_seconds(&cfgs[0], graphs[1]) > graph_model_seconds(&cfgs[1], graphs[1]),
+        "style class must be strictly slower on the ALU-starved group"
+    );
+
+    let router = Router::new(RoutePolicy::CostModel, &cfgs, &graphs);
+    assert_eq!(router.best_group_for(0), 0, "conv tie must break to group 0");
+    assert_eq!(router.best_group_for(1), 1, "style must prefer the stock group");
+
+    let classes = alternating_classes(8);
+    let cm_routes = Router::new(RoutePolicy::CostModel, &cfgs, &graphs).route_trace(&classes);
+    let rr_routes = Router::new(RoutePolicy::RoundRobin, &cfgs, &graphs).route_trace(&classes);
+    let devices = [1usize, 1];
+    let cm = modeled_fleet_makespan(&cfgs, &devices, &graphs, &classes, &cm_routes);
+    let rr = modeled_fleet_makespan(&cfgs, &devices, &graphs, &classes, &rr_routes);
+    assert!(
+        cm < rr,
+        "cost-model routing ({cm:.6e} s) must strictly beat round-robin ({rr:.6e} s)"
+    );
+}
+
+/// The committed example fleet (`examples/fleet_mixed.json`) is what
+/// CI serves; it must keep loading, match the two-group shape the
+/// docs describe, and re-serialize byte-identically.
+#[test]
+fn committed_example_fleet_spec_loads_and_matches() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/fleet_mixed.json");
+    let spec = FleetSpec::load(path).unwrap();
+    assert_eq!(spec.members.len(), 2);
+    assert_eq!(spec.members[0].cfg, lanes8());
+    assert_eq!(spec.members[0].devices, 1);
+    assert_eq!(spec.members[1].cfg, VtaConfig::pynq());
+    assert_eq!(spec.members[1].devices, 1);
+    assert_eq!(
+        spec.to_json(),
+        std::fs::read_to_string(path).unwrap(),
+        "examples/fleet_mixed.json drifted from the canonical serialization"
+    );
+}
