@@ -27,7 +27,7 @@ fn backend() -> (CpuBackend, &'static str) {
 fn main() -> anyhow::Result<()> {
     let cfg = VtaConfig::pynq();
     let input = synth_input(7, 1, 3, 224, 224);
-    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
+    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?)?;
     println!(
         "ResNet-18, {} nodes after fusing {fused} ReLUs; {:.1} M int8 parameters",
         g.nodes.len(),

@@ -17,7 +17,7 @@ use vta::graph::{fuse, partition, PartitionPolicy};
 
 fn main() -> anyhow::Result<()> {
     let cfg = VtaConfig::pynq();
-    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
+    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?)?;
     let (vta_n, cpu_n) = partition(&mut g, &PartitionPolicy::paper(&cfg));
     println!(
         "ResNet-18: {} nodes ({fused} ReLUs fused), {vta_n} on VTA, {cpu_n} on CPU",

@@ -23,14 +23,25 @@
 //!                  fleet under cost-model vs round-robin routing and
 //!                  through same-budget homogeneous pools; outputs
 //!                  bit-exact across every composition and policy
+//! * `fusion`     — A9: deep operator fusion — mini-resnet and style
+//!                  with their epilogue chains fused into
+//!                  `FusedConv2d` nodes vs the same graphs unfused,
+//!                  total simulated cycles compared at identical
+//!                  placement, outputs bit-exact against the CPU
+//!                  reference; `--require-fusion-improvement` turns
+//!                  the cycle win into a hard gate
 //!
 //! Run: `cargo bench --bench ablations [-- <name>]
-//!       [--json PATH] [--check BASELINE] [--pin BASELINE]`
+//!       [--json PATH] [--check BASELINE] [--pin BASELINE]
+//!       [--require-fusion-improvement]`
 //!
-//! The snapshot flags cover the `fleet` section and speak the
-//! `BENCH_ablations.json` schema — `--check` enforces every pinned
-//! (non-`null`) deterministic field, `--pin` fills the `null` ones
-//! from the current run (see `common::baseline` for the CI flow).
+//! The snapshot flags cover the `fleet` and `fusion` sections (both
+//! are force-run when a snapshot flag is present, whatever the filter)
+//! and speak the `BENCH_ablations.json` schema (version 2:
+//! `deterministic`/`measured` each split into `fleet` and `fusion`
+//! subsections) — `--check` enforces every pinned (non-`null`)
+//! deterministic field, `--pin` fills the `null` ones from the current
+//! run (see `common::baseline` for the CI flow).
 
 mod common;
 
@@ -71,13 +82,22 @@ fn main() {
     let json_path = baseline::flag_value(&argv, "--json");
     let check_path = baseline::flag_value(&argv, "--check");
     let pin_path = baseline::flag_value(&argv, "--pin");
-    let mut snapshot = None;
-    if common::selected("fleet") {
-        snapshot = Some(fleet());
+    let want_snapshot = json_path.is_some() || check_path.is_some() || pin_path.is_some();
+    // The snapshot spans both baseline-carrying sections, so a snapshot
+    // flag force-runs them even when the filter names only one.
+    let mut fleet_parts = None;
+    if common::selected("fleet") || want_snapshot {
+        fleet_parts = Some(fleet());
     }
-    if json_path.is_some() || check_path.is_some() || pin_path.is_some() {
-        let snapshot = snapshot
-            .expect("--json/--check/--pin snapshot the fleet section, but the filter excluded it");
+    let mut fusion_parts = None;
+    if common::selected("fusion") || want_snapshot {
+        fusion_parts = Some(fusion());
+    }
+    if want_snapshot {
+        let snapshot = render_snapshot(
+            fleet_parts.as_ref().expect("fleet section force-run for snapshots"),
+            fusion_parts.as_ref().expect("fusion section force-run for snapshots"),
+        );
         if let Some(path) = &json_path {
             std::fs::write(path, &snapshot).unwrap_or_else(|e| panic!("writing {path}: {e}"));
             println!("wrote ablations snapshot to {path}");
@@ -89,6 +109,17 @@ fn main() {
             baseline::check_against_baseline("ablations", &snapshot, path);
         }
     }
+}
+
+/// Compose the `BENCH_ablations.json` document (schema 2) from the
+/// fleet and fusion sections' (deterministic, measured) fragments.
+fn render_snapshot(fleet: &(String, String), fusion: &(String, String)) -> String {
+    format!(
+        "{{\n  \"schema\": 2,\n  \"workload\": \"fleet-mixed-16x16 + fusion-16x16\",\n  \
+         \"deterministic\": {{\n    \"fleet\": {},\n    \"fusion\": {}\n  }},\n  \
+         \"measured\": {{\n    \"fleet\": {},\n    \"fusion\": {}\n  }}\n}}\n",
+        fleet.0, fusion.0, fleet.1, fusion.1
+    )
 }
 
 /// One fleet ablation run, reduced to what the table and the
@@ -118,8 +149,9 @@ struct FleetRun {
 /// results: outputs are bit-exact across every run, and cost-model
 /// routing must strictly beat round-robin on the modeled makespan —
 /// the same inequality `serve --fleet --require-routing-win` gates
-/// on. Returns the `BENCH_ablations.json` snapshot.
-fn fleet() -> String {
+/// on. Returns the fleet section's (deterministic, measured) snapshot
+/// fragments.
+fn fleet() -> (String, String) {
     use vta::exec::serve::fleet::{
         modeled_fleet_makespan, FleetMember, FleetOptions, FleetScheduler, FleetSpec, RoutePolicy,
     };
@@ -239,27 +271,23 @@ fn fleet() -> String {
         rr.modeled / cm.modeled,
         rr.sim / cm.sim.max(1e-12)
     );
-    render_fleet_snapshot(&classes, cm, rr)
+    render_fleet_fragments(&classes, cm, rr)
 }
 
-/// Render the `BENCH_ablations.json` snapshot from the heterogeneous
-/// cost-model and round-robin runs. Deterministic fields are counters,
-/// routes, fingerprints, and modeled/simulated times (pure functions
-/// of the trace — both timing models are exact arithmetic); `measured`
-/// is host wall clock.
-fn render_fleet_snapshot(classes: &[usize], cm: &FleetRun, rr: &FleetRun) -> String {
+/// Render the fleet section's snapshot fragments from the
+/// heterogeneous cost-model and round-robin runs. Deterministic fields
+/// are counters, routes, fingerprints, and modeled/simulated times
+/// (pure functions of the trace — both timing models are exact
+/// arithmetic); `measured` is host wall clock.
+fn render_fleet_fragments(classes: &[usize], cm: &FleetRun, rr: &FleetRun) -> (String, String) {
     let join = |v: &[usize]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ");
     let join64 = |v: &[u64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ");
     let ns = |s: f64| (s * 1e9).round() as u64;
-    format!(
-        "{{\n  \"schema\": 1,\n  \"workload\": \"fleet-mixed-16x16\",\n  \
-         \"deterministic\": {{\n    \"requests\": {},\n    \"groups\": {},\n    \
-         \"classes\": [{}],\n    \"cost_routes\": [{}],\n    \"roundrobin_routes\": [{}],\n    \
-         \"cost_beats_roundrobin\": {},\n    \"group_misses\": [{}],\n    \
-         \"group_hits\": [{}],\n    \"output_fp\": [{}],\n    \"modeled_cost_ns\": {},\n    \
-         \"modeled_roundrobin_ns\": {},\n    \"sim_cost_ns\": {},\n    \
-         \"sim_roundrobin_ns\": {}\n  }},\n  \"measured\": {{\n    \
-         \"sim_host_wall_ms\": {:.4}\n  }}\n}}\n",
+    let det = format!(
+        "{{\"requests\": {}, \"groups\": {}, \"classes\": [{}], \"cost_routes\": [{}], \
+         \"roundrobin_routes\": [{}], \"cost_beats_roundrobin\": {}, \"group_misses\": [{}], \
+         \"group_hits\": [{}], \"output_fp\": [{}], \"modeled_cost_ns\": {}, \
+         \"modeled_roundrobin_ns\": {}, \"sim_cost_ns\": {}, \"sim_roundrobin_ns\": {}}}",
         classes.len(),
         cm.misses.len(),
         join(classes),
@@ -273,8 +301,117 @@ fn render_fleet_snapshot(classes: &[usize], cm: &FleetRun, rr: &FleetRun) -> Str
         ns(rr.modeled),
         ns(cm.sim),
         ns(rr.sim),
-        cm.host_wall_ms
-    )
+    );
+    let measured = format!("{{\"sim_host_wall_ms\": {:.4}}}", cm.host_wall_ms);
+    (det, measured)
+}
+
+/// A9: deep operator fusion — mini-resnet (conv→add→relu block tails)
+/// and the style net (conv→add residual chains plus the conv→shr→min
+/// requant tail) with epilogue chains fused into `FusedConv2d` nodes,
+/// against the *same* graphs unfused at the *same* placement
+/// (offload-all, vt=2, so the unfused adds/relus/shr/min run on the
+/// device too — the comparison isolates the fusion rewrite, not the
+/// placement). Outputs are bit-exact against the CPU reference in all
+/// four runs; total simulated cycles are compared per workload, and
+/// `--require-fusion-improvement` turns `fused < unfused` into a hard
+/// gate (the same win the CI fusion-smoke job pins). Returns the
+/// fusion section's (deterministic, measured) snapshot fragments.
+fn fusion() -> (String, String) {
+    use vta::exec::serve::fnv1a64;
+    use vta::exec::{CpuBackend, Executor};
+    use vta::graph::resnet::{resnet_mini, synth_input};
+    use vta::graph::style::style_net;
+    use vta::graph::{fuse, partition, Graph, PartitionPolicy};
+
+    println!("# A9: deep operator fusion — fused vs unfused chains (16x16, offload-all, vt=2)");
+    let cfg = VtaConfig::pynq();
+    let require = std::env::args().any(|a| a == "--require-fusion-improvement");
+    let host_t0 = std::time::Instant::now();
+    let vt = 2usize;
+
+    let build = |which: usize| -> Graph {
+        match which {
+            0 => resnet_mini(1, 16, 42).expect("resnet-mini graph"),
+            _ => style_net(1, 16, 16, 42).expect("style graph"),
+        }
+    };
+    let names = ["resnet-mini", "style"];
+    let inputs = [synth_input(70, 1, 3, 16, 16), synth_input(71, 1, 3, 16, 16)];
+
+    println!(
+        "{:<12} {:>6} {:>14} {:>14} {:>8}",
+        "workload", "fused", "unfused cyc", "fused cyc", "win"
+    );
+    let mut nodes_fused = Vec::new();
+    let mut unfused_cycles = Vec::new();
+    let mut fused_cycles = Vec::new();
+    let mut improves = Vec::new();
+    let mut fps = Vec::new();
+    for w in 0..names.len() {
+        let mut policy = PartitionPolicy::offload_all(&cfg);
+        policy.virtual_threads = vt;
+
+        let mut g_cpu = build(w);
+        partition(&mut g_cpu, &PartitionPolicy::cpu_only());
+        let mut ex = Executor::new(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native);
+        let golden = ex.run(&g_cpu, &inputs[w]).expect("cpu reference run").output;
+
+        let mut g_un = build(w);
+        partition(&mut g_un, &policy);
+        let mut ex =
+            Executor::with_virtual_threads(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native, vt);
+        let r_un = ex.run(&g_un, &inputs[w]).expect("unfused run");
+        assert_eq!(r_un.output, golden, "{}: unfused output diverged", names[w]);
+        let un_cyc = r_un.vta_stats().total_cycles;
+
+        let (mut g_f, n) = fuse(build(w)).expect("fuse");
+        partition(&mut g_f, &policy);
+        let mut ex =
+            Executor::with_virtual_threads(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native, vt);
+        let r_f = ex.run(&g_f, &inputs[w]).expect("fused run");
+        assert_eq!(r_f.output, golden, "{}: fused output diverged", names[w]);
+        let f_cyc = r_f.vta_stats().total_cycles;
+
+        let improved = f_cyc < un_cyc;
+        println!(
+            "{:<12} {:>6} {:>14} {:>14} {:>7.2}x",
+            names[w],
+            n,
+            un_cyc,
+            f_cyc,
+            un_cyc as f64 / f_cyc.max(1) as f64
+        );
+        if require {
+            assert!(
+                improved,
+                "{}: --require-fusion-improvement, but fused {} >= unfused {} cycles",
+                names[w], f_cyc, un_cyc
+            );
+        }
+        nodes_fused.push(n as u64);
+        unfused_cycles.push(un_cyc);
+        fused_cycles.push(f_cyc);
+        improves.push(improved);
+        fps.push(fnv1a64(golden.data().iter().map(|&v| v as u8)));
+    }
+    println!("outputs bit-exact vs the CPU reference in all runs\n");
+
+    let join64 = |v: &[u64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ");
+    let joinb = |v: &[bool]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ");
+    let det = format!(
+        "{{\"workloads\": [\"resnet-mini\", \"style\"], \"nodes_fused\": [{}], \
+         \"unfused_cycles\": [{}], \"fused_cycles\": [{}], \"fusion_improves\": [{}], \
+         \"output_fp\": [{}]}}",
+        join64(&nodes_fused),
+        join64(&unfused_cycles),
+        join64(&fused_cycles),
+        joinb(&improves),
+        join64(&fps),
+    );
+    let measured =
+        format!("{{\"host_wall_ms\": {:.4}}}", host_t0.elapsed().as_secs_f64() * 1e3);
+    (det, measured)
 }
 
 /// A7: dynamic-batching knobs over a device pool — how `max_batch` and
@@ -288,7 +425,7 @@ fn pool() {
 
     println!("# A7: dynamic batching over a 4-replica pool — style 32x32, 16 requests 1 ms apart");
     let cfg = VtaConfig::pynq();
-    let (mut g, _) = fuse(style_transfer(1, 42).expect("style graph"));
+    let (mut g, _) = fuse(style_transfer(1, 42).expect("style graph")).expect("fuse");
     partition(&mut g, &PartitionPolicy::offload_all(&cfg));
     let inputs: Vec<_> =
         (0..16).map(|i| vta::graph::resnet::synth_input(80 + i as u64, 1, 3, 32, 32)).collect();
@@ -353,7 +490,7 @@ fn style() {
     );
     let mut outputs = Vec::new();
     for (name, policy) in policies {
-        let (mut g, _) = fuse(style_transfer(1, 42).expect("style graph"));
+        let (mut g, _) = fuse(style_transfer(1, 42).expect("style graph")).expect("fuse");
         let (vta_n, cpu_n) = partition(&mut g, &policy);
         let mut ex = Executor::new(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native);
         let report = ex.run(&g, &input).expect("style run");

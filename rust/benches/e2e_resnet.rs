@@ -39,7 +39,7 @@ fn breakdown(report: &ExecReport) -> BTreeMap<&'static str, (f64, f64)> {
 fn main() {
     let cfg = VtaConfig::pynq();
     let input = synth_input(7, 1, 3, 224, 224);
-    let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap());
+    let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap()).unwrap();
 
     println!("# Fig 16: end-to-end ResNet-18 (batch 1, int8, synthetic weights)\n");
 

@@ -110,7 +110,7 @@ fn device_sweep(
 /// the widened offload boundary, and the resnet device sweep. Skipped
 /// under `--fast` (CI runs the style + threaded sections only).
 fn resnet_sections(cfg: &VtaConfig, batch: usize) {
-    let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap());
+    let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap()).unwrap();
     let (vta_nodes, cpu_nodes) = partition(&mut g, &PartitionPolicy::paper(cfg));
     let inputs: Vec<_> = (0..batch).map(|i| synth_input(7 + i as u64, 1, 3, 224, 224)).collect();
     println!(
@@ -186,7 +186,7 @@ fn resnet_sections(cfg: &VtaConfig, batch: usize) {
     );
 
     // ---- op-generic offload: dense + ALU ops join the conv plans ------
-    let (mut g2, _) = fuse(resnet::resnet18(1, 42).unwrap());
+    let (mut g2, _) = fuse(resnet::resnet18(1, 42).unwrap()).unwrap();
     let (vta2, cpu2) = partition(&mut g2, &PartitionPolicy::offload_all(cfg));
     println!(
         "\n# offload-all policy (conv + dense + residual adds / ReLUs): \
@@ -252,7 +252,7 @@ fn main() {
     }
 
     // ---- style-transfer workload: the second end-to-end scenario ------
-    let (mut gs, _) = fuse(style::style_transfer(1, 42).unwrap());
+    let (mut gs, _) = fuse(style::style_transfer(1, 42).unwrap()).unwrap();
     let (vta_s, cpu_s) = partition(&mut gs, &PartitionPolicy::offload_all(&cfg));
     println!(
         "\n# style-transfer (32x32, offload-all: convs + adds + Min/Shr + Upsample2x): \

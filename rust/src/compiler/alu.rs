@@ -25,7 +25,7 @@
 //! (scale, clamp) expressed in microcode instead of CPU fixups.
 
 use super::conv2d::CompileError;
-use super::plan::EltwisePlan;
+use super::plan::{EltwisePlan, FusedStep, Requant};
 use super::virtual_thread::StripPipeline;
 use crate::graph::Op;
 use crate::isa::{AluOpcode, AluUop, BufferId, Uop};
@@ -176,6 +176,55 @@ where
         t0 += t_cur;
     }
     boundary(ctx)?;
+    Ok(())
+}
+
+/// Append a fused conv chain's ALU epilogue to the current strip's
+/// instruction stream ([`crate::graph::Op::FusedConv2d`]): the conv's
+/// own requant first, then one pass per [`FusedStep`], every pass
+/// sweeping the same resident accumulator tiles. Intermediate values
+/// never leave the register file — the out-buffer mirror of each pass
+/// is simply overwritten by the next, and the stores read the last
+/// pass's narrowed result. That is the whole point of the fusion: no
+/// store/load round trip between chain links.
+///
+/// Bit-exactness against the unfused node sequence: ALU ops update the
+/// accumulator in place, so after `Rq`/`RqRelu` the register file
+/// holds the conv's int8 result widened to int32 — exactly what
+/// [`super::layout::pack_acc_i32`] would have reloaded for a
+/// standalone eltwise node. Each step then reuses the standalone
+/// lowering verbatim (see [`emit_eltwise`]): `AddResidual` is a
+/// tensor-tensor ADD + a zero-shift `Rq` clamp
+/// (`Graph::saturating_add`), `Relu` is MAX 0, `ShrImm`/`MinImm` are
+/// single SHR/MIN ops with a broadcast immediate.
+///
+/// `main` is the strip's dst == src sweep kernel; `res` (dst = conv
+/// tiles, src = residual region) is required iff `steps` carries an
+/// `AddResidual`.
+pub(crate) fn push_fused_epilogue(
+    ctx: &mut CommandContext,
+    rq: Requant,
+    steps: &[FusedStep],
+    main: (usize, &UopKernel),
+    res: Option<(usize, &UopKernel)>,
+) -> Result<(), CompileError> {
+    let (mid, mk) = main;
+    let rq_op = if rq.relu { AluOpcode::RqRelu } else { AluOpcode::Rq };
+    ctx.push_alu(mid, mk, rq_op, true, rq.shift as i16)?;
+    for step in steps {
+        match step {
+            FusedStep::AddResidual => {
+                let (rid, rk) = res.expect("residual kernel for AddResidual step");
+                ctx.push_alu(rid, rk, AluOpcode::Add, false, 0)?;
+                ctx.push_alu(mid, mk, AluOpcode::Rq, true, 0)?;
+            }
+            FusedStep::Relu => ctx.push_alu(mid, mk, AluOpcode::Max, true, 0)?,
+            FusedStep::ShrImm { shift } => {
+                ctx.push_alu(mid, mk, AluOpcode::Shr, true, *shift as i16)?
+            }
+            FusedStep::MinImm { imm } => ctx.push_alu(mid, mk, AluOpcode::Min, true, *imm)?,
+        }
+    }
     Ok(())
 }
 

@@ -34,7 +34,7 @@ use super::alu::{emit_eltwise, EltwiseDramBase, EltwiseKind};
 use super::conv2d::{bytes_of_i8, emit_conv2d, CompileError, ConvDramBase};
 use super::matmul::{emit_matmul, MatmulDramBase};
 use super::plan::{
-    plan_conv2d_tuned, plan_eltwise, plan_matmul_tuned, plan_upsample2x, Conv2dParams,
+    plan_conv2d_fused, plan_eltwise, plan_matmul_tuned, plan_upsample2x, Conv2dParams, FusedStep,
     MatmulParams, ScheduleChoice,
 };
 use super::upsample::{emit_upsample2x, UpsampleDramBase};
@@ -347,26 +347,64 @@ pub fn compile_conv2d_tuned(
     virtual_threads: usize,
     schedule: Option<&ScheduleChoice>,
 ) -> Result<CompiledNode, CompileError> {
+    compile_conv2d_chain(rt, p, &[], wgt_packed, virtual_threads, schedule)
+}
+
+/// Compile a conv2d with a fused epilogue chain
+/// ([`crate::graph::Op::FusedConv2d`]) into one [`CompiledNode`]: one
+/// instruction stream, one ACC residency per strip, the residual
+/// operand (when the chain carries an
+/// [`FusedStep::AddResidual`]) DMA'd into the upper half of each
+/// context's accumulator span and added on the tensor ALU — no
+/// intermediate store/load between the conv and its epilogues. With an
+/// empty chain this *is* [`compile_conv2d_tuned`].
+pub fn compile_conv2d_fused(
+    rt: &mut VtaRuntime,
+    p: &Conv2dParams,
+    steps: &[FusedStep],
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<CompiledNode, CompileError> {
+    compile_conv2d_chain(rt, p, steps, wgt_packed, virtual_threads, schedule)
+}
+
+fn compile_conv2d_chain(
+    rt: &mut VtaRuntime,
+    p: &Conv2dParams,
+    steps: &[FusedStep],
+    wgt_packed: &[i8],
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_conv2d_tuned(&cfg, p, virtual_threads, schedule)?;
+    let plan = plan_conv2d_fused(&cfg, p, steps, virtual_threads, schedule)?;
+    let residual = steps.contains(&FusedStep::AddResidual);
 
     let inp_tile_bytes = cfg.inp_tile_bytes();
     let wgt_tile_bytes = cfg.wgt_tile_bytes();
     let out_tile_bytes = cfg.out_tile_bytes();
+    let acc_tile_bytes = cfg.acc_tile_bytes();
     let icb = p.ic.div_ceil(cfg.gemm.block_in);
     let inp_bytes = icb * p.h * p.w * inp_tile_bytes;
     let out_tiles = plan.ocb * plan.oh * plan.ow;
 
-    let bufs = alloc_group(
-        rt,
-        &[
-            (inp_bytes, inp_tile_bytes),
-            (wgt_packed.len(), wgt_tile_bytes),
-            (out_tiles * out_tile_bytes, out_tile_bytes),
-            (NODE_UOP_ARENA_BYTES, 4),
-        ],
-    )?;
-    let (inp_buf, wgt_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2], bufs[3]);
+    // The residual image shares the output's tile order
+    // (`(oc_b * OH + oh) * OW + ow`) at accumulator granularity —
+    // [`super::pack_acc_nchw`] with a single batch row group.
+    let mut alloc_reqs = vec![
+        (inp_bytes, inp_tile_bytes),
+        (wgt_packed.len(), wgt_tile_bytes),
+        (out_tiles * out_tile_bytes, out_tile_bytes),
+    ];
+    if residual {
+        alloc_reqs.push((out_tiles * acc_tile_bytes, acc_tile_bytes));
+    }
+    alloc_reqs.push((NODE_UOP_ARENA_BYTES, 4));
+    let bufs = alloc_group(rt, &alloc_reqs)?;
+    let (inp_buf, wgt_buf, out_buf) = (bufs[0], bufs[1], bufs[2]);
+    let res_buf = residual.then(|| bufs[3]);
+    let uop_buf = *bufs.last().expect("arena allocated");
     if let Err(e) = rt.copy_in(&wgt_buf, bytes_of_i8(wgt_packed)) {
         free_group(rt, &bufs);
         return Err(e.into());
@@ -376,6 +414,7 @@ pub fn compile_conv2d_tuned(
         inp: (inp_buf.addr / inp_tile_bytes) as u32,
         wgt: (wgt_buf.addr / wgt_tile_bytes) as u32,
         out: (out_buf.addr / out_tile_bytes) as u32,
+        res: res_buf.map(|b| (b.addr / acc_tile_bytes) as u32),
     };
 
     // Record into a dedicated context over this node's private kernel
@@ -383,7 +422,7 @@ pub fn compile_conv2d_tuned(
     let mut ctx =
         CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
     let mut streams = Vec::new();
-    if let Err(e) = emit_conv2d(&mut ctx, p, &plan, base, |ctx| {
+    if let Err(e) = emit_conv2d(&mut ctx, p, &plan, base, steps, |ctx| {
         streams.push(ctx.seal()?);
         Ok(())
     }) {
@@ -391,19 +430,28 @@ pub fn compile_conv2d_tuned(
         return Err(e);
     }
 
+    let op = if steps.is_empty() {
+        Op::Conv2d { p: *p }
+    } else {
+        Op::FusedConv2d { p: *p, steps: steps.to_vec() }
+    };
+    let mut inp_bufs = vec![inp_buf];
+    inp_bufs.extend(res_buf);
+    let mut layout = vec![
+        (inp_buf, inp_tile_bytes),
+        (wgt_buf, wgt_tile_bytes),
+        (out_buf, out_tile_bytes),
+    ];
+    layout.extend(res_buf.map(|b| (b, acc_tile_bytes)));
+    layout.push((uop_buf, 4));
     Ok(CompiledNode {
-        op: Op::Conv2d { p: *p },
+        op,
         schedule: schedule.copied(),
         streams,
-        inp_bufs: vec![inp_buf],
+        inp_bufs,
         out_buf,
         baked_bufs: vec![wgt_buf, uop_buf],
-        layout: vec![
-            (inp_buf, inp_tile_bytes),
-            (wgt_buf, wgt_tile_bytes),
-            (out_buf, out_tile_bytes),
-            (uop_buf, 4),
-        ],
+        layout,
     })
 }
 

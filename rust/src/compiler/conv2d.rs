@@ -23,9 +23,12 @@
 //! [`crate::compiler::compile_conv2d`] (seal into replayable streams —
 //! the plan-cache path).
 
-use super::plan::{plan_conv2d_tuned, Conv2dParams, Conv2dPlan, PlanError, ScheduleChoice};
+use super::alu::push_fused_epilogue;
+use super::plan::{
+    plan_conv2d_tuned, Conv2dParams, Conv2dPlan, FusedStep, PlanError, ScheduleChoice,
+};
 use super::virtual_thread::StripPipeline;
-use crate::isa::{AluOpcode, AluUop, BufferId, GemmUop, Uop};
+use crate::isa::{AluUop, BufferId, GemmUop, Uop};
 use crate::runtime::{
     CommandContext, RuntimeError, UopKernel, UopKernelBuilder, VtaRuntime,
 };
@@ -68,7 +71,7 @@ pub struct Conv2dOutput {
 /// combination needs its own micro-op kernel.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct KernelKey {
-    kind: u8, // 0 = main, 1 = reset, 2 = alu
+    kind: u8, // 0 = main, 1 = reset, 2 = alu, 3 = fused residual add
     context: u8,
     wgt_ctx: u8,
     oh_cur: u16,
@@ -101,12 +104,15 @@ impl KernelSet {
     }
 }
 
-/// Tile-granular DRAM base addresses of a conv2d's three data images.
+/// Tile-granular DRAM base addresses of a conv2d's data images.
+/// `res` is the fused residual operand's ACC-tile-granular image
+/// (`Some` only for fused chains carrying an `AddResidual` step).
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct ConvDramBase {
     pub inp: u32,
     pub wgt: u32,
     pub out: u32,
+    pub res: Option<u32>,
 }
 
 /// Emit the full conv2d instruction stream for `plan` into `ctx`,
@@ -119,6 +125,7 @@ pub(crate) fn emit_conv2d<F>(
     p: &Conv2dParams,
     plan: &Conv2dPlan,
     base: ConvDramBase,
+    steps: &[FusedStep],
     mut boundary: F,
 ) -> Result<(), CompileError>
 where
@@ -183,8 +190,8 @@ where
                     },
                     wgt_load.take(),
                     (wgt_ctx * wgt_ctx_stride) as u16,
-                    base.inp,
-                    base.out,
+                    base,
+                    steps,
                     inp_ctx_stride,
                     acc_ctx_stride,
                 )?;
@@ -250,12 +257,13 @@ pub fn lower_conv2d_tuned(
         inp: (inp_buf.addr / inp_tile_bytes) as u32,
         wgt: (wgt_buf.addr / wgt_tile_bytes) as u32,
         out: (out_buf.addr / out_tile_bytes) as u32,
+        res: None,
     };
 
     let mut stats = SimStats::default();
     {
         let VtaRuntime { ctx, device, .. } = rt;
-        emit_conv2d(ctx, p, &plan, base, |ctx| {
+        emit_conv2d(ctx, p, &plan, base, &[], |ctx| {
             stats.merge(&ctx.synchronize(&mut *device)?);
             Ok(())
         })?;
@@ -299,15 +307,20 @@ fn emit_strip(
     geom: StripGeom,
     wgt_load: Option<WgtLoad>,
     wgt_base: u16,
-    inp_dram0: u32,
-    out_dram0: u32,
+    base: ConvDramBase,
+    steps: &[FusedStep],
     inp_ctx_stride: usize,
     acc_ctx_stride: usize,
 ) -> Result<(), CompileError> {
+    let (inp_dram0, out_dram0) = (base.inp, base.out);
     let tok = pipe.begin();
     let c = tok.context;
     let inp_off = if c == 1 { inp_ctx_stride } else { 0 };
     let acc_off = if c == 1 { acc_ctx_stride } else { 0 };
+    // Fused residual operand: resident in the upper half of the
+    // context's ACC span (the fused planner halved the strip budget to
+    // keep this half free).
+    let res_off = acc_off + acc_ctx_stride / plan.contexts;
     let k = p.k;
     let plane = geom.ih_span * geom.iw_tiles;
 
@@ -366,6 +379,27 @@ fn emit_strip(
 
     // ---- compute ------------------------------------------------------
     pipe.compute_prologue(ctx, tok)?;
+
+    // Fused residual: load the matching output-shaped ACC tiles into
+    // the upper half of the context span. ACC loads execute on the
+    // compute module, so program order alone serializes them against
+    // this strip's GEMM/ALU ops, and the strip's WAR pop (attached to
+    // this first compute instruction when the context is reused)
+    // fences against the previous occupant's stores.
+    if let Some(res_dram0) = base.res {
+        for oc_i in 0..geom.oc_cur {
+            ctx.load_buffer_2d(
+                BufferId::Acc,
+                (res_off + oc_i * geom.oh_cur * geom.ow_cur) as u32,
+                res_dram0
+                    + (((geom.oc0 + oc_i) * plan.oh + geom.oh0) * plan.ow + geom.ow0) as u32,
+                geom.oh_cur as u16,
+                geom.ow_cur as u16,
+                plan.ow as u16,
+                [0; 4],
+            );
+        }
+    }
 
     let kkey = |kind: u8| KernelKey {
         kind,
@@ -429,8 +463,11 @@ fn emit_strip(
     ctx.push_gemm(mid, &mk, false)?;
     pipe.gemm_epilogue(ctx)?;
 
-    // Requantize on the tensor ALU: SHR, clip low (ReLU or -128), clip
-    // high at 127; the final ALU write narrows into the out buffer.
+    // Requantize on the tensor ALU — then, for fused chains, append
+    // the epilogue steps as further ALU passes over the same resident
+    // tiles (one ACC residency; every pass overwrites the out-buffer
+    // mirror at the same indices, so stores read the last pass's
+    // narrowed result — see `push_fused_epilogue`).
     let n_acc = geom.oc_cur * geom.oh_cur * geom.ow_cur;
     let (aid, ak) = kernels.get_or_build(ctx, kkey(2), || {
         let mut b = UopKernelBuilder::new();
@@ -440,9 +477,19 @@ fn emit_strip(
         b.loop_end().map_err(RuntimeError::Uop)?;
         b.finish().map_err(RuntimeError::Uop)
     })?;
-    let rq = p.requant;
-    let op = if rq.relu { AluOpcode::RqRelu } else { AluOpcode::Rq };
-    ctx.push_alu(aid, &ak, op, true, rq.shift as i16)?;
+    let res_kernel = if steps.contains(&FusedStep::AddResidual) {
+        Some(kernels.get_or_build(ctx, kkey(3), || {
+            let mut b = UopKernelBuilder::new();
+            b.loop_begin(n_acc as u16, 1, 1, 0).map_err(RuntimeError::Uop)?;
+            b.push(Uop::Alu(AluUop { dst_idx: acc_off as u16, src_idx: res_off as u16 }))
+                .map_err(RuntimeError::Uop)?;
+            b.loop_end().map_err(RuntimeError::Uop)?;
+            b.finish().map_err(RuntimeError::Uop)
+        })?)
+    } else {
+        None
+    };
+    push_fused_epilogue(ctx, p.requant, steps, (aid, &ak), res_kernel.as_ref().map(|(id, k)| (*id, k)))?;
     pipe.alu_epilogue(ctx)?;
 
     // ---- stores -------------------------------------------------------

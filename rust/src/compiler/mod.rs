@@ -38,8 +38,8 @@ pub mod virtual_thread;
 
 pub use alu::EltwiseKind;
 pub use compiled::{
-    compile_conv2d, compile_conv2d_tuned, compile_dense, compile_dense_tuned, compile_eltwise,
-    compile_upsample2x, CompiledNode, PlanBlueprint,
+    compile_conv2d, compile_conv2d_fused, compile_conv2d_tuned, compile_dense,
+    compile_dense_tuned, compile_eltwise, compile_upsample2x, CompiledNode, PlanBlueprint,
 };
 pub use conv2d::{lower_conv2d, lower_conv2d_tuned, CompileError, Conv2dOutput};
 pub use layout::{
@@ -52,9 +52,9 @@ pub use op::{
     REGISTRY,
 };
 pub use plan::{
-    plan_conv2d, plan_conv2d_tuned, plan_eltwise, plan_matmul, plan_matmul_tuned, plan_upsample2x,
-    Conv2dParams, Conv2dPlan, EltwisePlan, MatmulParams, MatmulPlan, PlanError, Requant,
-    ScheduleChoice, UpsamplePlan,
+    plan_conv2d, plan_conv2d_fused, plan_conv2d_tuned, plan_eltwise, plan_matmul,
+    plan_matmul_tuned, plan_upsample2x, Conv2dParams, Conv2dPlan, EltwisePlan, FusedStep,
+    MatmulParams, MatmulPlan, PlanError, Requant, ScheduleChoice, UpsamplePlan,
 };
 pub use virtual_thread::StripPipeline;
 

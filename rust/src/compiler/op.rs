@@ -25,14 +25,18 @@
 //! worked "add your own operator" walkthrough.
 
 use super::compiled::{
-    compile_conv2d_tuned, compile_dense_tuned, compile_eltwise, compile_upsample2x, CompiledNode,
+    compile_conv2d_fused, compile_conv2d_tuned, compile_dense_tuned, compile_eltwise,
+    compile_upsample2x, CompiledNode,
 };
 use super::conv2d::CompileError;
 use super::layout::{
     pack_acc_i32, pack_acc_nchw, pack_activations, pack_matrix_a, pack_weights, unpack_eltwise,
     unpack_matrix_c, unpack_outputs,
 };
-use super::plan::{plan_conv2d, plan_eltwise, plan_matmul, plan_upsample2x, ScheduleChoice};
+use super::plan::{
+    plan_conv2d, plan_conv2d_fused, plan_eltwise, plan_matmul, plan_upsample2x, FusedStep,
+    ScheduleChoice,
+};
 use super::reference;
 use super::EltwiseKind;
 use crate::arch::VtaConfig;
@@ -141,6 +145,30 @@ pub trait VtaOp: Sync {
         None
     }
 
+    // -----------------------------------------------------------------
+    // Fusion capability (drives `graph::fuse` — the pass matches on
+    // these methods, never on `Op` variants).
+    // -----------------------------------------------------------------
+
+    /// Can a trailing standalone `Relu` fold into this operator's
+    /// requant epilogue (`Requant::relu` → the `RQ_RELU` opcode)?
+    fn folds_relu(&self) -> bool {
+        false
+    }
+
+    /// Can this operator anchor a fused epilogue chain (become the
+    /// conv of an [`Op::FusedConv2d`])?
+    fn anchors_fusion(&self) -> bool {
+        false
+    }
+
+    /// If this operator can ride a fused chain as an epilogue, the
+    /// [`FusedStep`] describing its tensor-ALU pass; `None` breaks the
+    /// chain.
+    fn fuse_step(&self, _op: &Op) -> Option<FusedStep> {
+        None
+    }
+
     /// Compile-once: perform all input-independent lowering (plan,
     /// pack + copy constants into DRAM residency, record + seal the
     /// instruction streams) and return the replayable artifact.
@@ -213,6 +241,7 @@ pub fn execute_compiled(
 pub static REGISTRY: &[&'static dyn VtaOp] = &[
     &InputVta,
     &Conv2dVta,
+    &FusedConvVta,
     &DenseVta,
     &AddVta,
     &ReluVta,
@@ -292,6 +321,14 @@ impl VtaOp for Conv2dVta {
         }
     }
 
+    fn folds_relu(&self) -> bool {
+        true
+    }
+
+    fn anchors_fusion(&self) -> bool {
+        true
+    }
+
     fn artifact_name(&self, node: &Node) -> Option<String> {
         let Op::Conv2d { p } = &node.op else { return None };
         Some(format!(
@@ -348,6 +385,110 @@ impl VtaOp for Conv2dVta {
     }
 }
 
+/// A conv with a fused epilogue chain ([`Op::FusedConv2d`], produced
+/// by [`crate::graph::fuse`]): the whole chain compiles into one
+/// `CompiledNode` — one ACC residency, the residual DMA'd into the
+/// accumulator and added on the tensor ALU, epilogue passes appended
+/// to the same microcode stream, no intermediate store/load.
+pub struct FusedConvVta;
+
+impl FusedConvVta {
+    /// The residual image rides the output's ACC-tile order, which
+    /// matches [`pack_acc_nchw`] only when the batch fills exactly one
+    /// GEMM batch row group.
+    fn residual_ok(cfg: &VtaConfig, node: &Node, steps: &[FusedStep]) -> bool {
+        !steps.contains(&FusedStep::AddResidual) || node.shape[0] == cfg.gemm.batch
+    }
+}
+
+impl VtaOp for FusedConvVta {
+    fn kind(&self) -> &'static str {
+        "fused_conv2d"
+    }
+
+    fn offloadable(&self, cfg: &VtaConfig, node: &Node, virtual_threads: usize) -> bool {
+        match &node.op {
+            Op::FusedConv2d { p, steps } => {
+                Self::residual_ok(cfg, node, steps)
+                    && plan_conv2d_fused(cfg, p, steps, virtual_threads, None).is_ok()
+            }
+            _ => false,
+        }
+    }
+
+    fn offload_policy(&self, node: &Node, policy: &PartitionPolicy) -> bool {
+        match &node.op {
+            Op::FusedConv2d { p, .. } => p.ic >= policy.min_conv_ic,
+            _ => false,
+        }
+    }
+
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+        schedule: Option<&ScheduleChoice>,
+    ) -> Result<CompiledNode, CompileError> {
+        let Op::FusedConv2d { p, steps } = &node.op else {
+            return Err(CompileError::NotOffloadable(self.kind()));
+        };
+        let cfg = rt.ctx.config().clone();
+        if !Self::residual_ok(&cfg, node, steps) {
+            return Err(CompileError::NotOffloadable(self.kind()));
+        }
+        let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
+        let wp = pack_weights(&cfg, w);
+        compile_conv2d_fused(rt, p, steps, &wp, virtual_threads, schedule)
+    }
+
+    fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
+        let mut packed = vec![pack_activations(cfg, inputs[0])];
+        if let Some(res) = inputs.get(1) {
+            // Residual: int8 values widened into the int32 accumulator
+            // layout, ACC-tile order matching the conv's output tiles.
+            packed.push(pack_acc_nchw(cfg, res));
+        }
+        packed
+    }
+
+    fn unpack_output(
+        &self,
+        cfg: &VtaConfig,
+        compiled: &CompiledNode,
+        packed: &[i8],
+        inputs: &[&Tensor<i8>],
+    ) -> Tensor<i8> {
+        let Op::FusedConv2d { p, .. } = &compiled.op else {
+            unreachable!("fused conv artifact carries fused conv params")
+        };
+        unpack_outputs(cfg, packed, inputs[0].shape()[0], p.oc, p.out_h(), p.out_w())
+    }
+
+    fn reference(
+        &self,
+        g: &Graph,
+        node: &Node,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<Tensor<i8>, CompileError> {
+        let Op::FusedConv2d { p, steps } = &node.op else {
+            unreachable!("fused conv entry serves fused conv nodes")
+        };
+        let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
+        let mut out = reference::conv2d_ref(p, inputs[0], w);
+        for step in steps {
+            out = match step {
+                FusedStep::AddResidual => reference::add_i8(&out, inputs[1]),
+                FusedStep::Relu => reference::relu_i8(&out),
+                FusedStep::ShrImm { shift } => reference::shr_imm_i8(&out, *shift),
+                FusedStep::MinImm { imm } => reference::min_imm_i8(&out, *imm),
+            };
+        }
+        Ok(out)
+    }
+}
+
 /// Dense / fully-connected layer on the GEMM intrinsic — the Fig 13
 /// matmul workload, compile-once via [`compile_dense`].
 pub struct DenseVta;
@@ -366,6 +507,10 @@ impl VtaOp for DenseVta {
 
     fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
         policy.offload_dense
+    }
+
+    fn folds_relu(&self) -> bool {
+        true
     }
 
     fn artifact_name(&self, node: &Node) -> Option<String> {
@@ -442,6 +587,10 @@ impl VtaOp for AddVta {
         Some(format!("add_{}", shape_tag(&node.shape)))
     }
 
+    fn fuse_step(&self, _op: &Op) -> Option<FusedStep> {
+        Some(FusedStep::AddResidual)
+    }
+
     fn compile(
         &self,
         rt: &mut VtaRuntime,
@@ -493,6 +642,10 @@ impl VtaOp for ReluVta {
 
     fn offload_policy(&self, _node: &Node, policy: &PartitionPolicy) -> bool {
         policy.offload_alu
+    }
+
+    fn fuse_step(&self, _op: &Op) -> Option<FusedStep> {
+        Some(FusedStep::Relu)
     }
 
     fn compile(
@@ -551,6 +704,11 @@ impl VtaOp for MinVta {
 
     fn artifact_name(&self, node: &Node) -> Option<String> {
         Some(format!("min_{}", shape_tag(&node.shape)))
+    }
+
+    fn fuse_step(&self, op: &Op) -> Option<FusedStep> {
+        let Op::MinImm { imm } = op else { return None };
+        Some(FusedStep::MinImm { imm: *imm })
     }
 
     fn compile(
@@ -614,6 +772,11 @@ impl VtaOp for ShrVta {
 
     fn artifact_name(&self, node: &Node) -> Option<String> {
         Some(format!("shr_{}", shape_tag(&node.shape)))
+    }
+
+    fn fuse_step(&self, op: &Op) -> Option<FusedStep> {
+        let Op::ShrImm { shift } = op else { return None };
+        Some(FusedStep::ShrImm { shift: *shift })
     }
 
     fn compile(

@@ -58,6 +58,26 @@ impl ScheduleChoice {
     }
 }
 
+/// One post-GEMM epilogue step of a fused conv chain
+/// ([`crate::graph::Op::FusedConv2d`]), applied in the accumulator
+/// while the conv's tiles are still resident — no store/load round
+/// trip between steps. Each variant maps to one (or two, for the
+/// saturating residual add) tensor-ALU micro-coded passes appended to
+/// the strip's instruction stream by
+/// [`crate::compiler::alu::push_fused_epilogue`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FusedStep {
+    /// Saturating add of a residual tensor (the fused node's second
+    /// input), loaded into the upper half of the context's ACC span.
+    AddResidual,
+    /// Clip at zero.
+    Relu,
+    /// Arithmetic right shift by an immediate.
+    ShrImm { shift: u8 },
+    /// Clamp from above by an immediate.
+    MinImm { imm: i16 },
+}
+
 /// Requantization applied by the tensor ALU after accumulation
 /// (shift-based fixed-point, clipped into the int8 output range).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -207,7 +227,7 @@ pub fn plan_conv2d(
     p: &Conv2dParams,
     virtual_threads: usize,
 ) -> Result<Conv2dPlan, PlanError> {
-    plan_conv2d_default(cfg, p, virtual_threads)
+    plan_conv2d_default(cfg, p, virtual_threads, false)
 }
 
 /// Plan a conv2d tiling with an optional tuned [`ScheduleChoice`]
@@ -221,12 +241,47 @@ pub fn plan_conv2d_tuned(
     choice: Option<&ScheduleChoice>,
 ) -> Result<Conv2dPlan, PlanError> {
     match choice {
-        None => plan_conv2d_default(cfg, p, virtual_threads),
+        None => plan_conv2d_default(cfg, p, virtual_threads, false),
         Some(ScheduleChoice::Conv2d { oc_t, oh_t, ow_t }) => {
-            conv2d_plan_from_choice(cfg, p, virtual_threads, *oc_t, *oh_t, *ow_t)
+            conv2d_plan_from_choice(cfg, p, virtual_threads, false, *oc_t, *oh_t, *ow_t)
         }
         Some(other) => Err(PlanError::WrongSchedule { got: other.kind(), op: "conv2d" }),
     }
+}
+
+/// Plan a fused conv2d chain ([`crate::graph::Op::FusedConv2d`]): the
+/// conv's tiling, with the per-context accumulator budget halved when
+/// the chain carries a residual add (the residual operand is resident
+/// in the upper half of the context's ACC span for the whole strip).
+/// The epilogue steps themselves cost no SRAM — they are extra ALU
+/// passes over the already-resident accumulator tiles.
+pub fn plan_conv2d_fused(
+    cfg: &VtaConfig,
+    p: &Conv2dParams,
+    steps: &[FusedStep],
+    virtual_threads: usize,
+    choice: Option<&ScheduleChoice>,
+) -> Result<Conv2dPlan, PlanError> {
+    let residual = steps.contains(&FusedStep::AddResidual);
+    let plan = match choice {
+        None => plan_conv2d_default(cfg, p, virtual_threads, residual)?,
+        Some(ScheduleChoice::Conv2d { oc_t, oh_t, ow_t }) => {
+            conv2d_plan_from_choice(cfg, p, virtual_threads, residual, *oc_t, *oh_t, *ow_t)?
+        }
+        Some(other) => return Err(PlanError::WrongSchedule { got: other.kind(), op: "conv2d" }),
+    };
+    if residual {
+        // The residual-add micro-kernel's src index addresses the upper
+        // half of the context span; belt-and-braces against the 11-bit
+        // uop field (always holds by construction: offset + tiles ≤ D).
+        let d = cfg.acc_depth().min(cfg.out_depth()).min(1 << 11);
+        check_width(
+            "uop residual index",
+            (virtual_threads - 1) * d / 2 + d / (2 * virtual_threads) + plan.acc_tiles(),
+            1 << 11,
+        )?;
+    }
+    Ok(plan)
 }
 
 /// The ISA-clamped SRAM depths and per-context budgets shared by both
@@ -248,17 +303,22 @@ struct ConvBudgets {
     acc_budget: usize,
 }
 
-fn conv_budgets(cfg: &VtaConfig, virtual_threads: usize) -> ConvBudgets {
+fn conv_budgets(cfg: &VtaConfig, virtual_threads: usize, residual: bool) -> ConvBudgets {
     let inp_depth = cfg.inp_depth().min(1 << 11);
     let acc_depth = cfg.acc_depth().min(1 << 11);
     let out_depth = cfg.out_depth().min(1 << 11);
     let wgt_depth = cfg.wgt_depth().min(1 << 10);
+    // A fused residual add keeps the residual operand resident in the
+    // upper half of the context's ACC span, halving the strip budget.
+    // The OUT-depth bound is unaffected: only the conv's own tiles
+    // mirror into the out buffer.
+    let res_div = if residual { 2 } else { 1 };
     ConvBudgets {
         inp_depth,
         acc_depth,
         wgt_depth,
         inp_budget: inp_depth / virtual_threads,
-        acc_budget: (acc_depth / virtual_threads).min(out_depth / virtual_threads),
+        acc_budget: (acc_depth / virtual_threads).min(out_depth / virtual_threads) / res_div,
     }
 }
 
@@ -271,6 +331,7 @@ fn conv2d_plan_from_choice(
     cfg: &VtaConfig,
     p: &Conv2dParams,
     virtual_threads: usize,
+    residual: bool,
     oc_t: usize,
     oh_t: usize,
     ow_t: usize,
@@ -284,7 +345,7 @@ fn conv2d_plan_from_choice(
     let (oh, ow) = (p.out_h(), p.out_w());
     let pad = p.pad();
     let ConvBudgets { inp_depth, acc_depth, wgt_depth, inp_budget, acc_budget } =
-        conv_budgets(cfg, virtual_threads);
+        conv_budgets(cfg, virtual_threads, residual);
 
     // Clamp to the workload extent (a choice tuned on a same-shaped
     // layer may quote tiles larger than this layer's output).
@@ -354,6 +415,7 @@ fn plan_conv2d_default(
     cfg: &VtaConfig,
     p: &Conv2dParams,
     virtual_threads: usize,
+    residual: bool,
 ) -> Result<Conv2dPlan, PlanError> {
     assert!(virtual_threads == 1 || virtual_threads == 2, "1 or 2 virtual threads");
     let icb = p.ic.div_ceil(cfg.gemm.block_in);
@@ -361,7 +423,7 @@ fn plan_conv2d_default(
     let (oh, ow) = (p.out_h(), p.out_w());
     let pad = p.pad();
     let ConvBudgets { inp_depth, acc_depth, wgt_depth, inp_budget, acc_budget } =
-        conv_budgets(cfg, virtual_threads);
+        conv_budgets(cfg, virtual_threads, residual);
 
     // 1. Output-channel group size, limited by the weight buffer and
     //    the micro-op cache (main kernel must fit).

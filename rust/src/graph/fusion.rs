@@ -1,36 +1,155 @@
-//! Operator fusion (§1.2): fold `Relu` nodes into their producer's
-//! requant epilogue when the producer supports one (conv2d / dense).
+//! Operator fusion (§1.2): the graph-level optimization NNVM performs
+//! before TVM lowering, promoted to a general chain-matching pass.
 //!
-//! This is the graph-level optimization NNVM performs before TVM
-//! lowering — on VTA it saves a full ALU pass plus a store/load round
-//! trip per activation tensor.
+//! Two rewrites, both driven by the operator registry's fusion
+//! capability ([`crate::compiler::VtaOp::fuse_step`] /
+//! [`crate::compiler::VtaOp::anchors_fusion`]) rather than hard-coded
+//! operator matches:
+//!
+//! 1. **ReLU folding** — a standalone `Relu` whose sole producer
+//!    carries a requant epilogue (conv2d / dense,
+//!    [`crate::compiler::VtaOp::folds_relu`]) sets the producer's
+//!    `Requant::relu` flag: the `RQ_RELU` ALU opcode clamps at zero
+//!    for free, no new node kind.
+//! 2. **Epilogue chains** — a single-consumer chain hanging off a
+//!    conv anchor, where every link describes itself as a
+//!    [`FusedStep`] (`Add` → residual add, `Relu`, `ShrImm`,
+//!    `MinImm`), collapses into one [`Op::FusedConv2d`] node. The
+//!    compiler emits the whole chain as one `CompiledNode`: one ACC
+//!    residency, the residual loaded into the accumulator and added
+//!    via the tensor ALU, no intermediate store/load. This is the
+//!    grammar that covers the ResNet block tail
+//!    (`conv→add→relu`) and the style-transfer output stage
+//!    (`conv→shr→min`).
+//!
+//! The pass runs on unpartitioned graphs only — placements are decided
+//! *after* fusion (a fused node is offloaded or not as a unit), and
+//! silently discarding placements was a bug. It is idempotent:
+//! `fuse(fuse(g))` equals `fuse(g)` node for node.
 
-use super::ir::{Graph, Node, Op, Placement};
+use crate::compiler::{op_impl, FusedStep};
 
-/// Fuse ReLU into producers. Returns the rewritten graph and the number
-/// of nodes fused away.
-pub fn fuse(g: Graph) -> (Graph, usize) {
-    // Count consumers of each node in the *original* graph.
-    let mut consumers = vec![0usize; g.nodes.len()];
+use super::ir::{Graph, GraphError, Node, Op, Placement};
+
+/// Run the fusion pass. Returns the rewritten graph and the number of
+/// nodes fused away. Errors if any node already has a placement —
+/// fusion must run before [`super::partition`].
+pub fn fuse(g: Graph) -> Result<(Graph, usize), GraphError> {
     for n in &g.nodes {
-        for &i in &n.inputs {
-            consumers[i] += 1;
+        if n.placement != Placement::Unassigned {
+            return Err(GraphError::AlreadyPartitioned(n.id, n.name.clone()));
         }
     }
 
+    // Count consumers of each node in the *original* graph.
+    let mut consumers = vec![0usize; g.nodes.len()];
+    let mut consumer_of: Vec<Vec<usize>> = vec![Vec::new(); g.nodes.len()];
+    for n in &g.nodes {
+        for &i in &n.inputs {
+            consumers[i] += 1;
+            consumer_of[i].push(n.id);
+        }
+    }
+
+    // Phase 1: match maximal epilogue chains off every fusion anchor.
+    // `chain_of[last_member] = Some(chain)`; every member (anchor
+    // included) is marked consumed so the rewrite walk skips it until
+    // the chain's last member, where the fused node is emitted.
+    let mut consumed = vec![false; g.nodes.len()];
+    let mut chain_at: Vec<Option<Chain>> = (0..g.nodes.len()).map(|_| None).collect();
+    for n in &g.nodes {
+        if !op_impl(&n.op).anchors_fusion() || consumers[n.id] != 1 {
+            continue;
+        }
+        let mut steps: Vec<FusedStep> = Vec::new();
+        let mut residual: Option<usize> = None;
+        let mut members: Vec<usize> = Vec::new();
+        let mut cur = n.id;
+        // Extending past `cur` needs `cur` to have exactly one consumer
+        // (its value must not escape the ACC residency), and that
+        // consumer must not already belong to another chain (e.g. an
+        // `Add` joining two convs — the earlier conv claims it, the
+        // later one keeps it as its residual input).
+        while consumers[cur] == 1 && !consumed[consumer_of[cur][0]] {
+            let next = &g.nodes[consumer_of[cur][0]];
+            let Some(step) = op_impl(&next.op).fuse_step(&next.op) else { break };
+            if step == FusedStep::AddResidual {
+                // The chain value must be exactly one operand; the
+                // other operand (any consumer count) is the residual,
+                // loaded into ACC alongside the conv's tiles. At most
+                // one residual per chain — there is one spare half of
+                // the ACC span.
+                let others: Vec<usize> =
+                    next.inputs.iter().copied().filter(|&i| i != cur).collect();
+                if residual.is_some() || next.inputs.len() != 2 || others.len() != 1 {
+                    break;
+                }
+                residual = Some(others[0]);
+            }
+            steps.push(step);
+            members.push(next.id);
+            cur = next.id;
+        }
+        // A lone ReLU is cheaper as a requant-flag fold (rewrite 1).
+        if steps.is_empty() || steps == [FusedStep::Relu] {
+            continue;
+        }
+        consumed[n.id] = true;
+        for &m in &members {
+            consumed[m] = true;
+        }
+        chain_at[cur] = Some(Chain { anchor: n.id, steps, residual, members });
+    }
+
+    // Phase 2: rewrite.
     let mut out = Graph::new();
-    // Map old id → new id.
     let mut remap: Vec<Option<usize>> = vec![None; g.nodes.len()];
     let mut fused = 0usize;
 
     for n in &g.nodes {
-        // A ReLU whose single producer is a conv/dense that only it
-        // consumes folds into that producer's requant.
+        if let Some(chain) = chain_at[n.id].take() {
+            let anchor = &g.nodes[chain.anchor];
+            let Op::Conv2d { p } = &anchor.op else {
+                unreachable!("only conv anchors chains");
+            };
+            let mut name = anchor.name.clone();
+            for s in &chain.steps {
+                name.push_str(match s {
+                    FusedStep::AddResidual => "+add",
+                    FusedStep::Relu => "+relu",
+                    FusedStep::ShrImm { .. } => "+shr",
+                    FusedStep::MinImm { .. } => "+min",
+                });
+            }
+            let mut inputs: Vec<usize> =
+                anchor.inputs.iter().map(|&i| remap[i].expect("topo order")).collect();
+            if let Some(res) = chain.residual {
+                // The residual producer precedes the chain's last
+                // member in topo order, so it is already emitted.
+                inputs.push(remap[res].expect("residual precedes chain tail"));
+            }
+            let new_id = out
+                .add(name, Op::FusedConv2d { p: *p, steps: chain.steps }, &inputs)
+                .expect("rewrite preserves validity");
+            if let Some(w) = g.weights(chain.anchor) {
+                out.set_weights(new_id, w.clone());
+            }
+            remap[chain.anchor] = Some(new_id);
+            for &m in &chain.members {
+                remap[m] = Some(new_id);
+            }
+            fused += chain.members.len();
+            continue;
+        }
+        if consumed[n.id] {
+            continue; // emitted later, at its chain's last member
+        }
+        // Rewrite 1: fold a standalone ReLU into its sole producer's
+        // requant epilogue. Idempotence: a producer already carrying
+        // `relu` absorbs the (then no-op) ReLU without renaming.
         if matches!(n.op, Op::Relu) {
             let prod = n.inputs[0];
-            let foldable = consumers[prod] == 1
-                && matches!(g.nodes[prod].op, Op::Conv2d { .. } | Op::Dense { .. });
-            if foldable {
+            if consumers[prod] == 1 && op_impl(&g.nodes[prod].op).folds_relu() {
                 let new_prod = remap[prod].expect("producer already emitted");
                 set_relu(&mut out.nodes[new_prod]);
                 remap[n.id] = Some(new_prod);
@@ -43,20 +162,31 @@ pub fn fuse(g: Graph) -> (Graph, usize) {
         let new_id = out
             .add(n.name.clone(), n.op.clone(), &new_inputs)
             .expect("rewrite preserves validity");
-        out.nodes[new_id].placement = Placement::Unassigned;
         if let Some(w) = g.weights(n.id) {
             out.set_weights(new_id, w.clone());
         }
         remap[n.id] = Some(new_id);
     }
-    (out, fused)
+    Ok((out, fused))
+}
+
+/// A matched epilogue chain: `anchor` (a conv) followed by `members`
+/// (the absorbed nodes, in order), describing `steps`.
+struct Chain {
+    anchor: usize,
+    steps: Vec<FusedStep>,
+    residual: Option<usize>,
+    members: Vec<usize>,
 }
 
 fn set_relu(node: &mut Node) {
-    match &mut node.op {
-        Op::Conv2d { p } => p.requant.relu = true,
-        Op::Dense { p } => p.requant.relu = true,
-        _ => unreachable!("checked by caller"),
+    let requant = match &mut node.op {
+        Op::Conv2d { p } => &mut p.requant,
+        Op::Dense { p } => &mut p.requant,
+        _ => unreachable!("checked by caller via folds_relu"),
+    };
+    if !requant.relu {
+        requant.relu = true;
+        node.name.push_str("+relu");
     }
-    node.name.push_str("+relu");
 }

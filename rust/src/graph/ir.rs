@@ -1,6 +1,6 @@
 //! The graph IR: nodes, operators, shape inference.
 
-use crate::compiler::{Conv2dParams, MatmulParams, Requant};
+use crate::compiler::{Conv2dParams, FusedStep, MatmulParams, Requant};
 use crate::util::Tensor;
 use thiserror::Error;
 
@@ -21,6 +21,8 @@ pub enum GraphError {
     NoOutput,
     #[error("missing weights for node {0}")]
     MissingWeights(NodeId),
+    #[error("node {0} ({1}) is already placed; fuse() must run before partitioning")]
+    AlreadyPartitioned(NodeId, String),
 }
 
 /// Where a node executes (decided by the partition pass).
@@ -44,6 +46,12 @@ pub enum Op {
     Input { shape: TensorShape },
     /// 2D convolution (+ fused requant/ReLU epilogue).
     Conv2d { p: Conv2dParams },
+    /// A conv with a fused epilogue chain (produced by
+    /// [`crate::graph::fuse`]): the steps run in the conv's own ACC
+    /// residency as extra tensor-ALU passes — no intermediate
+    /// store/load. Inputs are `[x]` or `[x, residual]` when the chain
+    /// carries an [`FusedStep::AddResidual`].
+    FusedConv2d { p: Conv2dParams, steps: Vec<FusedStep> },
     /// Standalone ReLU (fused into producers where possible).
     Relu,
     /// Max pooling (CPU-resident in the paper's evaluation).
@@ -155,6 +163,31 @@ impl Graph {
                 }
                 Ok(vec![s[0], p.oc, p.out_h(), p.out_w()])
             }
+            Op::FusedConv2d { p, steps } => {
+                let s = in_shape(0);
+                if s.len() != 4 || s[1] != p.ic || s[2] != p.h || s[3] != p.w {
+                    return Err(err(format!("conv expects [N,{},{},{}], got {s:?}", p.ic, p.h, p.w)));
+                }
+                let out = vec![s[0], p.oc, p.out_h(), p.out_w()];
+                let residuals = steps.iter().filter(|s| **s == FusedStep::AddResidual).count();
+                if residuals > 1 {
+                    return Err(err("fused chain carries more than one residual add".into()));
+                }
+                if inputs.len() != 1 + residuals {
+                    return Err(err(format!(
+                        "fused conv expects {} inputs, got {}",
+                        1 + residuals,
+                        inputs.len()
+                    )));
+                }
+                if residuals == 1 && in_shape(1) != &out {
+                    return Err(err(format!(
+                        "residual shape {:?} differs from conv output {out:?}",
+                        in_shape(1)
+                    )));
+                }
+                Ok(out)
+            }
             Op::Relu => Ok(in_shape(0).clone()),
             Op::MaxPool { k, s, pad } => {
                 let sh = in_shape(0);
@@ -202,7 +235,7 @@ impl Graph {
     pub fn validate(&self) -> Result<(), GraphError> {
         for n in &self.nodes {
             match &n.op {
-                Op::Conv2d { p } => {
+                Op::Conv2d { p } | Op::FusedConv2d { p, .. } => {
                     let w = self.weights(n.id).ok_or(GraphError::MissingWeights(n.id))?;
                     if w.shape() != [p.oc, p.ic, p.k, p.k] {
                         return Err(GraphError::ShapeMismatch {
@@ -241,6 +274,7 @@ impl Op {
         match self {
             Op::Input { .. } => "input",
             Op::Conv2d { .. } => "conv2d",
+            Op::FusedConv2d { .. } => "fused_conv2d",
             Op::Relu => "relu",
             Op::MaxPool { .. } => "maxpool",
             Op::GlobalAvgPool => "gap",
@@ -256,6 +290,9 @@ impl Op {
     pub fn ops(&self, out_shape: &[usize]) -> u64 {
         match self {
             Op::Conv2d { p } => p.ops(),
+            Op::FusedConv2d { p, steps } => {
+                p.ops() + (steps.len() * out_shape.iter().product::<usize>()) as u64
+            }
             Op::Dense { p } => p.ops(),
             Op::MaxPool { k, .. } => (out_shape.iter().product::<usize>() * k * k) as u64,
             Op::Add | Op::Relu | Op::MinImm { .. } | Op::ShrImm { .. } | Op::Upsample2x => {
@@ -269,6 +306,7 @@ impl Op {
     pub fn requant(&self) -> Option<Requant> {
         match self {
             Op::Conv2d { p } => Some(p.requant),
+            Op::FusedConv2d { p, .. } => Some(p.requant),
             Op::Dense { p } => Some(p.requant),
             _ => None,
         }

@@ -1,7 +1,7 @@
 use super::resnet::*;
 use super::*;
 use crate::arch::VtaConfig;
-use crate::compiler::{Conv2dParams, Requant};
+use crate::compiler::{Conv2dParams, FusedStep, Requant};
 
 fn conv_p(ic: usize, oc: usize) -> Conv2dParams {
     Conv2dParams { h: 8, w: 8, ic, oc, k: 3, s: 1, requant: Requant { shift: 6, relu: false } }
@@ -52,7 +52,7 @@ fn fusion_folds_relu_into_conv() {
     let r = g.add("relu", Op::Relu, &[c]).unwrap();
     let _p = g.add("pool", Op::MaxPool { k: 2, s: 2, pad: 0 }, &[r]).unwrap();
 
-    let (fused, n) = fuse(g);
+    let (fused, n) = fuse(g).unwrap();
     assert_eq!(n, 1);
     assert_eq!(fused.nodes.len(), 3); // input, conv+relu, pool
     match &fused.nodes[1].op {
@@ -73,9 +73,132 @@ fn fusion_keeps_relu_with_multiple_consumers() {
     g.set_weights(c, synth_conv_weights(1, 16, 16, 3));
     let r = g.add("relu", Op::Relu, &[c]).unwrap();
     let _a = g.add("add", Op::Add, &[r, c]).unwrap();
-    let (fused, n) = fuse(g);
+    let (fused, n) = fuse(g).unwrap();
     assert_eq!(n, 0);
     assert_eq!(fused.nodes.len(), 4);
+}
+
+#[test]
+fn fusion_rejects_partitioned_graphs() {
+    let cfg = VtaConfig::pynq();
+    let mut g = resnet18(1, 42).unwrap();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+    // Placements were silently reset to Unassigned before; now the
+    // pass refuses — fusion must run before partitioning.
+    assert!(matches!(fuse(g), Err(GraphError::AlreadyPartitioned(..))));
+}
+
+/// Node-for-node graph fingerprint for idempotence checks.
+fn graph_sig(g: &Graph) -> Vec<String> {
+    g.nodes
+        .iter()
+        .map(|n| format!("{}|{:?}|{:?}|{:?}|{:?}", n.name, n.op, n.inputs, n.shape, n.placement))
+        .collect()
+}
+
+#[test]
+fn fusion_is_idempotent() {
+    use super::style::style_transfer;
+    let builders: Vec<fn() -> Graph> = vec![
+        || resnet18(1, 42).unwrap(),
+        || style_transfer(1, 42).unwrap(),
+        || {
+            // A conv already carrying the relu flag followed by a
+            // standalone ReLU: the fold must not re-append "+relu".
+            let mut g = Graph::new();
+            let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+            let mut p = conv_p(16, 16);
+            p.requant.relu = true;
+            let c = g.add("conv", Op::Conv2d { p }, &[x]).unwrap();
+            g.set_weights(c, synth_conv_weights(1, 16, 16, 3));
+            let _r = g.add("relu", Op::Relu, &[c]).unwrap();
+            g
+        },
+    ];
+    for build in builders {
+        let (once, _) = fuse(build()).unwrap();
+        let sig_once = graph_sig(&once);
+        let (twice, n2) = fuse(once).unwrap();
+        assert_eq!(n2, 0, "second pass must fuse nothing");
+        assert_eq!(graph_sig(&twice), sig_once, "fuse(fuse(g)) != fuse(g)");
+    }
+}
+
+#[test]
+fn fusion_collapses_residual_chain() {
+    // conv2 → add(residual) → relu collapses into one FusedConv2d with
+    // the residual as a second input — the ResNet block tail.
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let c1 = g.add("c1", Op::Conv2d { p: conv_p(16, 16) }, &[x]).unwrap();
+    g.set_weights(c1, synth_conv_weights(1, 16, 16, 3));
+    let c2 = g.add("c2", Op::Conv2d { p: conv_p(16, 16) }, &[c1]).unwrap();
+    g.set_weights(c2, synth_conv_weights(2, 16, 16, 3));
+    let a = g.add("add", Op::Add, &[c2, x]).unwrap();
+    let _r = g.add("relu", Op::Relu, &[a]).unwrap();
+
+    let (fused, n) = fuse(g).unwrap();
+    assert_eq!(n, 2, "add and relu fuse away");
+    assert_eq!(fused.nodes.len(), 3); // input, c1, c2+add+relu
+    let tail = &fused.nodes[2];
+    assert_eq!(tail.name, "c2+add+relu");
+    match &tail.op {
+        Op::FusedConv2d { steps, .. } => {
+            assert_eq!(steps, &[FusedStep::AddResidual, FusedStep::Relu]);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(tail.inputs, vec![1, 0], "conv input then residual");
+    assert!(fused.weights(2).is_some(), "conv weights survive the rewrite");
+    assert!(fused.validate().is_ok());
+}
+
+#[test]
+fn fusion_collapses_shr_min_chain() {
+    // conv → shr → min collapses into one FusedConv2d — the
+    // style-transfer output stage.
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let c = g.add("c", Op::Conv2d { p: conv_p(16, 16) }, &[x]).unwrap();
+    g.set_weights(c, synth_conv_weights(1, 16, 16, 3));
+    let s = g.add("shr", Op::ShrImm { shift: 1 }, &[c]).unwrap();
+    let _m = g.add("min", Op::MinImm { imm: 100 }, &[s]).unwrap();
+
+    let (fused, n) = fuse(g).unwrap();
+    assert_eq!(n, 2);
+    assert_eq!(fused.nodes.len(), 2);
+    match &fused.nodes[1].op {
+        Op::FusedConv2d { steps, .. } => {
+            assert_eq!(steps, &[FusedStep::ShrImm { shift: 1 }, FusedStep::MinImm { imm: 100 }]);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(fused.nodes[1].name, "c+shr+min");
+}
+
+#[test]
+fn fusion_two_convs_joining_one_add() {
+    // Both convs feed the same Add: the earlier conv claims the chain,
+    // the later stays plain and becomes the residual input.
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let a = g.add("a", Op::Conv2d { p: conv_p(16, 16) }, &[x]).unwrap();
+    g.set_weights(a, synth_conv_weights(1, 16, 16, 3));
+    let b = g.add("b", Op::Conv2d { p: conv_p(16, 16) }, &[x]).unwrap();
+    g.set_weights(b, synth_conv_weights(2, 16, 16, 3));
+    let _s = g.add("sum", Op::Add, &[a, b]).unwrap();
+
+    let (fused, n) = fuse(g).unwrap();
+    assert_eq!(n, 1, "the add fuses into exactly one conv");
+    assert_eq!(fused.nodes.len(), 3);
+    // The fused node lands at the chain tail's (the Add's) topo
+    // position, so the plain conv `b` — its residual input — precedes.
+    assert_eq!(fused.nodes[1].name, "b");
+    assert!(matches!(fused.nodes[1].op, Op::Conv2d { .. }), "b stays a plain conv");
+    assert_eq!(fused.nodes[2].name, "a+add");
+    assert!(matches!(fused.nodes[2].op, Op::FusedConv2d { .. }));
+    assert_eq!(fused.nodes[2].inputs, vec![0, 1]);
+    assert!(fused.validate().is_ok());
 }
 
 #[test]
@@ -108,7 +231,7 @@ fn resnet18_workload_multiplicity() {
 #[test]
 fn partition_follows_paper_policy() {
     let cfg = VtaConfig::pynq();
-    let (mut g, _) = fuse(resnet18(1, 42).unwrap());
+    let (mut g, _) = fuse(resnet18(1, 42).unwrap()).unwrap();
     let (vta, cpu) = partition(&mut g, &PartitionPolicy::paper(&cfg));
     // All convs except C1 (3 input channels < 16) offload.
     assert_eq!(vta, 20);

@@ -577,7 +577,7 @@ fn build_policy(cfg: &VtaConfig, flags: &Flags) -> PartitionPolicy {
 /// channels, weight seed): `vta style` and `vta serve --model style`
 /// must serve the identical network.
 fn build_style(flags: &Flags) -> anyhow::Result<(vta::graph::Graph, usize)> {
-    Ok(fuse(style::style_net(1, flags.size, 16, 42)?))
+    Ok(fuse(style::style_net(1, flags.size, 16, 42)?)?)
 }
 
 /// Build the graph selected by `--model`, plus its display name and
@@ -585,7 +585,7 @@ fn build_style(flags: &Flags) -> anyhow::Result<(vta::graph::Graph, usize)> {
 fn build_model(flags: &Flags) -> anyhow::Result<(vta::graph::Graph, usize, String, usize)> {
     match flags.model.as_str() {
         "resnet" => {
-            let (g, fused) = fuse(resnet::resnet18(1, 42)?);
+            let (g, fused) = fuse(resnet::resnet18(1, 42)?)?;
             Ok((g, fused, "ResNet-18".to_string(), 224))
         }
         "style" => {
@@ -924,9 +924,13 @@ fn cmd_serve_threaded(
 /// `mixed` is the pair the fleet exists for: `resnet_mini` partitioned
 /// under the paper rule (its VTA work is pure conv — GEMM-bound) plus
 /// `style_net` with the ALU chain offloaded (eltwise-bound). The
-/// per-class policies are pinned rather than taken from `--offload-*`:
-/// offloading resnet's adds would make both classes ALU-hungry and
-/// erase the routing decision the fleet is meant to exercise.
+/// per-class policies are pinned rather than taken from `--offload-*`,
+/// and the conv class is deliberately **not** fused: fusing its block
+/// tails (or offloading its adds) would put residual-add ALU passes on
+/// the conv class too and erase the GEMM-vs-ALU contrast the routing
+/// decision is meant to exercise. The style class ships fused (via
+/// [`build_style`]) — its epilogue chains still run on the tensor ALU
+/// inside the fused nodes, so it stays the lane-sensitive class.
 /// `resnet` / `style` run single-class traffic through the fleet.
 /// Returns class-aligned (partitioned graphs, names, input sizes).
 fn build_fleet_classes(
@@ -935,7 +939,7 @@ fn build_fleet_classes(
 ) -> anyhow::Result<(Vec<vta::graph::Graph>, Vec<String>, Vec<usize>)> {
     match flags.model.as_str() {
         "mixed" => {
-            let (mut conv_g, _) = fuse(resnet::resnet_mini(1, flags.size, 42)?);
+            let mut conv_g = resnet::resnet_mini(1, flags.size, 42)?;
             let mut conv_p = PartitionPolicy::paper(cfg);
             conv_p.virtual_threads = flags.vt;
             partition(&mut conv_g, &conv_p);
@@ -1420,7 +1424,7 @@ fn cmd_dse(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_resnet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
-    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?);
+    let (mut g, fused) = fuse(resnet::resnet18(1, 42)?)?;
     let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
     println!("ResNet-18: {} nodes ({fused} fused), {vta_n} on VTA, {cpu_n} on CPU", g.nodes.len());
 

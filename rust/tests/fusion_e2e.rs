@@ -1,0 +1,277 @@
+//! End-to-end golden equivalence for deep operator fusion: graphs
+//! rewritten by [`vta::graph::fuse`] into fused-chain
+//! `Op::FusedConv2d` nodes (conv → residual add → ReLU, and
+//! conv → shr → min) must stay **bit-exact** against both the unfused
+//! graph and the CPU reference across virtual-thread modes and
+//! partition policies — and fused plans must be first-class plan-cache
+//! citizens: distinct `PlanKey`s from their unfused shape-twins, exact
+//! hit/miss accounting, warm replays that never recompile.
+
+use std::collections::HashSet;
+
+use vta::arch::VtaConfig;
+use vta::compiler::{FusedStep, Requant};
+use vta::exec::{CpuBackend, Executor, ServingEngine};
+use vta::graph::resnet::{resnet_mini, synth_input};
+use vta::graph::style::style_net;
+use vta::graph::{fuse, partition, Graph, Op, PartitionPolicy, Placement};
+use vta::runtime::VtaRuntime;
+use vta::util::{Tensor, XorShiftRng};
+
+/// CPU-only output of a graph — the golden reference.
+fn cpu_only_output(cfg: &VtaConfig, mut g: Graph, input: &Tensor<i8>) -> Tensor<i8> {
+    partition(&mut g, &PartitionPolicy::cpu_only());
+    let mut ex = Executor::new(VtaRuntime::new(cfg, 256 << 20), CpuBackend::Native);
+    ex.run(&g, input).unwrap().output
+}
+
+fn policy_for(cfg: &VtaConfig, offload_all: bool, vt: usize) -> PartitionPolicy {
+    let mut policy =
+        if offload_all { PartitionPolicy::offload_all(cfg) } else { PartitionPolicy::paper(cfg) };
+    policy.virtual_threads = vt;
+    policy
+}
+
+/// The tentpole gate, conv-heavy workload: fused mini-resnet (two
+/// residual blocks collapse into `conv+add+relu` chains) is bit-exact
+/// against the unfused CPU reference across vt = 1 / vt = 2 and the
+/// paper-default vs offload-all partition policies — and the fused
+/// nodes genuinely execute on the VTA.
+#[test]
+fn fused_resnet_mini_matches_reference_across_vt_and_policies() {
+    let cfg = VtaConfig::pynq();
+    let input = synth_input(2001, 1, 3, 16, 16);
+    let expect = cpu_only_output(&cfg, resnet_mini(1, 16, 42).unwrap(), &input);
+
+    // The fused graph's CPU path (the registry reference for
+    // `FusedConv2d`) agrees with the unfused reference too.
+    let (fused_ref, n_ref) = fuse(resnet_mini(1, 16, 42).unwrap()).unwrap();
+    assert_eq!(n_ref, 4, "both residual blocks must fuse their add and relu");
+    assert_eq!(
+        cpu_only_output(&cfg, fused_ref, &input),
+        expect,
+        "FusedConv2d CPU reference diverged from the unfused graph"
+    );
+
+    for vt in [1usize, 2] {
+        for offload_all in [false, true] {
+            let (mut g, n) = fuse(resnet_mini(1, 16, 42).unwrap()).unwrap();
+            assert_eq!(n, 4, "vt={vt} offload_all={offload_all}: fusion count changed");
+            let (vta_nodes, _) = partition(&mut g, &policy_for(&cfg, offload_all, vt));
+            assert!(vta_nodes > 0, "vt={vt} offload_all={offload_all}: nothing offloaded");
+            // Fused chains must actually reach the VTA for the
+            // equivalence to mean anything (ic = 16 passes the paper
+            // policy's min-IC rule too).
+            assert_eq!(
+                g.nodes
+                    .iter()
+                    .filter(|n| n.op.kind() == "fused_conv2d" && n.placement == Placement::Vta)
+                    .count(),
+                2,
+                "vt={vt} offload_all={offload_all}: fused chains not placed on the VTA"
+            );
+            let mut ex = Executor::with_virtual_threads(
+                VtaRuntime::new(&cfg, 256 << 20),
+                CpuBackend::Native,
+                vt,
+            );
+            let got = ex.run(&g, &input).unwrap().output;
+            assert_eq!(
+                got, expect,
+                "vt={vt} offload_all={offload_all}: fused mini-resnet diverged from reference"
+            );
+        }
+    }
+}
+
+/// The tentpole gate, ALU-heavy workload: fused style transfer (five
+/// `conv+add` residual chains plus the `conv+shr+min` requant tail)
+/// is bit-exact across vt and policies, and the rewrite produced
+/// exactly the chain grammar the pass documents.
+#[test]
+fn fused_style_matches_reference_across_vt_and_policies() {
+    let cfg = VtaConfig::pynq();
+    let input = {
+        let mut rng = XorShiftRng::new(2002);
+        Tensor::from_vec(&[1, 3, 16, 16], rng.vec_i8(3 * 16 * 16, -16, 16)).unwrap()
+    };
+    let expect = cpu_only_output(&cfg, style_net(1, 16, 16, 42).unwrap(), &input);
+
+    // Chain-shape audit on one fused instance: 5 residual chains, one
+    // shr+min tail, nothing else.
+    let (audit, n_audit) = fuse(style_net(1, 16, 16, 42).unwrap()).unwrap();
+    assert_eq!(n_audit, 7, "5 residual adds + the shr and min of the requant tail");
+    let tail = audit
+        .nodes
+        .iter()
+        .find(|n| n.name == "out.conv+shr+min")
+        .expect("requant tail fused under its documented name");
+    let Op::FusedConv2d { steps, .. } = &tail.op else {
+        panic!("tail is not a fused conv: {:?}", tail.op)
+    };
+    assert_eq!(steps[..], [FusedStep::ShrImm { shift: 1 }, FusedStep::MinImm { imm: 100 }]);
+    let residual_chains = audit
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(&n.op, Op::FusedConv2d { steps, .. } if steps[..] == [FusedStep::AddResidual])
+        })
+        .count();
+    assert_eq!(residual_chains, 5, "every fast-style residual block fuses as conv+add");
+
+    for vt in [1usize, 2] {
+        for offload_all in [false, true] {
+            let (mut g, n) = fuse(style_net(1, 16, 16, 42).unwrap()).unwrap();
+            assert_eq!(n, 7, "vt={vt} offload_all={offload_all}: fusion count changed");
+            let (vta_nodes, _) = partition(&mut g, &policy_for(&cfg, offload_all, vt));
+            assert!(vta_nodes > 0, "vt={vt} offload_all={offload_all}: nothing offloaded");
+            assert_eq!(
+                g.nodes
+                    .iter()
+                    .filter(|n| n.op.kind() == "fused_conv2d" && n.placement == Placement::Vta)
+                    .count(),
+                6,
+                "vt={vt} offload_all={offload_all}: fused chains not placed on the VTA"
+            );
+            let mut ex = Executor::with_virtual_threads(
+                VtaRuntime::new(&cfg, 256 << 20),
+                CpuBackend::Native,
+                vt,
+            );
+            let got = ex.run(&g, &input).unwrap().output;
+            assert_eq!(
+                got, expect,
+                "vt={vt} offload_all={offload_all}: fused style diverged from reference"
+            );
+        }
+    }
+}
+
+/// One residual block: `in → c1 → c2 → add(+in) → relu`, the minimal
+/// graph where fusion rewrites something.
+fn residual_block(seed: u64) -> Graph {
+    let p = vta::compiler::Conv2dParams {
+        h: 8,
+        w: 8,
+        ic: 16,
+        oc: 16,
+        k: 3,
+        s: 1,
+        requant: Requant { shift: 6, relu: false },
+    };
+    let mut g = Graph::new();
+    let x = g.add("in", Op::Input { shape: vec![1, 16, 8, 8] }, &[]).unwrap();
+    let mut rng = XorShiftRng::new(seed);
+    let c1 = g.add("c1", Op::Conv2d { p }, &[x]).unwrap();
+    g.set_weights(c1, Tensor::from_vec(&[16, 16, 3, 3], rng.vec_i8(16 * 16 * 9, -4, 4)).unwrap());
+    let c2 = g.add("c2", Op::Conv2d { p }, &[c1]).unwrap();
+    g.set_weights(c2, Tensor::from_vec(&[16, 16, 3, 3], rng.vec_i8(16 * 16 * 9, -4, 4)).unwrap());
+    let add = g.add("add", Op::Add, &[c2, x]).unwrap();
+    let _r = g.add("relu", Op::Relu, &[add]).unwrap();
+    g
+}
+
+/// Fused chains are first-class plan-cache citizens: a fused
+/// `conv+add+relu` node keys **differently** from the unfused conv
+/// with identical params and weights, the untouched upstream conv
+/// **shares** its plan across the fused and unfused graph, and
+/// hit/miss counters stay exact while one engine serves both variants
+/// — across vt = 1 and vt = 2.
+#[test]
+fn fused_plan_keys_are_distinct_and_cache_counters_stay_exact() {
+    let cfg = VtaConfig::pynq();
+    let input = {
+        let mut rng = XorShiftRng::new(2003);
+        Tensor::from_vec(&[1, 16, 8, 8], rng.vec_i8(16 * 64, -8, 8)).unwrap()
+    };
+    let expect = cpu_only_output(&cfg, residual_block(9001), &input);
+
+    for vt in [1usize, 2] {
+        let mut unfused = residual_block(9001);
+        let uf_vta = partition(&mut unfused, &policy_for(&cfg, true, vt)).0;
+        assert_eq!(uf_vta, 4, "vt={vt}: offload-all places c1, c2, add, relu");
+
+        let (mut fused, n) = fuse(residual_block(9001)).unwrap();
+        assert_eq!(n, 2, "vt={vt}: the block's add and relu fuse into the conv");
+        let f_vta = partition(&mut fused, &policy_for(&cfg, true, vt)).0;
+        assert_eq!(f_vta, 2, "vt={vt}: offload-all places c1 and the fused chain");
+
+        let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, vt, 64);
+        let by_name = |g: &Graph, name: &str| -> usize {
+            g.nodes.iter().position(|n| n.name == name).unwrap_or_else(|| panic!("{name}?"))
+        };
+        // Same conv params, same weights, same config — but the fused
+        // chain must never collide with the plain conv's plan.
+        let k_plain = eng.plan_key(&unfused, &unfused.nodes[by_name(&unfused, "c2")]);
+        let k_fused = eng.plan_key(&fused, &fused.nodes[by_name(&fused, "c2+add+relu")]);
+        assert_ne!(k_plain, k_fused, "vt={vt}: fused and unfused plans share a key");
+        // The untouched upstream conv is byte-identical in both graphs
+        // and legitimately shares one plan.
+        assert_eq!(
+            eng.plan_key(&unfused, &unfused.nodes[by_name(&unfused, "c1")]),
+            eng.plan_key(&fused, &fused.nodes[by_name(&fused, "c1")]),
+            "vt={vt}: identical conv must share its plan across graph variants"
+        );
+        // All four unfused keys are distinct (different weights /
+        // different op kinds), so compile counts below are exact.
+        let uf_unique = unfused
+            .nodes
+            .iter()
+            .filter(|n| n.placement == Placement::Vta)
+            .map(|n| eng.plan_key(&unfused, n))
+            .collect::<HashSet<_>>()
+            .len();
+        assert_eq!(uf_unique, 4, "vt={vt}: unfused block plans must not collide");
+
+        let r1 = eng.run_one(&unfused, &input).unwrap();
+        let s1 = eng.cache_stats();
+        assert_eq!(r1.output, expect, "vt={vt}: unfused request diverged");
+        assert_eq!(s1.misses, 4, "vt={vt}: one compile per unfused plan");
+        assert_eq!(s1.hits, 0, "vt={vt}: cold cache cannot hit");
+
+        let r2 = eng.run_one(&fused, &input).unwrap();
+        let s2 = eng.cache_stats();
+        assert_eq!(r2.output, expect, "vt={vt}: fused request diverged");
+        assert_eq!(s2.misses - s1.misses, 1, "vt={vt}: only the fused chain compiles");
+        assert_eq!(s2.hits - s1.hits, 1, "vt={vt}: the shared c1 plan hits");
+
+        // Warm replays of both variants: replay only, outputs stable.
+        let r3 = eng.run_one(&unfused, &input).unwrap();
+        let r4 = eng.run_one(&fused, &input).unwrap();
+        let s3 = eng.cache_stats();
+        assert_eq!(r3.output, expect);
+        assert_eq!(r4.output, expect);
+        assert_eq!(s3.misses, s2.misses, "vt={vt}: warm requests must not compile");
+        assert_eq!(s3.hits - s2.hits, 6, "vt={vt}: every warm lookup hits (4 + 2)");
+    }
+}
+
+/// The fused style graph runs through `ServingEngine`: all six fused
+/// chains land in the plan cache under their own kind, the first
+/// request matches the CPU reference, and a warm request is pure
+/// replay.
+#[test]
+fn fused_style_serving_caches_fused_plans() {
+    let cfg = VtaConfig::pynq();
+    let input = {
+        let mut rng = XorShiftRng::new(2004);
+        Tensor::from_vec(&[1, 3, 16, 16], rng.vec_i8(3 * 16 * 16, -16, 16)).unwrap()
+    };
+    let expect = cpu_only_output(&cfg, style_net(1, 16, 16, 42).unwrap(), &input);
+
+    let (mut g, n) = fuse(style_net(1, 16, 16, 42).unwrap()).unwrap();
+    assert_eq!(n, 7);
+    partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    let mut eng = ServingEngine::new(&cfg, 256 << 20, CpuBackend::Native, 2, 64);
+    let r1 = eng.run_one(&g, &input).unwrap();
+    assert_eq!(r1.output, expect, "served fused style diverged from reference");
+    assert_eq!(
+        eng.cached_kinds().get("fused_conv2d"),
+        Some(&6),
+        "all six fused chains cached under their own kind"
+    );
+    let misses = eng.cache_stats().misses;
+    let r2 = eng.run_one(&g, &input).unwrap();
+    assert_eq!(r2.output, expect, "warm fused replay diverged");
+    assert_eq!(eng.cache_stats().misses, misses, "warm fused request re-compiled");
+}

@@ -222,7 +222,7 @@ fn resnet18_cpu_artifact_matches_native_executor() {
     use vta::exec::{CpuBackend, Executor};
     use vta::graph::{fuse, partition, resnet, PartitionPolicy};
 
-    let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap());
+    let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap()).unwrap();
     partition(&mut g, &PartitionPolicy::cpu_only());
     let input = resnet::synth_input(7, 1, 3, 224, 224);
 
