@@ -17,7 +17,10 @@
 //! style trace through 1/2/4 worker threads (each run self-verified
 //! bit-exactly against the simulated scheduler oracle, cache counters
 //! included) and an open-loop Poisson ramp with per-step latency
-//! percentiles and SLO attainment.
+//! percentiles and SLO attainment. The pipeline section then splits
+//! the same model stage-per-replica (2 and 4 stages), verifies both
+//! pipeline disciplines bit-exactly, and snapshots the deterministic
+//! per-stage counters plus the modeled streaming speedup.
 //!
 //! Run: `cargo bench --bench e2e_serving [-- --batch N] [--fast]
 //!       [--json PATH] [--check BASELINE] [--pin BASELINE]`
@@ -39,7 +42,8 @@ use vta::arch::VtaConfig;
 use vta::dse::TuningRecords;
 use vta::exec::serve::fnv1a64;
 use vta::exec::{
-    open_loop, serve_trace, CpuBackend, Executor, LoadgenOptions, Scheduler, SchedulerOptions,
+    open_loop, run_pipeline_threaded, serve_trace, CpuBackend, Executor, LoadgenOptions,
+    PipelineOptions, PipelinePartition, PipelineScheduler, Scheduler, SchedulerOptions,
     ServingEngine, ThreadedOptions, ThreadedReport,
 };
 use vta::graph::resnet::{self, synth_input};
@@ -399,6 +403,72 @@ fn main() {
         );
     }
 
+    // ---- pipeline parallelism: one model split across the pool --------
+    // The style graph split stage-per-replica (balanced on the roofline
+    // model), streamed through both pipeline disciplines: simulated
+    // (bit-exact vs the warm engine) and threaded (bit-exact vs the
+    // simulated oracle, per-stage cache counters included). The modeled
+    // K-stage streaming speedup over the 1-stage chain is deterministic
+    // and lands in the snapshot's pinned section.
+    println!("\n# pipeline parallelism: the style model split stage-per-replica");
+    println!(
+        "{:>8} {:>13} {:>15} {:>12} {:>17} {:>9}",
+        "stages", "makespan ms", "modeled speedup", "wall ms", "measured inf/s", "compiles"
+    );
+    let serial_makespan =
+        PipelinePartition::from_cuts(&cfg, &gs, &[]).modeled_makespan(style_inputs.len());
+    let parts: Vec<(usize, PipelinePartition)> =
+        [2usize, 4].iter().map(|&k| (k, PipelinePartition::balanced(&cfg, &gs, k))).collect();
+    let mut pipeline_rows: Vec<(usize, &PipelinePartition, f64, f64, f64, Vec<u64>)> = Vec::new();
+    for (k, part) in &parts {
+        let k = *k;
+        assert_eq!(part.len(), k, "style graph too shallow for {k} stages");
+        let mut popts = PipelineOptions::new(k);
+        popts.dram_size = 256 << 20;
+        let mut ps = PipelineScheduler::new(&cfg, CpuBackend::Native, popts.clone());
+        let piped = ps.run(&gs, part, &style_inputs).unwrap();
+        for (i, out) in piped.outputs.iter().enumerate() {
+            assert_eq!(
+                out, &warm3.outputs[i],
+                "{k}-stage pipeline diverged from the warm engine at request {i}"
+            );
+        }
+        let tp = run_pipeline_threaded(&cfg, &popts, &records, &gs, part, &style_inputs).unwrap();
+        for (i, out) in tp.outputs.iter().enumerate() {
+            assert_eq!(
+                out, &piped.outputs[i],
+                "threaded {k}-stage pipeline diverged from the simulated oracle at request {i}"
+            );
+        }
+        assert_eq!(
+            tp.cache, piped.cache,
+            "threaded {k}-stage per-stage cache counters fell out of step with the oracle"
+        );
+        let speedup = serial_makespan / part.modeled_makespan(style_inputs.len()).max(1e-12);
+        let misses: Vec<u64> = piped.cache.iter().map(|c| c.misses).collect();
+        println!(
+            "{k:>8} {:>13.2} {:>14.2}x {:>12.1} {:>17.1} {:>9}",
+            piped.makespan_seconds * 1e3,
+            speedup,
+            tp.wall.as_secs_f64() * 1e3,
+            tp.throughput_rps(),
+            misses.iter().sum::<u64>()
+        );
+        pipeline_rows.push((
+            k,
+            part,
+            speedup,
+            tp.wall.as_secs_f64() * 1e3,
+            tp.throughput_rps(),
+            misses,
+        ));
+    }
+    assert!(
+        pipeline_rows.iter().all(|(_, _, s, ..)| *s > 1.0),
+        "splitting the style model across stages must model a streaming win"
+    );
+    println!("pipeline outputs and per-stage cache counters match the oracle bit-exactly");
+
     // ---- serving snapshot: emit / diff BENCH_serving.json -------------
     let snapshot = render_snapshot(
         vta_s,
@@ -408,6 +478,7 @@ fn main() {
         &threaded,
         &thread_throughput,
         &load,
+        &pipeline_rows,
     );
     if let Some(path) = &json_path {
         std::fs::write(path, &snapshot).unwrap_or_else(|e| panic!("writing {path}: {e}"));
@@ -421,9 +492,23 @@ fn main() {
     }
 }
 
-/// Render the `BENCH_serving.json` snapshot. The `deterministic`
-/// section must be byte-reproducible across runs and hosts (counters,
-/// fingerprints, node counts); `measured` is wall-clock and varies.
+/// A latency percentile in milliseconds, or JSON `null` when the step
+/// had no samples (the loadgen reports NaN then — the hand-rolled JSON
+/// layer has no NaN, and `null` is the honest rendering).
+fn ms_or_null(seconds: f64) -> String {
+    if seconds.is_nan() {
+        "null".to_string()
+    } else {
+        format!("{:.4}", seconds * 1e3)
+    }
+}
+
+/// Render the `BENCH_serving.json` snapshot (schema 2: adds the
+/// pipeline-parallel section; ramp percentiles render `null` on
+/// no-sample steps). The `deterministic` section must be
+/// byte-reproducible across runs and hosts (counters, fingerprints,
+/// node counts, modeled speedups); `measured` is wall-clock and
+/// varies.
 #[allow(clippy::too_many_arguments)]
 fn render_snapshot(
     vta_nodes: usize,
@@ -433,6 +518,7 @@ fn render_snapshot(
     threaded: &ThreadedReport,
     thread_throughput: &[(usize, f64)],
     load: &vta::exec::LoadReport,
+    pipeline_rows: &[(usize, &PipelinePartition, f64, f64, f64, Vec<u64>)],
 ) -> String {
     let fps: Vec<String> = threaded
         .outputs
@@ -450,29 +536,54 @@ fn render_snapshot(
         .iter()
         .map(|s| {
             format!(
-                "      {{\"qps\": {:.3}, \"offered\": {}, \"shed\": {}, \"p50_ms\": {:.4}, \
-                 \"p99_ms\": {:.4}, \"p999_ms\": {:.4}, \"slo_attainment\": {:.4}, \
+                "      {{\"qps\": {:.3}, \"offered\": {}, \"shed\": {}, \"p50_ms\": {}, \
+                 \"p99_ms\": {}, \"p999_ms\": {}, \"slo_attainment\": {:.4}, \
                  \"throughput_rps\": {:.3}}}",
                 s.qps,
                 s.offered,
                 s.rejected,
-                s.p50 * 1e3,
-                s.p99 * 1e3,
-                s.p999 * 1e3,
+                ms_or_null(s.p50),
+                ms_or_null(s.p99),
+                ms_or_null(s.p999),
                 s.slo_attainment,
                 s.throughput_rps
             )
         })
         .collect();
+    let pipe_det: Vec<String> = pipeline_rows
+        .iter()
+        .map(|(k, part, speedup, _, _, misses)| {
+            let nodes: Vec<String> =
+                part.stages.iter().map(|s| s.nodes.len().to_string()).collect();
+            let handoff: Vec<String> =
+                part.stages.iter().map(|s| s.handoff_bytes.to_string()).collect();
+            let misses: Vec<String> = misses.iter().map(|m| m.to_string()).collect();
+            format!(
+                "      {{\"stages\": {k}, \"per_stage_nodes\": [{}], \
+                 \"per_stage_handoff_bytes\": [{}], \"per_stage_misses\": [{}], \
+                 \"modeled_speedup\": {speedup:.4}}}",
+                nodes.join(", "),
+                handoff.join(", "),
+                misses.join(", ")
+            )
+        })
+        .collect();
+    let pipe_meas: Vec<String> = pipeline_rows
+        .iter()
+        .map(|(k, _, _, wall_ms, rps, _)| {
+            format!("      {{\"stages\": {k}, \"wall_ms\": {wall_ms:.1}, \"throughput_rps\": {rps:.3}}}")
+        })
+        .collect();
     format!(
-        "{{\n  \"schema\": 1,\n  \"workload\": \"style-transfer-32x32\",\n  \
+        "{{\n  \"schema\": 2,\n  \"workload\": \"style-transfer-32x32\",\n  \
          \"deterministic\": {{\n    \"requests\": {},\n    \"vta_nodes\": {},\n    \
          \"cpu_nodes\": {},\n    \"unique_plans\": {},\n    \"hits\": {},\n    \
-         \"lookups\": {},\n    \"output_fp\": [{}]\n  }},\n  \"measured\": {{\n    \
+         \"lookups\": {},\n    \"output_fp\": [{}],\n    \"pipeline\": [\n{}\n    ]\n  }},\n  \
+         \"measured\": {{\n    \
          \"cache_hit_rate\": {:.6},\n    \"queue_wait_p50_ms\": {:.4},\n    \
          \"queue_wait_p99_ms\": {:.4},\n    \"service_p50_ms\": {:.4},\n    \
          \"service_p99_ms\": {:.4},\n    \"thread_sweep\": [\n{}\n    ],\n    \
-         \"ramp\": [\n{}\n    ]\n  }}\n}}\n",
+         \"ramp\": [\n{}\n    ],\n    \"pipeline\": [\n{}\n    ]\n  }}\n}}\n",
         inputs.len(),
         vta_nodes,
         cpu_nodes,
@@ -480,12 +591,14 @@ fn render_snapshot(
         oracle_cache.hits,
         lookups,
         fps.join(", "),
+        pipe_det.join(",\n"),
         hit_rate,
         threaded.queue_wait.percentile(0.50) * 1e3,
         threaded.queue_wait.percentile(0.99) * 1e3,
         threaded.service.percentile(0.50) * 1e3,
         threaded.service.percentile(0.99) * 1e3,
         thr.join(",\n"),
-        steps.join(",\n")
+        steps.join(",\n"),
+        pipe_meas.join(",\n")
     )
 }

@@ -27,10 +27,12 @@ pub use cpu_ops::{add_i8, dense_i8, global_avg_pool_i8, maxpool_i8, relu_i8};
 pub use executor::{CpuBackend, ExecError, ExecReport, Executor, NodeReport};
 pub use pjrt::{PjrtCache, PjrtError};
 pub use serve::{
-    open_loop, pipeline_schedule, run_threaded, serve_trace, BatchRecord, BatchReport, Completion,
-    LoadReport, LoadgenOptions, PipelineModel, PlanCache, PlanCacheStats, PlanKey, PoolHandle,
-    PoolReport, QpsStep, Scheduler, SchedulerOptions, ServeReport, ServingEngine, StepReport,
-    SubmitRejected, ThreadedOptions, ThreadedReport,
+    open_loop, pipeline_schedule, run_pipeline_threaded, run_threaded, serve_trace, BatchRecord,
+    BatchReport, Completion, LoadReport, LoadgenOptions, PipelineModel, PipelineOptions,
+    PipelinePartition, PipelineReport, PipelineScheduler, PipelineStage, PipelineThreadedReport,
+    PlanCache, PlanCacheStats, PlanKey, PoolHandle, PoolReport, QpsStep, Scheduler,
+    SchedulerOptions, ServeReport, ServingEngine, StepReport, SubmitRejected, ThreadedOptions,
+    ThreadedReport,
 };
 
 #[cfg(test)]

@@ -10,6 +10,14 @@
 //! replica's DRAM allocator history identical, which is what lets a
 //! plan compiled on one device byte-replicate onto the others
 //! ([`crate::compiler::CompiledNode::replicate_to`]).
+//!
+//! The pipeline scheduler ([`super::pipeline`]) instead runs one fully
+//! **independent** cache per stage: each graph node executes on exactly
+//! one stage, so the [`PlanKey`] space partitions across the stages by
+//! construction — no key is ever looked up on two stages, no plan is
+//! shared or replicated between them, and the per-stage (hits, misses)
+//! counters sum to exactly what a single-replica engine would count on
+//! the whole graph.
 
 use super::super::executor::ExecError;
 use crate::compiler::op::op_impl;

@@ -19,6 +19,39 @@ use super::threaded::PoolHandle;
 use crate::util::{percentile_sorted, Tensor, XorShiftRng};
 use std::time::{Duration, Instant};
 
+/// The RNG seed of one ramp step's arrival stream: element `step_idx`
+/// of the splitmix64 sequence seeded by `seed`. Splitmix64 mixes every
+/// bit of `(seed, step_idx)` through two rounds of xor-shift-multiply,
+/// so distinct steps get statistically independent streams — unlike
+/// the previous `seed ^ (step_idx * constant)`, where step 0 was the
+/// raw seed and XOR-of-multiples admitted cross-step stream collisions
+/// for adversarial seeds.
+pub(crate) fn step_seed(seed: u64, step_idx: u64) -> u64 {
+    let mut z = seed.wrapping_add(step_idx.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// `percentile_sorted`, except an empty sample set reports
+/// [`f64::NAN`] ("no samples") instead of a fake `0.0` — an all-shed
+/// step must not be indistinguishable from a zero-latency one.
+pub(crate) fn percentile_or_nan(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        f64::NAN
+    } else {
+        percentile_sorted(sorted, p)
+    }
+}
+
+/// The exponential inter-arrival gap (seconds) drawn from `rng` at
+/// rate `qps`; `1 - u` is in `(0, 1]` so the log never sees zero.
+/// Shared with the regression tests, which recompute a step's first
+/// gap to assert the measured wall span excludes it.
+pub(crate) fn arrival_gap(rng: &mut XorShiftRng, qps: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / qps
+}
+
 /// One step of a QPS ramp.
 #[derive(Clone, Copy, Debug)]
 pub struct QpsStep {
@@ -63,17 +96,30 @@ pub struct StepReport {
     /// Arrivals shed by admission control.
     pub rejected: u64,
     /// p50 end-to-end latency (seconds) over accepted requests.
+    /// [`f64::NAN`] when the step completed no requests (e.g. every
+    /// arrival was shed) — "no samples", distinct from zero latency.
     pub p50: f64,
-    /// p99 end-to-end latency (seconds).
+    /// p99 end-to-end latency (seconds); NaN when no samples.
     pub p99: f64,
-    /// p99.9 end-to-end latency (seconds).
+    /// p99.9 end-to-end latency (seconds); NaN when no samples.
     pub p999: f64,
     /// Fraction of *offered* requests completed within the SLO.
     pub slo_attainment: f64,
     /// Completed requests over the step's wall span (includes drain).
     pub throughput_rps: f64,
-    /// Wall span of the step: first arrival to last completion.
+    /// Wall span of the step: first arrival to last completion. The
+    /// span opens at the first submit — idle time waiting out the
+    /// first exponential gap is *not* load, and charging it would
+    /// deflate `throughput_rps` at low QPS.
     pub wall: Duration,
+}
+
+impl StepReport {
+    /// True when the step completed at least one request (the latency
+    /// percentiles are real samples, not the no-sample NaN marker).
+    pub fn has_samples(&self) -> bool {
+        !self.p50.is_nan()
+    }
 }
 
 /// Whole-ramp outcome.
@@ -108,23 +154,29 @@ pub fn open_loop(
     let mut report = LoadReport::default();
     let mut seq = 0u64;
     for (step_idx, step) in opts.steps.iter().enumerate() {
-        let mut rng = XorShiftRng::new(opts.seed ^ (step_idx as u64).wrapping_mul(0x9E37_79B9));
+        let mut rng = XorShiftRng::new(step_seed(opts.seed, step_idx as u64));
         let qps = step.qps.max(1e-6);
-        let t0 = Instant::now();
+        // Two clocks: `sched0` anchors the arrival *schedule* (gaps
+        // are offsets from the step's start), while the measured span
+        // opens at the first submit — `wall` is documented as "first
+        // arrival to last completion", so the idle wait for the first
+        // exponential gap must not count.
+        let sched0 = Instant::now();
+        let mut span_start: Option<Instant> = None;
         let mut next_arrival = Duration::ZERO;
         let mut ids = Vec::with_capacity(step.requests);
         let mut rejected = 0u64;
 
         for _ in 0..step.requests {
             // Exponential inter-arrival gap; 1 - u is in (0, 1].
-            let gap = -(1.0 - rng.next_f64()).ln() / qps;
-            next_arrival += Duration::from_secs_f64(gap);
-            let elapsed = t0.elapsed();
+            next_arrival += Duration::from_secs_f64(arrival_gap(&mut rng, qps));
+            let elapsed = sched0.elapsed();
             if next_arrival > elapsed {
                 std::thread::sleep(next_arrival - elapsed);
             }
             let input = make_input(seq);
             seq += 1;
+            span_start.get_or_insert_with(Instant::now);
             match handle.try_submit(input) {
                 Ok(id) => ids.push(id),
                 Err(_) => rejected += 1,
@@ -136,7 +188,7 @@ pub fn open_loop(
 
         // Quiesce: wait out this step's accepted requests.
         handle.wait_all();
-        let wall = t0.elapsed();
+        let wall = span_start.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
 
         let mut latencies: Vec<f64> = ids
             .iter()
@@ -157,9 +209,9 @@ pub fn open_loop(
             offered,
             accepted: ids.len() as u64,
             rejected,
-            p50: percentile_sorted(&latencies, 0.50),
-            p99: percentile_sorted(&latencies, 0.99),
-            p999: percentile_sorted(&latencies, 0.999),
+            p50: percentile_or_nan(&latencies, 0.50),
+            p99: percentile_or_nan(&latencies, 0.99),
+            p999: percentile_or_nan(&latencies, 0.999),
             slo_attainment: if offered == 0 { 1.0 } else { attained as f64 / offered as f64 },
             throughput_rps: if secs <= 0.0 { 0.0 } else { ids.len() as f64 / secs },
             wall,

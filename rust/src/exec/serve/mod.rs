@@ -65,11 +65,20 @@
 //!   and per-group plan directories (threaded), all deployed from a
 //!   [`FleetSpec`](fleet::FleetSpec) that `vta dse --fleet` searches
 //!   for and `vta serve --fleet` consumes.
+//! * [`PipelineScheduler`] / [`run_pipeline_threaded`] — **graph-level
+//!   pipeline parallelism**: one model split across pool replicas into
+//!   roofline-balanced contiguous stage groups of its ASAP levels
+//!   ([`PipelinePartition`]), stage-per-replica execution with the
+//!   boundary live set as the only cross-device (DRAM) traffic, and
+//!   multiple requests in flight so streamed latency approaches
+//!   `max(stage)` instead of `sum(stages)` — again simulated oracle +
+//!   real threads, bit-exact.
 
 mod cache;
 mod engine;
 pub mod fleet;
 mod loadgen;
+mod pipeline;
 mod report;
 mod run;
 mod schedule;
@@ -79,6 +88,10 @@ mod threaded;
 pub use cache::{plan_key_for, PlanCache, PlanCacheStats, PlanKey};
 pub use engine::ServingEngine;
 pub use loadgen::{open_loop, LoadReport, LoadgenOptions, QpsStep, StepReport};
+pub use pipeline::{
+    run_pipeline_threaded, PipelineOptions, PipelinePartition, PipelineReport, PipelineScheduler,
+    PipelineStage, PipelineThreadedReport,
+};
 pub use report::{BatchReport, ServeReport};
 pub use schedule::{pipeline_schedule, PipelineModel};
 pub use scheduler::{BatchRecord, PoolReport, Scheduler, SchedulerOptions};

@@ -1,0 +1,888 @@
+//! Graph-level pipeline parallelism: one model split across pool
+//! replicas, stage-per-replica, with multiple requests in flight.
+//!
+//! The paper's task-ISA keeps heterogeneous *modules* busy through
+//! explicit pipeline parallelism (§2.3); this module lifts the same
+//! idea one level up, to the serving pool: the ASAP levels of
+//! [`crate::graph::stages`] are grouped into `K` **contiguous pipeline
+//! stages**, each stage is owned by one pool replica, and the only
+//! cross-device traffic is the stage-boundary tensor set handed off
+//! through DRAM. With `M` requests streaming through, the pipelined
+//! makespan approaches `max(stage)` per request instead of
+//! `sum(stages)` — pool depth now buys *latency* on one model, not
+//! just throughput across models, and a model whose resident plans
+//! exceed one replica's DRAM becomes servable by splitting.
+//!
+//! Three layers, mirroring the pool scheduler's discipline split:
+//!
+//! * [`PipelinePartition`] — the stage partitioner. Levels are grouped
+//!   by a dynamic program minimizing the *maximum* per-stage cost
+//!   under the same roofline cost model the fleet router ranks
+//!   variants with ([`node_model_cycles`]); the boundary live sets
+//!   (`consumes` / `carries`) are computed exactly, so every stage
+//!   knows precisely which tensors it must receive and forward.
+//! * [`PipelineScheduler`] — the **simulated-time** discipline and the
+//!   deterministic oracle: per-stage replicas with **independent**
+//!   plan caches (each stage compiles only its own subgraph's plans —
+//!   the plan-key space is partitioned by construction, so nothing is
+//!   replicated pool-wide), the classic pipeline recurrence
+//!   `finish[r][k] = max(handoff[r][k-1], finish[r-1][k]) + dur[r][k]`
+//!   for modeled time, and per-stage occupancy / handoff counters.
+//! * [`run_pipeline_threaded`] — the **real-threads** discipline: one
+//!   OS worker per stage, linked by bounded channels carrying the
+//!   boundary tensors; shutdown cascades by dropping senders. Workers
+//!   execute through the same stage-restricted walker
+//!   ([`run_graph_partial`](super::run)) over per-stage [`PlanCache`]s
+//!   driven in the same FIFO order as the simulated oracle, so outputs
+//!   *and* per-stage cache counters are bit-identical to it.
+
+use super::super::executor::{lift_compile_err, CpuBackend, ExecError, NodeReport};
+use super::cache::{PlanCache, PlanCacheStats, PlanKey};
+use super::fleet::node_model_cycles;
+use super::run::{plan_keys_for, run_graph_partial, tuned_schedules_for, VtaNodeExec};
+use crate::arch::VtaConfig;
+use crate::compiler::op::{config_fingerprint, execute_compiled, op_impl};
+use crate::compiler::ScheduleChoice;
+use crate::dse::records::TuningRecords;
+use crate::graph::{node_stages, stages, Graph, NodeId};
+use crate::metrics::{PipelineMetrics, StageCounter};
+use crate::runtime::{DevicePool, VtaRuntime};
+use crate::sim::SimStats;
+use crate::util::Tensor;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// The stage partitioner.
+// ---------------------------------------------------------------------
+
+/// One pipeline stage: a contiguous run of ASAP levels, owned by one
+/// pool replica.
+#[derive(Clone, Debug)]
+pub struct PipelineStage {
+    /// Stage index (replica index).
+    pub index: usize,
+    /// Half-open ASAP-level range `[lo, hi)` this stage owns.
+    pub levels: (usize, usize),
+    /// Node ids executed here, in dependence order.
+    pub nodes: Vec<NodeId>,
+    /// The stage's slice of the ASAP levels (the `level_order` the
+    /// stage-restricted walker executes).
+    pub level_order: Vec<Vec<NodeId>>,
+    /// Live tensors this stage must *receive* from upstream: every
+    /// value produced before `lo` that a node at level ≥ `lo` reads.
+    /// Empty for stage 0.
+    pub consumes: Vec<NodeId>,
+    /// Live tensors this stage must *forward* downstream: every value
+    /// produced before `hi` that a node at level ≥ `hi` reads (plus
+    /// the graph output, which must reach the last stage). Includes
+    /// pass-through values this stage merely relays. Empty for the
+    /// last stage.
+    pub carries: Vec<NodeId>,
+    /// Roofline-modeled cycles of this stage's nodes
+    /// ([`node_model_cycles`] summed over the stage).
+    pub model_cycles: u64,
+    /// [`Self::model_cycles`] in seconds of the config's clock.
+    pub model_seconds: f64,
+    /// Bytes handed off downstream per request (int8: one byte per
+    /// element of every carried tensor).
+    pub handoff_bytes: u64,
+    /// Modeled seconds of the downstream DRAM handoff (store on the
+    /// producer + load on the consumer through the shared port).
+    pub handoff_seconds: f64,
+}
+
+/// A whole-graph pipeline split: contiguous stage ranges covering
+/// every ASAP level, with exact boundary live sets.
+#[derive(Clone, Debug)]
+pub struct PipelinePartition {
+    /// The stages, in pipeline order.
+    pub stages: Vec<PipelineStage>,
+}
+
+impl PipelinePartition {
+    /// Balance the graph's ASAP levels into (at most) `k` contiguous
+    /// stages, minimizing the maximum roofline-modeled stage cost —
+    /// the same cost model the fleet [`Router`](super::fleet::Router)
+    /// ranks variants with, applied per stage. `k` clamps to the
+    /// number of levels (a stage needs at least one level).
+    pub fn balanced(cfg: &VtaConfig, g: &Graph, k: usize) -> Self {
+        assert!(k >= 1, "a pipeline needs at least one stage");
+        let level_order = stages(g);
+        let nlevels = level_order.len().max(1);
+        let k = k.min(nlevels);
+
+        // Per-level roofline cost (every node: CPU-resident nodes go
+        // through the same model — the balancer weighs *work*, and an
+        // all-CPU stage must not look free).
+        let cost: Vec<u64> = level_order
+            .iter()
+            .map(|lv| {
+                lv.iter().map(|&id| node_model_cycles(cfg, g, &g.nodes[id])).sum::<u64>()
+            })
+            .collect();
+        let mut prefix = vec![0u64; nlevels + 1];
+        for (l, &c) in cost.iter().enumerate() {
+            prefix[l + 1] = prefix[l].saturating_add(c);
+        }
+        let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // cost of levels [a, b)
+
+        // DP over (stages used, levels covered): best[j][i] = minimal
+        // achievable max-stage-cost splitting the first `i` levels into
+        // `j` contiguous stages. O(K·L²) — L is graph depth, tiny.
+        let mut best = vec![vec![u64::MAX; nlevels + 1]; k + 1];
+        let mut cut = vec![vec![0usize; nlevels + 1]; k + 1];
+        for i in 1..=nlevels {
+            best[1][i] = seg(0, i);
+        }
+        for j in 2..=k {
+            for i in j..=nlevels {
+                for c in (j - 1)..i {
+                    let m = best[j - 1][c].max(seg(c, i));
+                    if m < best[j][i] {
+                        best[j][i] = m;
+                        cut[j][i] = c;
+                    }
+                }
+            }
+        }
+        let mut cuts = Vec::with_capacity(k - 1);
+        let mut i = nlevels;
+        for j in (2..=k).rev() {
+            let c = cut[j][i];
+            cuts.push(c);
+            i = c;
+        }
+        cuts.reverse();
+        Self::from_cuts(cfg, g, &cuts)
+    }
+
+    /// Build a partition from explicit interior level boundaries:
+    /// `cuts` must be strictly increasing, each in `1..levels`; stage
+    /// `s` owns levels `[cuts[s-1], cuts[s])` (with 0 and the level
+    /// count as the outer bounds). An empty `cuts` is the trivial
+    /// 1-stage pipeline. Exposed so tests (and ablations) can pit a
+    /// deliberately unbalanced split against [`Self::balanced`].
+    pub fn from_cuts(cfg: &VtaConfig, g: &Graph, cuts: &[usize]) -> Self {
+        let level_order = stages(g);
+        let nlevels = level_order.len();
+        let mut bounds = Vec::with_capacity(cuts.len() + 2);
+        bounds.push(0usize);
+        bounds.extend_from_slice(cuts);
+        bounds.push(nlevels);
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "pipeline cuts must be strictly increasing level bounds");
+        }
+        assert!(*bounds.last().unwrap() == nlevels, "cuts must lie inside the level range");
+
+        let lvl = node_stages(g);
+        let out_id = g.output().expect("non-empty graph");
+        // live(c) = values produced below cut `c` still needed at or
+        // above it. The graph output gets a virtual consumer past the
+        // last level so it always reaches the final stage.
+        let live_at = |c: usize| -> Vec<NodeId> {
+            let mut live: Vec<NodeId> = g
+                .nodes
+                .iter()
+                .filter(|n| {
+                    lvl[n.id] < c
+                        && (n.id == out_id
+                            || g.nodes.iter().any(|m| lvl[m.id] >= c && m.inputs.contains(&n.id)))
+                })
+                .map(|n| n.id)
+                .collect();
+            live.sort_unstable();
+            live
+        };
+
+        let nstages = bounds.len() - 1;
+        let stages = (0..nstages)
+            .map(|s| {
+                let (lo, hi) = (bounds[s], bounds[s + 1]);
+                let slice = &level_order[lo..hi];
+                let nodes: Vec<NodeId> = slice.iter().flatten().copied().collect();
+                let consumes = if s == 0 { Vec::new() } else { live_at(lo) };
+                let carries = if s + 1 == nstages { Vec::new() } else { live_at(hi) };
+                let handoff_bytes: u64 = carries
+                    .iter()
+                    .map(|&id| g.nodes[id].shape.iter().product::<usize>() as u64)
+                    .sum();
+                let model_cycles: u64 =
+                    nodes.iter().map(|&id| node_model_cycles(cfg, g, &g.nodes[id])).sum();
+                // Handoff: the boundary set is stored by the producer
+                // and loaded by the consumer through the DRAM port.
+                let handoff_cycles = if carries.is_empty() {
+                    0.0
+                } else {
+                    (handoff_bytes as f64 / cfg.dram.bytes_per_cycle).ceil()
+                        + 2.0 * cfg.dram.latency as f64
+                };
+                PipelineStage {
+                    index: s,
+                    levels: (lo, hi),
+                    nodes,
+                    level_order: slice.to_vec(),
+                    consumes,
+                    carries,
+                    model_cycles,
+                    model_seconds: model_cycles as f64 / cfg.clock_hz,
+                    handoff_bytes,
+                    handoff_seconds: handoff_cycles / cfg.clock_hz,
+                }
+            })
+            .collect();
+        PipelinePartition { stages }
+    }
+
+    /// Stage count.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// True for the degenerate 1-stage pipeline.
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// The maximum roofline-modeled stage time — the pipeline's
+    /// steady-state bottleneck (what per-request *throughput* tends to
+    /// as the in-flight window deepens).
+    pub fn bottleneck_seconds(&self) -> f64 {
+        self.stages.iter().map(|s| s.model_seconds).fold(0.0, f64::max)
+    }
+
+    /// Roofline-modeled makespan of streaming `requests` requests
+    /// through the pipeline (all arriving at t = 0): the classic
+    /// recurrence — a stage starts request `r` when the request's
+    /// handoff lands *and* the stage finished request `r-1`. Purely
+    /// analytical (no measured durations), so it is deterministic; the
+    /// balancer-beats-unbalanced assertions compare partitions on it.
+    pub fn modeled_makespan(&self, requests: usize) -> f64 {
+        let k = self.stages.len();
+        if k == 0 || requests == 0 {
+            return 0.0;
+        }
+        let mut prev = vec![0.0f64; k]; // finish[r-1][*]
+        for _ in 0..requests {
+            let mut cur = vec![0.0f64; k];
+            for (s, stage) in self.stages.iter().enumerate() {
+                let arrive = if s == 0 {
+                    0.0
+                } else {
+                    cur[s - 1] + self.stages[s - 1].handoff_seconds
+                };
+                cur[s] = arrive.max(prev[s]) + stage.model_seconds;
+            }
+            prev = cur;
+        }
+        prev[k - 1]
+    }
+
+    /// One-line description per stage (CLI / bench reporting).
+    pub fn describe(&self) -> Vec<String> {
+        self.stages
+            .iter()
+            .map(|s| {
+                format!(
+                    "stage {}: levels {}..{}, {} node(s), modeled {:.2} ms, \
+                     handoff {} tensor(s) / {} B",
+                    s.index,
+                    s.levels.0,
+                    s.levels.1,
+                    s.nodes.len(),
+                    s.model_seconds * 1e3,
+                    s.carries.len(),
+                    s.handoff_bytes
+                )
+            })
+            .collect()
+    }
+}
+
+/// Assemble the live-out handoff of `stage` from the stage's value
+/// table: carried tensors were either produced here or passed through
+/// from the incoming handoff (both are `Some` in `values`).
+fn carry_out(
+    stage: &PipelineStage,
+    values: &mut [Option<Tensor<i8>>],
+) -> HashMap<NodeId, Tensor<i8>> {
+    stage
+        .carries
+        .iter()
+        .map(|&id| (id, values[id].take().expect("carried value produced or seeded")))
+        .collect()
+}
+
+/// Stage duration charged to the owning replica: host wall plus
+/// simulated accelerator time of every node executed (the same
+/// accounting [`pipeline_schedule`](super::pipeline_schedule) uses per
+/// node).
+fn stage_duration(stage: &PipelineStage, reports: &[Option<NodeReport>]) -> (f64, u64) {
+    let mut secs = 0.0;
+    let mut cycles = 0u64;
+    for &id in &stage.nodes {
+        let r = reports[id].as_ref().expect("stage nodes executed");
+        secs += r.wall.as_secs_f64() + r.sim_seconds;
+        cycles += r.stats.as_ref().map(|s| s.total_cycles).unwrap_or(0);
+    }
+    (secs, cycles)
+}
+
+// ---------------------------------------------------------------------
+// The simulated-time pipeline scheduler (the deterministic oracle).
+// ---------------------------------------------------------------------
+
+/// Knobs shared by both pipeline disciplines.
+#[derive(Clone, Debug)]
+pub struct PipelineOptions {
+    /// Pipeline stages (= pool replicas, = worker threads).
+    pub stages: usize,
+    /// Plan-cache capacity per stage. Per-stage caches are
+    /// **independent**, not lockstep: each stage compiles only its own
+    /// subgraph's plans, so the [`PlanKey`] space is partitioned
+    /// across stages by construction.
+    pub cache_capacity: usize,
+    /// Virtual threads VTA nodes are lowered with, ∈ {1, 2}.
+    pub virtual_threads: usize,
+    /// Device DRAM bytes per replica.
+    pub dram_size: usize,
+    /// Bounded inter-stage queue depth (threaded discipline): how many
+    /// handoffs may wait between adjacent stages — the in-flight
+    /// window that lets the pipeline fill.
+    pub queue_capacity: usize,
+}
+
+impl PipelineOptions {
+    /// Defaults for a `stages`-deep pipeline.
+    pub fn new(stages: usize) -> Self {
+        PipelineOptions {
+            stages: stages.max(1),
+            cache_capacity: 64,
+            virtual_threads: 2,
+            dram_size: 256 << 20,
+            queue_capacity: 4,
+        }
+    }
+}
+
+/// Outcome of streaming a request trace through the pipeline
+/// (simulated discipline).
+#[derive(Debug)]
+pub struct PipelineReport {
+    /// Per-request outputs, in submission order — bit-identical to the
+    /// single-replica engine's.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Per-request modeled completion times (all arrivals at t = 0).
+    pub completions: Vec<f64>,
+    /// Modeled end of the stream: the last stage's last finish.
+    pub makespan_seconds: f64,
+    /// Per-stage plan-cache counters for this run (independent caches;
+    /// the threaded discipline must land on identical values).
+    pub cache: Vec<PlanCacheStats>,
+    /// Per-stage occupancy / handoff counters.
+    pub metrics: PipelineMetrics,
+    /// Real host wall time of the drain.
+    pub host_wall: Duration,
+}
+
+impl PipelineReport {
+    /// Requests per modeled second over the stream.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_seconds > 0.0 {
+            self.outputs.len() as f64 / self.makespan_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The simulated-time pipeline runtime: `K` replicas, one stage each,
+/// independent per-stage plan caches, modeled pipeline timing. Serves
+/// as the deterministic oracle for [`run_pipeline_threaded`].
+pub struct PipelineScheduler {
+    pool: DevicePool,
+    caches: Vec<PlanCache>,
+    cpu: CpuBackend,
+    opts: PipelineOptions,
+    config_fp: u64,
+    records: TuningRecords,
+}
+
+impl PipelineScheduler {
+    /// Build over `opts.stages` fresh replicas of `cfg`.
+    pub fn new(cfg: &VtaConfig, cpu: CpuBackend, opts: PipelineOptions) -> Self {
+        Self::with_records(cfg, cpu, opts, TuningRecords::new())
+    }
+
+    /// Like [`Self::new`], seeded with a `vta dse` tuning-record store.
+    pub fn with_records(
+        cfg: &VtaConfig,
+        cpu: CpuBackend,
+        opts: PipelineOptions,
+        records: TuningRecords,
+    ) -> Self {
+        assert!(
+            opts.virtual_threads == 1 || opts.virtual_threads == 2,
+            "1 or 2 virtual threads"
+        );
+        let pool = DevicePool::new(cfg, opts.dram_size, opts.stages.max(1));
+        let caches = (0..opts.stages.max(1)).map(|_| PlanCache::new(opts.cache_capacity)).collect();
+        PipelineScheduler {
+            pool,
+            caches,
+            cpu,
+            opts,
+            config_fp: config_fingerprint(cfg),
+            records,
+        }
+    }
+
+    /// Stage count (= replicas).
+    pub fn stages(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Per-stage cumulative plan-cache counters.
+    pub fn cache_stats(&self) -> Vec<PlanCacheStats> {
+        self.caches.iter().map(|c| c.stats()).collect()
+    }
+
+    /// Stream `inputs` through the pipeline described by `partition`
+    /// (which must have exactly [`Self::stages`] stages): every
+    /// request's stage `k` executes on replica `k`, handoffs carry the
+    /// exact boundary live set, and modeled times follow the pipeline
+    /// recurrence. Outputs are bit-identical to the single-replica
+    /// engine — execution is exact, only timing is modeled.
+    pub fn run(
+        &mut self,
+        g: &Graph,
+        partition: &PipelinePartition,
+        inputs: &[Tensor<i8>],
+    ) -> Result<PipelineReport, ExecError> {
+        assert_eq!(
+            partition.stages.len(),
+            self.pool.len(),
+            "partition stage count must match the pipeline pool"
+        );
+        let t0 = Instant::now();
+        let k = partition.stages.len();
+        let vt = self.opts.virtual_threads;
+        let keys = plan_keys_for(self.config_fp, vt, g);
+        let schedules = tuned_schedules_for(&self.records, self.config_fp, vt, g);
+        let stats0 = self.cache_stats();
+        let mut metrics = PipelineMetrics::new(k);
+        for (counter, stage) in metrics.stages.iter_mut().zip(&partition.stages) {
+            counter.nodes = stage.nodes.len() as u64;
+        }
+
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut dur = vec![vec![0.0f64; k]; inputs.len()];
+        // Requests flow in order; stage k therefore sees the same FIFO
+        // request sequence as a threaded stage worker — per-stage cache
+        // counter equality with the threaded discipline is by
+        // construction.
+        for (r, input) in inputs.iter().enumerate() {
+            let mut live: HashMap<NodeId, Tensor<i8>> = HashMap::new();
+            for (s, stage) in partition.stages.iter().enumerate() {
+                let (mut values, reports) = run_graph_partial(
+                    &mut StageRun { sched: &mut *self, stage: s },
+                    g,
+                    (s == 0).then_some(input),
+                    &stage.level_order,
+                    &keys,
+                    &schedules,
+                    &live,
+                )?;
+                let (secs, cycles) = stage_duration(stage, &reports);
+                dur[r][s] = secs;
+                metrics.stages[s].record_request(
+                    secs,
+                    cycles,
+                    stage.carries.len() as u64,
+                    stage.handoff_bytes,
+                );
+                if s + 1 == k {
+                    let out_id = g.output().expect("non-empty graph");
+                    outputs.push(values[out_id].take().expect("output produced or carried"));
+                } else {
+                    live = carry_out(stage, &mut values);
+                }
+            }
+        }
+
+        // Modeled pipeline timing over the measured durations.
+        let mut completions = vec![0.0f64; inputs.len()];
+        let mut prev = vec![0.0f64; k];
+        for (r, d) in dur.iter().enumerate() {
+            let mut cur = vec![0.0f64; k];
+            for s in 0..k {
+                let arrive = if s == 0 {
+                    0.0
+                } else {
+                    cur[s - 1] + partition.stages[s - 1].handoff_seconds
+                };
+                cur[s] = arrive.max(prev[s]) + d[s];
+            }
+            completions[r] = cur[k - 1];
+            prev = cur;
+        }
+        let makespan = prev.last().copied().unwrap_or(0.0);
+
+        let stats1 = self.cache_stats();
+        let cache = stats0
+            .iter()
+            .zip(&stats1)
+            .map(|(a, b)| PlanCacheStats {
+                hits: b.hits - a.hits,
+                misses: b.misses - a.misses,
+                evictions: b.evictions - a.evictions,
+            })
+            .collect();
+        Ok(PipelineReport {
+            outputs,
+            completions,
+            makespan_seconds: makespan,
+            cache,
+            metrics,
+            host_wall: t0.elapsed(),
+        })
+    }
+}
+
+/// One stage's device view: the scheduler plus the replica that owns
+/// the stage — the pipeline's side of the shared graph walker. VTA
+/// nodes go through the stage's own (independent) plan cache and
+/// execute on the stage's replica.
+struct StageRun<'a> {
+    sched: &'a mut PipelineScheduler,
+    stage: usize,
+}
+
+impl VtaNodeExec for StageRun<'_> {
+    fn clock_hz(&self) -> f64 {
+        self.sched.pool.config().clock_hz
+    }
+
+    fn cpu_mut(&mut self) -> &mut CpuBackend {
+        &mut self.sched.cpu
+    }
+
+    fn exec_vta_node(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<(Tensor<i8>, SimStats), ExecError> {
+        let node = &g.nodes[id];
+        let entry = op_impl(&node.op);
+        let vt = self.sched.opts.virtual_threads;
+        // Split borrows: the stage's cache and the stage's replica are
+        // disjoint fields of the scheduler.
+        let PipelineScheduler { pool, caches, .. } = &mut *self.sched;
+        let rt = pool.device_mut(self.stage);
+        let compiled = caches[self.stage].get_or_compile(rt, key, |rt| {
+            entry
+                .compile(rt, g, node, vt, schedule.as_ref())
+                .map_err(|e| lift_compile_err(&node.name, e))
+        })?;
+        execute_compiled(entry, compiled, rt, inputs).map_err(|e| lift_compile_err(&node.name, e))
+    }
+}
+
+// ---------------------------------------------------------------------
+// The real-threads pipeline runtime.
+// ---------------------------------------------------------------------
+
+/// One request's handoff between adjacent stage workers: the boundary
+/// live set (or the first error, which passes through untouched so the
+/// pipeline drains instead of deadlocking).
+type InterMsg = (usize, Instant, Result<HashMap<NodeId, Tensor<i8>>, ExecError>);
+
+/// A finished request leaving the last stage: id, end-to-end wall
+/// latency (submit → final stage, stamped at completion), and the
+/// output or the first error it hit.
+type DoneMsg = (usize, Duration, Result<Tensor<i8>, ExecError>);
+
+/// Final report of one threaded pipeline run.
+#[derive(Debug)]
+pub struct PipelineThreadedReport {
+    /// Per-request outputs, in submission order — the vector compared
+    /// bit-for-bit against the simulated oracle's.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Per-request end-to-end wall latency (submit → final stage).
+    pub latencies: Vec<Duration>,
+    /// Per-stage plan-cache counters (must equal the oracle's).
+    pub cache: Vec<PlanCacheStats>,
+    /// Per-stage occupancy / handoff counters (`busy_seconds` is
+    /// measured wall here; the deterministic fields — requests,
+    /// sim_cycles, handoff — must equal the oracle's).
+    pub metrics: PipelineMetrics,
+    /// Wall-clock span of the whole run (spawn → drained).
+    pub wall: Duration,
+}
+
+impl PipelineThreadedReport {
+    /// Measured throughput: requests over the run's wall span.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.outputs.len() as f64 / secs
+        }
+    }
+}
+
+/// A stage worker's executor: its replica, its own [`PlanCache`]
+/// (independent per stage — same capacity and FIFO lookup order as the
+/// simulated oracle's, so the counters match exactly), and a CPU
+/// backend.
+struct StageExec<'rt> {
+    rt: &'rt mut VtaRuntime,
+    cache: PlanCache,
+    cpu: CpuBackend,
+    virtual_threads: usize,
+    clock_hz: f64,
+}
+
+impl VtaNodeExec for StageExec<'_> {
+    fn clock_hz(&self) -> f64 {
+        self.clock_hz
+    }
+
+    fn cpu_mut(&mut self) -> &mut CpuBackend {
+        &mut self.cpu
+    }
+
+    fn exec_vta_node(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+        inputs: &[&Tensor<i8>],
+    ) -> Result<(Tensor<i8>, SimStats), ExecError> {
+        let node = &g.nodes[id];
+        let entry = op_impl(&node.op);
+        let vt = self.virtual_threads;
+        let rt = &mut *self.rt;
+        let compiled = self.cache.get_or_compile(rt, key, |rt| {
+            entry
+                .compile(rt, g, node, vt, schedule.as_ref())
+                .map_err(|e| lift_compile_err(&node.name, e))
+        })?;
+        execute_compiled(entry, compiled, rt, inputs).map_err(|e| lift_compile_err(&node.name, e))
+    }
+}
+
+/// Everything a stage worker borrows from the run (shared, read-only).
+struct PipelineShared<'a> {
+    g: &'a Graph,
+    partition: &'a PipelinePartition,
+    keys: &'a [Option<PlanKey>],
+    schedules: &'a [Option<ScheduleChoice>],
+    virtual_threads: usize,
+    cache_capacity: usize,
+    clock_hz: f64,
+}
+
+/// The body shared by every stage worker: pull a handoff, execute the
+/// stage, forward the next handoff (or the final value table to the
+/// completion channel). Errors pass through without executing, so a
+/// failed request drains the whole pipe instead of wedging it.
+#[allow(clippy::too_many_arguments)]
+fn stage_worker(
+    stage_idx: usize,
+    rt: &mut VtaRuntime,
+    shared: &PipelineShared<'_>,
+    rx: mpsc::Receiver<InterMsg>,
+    tx_next: Option<mpsc::SyncSender<InterMsg>>,
+    tx_done: Option<mpsc::Sender<DoneMsg>>,
+) -> (StageCounter, PlanCacheStats) {
+    let stage = &shared.partition.stages[stage_idx];
+    let mut ex = StageExec {
+        rt,
+        cache: PlanCache::new(shared.cache_capacity),
+        cpu: CpuBackend::Native,
+        virtual_threads: shared.virtual_threads,
+        clock_hz: shared.clock_hz,
+    };
+    let mut counter = StageCounter { nodes: stage.nodes.len() as u64, ..Default::default() };
+    while let Ok((req, submitted, payload)) = rx.recv() {
+        let t0 = Instant::now();
+        let outcome: Result<(Vec<Option<Tensor<i8>>>, u64), ExecError> =
+            payload.and_then(|live| {
+                let (values, reports) = run_graph_partial(
+                    &mut ex,
+                    shared.g,
+                    // Input nodes live at level 0, so only stage 0 ever
+                    // executes one; the driver seeds the request tensor
+                    // as a live value keyed by the input node id.
+                    None,
+                    &stage.level_order,
+                    shared.keys,
+                    shared.schedules,
+                    &live,
+                )?;
+                let (_, cycles) = stage_duration(stage, &reports);
+                Ok((values, cycles))
+            });
+        let cycles = outcome.as_ref().map(|(_, c)| *c).unwrap_or(0);
+        counter.record_request(
+            t0.elapsed().as_secs_f64(),
+            cycles,
+            stage.carries.len() as u64,
+            stage.handoff_bytes,
+        );
+        if let Some(tx) = &tx_next {
+            // Interior stage: forward the live set — or the error,
+            // untouched, so a failed request drains the pipe.
+            let msg = outcome.map(|(mut values, _)| carry_out(stage, &mut values));
+            if tx.send((req, submitted, msg)).is_err() {
+                break; // downstream gone: the run is tearing down
+            }
+        } else {
+            let tx = tx_done.as_ref().expect("last stage completes");
+            let out = outcome.map(|(mut values, _)| {
+                let out_id = shared.g.output().expect("non-empty graph");
+                values[out_id].take().expect("output produced or carried")
+            });
+            if tx.send((req, submitted.elapsed(), out)).is_err() {
+                break;
+            }
+        }
+    }
+    let stats = ex.cache.stats();
+    (counter, stats)
+}
+
+/// Run the threaded pipeline: one OS worker per stage over `K`
+/// replicas, adjacent stages linked by **bounded** channels
+/// ([`PipelineOptions::queue_capacity`]) carrying the boundary live
+/// set, multiple requests in flight (the driver keeps feeding while
+/// every stage works its own request). Shutdown cascades: the driver
+/// drops the first sender after the last request, each worker exits
+/// when its upstream disconnects and drops its own sender in turn.
+///
+/// Outputs and per-stage cache counters are bit-identical to
+/// [`PipelineScheduler::run`] on the same trace — the determinism
+/// suite asserts it.
+pub fn run_pipeline_threaded(
+    cfg: &VtaConfig,
+    opts: &PipelineOptions,
+    records: &TuningRecords,
+    g: &Graph,
+    partition: &PipelinePartition,
+    inputs: &[Tensor<i8>],
+) -> Result<PipelineThreadedReport, ExecError> {
+    assert!(
+        opts.virtual_threads == 1 || opts.virtual_threads == 2,
+        "1 or 2 virtual threads"
+    );
+    let k = partition.stages.len();
+    assert!(k >= 1, "a pipeline needs at least one stage");
+    let t0 = Instant::now();
+    let config_fp = config_fingerprint(cfg);
+    let keys = plan_keys_for(config_fp, opts.virtual_threads, g);
+    let schedules = tuned_schedules_for(records, config_fp, opts.virtual_threads, g);
+    let mut pool = DevicePool::new(cfg, opts.dram_size, k);
+    let shared = PipelineShared {
+        g,
+        partition,
+        keys: &keys,
+        schedules: &schedules,
+        virtual_threads: opts.virtual_threads,
+        cache_capacity: opts.cache_capacity,
+        clock_hz: cfg.clock_hz,
+    };
+    let cap = opts.queue_capacity.max(1);
+
+    // Stage channels: tx[s] feeds stage s; the driver owns tx[0].
+    let mut txs = Vec::with_capacity(k);
+    let mut rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = mpsc::sync_channel::<InterMsg>(cap);
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let (tx_done, rx_done) = mpsc::channel::<DoneMsg>();
+
+    let in_id = g
+        .nodes
+        .iter()
+        .find(|n| op_impl(&n.op).is_input())
+        .map(|n| n.id)
+        .expect("graph has an input node");
+
+    let (mut per_stage, results) = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(k);
+        // Give each worker its receiver and the *next* stage's sender;
+        // the last stage gets the completion sender instead.
+        let mut rx_iter = rxs.into_iter();
+        for (s, rt) in pool.iter_mut().enumerate() {
+            let rx = rx_iter.next().expect("one receiver per stage");
+            let tx_next = if s + 1 < k { Some(txs[s + 1].clone()) } else { None };
+            let tx_done = (s + 1 == k).then(|| tx_done.clone());
+            let shared = &shared;
+            joins.push(scope.spawn(move || stage_worker(s, rt, shared, rx, tx_next, tx_done)));
+        }
+        // The workers hold clones of the interior senders; drop the
+        // originals so each channel closes when its upstream worker
+        // exits.
+        let tx0 = txs.remove(0);
+        drop(txs);
+        drop(tx_done);
+
+        // Drive: feed every request into stage 0 (bounded — blocks
+        // when the pipe is full, the in-flight window), draining
+        // completions opportunistically so the result channel stays
+        // short.
+        let mut results: Vec<Option<(Duration, Result<Tensor<i8>, ExecError>)>> =
+            (0..inputs.len()).map(|_| None).collect();
+        for (req, input) in inputs.iter().enumerate() {
+            let live: HashMap<NodeId, Tensor<i8>> =
+                std::iter::once((in_id, input.clone())).collect();
+            if tx0.send((req, Instant::now(), Ok(live))).is_err() {
+                break; // stage 0 died; the join below repropagates
+            }
+            while let Ok((id, latency, out)) = rx_done.try_recv() {
+                results[id] = Some((latency, out));
+            }
+        }
+        drop(tx0); // begin the shutdown cascade
+        while let Ok((id, latency, out)) = rx_done.recv() {
+            results[id] = Some((latency, out));
+        }
+
+        let mut per_stage = Vec::with_capacity(k);
+        for join in joins {
+            match join.join() {
+                Ok(pair) => per_stage.push(pair),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        (per_stage, results)
+    });
+
+    let metrics = PipelineMetrics {
+        stages: per_stage.iter_mut().map(|(c, _)| std::mem::take(c)).collect(),
+    };
+    let cache = per_stage.into_iter().map(|(_, s)| s).collect();
+    let mut outputs = Vec::with_capacity(inputs.len());
+    let mut latencies = Vec::with_capacity(inputs.len());
+    for slot in results {
+        let (latency, out) = slot.expect("every request completed or errored");
+        outputs.push(out?);
+        latencies.push(latency);
+    }
+    Ok(PipelineThreadedReport {
+        outputs,
+        latencies,
+        cache,
+        metrics,
+        wall: t0.elapsed(),
+    })
+}

@@ -14,6 +14,7 @@ use crate::dse::records::TuningRecords;
 use crate::graph::{Graph, Placement};
 use crate::sim::SimStats;
 use crate::util::Tensor;
+use std::collections::HashMap;
 use std::time::Instant;
 
 /// How a serving front-end executes one VTA-resident node. Implemented
@@ -94,11 +95,49 @@ pub(crate) fn run_graph<E: VtaNodeExec>(
     keys: &[Option<PlanKey>],
     schedules: &[Option<ScheduleChoice>],
 ) -> Result<(Tensor<i8>, Vec<NodeReport>), ExecError> {
+    let seed = HashMap::new();
+    let (mut values, reports) =
+        run_graph_partial(ex, g, Some(input), stage_order, keys, schedules, &seed)?;
+    let out_id = g.output().expect("non-empty graph");
+    Ok((
+        values[out_id].take().unwrap(),
+        reports.into_iter().map(|r| r.expect("stages cover every node")).collect(),
+    ))
+}
+
+/// Execute a *subset* of the graph — the pipeline-parallel variant of
+/// [`run_graph`]. `level_order` names the nodes to execute (grouped in
+/// dependence order, e.g. one pipeline stage's slice of the ASAP
+/// levels); `seed_values` carries the live tensors handed off from
+/// earlier pipeline stages (the inter-stage DRAM handoff contract:
+/// every value a node here consumes is either produced here or
+/// seeded). `input` is the request tensor for input nodes — only the
+/// first pipeline stage has any, so later stages pass `None`.
+///
+/// Per-node execution is **identical** to [`run_graph`] (which
+/// delegates here with the full stage order and no seeds) — that
+/// shared body is what makes pipelined execution bit-exact against the
+/// single-replica engine by construction.
+///
+/// Returns the value table (`Some` for executed + seeded nodes) and
+/// per-node reports indexed by node id (`Some` for executed nodes).
+pub(crate) fn run_graph_partial<E: VtaNodeExec>(
+    ex: &mut E,
+    g: &Graph,
+    input: Option<&Tensor<i8>>,
+    level_order: &[Vec<usize>],
+    keys: &[Option<PlanKey>],
+    schedules: &[Option<ScheduleChoice>],
+    seed_values: &HashMap<usize, Tensor<i8>>,
+) -> Result<(Vec<Option<Tensor<i8>>>, Vec<Option<NodeReport>>), ExecError> {
     let clock_hz = ex.clock_hz();
     let mut values: Vec<Option<Tensor<i8>>> = vec![None; g.nodes.len()];
+    for (&id, v) in seed_values {
+        values[id] = Some(v.clone());
+    }
     let mut reports: Vec<Option<NodeReport>> = (0..g.nodes.len()).map(|_| None).collect();
 
-    for stage in stage_order {
+    for stage in level_order {
         for &id in stage {
             let node = &g.nodes[id];
             let entry = op_impl(&node.op);
@@ -107,7 +146,7 @@ pub(crate) fn run_graph<E: VtaNodeExec>(
             let mut stats = None;
 
             let out = if entry.is_input() {
-                input.clone()
+                input.expect("input nodes live in the first pipeline stage").clone()
             } else if node.placement == Placement::Vta {
                 let key = keys[id].as_ref().expect("plan key precomputed for VTA node");
                 let inputs: Vec<&Tensor<i8>> =
@@ -133,9 +172,5 @@ pub(crate) fn run_graph<E: VtaNodeExec>(
         }
     }
 
-    let out_id = g.output().expect("non-empty graph");
-    Ok((
-        values[out_id].take().unwrap(),
-        reports.into_iter().map(|r| r.expect("stages cover every node")).collect(),
-    ))
+    Ok((values, reports))
 }

@@ -525,3 +525,257 @@ fn pool_scaling_is_monotone_and_metrics_are_sane() {
         assert_eq!(outs, &all_outputs[0], "pool size changed outputs");
     }
 }
+
+// ---------------------------------------------------------------------
+// Pipeline partitioner.
+// ---------------------------------------------------------------------
+
+/// Stage structure invariants of any cut: contiguous level coverage,
+/// every node exactly once, exact boundary live sets with adjacent
+/// stages agreeing (`consumes[s] == carries[s-1]` — the same cut seen
+/// from both sides), and byte-accurate handoff accounting.
+#[test]
+fn pipeline_partition_live_sets_are_exact() {
+    let cfg = VtaConfig::pynq();
+    let mut g = residual_block_graph();
+    partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    // Levels: in=0, c1=1, c2=2, add=3, relu=4. Cutting at level 2
+    // leaves the residual input `x` live across the cut alongside c1.
+    let p = PipelinePartition::from_cuts(&cfg, &g, &[2]);
+    assert_eq!(p.len(), 2);
+    assert_eq!(p.stages[0].levels, (0, 2));
+    assert_eq!(p.stages[1].levels, (2, 5));
+    assert_eq!(p.stages[0].nodes, vec![0, 1]);
+    assert_eq!(p.stages[1].nodes, vec![2, 3, 4]);
+    assert!(p.stages[0].consumes.is_empty(), "stage 0 receives nothing");
+    assert!(p.stages[1].carries.is_empty(), "last stage forwards nothing");
+    // The cut's live set: c1 feeds c2, and the residual x skips ahead
+    // to the add — both must cross, nothing else.
+    assert_eq!(p.stages[0].carries, vec![0, 1]);
+    assert_eq!(p.stages[1].consumes, p.stages[0].carries);
+    // int8: one byte per element; two [1,16,8,8] tensors cross.
+    assert_eq!(p.stages[0].handoff_bytes, 2 * 16 * 8 * 8);
+    assert_eq!(p.stages[1].handoff_bytes, 0);
+    assert!(p.stages[0].handoff_seconds > 0.0);
+
+    // Every node appears in exactly one stage, and the balanced
+    // variant keeps the same invariants for every k (clamping k past
+    // the level count).
+    for k in 1..=7 {
+        let p = PipelinePartition::balanced(&cfg, &g, k);
+        assert!(p.len() <= 5, "k={k} cannot exceed the level count");
+        assert_eq!(p.len(), k.min(5));
+        let mut seen: Vec<usize> = p.stages.iter().flat_map(|s| s.nodes.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..g.nodes.len()).collect::<Vec<_>>(), "k={k} must cover the graph");
+        for w in p.stages.windows(2) {
+            assert_eq!(w[1].consumes, w[0].carries, "adjacent stages disagree on the cut");
+            assert_eq!(w[0].levels.1, w[1].levels.0, "stages must tile the levels");
+        }
+        assert!(p.stages[0].consumes.is_empty());
+        assert!(p.stages.last().unwrap().carries.is_empty());
+    }
+}
+
+/// The balancer minimizes the bottleneck: against a deliberately
+/// lopsided cut of the same stage count it never has a worse
+/// bottleneck stage, and its modeled streaming makespan is no worse.
+#[test]
+fn pipeline_balancer_beats_unbalanced_cut() {
+    let cfg = VtaConfig::pynq();
+    let mut g = mixed_op_graph();
+    partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    let balanced = PipelinePartition::balanced(&cfg, &g, 2);
+    // Lopsided: stage 0 gets only the input level; both convs, the
+    // ALU ops, and the classifier all pile into stage 1.
+    let lopsided = PipelinePartition::from_cuts(&cfg, &g, &[1]);
+    assert_eq!(balanced.len(), lopsided.len());
+    assert!(
+        balanced.bottleneck_seconds() <= lopsided.bottleneck_seconds(),
+        "balancer produced a worse bottleneck: {} vs {}",
+        balanced.bottleneck_seconds(),
+        lopsided.bottleneck_seconds()
+    );
+    let (b, l) = (balanced.modeled_makespan(16), lopsided.modeled_makespan(16));
+    assert!(b <= l + 1e-12, "balanced makespan {b} worse than lopsided {l}");
+
+    // The modeled makespan behaves like a pipeline: monotone in the
+    // request count, and for one request it is exactly the sum of
+    // stage times plus interior handoffs.
+    let one = balanced.modeled_makespan(1);
+    let sum: f64 = balanced.stages.iter().map(|s| s.model_seconds + s.handoff_seconds).sum();
+    assert!((one - sum).abs() < 1e-12, "single-request makespan must be the serial chain");
+    assert!(balanced.modeled_makespan(2) >= one);
+    // Deep streams amortize toward the bottleneck: 16 requests cost
+    // less than 16 serial chains.
+    assert!(balanced.modeled_makespan(16) < 16.0 * one);
+}
+
+/// The simulated pipeline scheduler is bit-exact against the
+/// single-replica engine, its per-stage counters account every
+/// request, and its modeled stream makespan beats the 1-stage
+/// scheduler's on a multi-request trace (the pipelining win).
+#[test]
+fn pipeline_scheduler_matches_engine_and_pipelines() {
+    let cfg = VtaConfig::pynq();
+    let mut g = mixed_op_graph();
+    partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+    let inputs: Vec<_> = (0..6).map(|i| rand_t(1400 + i, &[1, 16, 8, 8])).collect();
+
+    let mut eng = engine(16);
+    let expect = eng.run_batch(&g, &inputs).unwrap();
+
+    let mut opts = PipelineOptions::new(2);
+    opts.dram_size = 64 << 20;
+    let part = PipelinePartition::balanced(&cfg, &g, 2);
+    let mut sched = PipelineScheduler::new(&cfg, CpuBackend::Native, opts);
+    let r = sched.run(&g, &part, &inputs).unwrap();
+
+    assert_eq!(r.outputs.len(), inputs.len());
+    for (i, out) in r.outputs.iter().enumerate() {
+        assert_eq!(out, &expect.outputs[i], "request {i} diverged from the engine");
+    }
+    // Counters: every stage saw every request; handoff totals follow
+    // the partition; plan compiles split across the two independent
+    // caches without overlap (5 unique plans in this graph).
+    assert_eq!(r.metrics.stages.len(), 2);
+    for (s, c) in r.metrics.stages.iter().enumerate() {
+        assert_eq!(c.requests, inputs.len() as u64, "stage {s} miscounted requests");
+        assert_eq!(c.nodes, part.stages[s].nodes.len() as u64);
+        assert_eq!(c.handoff_bytes, inputs.len() as u64 * part.stages[s].handoff_bytes);
+    }
+    let misses: u64 = r.cache.iter().map(|c| c.misses).sum();
+    assert_eq!(misses, 5, "each stage compiles exactly its own plans, once");
+    // Pipelining: completions are ordered, and the 2-stage modeled
+    // makespan beats the 1-stage (serial chain) pipeline on 6 requests.
+    for w in r.completions.windows(2) {
+        assert!(w[0] <= w[1] + 1e-12, "completions must be non-decreasing");
+    }
+    let mut opts1 = PipelineOptions::new(1);
+    opts1.dram_size = 64 << 20;
+    let part1 = PipelinePartition::balanced(&cfg, &g, 1);
+    let mut sched1 = PipelineScheduler::new(&cfg, CpuBackend::Native, opts1);
+    let r1 = sched1.run(&g, &part1, &inputs).unwrap();
+    assert_eq!(r1.outputs, r.outputs, "stage count must never change results");
+    assert!(
+        r.makespan_seconds < r1.makespan_seconds,
+        "2-stage stream ({}) must beat the serial chain ({})",
+        r.makespan_seconds,
+        r1.makespan_seconds
+    );
+}
+
+// ---------------------------------------------------------------------
+// Loadgen measurement fixes.
+// ---------------------------------------------------------------------
+
+/// Per-step arrival seeds come from the splitmix64 stream: step 0 is
+/// no longer the raw user seed, same-seed steps never collide (the
+/// underlying counter-to-seed map is a bijection), and adjacent user
+/// seeds get disjoint step streams — the XOR-of-multiples scheme
+/// guaranteed none of these.
+#[test]
+fn loadgen_step_seeds_are_mixed_and_collision_free() {
+    use super::loadgen::step_seed;
+    // Regression: the old `seed ^ (idx * C)` made step 0's stream the
+    // raw seed (0 here). Splitmix64 maps only 0 to 0, and the counter
+    // is offset by a nonzero gamma, so step 0 of seed 0 is nonzero.
+    assert_ne!(step_seed(0, 0), 0);
+    for seed in [0u64, 1, 0x10ad, u64::MAX] {
+        let stream: Vec<u64> = (0..8).map(|i| step_seed(seed, i)).collect();
+        let mut dedup = stream.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), stream.len(), "seed {seed}: step seeds must be distinct");
+        // Disjoint from the neighboring user seed's stream (bijective
+        // mix of `seed + (i+1)·gamma`: equality would need the seeds
+        // to differ by a small multiple of the odd 64-bit gamma).
+        let other: Vec<u64> = (0..8).map(|i| step_seed(seed.wrapping_add(1), i)).collect();
+        assert!(
+            stream.iter().all(|s| !other.contains(s)),
+            "seed {seed}: adjacent seeds must not share step streams"
+        );
+    }
+}
+
+/// An empty sample set reports NaN ("no samples"), never a fake zero
+/// latency; non-empty sets defer to the shared percentile.
+#[test]
+fn loadgen_percentiles_report_nan_on_no_samples() {
+    use super::loadgen::percentile_or_nan;
+    for p in [0.0, 0.5, 0.99, 0.999, 1.0] {
+        assert!(percentile_or_nan(&[], p).is_nan(), "empty slice must be NaN at p={p}");
+    }
+    let s = [1.0, 2.0, 3.0];
+    for p in [0.0, 0.5, 0.99, 1.0] {
+        assert_eq!(percentile_or_nan(&s, p), crate::util::percentile_sorted(&s, p));
+    }
+    // The report-level view: an all-shed step is distinguishable from
+    // a zero-latency one.
+    let mut shed = StepReport {
+        qps: 100.0,
+        offered: 4,
+        accepted: 0,
+        rejected: 4,
+        p50: f64::NAN,
+        p99: f64::NAN,
+        p999: f64::NAN,
+        slo_attainment: 0.0,
+        throughput_rps: 0.0,
+        wall: std::time::Duration::ZERO,
+    };
+    assert!(!shed.has_samples());
+    shed.p50 = 0.0;
+    assert!(shed.has_samples(), "a genuine zero-latency sample is still a sample");
+}
+
+/// Regression for the step-clock bug: the measured wall span opens at
+/// the first *submit*, so a large first exponential gap (pre-arrival
+/// idle) no longer counts as load and can't deflate `throughput_rps`.
+#[test]
+fn loadgen_wall_excludes_first_arrival_gap() {
+    use super::loadgen::{arrival_gap, step_seed};
+    let cfg = VtaConfig::pynq();
+    let mut g = two_conv_graph();
+    partition(&mut g, &PartitionPolicy::paper(&cfg));
+
+    // Deterministically find a seed whose step-0 first gap at 2 rps is
+    // substantial (0.5–1.5 s): the old code's wall necessarily
+    // included it, the fixed code's must not.
+    let qps = 2.0;
+    let (seed, gap) = (0u64..)
+        .find_map(|seed| {
+            let mut rng = XorShiftRng::new(step_seed(seed, 0));
+            let gap = arrival_gap(&mut rng, qps);
+            (0.5..1.5).contains(&gap).then_some((seed, gap))
+        })
+        .expect("some seed yields a mid-range first gap");
+
+    let mut topts = ThreadedOptions::new(1);
+    topts.dram_size = 64 << 20;
+    let lopts = LoadgenOptions {
+        steps: vec![QpsStep { qps, requests: 1 }],
+        slo: 10.0,
+        seed,
+    };
+    let (report, _) = run_threaded(
+        &cfg,
+        &topts,
+        &crate::dse::records::TuningRecords::new(),
+        &g,
+        |handle| open_loop(handle, &lopts, |i| rand_t(1500 + i, &[1, 16, 8, 8])),
+    )
+    .unwrap();
+
+    let step = &report.steps[0];
+    assert_eq!(step.accepted, 1);
+    assert!(step.has_samples());
+    let wall = step.wall.as_secs_f64();
+    // The single request's service time is milliseconds; the ≥0.5 s
+    // idle gap before it must be excluded from the span.
+    assert!(
+        wall < gap,
+        "wall {wall}s still includes the {gap}s pre-first-arrival idle"
+    );
+    assert!(step.throughput_rps > 1.0 / gap, "throughput still deflated by the idle gap");
+}

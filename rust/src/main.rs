@@ -28,7 +28,13 @@
 //!   scheduler oracle; `--qps LIST` then drives an open-loop Poisson
 //!   ramp and prints per-step latency percentiles and SLO attainment,
 //!   and `--require-speedup X` gates measured multi-thread throughput
-//!   against the 1-thread baseline. With `--fleet SPEC.json` the
+//!   against the 1-thread baseline. With `--pipeline-stages K` the
+//!   model is instead **split across K replicas** (stage-per-replica
+//!   pipeline parallelism, boundary tensors handed off through DRAM),
+//!   self-verified bit-exactly against the single-replica engine in
+//!   both the simulated and real-threads disciplines;
+//!   `--require-pipeline-speedup X` gates the modeled K-stage
+//!   streaming speedup over the 1-stage chain. With `--fleet SPEC.json` the
 //!   command instead serves a **heterogeneous fleet**: mixed traffic
 //!   (`--model mixed` pairs a conv-bound resnet-mini class with an
 //!   ALU-bound style class) routed across mixed-config device groups
@@ -66,8 +72,9 @@ use vta::exec::serve::fleet::{
     FleetThreadedOptions, RoutePolicy, Router,
 };
 use vta::exec::{
-    open_loop, run_threaded, serve_trace, CpuBackend, Executor, LoadgenOptions, PjrtCache,
-    Scheduler, SchedulerOptions, ServingEngine, ThreadedOptions,
+    open_loop, run_pipeline_threaded, run_threaded, serve_trace, CpuBackend, Executor,
+    LoadgenOptions, PipelineOptions, PipelinePartition, PipelineScheduler, PjrtCache, Scheduler,
+    SchedulerOptions, ServingEngine, ThreadedOptions,
 };
 use vta::graph::resnet::{self, synth_input, TABLE1};
 use vta::graph::{fuse, partition, style, PartitionPolicy, Placement};
@@ -102,6 +109,8 @@ struct Flags {
     qps_requests: usize,
     slo_ms: f64,
     require_speedup: Option<f64>,
+    pipeline_stages: usize,
+    require_pipeline_speedup: Option<f64>,
     offload_dense: bool,
     offload_alu: bool,
     offload_upsample: bool,
@@ -141,6 +150,8 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         qps_requests: 32,
         slo_ms: 50.0,
         require_speedup: None,
+        pipeline_stages: 0,
+        require_pipeline_speedup: None,
         offload_dense: false,
         offload_alu: false,
         offload_upsample: false,
@@ -290,6 +301,29 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     "--require-speedup must be a positive factor"
                 );
                 f.require_speedup = Some(x);
+            }
+            "--pipeline-stages" => {
+                i += 1;
+                f.pipeline_stages = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--pipeline-stages needs a stage count"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    f.pipeline_stages >= 1,
+                    "--pipeline-stages needs at least 1 stage"
+                );
+            }
+            "--require-pipeline-speedup" => {
+                i += 1;
+                let x: f64 = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--require-pipeline-speedup needs a factor"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    x > 0.0 && x.is_finite(),
+                    "--require-pipeline-speedup must be a positive factor"
+                );
+                f.require_pipeline_speedup = Some(x);
             }
             "--records" => {
                 i += 1;
@@ -455,6 +489,8 @@ fn print_usage() {
          \x20 --qps-requests N          serve: arrivals offered per ramp step (default 32)\n\
          \x20 --slo MS                  serve: latency SLO for ramp attainment, wall ms (default 50)\n\
          \x20 --require-speedup X       serve: exit nonzero unless N threads measure >= X x the 1-thread throughput\n\
+         \x20 --pipeline-stages K       serve: split the model across K replicas (stage-per-replica pipeline parallelism)\n\
+         \x20 --require-pipeline-speedup X  serve: exit nonzero unless the K-stage pipeline models >= X x the 1-stage makespan\n\
          \x20 --fleet FILE              serve: serve across the FleetSpec's mixed-config groups; dse: search fleet compositions and write the winner here\n\
          \x20 --route POLICY            serve --fleet: cost | roundrobin | static:G (default cost)\n\
          \x20 --require-routing-win     serve --fleet: exit nonzero unless cost-model routing beats round-robin on modeled makespan\n\
@@ -599,8 +635,19 @@ fn build_model(flags: &Flags) -> anyhow::Result<(vta::graph::Graph, usize, Strin
 
 fn cmd_serve(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     if flags.fleet.is_some() {
+        anyhow::ensure!(
+            flags.pipeline_stages == 0,
+            "--pipeline-stages does not combine with --fleet"
+        );
         return cmd_serve_fleet(cfg, flags);
     }
+    if flags.pipeline_stages > 0 {
+        return cmd_serve_pipeline(cfg, flags);
+    }
+    anyhow::ensure!(
+        flags.require_pipeline_speedup.is_none(),
+        "--require-pipeline-speedup needs --pipeline-stages"
+    );
     let (mut g, fused, model_name, size) = build_model(flags)?;
     let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
     println!(
@@ -914,6 +961,143 @@ fn cmd_serve_threaded(
             load.offered(),
             load.rejected(),
             ramp_report.cache.misses
+        );
+    }
+    Ok(())
+}
+
+/// The `--pipeline-stages` leg of `vta serve`: split one model across
+/// K pool replicas (stage-per-replica, boundary tensors handed off
+/// through DRAM), self-verify the simulated pipeline bit-exactly
+/// against the single-replica engine, gate the modeled K-stage
+/// streaming speedup over the 1-stage chain, then run the identical
+/// split through the real-threads pipeline runtime and check it
+/// reproduces the oracle — outputs *and* per-stage plan-cache
+/// counters.
+fn cmd_serve_pipeline(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
+    let k = flags.pipeline_stages;
+    let (mut g, fused, model_name, size) = build_model(flags)?;
+    let (vta_n, cpu_n) = partition(&mut g, &build_policy(cfg, flags));
+    println!(
+        "pipeline-serving {model_name}: {} nodes ({fused} fused), {vta_n} on VTA, \
+         {cpu_n} on CPU; {k} stage(s), {} streamed request(s), vt={}",
+        g.nodes.len(),
+        flags.batch,
+        flags.vt
+    );
+    let records = match &flags.records {
+        Some(path) => {
+            let r = TuningRecords::load(path)?;
+            println!("loaded {} tuning record(s) from {path}", r.len());
+            r
+        }
+        None => TuningRecords::new(),
+    };
+
+    // Roofline-balanced stage split (the balancer clamps to the
+    // graph's depth — refuse rather than silently serve fewer stages).
+    let part = PipelinePartition::balanced(cfg, &g, k);
+    anyhow::ensure!(
+        part.len() == k,
+        "{model_name} has only {} pipelineable level(s) — too shallow for {k} stages",
+        part.len()
+    );
+    println!();
+    for line in part.describe() {
+        println!("{line}");
+    }
+
+    let inputs: Vec<_> =
+        (0..flags.batch).map(|i| synth_input(7 + i as u64, 1, 3, size, size)).collect();
+
+    // Reference: the single-replica serving engine on the same trace.
+    let mut engine = ServingEngine::with_records(
+        cfg,
+        512 << 20,
+        CpuBackend::Native,
+        flags.vt,
+        flags.cache,
+        records.clone(),
+    );
+    let reference = engine.run_batch(&g, &inputs)?;
+
+    // Simulated pipeline: the deterministic oracle.
+    let mut opts = PipelineOptions::new(k);
+    opts.virtual_threads = flags.vt;
+    opts.cache_capacity = flags.cache;
+    opts.queue_capacity = flags.queue;
+    let mut sched =
+        PipelineScheduler::with_records(cfg, CpuBackend::Native, opts.clone(), records.clone());
+    let piped = sched.run(&g, &part, &inputs)?;
+    for (i, out) in piped.outputs.iter().enumerate() {
+        anyhow::ensure!(
+            out == &reference.outputs[i],
+            "pipelined output {i} diverged from the single-replica engine"
+        );
+    }
+    let compiles: u64 = piped.cache.iter().map(|c| c.misses).sum();
+    println!(
+        "\nsimulated pipeline: {} request(s) streamed, makespan {:.2} ms, modeled \
+         throughput {:.1} inf/s; {compiles} plan compile(s) split across the stages; \
+         outputs match the single-replica engine bit-exactly",
+        inputs.len(),
+        piped.makespan_seconds * 1e3,
+        piped.throughput()
+    );
+
+    // The pipeline win, on the deterministic roofline model: streaming
+    // the trace through K balanced stages vs the 1-stage serial chain.
+    let serial = PipelinePartition::from_cuts(cfg, &g, &[]);
+    let n = inputs.len().max(1);
+    let (one, kst) = (serial.modeled_makespan(n), part.modeled_makespan(n));
+    let speedup = one / kst.max(1e-12);
+    println!(
+        "modeled stream of {n}: 1 stage {:.2} ms -> {k} stage(s) {:.2} ms ({speedup:.2}x); \
+         steady-state bottleneck {:.2} ms/request",
+        one * 1e3,
+        kst * 1e3,
+        part.bottleneck_seconds() * 1e3
+    );
+    if let Some(need) = flags.require_pipeline_speedup {
+        anyhow::ensure!(k > 1, "--require-pipeline-speedup {need} needs --pipeline-stages > 1");
+        anyhow::ensure!(
+            speedup >= need,
+            "modeled pipeline speedup {speedup:.2}x is below the required {need:.2}x"
+        );
+        println!("pipeline speedup gate passed: {speedup:.2}x >= {need:.2}x");
+    }
+
+    // Real threads: one worker per stage, bounded inter-stage queues —
+    // must reproduce the oracle bit-for-bit.
+    let threaded = run_pipeline_threaded(cfg, &opts, &records, &g, &part, &inputs)?;
+    for (i, out) in threaded.outputs.iter().enumerate() {
+        anyhow::ensure!(
+            out == &piped.outputs[i],
+            "threaded pipeline output {i} diverged from the simulated oracle"
+        );
+    }
+    anyhow::ensure!(
+        threaded.cache == piped.cache,
+        "threaded per-stage plan caches fell out of step with the oracle ({:?} vs {:?})",
+        threaded.cache,
+        piped.cache
+    );
+    println!(
+        "\nthreaded pipeline: wall {:.2?}, measured throughput {:.1} inf/s; outputs and \
+         per-stage cache counters match the simulated oracle bit-exactly",
+        threaded.wall,
+        threaded.throughput_rps()
+    );
+    let span = threaded.wall.as_secs_f64();
+    for (s, c) in threaded.metrics.stages.iter().enumerate() {
+        println!(
+            "  stage {s}: {} node(s), {} request(s), occupancy {:.0}%, \
+             handoff {} tensor(s) / {} B per request",
+            c.nodes,
+            c.requests,
+            c.occupancy(span) * 100.0,
+            part.stages[s].carries.len(),
+            part.stages[s].handoff_bytes
         );
     }
     Ok(())

@@ -348,6 +348,87 @@ impl PoolMetrics {
     }
 }
 
+// ---------------------------------------------------------------------
+// Pipeline-parallel counters.
+// ---------------------------------------------------------------------
+
+/// Per-pipeline-stage counters for graph-level pipeline parallelism
+/// ([`crate::exec::serve::PipelineScheduler`]): one stage = one pool
+/// replica executing a contiguous slice of the graph's ASAP levels.
+/// Alongside the busy accounting this tracks the stage's *handoff*
+/// traffic — the boundary tensors relayed downstream through DRAM,
+/// the only cross-device traffic pipeline parallelism introduces.
+///
+/// Everything except `busy_seconds` is deterministic (a function of
+/// the graph, the partition, and the request count), so the
+/// determinism suite asserts the threaded runtime's counters equal
+/// the simulated oracle's field by field.
+#[derive(Clone, Debug, Default)]
+pub struct StageCounter {
+    /// Graph nodes owned by this stage.
+    pub nodes: u64,
+    /// Requests that passed through this stage.
+    pub requests: u64,
+    /// Seconds this stage spent executing (simulated wall + sim time
+    /// under the simulated scheduler; measured wall under threads).
+    pub busy_seconds: f64,
+    /// Simulated accelerator cycles executed by this stage.
+    pub sim_cycles: u64,
+    /// Boundary tensors handed downstream (0 for the last stage).
+    pub handoff_tensors: u64,
+    /// Bytes handed downstream (int8: one byte per element).
+    pub handoff_bytes: u64,
+}
+
+impl StageCounter {
+    /// Account one request through this stage: `busy_seconds` of stage
+    /// execution, `sim_cycles` on the accelerator, and the downstream
+    /// handoff (`tensors` live values, `bytes` total).
+    pub fn record_request(&mut self, busy_seconds: f64, sim_cycles: u64, tensors: u64, bytes: u64) {
+        self.requests += 1;
+        self.busy_seconds += busy_seconds;
+        self.sim_cycles += sim_cycles;
+        self.handoff_tensors += tensors;
+        self.handoff_bytes += bytes;
+    }
+
+    /// Busy fraction of an observation span (clamped to [0, 1]) — the
+    /// stage's *occupancy*. A balanced pipeline under streaming load
+    /// pushes every stage's occupancy toward the bottleneck stage's.
+    pub fn occupancy(&self, span_seconds: f64) -> f64 {
+        if span_seconds <= 0.0 {
+            0.0
+        } else {
+            (self.busy_seconds / span_seconds).min(1.0)
+        }
+    }
+}
+
+/// The pipeline runtimes' exported counters: one [`StageCounter`] per
+/// stage, in pipeline order.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMetrics {
+    /// Per-stage counters, indexed by stage (= replica).
+    pub stages: Vec<StageCounter>,
+}
+
+impl PipelineMetrics {
+    /// Fresh counters for a `stages`-deep pipeline.
+    pub fn new(stages: usize) -> Self {
+        PipelineMetrics { stages: vec![StageCounter::default(); stages] }
+    }
+
+    /// Total bytes handed between stages over the run.
+    pub fn handoff_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.handoff_bytes).sum()
+    }
+
+    /// Per-stage occupancy over a common span (reporting convenience).
+    pub fn occupancies(&self, span_seconds: f64) -> Vec<f64> {
+        self.stages.iter().map(|s| s.occupancy(span_seconds)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,6 +573,27 @@ mod tests {
         assert_eq!(t.batches, 3);
         assert_eq!(t.max_batch, 4);
         assert_eq!(t.busy, Duration::from_millis(45));
+    }
+
+    #[test]
+    fn stage_counters_accumulate_and_bound_occupancy() {
+        let mut m = PipelineMetrics::new(2);
+        m.stages[0].nodes = 5;
+        m.stages[0].record_request(0.5, 1000, 2, 4096);
+        m.stages[0].record_request(0.25, 500, 2, 4096);
+        m.stages[1].record_request(0.1, 100, 0, 0); // last stage: no handoff
+        assert_eq!(m.stages[0].requests, 2);
+        assert_eq!(m.stages[0].sim_cycles, 1500);
+        assert_eq!(m.stages[0].handoff_tensors, 4);
+        assert_eq!(m.stages[0].handoff_bytes, 8192);
+        assert_eq!(m.stages[1].handoff_bytes, 0);
+        assert_eq!(m.handoff_bytes(), 8192);
+        assert!((m.stages[0].occupancy(1.0) - 0.75).abs() < 1e-12);
+        assert_eq!(m.stages[0].occupancy(0.0), 0.0);
+        assert_eq!(m.stages[0].occupancy(0.5), 1.0); // clamped
+        let occ = m.occupancies(1.0);
+        assert_eq!(occ.len(), 2);
+        assert!((occ[1] - 0.1).abs() < 1e-12);
     }
 
     #[test]
