@@ -8,11 +8,26 @@
 //! offload removes it, residual CPU ops cap the end-to-end gain — is
 //! the reproduction target.
 //!
-//! Run: `cargo bench --bench e2e_resnet`
+//! Run: `cargo bench --bench e2e_resnet [-- --json PATH]
+//!       [--check BASELINE] [--pin BASELINE]`
+//!
+//! `--json` writes the run snapshot (`BENCH_resnet.json` schema);
+//! `--check` diffs it against a committed baseline — deterministic
+//! fields (offloaded node count, output fingerprint, simulated cycle
+//! and DRAM-traffic totals) must match exactly, `null` baseline fields
+//! are unpinned, measured wall-clock fields are schema-checked only;
+//! `--pin` fills a baseline's `null` deterministic fields from the
+//! current run (see `common::baseline` for the CI pin-then-check
+//! flow).
 
+#[allow(dead_code)] // this bench uses only the baseline half of common
+mod common;
+
+use common::baseline;
 use std::collections::BTreeMap;
 use std::time::Instant;
 use vta::arch::VtaConfig;
+use vta::exec::serve::fnv1a64;
 use vta::exec::{CpuBackend, ExecReport, Executor, PjrtCache};
 use vta::graph::resnet::{self, synth_input};
 use vta::graph::{fuse, partition, PartitionPolicy, Placement};
@@ -37,6 +52,11 @@ fn breakdown(report: &ExecReport) -> BTreeMap<&'static str, (f64, f64)> {
 }
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = baseline::flag_value(&argv, "--json");
+    let check_path = baseline::flag_value(&argv, "--check");
+    let pin_path = baseline::flag_value(&argv, "--pin");
+
     let cfg = VtaConfig::pynq();
     let input = synth_input(7, 1, 3, 224, 224);
     let (mut g, _) = fuse(resnet::resnet18(1, 42).unwrap()).unwrap();
@@ -89,4 +109,35 @@ fn main() {
         s.compute_utilization() * 100.0,
         s.bytes_moved() as f64 / 1e6
     );
+
+    // ---- run snapshot: emit / diff BENCH_resnet.json ------------------
+    // Deterministic: the partition decision, the model output, and the
+    // simulated accelerator totals (cycles, DRAM traffic) — all derived
+    // from integer simulation, identical on every host. Measured: this
+    // host's wall clocks and the speedups computed from them.
+    let output_fp = fnv1a64(hybrid_report.output.data().iter().map(|&v| v as u8));
+    let snapshot = format!(
+        "{{\n  \"schema\": 1,\n  \"workload\": \"resnet18-224\",\n  \
+         \"deterministic\": {{\n    \"vta_nodes\": {vta_nodes},\n    \
+         \"output_fp\": {output_fp},\n    \"total_cycles\": {},\n    \
+         \"dram_bytes\": {},\n    \"gemm_utilization\": {:.6}\n  }},\n  \
+         \"measured\": {{\n    \"cpu_only_ms\": {cpu_total:.1},\n    \
+         \"hybrid_total_ms\": {hybrid_total:.1},\n    \
+         \"conv_speedup\": {:.2},\n    \"e2e_speedup\": {:.2}\n  }}\n}}\n",
+        s.total_cycles,
+        s.bytes_moved(),
+        s.compute_utilization(),
+        cpu_conv / vta_conv.max(1e-9),
+        cpu_total / hybrid_total.max(1e-9)
+    );
+    if let Some(path) = &json_path {
+        std::fs::write(path, &snapshot).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("\nwrote resnet snapshot to {path}");
+    }
+    if let Some(path) = &pin_path {
+        baseline::pin_baseline("resnet", &snapshot, path);
+    }
+    if let Some(path) = &check_path {
+        baseline::check_against_baseline("resnet", &snapshot, path);
+    }
 }

@@ -13,6 +13,14 @@
 //!   accounting; the pipelined schedule overlaps the two across
 //!   requests (double-buffered), the serial baseline does not.
 //!
+//! The compile-storm section measures the concurrent JIT directly:
+//! four weight-distinct style classes released at once against a cold
+//! 4-replica pool, A/B'd between `serial_compile` (every plan lowered
+//! under the directory lock — the pre-concurrent behavior) and the
+//! claim-based concurrent path, with outputs and cache counters
+//! asserted bit-equal across both modes. `--require-storm-speedup X`
+//! turns the measured cold-start win into a CI gate.
+//!
 //! The threaded section measures *real* wall-clock concurrency: the
 //! style trace through 1/2/4 worker threads (each run self-verified
 //! bit-exactly against the simulated scheduler oracle, cache counters
@@ -23,6 +31,7 @@
 //! per-stage counters plus the modeled streaming speedup.
 //!
 //! Run: `cargo bench --bench e2e_serving [-- --batch N] [--fast]
+//!       [--require-storm-speedup X]
 //!       [--json PATH] [--check BASELINE] [--pin BASELINE]`
 //!
 //! `--fast` skips the ResNet-18 sections (CI speed); `--json` writes
@@ -40,6 +49,9 @@ use common::baseline;
 use std::time::Instant;
 use vta::arch::VtaConfig;
 use vta::dse::TuningRecords;
+use vta::exec::serve::fleet::{
+    run_fleet_threaded, FleetSpec, FleetThreadedOptions, FleetThreadedReport, RoutePolicy,
+};
 use vta::exec::serve::fnv1a64;
 use vta::exec::{
     open_loop, run_pipeline_threaded, serve_trace, CpuBackend, Executor, LoadgenOptions,
@@ -249,6 +261,9 @@ fn main() {
     let json_path = baseline::flag_value(&argv, "--json");
     let check_path = baseline::flag_value(&argv, "--check");
     let pin_path = baseline::flag_value(&argv, "--pin");
+    let storm_gate: Option<f64> = baseline::flag_value(&argv, "--require-storm-speedup").map(|v| {
+        v.parse().unwrap_or_else(|_| panic!("--require-storm-speedup wants a number, got {v}"))
+    });
 
     let cfg = VtaConfig::pynq();
     if !fast {
@@ -469,6 +484,72 @@ fn main() {
     );
     println!("pipeline outputs and per-stage cache counters match the oracle bit-exactly");
 
+    // ---- cold-start compile storm: concurrent vs serial JIT -----------
+    // Four style classes share one architecture but carry different
+    // weights: their conv plans are four disjoint key sets (the weight
+    // image lives inside the plan), while the weightless eltwise plans
+    // are shared keys. Submitted to a *paused* 4-replica pool and
+    // released at once, all four workers hit a cold plan directory
+    // together. `serial_compile` lowers every plan under the directory
+    // lock (the pre-concurrent behavior); the concurrent path lowers
+    // disjoint keys in parallel and parks only on another worker's
+    // in-flight claim.
+    let storm_graphs_owned: Vec<Graph> = (0..4)
+        .map(|c| {
+            let (mut g, _) =
+                fuse(style::style_net(1, 16, 16, 900 + 17 * c as u64).unwrap()).unwrap();
+            partition(&mut g, &PartitionPolicy::offload_all(&cfg));
+            g
+        })
+        .collect();
+    let storm_graphs: Vec<&Graph> = storm_graphs_owned.iter().collect();
+    let storm_trace: Vec<(usize, Tensor<i8>)> =
+        (0..4).map(|c| (c, synth_input(400 + c as u64, 1, 3, 16, 16))).collect();
+    let storm_spec = FleetSpec::homogeneous(&cfg, 4);
+    let storm_serial = storm_run(&storm_spec, &records, &storm_graphs, &storm_trace, true);
+    let storm_conc = storm_run(&storm_spec, &records, &storm_graphs, &storm_trace, false);
+    assert_eq!(
+        storm_serial.outputs, storm_conc.outputs,
+        "serial and concurrent compile modes must produce identical outputs"
+    );
+    assert_eq!(storm_serial.routes, storm_conc.routes, "compile mode must not affect routing");
+    assert_eq!(
+        storm_serial.group_cache, storm_conc.group_cache,
+        "serial and concurrent compile modes must land on identical cache counters"
+    );
+    // Anchor both modes to the naive single-device serial executor.
+    let mut storm_ex = Executor::new(VtaRuntime::new(&cfg, 256 << 20), CpuBackend::Native);
+    for (i, (c, input)) in storm_trace.iter().enumerate() {
+        let expect = storm_ex.run(storm_graphs[*c], input).unwrap().output;
+        assert_eq!(
+            storm_conc.outputs[i], expect,
+            "storm request {i} diverged from the serial executor"
+        );
+    }
+    let storm_speedup =
+        storm_serial.wall.as_secs_f64() / storm_conc.wall.as_secs_f64().max(1e-9);
+    println!("\n# cold-start compile storm: 4 weight-distinct style classes, cold 4-replica pool");
+    println!(
+        "serial-compile: wall {:>8.1} ms  ({} directory locks, {} claim waits)",
+        storm_serial.wall.as_secs_f64() * 1e3,
+        storm_serial.contention.directory_locks,
+        storm_serial.contention.claim_waits
+    );
+    println!(
+        "concurrent JIT: wall {:>8.1} ms  ({} directory locks, {} claim waits)",
+        storm_conc.wall.as_secs_f64() * 1e3,
+        storm_conc.contention.directory_locks,
+        storm_conc.contention.claim_waits
+    );
+    println!("storm speedup {storm_speedup:.2}x; outputs and counters bit-equal across modes");
+    if let Some(need) = storm_gate {
+        assert!(
+            storm_speedup >= need,
+            "cold-start storm speedup {storm_speedup:.2}x is below the required {need:.2}x"
+        );
+        println!("storm gate passed: {storm_speedup:.2}x >= {need:.2}x");
+    }
+
     // ---- serving snapshot: emit / diff BENCH_serving.json -------------
     let snapshot = render_snapshot(
         vta_s,
@@ -479,6 +560,9 @@ fn main() {
         &thread_throughput,
         &load,
         &pipeline_rows,
+        &storm_serial,
+        &storm_conc,
+        storm_speedup,
     );
     if let Some(path) = &json_path {
         std::fs::write(path, &snapshot).unwrap_or_else(|e| panic!("writing {path}: {e}"));
@@ -492,6 +576,33 @@ fn main() {
     }
 }
 
+/// One cold-start storm run: the trace is queued while the pool is
+/// paused, then released to all four workers at once. `serial` picks
+/// the compile discipline being A/B'd.
+fn storm_run(
+    spec: &FleetSpec,
+    records: &TuningRecords,
+    graphs: &[&Graph],
+    trace: &[(usize, Tensor<i8>)],
+    serial: bool,
+) -> FleetThreadedReport {
+    let mut fopts = FleetThreadedOptions::new(RoutePolicy::RoundRobin);
+    fopts.max_batch = 1;
+    fopts.virtual_threads = 2;
+    fopts.cache_capacity = 256;
+    fopts.dram_size = 256 << 20;
+    fopts.start_paused = true;
+    fopts.serial_compile = serial;
+    let ((), report) = run_fleet_threaded(spec, &fopts, records, graphs, |handle| {
+        for (class, input) in trace {
+            handle.submit(*class, input.clone()).expect("storm queue open while paused");
+        }
+        handle.resume();
+    })
+    .unwrap();
+    report
+}
+
 /// A latency percentile in milliseconds, or JSON `null` when the step
 /// had no samples (the loadgen reports NaN then — the hand-rolled JSON
 /// layer has no NaN, and `null` is the honest rendering).
@@ -503,7 +614,8 @@ fn ms_or_null(seconds: f64) -> String {
     }
 }
 
-/// Render the `BENCH_serving.json` snapshot (schema 2: adds the
+/// Render the `BENCH_serving.json` snapshot (schema 3: adds the
+/// cold-start compile-storm section; schema 2 added the
 /// pipeline-parallel section; ramp percentiles render `null` on
 /// no-sample steps). The `deterministic` section must be
 /// byte-reproducible across runs and hosts (counters, fingerprints,
@@ -519,6 +631,9 @@ fn render_snapshot(
     thread_throughput: &[(usize, f64)],
     load: &vta::exec::LoadReport,
     pipeline_rows: &[(usize, &PipelinePartition, f64, f64, f64, Vec<u64>)],
+    storm_serial: &FleetThreadedReport,
+    storm_conc: &FleetThreadedReport,
+    storm_speedup: f64,
 ) -> String {
     let fps: Vec<String> = threaded
         .outputs
@@ -574,16 +689,52 @@ fn render_snapshot(
             format!("      {{\"stages\": {k}, \"wall_ms\": {wall_ms:.1}, \"throughput_rps\": {rps:.3}}}")
         })
         .collect();
+    let storm_cache = &storm_conc.group_cache[0];
+    let storm_lookups = storm_cache.hits + storm_cache.misses;
+    let storm_classes = {
+        let mut cs = storm_conc.classes.clone();
+        cs.sort_unstable();
+        cs.dedup();
+        cs.len()
+    };
+    let storm_fps: Vec<String> = storm_conc
+        .outputs
+        .iter()
+        .map(|t| fnv1a64(t.data().iter().map(|&v| v as u8)).to_string())
+        .collect();
+    let storm_det = format!(
+        "{{\"classes\": {}, \"requests\": {}, \"unique_plans\": {}, \"hits\": {}, \
+         \"lookups\": {}, \"output_fp\": [{}]}}",
+        storm_classes,
+        storm_conc.outputs.len(),
+        storm_cache.misses,
+        storm_cache.hits,
+        storm_lookups,
+        storm_fps.join(", ")
+    );
+    let storm_meas = format!(
+        "{{\"serial_wall_ms\": {:.1}, \"concurrent_wall_ms\": {:.1}, \"speedup\": {:.4}, \
+         \"serial_directory_locks\": {}, \"concurrent_directory_locks\": {}, \
+         \"concurrent_claim_waits\": {}}}",
+        storm_serial.wall.as_secs_f64() * 1e3,
+        storm_conc.wall.as_secs_f64() * 1e3,
+        storm_speedup,
+        storm_serial.contention.directory_locks,
+        storm_conc.contention.directory_locks,
+        storm_conc.contention.claim_waits
+    );
     format!(
-        "{{\n  \"schema\": 2,\n  \"workload\": \"style-transfer-32x32\",\n  \
+        "{{\n  \"schema\": 3,\n  \"workload\": \"style-transfer-32x32\",\n  \
          \"deterministic\": {{\n    \"requests\": {},\n    \"vta_nodes\": {},\n    \
          \"cpu_nodes\": {},\n    \"unique_plans\": {},\n    \"hits\": {},\n    \
-         \"lookups\": {},\n    \"output_fp\": [{}],\n    \"pipeline\": [\n{}\n    ]\n  }},\n  \
+         \"lookups\": {},\n    \"output_fp\": [{}],\n    \"pipeline\": [\n{}\n    ],\n    \
+         \"storm\": {}\n  }},\n  \
          \"measured\": {{\n    \
          \"cache_hit_rate\": {:.6},\n    \"queue_wait_p50_ms\": {:.4},\n    \
          \"queue_wait_p99_ms\": {:.4},\n    \"service_p50_ms\": {:.4},\n    \
          \"service_p99_ms\": {:.4},\n    \"thread_sweep\": [\n{}\n    ],\n    \
-         \"ramp\": [\n{}\n    ],\n    \"pipeline\": [\n{}\n    ]\n  }}\n}}\n",
+         \"ramp\": [\n{}\n    ],\n    \"pipeline\": [\n{}\n    ],\n    \
+         \"storm\": {}\n  }}\n}}\n",
         inputs.len(),
         vta_nodes,
         cpu_nodes,
@@ -592,6 +743,7 @@ fn render_snapshot(
         lookups,
         fps.join(", "),
         pipe_det.join(",\n"),
+        storm_det,
         hit_rate,
         threaded.queue_wait.percentile(0.50) * 1e3,
         threaded.queue_wait.percentile(0.99) * 1e3,
@@ -599,6 +751,7 @@ fn render_snapshot(
         threaded.service.percentile(0.99) * 1e3,
         thr.join(",\n"),
         steps.join(",\n"),
-        pipe_meas.join(",\n")
+        pipe_meas.join(",\n"),
+        storm_meas
     )
 }

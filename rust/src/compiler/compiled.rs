@@ -38,6 +38,7 @@ use super::plan::{
     MatmulParams, ScheduleChoice,
 };
 use super::upsample::{emit_upsample2x, UpsampleDramBase};
+use crate::arch::VtaConfig;
 use crate::graph::Op;
 use crate::runtime::{CommandContext, Device, DramBuffer, RuntimeError, SealedStream, VtaRuntime};
 use crate::sim::SimStats;
@@ -136,12 +137,14 @@ impl CompiledNode {
     }
 
     /// Release the plan's DRAM residency (cache eviction).
+    ///
+    /// Frees in **layout order** — the same order the buffers were
+    /// allocated (and the order [`free_reserved_layout`] releases a
+    /// not-yet-materialized reservation) — so every replica's free-list
+    /// history stays identical whether it evicts a finished plan or a
+    /// reservation whose lowering it never observed.
     pub fn free(self, rt: &mut VtaRuntime) -> Result<(), CompileError> {
-        for buf in self.inp_bufs {
-            rt.dram.free(buf)?;
-        }
-        rt.dram.free(self.out_buf)?;
-        for buf in self.baked_bufs {
+        for (buf, _) in self.layout {
             rt.dram.free(buf)?;
         }
         Ok(())
@@ -282,6 +285,112 @@ impl PlanBlueprint {
         }
         Ok(self.node.clone_artifact())
     }
+
+    /// Instantiate the plan into DRAM buffers that were **already
+    /// reserved** from the plan's published allocation requirements
+    /// (the threaded runtime's deferred-materialization path: a replica
+    /// reserves the layout while the owning worker is still lowering,
+    /// then fills it in here once the blueprint is published).
+    ///
+    /// The reservation must coincide exactly with the layout the sealed
+    /// streams baked in — same addresses, same sizes — else the replica
+    /// diverged from the publish log and the error is surfaced rather
+    /// than mis-addressed.
+    pub fn materialize_reserved(
+        &self,
+        dst: &mut VtaRuntime,
+        bufs: &[DramBuffer],
+    ) -> Result<CompiledNode, CompileError> {
+        debug_assert_eq!(bufs.len(), self.node.layout.len(), "reservation shape mismatch");
+        for (&got, &(want, _)) in bufs.iter().zip(&self.node.layout) {
+            if got.addr != want.addr || got.len != want.len {
+                return Err(CompileError::ReplicaDiverged { expected: want.addr, got: got.addr });
+            }
+        }
+        for (buf, image) in self.node.baked_bufs.iter().zip(&self.baked_images) {
+            dst.device.write(buf.addr, image).map_err(RuntimeError::Sim)?;
+        }
+        Ok(self.node.clone_artifact())
+    }
+}
+
+/// The reserve/lower split of a plan compile: everything that can run
+/// **outside** the serving runtime's directory lock, packaged around
+/// the one decision that must be published under it — the DRAM
+/// allocation requirements.
+///
+/// `prepare_*` does the input-independent planning and constant packing
+/// up front and captures the expensive emission step as a closure;
+/// [`Self::reqs`] is what a plan directory appends to its event log so
+/// every replica can reserve the identical layout immediately, and
+/// [`Self::lower_into`] runs the emission against the reserved buffers
+/// with no lock held. [`Self::finish`] is the one-shot convenience
+/// (allocate + lower) that keeps the classic `compile_*` entry points
+/// byte-identical in behavior.
+pub struct PreparedPlan {
+    reqs: Vec<(usize, usize)>,
+    #[allow(clippy::type_complexity)]
+    lower: Box<dyn FnOnce(&mut VtaRuntime, &[DramBuffer]) -> Result<CompiledNode, CompileError> + Send>,
+}
+
+impl PreparedPlan {
+    fn new<F>(reqs: Vec<(usize, usize)>, lower: F) -> Self
+    where
+        F: FnOnce(&mut VtaRuntime, &[DramBuffer]) -> Result<CompiledNode, CompileError>
+            + Send
+            + 'static,
+    {
+        PreparedPlan { reqs, lower: Box::new(lower) }
+    }
+
+    /// DRAM allocation requirements `(len, align)`, in layout order —
+    /// the reservation a plan directory publishes so replicas replay
+    /// the identical allocator history without waiting for the lower.
+    pub fn reqs(&self) -> &[(usize, usize)] {
+        &self.reqs
+    }
+
+    /// Lower into buffers the caller already allocated (one per entry
+    /// of [`Self::reqs`], same order). On error the buffers are left
+    /// allocated — the caller owns the unwinding, because on a pool the
+    /// release must be sequenced against the shared event log.
+    pub fn lower_into(
+        self,
+        rt: &mut VtaRuntime,
+        bufs: &[DramBuffer],
+    ) -> Result<CompiledNode, CompileError> {
+        debug_assert_eq!(bufs.len(), self.reqs.len(), "one buffer per requirement");
+        (self.lower)(rt, bufs)
+    }
+
+    /// Allocate the buffer group and lower into it — the single-device
+    /// path. A failed lower releases the group, leaving the allocator
+    /// untouched (the same guarantee the pre-split `compile_*` bodies
+    /// gave).
+    pub fn finish(self, rt: &mut VtaRuntime) -> Result<CompiledNode, CompileError> {
+        let bufs = alloc_group(rt, &self.reqs)?;
+        match (self.lower)(rt, &bufs) {
+            Ok(node) => Ok(node),
+            Err(e) => {
+                free_group(rt, &bufs);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Release a reserved-but-never-materialized layout, in layout order —
+/// the eviction twin of [`CompiledNode::free`] for replicas that
+/// reserved a plan's buffers and saw it evicted before the blueprint
+/// arrived.
+pub(crate) fn free_reserved_layout(
+    rt: &mut VtaRuntime,
+    bufs: &[DramBuffer],
+) -> Result<(), CompileError> {
+    for &b in bufs {
+        rt.dram.free(b)?;
+    }
+    Ok(())
 }
 
 /// Allocate a plan's DRAM buffers as one atomic group: on any failure
@@ -291,7 +400,7 @@ impl PlanBlueprint {
 /// device pool it would silently diverge replica 0's allocator history
 /// from the other replicas' and poison every later
 /// [`CompiledNode::replicate_to`].
-fn alloc_group(
+pub(crate) fn alloc_group(
     rt: &mut VtaRuntime,
     reqs: &[(usize, usize)],
 ) -> Result<Vec<DramBuffer>, CompileError> {
@@ -309,7 +418,7 @@ fn alloc_group(
 }
 
 /// Best-effort release of a buffer group (error-path unwinding).
-fn free_group(rt: &mut VtaRuntime, bufs: &[DramBuffer]) {
+pub(crate) fn free_group(rt: &mut VtaRuntime, bufs: &[DramBuffer]) {
     for &b in bufs {
         let _ = rt.dram.free(b);
     }
@@ -378,7 +487,23 @@ fn compile_conv2d_chain(
     schedule: Option<&ScheduleChoice>,
 ) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_conv2d_fused(&cfg, p, steps, virtual_threads, schedule)?;
+    prepare_conv2d_chain(&cfg, p, steps, wgt_packed.to_vec(), virtual_threads, schedule)?
+        .finish(rt)
+}
+
+/// The reserve/lower split of [`compile_conv2d_fused`]: planning and
+/// the allocation-requirement computation run here (no runtime access,
+/// so no lock needed on a shared pool); weight copy-in, emission and
+/// sealing are captured in the returned [`PreparedPlan`]'s lower step.
+pub fn prepare_conv2d_chain(
+    cfg: &VtaConfig,
+    p: &Conv2dParams,
+    steps: &[FusedStep],
+    wgt_packed: Vec<i8>,
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<PreparedPlan, CompileError> {
+    let plan = plan_conv2d_fused(cfg, p, steps, virtual_threads, schedule)?;
     let residual = steps.contains(&FusedStep::AddResidual);
 
     let inp_tile_bytes = cfg.inp_tile_bytes();
@@ -401,58 +526,59 @@ fn compile_conv2d_chain(
         alloc_reqs.push((out_tiles * acc_tile_bytes, acc_tile_bytes));
     }
     alloc_reqs.push((NODE_UOP_ARENA_BYTES, 4));
-    let bufs = alloc_group(rt, &alloc_reqs)?;
-    let (inp_buf, wgt_buf, out_buf) = (bufs[0], bufs[1], bufs[2]);
-    let res_buf = residual.then(|| bufs[3]);
-    let uop_buf = *bufs.last().expect("arena allocated");
-    if let Err(e) = rt.copy_in(&wgt_buf, bytes_of_i8(wgt_packed)) {
-        free_group(rt, &bufs);
-        return Err(e.into());
-    }
 
-    let base = ConvDramBase {
-        inp: (inp_buf.addr / inp_tile_bytes) as u32,
-        wgt: (wgt_buf.addr / wgt_tile_bytes) as u32,
-        out: (out_buf.addr / out_tile_bytes) as u32,
-        res: res_buf.map(|b| (b.addr / acc_tile_bytes) as u32),
-    };
+    let cfg = cfg.clone();
+    let p = *p;
+    let steps = steps.to_vec();
+    let schedule = schedule.copied();
+    Ok(PreparedPlan::new(alloc_reqs, move |rt, bufs| {
+        let (inp_buf, wgt_buf, out_buf) = (bufs[0], bufs[1], bufs[2]);
+        let res_buf = residual.then(|| bufs[3]);
+        let uop_buf = *bufs.last().expect("arena allocated");
+        rt.copy_in(&wgt_buf, bytes_of_i8(&wgt_packed))?;
 
-    // Record into a dedicated context over this node's private kernel
-    // arena; every drain boundary seals one self-contained stream.
-    let mut ctx =
-        CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
-    let mut streams = Vec::new();
-    if let Err(e) = emit_conv2d(&mut ctx, p, &plan, base, steps, |ctx| {
-        streams.push(ctx.seal()?);
-        Ok(())
-    }) {
-        free_group(rt, &bufs);
-        return Err(e);
-    }
+        let base = ConvDramBase {
+            inp: (inp_buf.addr / inp_tile_bytes) as u32,
+            wgt: (wgt_buf.addr / wgt_tile_bytes) as u32,
+            out: (out_buf.addr / out_tile_bytes) as u32,
+            res: res_buf.map(|b| (b.addr / acc_tile_bytes) as u32),
+        };
 
-    let op = if steps.is_empty() {
-        Op::Conv2d { p: *p }
-    } else {
-        Op::FusedConv2d { p: *p, steps: steps.to_vec() }
-    };
-    let mut inp_bufs = vec![inp_buf];
-    inp_bufs.extend(res_buf);
-    let mut layout = vec![
-        (inp_buf, inp_tile_bytes),
-        (wgt_buf, wgt_tile_bytes),
-        (out_buf, out_tile_bytes),
-    ];
-    layout.extend(res_buf.map(|b| (b, acc_tile_bytes)));
-    layout.push((uop_buf, 4));
-    Ok(CompiledNode {
-        op,
-        schedule: schedule.copied(),
-        streams,
-        inp_bufs,
-        out_buf,
-        baked_bufs: vec![wgt_buf, uop_buf],
-        layout,
-    })
+        // Record into a dedicated context over this node's private
+        // kernel arena; every drain boundary seals one self-contained
+        // stream.
+        let mut ctx =
+            CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
+        let mut streams = Vec::new();
+        emit_conv2d(&mut ctx, &p, &plan, base, &steps, |ctx| {
+            streams.push(ctx.seal()?);
+            Ok(())
+        })?;
+
+        let op = if steps.is_empty() {
+            Op::Conv2d { p }
+        } else {
+            Op::FusedConv2d { p, steps: steps.clone() }
+        };
+        let mut inp_bufs = vec![inp_buf];
+        inp_bufs.extend(res_buf);
+        let mut layout = vec![
+            (inp_buf, inp_tile_bytes),
+            (wgt_buf, wgt_tile_bytes),
+            (out_buf, out_tile_bytes),
+        ];
+        layout.extend(res_buf.map(|b| (b, acc_tile_bytes)));
+        layout.push((uop_buf, 4));
+        Ok(CompiledNode {
+            op,
+            schedule,
+            streams,
+            inp_bufs,
+            out_buf,
+            baked_bufs: vec![wgt_buf, uop_buf],
+            layout,
+        })
+    }))
 }
 
 /// Compile one dense (matmul) layer into a reusable [`CompiledNode`] —
@@ -480,7 +606,19 @@ pub fn compile_dense_tuned(
     schedule: Option<&ScheduleChoice>,
 ) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_matmul_tuned(&cfg, p, virtual_threads, schedule)?;
+    prepare_dense_tuned(&cfg, p, wgt_packed.to_vec(), virtual_threads, schedule)?.finish(rt)
+}
+
+/// The reserve/lower split of [`compile_dense_tuned`] (see
+/// [`prepare_conv2d_chain`]).
+pub fn prepare_dense_tuned(
+    cfg: &VtaConfig,
+    p: &MatmulParams,
+    wgt_packed: Vec<i8>,
+    virtual_threads: usize,
+    schedule: Option<&ScheduleChoice>,
+) -> Result<PreparedPlan, CompileError> {
+    let plan = plan_matmul_tuned(cfg, p, virtual_threads, schedule)?;
     let m_rows = p.m / cfg.gemm.batch;
 
     let inp_tile_bytes = cfg.inp_tile_bytes();
@@ -489,52 +627,49 @@ pub fn compile_dense_tuned(
     let a_bytes = m_rows * plan.kb * inp_tile_bytes;
     let out_tiles = m_rows * plan.nb;
 
-    let bufs = alloc_group(
-        rt,
-        &[
-            (a_bytes, inp_tile_bytes),
-            (wgt_packed.len(), wgt_tile_bytes),
-            (out_tiles * out_tile_bytes, out_tile_bytes),
-            (NODE_UOP_ARENA_BYTES, 4),
-        ],
-    )?;
-    let (a_buf, w_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2], bufs[3]);
-    if let Err(e) = rt.copy_in(&w_buf, bytes_of_i8(wgt_packed)) {
-        free_group(rt, &bufs);
-        return Err(e.into());
-    }
+    let alloc_reqs = vec![
+        (a_bytes, inp_tile_bytes),
+        (wgt_packed.len(), wgt_tile_bytes),
+        (out_tiles * out_tile_bytes, out_tile_bytes),
+        (NODE_UOP_ARENA_BYTES, 4),
+    ];
 
-    let base = MatmulDramBase {
-        a: (a_buf.addr / inp_tile_bytes) as u32,
-        w: (w_buf.addr / wgt_tile_bytes) as u32,
-        c: (out_buf.addr / out_tile_bytes) as u32,
-    };
+    let cfg = cfg.clone();
+    let p = *p;
+    let schedule = schedule.copied();
+    Ok(PreparedPlan::new(alloc_reqs, move |rt, bufs| {
+        let (a_buf, w_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2], bufs[3]);
+        rt.copy_in(&w_buf, bytes_of_i8(&wgt_packed))?;
 
-    let mut ctx =
-        CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
-    let mut streams = Vec::new();
-    if let Err(e) = emit_matmul(&mut ctx, p, &plan, base, |ctx| {
-        streams.push(ctx.seal()?);
-        Ok(())
-    }) {
-        free_group(rt, &bufs);
-        return Err(e);
-    }
+        let base = MatmulDramBase {
+            a: (a_buf.addr / inp_tile_bytes) as u32,
+            w: (w_buf.addr / wgt_tile_bytes) as u32,
+            c: (out_buf.addr / out_tile_bytes) as u32,
+        };
 
-    Ok(CompiledNode {
-        op: Op::Dense { p: *p },
-        schedule: schedule.copied(),
-        streams,
-        inp_bufs: vec![a_buf],
-        out_buf,
-        baked_bufs: vec![w_buf, uop_buf],
-        layout: vec![
-            (a_buf, inp_tile_bytes),
-            (w_buf, wgt_tile_bytes),
-            (out_buf, out_tile_bytes),
-            (uop_buf, 4),
-        ],
-    })
+        let mut ctx =
+            CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, NODE_UOP_ARENA_BYTES / 4);
+        let mut streams = Vec::new();
+        emit_matmul(&mut ctx, &p, &plan, base, |ctx| {
+            streams.push(ctx.seal()?);
+            Ok(())
+        })?;
+
+        Ok(CompiledNode {
+            op: Op::Dense { p },
+            schedule,
+            streams,
+            inp_bufs: vec![a_buf],
+            out_buf,
+            baked_bufs: vec![w_buf, uop_buf],
+            layout: vec![
+                (a_buf, inp_tile_bytes),
+                (w_buf, wgt_tile_bytes),
+                (out_buf, out_tile_bytes),
+                (uop_buf, 4),
+            ],
+        })
+    }))
 }
 
 /// Compile one elementwise tensor-ALU operator over `len` int8
@@ -548,7 +683,18 @@ pub fn compile_eltwise(
     virtual_threads: usize,
 ) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_eltwise(&cfg, len, kind.operands(), virtual_threads)?;
+    prepare_eltwise(&cfg, kind, len, virtual_threads)?.finish(rt)
+}
+
+/// The reserve/lower split of [`compile_eltwise`] (see
+/// [`prepare_conv2d_chain`]).
+pub fn prepare_eltwise(
+    cfg: &VtaConfig,
+    kind: EltwiseKind,
+    len: usize,
+    virtual_threads: usize,
+) -> Result<PreparedPlan, CompileError> {
+    let plan = plan_eltwise(cfg, len, kind.operands(), virtual_threads)?;
 
     let acc_tile_bytes = cfg.acc_tile_bytes();
     let out_tile_bytes = cfg.out_tile_bytes();
@@ -556,40 +702,43 @@ pub fn compile_eltwise(
         vec![(plan.tiles * acc_tile_bytes, acc_tile_bytes); kind.operands()];
     alloc_reqs.push((plan.tiles * out_tile_bytes, out_tile_bytes));
     alloc_reqs.push((ELTWISE_UOP_ARENA_BYTES, 4));
-    let bufs = alloc_group(rt, &alloc_reqs)?;
-    let inp_bufs: Vec<DramBuffer> = bufs[..kind.operands()].to_vec();
-    let out_buf = bufs[kind.operands()];
-    let uop_buf = bufs[kind.operands() + 1];
 
-    let base = EltwiseDramBase {
-        inputs: inp_bufs.iter().map(|b| (b.addr / acc_tile_bytes) as u32).collect(),
-        out: (out_buf.addr / out_tile_bytes) as u32,
-    };
+    let cfg = cfg.clone();
+    Ok(PreparedPlan::new(alloc_reqs, move |_rt, bufs| {
+        let inp_bufs: Vec<DramBuffer> = bufs[..kind.operands()].to_vec();
+        let out_buf = bufs[kind.operands()];
+        let uop_buf = bufs[kind.operands() + 1];
 
-    let mut ctx =
-        CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, ELTWISE_UOP_ARENA_BYTES / 4);
-    let mut streams = Vec::new();
-    if let Err(e) = emit_eltwise(&mut ctx, kind, &plan, &base, |ctx| {
-        streams.push(ctx.seal()?);
-        Ok(())
-    }) {
-        free_group(rt, &bufs);
-        return Err(e);
-    }
+        let base = EltwiseDramBase {
+            inputs: inp_bufs.iter().map(|b| (b.addr / acc_tile_bytes) as u32).collect(),
+            out: (out_buf.addr / out_tile_bytes) as u32,
+        };
 
-    let mut layout: Vec<(DramBuffer, usize)> =
-        inp_bufs.iter().map(|&b| (b, acc_tile_bytes)).collect();
-    layout.push((out_buf, out_tile_bytes));
-    layout.push((uop_buf, 4));
-    Ok(CompiledNode {
-        op: kind.graph_op(),
-        schedule: None,
-        streams,
-        inp_bufs,
-        out_buf,
-        baked_bufs: vec![uop_buf],
-        layout,
-    })
+        let mut ctx = CommandContext::with_arena(
+            &cfg,
+            (uop_buf.addr / 4) as u32,
+            ELTWISE_UOP_ARENA_BYTES / 4,
+        );
+        let mut streams = Vec::new();
+        emit_eltwise(&mut ctx, kind, &plan, &base, |ctx| {
+            streams.push(ctx.seal()?);
+            Ok(())
+        })?;
+
+        let mut layout: Vec<(DramBuffer, usize)> =
+            inp_bufs.iter().map(|&b| (b, acc_tile_bytes)).collect();
+        layout.push((out_buf, out_tile_bytes));
+        layout.push((uop_buf, 4));
+        Ok(CompiledNode {
+            op: kind.graph_op(),
+            schedule: None,
+            streams,
+            inp_bufs,
+            out_buf,
+            baked_bufs: vec![uop_buf],
+            layout,
+        })
+    }))
 }
 
 /// Compile one nearest-neighbor 2x upsampling over an `[n, c, h, w]`
@@ -605,43 +754,57 @@ pub fn compile_upsample2x(
     virtual_threads: usize,
 ) -> Result<CompiledNode, CompileError> {
     let cfg = rt.ctx.config().clone();
-    let plan = plan_upsample2x(&cfg, n, c, h, w, virtual_threads)?;
+    prepare_upsample2x(&cfg, n, c, h, w, virtual_threads)?.finish(rt)
+}
+
+/// The reserve/lower split of [`compile_upsample2x`] (see
+/// [`prepare_conv2d_chain`]).
+pub fn prepare_upsample2x(
+    cfg: &VtaConfig,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    virtual_threads: usize,
+) -> Result<PreparedPlan, CompileError> {
+    let plan = plan_upsample2x(cfg, n, c, h, w, virtual_threads)?;
 
     let acc_tile_bytes = cfg.acc_tile_bytes();
     let out_tile_bytes = cfg.out_tile_bytes();
-    let bufs = alloc_group(
-        rt,
-        &[
-            (plan.in_tiles() * acc_tile_bytes, acc_tile_bytes),
-            (plan.out_tiles() * out_tile_bytes, out_tile_bytes),
-            (ELTWISE_UOP_ARENA_BYTES, 4),
-        ],
-    )?;
-    let (inp_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2]);
+    let alloc_reqs = vec![
+        (plan.in_tiles() * acc_tile_bytes, acc_tile_bytes),
+        (plan.out_tiles() * out_tile_bytes, out_tile_bytes),
+        (ELTWISE_UOP_ARENA_BYTES, 4),
+    ];
 
-    let base = UpsampleDramBase {
-        inp: (inp_buf.addr / acc_tile_bytes) as u32,
-        out: (out_buf.addr / out_tile_bytes) as u32,
-    };
+    let cfg = cfg.clone();
+    Ok(PreparedPlan::new(alloc_reqs, move |_rt, bufs| {
+        let (inp_buf, out_buf, uop_buf) = (bufs[0], bufs[1], bufs[2]);
 
-    let mut ctx =
-        CommandContext::with_arena(&cfg, (uop_buf.addr / 4) as u32, ELTWISE_UOP_ARENA_BYTES / 4);
-    let mut streams = Vec::new();
-    if let Err(e) = emit_upsample2x(&mut ctx, &plan, base, |ctx| {
-        streams.push(ctx.seal()?);
-        Ok(())
-    }) {
-        free_group(rt, &bufs);
-        return Err(e);
-    }
+        let base = UpsampleDramBase {
+            inp: (inp_buf.addr / acc_tile_bytes) as u32,
+            out: (out_buf.addr / out_tile_bytes) as u32,
+        };
 
-    Ok(CompiledNode {
-        op: Op::Upsample2x,
-        schedule: None,
-        streams,
-        inp_bufs: vec![inp_buf],
-        out_buf,
-        baked_bufs: vec![uop_buf],
-        layout: vec![(inp_buf, acc_tile_bytes), (out_buf, out_tile_bytes), (uop_buf, 4)],
-    })
+        let mut ctx = CommandContext::with_arena(
+            &cfg,
+            (uop_buf.addr / 4) as u32,
+            ELTWISE_UOP_ARENA_BYTES / 4,
+        );
+        let mut streams = Vec::new();
+        emit_upsample2x(&mut ctx, &plan, base, |ctx| {
+            streams.push(ctx.seal()?);
+            Ok(())
+        })?;
+
+        Ok(CompiledNode {
+            op: Op::Upsample2x,
+            schedule: None,
+            streams,
+            inp_bufs: vec![inp_buf],
+            out_buf,
+            baked_bufs: vec![uop_buf],
+            layout: vec![(inp_buf, acc_tile_bytes), (out_buf, out_tile_bytes), (uop_buf, 4)],
+        })
+    }))
 }

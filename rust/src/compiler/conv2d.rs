@@ -54,6 +54,8 @@ pub enum CompileError {
          {got:#x} — pool caches were not driven in lockstep"
     )]
     ReplicaDiverged { expected: usize, got: usize },
+    #[error("shared compile failed on the owning worker: {0}")]
+    ClaimFailed(String),
 }
 
 /// Result of running a lowered conv2d on the device.

@@ -39,7 +39,9 @@ pub mod virtual_thread;
 pub use alu::EltwiseKind;
 pub use compiled::{
     compile_conv2d, compile_conv2d_fused, compile_conv2d_tuned, compile_dense,
-    compile_dense_tuned, compile_eltwise, compile_upsample2x, CompiledNode, PlanBlueprint,
+    compile_dense_tuned, compile_eltwise, compile_upsample2x, prepare_conv2d_chain,
+    prepare_dense_tuned, prepare_eltwise, prepare_upsample2x, CompiledNode, PlanBlueprint,
+    PreparedPlan,
 };
 pub use conv2d::{lower_conv2d, lower_conv2d_tuned, CompileError, Conv2dOutput};
 pub use layout::{

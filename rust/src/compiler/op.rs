@@ -25,8 +25,8 @@
 //! worked "add your own operator" walkthrough.
 
 use super::compiled::{
-    compile_conv2d_fused, compile_conv2d_tuned, compile_dense_tuned, compile_eltwise,
-    compile_upsample2x, CompiledNode,
+    prepare_conv2d_chain, prepare_dense_tuned, prepare_eltwise, prepare_upsample2x, CompiledNode,
+    PreparedPlan,
 };
 use super::conv2d::CompileError;
 use super::layout::{
@@ -169,23 +169,43 @@ pub trait VtaOp: Sync {
         None
     }
 
-    /// Compile-once: perform all input-independent lowering (plan,
-    /// pack + copy constants into DRAM residency, record + seal the
-    /// instruction streams) and return the replayable artifact.
+    /// Compile-once, reserve half: plan the lowering, pack the node's
+    /// constants, and pin down the DRAM allocation requirements —
+    /// *without* touching a runtime, so a pool scheduler can run this
+    /// outside (or with) its directory lock and compile distinct plans
+    /// concurrently. The returned [`PreparedPlan`] carries the
+    /// allocation request list plus the runtime half (constant
+    /// copy-in, emission, stream sealing) as a deferred lower step.
     ///
     /// `schedule` is an optional tuned tiling from the DSE record
     /// store ([`crate::dse`]); operators without tunable schedules
     /// ignore it. The default refuses — CPU-resident operators report
     /// [`CompileError::NotOffloadable`].
-    fn compile(
+    fn prepare(
         &self,
-        _rt: &mut VtaRuntime,
+        _cfg: &VtaConfig,
         _g: &Graph,
         _node: &Node,
         _virtual_threads: usize,
         _schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
+    ) -> Result<PreparedPlan, CompileError> {
         Err(CompileError::NotOffloadable(self.kind()))
+    }
+
+    /// Compile-once: perform all input-independent lowering (plan,
+    /// pack + copy constants into DRAM residency, record + seal the
+    /// instruction streams) and return the replayable artifact —
+    /// [`Self::prepare`] followed by [`PreparedPlan::finish`] on `rt`.
+    fn compile(
+        &self,
+        rt: &mut VtaRuntime,
+        g: &Graph,
+        node: &Node,
+        virtual_threads: usize,
+        schedule: Option<&ScheduleChoice>,
+    ) -> Result<CompiledNode, CompileError> {
+        let cfg = rt.ctx.config().clone();
+        self.prepare(&cfg, g, node, virtual_threads, schedule)?.finish(rt)
     }
 
     /// Run-many, input half: pack the node's variable inputs into the
@@ -337,21 +357,20 @@ impl VtaOp for Conv2dVta {
         ))
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         g: &Graph,
         node: &Node,
         virtual_threads: usize,
         schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
+    ) -> Result<PreparedPlan, CompileError> {
         let Op::Conv2d { p } = &node.op else {
             return Err(CompileError::NotOffloadable(self.kind()));
         };
         let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
-        let cfg = rt.ctx.config().clone();
-        let wp = pack_weights(&cfg, w);
-        compile_conv2d_tuned(rt, p, &wp, virtual_threads, schedule)
+        let wp = pack_weights(cfg, w);
+        prepare_conv2d_chain(cfg, p, &[], wp, virtual_threads, schedule)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -423,24 +442,23 @@ impl VtaOp for FusedConvVta {
         }
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         g: &Graph,
         node: &Node,
         virtual_threads: usize,
         schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
+    ) -> Result<PreparedPlan, CompileError> {
         let Op::FusedConv2d { p, steps } = &node.op else {
             return Err(CompileError::NotOffloadable(self.kind()));
         };
-        let cfg = rt.ctx.config().clone();
-        if !Self::residual_ok(&cfg, node, steps) {
+        if !Self::residual_ok(cfg, node, steps) {
             return Err(CompileError::NotOffloadable(self.kind()));
         }
         let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
-        let wp = pack_weights(&cfg, w);
-        compile_conv2d_fused(rt, p, steps, &wp, virtual_threads, schedule)
+        let wp = pack_weights(cfg, w);
+        prepare_conv2d_chain(cfg, p, steps, wp, virtual_threads, schedule)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -518,21 +536,20 @@ impl VtaOp for DenseVta {
         Some(format!("dense_{}_{}_{}", p.m, p.k, p.n))
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         g: &Graph,
         node: &Node,
         virtual_threads: usize,
         schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
+    ) -> Result<PreparedPlan, CompileError> {
         let Op::Dense { p } = &node.op else {
             return Err(CompileError::NotOffloadable(self.kind()));
         };
         let w = g.weights(node.id).ok_or(CompileError::MissingWeights)?;
-        let cfg = rt.ctx.config().clone();
-        let wp = super::layout::pack_matrix_w(&cfg, w);
-        compile_dense_tuned(rt, p, &wp, virtual_threads, schedule)
+        let wp = super::layout::pack_matrix_w(cfg, w);
+        prepare_dense_tuned(cfg, p, wp, virtual_threads, schedule)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -591,15 +608,15 @@ impl VtaOp for AddVta {
         Some(FusedStep::AddResidual)
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         _g: &Graph,
         node: &Node,
         virtual_threads: usize,
         _schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
-        compile_eltwise(rt, EltwiseKind::AddSat, numel(node), virtual_threads)
+    ) -> Result<PreparedPlan, CompileError> {
+        prepare_eltwise(cfg, EltwiseKind::AddSat, numel(node), virtual_threads)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -648,15 +665,15 @@ impl VtaOp for ReluVta {
         Some(FusedStep::Relu)
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         _g: &Graph,
         node: &Node,
         virtual_threads: usize,
         _schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
-        compile_eltwise(rt, EltwiseKind::Relu, numel(node), virtual_threads)
+    ) -> Result<PreparedPlan, CompileError> {
+        prepare_eltwise(cfg, EltwiseKind::Relu, numel(node), virtual_threads)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -711,18 +728,18 @@ impl VtaOp for MinVta {
         Some(FusedStep::MinImm { imm: *imm })
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         _g: &Graph,
         node: &Node,
         virtual_threads: usize,
         _schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
+    ) -> Result<PreparedPlan, CompileError> {
         let Op::MinImm { imm } = &node.op else {
             return Err(CompileError::NotOffloadable(self.kind()));
         };
-        compile_eltwise(rt, EltwiseKind::MinImm(*imm), numel(node), virtual_threads)
+        prepare_eltwise(cfg, EltwiseKind::MinImm(*imm), numel(node), virtual_threads)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -779,18 +796,18 @@ impl VtaOp for ShrVta {
         Some(FusedStep::ShrImm { shift: *shift })
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         _g: &Graph,
         node: &Node,
         virtual_threads: usize,
         _schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
+    ) -> Result<PreparedPlan, CompileError> {
         let Op::ShrImm { shift } = &node.op else {
             return Err(CompileError::NotOffloadable(self.kind()));
         };
-        compile_eltwise(rt, EltwiseKind::ShrImm(*shift), numel(node), virtual_threads)
+        prepare_eltwise(cfg, EltwiseKind::ShrImm(*shift), numel(node), virtual_threads)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {
@@ -847,19 +864,19 @@ impl VtaOp for UpsampleVta {
         Some(format!("upsample2x_{}", shape_tag(&node.shape)))
     }
 
-    fn compile(
+    fn prepare(
         &self,
-        rt: &mut VtaRuntime,
+        cfg: &VtaConfig,
         _g: &Graph,
         node: &Node,
         virtual_threads: usize,
         _schedule: Option<&ScheduleChoice>,
-    ) -> Result<CompiledNode, CompileError> {
+    ) -> Result<PreparedPlan, CompileError> {
         if !matches!(&node.op, Op::Upsample2x) {
             return Err(CompileError::NotOffloadable(self.kind()));
         }
         let s = &node.shape;
-        compile_upsample2x(rt, s[0], s[1], s[2] / 2, s[3] / 2, virtual_threads)
+        prepare_upsample2x(cfg, s[0], s[1], s[2] / 2, s[3] / 2, virtual_threads)
     }
 
     fn pack_inputs(&self, cfg: &VtaConfig, inputs: &[&Tensor<i8>]) -> Vec<Vec<i8>> {

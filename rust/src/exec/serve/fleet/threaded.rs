@@ -42,7 +42,7 @@ use crate::compiler::op::{config_fingerprint, op_impl};
 use crate::compiler::ScheduleChoice;
 use crate::dse::records::TuningRecords;
 use crate::graph::{stages, Graph, Placement};
-use crate::metrics::{LatencyHistogram, ThreadCounter};
+use crate::metrics::{ContentionStats, LatencyHistogram, ThreadCounter};
 use crate::runtime::{HeterogeneousPool, VtaRuntime};
 use crate::util::Tensor;
 use std::collections::HashMap;
@@ -70,6 +70,9 @@ pub struct FleetThreadedOptions {
     /// Start with workers gated: nothing is served until
     /// [`FleetHandle::resume`].
     pub start_paused: bool,
+    /// Serialize plan compiles under each group's directory lock (the
+    /// pre-concurrent behavior) — the `--serial-compile` A/B baseline.
+    pub serial_compile: bool,
 }
 
 impl FleetThreadedOptions {
@@ -83,6 +86,7 @@ impl FleetThreadedOptions {
             virtual_threads: 1,
             dram_size: 256 << 20,
             start_paused: false,
+            serial_compile: false,
         }
     }
 }
@@ -102,6 +106,7 @@ struct GroupShared<'a> {
     virtual_threads: usize,
     max_batch: usize,
     clock_hz: f64,
+    serial_compile: bool,
 }
 
 fn fleet_worker_loop(
@@ -116,6 +121,8 @@ fn fleet_worker_loop(
         cpu: CpuBackend::Native,
         virtual_threads: shared.virtual_threads,
         clock_hz: shared.clock_hz,
+        serial_compile: shared.serial_compile,
+        claim_waits: 0,
     };
     let mut counter = ThreadCounter::default();
     while let Some(batch) = shared.queue.pop_batch(shared.max_batch) {
@@ -144,11 +151,13 @@ fn fleet_worker_loop(
             };
             if tx.send(response).is_err() {
                 // Receiver gone: the fleet run is being torn down.
+                counter.claim_waits = ex.claim_waits;
                 return counter;
             }
         }
         counter.record_batch(batch_size, t0.elapsed());
     }
+    counter.claim_waits = ex.claim_waits;
     counter
 }
 
@@ -349,6 +358,10 @@ pub struct FleetThreadedReport {
     pub accepted: u64,
     /// Requests shed by admission control.
     pub rejected: u64,
+    /// Contention observables aggregated across groups: queue-full
+    /// rejections, compile-claim waits, directory short-lock
+    /// acquisitions.
+    pub contention: ContentionStats,
     /// Wall-clock span of the whole run (spawn → drained).
     pub wall: Duration,
 }
@@ -439,6 +452,7 @@ pub fn run_fleet_threaded<T>(
             virtual_threads: vt,
             max_batch: opts.max_batch,
             clock_hz: group_cfgs[gi].clock_hz,
+            serial_compile: opts.serial_compile,
         })
         .collect();
 
@@ -497,6 +511,11 @@ pub fn run_fleet_threaded<T>(
     if let Some(e) = handle.first_error.take() {
         return Err(e);
     }
+    let contention = ContentionStats {
+        queue_full: handle.rejected_full,
+        claim_waits: counters.iter().map(|c| c.claim_waits).sum(),
+        directory_locks: directories.iter().map(|d| d.lock_acquisitions()).sum(),
+    };
     let outputs: Vec<Tensor<i8>> = handle
         .outputs
         .into_iter()
@@ -520,6 +539,7 @@ pub fn run_fleet_threaded<T>(
             service: handle.service,
             accepted: handle.accepted,
             rejected: handle.rejected_full + handle.rejected_shutdown,
+            contention,
             wall: t0.elapsed(),
         },
     ))

@@ -79,6 +79,7 @@ mod engine;
 pub mod fleet;
 mod loadgen;
 mod pipeline;
+mod queue;
 mod report;
 mod run;
 mod schedule;

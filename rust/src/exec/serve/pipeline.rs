@@ -39,6 +39,7 @@
 use super::super::executor::{lift_compile_err, CpuBackend, ExecError, NodeReport};
 use super::cache::{PlanCache, PlanCacheStats, PlanKey};
 use super::fleet::node_model_cycles;
+use super::queue;
 use super::run::{plan_keys_for, run_graph_partial, tuned_schedules_for, VtaNodeExec};
 use crate::arch::VtaConfig;
 use crate::compiler::op::{config_fingerprint, execute_compiled, op_impl};
@@ -698,8 +699,8 @@ fn stage_worker(
     stage_idx: usize,
     rt: &mut VtaRuntime,
     shared: &PipelineShared<'_>,
-    rx: mpsc::Receiver<InterMsg>,
-    tx_next: Option<mpsc::SyncSender<InterMsg>>,
+    rx: queue::Receiver<InterMsg>,
+    tx_next: Option<queue::Sender<InterMsg>>,
     tx_done: Option<mpsc::Sender<DoneMsg>>,
 ) -> (StageCounter, PlanCacheStats) {
     let stage = &shared.partition.stages[stage_idx];
@@ -711,7 +712,7 @@ fn stage_worker(
         clock_hz: shared.clock_hz,
     };
     let mut counter = StageCounter { nodes: stage.nodes.len() as u64, ..Default::default() };
-    while let Ok((req, submitted, payload)) = rx.recv() {
+    while let Some((req, submitted, payload)) = rx.recv() {
         let t0 = Instant::now();
         let outcome: Result<(Vec<Option<Tensor<i8>>>, u64), ExecError> =
             payload.and_then(|live| {
@@ -800,11 +801,14 @@ pub fn run_pipeline_threaded(
     };
     let cap = opts.queue_capacity.max(1);
 
-    // Stage channels: tx[s] feeds stage s; the driver owns tx[0].
+    // Stage channels: tx[s] feeds stage s; the driver owns tx[0]. The
+    // hot per-request handoffs ride the lock-free bounded channel of
+    // [`super::queue`]; only the low-rate completion stream below
+    // stays on `mpsc`.
     let mut txs = Vec::with_capacity(k);
     let mut rxs = Vec::with_capacity(k);
     for _ in 0..k {
-        let (tx, rx) = mpsc::sync_channel::<InterMsg>(cap);
+        let (tx, rx) = queue::channel::<InterMsg>(cap);
         txs.push(tx);
         rxs.push(rx);
     }

@@ -1,0 +1,523 @@
+//! Lock-free bounded MPMC primitives for the serving runtimes.
+//!
+//! [`ArrayQueue`] is a Vyukov-style bounded ring: one atomic sequence
+//! number per slot arbitrates producers and consumers, so the
+//! steady-state push/pop paths are a couple of CAS/stores with no
+//! global lock. A separate exact occupancy counter is reserved *before*
+//! a producer claims a slot, which keeps the admission bound precise
+//! even though the ring itself rounds up to a power of two — the
+//! admission-control tests assert rejection at exactly `capacity`.
+//!
+//! [`channel`] wraps a ring in disconnect-aware blocking endpoints
+//! (sender count + receiver liveness, condvar parking for the blocking
+//! edges only) — the drop-in replacement for the pipeline runtime's
+//! `mpsc::sync_channel` stage handoffs. The threaded pool's
+//! [`RequestQueue`](super::threaded) builds its own parking layer on
+//! the ring directly because it adds close/pause semantics.
+//!
+//! ## Wakeup protocol (shared by the channel and the request queue)
+//!
+//! Parking must not lose wakeups without putting a lock on the hot
+//! path. Both sides run the classic two-fence handshake:
+//!
+//! * a producer publishes its item, runs a `SeqCst` fence, then checks
+//!   the waiter count — only when waiters exist does it take the park
+//!   mutex and notify;
+//! * a consumer registers as a waiter (under the park mutex), runs a
+//!   `SeqCst` fence, re-checks the ring, and only then waits.
+//!
+//! The two fences totally order the publish/check against the
+//! register/re-check: either the consumer's re-check sees the item, or
+//! the producer sees the registered waiter and notifies.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// One ring slot: the sequence number encodes which lap the slot is on
+/// and whether it currently holds a value (see [`ArrayQueue::try_push`]).
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free MPMC ring with an exact occupancy bound.
+///
+/// Non-blocking only; callers layer their own parking (see the module
+/// docs). `len()` is a relaxed atomic read — the observability path
+/// never contends with dispatch.
+pub(crate) struct ArrayQueue<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    /// Logical capacity (exact admission bound; `slots.len()` may be
+    /// larger after rounding to a power of two).
+    capacity: usize,
+    /// Next dequeue position.
+    head: AtomicUsize,
+    /// Next enqueue position.
+    tail: AtomicUsize,
+    /// Exact occupancy: reserved before a push claims a slot, released
+    /// after a pop clears one. `len <= capacity` always.
+    len: AtomicUsize,
+}
+
+// The UnsafeCell makes the type !Sync by default; slot hand-off is
+// synchronized by the per-slot sequence numbers (acquire loads pair
+// with the release stores below), so sharing is sound whenever the
+// payload can move between threads.
+unsafe impl<T: Send> Send for ArrayQueue<T> {}
+unsafe impl<T: Send> Sync for ArrayQueue<T> {}
+
+impl<T> ArrayQueue<T> {
+    pub(crate) fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let n = capacity.next_power_of_two();
+        let slots: Box<[Slot<T>]> = (0..n)
+            .map(|i| Slot { seq: AtomicUsize::new(i), val: UnsafeCell::new(MaybeUninit::uninit()) })
+            .collect();
+        ArrayQueue {
+            slots,
+            mask: n - 1,
+            capacity,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Exact occupancy (relaxed; includes pushes that reserved room
+    /// but have not finished writing their slot yet).
+    pub(crate) fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push; returns the value when the queue is at
+    /// capacity (backpressure — the caller decides to shed or park).
+    pub(crate) fn try_push(&self, v: T) -> Result<(), T> {
+        // Reserve occupancy first: after this CAS there are at most
+        // `capacity` items outstanding (queued, mid-push, or mid-pop),
+        // which guarantees the slot claimed below drains.
+        let mut n = self.len.load(Ordering::Relaxed);
+        loop {
+            if n >= self.capacity {
+                return Err(v);
+            }
+            match self.len.compare_exchange_weak(n, n + 1, Ordering::Acquire, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(cur) => n = cur,
+            }
+        }
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                // Slot free on this lap: claim the position.
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(v) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if diff < 0 {
+                // The previous lap's consumer is still clearing this
+                // slot; the occupancy reservation guarantees it
+                // finishes, so spin rather than fail.
+                std::hint::spin_loop();
+                pos = self.tail.load(Ordering::Relaxed);
+            } else {
+                // Another producer claimed `pos`; chase the tail.
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Non-blocking pop. `None` means empty *now* — possibly while a
+    /// racing producer that already reserved occupancy is mid-write;
+    /// parked callers are re-woken by that producer's notify, so the
+    /// bounded retry below never loses an item.
+    pub(crate) fn try_pop(&self) -> Option<T> {
+        let mut spins = 0;
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos.wrapping_add(1) as isize;
+            if diff == 0 {
+                // Slot published on this lap: claim it.
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq.store(pos.wrapping_add(self.slots.len()), Ordering::Release);
+                        self.len.fetch_sub(1, Ordering::Release);
+                        return Some(v);
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if diff < 0 {
+                if self.len.load(Ordering::Acquire) == 0 {
+                    return None; // drained
+                }
+                // A producer reserved room but has not published yet;
+                // give it a short grace, then let the caller park.
+                spins += 1;
+                if spins > 64 {
+                    return None;
+                }
+                std::hint::spin_loop();
+                pos = self.head.load(Ordering::Relaxed);
+            } else {
+                // Another consumer claimed `pos`; chase the head.
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl<T> Drop for ArrayQueue<T> {
+    fn drop(&mut self) {
+        // Exclusive access: no producer can be mid-write, so this
+        // drains every remaining value.
+        while self.try_pop().is_some() {}
+    }
+}
+
+// ---------------------------------------------------------------------
+// The disconnect-aware bounded channel (pipeline stage handoffs).
+// ---------------------------------------------------------------------
+
+struct ChanInner<T> {
+    q: ArrayQueue<T>,
+    /// Live sender endpoints; 0 = disconnected for the receiver.
+    senders: AtomicUsize,
+    /// Receiver endpoint still alive; false = disconnected for senders.
+    recv_alive: AtomicBool,
+    park: Mutex<()>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    pop_waiters: AtomicUsize,
+    push_waiters: AtomicUsize,
+}
+
+impl<T> ChanInner<T> {
+    fn park_lock(&self) -> MutexGuard<'_, ()> {
+        self.park.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn wake_poppers(&self) {
+        fence(Ordering::SeqCst);
+        if self.pop_waiters.load(Ordering::Relaxed) > 0 {
+            let _g = self.park_lock();
+            self.not_empty.notify_all();
+        }
+    }
+
+    fn wake_pushers(&self) {
+        fence(Ordering::SeqCst);
+        if self.push_waiters.load(Ordering::Relaxed) > 0 {
+            let _g = self.park_lock();
+            self.not_full.notify_all();
+        }
+    }
+}
+
+/// Sending half of a [`channel`]. Clonable; the channel disconnects
+/// for the receiver when the last clone drops.
+pub(crate) struct Sender<T> {
+    inner: Arc<ChanInner<T>>,
+}
+
+/// Receiving half of a [`channel`]. Dropping it disconnects every
+/// sender (their sends return the value back).
+pub(crate) struct Receiver<T> {
+    inner: Arc<ChanInner<T>>,
+}
+
+/// A bounded MPSC-style channel over the lock-free ring: `send` blocks
+/// at capacity, `recv` blocks when empty, and both observe disconnect
+/// exactly like `std::sync::mpsc::sync_channel` (which this replaces
+/// on the pipeline's inter-stage hot path).
+pub(crate) fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(ChanInner {
+        q: ArrayQueue::new(capacity),
+        senders: AtomicUsize::new(1),
+        recv_alive: AtomicBool::new(true),
+        park: Mutex::new(()),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        pop_waiters: AtomicUsize::new(0),
+        push_waiters: AtomicUsize::new(0),
+    });
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; `Err` returns the value when the receiver is
+    /// gone (the pipeline's tear-down signal).
+    pub(crate) fn send(&self, v: T) -> Result<(), T> {
+        let inner = &*self.inner;
+        let mut v = v;
+        loop {
+            if !inner.recv_alive.load(Ordering::SeqCst) {
+                return Err(v);
+            }
+            match inner.q.try_push(v) {
+                Ok(()) => {
+                    inner.wake_poppers();
+                    return Ok(());
+                }
+                Err(back) => v = back,
+            }
+            // Full: park until a pop frees room or the receiver drops.
+            let mut g = inner.park_lock();
+            inner.push_waiters.fetch_add(1, Ordering::Relaxed);
+            fence(Ordering::SeqCst);
+            let progress = !inner.recv_alive.load(Ordering::Relaxed)
+                || inner.q.len() < inner.q.capacity();
+            if !progress {
+                g = inner.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            inner.push_waiters.fetch_sub(1, Ordering::Relaxed);
+            drop(g);
+        }
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.senders.fetch_add(1, Ordering::SeqCst);
+        Sender { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        if self.inner.senders.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Last sender: wake a receiver blocked on an empty queue so
+            // it observes the disconnect.
+            let _g = self.inner.park_lock();
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` when every sender is gone *and* the
+    /// queue has drained.
+    pub(crate) fn recv(&self) -> Option<T> {
+        let inner = &*self.inner;
+        loop {
+            if let Some(v) = inner.q.try_pop() {
+                inner.wake_pushers();
+                return Some(v);
+            }
+            if inner.senders.load(Ordering::SeqCst) == 0 {
+                // No producer can publish after this point; one final
+                // pop catches anything sent before the last drop.
+                let v = inner.q.try_pop();
+                if v.is_some() {
+                    inner.wake_pushers();
+                }
+                return v;
+            }
+            let mut g = inner.park_lock();
+            inner.pop_waiters.fetch_add(1, Ordering::Relaxed);
+            fence(Ordering::SeqCst);
+            let progress =
+                !inner.q.is_empty() || inner.senders.load(Ordering::Relaxed) == 0;
+            if !progress {
+                g = inner.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            inner.pop_waiters.fetch_sub(1, Ordering::Relaxed);
+            drop(g);
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.inner.recv_alive.store(false, Ordering::SeqCst);
+        let _g = self.inner.park_lock();
+        self.inner.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = ArrayQueue::new(4);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn exact_capacity_bound_even_when_rounded() {
+        // Logical capacity 3, ring rounds to 4 slots; the 4th push
+        // must still be rejected.
+        let q = ArrayQueue::new(3);
+        assert_eq!(q.capacity(), 3);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.try_push(3).unwrap();
+        assert_eq!(q.try_push(4), Err(4));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.try_pop(), Some(1));
+        q.try_push(4).unwrap();
+        assert_eq!(q.try_push(5), Err(5));
+    }
+
+    #[test]
+    fn wraparound_reuses_slots() {
+        let q = ArrayQueue::new(2);
+        for lap in 0..10 {
+            q.try_push(2 * lap).unwrap();
+            q.try_push(2 * lap + 1).unwrap();
+            assert_eq!(q.try_pop(), Some(2 * lap));
+            assert_eq!(q.try_pop(), Some(2 * lap + 1));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drop_drains_remaining_items() {
+        let hits = Arc::new(AtomicU64::new(0));
+        struct Tick(Arc<AtomicU64>);
+        impl Drop for Tick {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let q = ArrayQueue::new(8);
+        for _ in 0..5 {
+            assert!(q.try_push(Tick(hits.clone())).is_ok());
+        }
+        drop(q.try_pop()); // one popped + dropped
+        drop(q); // four drained
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn mpmc_concurrent_sum_preserved() {
+        const PRODUCERS: u64 = 4;
+        const PER: u64 = 500;
+        let q = Arc::new(ArrayQueue::new(8));
+        let sum = Arc::new(AtomicU64::new(0));
+        let taken = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for p in 0..PRODUCERS {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..PER {
+                        let mut v = p * PER + i + 1;
+                        loop {
+                            match q.try_push(v) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    v = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            for _ in 0..2 {
+                let q = q.clone();
+                let sum = sum.clone();
+                let taken = taken.clone();
+                s.spawn(move || loop {
+                    match q.try_pop() {
+                        Some(v) => {
+                            sum.fetch_add(v, Ordering::Relaxed);
+                            taken.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            if taken.load(Ordering::Relaxed) == PRODUCERS * PER {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+        let n = PRODUCERS * PER;
+        assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+    }
+
+    #[test]
+    fn channel_fifo_and_disconnect() {
+        let (tx, rx) = channel::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None); // all senders gone, drained
+    }
+
+    #[test]
+    fn channel_send_fails_after_receiver_drop() {
+        let (tx, rx) = channel::<u32>(1);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn channel_blocking_send_recv_across_threads() {
+        let (tx, rx) = channel::<u64>(1);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap(); // blocks at capacity 1
+            }
+        });
+        let mut got = Vec::new();
+        while let Some(v) = rx.recv() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn channel_clone_counts_senders() {
+        let (tx, rx) = channel::<u32>(4);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(9).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(9));
+        assert_eq!(rx.recv(), None);
+    }
+}

@@ -1,5 +1,5 @@
 //! The real-threads serving runtime: one OS worker thread per
-//! [`DevicePool`] replica, a bounded MPMC request queue with
+//! [`DevicePool`] replica, a bounded lock-free MPMC request queue with
 //! backpressure, and cross-thread plan sharing — the promotion of the
 //! simulated-time [`Scheduler`](super::Scheduler) (which stays on as
 //! the deterministic oracle) to genuine task-level parallelism, the
@@ -7,8 +7,13 @@
 //!
 //! ## Queue and admission control
 //!
-//! [`RequestQueue`] is a `Mutex<VecDeque>` + two condvars bounded at
-//! `queue_capacity`. [`PoolHandle::try_submit`] rejects with a reason
+//! [`RequestQueue`] is an array-based lock-free MPMC ring
+//! ([`super::queue::ArrayQueue`]: per-slot sequence numbers, bounded at
+//! `queue_capacity`) with a condvar parking layer used **only** for
+//! blocking waits — the hot push/pop path is compare-and-swap all the
+//! way down, and the depth gauge ([`RequestQueue::len`]) is a relaxed
+//! atomic load, so observability never contends with dispatch.
+//! [`PoolHandle::try_submit`] rejects with a reason
 //! ([`SubmitRejected::QueueFull`] / [`SubmitRejected::ShuttingDown`])
 //! instead of blocking — the admission-control path an open-loop load
 //! generator needs — while [`PoolHandle::submit`] blocks for
@@ -17,31 +22,56 @@
 //! end drains as a trailing partial batch. Shutdown closes the queue,
 //! lets every worker drain what was already admitted, then joins.
 //!
-//! ## Plan sharing: compile-on-first-miss with a publish barrier
+//! ## Plan sharing: reserve under the lock, lower outside it
 //!
 //! Sealed instruction streams bake DRAM addresses in, so a plan only
 //! replays on a replica whose allocator history matches the compiling
 //! replica's. The simulated scheduler guarantees that by driving every
 //! per-replica [`PlanCache`](super::PlanCache) in lockstep from one
 //! thread; across real threads the same invariant is kept by an
-//! append-only **event log** in the shared [`PlanDirectory`]:
+//! append-only **event log** in the shared [`PlanDirectory`] — but the
+//! directory mutex is only a *publication* barrier, not a compile
+//! barrier. A plan compile is split in two
+//! ([`crate::compiler::PreparedPlan`]):
 //!
-//! * every cache mutation (install / evict) is an event appended under
-//!   the directory mutex — the publish barrier; compiles are serialized
-//!   by it, so the log order *is* the canonical allocator history;
-//! * the first worker to miss a key applies any unapplied log prefix to
-//!   its own replica, compiles, and publishes a device-independent
-//!   [`PlanBlueprint`] (streams + layout + baked bytes);
-//! * every other worker materializes lazily: on its next directory
-//!   interaction it replays the pending events against its own replica,
-//!   and because all replicas apply the same event sequence from
-//!   identical fresh allocators, every allocation lands at the baked
-//!   address (enforced, never assumed — a mismatch is
-//!   [`CompileError::ReplicaDiverged`](crate::compiler::CompileError)).
+//! * **Reserve** (short lock): the first worker to miss a key plans the
+//!   operator and packs its constants *outside* any lock, then takes
+//!   the directory mutex just long enough to count the miss, pick LRU
+//!   victims, and append an `Install` carrying a [`PlanClaim`] — the
+//!   plan's DRAM allocation requirements plus a not-yet-published
+//!   blueprint slot. Log order is still total, so it remains the
+//!   canonical allocator history.
+//! * **Lower** (no lock): the owner allocates its own reservation (the
+//!   replay of its own `Install`), emits the instruction streams, and
+//!   publishes the device-independent [`PlanBlueprint`] on the claim.
+//!   Distinct keys lower **concurrently** — a cold-start compile storm
+//!   parallelizes across workers — while workers racing on the *same*
+//!   key wait on the claim instead of recompiling.
 //!
-//! Pool-level hit/miss/eviction counters live in the directory, so —
-//! like the simulated scheduler — a plan compiles **once per pool**,
-//! and the oracle-equivalence suite asserts the counts match exactly.
+//! Every other replica materializes lazily: on its next directory
+//! interaction it replays the pending events; an `Install` whose claim
+//! is still in flight just *reserves* the layout (identical allocator
+//! calls), and the blueprint is filled in at first use
+//! ([`PlanBlueprint::materialize_reserved`] — addresses are enforced,
+//! never assumed; a mismatch is
+//! [`CompileError::ReplicaDiverged`](crate::compiler::CompileError)).
+//! A failed lower logs a compensating `Evict`, so Install-then-Evict
+//! replays as an allocator no-op on every replica.
+//!
+//! `serial_compile` ([`ThreadedOptions`]) is the A/B escape hatch: it
+//! restores the old hold-the-lock-across-the-compile behavior so the
+//! concurrent path's win stays measurable.
+//!
+//! ## Hit accounting without locks
+//!
+//! Steady-state requests touch only resident plans; their hit counters
+//! are relaxed atomics (a pool-wide hit count and an LRU clock whose
+//! stamps `fetch_max` into each claim's recency), so the hot path
+//! acquires **no** mutex at all. Misses and evictions mutate under the
+//! short directory lock. Pool-level `(hits, misses, evictions)` are
+//! order-insensitive sums, so — like the simulated scheduler — a plan
+//! compiles **once per pool** and the oracle-equivalence suite asserts
+//! the counts match exactly.
 //!
 //! ## Oracle equivalence
 //!
@@ -54,17 +84,20 @@
 
 use super::super::executor::{lift_compile_err, CpuBackend, ExecError};
 use super::cache::{PlanCacheStats, PlanKey};
+use super::queue::ArrayQueue;
 use super::run::{plan_keys_for, run_graph, tuned_schedules_for, VtaNodeExec};
 use crate::arch::VtaConfig;
+use crate::compiler::compiled::{alloc_group, free_group, free_reserved_layout};
 use crate::compiler::op::{config_fingerprint, execute_compiled, op_impl};
-use crate::compiler::{CompiledNode, PlanBlueprint, ScheduleChoice};
+use crate::compiler::{CompileError, CompiledNode, PlanBlueprint, ScheduleChoice};
 use crate::dse::records::TuningRecords;
 use crate::graph::{stages, Graph};
-use crate::metrics::{LatencyHistogram, ThreadCounter};
-use crate::runtime::{DevicePool, VtaRuntime};
+use crate::metrics::{ContentionStats, LatencyHistogram, ThreadCounter};
+use crate::runtime::{DevicePool, DramBuffer, VtaRuntime};
 use crate::sim::SimStats;
 use crate::util::Tensor;
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -87,6 +120,10 @@ pub struct ThreadedOptions {
     /// Start with workers gated: nothing is served until
     /// [`PoolHandle::resume`] (deterministic queue-full tests).
     pub start_paused: bool,
+    /// Serialize plan compiles under the directory lock (the
+    /// pre-concurrent behavior) instead of lowering distinct keys in
+    /// parallel — the `--serial-compile` A/B baseline.
+    pub serial_compile: bool,
 }
 
 impl ThreadedOptions {
@@ -100,6 +137,7 @@ impl ThreadedOptions {
             virtual_threads: 1,
             dram_size: 256 << 20,
             start_paused: false,
+            serial_compile: false,
         }
     }
 }
@@ -166,64 +204,99 @@ impl Completion {
 // The bounded MPMC request queue.
 // ---------------------------------------------------------------------
 
-struct QueueState {
-    buf: VecDeque<Request>,
-    closed: bool,
-    paused: bool,
-}
-
 /// Bounded MPMC queue: producers reject or block at capacity, workers
 /// pull opportunistic batches, close() drains gracefully. The fleet
 /// runtime instantiates one per config group.
+///
+/// The data path is the lock-free [`ArrayQueue`]; the mutex + condvars
+/// below exist **only** to park blocked pushers/poppers. Wakeups use
+/// the classic two-fence protocol: a publisher fences and checks the
+/// waiter count *after* its ring write, a waiter registers and fences
+/// *before* re-checking the ring, so one side always observes the
+/// other and no wakeup is lost.
 pub(crate) struct RequestQueue {
-    capacity: usize,
-    state: Mutex<QueueState>,
+    q: ArrayQueue<Request>,
+    closed: AtomicBool,
+    paused: AtomicBool,
+    park: Mutex<()>,
     not_empty: Condvar,
     not_full: Condvar,
+    pop_waiters: AtomicUsize,
+    push_waiters: AtomicUsize,
 }
 
 impl RequestQueue {
     pub(crate) fn new(capacity: usize, paused: bool) -> Self {
         RequestQueue {
-            capacity: capacity.max(1),
-            state: Mutex::new(QueueState { buf: VecDeque::new(), closed: false, paused }),
+            q: ArrayQueue::new(capacity.max(1)),
+            closed: AtomicBool::new(false),
+            paused: AtomicBool::new(paused),
+            park: Mutex::new(()),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            pop_waiters: AtomicUsize::new(0),
+            push_waiters: AtomicUsize::new(0),
         }
     }
 
-    fn lock(&self) -> MutexGuard<'_, QueueState> {
-        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    fn park_lock(&self) -> MutexGuard<'_, ()> {
+        self.park.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Admission-controlled push: never blocks.
+    fn wake_poppers(&self) {
+        fence(Ordering::SeqCst);
+        if self.pop_waiters.load(Ordering::Relaxed) > 0 {
+            let _g = self.park_lock();
+            self.not_empty.notify_all();
+        }
+    }
+
+    fn wake_pushers(&self) {
+        fence(Ordering::SeqCst);
+        if self.push_waiters.load(Ordering::Relaxed) > 0 {
+            let _g = self.park_lock();
+            self.not_full.notify_all();
+        }
+    }
+
+    /// Admission-controlled push: never blocks, never takes a lock on
+    /// the accept path.
     pub(crate) fn try_push(&self, req: Request) -> Result<(), SubmitRejected> {
-        let mut st = self.lock();
-        if st.closed {
+        if self.closed.load(Ordering::SeqCst) {
             return Err(SubmitRejected::ShuttingDown);
         }
-        if st.buf.len() >= self.capacity {
-            return Err(SubmitRejected::QueueFull { capacity: self.capacity });
+        match self.q.try_push(req) {
+            Ok(()) => {
+                self.wake_poppers();
+                Ok(())
+            }
+            Err(_) => Err(SubmitRejected::QueueFull { capacity: self.q.capacity() }),
         }
-        st.buf.push_back(req);
-        drop(st);
-        self.not_empty.notify_one();
-        Ok(())
     }
 
     /// Blocking push: waits for room (closed-loop trace replay).
     pub(crate) fn push_wait(&self, req: Request) -> Result<(), SubmitRejected> {
-        let mut st = self.lock();
-        while !st.closed && st.buf.len() >= self.capacity {
-            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+        let mut req = req;
+        loop {
+            if self.closed.load(Ordering::SeqCst) {
+                return Err(SubmitRejected::ShuttingDown);
+            }
+            match self.q.try_push(req) {
+                Ok(()) => {
+                    self.wake_poppers();
+                    return Ok(());
+                }
+                Err(v) => req = v,
+            }
+            let g = self.park_lock();
+            self.push_waiters.fetch_add(1, Ordering::Relaxed);
+            fence(Ordering::SeqCst);
+            let full = !self.closed.load(Ordering::Relaxed) && self.q.len() >= self.q.capacity();
+            if full {
+                let _g = self.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            self.push_waiters.fetch_sub(1, Ordering::Relaxed);
         }
-        if st.closed {
-            return Err(SubmitRejected::ShuttingDown);
-        }
-        st.buf.push_back(req);
-        drop(st);
-        self.not_empty.notify_one();
-        Ok(())
     }
 
     /// Pull up to `max` requests; blocks while the queue is empty (or
@@ -231,74 +304,224 @@ impl RequestQueue {
     /// worker-exit signal. A non-full final pull is the trailing
     /// partial batch at stream end.
     pub(crate) fn pop_batch(&self, max: usize) -> Option<Vec<Request>> {
-        let mut st = self.lock();
+        let max = max.max(1);
         loop {
-            if !st.paused && !st.buf.is_empty() {
-                let n = st.buf.len().min(max.max(1));
-                let batch: Vec<Request> = st.buf.drain(..n).collect();
-                drop(st);
-                self.not_full.notify_all();
-                return Some(batch);
+            if !self.paused.load(Ordering::SeqCst) {
+                if let Some(first) = self.q.try_pop() {
+                    let mut batch = Vec::with_capacity(max);
+                    batch.push(first);
+                    while batch.len() < max {
+                        match self.q.try_pop() {
+                            Some(req) => batch.push(req),
+                            None => break,
+                        }
+                    }
+                    self.wake_pushers();
+                    return Some(batch);
+                }
             }
-            if st.closed && st.buf.is_empty() {
+            // `close()` clears the pause gate *before* raising `closed`
+            // (both SeqCst), so observing `closed` here implies the
+            // ring is really drained, not merely gated.
+            if self.closed.load(Ordering::SeqCst) && self.q.is_empty() {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+            let g = self.park_lock();
+            self.pop_waiters.fetch_add(1, Ordering::Relaxed);
+            fence(Ordering::SeqCst);
+            let ready = self.closed.load(Ordering::Relaxed)
+                || (!self.paused.load(Ordering::Relaxed) && !self.q.is_empty());
+            if !ready {
+                let _g = self.not_empty.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            self.pop_waiters.fetch_sub(1, Ordering::Relaxed);
         }
     }
 
+    /// Instantaneous depth: one relaxed atomic load, so metrics
+    /// sampling (queue gauges, live dashboards) never contends with
+    /// dispatch.
+    pub(crate) fn len(&self) -> usize {
+        self.q.len()
+    }
+
     pub(crate) fn depth(&self) -> usize {
-        self.lock().buf.len()
+        self.len()
     }
 
     /// Ungate paused workers.
     pub(crate) fn resume(&self) {
-        self.lock().paused = false;
+        self.paused.store(false, Ordering::SeqCst);
+        let _g = self.park_lock();
         self.not_empty.notify_all();
     }
 
     /// Stop admitting; already-admitted requests still drain. Also
-    /// ungates paused workers so shutdown cannot deadlock.
+    /// ungates paused workers so shutdown cannot deadlock. The store
+    /// order (gate first, then `closed`) is what `pop_batch`'s exit
+    /// check relies on.
     pub(crate) fn close(&self) {
-        let mut st = self.lock();
-        st.closed = true;
-        st.paused = false;
-        drop(st);
+        self.paused.store(false, Ordering::SeqCst);
+        self.closed.store(true, Ordering::SeqCst);
+        let _g = self.park_lock();
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 }
 
 // ---------------------------------------------------------------------
-// The shared plan directory (publish barrier).
+// The shared plan directory (publication barrier).
 // ---------------------------------------------------------------------
+
+/// What a claim's owner has gotten around to publishing.
+pub(crate) enum ClaimState {
+    /// The owner is still lowering.
+    Pending,
+    /// Published: replicas can materialize.
+    Ready(Arc<PlanBlueprint>),
+    /// The owner's lower failed (or unwound); waiters error out.
+    Failed(String),
+}
+
+/// One in-flight-or-published plan: the DRAM allocation requirements
+/// (known at reserve time, before any lowering) plus the blueprint
+/// slot the owning worker fills in when its out-of-lock lower
+/// finishes. Workers racing on the same key block on [`Self::wait_published`]
+/// instead of recompiling; replicas replaying the log reserve
+/// [`Self::reqs`] immediately and materialize lazily.
+pub(crate) struct PlanClaim {
+    reqs: Vec<(usize, usize)>,
+    /// LRU recency stamp, advanced by relaxed `fetch_max` from the
+    /// directory's atomic clock — the hit path touches no mutex.
+    recency: AtomicU64,
+    state: Mutex<ClaimState>,
+    ready: Condvar,
+}
+
+impl PlanClaim {
+    fn new(reqs: Vec<(usize, usize)>, stamp: u64) -> Self {
+        PlanClaim {
+            reqs,
+            recency: AtomicU64::new(stamp),
+            state: Mutex::new(ClaimState::Pending),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn reqs(&self) -> &[(usize, usize)] {
+        &self.reqs
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, ClaimState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Published and usable? (Eviction skips in-flight claims: their
+    /// owner is about to need the reservation it logged.)
+    fn is_ready(&self) -> bool {
+        matches!(&*self.lock_state(), ClaimState::Ready(_))
+    }
+
+    /// Non-blocking peek — the event-replay path must never block on
+    /// another worker's compile.
+    fn published(&self) -> Option<Result<Arc<PlanBlueprint>, String>> {
+        match &*self.lock_state() {
+            ClaimState::Pending => None,
+            ClaimState::Ready(bp) => Some(Ok(bp.clone())),
+            ClaimState::Failed(msg) => Some(Err(msg.clone())),
+        }
+    }
+
+    fn publish(&self, bp: Arc<PlanBlueprint>) {
+        *self.lock_state() = ClaimState::Ready(bp);
+        self.ready.notify_all();
+    }
+
+    /// Fail a still-pending claim (a published claim stays published).
+    fn fail(&self, msg: String) {
+        let mut st = self.lock_state();
+        if matches!(&*st, ClaimState::Pending) {
+            *st = ClaimState::Failed(msg);
+        }
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Block until the owner publishes (or fails). The bool reports
+    /// whether this call actually waited — the contention metric.
+    fn wait_published(&self) -> Result<(Arc<PlanBlueprint>, bool), String> {
+        let mut st = self.lock_state();
+        let mut waited = false;
+        loop {
+            match &*st {
+                ClaimState::Ready(bp) => return Ok((bp.clone(), waited)),
+                ClaimState::Failed(msg) => return Err(msg.clone()),
+                ClaimState::Pending => {
+                    waited = true;
+                    st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+}
+
+/// Drop guard around the owner's out-of-lock lower: if the worker
+/// unwinds (error path that forgot to fail, or a panic) the claim is
+/// failed so waiters never block forever.
+struct ClaimGuard {
+    claim: Arc<PlanClaim>,
+    armed: bool,
+}
+
+impl ClaimGuard {
+    fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for ClaimGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.claim.fail("owning worker unwound before publishing".to_string());
+        }
+    }
+}
 
 /// One entry of the canonical cache-mutation history.
 #[derive(Clone)]
-enum PlanEvent {
-    Install(PlanKey, Arc<PlanBlueprint>),
+pub(crate) enum PlanEvent {
+    Install(PlanKey, Arc<PlanClaim>),
     Evict(PlanKey),
 }
 
 struct DirectoryState {
-    /// Pool-resident keys with their last-use clock (LRU victims).
-    resident: HashMap<PlanKey, u64>,
-    clock: u64,
+    /// Pool-resident claims (in flight or published) — LRU victims
+    /// come from here, by claim recency.
+    resident: HashMap<PlanKey, Arc<PlanClaim>>,
+    misses: u64,
+    evictions: u64,
     /// Append-only event log — the canonical allocator history every
     /// replica replays. Grows with unique compiles + evictions, not
     /// with request volume.
     log: Vec<PlanEvent>,
-    stats: PlanCacheStats,
 }
 
 /// The pool-shared plan directory: membership, LRU bookkeeping,
-/// pool-level counters, and the event log. Its mutex is the publish
-/// barrier — compiles happen under it, so log order is total. The
+/// pool-level counters, and the event log. Its mutex is only the
+/// *publication* barrier — reservations (the allocator-visible
+/// decisions) serialize under it, but lowering happens outside, and
+/// the steady-state hit path touches nothing but the atomics. The
 /// fleet runtime instantiates one per config group: replication-by-
 /// replay is only valid between replicas of one variant, so each
 /// group keeps its own canonical history.
 pub(crate) struct PlanDirectory {
     capacity: usize,
+    /// Pool-level hit count (relaxed; hits commute).
+    hits: AtomicU64,
+    /// LRU clock; every hit or install takes a fresh stamp.
+    clock: AtomicU64,
+    /// Short-lock acquisitions (the contention observable).
+    locks: AtomicU64,
     state: Mutex<DirectoryState>,
 }
 
@@ -307,33 +530,48 @@ impl PlanDirectory {
         assert!(capacity >= 1, "plan directory needs at least one slot");
         PlanDirectory {
             capacity,
+            hits: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
+            locks: AtomicU64::new(0),
             state: Mutex::new(DirectoryState {
                 resident: HashMap::new(),
-                clock: 0,
+                misses: 0,
+                evictions: 0,
                 log: Vec::new(),
-                stats: PlanCacheStats::default(),
             }),
         }
     }
 
     fn lock(&self) -> MutexGuard<'_, DirectoryState> {
+        self.locks.fetch_add(1, Ordering::Relaxed);
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Fast-path hit accounting for a key already materialized on the
-    /// calling replica.
-    fn count_local_hit(&self, key: &PlanKey) {
-        let mut st = self.lock();
-        st.stats.hits += 1;
-        st.clock += 1;
-        let clock = st.clock;
-        if let Some(last_use) = st.resident.get_mut(key) {
-            *last_use = clock;
-        }
+    fn next_stamp(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Hit accounting — two relaxed atomic bumps, no mutex.
+    fn count_hit(&self, claim: &PlanClaim) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        claim.recency.fetch_max(self.next_stamp(), Ordering::Relaxed);
     }
 
     pub(crate) fn stats(&self) -> PlanCacheStats {
-        self.lock().stats
+        // Bypass `lock()`: bookkeeping reads shouldn't count as
+        // hot-path lock traffic.
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: st.misses,
+            evictions: st.evictions,
+        }
+    }
+
+    /// Short-lock acquisitions so far (misses, installs, evictions —
+    /// never steady-state hits).
+    pub(crate) fn lock_acquisitions(&self) -> u64 {
+        self.locks.load(Ordering::Relaxed)
     }
 }
 
@@ -341,29 +579,61 @@ impl PlanDirectory {
 // Worker side.
 // ---------------------------------------------------------------------
 
+/// How far one replica has taken a resident plan.
+pub(crate) enum PlanState {
+    /// Materialized and executable.
+    Ready(CompiledNode),
+    /// Layout allocated (the replay of the plan's `Install`), blueprint
+    /// not yet published by the owner — filled in at first use.
+    Reserved(Vec<DramBuffer>),
+}
+
+/// One replica-local plan: the shared claim plus this replica's copy.
+pub(crate) struct PlanSlot {
+    claim: Arc<PlanClaim>,
+    state: PlanState,
+}
+
 /// One worker's view of its pool replica: the runtime plus the locally
 /// materialized plans and the event-log cursor.
 pub(crate) struct Replica<'rt> {
     pub(crate) rt: &'rt mut VtaRuntime,
-    pub(crate) plans: HashMap<PlanKey, CompiledNode>,
+    pub(crate) plans: HashMap<PlanKey, PlanSlot>,
     /// Log prefix already applied to this replica's allocator.
     pub(crate) applied: usize,
 }
 
 impl Replica<'_> {
-    /// Apply a slice of canonical events in order: installs materialize
-    /// the published blueprint (allocations must land at the baked
-    /// addresses), evicts free the local copy.
+    /// Apply a slice of canonical events in order. An `Install` whose
+    /// blueprint is already published materializes fully; one still in
+    /// flight (or failed) only reserves the layout — the identical
+    /// allocator call sequence, which is all determinism needs. Evicts
+    /// free whichever form the local copy is in, in layout order.
     fn apply(&mut self, events: &[PlanEvent]) -> Result<(), ExecError> {
         for event in events {
             match event {
-                PlanEvent::Install(key, blueprint) => {
-                    let node = blueprint.materialize(self.rt).map_err(ExecError::PlanCache)?;
-                    self.plans.insert(key.clone(), node);
+                PlanEvent::Install(key, claim) => {
+                    let state = match claim.published() {
+                        Some(Ok(bp)) => PlanState::Ready(
+                            bp.materialize(self.rt).map_err(ExecError::PlanCache)?,
+                        ),
+                        _ => PlanState::Reserved(
+                            alloc_group(self.rt, claim.reqs()).map_err(ExecError::PlanCache)?,
+                        ),
+                    };
+                    self.plans.insert(key.clone(), PlanSlot { claim: claim.clone(), state });
                 }
                 PlanEvent::Evict(key) => {
-                    if let Some(node) = self.plans.remove(key) {
-                        node.free(self.rt).map_err(ExecError::PlanCache)?;
+                    if let Some(slot) = self.plans.remove(key) {
+                        match slot.state {
+                            PlanState::Ready(node) => {
+                                node.free(self.rt).map_err(ExecError::PlanCache)?;
+                            }
+                            PlanState::Reserved(bufs) => {
+                                free_reserved_layout(self.rt, &bufs)
+                                    .map_err(ExecError::PlanCache)?;
+                            }
+                        }
                     }
                 }
             }
@@ -383,13 +653,127 @@ pub(crate) struct WorkerExec<'rt, 'p> {
     pub(crate) cpu: CpuBackend,
     pub(crate) virtual_threads: usize,
     pub(crate) clock_hz: f64,
+    /// Serialize compiles under the directory lock (A/B baseline).
+    pub(crate) serial_compile: bool,
+    /// Times this worker blocked on another worker's in-flight compile.
+    pub(crate) claim_waits: u64,
 }
 
 impl WorkerExec<'_, '_> {
     /// Directory path for a key not resident locally: count the pool
     /// lookup, replay pending events, and — if the pool as a whole has
-    /// never seen the key — compile and publish under the barrier.
+    /// never seen the key — reserve under the short lock and lower
+    /// outside it (or, with `serial_compile`, do the whole thing under
+    /// the lock).
     fn sync_plan(
+        &mut self,
+        g: &Graph,
+        id: usize,
+        key: &PlanKey,
+        schedule: Option<ScheduleChoice>,
+    ) -> Result<(), ExecError> {
+        if self.serial_compile {
+            return self.sync_plan_serial(g, id, key, schedule);
+        }
+        let node = &g.nodes[id];
+
+        // First short lock: pool hit? Some worker already claimed this
+        // key; its Install is in our unapplied suffix.
+        {
+            let mut st = self.directory.lock();
+            if let Some(claim) = st.resident.get(key) {
+                self.directory.count_hit(claim);
+                let pending: Vec<PlanEvent> = st.log[self.replica.applied..].to_vec();
+                drop(st);
+                self.replica.apply(&pending)?;
+                return Ok(());
+            }
+        }
+
+        // Reserve half, outside any lock: planning and constant packing
+        // need no device. Workers racing on the same key may duplicate
+        // this much — never the lowering.
+        let entry = op_impl(&node.op);
+        let cfg = self.replica.rt.ctx.config().clone();
+        let prep = entry
+            .prepare(&cfg, g, node, self.virtual_threads, schedule.as_ref())
+            .map_err(|e| lift_compile_err(&node.name, e))?;
+
+        // Second short lock: publish the claim, or lose the install
+        // race and become a pool hit.
+        let (claim, pending) = {
+            let mut st = self.directory.lock();
+            if let Some(claim) = st.resident.get(key) {
+                self.directory.count_hit(claim);
+                let pending: Vec<PlanEvent> = st.log[self.replica.applied..].to_vec();
+                drop(st);
+                self.replica.apply(&pending)?;
+                return Ok(());
+            }
+            st.misses += 1;
+            Self::make_room(&mut st, self.directory.capacity);
+            let claim = Arc::new(PlanClaim::new(prep.reqs().to_vec(), self.directory.next_stamp()));
+            st.resident.insert(key.clone(), claim.clone());
+            st.log.push(PlanEvent::Install(key.clone(), claim.clone()));
+            // Snapshot stops *before* our own Install: the reservation
+            // below is its replay.
+            let pending: Vec<PlanEvent> = st.log[self.replica.applied..st.log.len() - 1].to_vec();
+            (claim, pending)
+        };
+        let mut guard = ClaimGuard { claim: claim.clone(), armed: true };
+
+        // Catch up, then reserve our own layout — the replay of the
+        // Install we just logged.
+        self.replica.apply(&pending)?;
+        let bufs = match alloc_group(self.replica.rt, claim.reqs()) {
+            Ok(bufs) => bufs,
+            Err(e) => {
+                // DRAM exhaustion while reserving. The logged Install
+                // is one no replica can apply either (identical
+                // allocator states fail identically), so the pool is
+                // poisoned and the run will abort with its first
+                // error; log the compensating Evict and wake waiters
+                // so nothing blocks on the way down.
+                {
+                    let mut st = self.directory.lock();
+                    st.resident.remove(key);
+                    st.log.push(PlanEvent::Evict(key.clone()));
+                }
+                claim.fail(format!("layout reservation failed: {e}"));
+                guard.disarm();
+                return Err(lift_compile_err(&node.name, e));
+            }
+        };
+        self.replica.applied += 1;
+
+        // Lower with no lock held — the point of the whole exercise.
+        // Workers on *other* keys are doing the same thing right now;
+        // workers on *this* key are waiting on the claim.
+        let lowered = prep.lower_into(self.replica.rt, &bufs).and_then(|compiled| {
+            let bp = compiled.blueprint(self.replica.rt)?;
+            Ok((compiled, bp))
+        });
+        match lowered {
+            Ok((compiled, bp)) => {
+                claim.publish(Arc::new(bp));
+                guard.disarm();
+                self.replica
+                    .plans
+                    .insert(key.clone(), PlanSlot { claim, state: PlanState::Ready(compiled) });
+                Ok(())
+            }
+            Err(e) => {
+                self.rollback_claim(key, &claim, &bufs, format!("{e}"))?;
+                guard.disarm();
+                Err(lift_compile_err(&node.name, e))
+            }
+        }
+    }
+
+    /// The pre-concurrent publish protocol: hold the directory lock
+    /// across the entire compile. Kept behind `--serial-compile` as
+    /// the A/B baseline the compile-storm bench measures against.
+    fn sync_plan_serial(
         &mut self,
         g: &Graph,
         id: usize,
@@ -398,53 +782,118 @@ impl WorkerExec<'_, '_> {
     ) -> Result<(), ExecError> {
         let node = &g.nodes[id];
         let mut st = self.directory.lock();
-        if st.resident.contains_key(key) {
-            // Pool hit: some worker already published this plan; catch
-            // up on the log (its Install is in our unapplied suffix).
-            st.stats.hits += 1;
-            st.clock += 1;
-            let clock = st.clock;
-            st.resident.insert(key.clone(), clock);
+        if let Some(claim) = st.resident.get(key) {
+            self.directory.count_hit(claim);
             let pending: Vec<PlanEvent> = st.log[self.replica.applied..].to_vec();
             drop(st);
             self.replica.apply(&pending)?;
             return Ok(());
         }
 
-        // Pool miss: this worker compiles, holding the directory lock
-        // as the publish barrier. Evictions come first (mirroring the
-        // lockstep caches' make_room-before-compile order) so the freed
-        // DRAM is available to the new plan on every replica.
-        st.stats.misses += 1;
-        while st.resident.len() >= self.directory.capacity {
-            let victim = st
-                .resident
-                .iter()
-                .min_by_key(|&(_, &last_use)| last_use)
-                .map(|(k, _)| k.clone());
-            let Some(victim) = victim else { break };
-            st.resident.remove(&victim);
-            st.stats.evictions += 1;
-            st.log.push(PlanEvent::Evict(victim));
-        }
+        // Pool miss. Evictions come first (mirroring the lockstep
+        // caches' make_room-before-compile order) so the freed DRAM is
+        // available to the new plan on every replica.
+        st.misses += 1;
+        Self::make_room(&mut st, self.directory.capacity);
         let pending: Vec<PlanEvent> = st.log[self.replica.applied..].to_vec();
         self.replica.apply(&pending)?;
 
         let entry = op_impl(&node.op);
-        let compiled = entry
-            .compile(self.replica.rt, g, node, self.virtual_threads, schedule.as_ref())
+        let cfg = self.replica.rt.ctx.config().clone();
+        let prep = entry
+            .prepare(&cfg, g, node, self.virtual_threads, schedule.as_ref())
             .map_err(|e| lift_compile_err(&node.name, e))?;
+        let reqs = prep.reqs().to_vec();
+        let compiled =
+            prep.finish(self.replica.rt).map_err(|e| lift_compile_err(&node.name, e))?;
         // A failed compile above unwinds its allocations (alloc_group)
         // and publishes nothing: the canonical history is untouched and
         // the next lookup simply misses again.
         let blueprint =
             compiled.blueprint(self.replica.rt).map_err(|e| lift_compile_err(&node.name, e))?;
-        st.clock += 1;
-        let clock = st.clock;
-        st.resident.insert(key.clone(), clock);
-        st.log.push(PlanEvent::Install(key.clone(), Arc::new(blueprint)));
+        let claim = Arc::new(PlanClaim::new(reqs, self.directory.next_stamp()));
+        claim.publish(Arc::new(blueprint));
+        st.resident.insert(key.clone(), claim.clone());
+        st.log.push(PlanEvent::Install(key.clone(), claim.clone()));
         self.replica.applied += 1; // our own install is already in effect
-        self.replica.plans.insert(key.clone(), compiled);
+        self.replica
+            .plans
+            .insert(key.clone(), PlanSlot { claim, state: PlanState::Ready(compiled) });
+        Ok(())
+    }
+
+    /// LRU eviction to make room for one more claim. In-flight claims
+    /// are never victims (their owner is mid-lower on the logged
+    /// reservation); if everything resident is in flight the directory
+    /// temporarily overshoots capacity instead of blocking.
+    fn make_room(st: &mut DirectoryState, capacity: usize) {
+        while st.resident.len() >= capacity {
+            let victim = st
+                .resident
+                .iter()
+                .filter(|(_, claim)| claim.is_ready())
+                .min_by_key(|(_, claim)| claim.recency.load(Ordering::Relaxed))
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            st.resident.remove(&victim);
+            st.evictions += 1;
+            st.log.push(PlanEvent::Evict(victim));
+        }
+    }
+
+    /// Unwind a failed out-of-lock lower: log the compensating Evict,
+    /// catch up on events that landed since our Install, release our
+    /// own reservation (the replay of that Evict), and wake waiters
+    /// with the error. Every other replica replays Install-then-Evict
+    /// — alloc-then-free of the same group, an exact allocator no-op —
+    /// so the canonical history stays consistent and the pool keeps
+    /// serving.
+    fn rollback_claim(
+        &mut self,
+        key: &PlanKey,
+        claim: &Arc<PlanClaim>,
+        bufs: &[DramBuffer],
+        msg: String,
+    ) -> Result<(), ExecError> {
+        let pending = {
+            let mut st = self.directory.lock();
+            let removed = st.resident.remove(key);
+            debug_assert!(removed.is_some(), "in-flight claims are never evicted");
+            let pending: Vec<PlanEvent> = st.log[self.replica.applied..].to_vec();
+            st.log.push(PlanEvent::Evict(key.clone()));
+            pending
+        };
+        self.replica.apply(&pending)?;
+        free_group(self.replica.rt, bufs);
+        self.replica.applied += 1;
+        claim.fail(msg);
+        Ok(())
+    }
+
+    /// Upgrade a locally Reserved slot to Ready: wait for the owner's
+    /// blueprint (counting the wait), then fill the reservation in.
+    /// On a failed claim the slot stays Reserved — the owner's
+    /// rollback Evict frees it on our next replay.
+    fn materialize_if_reserved(&mut self, name: &str, key: &PlanKey) -> Result<(), ExecError> {
+        let claim = match self.replica.plans.get(key) {
+            Some(slot) if matches!(slot.state, PlanState::Reserved(_)) => slot.claim.clone(),
+            _ => return Ok(()),
+        };
+        let (bp, waited) = claim
+            .wait_published()
+            .map_err(|msg| lift_compile_err(name, CompileError::ClaimFailed(msg)))?;
+        if waited {
+            self.claim_waits += 1;
+        }
+        let slot = self.replica.plans.remove(key).expect("reserved slot still present");
+        let PlanState::Reserved(bufs) = slot.state else {
+            unreachable!("slot checked Reserved above")
+        };
+        let compiled =
+            bp.materialize_reserved(self.replica.rt, &bufs).map_err(|e| lift_compile_err(name, e))?;
+        self.replica
+            .plans
+            .insert(key.clone(), PlanSlot { claim: slot.claim, state: PlanState::Ready(compiled) });
         Ok(())
     }
 }
@@ -466,16 +915,20 @@ impl VtaNodeExec for WorkerExec<'_, '_> {
         schedule: Option<ScheduleChoice>,
         inputs: &[&Tensor<i8>],
     ) -> Result<(Tensor<i8>, SimStats), ExecError> {
-        if self.replica.plans.contains_key(key) {
-            // Fast path: no event replay needed; one short directory
-            // lock to keep pool-level counters exact.
-            self.directory.count_local_hit(key);
+        if let Some(slot) = self.replica.plans.get(key) {
+            // Steady-state fast path: two relaxed atomic bumps, no
+            // mutex anywhere.
+            self.directory.count_hit(&slot.claim);
         } else {
             self.sync_plan(g, id, key, schedule)?;
         }
         let node = &g.nodes[id];
+        self.materialize_if_reserved(&node.name, key)?;
         let entry = op_impl(&node.op);
-        let compiled = self.replica.plans.get(key).expect("plan resident after sync");
+        let slot = self.replica.plans.get(key).expect("plan resident after sync");
+        let PlanState::Ready(compiled) = &slot.state else {
+            unreachable!("slot materialized before execute")
+        };
         execute_compiled(entry, compiled, self.replica.rt, inputs)
             .map_err(|e| lift_compile_err(&node.name, e))
     }
@@ -493,6 +946,7 @@ struct PoolShared<'a> {
     virtual_threads: usize,
     max_batch: usize,
     clock_hz: f64,
+    serial_compile: bool,
 }
 
 fn worker_loop(
@@ -507,6 +961,8 @@ fn worker_loop(
         cpu: CpuBackend::Native,
         virtual_threads: shared.virtual_threads,
         clock_hz: shared.clock_hz,
+        serial_compile: shared.serial_compile,
+        claim_waits: 0,
     };
     let mut counter = ThreadCounter::default();
     while let Some(batch) = shared.queue.pop_batch(shared.max_batch) {
@@ -534,11 +990,13 @@ fn worker_loop(
             };
             if tx.send(response).is_err() {
                 // Receiver gone: the pool run is being torn down.
+                counter.claim_waits = ex.claim_waits;
                 return counter;
             }
         }
         counter.record_batch(batch_size, t0.elapsed());
     }
+    counter.claim_waits = ex.claim_waits;
     counter
 }
 
@@ -677,7 +1135,7 @@ impl PoolHandle<'_> {
         self.received
     }
 
-    /// Current bounded-queue depth.
+    /// Current bounded-queue depth (one relaxed atomic load).
     pub fn queue_depth(&self) -> usize {
         self.queue.depth()
     }
@@ -709,6 +1167,9 @@ pub struct ThreadedReport {
     pub accepted: u64,
     /// Requests shed by admission control.
     pub rejected: u64,
+    /// Contention observables: queue-full rejections, compile-claim
+    /// waits, directory short-lock acquisitions.
+    pub contention: ContentionStats,
     /// Wall-clock span of the whole run (spawn → drained).
     pub wall: Duration,
 }
@@ -761,6 +1222,7 @@ pub fn run_threaded<T>(
         virtual_threads: opts.virtual_threads,
         max_batch: opts.max_batch,
         clock_hz,
+        serial_compile: opts.serial_compile,
     };
 
     let (value, mut handle, counters) = std::thread::scope(|scope| {
@@ -812,6 +1274,11 @@ pub fn run_threaded<T>(
     if let Some(e) = handle.first_error.take() {
         return Err(e);
     }
+    let contention = ContentionStats {
+        queue_full: handle.rejected_full,
+        claim_waits: counters.iter().map(|c| c.claim_waits).sum(),
+        directory_locks: directory.lock_acquisitions(),
+    };
     let outputs: Vec<Tensor<i8>> = handle
         .outputs
         .into_iter()
@@ -833,6 +1300,7 @@ pub fn run_threaded<T>(
             service: handle.service,
             accepted: handle.accepted,
             rejected: handle.rejected_full + handle.rejected_shutdown,
+            contention,
             wall: t0.elapsed(),
         },
     ))

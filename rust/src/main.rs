@@ -109,6 +109,7 @@ struct Flags {
     qps_requests: usize,
     slo_ms: f64,
     require_speedup: Option<f64>,
+    serial_compile: bool,
     pipeline_stages: usize,
     require_pipeline_speedup: Option<f64>,
     offload_dense: bool,
@@ -150,6 +151,7 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
         qps_requests: 32,
         slo_ms: 50.0,
         require_speedup: None,
+        serial_compile: false,
         pipeline_stages: 0,
         require_pipeline_speedup: None,
         offload_dense: false,
@@ -301,6 +303,9 @@ fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
                     "--require-speedup must be a positive factor"
                 );
                 f.require_speedup = Some(x);
+            }
+            "--serial-compile" => {
+                f.serial_compile = true;
             }
             "--pipeline-stages" => {
                 i += 1;
@@ -489,6 +494,7 @@ fn print_usage() {
          \x20 --qps-requests N          serve: arrivals offered per ramp step (default 32)\n\
          \x20 --slo MS                  serve: latency SLO for ramp attainment, wall ms (default 50)\n\
          \x20 --require-speedup X       serve: exit nonzero unless N threads measure >= X x the 1-thread throughput\n\
+         \x20 --serial-compile          serve: compile plans under the directory lock (A/B baseline for concurrent JIT)\n\
          \x20 --pipeline-stages K       serve: split the model across K replicas (stage-per-replica pipeline parallelism)\n\
          \x20 --require-pipeline-speedup X  serve: exit nonzero unless the K-stage pipeline models >= X x the 1-stage makespan\n\
          \x20 --fleet FILE              serve: serve across the FleetSpec's mixed-config groups; dse: search fleet compositions and write the winner here\n\
@@ -860,6 +866,7 @@ fn cmd_serve_threaded(
     topts.cache_capacity = flags.cache;
     topts.virtual_threads = flags.vt;
     topts.dram_size = 512 << 20;
+    topts.serial_compile = flags.serial_compile;
 
     let report = serve_trace(cfg, &topts, records, g, pool_inputs)?;
     println!(
@@ -886,6 +893,13 @@ fn cmd_serve_threaded(
         .map(|(t, c)| format!("t{t} {}req/{}batch", c.requests, c.batches))
         .collect();
     println!("per-thread: {}", per_thread.join(", "));
+    println!(
+        "contention: {} queue-full rejection(s), {} compile-claim wait(s), \
+         {} directory lock acquisition(s)",
+        report.contention.queue_full,
+        report.contention.claim_waits,
+        report.contention.directory_locks
+    );
 
     // Oracle equivalence: the simulated scheduler served this exact
     // trace above — outputs must be bit-identical in submission order
@@ -1318,6 +1332,7 @@ fn cmd_serve_fleet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
     topts.cache_capacity = flags.cache;
     topts.virtual_threads = flags.vt;
     topts.dram_size = 512 << 20;
+    topts.serial_compile = flags.serial_compile;
     let trace: Vec<(usize, vta::util::Tensor<i8>)> =
         classes.iter().zip(&inputs).map(|(&c, t)| (c, t.clone())).collect();
     let threaded = serve_fleet_trace(&spec, &topts, &records, &graphs, &trace)?;
@@ -1354,6 +1369,13 @@ fn cmd_serve_fleet(cfg: &VtaConfig, flags: &Flags) -> anyhow::Result<()> {
         spec.total_devices(),
         threaded.wall,
         threaded.throughput_rps()
+    );
+    println!(
+        "fleet contention: {} queue-full rejection(s), {} compile-claim wait(s), \
+         {} directory lock acquisition(s)",
+        threaded.contention.queue_full,
+        threaded.contention.claim_waits,
+        threaded.contention.directory_locks
     );
 
     // The routing ablation: the same trace under cost-model and

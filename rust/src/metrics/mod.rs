@@ -314,6 +314,10 @@ pub struct ThreadCounter {
     /// trailing partial batches at stream end make smaller ones
     /// common).
     pub max_batch: usize,
+    /// Times this worker blocked on another worker's in-flight plan
+    /// compile instead of compiling itself (cold-start contention;
+    /// zero at steady state).
+    pub claim_waits: u64,
 }
 
 impl ThreadCounter {
@@ -323,6 +327,34 @@ impl ThreadCounter {
         self.batches += 1;
         self.busy += busy;
         self.max_batch = self.max_batch.max(requests);
+    }
+}
+
+/// Contention observables of the threaded serving runtimes — the
+/// counters that say *why* a decontended hot path matters, surfaced in
+/// [`crate::exec::serve::ThreadedReport`] and the fleet report. All
+/// three are cheap relaxed-atomic or per-thread sums; recording them
+/// never takes a lock.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ContentionStats {
+    /// Submissions shed because the bounded queue was at capacity
+    /// (admission-control backpressure).
+    pub queue_full: u64,
+    /// Worker blocks on another worker's in-flight plan compile
+    /// (same-key compile races during cold start).
+    pub claim_waits: u64,
+    /// Plan-directory short-lock acquisitions (misses, installs,
+    /// evictions — steady-state hits acquire none).
+    pub directory_locks: u64,
+}
+
+impl ContentionStats {
+    /// Accumulate another runtime's counters (fleet groups, pipeline
+    /// stages) into this one.
+    pub fn merge(&mut self, other: &ContentionStats) {
+        self.queue_full += other.queue_full;
+        self.claim_waits += other.claim_waits;
+        self.directory_locks += other.directory_locks;
     }
 }
 
@@ -573,6 +605,24 @@ mod tests {
         assert_eq!(t.batches, 3);
         assert_eq!(t.max_batch, 4);
         assert_eq!(t.busy, Duration::from_millis(45));
+        // Claim waits are set once from the worker's exec state, not
+        // per batch.
+        assert_eq!(t.claim_waits, 0);
+        t.claim_waits = 3;
+        assert_eq!(t.claim_waits, 3);
+    }
+
+    #[test]
+    fn contention_stats_merge_sums_fields() {
+        let mut total = ContentionStats::default();
+        assert_eq!(total, ContentionStats { queue_full: 0, claim_waits: 0, directory_locks: 0 });
+        total.merge(&ContentionStats { queue_full: 2, claim_waits: 1, directory_locks: 10 });
+        total.merge(&ContentionStats { queue_full: 0, claim_waits: 4, directory_locks: 7 });
+        assert_eq!(total, ContentionStats { queue_full: 2, claim_waits: 5, directory_locks: 17 });
+        // Merging a default is a no-op.
+        let before = total;
+        total.merge(&ContentionStats::default());
+        assert_eq!(total, before);
     }
 
     #[test]
